@@ -1,0 +1,107 @@
+//! Ablation — graduated scale-down (Algorithm 2) vs batch-reduction-only.
+//!
+//! DESIGN.md design choice 2: Algorithm 2 tries migration, then replica
+//! eviction, and only then batch reduction. The ablation compares the full
+//! graduated policy against a degenerate policy that jumps straight to
+//! phase 3 (what a system without module migration must do), under the
+//! same memory-pressure scenario. Expectation: the graduated policy keeps
+//! throughput (batch size intact) while both resolve the violations.
+
+use cocoserve::autoscale::{scale_down, Pressure, ScaleDownConfig};
+use cocoserve::cluster::{Cluster, GIB};
+use cocoserve::model::cost::CostModel;
+use cocoserve::model::{ModelConfig, ModuleId, ModuleKind};
+use cocoserve::ops::ModuleOps;
+use cocoserve::placement::Placement;
+use cocoserve::util::bench::{Report, Table};
+use cocoserve::util::json;
+
+struct Outcome {
+    resolved: bool,
+    final_batch: usize,
+    migrations: usize,
+    evictions: usize,
+}
+
+fn scenario(graduated: bool) -> Outcome {
+    let cm = CostModel::new(ModelConfig::llama2_13b());
+    let ops = ModuleOps::new(&cm, 2, "inst0");
+    let mut cl = Cluster::paper_testbed();
+    let mut pl = Placement::single_device(40, 0);
+    ops.deploy_instance(&mut cl, &pl).unwrap();
+    // KV allocations + co-tenant push device 0 to ~95%
+    for l in 0..4 {
+        let kv = ModuleId::layer(ModuleKind::KvCache, l);
+        cl.device_mut(0).alloc(&ops.tag(&kv, 0), 2.0 * GIB).unwrap();
+    }
+    cl.device_mut(0).alloc("co-tenant", 5.6 * GIB).unwrap();
+
+    let cfg = if graduated {
+        ScaleDownConfig::default()
+    } else {
+        // degenerate: no migration candidates, no eviction (simulated by
+        // zero candidates) — phase 3 only
+        ScaleDownConfig { max_migration_candidates: 0, ..Default::default() }
+    };
+    // batch-only mode also needs the violation tied to batch size so
+    // phase 3 can clear it; full mode clears via memory relief.
+    let out = scale_down(
+        &ops,
+        &mut cl,
+        &mut pl,
+        0,
+        Pressure::Memory,
+        32,
+        &cfg,
+        |_| 2.0 * GIB,
+        |cl, _pl, bs| {
+            // violating while device 0 above 90% AND batch demand high;
+            // batch reduction relieves KV demand proportionally.
+            let mem_over = cl.device(0).mem_frac() > 0.90;
+            mem_over && bs > 8
+        },
+    );
+    let migrations = out
+        .actions
+        .iter()
+        .filter(|a| matches!(a, cocoserve::autoscale::scale_down::Action::Migrated { .. }))
+        .count();
+    let evictions = out
+        .actions
+        .iter()
+        .filter(|a| matches!(a, cocoserve::autoscale::scale_down::Action::Evicted { .. }))
+        .count();
+    Outcome { resolved: out.resolved, final_batch: out.batch_size, migrations, evictions }
+}
+
+fn main() {
+    println!("Ablation — graduated scale-down vs batch-reduction-only\n");
+    let full = scenario(true);
+    let batch_only = scenario(false);
+    let mut t = Table::new(&["policy", "resolved", "final batch", "migrations",
+                             "evictions"]);
+    for (name, o) in [("graduated (Alg. 2)", &full), ("batch-only", &batch_only)] {
+        t.row(&[
+            name.to_string(),
+            format!("{}", o.resolved),
+            format!("{}", o.final_batch),
+            format!("{}", o.migrations),
+            format!("{}", o.evictions),
+        ]);
+    }
+    t.print();
+    assert!(full.resolved && batch_only.resolved);
+    assert!(
+        full.final_batch > batch_only.final_batch,
+        "graduated policy must preserve more serving capacity"
+    );
+    println!(
+        "\ngraduated policy resolves the violation by migrating {} module(s) \
+         and keeps batch {} — batch-only sacrifices throughput (batch {}).",
+        full.migrations, full.final_batch, batch_only.final_batch
+    );
+    let mut rep = Report::new("ablation_scaledown");
+    rep.set("graduated_batch", json::num(full.final_batch as f64));
+    rep.set("batch_only_batch", json::num(batch_only.final_batch as f64));
+    println!("report: {}", rep.write().unwrap().display());
+}

@@ -1,0 +1,121 @@
+//! Eq. 4 — the homogeneous speedup model, validated two ways.
+//!
+//! (1) Analytic behaviour: S_homo rises with replication count n_rep and
+//!     degree p, with diminishing returns — §4.1's stated properties.
+//! (2) Cross-validation against the simulator: the model's *predicted*
+//!     speedup ordering over candidate strategies must match the measured
+//!     throughput ordering (that is all Algorithm 1 needs from it).
+
+use cocoserve::autoscale::speedup::{gamma, s_homo};
+use cocoserve::cluster::{Cluster, DeviceSpec};
+use cocoserve::model::cost::CostModel;
+use cocoserve::ops::ModuleOps;
+use cocoserve::placement::Placement;
+use cocoserve::scheduler::SchedulerConfig;
+use cocoserve::sim::{OomBehavior, SimConfig, SimPolicy, Simulation};
+use cocoserve::util::bench::{Report, Table};
+use cocoserve::util::json;
+use cocoserve::workload::{Arrival, LengthDist, Trace};
+
+fn placement_with(n_rep: usize, dop: usize) -> Placement {
+    let cfg = SimConfig::paper_13b();
+    let mut p = Placement::single_device(cfg.model.n_layers, 0);
+    let cm = CostModel::new(cfg.model);
+    let ops = ModuleOps::new(&cm, 2, "inst0");
+    let mut scratch = Cluster::paper_testbed();
+    ops.deploy_instance(&mut scratch, &p).unwrap();
+    for extra in 0..dop.saturating_sub(1) {
+        for l in 0..n_rep {
+            let _ = ops.replicate_layer(&mut scratch, &mut p, l, 1 + (extra + l) % 3);
+        }
+    }
+    p
+}
+
+fn measured_throughput(p: &Placement) -> f64 {
+    let cfg = SimConfig::paper_13b();
+    let policy = SimPolicy {
+        scheduler: SchedulerConfig::continuous(16),
+        paged_kv: true,
+        autoscale: false,
+        oom: OomBehavior::Preempt,
+    };
+    let sim = Simulation::new(cfg, Cluster::paper_testbed(), vec![(p.clone(), policy)]);
+    let trace = Trace::generate(Arrival::Poisson { rps: 45.0 }, LengthDist::alpaca(), 15.0, 3);
+    sim.run(&trace, 15.0).total_throughput_tps()
+}
+
+fn main() {
+    println!("Eq. 4 — S_homo(P) = 1 / (γ + (1−γ)/n · Σ 1/p_i)\n");
+    let spec = DeviceSpec::a100_40gb();
+    let g = gamma(0.3, spec.effective_flops(), 5120.0, spec.link_bw);
+    println!("γ (A100 cluster constants, δ=0.3) = {g:.4}\n");
+
+    // analytic sweep
+    let mut t = Table::new(&["n_rep", "p=2", "p=3", "p=4"]);
+    let mut rep = Report::new("eq4_speedup_model");
+    for n_rep in [0usize, 10, 20, 30, 40] {
+        let mut row = vec![format!("{n_rep}")];
+        for p in [2usize, 3, 4] {
+            let mut pv = vec![1usize; 40];
+            for v in pv.iter_mut().take(n_rep) {
+                *v = p;
+            }
+            let s = s_homo(g, &pv);
+            row.push(format!("{s:.3}"));
+            rep.set(&format!("s_rep{n_rep}_p{p}"), json::num(s));
+        }
+        t.row(&row);
+    }
+    println!("analytic speedup S_homo:");
+    t.print();
+
+    // cross-validation: model ordering vs simulator ordering
+    println!("\ncross-validation against the simulator (45 RPS):");
+    let strategies = [(0usize, 1usize), (10, 2), (20, 2), (40, 2), (20, 4), (40, 4)];
+    let mut t2 = Table::new(&["strategy", "S_homo", "measured tok/s"]);
+    let mut pairs: Vec<(f64, f64)> = vec![];
+    for &(n_rep, dop) in &strategies {
+        let mut pv = vec![1usize; 40];
+        for v in pv.iter_mut().take(n_rep) {
+            *v = dop;
+        }
+        let s = s_homo(g, &pv);
+        let thr = measured_throughput(&placement_with(n_rep, dop));
+        pairs.push((s, thr));
+        t2.row(&[
+            format!("rep{n_rep} dop{dop}"),
+            format!("{s:.3}"),
+            format!("{thr:.0}"),
+        ]);
+        rep.set(
+            &format!("xval_rep{n_rep}_dop{dop}"),
+            json::arr([s, thr].into_iter().map(json::num)),
+        );
+    }
+    t2.print();
+
+    // rank correlation (Kendall tau on the strategy pairs)
+    let mut concordant = 0;
+    let mut total = 0;
+    for i in 0..pairs.len() {
+        for j in i + 1..pairs.len() {
+            if (pairs[i].0 - pairs[j].0).abs() < 1e-9 {
+                continue;
+            }
+            total += 1;
+            if (pairs[i].0 < pairs[j].0) == (pairs[i].1 < pairs[j].1) {
+                concordant += 1;
+            }
+        }
+    }
+    let tau = concordant as f64 / total.max(1) as f64;
+    println!(
+        "\nmodel-vs-measurement rank agreement: {concordant}/{total} pairs \
+         ({:.0}%) — Algorithm 1 only needs the ordering",
+        tau * 100.0
+    );
+    rep.set("rank_agreement", json::num(tau));
+    assert!(tau >= 0.8, "speedup model must rank strategies correctly");
+    println!("report: {}", rep.write().unwrap().display());
+}

@@ -1,0 +1,70 @@
+//! Fig. 11 — robustness: OOM occurrence rate (11a) and SLO attainment (11b).
+//!
+//! Paper claims: HFT shows ~34% OOM error rate beyond 50 RPS vs CoCoServe's
+//! ~2% (17× better); HFT's SLO attainment deteriorates from ~25 RPS and
+//! fails past 30; CoCoServe holds near-perfect attainment to ~50 RPS, vLLM
+//! in between.
+
+use cocoserve::baselines;
+use cocoserve::cluster::{Cluster, GIB};
+use cocoserve::placement::Placement;
+use cocoserve::sim::{SimConfig, SimPolicy, Simulation};
+use cocoserve::util::bench::{Report, Table};
+use cocoserve::util::json;
+use cocoserve::workload::{Arrival, LengthDist, Trace};
+
+const RPS: [f64; 6] = [5.0, 15.0, 25.0, 35.0, 45.0, 55.0];
+
+/// Memory-tight single-device deployment (the robustness stressor).
+fn run(policy: SimPolicy, rps: f64, seed: u64) -> (f64, f64) {
+    let cfg = SimConfig::paper_13b();
+    let mut cluster = Cluster::paper_testbed();
+    cluster.device_mut(0).alloc("co-tenant", 12.0 * GIB).unwrap();
+    let placement = Placement::single_device(cfg.model.n_layers, 0);
+    let sim = Simulation::new(cfg, cluster, vec![(placement, policy)]);
+    let trace = Trace::generate(
+        Arrival::Burst { base: rps * 0.6, burst: rps, start_s: 5.0, end_s: 15.0 },
+        LengthDist::alpaca(),
+        20.0,
+        seed,
+    );
+    let r = sim.run(&trace, 20.0);
+    (r.oom_rate() * 100.0, r.slo_attainment() * 100.0)
+}
+
+fn main() {
+    println!("Fig. 11 — OOM rate & SLO attainment under bursty load (13B, tight memory)\n");
+    let mut t = Table::new(&["rps", "hft OOM%", "coco OOM%", "hft SLO%",
+                             "vllm SLO%", "coco SLO%"]);
+    let mut rep = Report::new("fig11_robustness");
+    let (mut h_oom_hi, mut c_oom_hi) = (0.0f64, 0.0f64);
+    for &rps in &RPS {
+        let (ho, hs) = run(baselines::hft(16), rps, 21);
+        let (vo, vs) = run(baselines::vllm_like(48), rps, 21);
+        let (co, cs) = run(baselines::cocoserve(48), rps, 21);
+        let _ = vo;
+        if rps >= 45.0 {
+            h_oom_hi = h_oom_hi.max(ho);
+            c_oom_hi = c_oom_hi.max(co.max(0.1));
+        }
+        t.row(&[
+            format!("{rps:.0}"),
+            format!("{ho:.1}"),
+            format!("{co:.1}"),
+            format!("{hs:.1}"),
+            format!("{vs:.1}"),
+            format!("{cs:.1}"),
+        ]);
+        rep.set(
+            &format!("rps{}", rps as u64),
+            json::arr([ho, co, hs, vs, cs].into_iter().map(json::num)),
+        );
+    }
+    t.print();
+    println!(
+        "\nhigh-load OOM rate: HFT {h_oom_hi:.1}% vs CoCoServe {c_oom_hi:.1}% \
+         → {:.0}× stability improvement (paper: 34% vs 2%, 17×)",
+        h_oom_hi / c_oom_hi
+    );
+    println!("report: {}", rep.write().unwrap().display());
+}

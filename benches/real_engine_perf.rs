@@ -1,0 +1,112 @@
+//! Real-path performance — the L3 hot-path bench (EXPERIMENTS.md §Perf).
+//!
+//! Times the actual PJRT pipeline on the tiny model: prefill and decode
+//! step latency per batch bucket, tokens/s, and the coordinator overhead
+//! (host-side time outside `execute`). The perf pass iterates on this
+//! bench; its criterion (DESIGN.md §Perf): the driver should be
+//! PJRT-execute-bound, i.e. coordinator overhead well under 20%.
+
+use cocoserve::engine::{LayerExec, TinyEngine};
+use cocoserve::runtime::{artifacts_available, default_artifacts_dir};
+use cocoserve::util::bench::{fmt_secs, time_it, Report, Table};
+use cocoserve::util::json;
+
+fn main() {
+    if !artifacts_available() {
+        eprintln!("skipping real_engine_perf: run `make artifacts`");
+        return;
+    }
+    let engine = TinyEngine::open(&default_artifacts_dir(), "tiny-llama").unwrap();
+    println!("real-path perf — tiny-llama on CPU PJRT\n");
+
+    let mut rep = Report::new("real_engine_perf");
+    let mut t = Table::new(&["op", "batch", "mean", "p95", "tok/s"]);
+
+    for &b in &[1usize, 2, 4, 8] {
+        // prefill
+        let prompts: Vec<Vec<i32>> = (0..b).map(|i| vec![(i + 1) as i32; 12]).collect();
+        let timing = time_it(2, 10, || {
+            let mut seqs: Vec<_> = prompts
+                .iter()
+                .enumerate()
+                .map(|(i, p)| engine.new_sequence(i as u64, p))
+                .collect();
+            let mut refs: Vec<&mut _> = seqs.iter_mut().collect();
+            engine.prefill(&mut refs).unwrap();
+        });
+        t.row(&[
+            "prefill s16".into(),
+            format!("{b}"),
+            fmt_secs(timing.mean_s),
+            fmt_secs(timing.p95_s),
+            format!("{:.0}", b as f64 * 12.0 / timing.mean_s),
+        ]);
+        rep.set(&format!("prefill_b{b}_mean_s"), json::num(timing.mean_s));
+
+        // decode (warm steady state)
+        let mut seqs: Vec<_> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| engine.new_sequence(i as u64, p))
+            .collect();
+        {
+            let mut refs: Vec<&mut _> = seqs.iter_mut().collect();
+            engine.prefill(&mut refs).unwrap();
+        }
+        let timing = time_it(3, 30, || {
+            // reset kv_len periodically to avoid overflow across iters
+            let mut refs: Vec<&mut _> = seqs.iter_mut().collect();
+            if refs[0].kv_len >= engine.max_seq - 2 {
+                for r in refs.iter_mut() {
+                    r.kv_len = 13;
+                    r.tokens.truncate(13);
+                }
+            }
+            engine.decode(&mut refs).unwrap();
+        });
+        t.row(&[
+            "decode".into(),
+            format!("{b}"),
+            fmt_secs(timing.mean_s),
+            fmt_secs(timing.p95_s),
+            format!("{:.0}", b as f64 / timing.mean_s),
+        ]);
+        rep.set(&format!("decode_b{b}_mean_s"), json::num(timing.mean_s));
+    }
+    t.print();
+
+    // fused vs split module execution overhead
+    let mut eng2 = TinyEngine::open(&default_artifacts_dir(), "tiny-llama").unwrap();
+    eng2.exec = LayerExec::Split;
+    let prompts: Vec<Vec<i32>> = (0..4).map(|i| vec![(i + 1) as i32; 12]).collect();
+    let fused = time_it(1, 5, || {
+        engine.generate_greedy(&prompts, 8).unwrap();
+    });
+    let split = time_it(1, 5, || {
+        eng2.generate_greedy(&prompts, 8).unwrap();
+    });
+    println!(
+        "\ngenerate b4 n8: fused {} vs split-module {} ({:+.1}% — the cost of \
+         projection-granular execution)",
+        fmt_secs(fused.mean_s),
+        fmt_secs(split.mean_s),
+        (split.mean_s / fused.mean_s - 1.0) * 100.0
+    );
+    rep.set("fused_gen_s", json::num(fused.mean_s));
+    rep.set("split_gen_s", json::num(split.mean_s));
+
+    // coordinator overhead: wall time minus PJRT execute time share
+    let execs_before = engine.pjrt.executions();
+    let t0 = std::time::Instant::now();
+    engine.generate_greedy(&prompts, 16).unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    let execs = engine.pjrt.executions() - execs_before;
+    println!(
+        "generate b4 n16: {} wall · {execs} PJRT executions · {:.2} ms/exec",
+        fmt_secs(wall),
+        wall / execs as f64 * 1e3
+    );
+    rep.set("gen_b4_n16_wall_s", json::num(wall));
+    rep.set("gen_b4_n16_execs", json::num(execs as f64));
+    println!("report: {}", rep.write().unwrap().display());
+}

@@ -1,0 +1,58 @@
+//! Migration vs. the latency cliff — the paper's Fig. 3 scenario as a
+//! narrative demo.
+//!
+//! A single 13B instance on one A100 shares the device with another tenant.
+//! Under a 50-RPS surge, the default (static) deployment hits repeated KV
+//! OOMs and the latency cliff; CoCoServe's scale-down migrates module(s)
+//! (KV cache first, then a decoder layer) to the free device and keeps
+//! latency flat.
+//!
+//! ```bash
+//! cargo run --release --example migration_slo
+//! ```
+
+use cocoserve::baselines;
+use cocoserve::cluster::{Cluster, GIB};
+use cocoserve::placement::Placement;
+use cocoserve::sim::{SimConfig, Simulation};
+use cocoserve::workload::{Arrival, LengthDist, Trace};
+
+fn run(policy: cocoserve::sim::SimPolicy, label: &str) {
+    let cfg = SimConfig::paper_13b();
+    let mut cluster = Cluster::paper_testbed();
+    // another tenant occupies most of device 0's headroom
+    cluster
+        .device_mut(0)
+        .alloc("other-tenant", 13.0 * GIB)
+        .unwrap();
+    let placement = Placement::single_device(cfg.model.n_layers, 0);
+    let sim = Simulation::new(cfg, cluster, vec![(placement, policy)]);
+    let trace = Trace::generate(
+        Arrival::Poisson { rps: 50.0 },
+        LengthDist::alpaca(),
+        20.0,
+        3,
+    );
+    let r = sim.run(&trace, 20.0);
+    let mut lat = r.merged_latency();
+    println!(
+        "{label:<22} mean {:>6.2}s  p95 {:>6.2}s  OOM {:>3}  migrations/evictions {:>2}  SLO {:>5.1}%",
+        lat.mean(),
+        lat.p95(),
+        r.total_oom_events,
+        r.scale_downs,
+        r.slo_attainment() * 100.0
+    );
+}
+
+fn main() {
+    println!("== Fig. 3 scenario: 50 RPS surge on a memory-constrained device ==\n");
+    run(baselines::hft(16), "default (HFT-like)");
+    run(baselines::vllm_like(48), "vLLM-like (preempt)");
+    run(baselines::cocoserve(48), "CoCoServe (migrate)");
+    println!(
+        "\nCoCoServe's Algorithm 2 migrates memory-intensive modules off the\n\
+         hot device instead of failing the batch — the paper's ~70% latency\n\
+         reduction mechanism at 50–55 RPS."
+    );
+}

@@ -1,0 +1,81 @@
+//! Quickstart — the required end-to-end driver (DESIGN.md §E2E).
+//!
+//! Loads the real tiny-llama artifacts (AOT-compiled from JAX + Pallas),
+//! serves a Poisson request stream through the full Rust stack (scheduler →
+//! continuous batching → PJRT module pipeline → KV caches), and reports
+//! latency/throughput. Python is not running — check your process table.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use cocoserve::coordinator::{serve_trace, ServeConfig};
+use cocoserve::engine::TinyEngine;
+use cocoserve::runtime::{artifacts_available, default_artifacts_dir};
+use cocoserve::scheduler::SchedulerConfig;
+use cocoserve::util::bench::fmt_secs;
+use cocoserve::workload::{Arrival, LengthDist, Trace};
+
+fn main() -> anyhow::Result<()> {
+    if !artifacts_available() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(2);
+    }
+
+    println!("== CoCoServe quickstart: real model, real tokens, no Python ==\n");
+    let t0 = std::time::Instant::now();
+    let engine = TinyEngine::open(&default_artifacts_dir(), "tiny-llama")?;
+    println!(
+        "loaded {}: {} layers · d_model {} · {} heads · vocab {}  ({})",
+        engine.cfg.name, engine.cfg.n_layers, engine.cfg.d_model,
+        engine.cfg.n_heads, engine.cfg.vocab_size, fmt_secs(t0.elapsed().as_secs_f64())
+    );
+
+    // 1. single-prompt generation
+    let out = engine.generate_greedy(&[vec![1, 2, 3, 4]], 12)?;
+    println!("\ngreedy continuation of [1,2,3,4]: {:?}", &out[0][4..]);
+
+    // 2. live batched serving: Poisson arrivals, continuous batching
+    let rps = 6.0;
+    let duration = 10.0;
+    let trace = Trace::generate(
+        Arrival::Poisson { rps },
+        LengthDist::tiny(),
+        duration,
+        7,
+    );
+    println!(
+        "\nserving {} requests ({rps} rps Poisson, {duration}s, outputs ≤32 tokens)…",
+        trace.len()
+    );
+    let report = serve_trace(
+        &engine,
+        &trace,
+        ServeConfig {
+            scheduler: SchedulerConfig::continuous(8),
+            slo_latency_s: 2.0,
+            realtime: true,
+        },
+    )?;
+
+    let mut lat = report.monitor.latency_summary();
+    println!("\n-- results ------------------------------------------");
+    println!("completed requests : {}", report.completed);
+    println!("generated tokens   : {}", report.generated_tokens);
+    println!("wall time          : {:.2}s", report.duration_s);
+    println!("throughput         : {:.1} tok/s", report.tokens_per_s());
+    println!(
+        "latency mean/p50/p95: {} / {} / {}",
+        fmt_secs(lat.mean()),
+        fmt_secs(lat.p50()),
+        fmt_secs(lat.p95())
+    );
+    println!(
+        "SLO(≤2s) attainment : {:.1}%",
+        report.monitor.slo_attainment() * 100.0
+    );
+    println!("PJRT executions    : {}", report.executions);
+    println!("\nall three layers composed: Pallas kernel → JAX module → HLO");
+    println!("text → PJRT CPU → Rust coordinator. See EXPERIMENTS.md §E2E.");
+    Ok(())
+}

@@ -1,0 +1,261 @@
+"""AOT export: lower every module function to HLO *text* + write manifest.
+
+This is the only place Python touches the serving pipeline — it runs once at
+build time (`make artifacts`); the Rust coordinator loads the results and
+Python is never on the request path.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(what the published `xla` 0.1.6 crate links) rejects (`proto.id() <=
+INT_MAX`); the text parser reassigns ids and round-trips cleanly.
+
+Outputs, under --out-dir (default ../artifacts):
+
+  manifest.json                     — configs, buckets, artifact + weight index
+  hlo/<name>.hlo.txt                — one per (module kind, shape bucket)
+  weights/<cfg>/<tensor>.bin        — raw little-endian f32, row-major
+
+Every artifact is lowered with return_tuple=True, so the Rust side always
+unwraps a tuple (even for single outputs).
+"""
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, model
+
+# Shape buckets actually lowered. Kept deliberately modest: artifacts are
+# shape-specialized, and the Rust scheduler pads to the next bucket.
+BATCHES = configs.BATCH_BUCKETS
+SEQS = configs.PREFILL_SEQ_BUCKETS
+SMAX = configs.MAX_SEQ_LEN
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _weight_specs(cfg):
+    return [
+        _spec(s) for s in model.layer_weight_shapes(cfg).values()
+    ]
+
+
+class ArtifactSet:
+    """Collects (name -> lowered fn) and writes hlo/ + manifest entries."""
+
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.hlo_dir = os.path.join(out_dir, "hlo")
+        os.makedirs(self.hlo_dir, exist_ok=True)
+        self.entries = []
+
+    def add(self, name: str, fn, arg_specs, *, module: str, phase: str,
+            cfg, b: int, s: int, outputs: list):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        rel = os.path.join("hlo", f"{name}.hlo.txt")
+        with open(os.path.join(self.out_dir, rel), "w") as f:
+            f.write(text)
+        self.entries.append({
+            "name": name,
+            "path": rel,
+            "module": module,
+            "phase": phase,
+            "config": cfg.name,
+            "batch": b,
+            "seq": s,
+            "args": [
+                {"shape": list(a.shape), "dtype": str(a.dtype)}
+                for a in arg_specs
+            ],
+            "outputs": outputs,
+        })
+        print(f"  {name}: {len(text)} chars ({time.time() - t0:.2f}s)")
+
+
+def lower_config(art: ArtifactSet, cfg) -> None:
+    d, h, ff, v = cfg.d_model, cfg.n_heads, cfg.d_ff, cfg.vocab_size
+    hd = cfg.head_dim
+    w = _weight_specs(cfg)
+    n = cfg.name
+
+    for b in BATCHES:
+        # ---- decode-phase artifacts (seq axis fixed: 1 new token) --------
+        hid1 = _spec((b, 1, d))
+        kc = _spec((b, h, SMAX, hd))
+        lens = _spec((b,), jnp.int32)
+        art.add(f"{n}__layer_decode__b{b}",
+                functools.partial(model.layer_decode, n_heads=h),
+                [hid1, kc, kc, lens] + w,
+                module="decoder_layer", phase="decode", cfg=cfg, b=b, s=1,
+                outputs=["hidden", "k_new", "v_new"])
+        art.add(f"{n}__attn_decode__b{b}",
+                functools.partial(model.attn_decode, n_heads=h),
+                [hid1, kc, kc, lens] + w[:5],
+                module="attn", phase="decode", cfg=cfg, b=b, s=1,
+                outputs=["hidden", "k_new", "v_new"])
+        art.add(f"{n}__ffn_decode__b{b}", model.ffn,
+                [hid1] + [w[5], w[6], w[7], w[8]],
+                module="ffn", phase="decode", cfg=cfg, b=b, s=1,
+                outputs=["hidden"])
+        art.add(f"{n}__lm_head_decode__b{b}", model.lm_head_decode,
+                [hid1, _spec((d,)), _spec((d, v))],
+                module="lm_head", phase="decode", cfg=cfg, b=b, s=1,
+                outputs=["next_token", "logits"])
+        art.add(f"{n}__embed_decode__b{b}", model.embed,
+                [_spec((b, 1), jnp.int32), _spec((v, d))],
+                module="embed", phase="decode", cfg=cfg, b=b, s=1,
+                outputs=["hidden"])
+
+        # ---- prefill-phase artifacts, per sequence bucket ----------------
+        for s in SEQS:
+            hid = _spec((b, s, d))
+            pos = _spec((b, s), jnp.int32)
+            art.add(f"{n}__embed__b{b}_s{s}", model.embed,
+                    [_spec((b, s), jnp.int32), _spec((v, d))],
+                    module="embed", phase="prefill", cfg=cfg, b=b, s=s,
+                    outputs=["hidden"])
+            art.add(f"{n}__layer_prefill__b{b}_s{s}",
+                    functools.partial(model.layer_prefill, n_heads=h),
+                    [hid, pos] + w,
+                    module="decoder_layer", phase="prefill", cfg=cfg,
+                    b=b, s=s, outputs=["hidden", "k", "v"])
+            art.add(f"{n}__attn_prefill__b{b}_s{s}",
+                    functools.partial(model.attn_prefill, n_heads=h),
+                    [hid, pos] + w[:5],
+                    module="attn", phase="prefill", cfg=cfg, b=b, s=s,
+                    outputs=["hidden", "k", "v"])
+            art.add(f"{n}__ffn_prefill__b{b}_s{s}", model.ffn,
+                    [hid, w[5], w[6], w[7], w[8]],
+                    module="ffn", phase="prefill", cfg=cfg, b=b, s=s,
+                    outputs=["hidden"])
+            art.add(f"{n}__qkv_proj__b{b}_s{s}",
+                    functools.partial(model.qkv_proj, n_heads=h),
+                    [hid, pos, w[0], w[1], w[2], w[3]],
+                    module="qkv_proj", phase="prefill", cfg=cfg, b=b, s=s,
+                    outputs=["q", "k", "v"])
+            art.add(f"{n}__attn_core__b{b}_s{s}", model.attn_core_prefill,
+                    [_spec((b, h, s, hd))] * 3,
+                    module="attn_core", phase="prefill", cfg=cfg, b=b, s=s,
+                    outputs=["attn_out"])
+            art.add(f"{n}__o_proj__b{b}_s{s}", model.o_proj,
+                    [hid, hid, _spec((d, d))],
+                    module="o_proj", phase="prefill", cfg=cfg, b=b, s=s,
+                    outputs=["hidden"])
+            art.add(f"{n}__lm_head_prefill__b{b}_s{s}", model.lm_head_prefill,
+                    [hid, _spec((b,), jnp.int32), _spec((d,)),
+                     _spec((d, v))],
+                    module="lm_head", phase="prefill", cfg=cfg, b=b, s=s,
+                    outputs=["next_token", "logits"])
+
+
+def dump_weights(out_dir: str, cfg, seed: int = 0) -> dict:
+    """Write synthetic weights as raw f32 .bin files; return the index."""
+    wdir = os.path.join(out_dir, "weights", cfg.name)
+    os.makedirs(wdir, exist_ok=True)
+    weights = model.init_weights(cfg, seed)
+
+    index = {}
+
+    def put(name, arr):
+        rel = os.path.join("weights", cfg.name, f"{name}.bin")
+        np.asarray(arr, dtype=np.float32).tofile(os.path.join(out_dir, rel))
+        index[name] = {"path": rel, "shape": list(arr.shape)}
+
+    for i, lw in enumerate(weights["layers"]):
+        for wname in model.LAYER_WEIGHT_NAMES:
+            put(f"layer{i}.{wname}", lw[wname])
+    put("emb", weights["emb"])
+    put("w_out", weights["w_out"])
+    put("rms_f", weights["rms_f"])
+    return index
+
+
+def dump_goldens(out_dir: str, cfg, seed: int = 0) -> dict:
+    """Golden greedy generations from the pure-jnp reference model.
+
+    The Rust engine must reproduce these token ids exactly — the
+    end-to-end correctness contract across all three layers.
+    """
+    weights = model.init_weights(cfg, seed)
+    prompts = [
+        [1, 2, 3],
+        [7, 11, 13, 17, 19],
+        [42] * 8,
+        list(range(30, 42)),
+    ]
+    n_new = 8
+    outs = model.forward_greedy(cfg, weights, prompts, n_new)
+    return {
+        "config": cfg.name,
+        "seed": seed,
+        "n_new": n_new,
+        "prompts": prompts,
+        "expected": outs,
+    }
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    p.add_argument("--configs", nargs="*", default=["tiny-llama"],
+                   help="which model configs to lower (default: tiny-llama)")
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    art = ArtifactSet(out_dir)
+
+    manifest = {
+        "format": 1,
+        "interchange": "hlo-text",
+        "batch_buckets": list(BATCHES),
+        "seq_buckets": list(SEQS),
+        "max_seq_len": SMAX,
+        "configs": {},
+        "weights": {},
+        "artifacts": [],
+    }
+    t0 = time.time()
+    for name in args.configs:
+        cfg = configs.CONFIGS[name]
+        print(f"lowering config {name} "
+              f"(d={cfg.d_model}, heads={cfg.n_heads}, ff={cfg.d_ff})")
+        manifest["configs"][name] = cfg.to_dict()
+        lower_config(art, cfg)
+        manifest["weights"][name] = dump_weights(out_dir, cfg, args.seed)
+        with open(os.path.join(out_dir, f"goldens_{name}.json"), "w") as f:
+            json.dump(dump_goldens(out_dir, cfg, args.seed), f, indent=1)
+    # Paper-scale configs ride along for the Rust cost model / simulator.
+    for name in ("llama2-13b", "llama2-70b"):
+        manifest["configs"][name] = configs.CONFIGS[name].to_dict()
+
+    manifest["artifacts"] = art.entries
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"{len(art.entries)} artifacts -> {out_dir} "
+          f"({time.time() - t0:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Model configurations for the CoCoServe compile path.
+
+Two families:
+
+- ``TINY_*``: small LLaMA-style configs that are actually lowered to HLO and
+  executed on the CPU PJRT client from the Rust coordinator (the "real path").
+- ``PAPER_*``: the LLaMA2-13B / LLaMA2-70B architectural constants from the
+  paper (§2.1, §3.3). These are never lowered — they parameterize the Rust
+  cost model and the discrete-event simulator — but we keep them here as the
+  single source of truth shared (via the artifact manifest) with Rust, and the
+  pytest suite asserts the paper's Table 1 numbers from them.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architectural description of a LLaMA-style decoder-only model."""
+
+    name: str
+    vocab_size: int
+    d_model: int
+    n_heads: int
+    n_layers: int
+    d_ff: int
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    # ---- parameter counts (per the paper's §3.3 accounting) ----------------
+
+    @property
+    def attn_params(self) -> int:
+        """Q/K/V/O projections: 4 * d_model^2."""
+        return 4 * self.d_model * self.d_model
+
+    @property
+    def proj_params(self) -> int:
+        """A single attention projection (one of Q/K/V/O): d_model^2."""
+        return self.d_model * self.d_model
+
+    @property
+    def ffn_params(self) -> int:
+        """SwiGLU FFN: gate + up (d*ff each) + down (ff*d)."""
+        return 3 * self.d_model * self.d_ff
+
+    @property
+    def norm_params(self) -> int:
+        """Two RMSNorm weight vectors per decoder layer."""
+        return 2 * self.d_model
+
+    @property
+    def layer_params(self) -> int:
+        return self.attn_params + self.ffn_params + self.norm_params
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["head_dim"] = self.head_dim
+        return d
+
+
+# The config that `make artifacts` lowers by default. Small enough that the
+# interpret-mode Pallas kernels run in milliseconds on CPU, large enough that
+# every module has non-trivial shape structure (multiple heads, SwiGLU ratio).
+TINY = ModelConfig(
+    name="tiny-llama",
+    vocab_size=512,
+    d_model=64,
+    n_heads=4,
+    n_layers=4,
+    d_ff=172,
+)
+
+# A slightly bigger config used by the wider end-to-end example to show the
+# stack is not shape-special-cased.
+SMALL = ModelConfig(
+    name="small-llama",
+    vocab_size=2048,
+    d_model=128,
+    n_heads=8,
+    n_layers=8,
+    d_ff=344,
+)
+
+# Paper-scale references (LLaMA2-13B / LLaMA2-70B, §2.1 + §3.3). 13B:
+# d_model=5120, d_ff=13824, 40 decoder layers. 70B: d_model=8192, d_ff=28672,
+# 80 layers (GQA ignored by the paper's arithmetic; we follow the paper).
+PAPER_13B = ModelConfig(
+    name="llama2-13b",
+    vocab_size=32000,
+    d_model=5120,
+    n_heads=40,
+    n_layers=40,
+    d_ff=13824,
+)
+
+PAPER_70B = ModelConfig(
+    name="llama2-70b",
+    vocab_size=32000,
+    d_model=8192,
+    n_heads=64,
+    n_layers=80,
+    d_ff=28672,
+)
+
+CONFIGS = {c.name: c for c in (TINY, SMALL, PAPER_13B, PAPER_70B)}
+
+# Static shape buckets compiled into artifacts. PJRT executables have fixed
+# shapes, so the Rust scheduler pads each batch to the nearest bucket.
+BATCH_BUCKETS = (1, 2, 4, 8)
+PREFILL_SEQ_BUCKETS = (16, 32, 64)
+MAX_SEQ_LEN = 128  # KV-cache capacity baked into decode artifacts

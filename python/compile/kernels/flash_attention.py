@@ -1,0 +1,147 @@
+"""Flash-attention-style Pallas kernel (L1 hot-spot).
+
+TPU adaptation of the paper's A100 attention hot path (DESIGN.md
+§Hardware-Adaptation): instead of CUDA threadblocks staging tiles through
+shared memory, the `BlockSpec`s below express the HBM→VMEM schedule — the
+grid walks (batch*heads, q-blocks), each step holding one Q block plus a
+streamed K/V block in VMEM while an online-softmax accumulator (m, l, acc)
+carries the flash-attention recurrence in f32. The two matmuls per step
+(`q @ k^T`, `p @ v`) are the MXU work.
+
+`interpret=True` is mandatory here: CPU PJRT cannot execute the Mosaic
+custom-call a real TPU lowering produces. Correctness is asserted against
+`ref.attention` in python/tests/test_kernels.py; VMEM/MXU structure is
+analyzed (not timed) in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_attention_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int,
+                            seq_k: int, causal: bool, sm_scale: float,
+                            q_offset: int):
+    """One grid step: a full pass over K/V blocks for one Q block.
+
+    Refs are VMEM blocks: q_ref [block_q, hd], k_ref/v_ref [seq_k, hd]
+    (indexed into block_k chunks inside the loop), o_ref [block_q, hd].
+    """
+    block_q, head_dim = q_ref.shape
+    q = q_ref[...].astype(jnp.float32) * sm_scale
+
+    # Online-softmax state.
+    m = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)
+    l = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc = jnp.zeros((block_q, head_dim), dtype=jnp.float32)
+
+    # Absolute row index of each query in this block (for causal masking).
+    q_pos = q_offset + pl.program_id(1) * block_q + jax.lax.iota(
+        jnp.int32, block_q)
+
+    num_kb = pl.cdiv(seq_k, block_k)
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k_start = kb * block_k
+        k = pl.load(k_ref, (pl.dslice(k_start, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(k_start, block_k), slice(None)))
+        s = q @ k.T.astype(jnp.float32)  # [block_q, block_k] — MXU matmul
+
+        # Out-of-range keys of a partial final block are always masked
+        # (block_k need not divide seq_k); causal adds the triangle mask.
+        k_pos = k_start + jax.lax.iota(jnp.int32, block_k)
+        mask = k_pos[None, :] < seq_k
+        if causal:
+            mask = mask & (q_pos[:, None] >= k_pos[None, :])
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v.astype(jnp.float32)
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, num_kb, body, (m, l, acc))
+    # Rows with no valid key (fully masked) would divide by zero; clamp.
+    l = jnp.maximum(l, 1e-30)
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 16,
+                    block_k: int = 16, q_offset: int = 0):
+    """Tiled attention via Pallas.
+
+    q: [b, h, sq, hd]; k, v: [b, h, sk, hd]. `causal` masks key j > query i
+    (+ q_offset shifts query positions — used when sq < sk, e.g. chunked
+    prefill where queries are the *last* sq positions of sk).
+    Returns [b, h, sq, hd].
+    """
+    b, h, sq, hd = q.shape
+    sk = k.shape[2]
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    sm_scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(
+        _flash_attention_kernel,
+        block_k=block_k,
+        seq_k=sk,
+        causal=causal,
+        sm_scale=sm_scale,
+        q_offset=q_offset if sq != sk else 0 if q_offset == 0 else q_offset,
+    )
+
+    # Collapse (b, h) into one grid axis; q-blocks on the second.
+    qf = q.reshape(b * h, sq, hd)
+    kf = k.reshape(b * h, sk, hd)
+    vf = v.reshape(b * h, sk, hd)
+
+    # Pad Q/K/V up to block multiples: partial blocks are undefined under
+    # interpret-mode BlockSpecs/pl.load. Padded keys carry k_pos >= seq_k
+    # and are masked to NEG_INF in-kernel; padded query rows are sliced off
+    # the output below.
+    sq_pad = ((sq + block_q - 1) // block_q) * block_q
+    sk_pad = ((sk + block_k - 1) // block_k) * block_k
+    if sq_pad != sq:
+        qf = jnp.pad(qf, ((0, 0), (0, sq_pad - sq), (0, 0)))
+    if sk_pad != sk:
+        pad = ((0, 0), (0, sk_pad - sk), (0, 0))
+        kf = jnp.pad(kf, pad)
+        vf = jnp.pad(vf, pad)
+
+    grid = (b * h, sq_pad // block_q)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, hd), lambda bh, qb: (bh, qb, 0)),
+            pl.BlockSpec((None, sk_pad, hd), lambda bh, qb: (bh, 0, 0)),
+            pl.BlockSpec((None, sk_pad, hd), lambda bh, qb: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, hd), lambda bh, qb: (bh, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq_pad, hd), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(qf, kf, vf)
+    return out[:, :sq, :].reshape(b, h, sq, hd)
+
+
+def vmem_bytes(block_q: int, block_k: int, seq_k: int, head_dim: int,
+               dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set per grid step (DESIGN.md §Perf).
+
+    One Q block + the full K/V panels for this (b,h) + f32 accumulators.
+    With the default BlockSpec the K/V panel is resident per grid step;
+    a production TPU kernel would stream K/V block_k-at-a-time, shrinking
+    the K/V term to 2*block_k*head_dim.
+    """
+    q_bytes = block_q * head_dim * dtype_bytes
+    kv_bytes = 2 * seq_k * head_dim * dtype_bytes
+    acc_bytes = block_q * (head_dim + 2) * 4
+    out_bytes = block_q * head_dim * dtype_bytes
+    return q_bytes + kv_bytes + acc_bytes + out_bytes

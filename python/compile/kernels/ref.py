@@ -1,0 +1,134 @@
+"""Pure-jnp reference implementations ("oracle") for every kernel and module.
+
+These are the correctness ground truth: the Pallas kernels
+(`flash_attention.py`, `fused_rmsnorm_matmul.py`) and the composed module
+functions (`model.py`) are asserted allclose against these in
+`python/tests/`. Keep them boring and obviously-correct — no tiling, no
+fusion, no tricks.
+"""
+
+import jax.numpy as jnp
+
+
+def rmsnorm(x, weight, eps: float = 1e-6):
+    """RMSNorm over the last axis: x / rms(x) * weight."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(var + eps)) * weight
+
+
+def rope(x, positions):
+    """Rotary position embedding.
+
+    x: [batch, heads, seq, head_dim]; positions: [batch, seq] (int32).
+    Standard LLaMA theta=10000 formulation over half the head dim.
+    """
+    b, h, s, hd = x.shape
+    half = hd // 2
+    freq = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    # [batch, seq, half]
+    angles = positions[:, :, None].astype(jnp.float32) * freq[None, None, :]
+    cos = jnp.cos(angles)[:, None, :, :]  # [b, 1, s, half]
+    sin = jnp.sin(angles)[:, None, :, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def attention(q, k, v, mask=None, scale=None):
+    """Plain softmax attention.
+
+    q: [b, h, sq, hd], k/v: [b, h, sk, hd].
+    mask: broadcastable to [b, h, sq, sk]; True = attend.
+    """
+    hd = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if mask is not None:
+        scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def causal_mask(sq: int, sk: int):
+    """Causal mask for a prefill block where queries are the last sq of sk."""
+    qi = jnp.arange(sq)[:, None] + (sk - sq)
+    ki = jnp.arange(sk)[None, :]
+    return ki <= qi  # [sq, sk]
+
+
+def swiglu_ffn(x, w_gate, w_up, w_down):
+    """SwiGLU feed-forward: down( silu(x@gate) * (x@up) )."""
+    g = x @ w_gate
+    u = x @ w_up
+    silu = g * (1.0 / (1.0 + jnp.exp(-g)))
+    return (silu * u) @ w_down
+
+
+def rmsnorm_matmul(x, weight, w):
+    """Fused RMSNorm followed by a matmul — oracle for the Pallas kernel."""
+    return rmsnorm(x, weight) @ w
+
+
+def decoder_layer_prefill(hidden, positions, weights):
+    """Full decoder layer over a prompt chunk.
+
+    hidden: [b, s, d]; positions: [b, s] int32 absolute positions.
+    weights: dict with rms1, wq, wk, wv, wo, rms2, w_gate, w_up, w_down,
+    n_heads. Returns (hidden_out [b,s,d], k [b,h,s,hd], v [b,h,s,hd]).
+    """
+    b, s, d = hidden.shape
+    n_heads = weights["n_heads"]
+    hd = d // n_heads
+
+    x = rmsnorm(hidden, weights["rms1"])
+    q = (x @ weights["wq"]).reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+    k = (x @ weights["wk"]).reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+    v = (x @ weights["wv"]).reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+    q = rope(q, positions)
+    k = rope(k, positions)
+    mask = causal_mask(s, s)[None, None, :, :]
+    attn = attention(q, k, v, mask)
+    attn = attn.transpose(0, 2, 1, 3).reshape(b, s, d)
+    hidden = hidden + attn @ weights["wo"]
+
+    x = rmsnorm(hidden, weights["rms2"])
+    hidden = hidden + swiglu_ffn(x, weights["w_gate"], weights["w_up"], weights["w_down"])
+    return hidden, k, v
+
+
+def decoder_layer_decode(hidden, k_cache, v_cache, seq_lens, weights):
+    """Single decode step with a static-capacity KV cache.
+
+    hidden: [b, 1, d]; k_cache/v_cache: [b, h, S, hd]; seq_lens: [b] int32 —
+    number of tokens already cached per sequence (the new token lands at
+    index seq_lens[i]). Returns (hidden_out, k_cache', v_cache').
+    """
+    b, _, d = hidden.shape
+    n_heads = weights["n_heads"]
+    hd = d // n_heads
+    S = k_cache.shape[2]
+
+    x = rmsnorm(hidden, weights["rms1"])
+    q = (x @ weights["wq"]).reshape(b, 1, n_heads, hd).transpose(0, 2, 1, 3)
+    k = (x @ weights["wk"]).reshape(b, 1, n_heads, hd).transpose(0, 2, 1, 3)
+    v = (x @ weights["wv"]).reshape(b, 1, n_heads, hd).transpose(0, 2, 1, 3)
+    pos = seq_lens[:, None]  # [b, 1]
+    q = rope(q, pos)
+    k = rope(k, pos)
+
+    # Scatter the new K/V into the cache at per-sequence positions.
+    bidx = jnp.arange(b)
+    k_cache = k_cache.at[bidx, :, seq_lens, :].set(k[:, :, 0, :])
+    v_cache = v_cache.at[bidx, :, seq_lens, :].set(v[:, :, 0, :])
+
+    # Attend over valid cache slots only (idx <= seq_lens).
+    idx = jnp.arange(S)[None, None, None, :]  # [1,1,1,S]
+    mask = idx <= seq_lens[:, None, None, None]
+    attn = attention(q, k_cache, v_cache, mask)
+    attn = attn.transpose(0, 2, 1, 3).reshape(b, 1, d)
+    hidden = hidden + attn @ weights["wo"]
+
+    x = rmsnorm(hidden, weights["rms2"])
+    hidden = hidden + swiglu_ffn(x, weights["w_gate"], weights["w_up"], weights["w_down"])
+    return hidden, k_cache, v_cache

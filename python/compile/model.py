@@ -1,0 +1,238 @@
+"""L2: the serving model as *per-module* jax functions (weights as arguments).
+
+CoCoServe's contribution is module-level scaling: decoder layers, attention,
+FFN, projections and KV caches are the units of replication and migration.
+We mirror that in the compile path — every module kind below is lowered to
+its own HLO artifact with **weights passed as runtime arguments**, so:
+
+  * one compiled executable serves *any* layer (layer identity lives in the
+    weight literals the Rust coordinator owns), and
+  * replicating or migrating a module is moving bytes, never recompiling.
+
+All functions are shape-static (PJRT requirement); the Rust scheduler pads
+to the shape buckets in `configs.py`. Hot paths call the L1 Pallas kernels
+(`flash_attention`, `fused_rmsnorm_matmul`); everything is f32 on the CPU
+interpret path (bf16 is a TPU-only concern, see DESIGN.md).
+
+Argument conventions (shared with rust/src/runtime via manifest.json):
+
+  layer weights, in order: rms1[d], wq[d,d], wk[d,d], wv[d,d], wo[d,d],
+                           rms2[d], w_gate[d,ff], w_up[d,ff], w_down[ff,d]
+  seq_lens[b] i32 — tokens already cached per sequence (decode), or the
+                    true (un-padded) prompt length (lm_head_prefill).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.flash_attention import flash_attention
+from .kernels.fused_rmsnorm_matmul import fused_rmsnorm_matmul
+
+LAYER_WEIGHT_NAMES = (
+    "rms1", "wq", "wk", "wv", "wo", "rms2", "w_gate", "w_up", "w_down",
+)
+
+
+def layer_weight_shapes(cfg):
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "rms1": (d,), "wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d),
+        "rms2": (d,), "w_gate": (d, ff), "w_up": (d, ff), "w_down": (ff, d),
+    }
+
+
+# --------------------------------------------------------------------------
+# Embedding / LM head
+# --------------------------------------------------------------------------
+
+def embed(tokens, emb_table):
+    """tokens [b, s] i32, emb_table [vocab, d] -> hidden [b, s, d]."""
+    return (emb_table[tokens],)
+
+
+def lm_head_prefill(hidden, seq_lens, rms_f, w_out):
+    """Greedy next token from the last *real* prompt position.
+
+    hidden [b, s, d]; seq_lens [b] i32 (true prompt lengths; the last real
+    token of sequence i sits at index seq_lens[i]-1). Returns
+    (next_token [b] i32, logits [b, vocab]).
+    """
+    last = jnp.take_along_axis(
+        hidden, (seq_lens - 1)[:, None, None], axis=1)  # [b, 1, d]
+    x = ref.rmsnorm(last[:, 0, :], rms_f)
+    logits = x @ w_out
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), logits
+
+
+def lm_head_decode(hidden, rms_f, w_out):
+    """hidden [b, 1, d] -> (next_token [b] i32, logits [b, vocab])."""
+    x = ref.rmsnorm(hidden[:, 0, :], rms_f)
+    logits = x @ w_out
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), logits
+
+
+# --------------------------------------------------------------------------
+# Sub-module building blocks (projection granularity — §3.3 migration units)
+# --------------------------------------------------------------------------
+
+def _split_heads(x, n_heads):
+    b, s, d = x.shape
+    return x.reshape(b, s, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, s, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+
+
+def qkv_proj(hidden, positions, rms1, wq, wk, wv, *, n_heads):
+    """RMSNorm + Q/K/V projections + RoPE. hidden [b,s,d], positions [b,s].
+
+    Returns (q, k, v) each [b, h, s, hd]. Uses the fused rmsnorm-matmul
+    Pallas kernel for the three projections.
+    """
+    q = fused_rmsnorm_matmul(hidden, rms1, wq)
+    k = fused_rmsnorm_matmul(hidden, rms1, wk)
+    v = fused_rmsnorm_matmul(hidden, rms1, wv)
+    q = ref.rope(_split_heads(q, n_heads), positions)
+    k = ref.rope(_split_heads(k, n_heads), positions)
+    return q, k, _split_heads(v, n_heads)
+
+
+def attn_core_prefill(q, k, v):
+    """Causal flash attention over a prompt chunk -> [b, s, d] merged."""
+    return (_merge_heads(flash_attention(q, k, v, causal=True)),)
+
+
+def o_proj(hidden, attn_out, wo):
+    """Output projection + residual add. hidden/attn_out [b, s, d]."""
+    return (hidden + attn_out @ wo,)
+
+
+def attn_prefill(hidden, positions, rms1, wq, wk, wv, wo, *, n_heads):
+    """Whole attention block (prefill): returns (hidden', k, v)."""
+    q, k, v = qkv_proj(hidden, positions, rms1, wq, wk, wv, n_heads=n_heads)
+    (attn_out,) = attn_core_prefill(q, k, v)
+    (hidden,) = o_proj(hidden, attn_out, wo)
+    return hidden, k, v
+
+
+def attn_decode(hidden, k_cache, v_cache, seq_lens,
+                rms1, wq, wk, wv, wo, *, n_heads):
+    """Whole attention block (one decode step).
+
+    hidden [b,1,d]; k_cache/v_cache [b,h,S,hd]; seq_lens [b] i32 = number of
+    cached tokens (new token lands at slot seq_lens[i]). Returns
+    (hidden', k_new [b,h,hd], v_new [b,h,hd]) — the caller owns the cache
+    and scatters k_new/v_new host-side; attention here sees the updated
+    cache via an in-graph functional scatter (never shipped back out).
+    """
+    b, _, d = hidden.shape
+    pos = seq_lens[:, None]
+    q = ref.rope(_split_heads(
+        fused_rmsnorm_matmul(hidden, rms1, wq), n_heads), pos)
+    k = ref.rope(_split_heads(
+        fused_rmsnorm_matmul(hidden, rms1, wk), n_heads), pos)
+    v = _split_heads(fused_rmsnorm_matmul(hidden, rms1, wv), n_heads)
+
+    bidx = jnp.arange(b)
+    S = k_cache.shape[2]
+    kc = k_cache.at[bidx, :, seq_lens, :].set(k[:, :, 0, :])
+    vc = v_cache.at[bidx, :, seq_lens, :].set(v[:, :, 0, :])
+    idx = jnp.arange(S)[None, None, None, :]
+    mask = idx <= seq_lens[:, None, None, None]
+    attn = ref.attention(q, kc, vc, mask)
+    hidden = hidden + _merge_heads(attn) @ wo
+    return hidden, k[:, :, 0, :], v[:, :, 0, :]
+
+
+def ffn(hidden, rms2, w_gate, w_up, w_down):
+    """SwiGLU FFN block with residual. hidden [b, s, d] (s may be 1)."""
+    g = fused_rmsnorm_matmul(hidden, rms2, w_gate)
+    u = fused_rmsnorm_matmul(hidden, rms2, w_up)
+    silu = g * (1.0 / (1.0 + jnp.exp(-g)))
+    return (hidden + (silu * u) @ w_down,)
+
+
+# --------------------------------------------------------------------------
+# Whole decoder layer (the paper's primary scaling unit)
+# --------------------------------------------------------------------------
+
+def layer_prefill(hidden, positions, rms1, wq, wk, wv, wo,
+                  rms2, w_gate, w_up, w_down, *, n_heads):
+    """Full decoder layer over a prompt chunk.
+
+    Returns (hidden' [b,s,d], k [b,h,s,hd], v [b,h,s,hd]) — K/V handed to
+    the coordinator, which owns cache placement (a migratable module).
+    """
+    hidden, k, v = attn_prefill(hidden, positions, rms1, wq, wk, wv, wo,
+                                n_heads=n_heads)
+    (hidden,) = ffn(hidden, rms2, w_gate, w_up, w_down)
+    return hidden, k, v
+
+
+def layer_decode(hidden, k_cache, v_cache, seq_lens, rms1, wq, wk, wv, wo,
+                 rms2, w_gate, w_up, w_down, *, n_heads):
+    """Full decoder layer, one decode step.
+
+    Returns (hidden' [b,1,d], k_new [b,h,hd], v_new [b,h,hd]).
+    """
+    hidden, k_new, v_new = attn_decode(
+        hidden, k_cache, v_cache, seq_lens, rms1, wq, wk, wv, wo,
+        n_heads=n_heads)
+    (hidden,) = ffn(hidden, rms2, w_gate, w_up, w_down)
+    return hidden, k_new, v_new
+
+
+# --------------------------------------------------------------------------
+# Reference whole-model forward (pytest only — never lowered)
+# --------------------------------------------------------------------------
+
+def init_weights(cfg, seed: int = 0):
+    """Deterministic synthetic weights, scaled for stable activations."""
+    key = jax.random.PRNGKey(seed)
+    shapes = layer_weight_shapes(cfg)
+    layers = []
+    for _ in range(cfg.n_layers):
+        w = {}
+        for name, shape in shapes.items():
+            key, sub = jax.random.split(key)
+            if name.startswith("rms"):
+                w[name] = jnp.ones(shape, jnp.float32)
+            else:
+                fan_in = shape[0]
+                w[name] = (jax.random.normal(sub, shape, jnp.float32)
+                           / jnp.sqrt(jnp.float32(fan_in)))
+        layers.append(w)
+    key, k1, k2 = jax.random.split(key, 3)
+    emb = jax.random.normal(k1, (cfg.vocab_size, cfg.d_model), jnp.float32)
+    w_out = (jax.random.normal(k2, (cfg.d_model, cfg.vocab_size), jnp.float32)
+             / jnp.sqrt(jnp.float32(cfg.d_model)))
+    rms_f = jnp.ones((cfg.d_model,), jnp.float32)
+    return {"layers": layers, "emb": emb, "w_out": w_out, "rms_f": rms_f}
+
+
+def forward_greedy(cfg, weights, tokens, n_new: int):
+    """Greedy generation via the *reference* layer fns (oracle for the full
+    Rust pipeline; see python/tests/test_model.py and the Rust integration
+    test, which must produce identical token ids)."""
+    toks = [list(t) for t in tokens]
+    for _ in range(n_new):
+        b = len(toks)
+        max_len = max(len(t) for t in toks)
+        ids = jnp.asarray(
+            [t + [0] * (max_len - len(t)) for t in toks], jnp.int32)
+        hidden = weights["emb"][ids]
+        positions = jnp.broadcast_to(
+            jnp.arange(max_len, dtype=jnp.int32)[None, :], (b, max_len))
+        for lw in weights["layers"]:
+            wd = dict(lw)
+            wd["n_heads"] = cfg.n_heads
+            hidden, _, _ = ref.decoder_layer_prefill(hidden, positions, wd)
+        lens = jnp.asarray([len(t) for t in toks], jnp.int32)
+        nxt, _ = lm_head_prefill(hidden, lens, weights["rms_f"],
+                                 weights["w_out"])
+        for i, t in enumerate(toks):
+            t.append(int(nxt[i]))
+    return toks

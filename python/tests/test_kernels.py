@@ -1,0 +1,212 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Includes hypothesis sweeps over shapes/dtypes — the required
+kernel-vs-reference signal for the interpret-mode Pallas path.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.flash_attention import flash_attention, vmem_bytes
+from compile.kernels.fused_rmsnorm_matmul import fused_rmsnorm_matmul
+
+RNG = np.random.default_rng(1234)
+
+
+def randn(*shape, dtype=np.float32):
+    return jnp.asarray(RNG.standard_normal(shape).astype(dtype))
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,h,s,hd", [
+        (1, 1, 16, 8), (2, 4, 32, 16), (1, 2, 64, 32), (3, 1, 48, 16),
+    ])
+    def test_causal_matches_ref(self, b, h, s, hd):
+        q, k, v = randn(b, h, s, hd), randn(b, h, s, hd), randn(b, h, s, hd)
+        mask = ref.causal_mask(s, s)[None, None]
+        want = ref.attention(q, k, v, mask)
+        got = flash_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("b,h,s,hd", [(2, 2, 32, 16), (1, 4, 24, 8)])
+    def test_non_causal_matches_ref(self, b, h, s, hd):
+        q, k, v = randn(b, h, s, hd), randn(b, h, s, hd), randn(b, h, s, hd)
+        want = ref.attention(q, k, v, mask=None)
+        got = flash_attention(q, k, v, causal=False)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("block_q,block_k", [(4, 4), (8, 16), (16, 8),
+                                                 (32, 32), (5, 7)])
+    def test_block_shape_invariance(self, block_q, block_k):
+        """Output must not depend on the tiling — the core Pallas invariant."""
+        b, h, s, hd = 2, 2, 32, 16
+        q, k, v = randn(b, h, s, hd), randn(b, h, s, hd), randn(b, h, s, hd)
+        base = flash_attention(q, k, v, causal=True, block_q=16, block_k=16)
+        got = flash_attention(q, k, v, causal=True,
+                              block_q=block_q, block_k=block_k)
+        np.testing.assert_allclose(got, base, rtol=2e-5, atol=2e-5)
+
+    def test_q_shorter_than_k(self):
+        """Chunked prefill: queries are the last sq positions of sk."""
+        b, h, sq, sk, hd = 1, 2, 8, 32, 16
+        q = randn(b, h, sq, hd)
+        k, v = randn(b, h, sk, hd), randn(b, h, sk, hd)
+        mask = ref.causal_mask(sq, sk)[None, None]
+        want = ref.attention(q, k, v, mask)
+        got = flash_attention(q, k, v, causal=True, q_offset=sk - sq)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_first_token_fully_masked_row_is_finite(self):
+        """Causal row 0 attends to exactly one key; no NaN/inf anywhere."""
+        q, k, v = randn(1, 1, 16, 8), randn(1, 1, 16, 8), randn(1, 1, 16, 8)
+        got = flash_attention(q, k, v, causal=True, block_q=4, block_k=4)
+        assert bool(jnp.all(jnp.isfinite(got)))
+
+    def test_scale_invariance_of_softmax_shift(self):
+        """Large-magnitude scores must not overflow (online softmax)."""
+        q = randn(1, 1, 16, 8) * 100.0
+        k = randn(1, 1, 16, 8) * 100.0
+        v = randn(1, 1, 16, 8)
+        mask = ref.causal_mask(16, 16)[None, None]
+        want = ref.attention(q, k, v, mask)
+        got = flash_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        h=st.integers(1, 4),
+        s_pow=st.integers(2, 6),
+        hd_pow=st.integers(2, 5),
+        bq_pow=st.integers(1, 4),
+        bk_pow=st.integers(1, 4),
+    )
+    def test_hypothesis_shape_sweep(self, b, h, s_pow, hd_pow, bq_pow,
+                                    bk_pow):
+        s, hd = 2 ** s_pow, 2 ** hd_pow
+        rng = np.random.default_rng(b * 1000 + h * 100 + s + hd)
+        q = jnp.asarray(rng.standard_normal((b, h, s, hd), dtype=np.float32))
+        k = jnp.asarray(rng.standard_normal((b, h, s, hd), dtype=np.float32))
+        v = jnp.asarray(rng.standard_normal((b, h, s, hd), dtype=np.float32))
+        mask = ref.causal_mask(s, s)[None, None]
+        want = ref.attention(q, k, v, mask)
+        got = flash_attention(q, k, v, causal=True,
+                              block_q=2 ** bq_pow, block_k=2 ** bk_pow)
+        np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+    def test_vmem_estimate_within_budget(self):
+        """Structural perf check (DESIGN.md §Perf): default tiling at the
+        paper-scale head_dim fits a 16 MB VMEM budget comfortably."""
+        assert vmem_bytes(block_q=128, block_k=128, seq_k=4096,
+                          head_dim=128) < 16 * 2 ** 20
+
+
+# --------------------------------------------------------------------------
+# fused rmsnorm + matmul
+# --------------------------------------------------------------------------
+
+class TestFusedRmsnormMatmul:
+    @pytest.mark.parametrize("m,d,n", [(8, 64, 64), (16, 64, 172),
+                                       (7, 32, 100), (1, 128, 344)])
+    def test_matches_ref(self, m, d, n):
+        x, g, w = randn(m, d), randn(d), randn(d, n)
+        want = ref.rmsnorm_matmul(x, g, w)
+        got = fused_rmsnorm_matmul(x, g, w)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_batched_leading_dims(self):
+        x, g, w = randn(2, 5, 64), randn(64), randn(64, 32)
+        want = ref.rmsnorm_matmul(x, g, w)
+        got = fused_rmsnorm_matmul(x, g, w)
+        assert got.shape == (2, 5, 32)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("block_m,block_n", [(4, 16), (16, 64), (3, 5),
+                                                 (32, 128)])
+    def test_block_shape_invariance(self, block_m, block_n):
+        x, g, w = randn(16, 64), randn(64), randn(64, 172)
+        want = ref.rmsnorm_matmul(x, g, w)
+        got = fused_rmsnorm_matmul(x, g, w, block_m=block_m, block_n=block_n)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 20),
+        d_pow=st.integers(3, 7),
+        n=st.integers(1, 200),
+        bm=st.integers(1, 32),
+        bn=st.integers(1, 128),
+    )
+    def test_hypothesis_shape_sweep(self, m, d_pow, n, bm, bn):
+        d = 2 ** d_pow
+        rng = np.random.default_rng(m * 7919 + d + n)
+        x = jnp.asarray(rng.standard_normal((m, d), dtype=np.float32))
+        g = jnp.asarray(rng.standard_normal((d,), dtype=np.float32))
+        w = jnp.asarray(rng.standard_normal((d, n), dtype=np.float32))
+        want = ref.rmsnorm_matmul(x, g, w)
+        got = fused_rmsnorm_matmul(x, g, w, block_m=bm, block_n=bn)
+        np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+    def test_zero_input_stays_finite(self):
+        """eps keeps the rsqrt finite for all-zero rows."""
+        x = jnp.zeros((4, 64))
+        g, w = randn(64), randn(64, 16)
+        got = fused_rmsnorm_matmul(x, g, w)
+        assert bool(jnp.all(jnp.isfinite(got)))
+        np.testing.assert_allclose(got, jnp.zeros((4, 16)), atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# reference self-consistency (the oracle itself must be trustworthy)
+# --------------------------------------------------------------------------
+
+class TestRefInternals:
+    def test_rope_norm_preserving(self):
+        """RoPE is a rotation: per-pair L2 norms are preserved."""
+        x = randn(2, 2, 8, 16)
+        pos = jnp.broadcast_to(jnp.arange(8, dtype=jnp.int32)[None], (2, 8))
+        y = ref.rope(x, pos)
+        def pair_norms(t):
+            half = t.shape[-1] // 2
+            return jnp.sqrt(t[..., :half] ** 2 + t[..., half:] ** 2)
+        np.testing.assert_allclose(pair_norms(y), pair_norms(x),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_rope_position_zero_identity(self):
+        x = randn(1, 1, 4, 16)
+        pos = jnp.zeros((1, 4), jnp.int32)
+        np.testing.assert_allclose(ref.rope(x, pos), x, rtol=1e-6, atol=1e-6)
+
+    def test_attention_rows_convex(self):
+        """Each attention output row is a convex combination of V rows."""
+        q, k = randn(1, 1, 8, 8), randn(1, 1, 8, 8)
+        v = jnp.ones((1, 1, 8, 8))
+        out = ref.attention(q, k, v)
+        np.testing.assert_allclose(out, jnp.ones_like(out), rtol=1e-5)
+
+    def test_causal_mask_shape_and_diag(self):
+        m = ref.causal_mask(4, 4)
+        assert m.shape == (4, 4)
+        assert bool(jnp.all(jnp.diagonal(m)))
+        assert not bool(m[0, 1])
+
+    def test_causal_mask_offset(self):
+        """Queries are the last sq of sk: row 0 sees the first sk-sq+1 keys."""
+        m = ref.causal_mask(2, 5)
+        np.testing.assert_array_equal(
+            np.asarray(m),
+            np.array([[True, True, True, True, False],
+                      [True, True, True, True, True]]))
+
+    def test_rmsnorm_unit_rows(self):
+        x = randn(4, 64)
+        y = ref.rmsnorm(x, jnp.ones(64))
+        rms = jnp.sqrt(jnp.mean(y * y, axis=-1))
+        np.testing.assert_allclose(rms, jnp.ones(4), rtol=1e-3)

@@ -1,0 +1,216 @@
+"""L2 correctness: module functions compose to the reference model.
+
+The key invariants:
+  * decoder layer == attn block + ffn block == qkv/core/o_proj + ffn
+    (module-level migration must not change semantics — paper §3.1
+    "preservation of model semantics during these operations"),
+  * prefill-then-decode == one longer prefill (KV-cache correctness),
+  * padding never leaks into real positions (the Rust scheduler pads to
+    shape buckets).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model
+from compile.kernels import ref
+
+CFG = configs.TINY
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return model.init_weights(CFG, seed=3)
+
+
+def layer_args(weights, i=0):
+    lw = weights["layers"][i]
+    return [lw[n] for n in model.LAYER_WEIGHT_NAMES]
+
+
+def make_hidden(b, s, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        rng.standard_normal((b, s, CFG.d_model), dtype=np.float32))
+
+
+def positions(b, s):
+    return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+
+class TestModuleComposition:
+    def test_layer_equals_attn_plus_ffn(self, weights):
+        b, s = 2, 16
+        hid, pos = make_hidden(b, s), positions(b, s)
+        la = layer_args(weights)
+        want, wk, wv = model.layer_prefill(hid, pos, *la,
+                                           n_heads=CFG.n_heads)
+        mid, k, v = model.attn_prefill(hid, pos, *la[:5],
+                                       n_heads=CFG.n_heads)
+        (got,) = model.ffn(mid, *la[5:])
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(k, wk, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(v, wv, rtol=1e-5, atol=1e-5)
+
+    def test_attn_equals_projection_granularity(self, weights):
+        """qkv_proj + attn_core + o_proj == attn_prefill — the projection-
+        level migration units of §3.3 compose exactly."""
+        b, s = 2, 16
+        hid, pos = make_hidden(b, s), positions(b, s)
+        la = layer_args(weights)
+        want, wk, wv = model.attn_prefill(hid, pos, *la[:5],
+                                          n_heads=CFG.n_heads)
+        q, k, v = model.qkv_proj(hid, pos, *la[:4], n_heads=CFG.n_heads)
+        (core,) = model.attn_core_prefill(q, k, v)
+        (got,) = model.o_proj(hid, core, la[4])
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(k, wk, rtol=1e-5, atol=1e-5)
+
+    def test_layer_matches_jnp_reference(self, weights):
+        b, s = 2, 32
+        hid, pos = make_hidden(b, s), positions(b, s)
+        la = layer_args(weights)
+        got, gk, gv = model.layer_prefill(hid, pos, *la, n_heads=CFG.n_heads)
+        wd = dict(weights["layers"][0])
+        wd["n_heads"] = CFG.n_heads
+        want, wk, wv = ref.decoder_layer_prefill(hid, pos, wd)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(gk, wk, rtol=1e-4, atol=1e-4)
+
+
+class TestKvCacheConsistency:
+    def test_prefill_then_decode_matches_longer_prefill(self, weights):
+        """Decode step t+1 after prefilling t tokens must equal prefilling
+        t+1 tokens — the KV-cache contract the Rust engine relies on."""
+        b, s = 2, 8
+        S = configs.MAX_SEQ_LEN
+        rng = np.random.default_rng(7)
+        full = jnp.asarray(
+            rng.standard_normal((b, s + 1, CFG.d_model), dtype=np.float32))
+        la = layer_args(weights)
+
+        want, _, _ = model.layer_prefill(
+            full, positions(b, s + 1), *la, n_heads=CFG.n_heads)
+
+        hid, k, v = model.layer_prefill(
+            full[:, :s], positions(b, s), *la, n_heads=CFG.n_heads)
+        kc = jnp.zeros((b, CFG.n_heads, S, CFG.head_dim))
+        vc = jnp.zeros_like(kc)
+        kc = kc.at[:, :, :s, :].set(k)
+        vc = vc.at[:, :, :s, :].set(v)
+        lens = jnp.full((b,), s, jnp.int32)
+        got, k_new, v_new = model.layer_decode(
+            full[:, s:s + 1], kc, vc, lens, *la, n_heads=CFG.n_heads)
+
+        np.testing.assert_allclose(
+            got[:, 0], want[:, s], rtol=1e-4, atol=1e-4)
+        assert k_new.shape == (b, CFG.n_heads, CFG.head_dim)
+
+    def test_decode_per_sequence_lengths(self, weights):
+        """Batched decode with *different* seq_lens must equal independent
+        single-sequence decodes (continuous batching correctness)."""
+        S = configs.MAX_SEQ_LEN
+        la = layer_args(weights)
+        rng = np.random.default_rng(11)
+
+        lens_host = [5, 9]
+        hid = jnp.asarray(
+            rng.standard_normal((2, 1, CFG.d_model), dtype=np.float32))
+        kc = jnp.asarray(rng.standard_normal(
+            (2, CFG.n_heads, S, CFG.head_dim), dtype=np.float32))
+        vc = jnp.asarray(rng.standard_normal(
+            (2, CFG.n_heads, S, CFG.head_dim), dtype=np.float32))
+        lens = jnp.asarray(lens_host, jnp.int32)
+
+        got, _, _ = model.layer_decode(hid, kc, vc, lens, *la,
+                                       n_heads=CFG.n_heads)
+        for i, L in enumerate(lens_host):
+            want, _, _ = model.layer_decode(
+                hid[i:i + 1], kc[i:i + 1], vc[i:i + 1],
+                jnp.asarray([L], jnp.int32), *la, n_heads=CFG.n_heads)
+            np.testing.assert_allclose(got[i], want[0], rtol=1e-4, atol=1e-4)
+
+    def test_decode_ignores_stale_cache_beyond_len(self, weights):
+        """Slots >= seq_len are masked: garbage there must not matter —
+        this is what makes bucket-padded prefill KV safe."""
+        S = configs.MAX_SEQ_LEN
+        la = layer_args(weights)
+        rng = np.random.default_rng(13)
+        hid = jnp.asarray(
+            rng.standard_normal((1, 1, CFG.d_model), dtype=np.float32))
+        kc = jnp.asarray(rng.standard_normal(
+            (1, CFG.n_heads, S, CFG.head_dim), dtype=np.float32))
+        vc = jnp.asarray(rng.standard_normal(
+            (1, CFG.n_heads, S, CFG.head_dim), dtype=np.float32))
+        lens = jnp.asarray([6], jnp.int32)
+        got, _, _ = model.layer_decode(hid, kc, vc, lens, *la,
+                                       n_heads=CFG.n_heads)
+        # poison everything beyond the written slot (index 6)
+        kc2 = kc.at[:, :, 7:, :].set(1e6)
+        vc2 = vc.at[:, :, 7:, :].set(-1e6)
+        got2, _, _ = model.layer_decode(hid, kc2, vc2, lens, *la,
+                                        n_heads=CFG.n_heads)
+        np.testing.assert_allclose(got, got2, rtol=1e-5, atol=1e-5)
+
+
+class TestPadding:
+    def test_batch_padding_does_not_change_real_rows(self, weights):
+        """Bucket-padding the batch axis must not perturb real sequences."""
+        b, s = 2, 16
+        hid, pos = make_hidden(b, s), positions(b, s)
+        la = layer_args(weights)
+        want, _, _ = model.layer_prefill(hid, pos, *la, n_heads=CFG.n_heads)
+        pad = jnp.concatenate([hid, jnp.zeros((2, s, CFG.d_model))], axis=0)
+        ppos = positions(4, s)
+        got, _, _ = model.layer_prefill(pad, ppos, *la, n_heads=CFG.n_heads)
+        np.testing.assert_allclose(got[:b], want, rtol=1e-5, atol=1e-5)
+
+    def test_lm_head_uses_true_length(self, weights):
+        """With tail padding, lm_head must read position len-1, not s-1."""
+        b, s = 2, 16
+        hid = make_hidden(b, s, seed=5)
+        lens = jnp.asarray([7, 12], jnp.int32)
+        tok, logits = model.lm_head_prefill(
+            hid, lens, weights["rms_f"], weights["w_out"])
+        for i, L in enumerate([7, 12]):
+            x = ref.rmsnorm(hid[i, L - 1], weights["rms_f"])
+            want = jnp.argmax(x @ weights["w_out"])
+            assert int(tok[i]) == int(want)
+        assert logits.shape == (b, CFG.vocab_size)
+
+
+class TestEmbedAndHead:
+    def test_embed_gathers_rows(self, weights):
+        toks = jnp.asarray([[1, 2], [3, 4]], jnp.int32)
+        (hid,) = model.embed(toks, weights["emb"])
+        np.testing.assert_allclose(hid[0, 0], weights["emb"][1])
+        np.testing.assert_allclose(hid[1, 1], weights["emb"][4])
+
+    def test_lm_head_decode_matches_prefill_at_len1(self, weights):
+        hid = make_hidden(2, 1, seed=9)
+        t1, l1 = model.lm_head_decode(hid, weights["rms_f"],
+                                      weights["w_out"])
+        t2, l2 = model.lm_head_prefill(hid, jnp.asarray([1, 1], jnp.int32),
+                                       weights["rms_f"], weights["w_out"])
+        np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+        np.testing.assert_allclose(l1, l2, rtol=1e-6)
+
+
+class TestForwardGreedy:
+    def test_deterministic(self, weights):
+        out1 = model.forward_greedy(CFG, weights, [[1, 2, 3]], 4)
+        out2 = model.forward_greedy(CFG, weights, [[1, 2, 3]], 4)
+        assert out1 == out2
+        assert len(out1[0]) == 7
+
+    def test_batch_independence(self, weights):
+        """Greedy outputs for a prompt must not depend on batch-mates."""
+        a = model.forward_greedy(CFG, weights, [[5, 6, 7]], 3)[0]
+        b = model.forward_greedy(CFG, weights,
+                                 [[5, 6, 7], [9, 10, 11, 12]], 3)[0]
+        assert a == b
+
+    def test_tokens_in_vocab(self, weights):
+        out = model.forward_greedy(CFG, weights, [[0, 1]], 5)[0]
+        assert all(0 <= t < CFG.vocab_size for t in out)

@@ -1,0 +1,200 @@
+//! The Auto-Scaling Controller (§5): threshold decisions + cooldown.
+//!
+//! Periodically evaluates monitor feedback and picks an action:
+//! scale-up when the cluster-wide resource vacancy exceeds `T_up`,
+//! scale-down when the SLO violation rate exceeds `T_down` (or any OOM
+//! occurred). A cooldown suppresses decision flapping while a previous
+//! operation's cost is still being amortized.
+
+use super::scale_down::Pressure;
+
+/// Snapshot of the signals the controller consumes each tick (produced by
+/// `monitor::Monitor::controller_view`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ControllerInputs {
+    /// Mean vacancy rate across eligible devices (1 − mem_frac).
+    pub vacancy_rate: f64,
+    /// Fraction of recent requests violating the SLO.
+    pub slo_violation_rate: f64,
+    /// OOM events since the last tick.
+    pub oom_events: u64,
+    /// Most loaded device + its pressure kind (scale-down target).
+    pub hottest_device: usize,
+    /// Compute utilization of the hottest device.
+    pub hottest_compute_util: f64,
+    /// Memory fraction of the hottest device.
+    pub hottest_mem_frac: f64,
+}
+
+/// Controller decision for one tick.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Decision {
+    None,
+    ScaleUp,
+    ScaleDown { device: usize, pressure: Pressure },
+}
+
+/// Threshold configuration (T_up / T_down of §5).
+#[derive(Debug, Clone, Copy)]
+pub struct ControllerConfig {
+    /// Scale up when vacancy exceeds this (idle resources to harvest).
+    pub t_up: f64,
+    /// Scale down when SLO violation rate exceeds this.
+    pub t_down: f64,
+    /// Ticks to wait after an action before acting again.
+    pub cooldown_ticks: u32,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        ControllerConfig { t_up: 0.30, t_down: 0.05, cooldown_ticks: 2 }
+    }
+}
+
+/// Stateful threshold controller.
+#[derive(Debug, Clone)]
+pub struct Controller {
+    pub cfg: ControllerConfig,
+    cooldown: u32,
+    decisions: u64,
+}
+
+impl Controller {
+    pub fn new(cfg: ControllerConfig) -> Controller {
+        Controller { cfg, cooldown: 0, decisions: 0 }
+    }
+
+    pub fn decisions_made(&self) -> u64 {
+        self.decisions
+    }
+
+    /// Evaluate one control tick.
+    ///
+    /// Priority: OOM/SLO pressure outranks idle-resource harvesting —
+    /// scale-down is checked first (§4.2 runs "when workload intensifies
+    /// beyond capacity"), and an OOM bypasses the cooldown entirely.
+    pub fn tick(&mut self, inp: &ControllerInputs) -> Decision {
+        let emergency = inp.oom_events > 0;
+        if self.cooldown > 0 && !emergency {
+            self.cooldown -= 1;
+            return Decision::None;
+        }
+
+        if emergency || inp.slo_violation_rate > self.cfg.t_down {
+            // Memory pressure if the hot device is memory-dominated;
+            // compute pressure otherwise (§3.3 module selection).
+            let pressure = if emergency
+                || inp.hottest_mem_frac >= inp.hottest_compute_util
+            {
+                Pressure::Memory
+            } else {
+                Pressure::Compute
+            };
+            self.arm();
+            return Decision::ScaleDown { device: inp.hottest_device, pressure };
+        }
+
+        if inp.vacancy_rate > self.cfg.t_up && inp.slo_violation_rate == 0.0 {
+            self.arm();
+            return Decision::ScaleUp;
+        }
+
+        Decision::None
+    }
+
+    fn arm(&mut self) {
+        self.cooldown = self.cfg.cooldown_ticks;
+        self.decisions += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idle() -> ControllerInputs {
+        ControllerInputs {
+            vacancy_rate: 0.6,
+            slo_violation_rate: 0.0,
+            oom_events: 0,
+            hottest_device: 0,
+            hottest_compute_util: 0.2,
+            hottest_mem_frac: 0.4,
+        }
+    }
+
+    fn overloaded() -> ControllerInputs {
+        ControllerInputs {
+            vacancy_rate: 0.05,
+            slo_violation_rate: 0.4,
+            oom_events: 0,
+            hottest_device: 2,
+            hottest_compute_util: 0.99,
+            hottest_mem_frac: 0.7,
+        }
+    }
+
+    #[test]
+    fn idle_cluster_scales_up() {
+        let mut c = Controller::new(ControllerConfig::default());
+        assert_eq!(c.tick(&idle()), Decision::ScaleUp);
+    }
+
+    #[test]
+    fn slo_violation_scales_down_with_compute_pressure() {
+        let mut c = Controller::new(ControllerConfig::default());
+        assert_eq!(
+            c.tick(&overloaded()),
+            Decision::ScaleDown { device: 2, pressure: Pressure::Compute }
+        );
+    }
+
+    #[test]
+    fn memory_dominated_device_gets_memory_pressure() {
+        let mut c = Controller::new(ControllerConfig::default());
+        let mut inp = overloaded();
+        inp.hottest_mem_frac = 0.99;
+        inp.hottest_compute_util = 0.5;
+        assert!(matches!(
+            c.tick(&inp),
+            Decision::ScaleDown { pressure: Pressure::Memory, .. }
+        ));
+    }
+
+    #[test]
+    fn cooldown_suppresses_consecutive_actions() {
+        let mut c = Controller::new(ControllerConfig::default());
+        assert_eq!(c.tick(&idle()), Decision::ScaleUp);
+        assert_eq!(c.tick(&idle()), Decision::None);
+        assert_eq!(c.tick(&idle()), Decision::None);
+        assert_eq!(c.tick(&idle()), Decision::ScaleUp); // cooldown over
+        assert_eq!(c.decisions_made(), 2);
+    }
+
+    #[test]
+    fn oom_bypasses_cooldown() {
+        let mut c = Controller::new(ControllerConfig::default());
+        assert_eq!(c.tick(&idle()), Decision::ScaleUp); // arms cooldown
+        let mut inp = overloaded();
+        inp.oom_events = 3;
+        assert!(matches!(c.tick(&inp), Decision::ScaleDown { .. }));
+    }
+
+    #[test]
+    fn scale_down_outranks_scale_up() {
+        // Vacant cluster *and* SLO violations: stability wins.
+        let mut c = Controller::new(ControllerConfig::default());
+        let mut inp = idle();
+        inp.slo_violation_rate = 0.2;
+        assert!(matches!(c.tick(&inp), Decision::ScaleDown { .. }));
+    }
+
+    #[test]
+    fn no_action_in_the_healthy_band() {
+        let mut c = Controller::new(ControllerConfig::default());
+        let mut inp = idle();
+        inp.vacancy_rate = 0.2; // below T_up, above trouble
+        assert_eq!(c.tick(&inp), Decision::None);
+        assert_eq!(c.decisions_made(), 0);
+    }
+}

@@ -1,0 +1,16 @@
+//! The dynamic auto-scaling mechanism (§4) — CoCoServe's core contribution.
+//!
+//! * [`speedup`] — the modified-Amdahl model, Eqs. 1–4,
+//! * [`scale_up`] — Algorithm 1: greedy continuity-sorted layer replication,
+//! * [`scale_down`] — Algorithm 2: migrate → evict → reduce, graduated,
+//! * [`controller`] — the §5 threshold controller closing the loop with
+//!   the monitor.
+
+pub mod controller;
+pub mod scale_down;
+pub mod scale_up;
+pub mod speedup;
+
+pub use controller::{Controller, ControllerConfig, ControllerInputs, Decision};
+pub use scale_down::{scale_down, Pressure, ScaleDownConfig, ScaleDownOutcome};
+pub use scale_up::{scale_up, ScaleUpConfig, ScaleUpOutcome};

@@ -1,0 +1,428 @@
+//! Algorithm 2 — Scale-Down via Module Reduction (§4.2).
+//!
+//! A graduated three-phase intervention, each phase costlier than the last,
+//! executed only until the violation predicate clears:
+//!
+//! 1. **Module Migration** — move §3.3-selected modules (KV caches under
+//!    memory pressure, attention/FFN blocks under compute pressure) off the
+//!    violating device to the optimal destination.
+//! 2. **Replica Eviction** — drop co-located layer replicas, lowest-impact
+//!    first.
+//! 3. **Performance Reduction** — step the batch size down by Δbs and
+//!    offload, trading the instance's own throughput for stability.
+
+use crate::cluster::Cluster;
+use crate::model::{ModuleId, ModuleKind};
+use crate::ops::{ModuleOps, OpCost};
+use crate::placement::Placement;
+
+/// What kind of pressure is the violating device under? Determines the
+/// §3.3 module filter (memory → KV cache first; compute → attn/FFN).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pressure {
+    Memory,
+    Compute,
+}
+
+/// Tuning knobs for Algorithm 2.
+#[derive(Debug, Clone, Copy)]
+pub struct ScaleDownConfig {
+    /// Δbs — batch-size adjustment step (paper suggests e.g. 5).
+    pub batch_step: usize,
+    /// Candidate cap for phase 1 (§4.2: "determines the number of
+    /// candidates based on the analysis in §3.3").
+    pub max_migration_candidates: usize,
+    /// Headroom a destination must keep after receiving a module.
+    pub dst_headroom_frac: f64,
+}
+
+impl Default for ScaleDownConfig {
+    fn default() -> Self {
+        ScaleDownConfig {
+            batch_step: 5,
+            max_migration_candidates: 4,
+            dst_headroom_frac: 0.1,
+        }
+    }
+}
+
+/// One remediation step taken by Algorithm 2 (for logs + tests + benches).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Action {
+    Migrated { module: ModuleId, from: usize, to: usize },
+    Evicted { layer: usize, device: usize },
+    BatchReduced { from: usize, to: usize },
+    Offloaded { device: usize },
+}
+
+/// Outcome of a scale-down invocation.
+#[derive(Debug, Clone)]
+pub struct ScaleDownOutcome {
+    pub actions: Vec<Action>,
+    /// Did the violation predicate clear?
+    pub resolved: bool,
+    /// Possibly-reduced batch size.
+    pub batch_size: usize,
+    pub cost: OpCost,
+}
+
+/// `FilterModules` (§4.2 phase 1): migration candidates on `src`, ordered
+/// by the §3.3 analysis for the pressure kind.
+pub fn filter_modules(
+    placement: &Placement,
+    src: usize,
+    pressure: Pressure,
+    cap: usize,
+) -> Vec<ModuleId> {
+    let mut out: Vec<ModuleId> = Vec::new();
+    let layers_here = placement.primaries_on(src);
+    match pressure {
+        Pressure::Memory => {
+            // KV caches first (§3.3: "migrating the KV Cache proves
+            // advantageous" for memory relief), then whole layers.
+            for &l in &layers_here {
+                let kv = ModuleId::layer(ModuleKind::KvCache, l);
+                if placement.module_device(kv) == src {
+                    out.push(kv);
+                }
+            }
+            for &l in &layers_here {
+                out.push(ModuleId::layer(ModuleKind::DecoderLayer, l));
+            }
+        }
+        Pressure::Compute => {
+            // Compute-dense modules first: attention blocks, then FFNs,
+            // then whole layers (§3.3 densities 0.275 / 0.268 GFLOPs/MB).
+            for &l in &layers_here {
+                let attn = ModuleId::layer(ModuleKind::Attn, l);
+                if placement.module_device(attn) == src {
+                    out.push(attn);
+                }
+            }
+            for &l in &layers_here {
+                let ffn = ModuleId::layer(ModuleKind::Ffn, l);
+                if placement.module_device(ffn) == src {
+                    out.push(ffn);
+                }
+            }
+            for &l in &layers_here {
+                out.push(ModuleId::layer(ModuleKind::DecoderLayer, l));
+            }
+        }
+    }
+    out.truncate(cap);
+    out
+}
+
+/// `FindOptimalDestination`: the non-violating device with the most free
+/// memory that can hold `bytes` while keeping `headroom_frac` free.
+pub fn find_optimal_destination(
+    cluster: &Cluster,
+    src: usize,
+    bytes: f64,
+    headroom_frac: f64,
+) -> Option<usize> {
+    cluster
+        .by_free_memory()
+        .into_iter()
+        .find(|&d| {
+            d != src
+                && cluster.device(d).free_bytes() - bytes
+                    >= headroom_frac * cluster.device(d).spec.mem_bytes
+        })
+}
+
+/// `SortEvicteesBy` (§4.2 phase 2): replicas co-located on the violating
+/// device, lowest serving impact first. Impact proxy: replicas of layers
+/// with the highest remaining degree lose the least parallelism, and
+/// run-edge replicas break no continuity.
+pub fn sort_evictees(placement: &Placement, device: usize) -> Vec<usize> {
+    let mut evictees = placement.replicas_on(device);
+    evictees.sort_by_key(|&l| {
+        (
+            std::cmp::Reverse(placement.degree(l)),
+            placement.continuity_with(device, l),
+        )
+    });
+    evictees
+}
+
+/// Algorithm 2. `is_violating(cluster, placement, batch)` is the SLO/OOM
+/// predicate (θ comparison); `kv_bytes(layer)` reports the live cache
+/// payload for KV migrations.
+#[allow(clippy::too_many_arguments)]
+pub fn scale_down(
+    ops: &ModuleOps<'_>,
+    cluster: &mut Cluster,
+    placement: &mut Placement,
+    src: usize,
+    pressure: Pressure,
+    batch_size: usize,
+    cfg: &ScaleDownConfig,
+    kv_bytes: impl Fn(usize) -> f64,
+    mut is_violating: impl FnMut(&Cluster, &Placement, usize) -> bool,
+) -> ScaleDownOutcome {
+    let mut out = ScaleDownOutcome {
+        actions: vec![],
+        resolved: false,
+        batch_size,
+        cost: OpCost::default(),
+    };
+    let charge = |out: &mut ScaleDownOutcome, c: OpCost| {
+        out.cost.time_s += c.time_s;
+        out.cost.bytes_moved += c.bytes_moved;
+        out.cost.dst_bytes += c.dst_bytes;
+    };
+
+    if !is_violating(cluster, placement, out.batch_size) {
+        out.resolved = true;
+        return out;
+    }
+
+    // ---- Phase 1: Module Migration -------------------------------------
+    for m in filter_modules(placement, src, pressure, cfg.max_migration_candidates) {
+        let payload = match m.kind {
+            ModuleKind::KvCache => kv_bytes(m.layer.unwrap_or(0)),
+            _ => 0.0,
+        };
+        let bytes = ops.module_bytes(m.kind) + payload;
+        let Some(dst) =
+            find_optimal_destination(cluster, src, bytes, cfg.dst_headroom_frac)
+        else {
+            continue;
+        };
+        let res = if m.kind == ModuleKind::DecoderLayer {
+            ops.migrate_layer(cluster, placement, m.layer.unwrap(), dst)
+        } else {
+            ops.migrate_module(cluster, placement, m, dst, payload)
+        };
+        if let Ok(c) = res {
+            charge(&mut out, c);
+            out.actions.push(Action::Migrated { module: m, from: src, to: dst });
+            if !is_violating(cluster, placement, out.batch_size) {
+                out.resolved = true;
+                return out;
+            }
+        }
+    }
+
+    // ---- Phase 2: Replica Eviction --------------------------------------
+    for layer in sort_evictees(placement, src) {
+        if let Ok(c) = ops.evict_replica(cluster, placement, layer, src) {
+            charge(&mut out, c);
+            out.actions.push(Action::Evicted { layer, device: src });
+            if !is_violating(cluster, placement, out.batch_size) {
+                out.resolved = true;
+                return out;
+            }
+        }
+    }
+
+    // ---- Phase 3: Performance Reduction ----------------------------------
+    while is_violating(cluster, placement, out.batch_size) && out.batch_size >= 1 {
+        let from = out.batch_size;
+        let to = from.saturating_sub(cfg.batch_step).max(1);
+        if to == from {
+            // batch floor reached; offload as the last resort and stop.
+            out.actions.push(Action::Offloaded { device: src });
+            out.resolved = !is_violating(cluster, placement, out.batch_size);
+            return out;
+        }
+        out.batch_size = to;
+        out.actions.push(Action::BatchReduced { from, to });
+        out.actions.push(Action::Offloaded { device: src });
+        if !is_violating(cluster, placement, out.batch_size) {
+            out.resolved = true;
+            return out;
+        }
+    }
+    out.resolved = !is_violating(cluster, placement, out.batch_size);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, GIB};
+    use crate::model::cost::{CostModel, MIB};
+    use crate::model::ModelConfig;
+
+    fn setup() -> (CostModel, Cluster, Placement) {
+        let cm = CostModel::new(ModelConfig::llama2_13b());
+        let mut cl = Cluster::paper_testbed();
+        cl.device_mut(0).alloc("inst0/model", 24.2 * GIB).unwrap();
+        (cm, cl, Placement::single_device(40, 0))
+    }
+
+    #[test]
+    fn already_healthy_is_noop() {
+        let (cm, mut cl, mut pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let out = scale_down(
+            &ops, &mut cl, &mut pl, 0, Pressure::Memory, 15,
+            &ScaleDownConfig::default(), |_| 0.0, |_, _, _| false,
+        );
+        assert!(out.resolved);
+        assert!(out.actions.is_empty());
+        assert_eq!(out.batch_size, 15);
+    }
+
+    #[test]
+    fn phase1_migration_resolves_memory_pressure() {
+        let (cm, mut cl, mut pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        // per-layer KV allocations on device 0 (the engine's tag scheme) +
+        // extra load pushing the device above the violation line
+        for l in 0..4 {
+            let kv = ModuleId::layer(ModuleKind::KvCache, l);
+            cl.device_mut(0).alloc(&ops.tag(&kv, 0), 2.0 * GIB).unwrap();
+        }
+        cl.device_mut(0).alloc("activations", 6.0 * GIB).unwrap();
+        let out = scale_down(
+            &ops, &mut cl, &mut pl, 0, Pressure::Memory, 15,
+            &ScaleDownConfig::default(),
+            |_| 2.0 * GIB, // each KV cache holds 2 GiB
+            // violating while device 0 is above 90%
+            |cl, _, _| cl.device(0).mem_frac() > 0.90,
+        );
+        assert!(out.resolved, "actions: {:?}", out.actions);
+        assert!(out
+            .actions
+            .iter()
+            .all(|a| matches!(a, Action::Migrated { .. })));
+        assert_eq!(out.batch_size, 15, "phase 1 must not touch batch size");
+        // first migration target is a KV cache (§3.3 ordering)
+        if let Action::Migrated { module, .. } = &out.actions[0] {
+            assert_eq!(module.kind, ModuleKind::KvCache);
+        }
+        pl.validate(cl.n()).unwrap();
+    }
+
+    #[test]
+    fn compute_pressure_prefers_attention_modules() {
+        let (cm, mut cl, mut pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let mut calls = 0;
+        let out = scale_down(
+            &ops, &mut cl, &mut pl, 0, Pressure::Compute, 15,
+            &ScaleDownConfig::default(), |_| 0.0,
+            move |_, _, _| {
+                calls += 1;
+                calls <= 2 // clears after one migration
+            },
+        );
+        assert!(out.resolved);
+        if let Action::Migrated { module, .. } = &out.actions[0] {
+            assert_eq!(module.kind, ModuleKind::Attn);
+        } else {
+            panic!("expected migration, got {:?}", out.actions[0]);
+        }
+    }
+
+    #[test]
+    fn phase2_evicts_replicas_when_migration_insufficient() {
+        let (cm, mut cl, _) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        // replicas ON device 0 belonging to a placement homed on device 1
+        let mut pl = Placement::single_device(40, 1);
+        for l in 0..4 {
+            ops.replicate_layer(&mut cl, &mut pl, l, 0).unwrap();
+        }
+        let mut violations = 6; // phase 1 (4 candidates) won't clear it
+        let out = scale_down(
+            &ops, &mut cl, &mut pl, 0, Pressure::Memory, 15,
+            &ScaleDownConfig::default(), |_| 0.0,
+            move |_, _, _| {
+                violations -= 1;
+                violations > 0
+            },
+        );
+        assert!(out.resolved);
+        assert!(out.actions.iter().any(|a| matches!(a, Action::Evicted { .. })));
+        assert_eq!(out.batch_size, 15);
+    }
+
+    #[test]
+    fn phase3_reduces_batch_to_floor() {
+        let (cm, mut cl, mut pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        // never clears: every phase runs; batch walks 15 → 10 → 5 → 1
+        let out = scale_down(
+            &ops, &mut cl, &mut pl, 0, Pressure::Memory, 15,
+            &ScaleDownConfig::default(), |_| 0.0, |_, _, _| true,
+        );
+        assert!(!out.resolved);
+        assert_eq!(out.batch_size, 1);
+        let reductions: Vec<_> = out
+            .actions
+            .iter()
+            .filter_map(|a| match a {
+                Action::BatchReduced { from, to } => Some((*from, *to)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(reductions, vec![(15, 10), (10, 5), (5, 1)]);
+        assert!(out.actions.iter().any(|a| matches!(a, Action::Offloaded { .. })));
+    }
+
+    #[test]
+    fn batch_clears_mid_way() {
+        let (cm, mut cl, mut pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let out = scale_down(
+            &ops, &mut cl, &mut pl, 0, Pressure::Memory, 20,
+            &ScaleDownConfig::default(), |_| 0.0,
+            |_, _, bs| bs > 10,
+        );
+        assert!(out.resolved);
+        assert_eq!(out.batch_size, 10);
+    }
+
+    #[test]
+    fn graduated_cost_ordering() {
+        // phase 1+2 must not reduce batch; only phase 3 does — the
+        // "remediation with lower performance impact first" guarantee.
+        let (cm, mut cl, mut pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let mut phase_seen = vec![];
+        let out = scale_down(
+            &ops, &mut cl, &mut pl, 0, Pressure::Memory, 15,
+            &ScaleDownConfig::default(), |_| 1.0 * GIB,
+            |_, _, _| true,
+        );
+        for a in &out.actions {
+            phase_seen.push(match a {
+                Action::Migrated { .. } => 1,
+                Action::Evicted { .. } => 2,
+                Action::BatchReduced { .. } | Action::Offloaded { .. } => 3,
+            });
+        }
+        let mut sorted = phase_seen.clone();
+        sorted.sort_unstable();
+        assert_eq!(phase_seen, sorted, "phases out of order: {phase_seen:?}");
+    }
+
+    #[test]
+    fn evictee_order_prefers_high_degree() {
+        let (cm, mut cl, _) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let mut pl = Placement::single_device(40, 1);
+        ops.replicate_layer(&mut cl, &mut pl, 5, 0).unwrap();
+        ops.replicate_layer(&mut cl, &mut pl, 6, 0).unwrap();
+        ops.replicate_layer(&mut cl, &mut pl, 6, 2).unwrap(); // degree 3
+        let ev = sort_evictees(&pl, 0);
+        assert_eq!(ev[0], 6, "highest-degree replica evicted first");
+    }
+
+    #[test]
+    fn destination_keeps_headroom() {
+        let mut cl = Cluster::paper_testbed();
+        cl.device_mut(1).alloc("x", 35.0 * GIB).unwrap();
+        cl.device_mut(2).alloc("x", 20.0 * GIB).unwrap();
+        cl.device_mut(3).alloc("x", 39.0 * GIB).unwrap();
+        let dst = find_optimal_destination(&cl, 0, 500.0 * MIB, 0.1).unwrap();
+        assert_eq!(dst, 2, "most-free eligible device");
+        // nothing fits a 30 GiB payload with 10% headroom except… nothing
+        assert_eq!(find_optimal_destination(&cl, 0, 30.0 * GIB, 0.1), None);
+    }
+}

@@ -1,0 +1,258 @@
+//! Algorithm 1 — Scale-Up via layer replication (§4.1).
+//!
+//! Greedy search over (eligible device, continuity-sorted candidate layer)
+//! pairs: a replica is added iff the Eq. 4 speedup strictly improves and
+//! the destination has room. Guarantees from the paper, kept as tested
+//! invariants:
+//!
+//! * (a) monotonic speedup improvement (greedy local optimality),
+//! * (b) communication efficiency via continuity-first candidate order.
+
+use crate::cluster::Cluster;
+use crate::ops::{ModuleOps, OpCost};
+use crate::placement::Placement;
+
+use super::speedup::s_homo_from_norm;
+
+/// Tuning knobs for Algorithm 1.
+#[derive(Debug, Clone, Copy)]
+pub struct ScaleUpConfig {
+    /// γ — cluster configuration coefficient of Eq. 4.
+    pub gamma: f64,
+    /// Vacancy-rate filter of `GetEligibleNodes` (T_up in §5).
+    pub min_vacancy: f64,
+    /// Cap on replicas added per invocation (keeps each control-loop tick
+    /// bounded; the loop converges over successive ticks).
+    pub max_ops_per_round: usize,
+}
+
+impl Default for ScaleUpConfig {
+    fn default() -> Self {
+        ScaleUpConfig { gamma: 0.05, min_vacancy: 0.3, max_ops_per_round: usize::MAX }
+    }
+}
+
+/// What one scale-up round did.
+#[derive(Debug, Clone, Default)]
+pub struct ScaleUpOutcome {
+    /// (layer, destination device) for each executed replication.
+    pub replicated: Vec<(usize, usize)>,
+    pub speedup_before: f64,
+    pub speedup_after: f64,
+    pub cost: OpCost,
+}
+
+/// `SortCandidatesByContinuity` (§4.1): layers not yet resident on `dst`,
+/// ordered by descending continuity (longest consecutive run including the
+/// candidate), ties by ascending layer id; truncated to `max_replicas`.
+pub fn sort_candidates_by_continuity(
+    placement: &Placement,
+    dst: usize,
+    max_replicas: usize,
+) -> Vec<usize> {
+    let mut cands: Vec<usize> = (0..placement.n_layers)
+        .filter(|&l| !placement.layer_devices(l).contains(&dst))
+        .collect();
+    cands.sort_by_key(|&l| {
+        (std::cmp::Reverse(placement.continuity_with(dst, l)), l)
+    });
+    cands.truncate(max_replicas);
+    cands
+}
+
+/// Algorithm 1. Mutates `cluster` + `placement` through `ops`; returns the
+/// executed strategy change.
+pub fn scale_up(
+    ops: &ModuleOps<'_>,
+    cluster: &mut Cluster,
+    placement: &mut Placement,
+    cfg: &ScaleUpConfig,
+) -> ScaleUpOutcome {
+    let n = placement.n_layers;
+    let replica_bytes = ops.module_bytes(crate::model::ModuleKind::DecoderLayer);
+
+    // line 1: sp_best ← 1 / (γ + (1−γ)/n · ‖1 ⊘ P‖₁)
+    let mut inv_norm = placement.inv_p_norm();
+    let mut sp_best = s_homo_from_norm(cfg.gamma, n, inv_norm);
+    let mut out = ScaleUpOutcome {
+        speedup_before: sp_best,
+        speedup_after: sp_best,
+        ..Default::default()
+    };
+
+    // line 2: for g_dst ∈ GetEligibleNodes(G)
+    for dst in cluster.eligible_nodes(cfg.min_vacancy) {
+        // line 3: max_replicas ← available / r
+        let max_replicas =
+            (cluster.device(dst).free_bytes() / replica_bytes) as usize;
+        if max_replicas == 0 {
+            continue;
+        }
+        // line 4: continuity-sorted candidates
+        let candidates =
+            sort_candidates_by_continuity(placement, dst, max_replicas);
+        // lines 5–12: greedy accept while speedup strictly improves
+        for layer in candidates {
+            if out.replicated.len() >= cfg.max_ops_per_round {
+                return out;
+            }
+            let p_old = placement.degree(layer) as f64;
+            let new_norm = inv_norm - 1.0 / p_old + 1.0 / (p_old + 1.0);
+            let sp = s_homo_from_norm(cfg.gamma, n, new_norm);
+            if sp > sp_best {
+                match ops.replicate_layer(cluster, placement, layer, dst) {
+                    Ok(c) => {
+                        inv_norm = new_norm;
+                        sp_best = sp;
+                        out.speedup_after = sp;
+                        out.replicated.push((layer, dst));
+                        out.cost.time_s += c.time_s;
+                        out.cost.bytes_moved += c.bytes_moved;
+                        out.cost.dst_bytes += c.dst_bytes;
+                    }
+                    Err(_) => break, // destination full — next device
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, GIB};
+    use crate::model::cost::CostModel;
+    use crate::model::ModelConfig;
+    use crate::util::{prop, rng::Rng};
+
+    fn setup() -> (CostModel, Cluster, Placement) {
+        let cm = CostModel::new(ModelConfig::llama2_13b());
+        let mut cluster = Cluster::paper_testbed();
+        // instance weights resident on device 0 (~24 GiB)
+        cluster.device_mut(0).alloc("inst0/model", 24.2 * GIB).unwrap();
+        (cm, cluster, Placement::single_device(40, 0))
+    }
+
+    #[test]
+    fn speedup_monotonically_improves() {
+        let (cm, mut cl, mut pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let out = scale_up(&ops, &mut cl, &mut pl, &ScaleUpConfig::default());
+        assert!(!out.replicated.is_empty());
+        assert!(out.speedup_after > out.speedup_before);
+        pl.validate(cl.n()).unwrap();
+    }
+
+    #[test]
+    fn fills_eligible_devices_up_to_capacity() {
+        let (cm, mut cl, mut pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let out = scale_up(&ops, &mut cl, &mut pl, &ScaleUpConfig::default());
+        // 3 empty A100s × (40960/608 ≈ 67 layers capacity) but only 40
+        // layers exist per device — expect 120 replicas (40 on each).
+        assert_eq!(out.replicated.len(), 120, "{}", out.replicated.len());
+        for l in 0..40 {
+            assert_eq!(pl.degree(l), 4);
+        }
+    }
+
+    #[test]
+    fn respects_max_ops_per_round() {
+        let (cm, mut cl, mut pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let cfg = ScaleUpConfig { max_ops_per_round: 5, ..Default::default() };
+        let out = scale_up(&ops, &mut cl, &mut pl, &cfg);
+        assert_eq!(out.replicated.len(), 5);
+    }
+
+    #[test]
+    fn no_eligible_nodes_means_noop() {
+        let (cm, mut cl, mut pl) = setup();
+        for d in 1..4 {
+            cl.device_mut(d).alloc("hog", 35.0 * GIB).unwrap();
+        }
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let cfg = ScaleUpConfig { min_vacancy: 0.3, ..Default::default() };
+        let out = scale_up(&ops, &mut cl, &mut pl, &cfg);
+        assert!(out.replicated.is_empty());
+        assert_eq!(out.speedup_before, out.speedup_after);
+    }
+
+    #[test]
+    fn continuity_order_prefers_runs() {
+        let mut pl = Placement::single_device(10, 0);
+        pl.add_replica(4, 1);
+        pl.add_replica(5, 1);
+        let c = sort_candidates_by_continuity(&pl, 1, 3);
+        // 3 and 6 extend the [4,5] run (continuity 3); 3 wins ties by id.
+        assert_eq!(&c[..2], &[3, 6]);
+    }
+
+    #[test]
+    fn continuity_reduces_transitions_vs_random() {
+        // Ablation seed (see benches/ablation_continuity.rs): replicating
+        // with the continuity order yields fewer dataflow transitions than
+        // an id-shuffled order with the same budget.
+        let (cm, mut cl, mut pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let cfg = ScaleUpConfig { max_ops_per_round: 10, ..Default::default() };
+        let out = scale_up(&ops, &mut cl, &mut pl, &cfg);
+        assert_eq!(out.replicated.len(), 10);
+        let continuity_transitions = pl.transition_count();
+
+        // random order baseline
+        let (cm2, mut cl2, mut pl2) = setup();
+        let ops2 = ModuleOps::new(&cm2, 2, "inst0");
+        let mut rng = Rng::new(99);
+        let mut layers: Vec<usize> = (0..40).collect();
+        rng.shuffle(&mut layers);
+        for &l in layers.iter().take(10) {
+            ops2.replicate_layer(&mut cl2, &mut pl2, l, 1).unwrap();
+        }
+        let random_transitions = pl2.transition_count();
+        assert!(
+            continuity_transitions <= random_transitions,
+            "{continuity_transitions} > {random_transitions}"
+        );
+    }
+
+    #[test]
+    fn prop_scale_up_never_invalidates_placement() {
+        prop::check(
+            "scale-up-valid",
+            |r: &mut Rng| {
+                // random pre-fill of devices + random layer count
+                let n_layers = 4 + r.below(44) as usize;
+                let fills: Vec<f64> = (0..4).map(|_| r.f64() * 38.0).collect();
+                (n_layers, fills)
+            },
+            |(n_layers, fills)| {
+                let cm = CostModel::new(ModelConfig::llama2_13b());
+                let mut cl = Cluster::paper_testbed();
+                for (i, gib) in fills.iter().enumerate() {
+                    cl.device_mut(i).alloc("fill", gib * GIB).unwrap();
+                }
+                let mut pl = Placement::single_device(*n_layers, 0);
+                let ops = ModuleOps::new(&cm, 2, "inst0");
+                let before = s_homo_from_norm(0.05, *n_layers, pl.inv_p_norm());
+                let out = scale_up(&ops, &mut cl, &mut pl,
+                                   &ScaleUpConfig::default());
+                pl.validate(cl.n())?;
+                if out.speedup_after + 1e-12 < before {
+                    return Err("speedup regressed".into());
+                }
+                // ledger consistency: every replica has resident bytes
+                for l in 0..*n_layers {
+                    for d in pl.layer_devices(l).into_iter().skip(1) {
+                        let tag = format!("inst0/layers.{l}.decoder_layer@{d}");
+                        if cl.device(d).alloc_bytes(&tag) <= 0.0 {
+                            return Err(format!("replica {l}@{d} has no bytes"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

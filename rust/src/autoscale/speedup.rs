@@ -1,0 +1,262 @@
+//! The modified-Amdahl speedup model (§4.1, Eqs. 1–4).
+//!
+//! The paper models a replication strategy `P = [p_1 … p_n]` (per-layer
+//! parallelism degrees) with:
+//!
+//! * Eq. 1 — computation term
+//!   `W(P) = Σ_i max_j d²·bs_ij·l / C_ij`
+//! * Eq. 2 — communication term
+//!   `T(P) = δ · Σ_i Σ_{j=1}^{p_i−1} d·bs_ij·l / B_ij`
+//! * Eq. 3 — speedup `S(P) = W(P₀) / (W(P) + T(P))`
+//! * Eq. 4 — homogeneous closed form
+//!   `S_homo(P) = 1 / (γ + (1−γ)/n · Σ_i 1/p_i)`, `γ = δ·C/(d·B)`
+//!
+//! `W` and `T` are *proportional* to (not equal to) real times — only
+//! ratios matter (the paper says so explicitly). Eq. 4's γ is clamped to
+//! [0, 1): γ ≥ 1 would mean communication alone costs more than the
+//! entire sequential computation, at which point replication can't help.
+
+/// Cluster/strategy description for the heterogeneous model (Eqs. 1–3).
+#[derive(Debug, Clone)]
+pub struct HeteroStrategy {
+    /// Model dimension d.
+    pub d_model: f64,
+    /// Final sequence length l.
+    pub seq_len: f64,
+    /// Non-consecutive-transition constant δ (Eq. 2).
+    pub delta: f64,
+    /// Per layer i, per replica j: batch share bs_ij.
+    pub batch_share: Vec<Vec<f64>>,
+    /// Per layer i, per replica j: compute capacity C_ij (FLOPs/s).
+    pub compute: Vec<Vec<f64>>,
+    /// Per layer i, per replica j (j ≥ 1): bandwidth B_ij to replica j.
+    pub bandwidth: Vec<Vec<f64>>,
+}
+
+impl HeteroStrategy {
+    /// Eq. 1: W(P) = Σ_i max_j d²·bs_ij·l / C_ij.
+    pub fn w(&self) -> f64 {
+        let d2l = self.d_model * self.d_model * self.seq_len;
+        self.batch_share
+            .iter()
+            .zip(&self.compute)
+            .map(|(bs, c)| {
+                bs.iter()
+                    .zip(c)
+                    .map(|(b, cap)| d2l * b / cap)
+                    .fold(0.0_f64, f64::max)
+            })
+            .sum()
+    }
+
+    /// Eq. 2: T(P) = δ · Σ_i Σ_{j≥1} d·bs_ij·l / B_ij.
+    ///
+    /// The inner sum runs over the p_i − 1 *replicas* (j ≥ 1): the primary
+    /// needs no transfer.
+    pub fn t(&self) -> f64 {
+        let dl = self.d_model * self.seq_len;
+        self.delta
+            * self
+                .batch_share
+                .iter()
+                .zip(&self.bandwidth)
+                .map(|(bs, bw)| {
+                    bs.iter()
+                        .skip(1)
+                        .zip(bw)
+                        .map(|(b, band)| dl * b / band)
+                        .sum::<f64>()
+                })
+                .sum::<f64>()
+    }
+
+    /// Eq. 3: S(P) = W(P₀) / (W(P) + T(P)) where P₀ is the same workload
+    /// fully sequential on the primary devices.
+    pub fn speedup(&self) -> f64 {
+        let p0 = HeteroStrategy {
+            batch_share: self
+                .batch_share
+                .iter()
+                .map(|bs| vec![bs.iter().sum::<f64>()])
+                .collect(),
+            compute: self.compute.iter().map(|c| vec![c[0]]).collect(),
+            bandwidth: self.bandwidth.iter().map(|_| vec![]).collect(),
+            ..self.clone()
+        };
+        p0.w() / (self.w() + self.t())
+    }
+}
+
+/// γ = δ·C/(d·B) — the homogeneous cluster constant of Eq. 4. Clamped to
+/// [0, 1) (see module docs).
+pub fn gamma(delta: f64, compute: f64, d_model: f64, bandwidth: f64) -> f64 {
+    (delta * compute / (d_model * bandwidth)).clamp(0.0, 0.999_999)
+}
+
+/// Eq. 4: S_homo(P) = 1 / (γ + (1−γ)/n · Σ 1/p_i).
+pub fn s_homo(gamma: f64, p: &[usize]) -> f64 {
+    assert!(!p.is_empty());
+    let n = p.len() as f64;
+    let inv_sum: f64 = p.iter().map(|&pi| 1.0 / pi as f64).sum();
+    1.0 / (gamma + (1.0 - gamma) / n * inv_sum)
+}
+
+/// Eq. 4 via the pre-computed ‖1 ⊘ P‖₁ (Algorithm 1's incremental form).
+pub fn s_homo_from_norm(gamma: f64, n: usize, inv_p_norm: f64) -> f64 {
+    1.0 / (gamma + (1.0 - gamma) / n as f64 * inv_p_norm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    #[test]
+    fn sequential_strategy_speedup_is_one() {
+        assert!((s_homo(0.1, &[1; 40]) - 1.0).abs() < 1e-12);
+        let h = HeteroStrategy {
+            d_model: 5120.0,
+            seq_len: 256.0,
+            delta: 1.0,
+            batch_share: vec![vec![15.0]; 4],
+            compute: vec![vec![1e14]; 4],
+            bandwidth: vec![vec![]; 4],
+        };
+        assert!((h.speedup() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn full_replication_approaches_p_over_gamma_limit() {
+        // γ → 0: S → p for uniform p (pure Amdahl with a=1).
+        let s = s_homo(0.0, &[4; 40]);
+        assert!((s - 4.0).abs() < 1e-9, "{s}");
+        // γ > 0 bounds the speedup below p.
+        let s = s_homo(0.1, &[4; 40]);
+        assert!(s < 4.0 && s > 1.0);
+    }
+
+    #[test]
+    fn partial_replication_interpolates() {
+        // replicate half the layers at p=2: Amdahl with a=0.5, p=2 → 4/3.
+        let mut p = vec![1usize; 40];
+        for pi in p.iter_mut().take(20) {
+            *pi = 2;
+        }
+        let s = s_homo(0.0, &p);
+        assert!((s - 4.0 / 3.0).abs() < 1e-9, "{s}");
+    }
+
+    /// §4.1: "speedup exhibits a positive correlation with both the number
+    /// of [replicated] modules and the degree of parallelism".
+    #[test]
+    fn monotone_in_replication_count_and_degree() {
+        let g = 0.05;
+        let mut prev = 0.0;
+        for k in 0..=40 {
+            let mut p = vec![1usize; 40];
+            for pi in p.iter_mut().take(k) {
+                *pi = 2;
+            }
+            let s = s_homo(g, &p);
+            assert!(s >= prev, "k={k}: {s} < {prev}");
+            prev = s;
+        }
+        let mut prev = 0.0;
+        for dop in 1..=8 {
+            let s = s_homo(g, &vec![dop; 40]);
+            assert!(s > prev, "dop={dop}");
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn diminishing_returns_in_dop() {
+        // marginal gain of dop k→k+1 shrinks — the Fig. 6c plateau.
+        let g = 0.05;
+        let s: Vec<f64> = (1..=5).map(|d| s_homo(g, &vec![d; 40])).collect();
+        for w in s.windows(3) {
+            assert!(w[2] - w[1] < w[1] - w[0]);
+        }
+    }
+
+    #[test]
+    fn hetero_reduces_to_homo_for_uniform_cluster() {
+        let d = 5120.0;
+        let l = 256.0;
+        let cap = 1.4e14;
+        let bw = 1.0e11;
+        let delta = 2.0;
+        let n = 8;
+        let p = 2usize;
+        // even batch split over p replicas on identical devices
+        let h = HeteroStrategy {
+            d_model: d,
+            seq_len: l,
+            delta,
+            batch_share: vec![vec![7.5; p]; n],
+            compute: vec![vec![cap; p]; n],
+            bandwidth: vec![vec![bw; p - 1]; n],
+        };
+        // γ per Eq. 4 (bs cancels in W ratio; T carries bs·δ·d·l/B, W₀
+        // carries bs·d²·l/C — γ = δ·C/(d·B) after normalization).
+        let g = gamma(delta, cap, d, bw);
+        let want = s_homo(g, &vec![p; n]);
+        let got = h.speedup();
+        assert!((got - want).abs() / want < 0.05, "hetero {got} vs homo {want}");
+    }
+
+    #[test]
+    fn hetero_penalizes_slow_replica() {
+        // A replica on a device 10× slower dominates the max() in W.
+        let base = HeteroStrategy {
+            d_model: 512.0,
+            seq_len: 64.0,
+            delta: 1.0,
+            batch_share: vec![vec![8.0, 8.0]; 4],
+            compute: vec![vec![1e13, 1e13]; 4],
+            bandwidth: vec![vec![1e11]; 4],
+        };
+        let mut slow = base.clone();
+        for c in &mut slow.compute {
+            c[1] = 1e12;
+        }
+        assert!(slow.speedup() < base.speedup());
+    }
+
+    #[test]
+    fn gamma_clamped() {
+        assert_eq!(gamma(1000.0, 1e15, 512.0, 1e3), 0.999_999);
+        assert_eq!(gamma(0.0, 1e15, 512.0, 1e9), 0.0);
+    }
+
+    #[test]
+    fn prop_s_homo_bounds() {
+        // 1 ≤ S ≤ max(p) and S(P₀) = 1 for any γ ∈ [0,1).
+        prop::check(
+            "s-homo-bounds",
+            |r: &mut Rng| {
+                let n = 1 + r.below(64) as usize;
+                let p: Vec<usize> = (0..n).map(|_| 1 + r.below(8) as usize).collect();
+                let g = r.f64() * 0.9;
+                (p, g)
+            },
+            |(p, g)| {
+                let s = s_homo(*g, p);
+                let pmax = *p.iter().max().unwrap() as f64;
+                if !(0.999_999..=pmax + 1e-9).contains(&s) {
+                    return Err(format!("S={s} out of [1, {pmax}]"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn norm_form_matches_direct_form() {
+        let p = [1usize, 2, 4, 1, 3];
+        let norm: f64 = p.iter().map(|&x| 1.0 / x as f64).sum();
+        assert!(
+            (s_homo(0.2, &p) - s_homo_from_norm(0.2, p.len(), norm)).abs() < 1e-12
+        );
+    }
+}

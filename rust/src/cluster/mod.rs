@@ -1,0 +1,325 @@
+//! Simulated device cluster — the testbed substitute (DESIGN.md
+//! §Substitutions).
+//!
+//! The paper ran on 4× NVIDIA A100-40GB PCIe. We model each accelerator as a
+//! resource ledger: memory capacity with explicit allocation/OOM semantics,
+//! a compute capacity used by the event simulator's roofline latency model,
+//! link bandwidth for replication/migration transfers, and busy-time
+//! accounting from which the monitor derives utilization — the same signals
+//! NVML gave the paper's monitor.
+
+use std::collections::BTreeMap;
+
+use crate::model::cost::MIB;
+
+pub const GIB: f64 = 1024.0 * MIB;
+pub const TFLOPS: f64 = 1e12;
+
+/// Static description of a device type.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceSpec {
+    pub name: String,
+    pub mem_bytes: f64,
+    /// Dense matmul throughput (FLOPs/s) at serving precision.
+    pub peak_flops: f64,
+    /// HBM bandwidth (bytes/s) — the decode-roofline denominator.
+    pub hbm_bw: f64,
+    /// Device-to-device link bandwidth (bytes/s) for module transfers.
+    pub link_bw: f64,
+    /// Achievable fraction of peak on serving GEMMs (MFU).
+    pub mfu: f64,
+}
+
+impl DeviceSpec {
+    /// NVIDIA A100-40GB PCIe, the paper's testbed device. `link_bw` is
+    /// calibrated so the Table 2 replication times reproduce (≈100 GB/s
+    /// effective pinned-P2P, see `ops::cost`); MFU 0.45 is a typical
+    /// serving-GEMM efficiency.
+    pub fn a100_40gb() -> DeviceSpec {
+        DeviceSpec {
+            name: "A100-40GB".into(),
+            mem_bytes: 40.0 * GIB,
+            peak_flops: 312.0 * TFLOPS,
+            hbm_bw: 1.555e12,
+            link_bw: 100.0e9,
+            mfu: 0.45,
+        }
+    }
+
+    /// Effective sustained GEMM throughput.
+    pub fn effective_flops(&self) -> f64 {
+        self.peak_flops * self.mfu
+    }
+}
+
+/// Why an allocation was refused.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum AllocError {
+    #[error("device {device} OOM: requested {requested_mib:.1} MiB, free {free_mib:.1} MiB")]
+    Oom { device: usize, requested_mib: f64, free_mib: f64 },
+    #[error("unknown allocation tag `{0}`")]
+    UnknownTag(String),
+}
+
+/// One device's ledger: tagged allocations + busy-time accounting.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub id: usize,
+    pub spec: DeviceSpec,
+    /// Tagged allocations (tag -> bytes), e.g. "inst0/layers.3.weights".
+    allocs: BTreeMap<String, f64>,
+    used: f64,
+    /// Total busy seconds (simulated) — utilization numerator.
+    busy_s: f64,
+    /// Monotone per-device OOM event counter (Fig. 11a).
+    pub oom_events: u64,
+}
+
+impl Device {
+    pub fn new(id: usize, spec: DeviceSpec) -> Device {
+        Device { id, spec, allocs: BTreeMap::new(), used: 0.0, busy_s: 0.0, oom_events: 0 }
+    }
+
+    pub fn used_bytes(&self) -> f64 {
+        self.used
+    }
+
+    pub fn free_bytes(&self) -> f64 {
+        (self.spec.mem_bytes - self.used).max(0.0)
+    }
+
+    pub fn mem_frac(&self) -> f64 {
+        self.used / self.spec.mem_bytes
+    }
+
+    /// §4.1 `GetEligibleNodes` filter signal: fraction of memory vacant.
+    pub fn vacancy_rate(&self) -> f64 {
+        1.0 - self.mem_frac()
+    }
+
+    /// Allocate `bytes` under `tag`, or record an OOM event and fail.
+    pub fn alloc(&mut self, tag: &str, bytes: f64) -> Result<(), AllocError> {
+        debug_assert!(bytes >= 0.0);
+        if bytes > self.free_bytes() {
+            self.oom_events += 1;
+            return Err(AllocError::Oom {
+                device: self.id,
+                requested_mib: bytes / MIB,
+                free_mib: self.free_bytes() / MIB,
+            });
+        }
+        *self.allocs.entry(tag.to_string()).or_insert(0.0) += bytes;
+        self.used += bytes;
+        Ok(())
+    }
+
+    /// Free the whole allocation under `tag`.
+    pub fn free(&mut self, tag: &str) -> Result<f64, AllocError> {
+        match self.allocs.remove(tag) {
+            Some(b) => {
+                self.used = (self.used - b).max(0.0);
+                Ok(b)
+            }
+            None => Err(AllocError::UnknownTag(tag.to_string())),
+        }
+    }
+
+    /// Shrink/grow an existing tag to an exact size (KV caches grow).
+    pub fn resize(&mut self, tag: &str, new_bytes: f64) -> Result<(), AllocError> {
+        let cur = self.allocs.get(tag).copied().unwrap_or(0.0);
+        if new_bytes > cur && new_bytes - cur > self.free_bytes() {
+            self.oom_events += 1;
+            return Err(AllocError::Oom {
+                device: self.id,
+                requested_mib: (new_bytes - cur) / MIB,
+                free_mib: self.free_bytes() / MIB,
+            });
+        }
+        self.used += new_bytes - cur;
+        if new_bytes == 0.0 {
+            self.allocs.remove(tag);
+        } else {
+            self.allocs.insert(tag.to_string(), new_bytes);
+        }
+        Ok(())
+    }
+
+    pub fn alloc_bytes(&self, tag: &str) -> f64 {
+        self.allocs.get(tag).copied().unwrap_or(0.0)
+    }
+
+    pub fn allocations(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.allocs.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    /// Record simulated busy time (the simulator calls this per event).
+    pub fn add_busy(&mut self, seconds: f64) {
+        self.busy_s += seconds;
+    }
+
+    pub fn busy_seconds(&self) -> f64 {
+        self.busy_s
+    }
+
+    /// Compute utilization over a window of `wall_s` simulated seconds.
+    pub fn utilization(&self, wall_s: f64) -> f64 {
+        if wall_s <= 0.0 {
+            0.0
+        } else {
+            (self.busy_s / wall_s).min(1.0)
+        }
+    }
+}
+
+/// The cluster: a set of devices plus the interconnect description.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub devices: Vec<Device>,
+}
+
+impl Cluster {
+    pub fn homogeneous(n: usize, spec: DeviceSpec) -> Cluster {
+        Cluster { devices: (0..n).map(|i| Device::new(i, spec.clone())).collect() }
+    }
+
+    /// The paper's testbed: 4× A100-40GB.
+    pub fn paper_testbed() -> Cluster {
+        Cluster::homogeneous(4, DeviceSpec::a100_40gb())
+    }
+
+    pub fn n(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn device(&self, id: usize) -> &Device {
+        &self.devices[id]
+    }
+
+    pub fn device_mut(&mut self, id: usize) -> &mut Device {
+        &mut self.devices[id]
+    }
+
+    /// Link bandwidth between two devices (min of endpoints' links).
+    pub fn link_bw(&self, a: usize, b: usize) -> f64 {
+        self.devices[a].spec.link_bw.min(self.devices[b].spec.link_bw)
+    }
+
+    /// Devices sorted by descending free memory (placement preference).
+    pub fn by_free_memory(&self) -> Vec<usize> {
+        let mut ids: Vec<usize> = (0..self.n()).collect();
+        ids.sort_by(|&a, &b| {
+            self.devices[b]
+                .free_bytes()
+                .partial_cmp(&self.devices[a].free_bytes())
+                .unwrap()
+        });
+        ids
+    }
+
+    /// §4.1 `GetEligibleNodes`: devices whose vacancy rate ≥ threshold.
+    pub fn eligible_nodes(&self, min_vacancy: f64) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..self.n())
+            .filter(|&i| self.devices[i].vacancy_rate() >= min_vacancy)
+            .collect();
+        // Most-vacant first, so replicas land where the most room is.
+        v.sort_by(|&a, &b| {
+            self.devices[b]
+                .vacancy_rate()
+                .partial_cmp(&self.devices[a].vacancy_rate())
+                .unwrap()
+        });
+        v
+    }
+
+    pub fn total_used_bytes(&self) -> f64 {
+        self.devices.iter().map(|d| d.used_bytes()).sum()
+    }
+
+    pub fn total_oom_events(&self) -> u64 {
+        self.devices.iter().map(|d| d.oom_events).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_spec_sane() {
+        let s = DeviceSpec::a100_40gb();
+        assert_eq!(s.mem_bytes, 40.0 * GIB);
+        assert!(s.effective_flops() < s.peak_flops);
+    }
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut d = Device::new(0, DeviceSpec::a100_40gb());
+        d.alloc("w", 10.0 * GIB).unwrap();
+        assert_eq!(d.used_bytes(), 10.0 * GIB);
+        assert_eq!(d.free("w").unwrap(), 10.0 * GIB);
+        assert_eq!(d.used_bytes(), 0.0);
+        assert!(d.free("w").is_err());
+    }
+
+    #[test]
+    fn oom_counted_and_rejected() {
+        let mut d = Device::new(0, DeviceSpec::a100_40gb());
+        d.alloc("a", 39.0 * GIB).unwrap();
+        let e = d.alloc("b", 2.0 * GIB);
+        assert!(matches!(e, Err(AllocError::Oom { .. })));
+        assert_eq!(d.oom_events, 1);
+        // ledger unchanged on failure
+        assert_eq!(d.used_bytes(), 39.0 * GIB);
+    }
+
+    #[test]
+    fn resize_grows_and_shrinks() {
+        let mut d = Device::new(0, DeviceSpec::a100_40gb());
+        d.alloc("kv", 1.0 * GIB).unwrap();
+        d.resize("kv", 3.0 * GIB).unwrap();
+        assert_eq!(d.used_bytes(), 3.0 * GIB);
+        d.resize("kv", 0.5 * GIB).unwrap();
+        assert_eq!(d.used_bytes(), 0.5 * GIB);
+        d.resize("kv", 0.0).unwrap();
+        assert_eq!(d.alloc_bytes("kv"), 0.0);
+    }
+
+    #[test]
+    fn resize_respects_capacity() {
+        let mut d = Device::new(0, DeviceSpec::a100_40gb());
+        d.alloc("kv", 1.0 * GIB).unwrap();
+        assert!(d.resize("kv", 45.0 * GIB).is_err());
+        assert_eq!(d.oom_events, 1);
+        assert_eq!(d.alloc_bytes("kv"), 1.0 * GIB);
+    }
+
+    #[test]
+    fn utilization_from_busy_time() {
+        let mut d = Device::new(0, DeviceSpec::a100_40gb());
+        d.add_busy(2.5);
+        assert!((d.utilization(10.0) - 0.25).abs() < 1e-12);
+        assert_eq!(d.utilization(0.0), 0.0);
+        d.add_busy(100.0);
+        assert_eq!(d.utilization(10.0), 1.0); // clamped
+    }
+
+    #[test]
+    fn eligible_nodes_sorted_by_vacancy() {
+        let mut c = Cluster::paper_testbed();
+        c.device_mut(0).alloc("x", 30.0 * GIB).unwrap();
+        c.device_mut(1).alloc("x", 10.0 * GIB).unwrap();
+        let elig = c.eligible_nodes(0.5);
+        assert!(!elig.contains(&0)); // only 25% vacant
+        assert_eq!(elig[0], 2.min(3)); // fully-free devices first
+        assert!(elig.contains(&1));
+        assert_eq!(*elig.last().unwrap(), 1);
+    }
+
+    #[test]
+    fn by_free_memory_order() {
+        let mut c = Cluster::homogeneous(3, DeviceSpec::a100_40gb());
+        c.device_mut(1).alloc("x", 5.0 * GIB).unwrap();
+        c.device_mut(2).alloc("x", 20.0 * GIB).unwrap();
+        assert_eq!(c.by_free_memory(), vec![0, 1, 2]);
+    }
+}

@@ -1,0 +1,187 @@
+//! Run configuration: CLI/JSON-file experiment descriptions.
+//!
+//! `cocoserve serve|sim ...` accepts either flags or `--config file.json`;
+//! both construct a [`RunConfig`]. Kept deliberately small — library users
+//! compose the typed configs (`SimConfig`, `ServeConfig`, policies)
+//! directly; this is the launcher's surface.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Which serving policy to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    Hft,
+    VllmLike,
+    CoCoServe,
+    /// CoCoServe with auto-scaling disabled (ablation).
+    CoCoNoScale,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> Result<Policy> {
+        match s.to_ascii_lowercase().as_str() {
+            "hft" => Ok(Policy::Hft),
+            "vllm" | "vllm-like" => Ok(Policy::VllmLike),
+            "coco" | "cocoserve" => Ok(Policy::CoCoServe),
+            "coco-noscale" => Ok(Policy::CoCoNoScale),
+            other => Err(anyhow!("unknown policy `{other}` (hft|vllm|coco|coco-noscale)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Hft => "hft",
+            Policy::VllmLike => "vllm-like",
+            Policy::CoCoServe => "cocoserve",
+            Policy::CoCoNoScale => "coco-noscale",
+        }
+    }
+
+    pub fn sim_policy(&self, max_batch: usize) -> crate::sim::SimPolicy {
+        match self {
+            Policy::Hft => crate::baselines::hft(max_batch),
+            Policy::VllmLike => crate::baselines::vllm_like(max_batch),
+            Policy::CoCoServe => crate::baselines::cocoserve(max_batch),
+            Policy::CoCoNoScale => crate::baselines::cocoserve_no_autoscale(max_batch),
+        }
+    }
+}
+
+/// A launcher run description.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// "serve" (real tiny model) or "sim" (paper-scale simulator).
+    pub mode: String,
+    pub policy: Policy,
+    /// Simulated model config ("llama2-13b" / "llama2-70b") or the real
+    /// config to serve ("tiny-llama").
+    pub model: String,
+    pub rps: f64,
+    pub duration_s: f64,
+    pub max_batch: usize,
+    pub instances: usize,
+    pub devices: usize,
+    pub seed: u64,
+    pub artifacts_dir: Option<String>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            mode: "sim".into(),
+            policy: Policy::CoCoServe,
+            model: "llama2-13b".into(),
+            rps: 10.0,
+            duration_s: 30.0,
+            max_batch: 16,
+            instances: 1,
+            devices: 4,
+            seed: 42,
+            artifacts_dir: None,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn from_json(j: &Json) -> Result<RunConfig> {
+        let mut c = RunConfig::default();
+        let obj = j.as_obj().context("config must be an object")?;
+        for (k, v) in obj {
+            match k.as_str() {
+                "mode" => c.mode = v.as_str().context("mode")?.to_string(),
+                "policy" => c.policy = Policy::parse(v.as_str().context("policy")?)?,
+                "model" => c.model = v.as_str().context("model")?.to_string(),
+                "rps" => c.rps = v.as_f64().context("rps")?,
+                "duration_s" => c.duration_s = v.as_f64().context("duration_s")?,
+                "max_batch" => c.max_batch = v.as_usize().context("max_batch")?,
+                "instances" => c.instances = v.as_usize().context("instances")?,
+                "devices" => c.devices = v.as_usize().context("devices")?,
+                "seed" => c.seed = v.as_u64().context("seed")?,
+                "artifacts_dir" => {
+                    c.artifacts_dir = Some(v.as_str().context("artifacts_dir")?.to_string())
+                }
+                other => return Err(anyhow!("unknown config key `{other}`")),
+            }
+        }
+        Ok(c)
+    }
+
+    pub fn load(path: &str) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("config json: {e}"))?;
+        RunConfig::from_json(&j)
+    }
+
+    /// Apply a `--key value` CLI override.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "mode" => self.mode = value.to_string(),
+            "policy" => self.policy = Policy::parse(value)?,
+            "model" => self.model = value.to_string(),
+            "rps" => self.rps = value.parse().context("rps")?,
+            "duration" | "duration_s" => self.duration_s = value.parse().context("duration")?,
+            "max-batch" | "max_batch" => self.max_batch = value.parse().context("max_batch")?,
+            "instances" => self.instances = value.parse().context("instances")?,
+            "devices" => self.devices = value.parse().context("devices")?,
+            "seed" => self.seed = value.parse().context("seed")?,
+            "artifacts-dir" => self.artifacts_dir = Some(value.to_string()),
+            other => return Err(anyhow!("unknown flag --{other}")),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = RunConfig::default();
+        assert_eq!(c.policy, Policy::CoCoServe);
+        assert_eq!(c.devices, 4);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let j = Json::parse(
+            r#"{"mode":"sim","policy":"hft","model":"llama2-70b",
+                "rps":25,"duration_s":10,"max_batch":8,"instances":2,
+                "devices":4,"seed":7}"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.policy, Policy::Hft);
+        assert_eq!(c.model, "llama2-70b");
+        assert_eq!(c.rps, 25.0);
+        assert_eq!(c.instances, 2);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let j = Json::parse(r#"{"nope": 1}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut c = RunConfig::default();
+        c.set("policy", "vllm").unwrap();
+        c.set("rps", "33.5").unwrap();
+        c.set("max-batch", "4").unwrap();
+        assert_eq!(c.policy, Policy::VllmLike);
+        assert_eq!(c.rps, 33.5);
+        assert_eq!(c.max_batch, 4);
+        assert!(c.set("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn policy_parse_aliases() {
+        assert_eq!(Policy::parse("COCO").unwrap(), Policy::CoCoServe);
+        assert_eq!(Policy::parse("vllm-like").unwrap(), Policy::VllmLike);
+        assert!(Policy::parse("megatron").is_err());
+    }
+}

@@ -1,0 +1,184 @@
+//! The CoCoServe coordinator — the leader that ties the stack together.
+//!
+//! Real path ([`serve_trace`]): drives the [`TinyEngine`] with the
+//! [`Scheduler`]'s continuous-batching decisions against a wall-clock
+//! arrival process, recording completions in the [`Monitor`]. This is the
+//! end-to-end driver `examples/quickstart.rs` runs — Python is never
+//! involved.
+//!
+//! Paper-scale path: [`crate::sim::Simulation`] (same scheduler/autoscaler
+//! code over the cost-model substrate).
+//!
+//! [`TinyEngine`]: crate::engine::TinyEngine
+//! [`Scheduler`]: crate::scheduler::Scheduler
+//! [`Monitor`]: crate::monitor::Monitor
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::engine::{SeqState, TinyEngine};
+use crate::monitor::{Completion, Monitor};
+use crate::scheduler::{Scheduler, SchedulerConfig, Step};
+use crate::workload::{synth_prompt_tokens, Trace};
+
+/// Serving configuration for the real path.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    pub scheduler: SchedulerConfig,
+    /// End-to-end latency SLO (seconds).
+    pub slo_latency_s: f64,
+    /// If true, wait for wall-clock arrival times (live serving); if
+    /// false, arrivals are admitted as fast as the engine drains them
+    /// (max-throughput replay).
+    pub realtime: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            scheduler: SchedulerConfig::continuous(8),
+            slo_latency_s: 2.0,
+            realtime: true,
+        }
+    }
+}
+
+/// Outcome of a serve run.
+pub struct ServeReport {
+    pub monitor: Monitor,
+    pub duration_s: f64,
+    /// PJRT executions performed (perf accounting).
+    pub executions: u64,
+    /// Total tokens generated.
+    pub generated_tokens: usize,
+    /// Completed request count.
+    pub completed: usize,
+}
+
+impl ServeReport {
+    pub fn tokens_per_s(&self) -> f64 {
+        self.generated_tokens as f64 / self.duration_s.max(1e-9)
+    }
+}
+
+/// Serve a trace end-to-end on the real engine.
+///
+/// Requests arrive per the trace's arrival times (wall-clock when
+/// `cfg.realtime`); prompts are deterministic synthetic token ids; each
+/// request generates its trace-specified number of tokens.
+pub fn serve_trace(engine: &TinyEngine, trace: &Trace, cfg: ServeConfig) -> Result<ServeReport> {
+    let mut sched = Scheduler::new(cfg.scheduler);
+    let mut monitor = Monitor::new(cfg.slo_latency_s);
+    let mut seqs: BTreeMap<u64, SeqState> = BTreeMap::new();
+    let mut meta: BTreeMap<u64, (f64, usize, usize)> = BTreeMap::new();
+    let mut next_arrival = 0usize;
+    let mut generated = 0usize;
+    let start = Instant::now();
+
+    let max_new = engine.max_seq.saturating_sub(1);
+
+    loop {
+        let now = start.elapsed().as_secs_f64();
+
+        // admit arrivals whose time has come (or all, in replay mode)
+        while next_arrival < trace.requests.len()
+            && (!cfg.realtime || trace.requests[next_arrival].arrival_s <= now)
+        {
+            let r = &trace.requests[next_arrival];
+            let prompt = synth_prompt_tokens(
+                r.id,
+                r.prompt_tokens.min(engine.max_seq / 2),
+                engine.cfg.vocab_size,
+            );
+            let output = r.output_tokens.min(max_new);
+            meta.insert(r.id, (r.arrival_s, prompt.len(), output));
+            seqs.insert(r.id, engine.new_sequence(r.id, &prompt));
+            sched.submit(crate::workload::Request {
+                id: r.id,
+                arrival_s: r.arrival_s,
+                prompt_tokens: prompt.len(),
+                output_tokens: output,
+            });
+            next_arrival += 1;
+        }
+
+        if sched.is_idle() && next_arrival >= trace.requests.len() {
+            break;
+        }
+
+        match sched.next_step(now) {
+            Step::Prefill { request_ids } => {
+                let mut batch: Vec<&mut SeqState> = Vec::with_capacity(request_ids.len());
+                // split_off-style double borrow dance: collect raw ptrs via
+                // sequential remove+insert is costly; use unsafe-free
+                // approach: take them out of the map, run, put back.
+                let mut taken: Vec<SeqState> = request_ids
+                    .iter()
+                    .map(|id| seqs.remove(id).expect("sequence state"))
+                    .collect();
+                batch.extend(taken.iter_mut());
+                let toks = engine.prefill(&mut batch)?;
+                generated += toks.len();
+                for s in taken {
+                    seqs.insert(s.id, s);
+                }
+                sched.on_prefilled(&request_ids);
+            }
+            Step::Decode { request_ids } => {
+                let mut taken: Vec<SeqState> = request_ids
+                    .iter()
+                    .map(|id| seqs.remove(id).expect("sequence state"))
+                    .collect();
+                let mut batch: Vec<&mut SeqState> = taken.iter_mut().collect();
+                let toks = engine.decode(&mut batch)?;
+                generated += toks.len();
+                for s in taken {
+                    seqs.insert(s.id, s);
+                }
+                sched.on_decoded(&request_ids);
+            }
+            Step::Idle => {
+                if cfg.realtime && next_arrival < trace.requests.len() {
+                    let wait = trace.requests[next_arrival].arrival_s - now;
+                    if wait > 0.0 {
+                        std::thread::sleep(std::time::Duration::from_secs_f64(
+                            wait.min(0.05),
+                        ));
+                    }
+                }
+            }
+        }
+
+        // record completions (sequences the scheduler dropped)
+        let now = start.elapsed().as_secs_f64();
+        let done: Vec<u64> = seqs
+            .keys()
+            .copied()
+            .filter(|id| {
+                let (_, _, out) = meta[id];
+                seqs[id].tokens.len() >= meta[id].1 + out
+            })
+            .collect();
+        for id in done {
+            let (arrival, prompt, out) = meta[&id];
+            seqs.remove(&id);
+            monitor.record(Completion {
+                request_id: id,
+                arrival_s: arrival,
+                finish_s: now,
+                prompt_tokens: prompt,
+                output_tokens: out,
+            });
+        }
+    }
+
+    Ok(ServeReport {
+        duration_s: start.elapsed().as_secs_f64(),
+        executions: engine.pjrt.executions(),
+        generated_tokens: generated,
+        completed: monitor.completions().len(),
+        monitor,
+    })
+}

@@ -1,0 +1,455 @@
+//! The real-path serving engine: tiny model, real tensors, Python-free.
+//!
+//! Drives the per-module PJRT executables ([`runtime`]) through the full
+//! prefill + decode pipeline with host-owned KV caches — the end-to-end
+//! proof that the three layers compose (DESIGN.md §E2E). The engine:
+//!
+//! * pads request batches to the manifest's shape buckets,
+//! * owns per-sequence KV caches (the migratable module — host buffers
+//!   moved between per-device stores by the coordinator),
+//! * can execute a decoder layer **fused** or **split** into its
+//!   attention/FFN sub-modules ([`LayerExec`]) — the execution-path
+//!   equivalent of §3.3 module migration, asserted token-identical,
+//! * can run prefill **replicated**: the batch split across replica shares
+//!   (Fig. 4) and re-gathered, asserted token-identical.
+//!
+//! [`runtime`]: crate::runtime
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::model::ModelConfig;
+use crate::runtime::{Manifest, PjrtEngine, WeightStore};
+use crate::scheduler::split_batch;
+
+/// How a decoder layer executes (semantics must be identical).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LayerExec {
+    /// One fused `layer_*` artifact per layer.
+    #[default]
+    Fused,
+    /// `attn_*` then `ffn_*` artifacts — the migrated-module path.
+    Split,
+}
+
+/// One sequence being served.
+#[derive(Debug, Clone)]
+pub struct SeqState {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// Tokens currently in the KV cache.
+    pub kv_len: usize,
+    /// Per-layer K cache, host-resident: [n_heads * max_seq * head_dim].
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl SeqState {
+    /// KV bytes currently live (coordinator memory accounting).
+    pub fn kv_bytes(&self, cfg: &ModelConfig) -> usize {
+        2 * self.k.len() * self.kv_len * cfg.d_model * 4
+    }
+}
+
+/// The engine over one model config's artifacts.
+pub struct TinyEngine {
+    pub pjrt: PjrtEngine,
+    pub weights: WeightStore,
+    pub cfg: ModelConfig,
+    pub max_seq: usize,
+    pub exec: LayerExec,
+    name: String,
+    /// Weight literals cached per tensor name (perf pass #1: building a
+    /// Literal from host data on *every* execute dominated the decode hot
+    /// path — weights are immutable, upload once). See EXPERIMENTS.md §Perf.
+    lit_cache: RefCell<HashMap<String, xla::Literal>>,
+    /// Scratch buffer for batch-KV assembly (perf pass #2: avoid a fresh
+    /// zeroed allocation per layer per decode step).
+    kv_scratch: RefCell<Vec<f32>>,
+}
+
+impl TinyEngine {
+    pub fn open(artifacts_dir: &std::path::Path, config: &str) -> Result<TinyEngine> {
+        let pjrt = PjrtEngine::open(artifacts_dir)?;
+        let weights = WeightStore::load(artifacts_dir, pjrt.manifest(), config)?;
+        let cfg = pjrt
+            .manifest()
+            .configs
+            .get(config)
+            .ok_or_else(|| anyhow!("unknown config {config}"))?
+            .clone();
+        let max_seq = pjrt.manifest().max_seq_len;
+        Ok(TinyEngine {
+            pjrt,
+            weights,
+            cfg,
+            max_seq,
+            exec: LayerExec::Fused,
+            name: config.to_string(),
+            lit_cache: RefCell::new(HashMap::new()),
+            kv_scratch: RefCell::new(Vec::new()),
+        })
+    }
+
+    fn manifest(&self) -> &Manifest {
+        self.pjrt.manifest()
+    }
+
+    pub fn new_sequence(&self, id: u64, prompt: &[i32]) -> SeqState {
+        let per_layer = self.cfg.n_heads * self.max_seq * self.cfg.head_dim();
+        SeqState {
+            id,
+            tokens: prompt.to_vec(),
+            kv_len: 0,
+            k: vec![vec![0.0; per_layer]; self.cfg.n_layers],
+            v: vec![vec![0.0; per_layer]; self.cfg.n_layers],
+        }
+    }
+
+    // ---- literal builders ---------------------------------------------------
+
+    /// Cached literal for a named weight tensor (uploaded once).
+    fn cached_lit(&self, key: &str) -> Result<xla::Literal> {
+        if let Some(l) = self.lit_cache.borrow().get(key) {
+            return Ok(l.clone());
+        }
+        let t = self.weights.get(key)?;
+        let lit = self.pjrt.lit_f32(&t.data, &t.shape)?;
+        self.lit_cache.borrow_mut().insert(key.to_string(), lit.clone());
+        Ok(lit)
+    }
+
+    fn weight_lits(&self, layer: usize, names: &[&str]) -> Result<Vec<xla::Literal>> {
+        names
+            .iter()
+            .map(|n| self.cached_lit(&format!("layer{layer}.{n}")))
+            .collect()
+    }
+
+    /// Batch KV-cache literal [B, h, S, hd] for `layer` over `seqs`
+    /// (padded rows zero).
+    fn kv_literal(&self, seqs: &[&SeqState], b: usize, layer: usize, k: bool) -> Result<xla::Literal> {
+        let per = self.cfg.n_heads * self.max_seq * self.cfg.head_dim();
+        let mut buf = self.kv_scratch.borrow_mut();
+        buf.clear();
+        buf.resize(b * per, 0.0);
+        for (i, s) in seqs.iter().enumerate() {
+            let src = if k { &s.k[layer] } else { &s.v[layer] };
+            buf[i * per..(i + 1) * per].copy_from_slice(src);
+        }
+        self.pjrt.lit_f32(
+            &buf,
+            &[b, self.cfg.n_heads, self.max_seq, self.cfg.head_dim()],
+        )
+    }
+
+    // ---- prefill --------------------------------------------------------------
+
+    /// Prefill a batch of sequences, appending each sequence's first
+    /// generated token. Batch is padded to (batch bucket, seq bucket).
+    pub fn prefill(&self, seqs: &mut [&mut SeqState]) -> Result<Vec<i32>> {
+        anyhow::ensure!(!seqs.is_empty());
+        let n = seqs.len();
+        let max_len = seqs.iter().map(|s| s.tokens.len()).max().unwrap();
+        let b = self
+            .manifest()
+            .batch_bucket(n)
+            .ok_or_else(|| anyhow!("batch {n} exceeds buckets"))?;
+        let s_bucket = self
+            .manifest()
+            .seq_bucket(max_len)
+            .ok_or_else(|| anyhow!("prompt {max_len} exceeds buckets"))?;
+
+        // tokens + positions, padded
+        let mut toks = vec![0i32; b * s_bucket];
+        let mut pos = vec![0i32; b * s_bucket];
+        for (i, seq) in seqs.iter().enumerate() {
+            for (j, &t) in seq.tokens.iter().enumerate() {
+                toks[i * s_bucket + j] = t;
+            }
+            for j in 0..s_bucket {
+                pos[i * s_bucket + j] = j as i32;
+            }
+        }
+        for i in n..b {
+            for j in 0..s_bucket {
+                pos[i * s_bucket + j] = j as i32;
+            }
+        }
+        let mut hidden = {
+            let name = format!("{}__embed__b{b}_s{s_bucket}", self.name);
+            let out = self.pjrt.execute(
+                &name,
+                &[
+                    self.pjrt.lit_i32(&toks, &[b, s_bucket])?,
+                    self.cached_lit("emb")?,
+                ],
+            )?;
+            out.into_iter().next().unwrap()
+        };
+        let pos_lit = self.pjrt.lit_i32(&pos, &[b, s_bucket])?;
+
+        for layer in 0..self.cfg.n_layers {
+            let (h2, k, v) = self.prefill_layer(layer, hidden, &pos_lit, b, s_bucket)?;
+            hidden = h2;
+            // scatter K/V into host caches (each sequence its true length)
+            let kv: Vec<f32> = k.to_vec()?;
+            let vv: Vec<f32> = v.to_vec()?;
+            let hd = self.cfg.head_dim();
+            let h = self.cfg.n_heads;
+            for (i, seq) in seqs.iter_mut().enumerate() {
+                let len = seq.tokens.len();
+                for head in 0..h {
+                    for t in 0..len {
+                        let src = ((i * h + head) * s_bucket + t) * hd;
+                        let dst = (head * self.max_seq + t) * hd;
+                        seq.k[layer][dst..dst + hd]
+                            .copy_from_slice(&kv[src..src + hd]);
+                        seq.v[layer][dst..dst + hd]
+                            .copy_from_slice(&vv[src..src + hd]);
+                    }
+                }
+                seq.kv_len = len;
+            }
+        }
+
+        // lm head over true last positions
+        let mut lens = vec![1i32; b];
+        for (i, seq) in seqs.iter().enumerate() {
+            lens[i] = seq.tokens.len() as i32;
+        }
+        let out = self.pjrt.execute(
+            &format!("{}__lm_head_prefill__b{b}_s{s_bucket}", self.name),
+            &[
+                hidden,
+                self.pjrt.lit_i32(&lens, &[b])?,
+                self.cached_lit("rms_f")?,
+                self.cached_lit("w_out")?,
+            ],
+        )?;
+        let next: Vec<i32> = out[0].to_vec()?;
+        let mut produced = Vec::with_capacity(n);
+        for (i, seq) in seqs.iter_mut().enumerate() {
+            seq.tokens.push(next[i]);
+            produced.push(next[i]);
+        }
+        Ok(produced)
+    }
+
+    /// One decoder layer of prefill — fused or split per `self.exec`.
+    fn prefill_layer(
+        &self,
+        layer: usize,
+        hidden: xla::Literal,
+        pos: &xla::Literal,
+        b: usize,
+        s: usize,
+    ) -> Result<(xla::Literal, xla::Literal, xla::Literal)> {
+        match self.exec {
+            LayerExec::Fused => {
+                let mut args = vec![hidden, pos.clone()];
+                args.extend(self.weight_lits(
+                    layer,
+                    &crate::runtime::weights::LAYER_WEIGHT_NAMES,
+                )?);
+                let mut out = self
+                    .pjrt
+                    .execute(&format!("{}__layer_prefill__b{b}_s{s}", self.name), &args)?;
+                anyhow::ensure!(out.len() == 3);
+                let v = out.pop().unwrap();
+                let k = out.pop().unwrap();
+                let h = out.pop().unwrap();
+                Ok((h, k, v))
+            }
+            LayerExec::Split => {
+                // attention block (migratable module #1)
+                let mut args = vec![hidden, pos.clone()];
+                args.extend(self.weight_lits(layer, &["rms1", "wq", "wk", "wv", "wo"])?);
+                let mut out = self
+                    .pjrt
+                    .execute(&format!("{}__attn_prefill__b{b}_s{s}", self.name), &args)?;
+                anyhow::ensure!(out.len() == 3);
+                let v = out.pop().unwrap();
+                let k = out.pop().unwrap();
+                let mid = out.pop().unwrap();
+                // FFN block (migratable module #2)
+                let mut args = vec![mid];
+                args.extend(self.weight_lits(
+                    layer,
+                    &["rms2", "w_gate", "w_up", "w_down"],
+                )?);
+                let out = self
+                    .pjrt
+                    .execute(&format!("{}__ffn_prefill__b{b}_s{s}", self.name), &args)?;
+                Ok((out.into_iter().next().unwrap(), k, v))
+            }
+        }
+    }
+
+    /// Prefill with the batch *split across `degree` replicas* (Fig. 4):
+    /// each share executes the same layer artifacts independently (on its
+    /// own replica in a real cluster); results are gathered in order.
+    /// Token-identical to `prefill` — the semantic-preservation contract.
+    pub fn prefill_replicated(
+        &self,
+        seqs: &mut [&mut SeqState],
+        degree: usize,
+    ) -> Result<Vec<i32>> {
+        anyhow::ensure!(degree >= 1);
+        let shares = split_batch(seqs.len(), degree);
+        let mut produced = Vec::with_capacity(seqs.len());
+        let mut off = 0;
+        let mut rest = seqs;
+        for share in shares {
+            if share == 0 {
+                continue;
+            }
+            let (head, tail) = rest.split_at_mut(share);
+            produced.extend(self.prefill(head)?);
+            rest = tail;
+            off += share;
+        }
+        let _ = off;
+        Ok(produced)
+    }
+
+    // ---- decode ----------------------------------------------------------------
+
+    /// One decode iteration over a batch; appends one token per sequence.
+    pub fn decode(&self, seqs: &mut [&mut SeqState]) -> Result<Vec<i32>> {
+        anyhow::ensure!(!seqs.is_empty());
+        let n = seqs.len();
+        let b = self
+            .manifest()
+            .batch_bucket(n)
+            .ok_or_else(|| anyhow!("batch {n} exceeds buckets"))?;
+        for s in seqs.iter() {
+            anyhow::ensure!(
+                s.kv_len < self.max_seq,
+                "sequence {} exceeds max_seq {}",
+                s.id,
+                self.max_seq
+            );
+        }
+
+        let mut toks = vec![0i32; b];
+        let mut lens = vec![0i32; b];
+        for (i, s) in seqs.iter().enumerate() {
+            toks[i] = *s.tokens.last().unwrap();
+            lens[i] = s.kv_len as i32;
+        }
+        let mut hidden = self
+            .pjrt
+            .execute(
+                &format!("{}__embed_decode__b{b}", self.name),
+                &[
+                    self.pjrt.lit_i32(&toks, &[b, 1])?,
+                    self.cached_lit("emb")?,
+                ],
+            )?
+            .into_iter()
+            .next()
+            .unwrap();
+        let lens_lit = self.pjrt.lit_i32(&lens, &[b])?;
+
+        for layer in 0..self.cfg.n_layers {
+            let (kc, vc) = {
+                let seq_refs: Vec<&SeqState> =
+                    seqs.iter().map(|s| &**s).collect();
+                (
+                    self.kv_literal(&seq_refs, b, layer, true)?,
+                    self.kv_literal(&seq_refs, b, layer, false)?,
+                )
+            };
+            let (h2, k_new, v_new) = match self.exec {
+                LayerExec::Fused => {
+                    let mut args = vec![hidden, kc, vc, lens_lit.clone()];
+                    args.extend(self.weight_lits(
+                        layer,
+                        &crate::runtime::weights::LAYER_WEIGHT_NAMES,
+                    )?);
+                    let mut out = self
+                        .pjrt
+                        .execute(&format!("{}__layer_decode__b{b}", self.name), &args)?;
+                    anyhow::ensure!(out.len() == 3);
+                    let v = out.pop().unwrap();
+                    let k = out.pop().unwrap();
+                    (out.pop().unwrap(), k, v)
+                }
+                LayerExec::Split => {
+                    let mut args = vec![hidden, kc, vc, lens_lit.clone()];
+                    args.extend(
+                        self.weight_lits(layer, &["rms1", "wq", "wk", "wv", "wo"])?,
+                    );
+                    let mut out = self
+                        .pjrt
+                        .execute(&format!("{}__attn_decode__b{b}", self.name), &args)?;
+                    let v = out.pop().unwrap();
+                    let k = out.pop().unwrap();
+                    let mid = out.pop().unwrap();
+                    let mut args = vec![mid];
+                    args.extend(self.weight_lits(
+                        layer,
+                        &["rms2", "w_gate", "w_up", "w_down"],
+                    )?);
+                    let out = self
+                        .pjrt
+                        .execute(&format!("{}__ffn_decode__b{b}", self.name), &args)?;
+                    (out.into_iter().next().unwrap(), k, v)
+                }
+            };
+            hidden = h2;
+            // write the new K/V row into host caches at position kv_len
+            let kn: Vec<f32> = k_new.to_vec()?;
+            let vn: Vec<f32> = v_new.to_vec()?;
+            let hd = self.cfg.head_dim();
+            let h = self.cfg.n_heads;
+            for (i, seq) in seqs.iter_mut().enumerate() {
+                let t = seq.kv_len;
+                for head in 0..h {
+                    let src = (i * h + head) * hd;
+                    let dst = (head * self.max_seq + t) * hd;
+                    seq.k[layer][dst..dst + hd].copy_from_slice(&kn[src..src + hd]);
+                    seq.v[layer][dst..dst + hd].copy_from_slice(&vn[src..src + hd]);
+                }
+            }
+        }
+
+        let out = self.pjrt.execute(
+            &format!("{}__lm_head_decode__b{b}", self.name),
+            &[
+                hidden,
+                self.cached_lit("rms_f")?,
+                self.cached_lit("w_out")?,
+            ],
+        )?;
+        let next: Vec<i32> = out[0].to_vec()?;
+        let mut produced = Vec::with_capacity(n);
+        for (i, seq) in seqs.iter_mut().enumerate() {
+            seq.kv_len += 1;
+            seq.tokens.push(next[i]);
+            produced.push(next[i]);
+        }
+        Ok(produced)
+    }
+
+    /// Greedy generation: prefill once, then decode `n_new − 1` iterations.
+    pub fn generate_greedy(&self, prompts: &[Vec<i32>], n_new: usize) -> Result<Vec<Vec<i32>>> {
+        let mut seqs: Vec<SeqState> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| self.new_sequence(i as u64, p))
+            .collect();
+        {
+            let mut refs: Vec<&mut SeqState> = seqs.iter_mut().collect();
+            self.prefill(&mut refs)?;
+        }
+        for _ in 1..n_new {
+            let mut refs: Vec<&mut SeqState> = seqs.iter_mut().collect();
+            self.decode(&mut refs)?;
+        }
+        Ok(seqs.into_iter().map(|s| s.tokens).collect())
+    }
+}

@@ -1,0 +1,371 @@
+//! KV-cache managers — paged (vLLM-style) and contiguous (HFT-style).
+//!
+//! The paper treats the KV cache as a first-class *module*: memory-intensive,
+//! compute-free, migratable independently of its layer (§3.3). This module
+//! provides the allocators whose fragmentation behaviour drives Fig. 9
+//! (memory utilization / waste) and the OOM dynamics of Fig. 11a:
+//!
+//! * [`PagedKvCache`] — block-granular allocation; waste is bounded by one
+//!   partial block per (sequence, layer).
+//! * [`ContiguousKvCache`] — reserves max-sequence-length up front per
+//!   sequence (what the paper attributes to HFT); waste = reserved − used.
+//!
+//! Both report identical accounting interfaces so the engine, simulator and
+//! Fig. 9 bench can swap them per baseline policy.
+
+use std::collections::BTreeMap;
+
+/// Accounting snapshot used by the monitor and Fig. 9.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct KvStats {
+    /// Bytes actually holding live K/V entries.
+    pub live_bytes: f64,
+    /// Bytes reserved from the device (>= live).
+    pub reserved_bytes: f64,
+    /// Sequences currently tracked.
+    pub sequences: usize,
+}
+
+impl KvStats {
+    /// Reserved-but-dead bytes — the paper's "wasted memory" (Fig. 9).
+    pub fn waste_bytes(&self) -> f64 {
+        (self.reserved_bytes - self.live_bytes).max(0.0)
+    }
+
+    /// Fragmentation ratio: reserved / live (1.0 = perfect).
+    pub fn fragmentation(&self) -> f64 {
+        if self.live_bytes == 0.0 {
+            if self.reserved_bytes == 0.0 { 1.0 } else { f64::INFINITY }
+        } else {
+            self.reserved_bytes / self.live_bytes
+        }
+    }
+}
+
+/// Common interface: token-granular per-sequence cache accounting.
+pub trait KvCache {
+    /// Register a new sequence with `prompt_tokens` already cached.
+    /// Returns Err(deficit_bytes) if the pool cannot hold it.
+    fn add_sequence(&mut self, seq: u64, prompt_tokens: usize) -> Result<(), f64>;
+
+    /// Append one decoded token to a sequence.
+    fn append_token(&mut self, seq: u64) -> Result<(), f64>;
+
+    /// Drop a finished sequence, releasing its reservation.
+    fn remove_sequence(&mut self, seq: u64);
+
+    fn stats(&self) -> KvStats;
+
+    fn tokens_of(&self, seq: u64) -> Option<usize>;
+}
+
+/// Paged allocator: fixed-size blocks of `block_tokens` tokens.
+#[derive(Debug, Clone)]
+pub struct PagedKvCache {
+    /// Bytes of K+V for ONE token across all layers of the instance.
+    bytes_per_token: f64,
+    block_tokens: usize,
+    /// Total pool capacity in blocks.
+    capacity_blocks: usize,
+    free_blocks: usize,
+    seqs: BTreeMap<u64, SeqAlloc>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct SeqAlloc {
+    tokens: usize,
+    blocks: usize,
+}
+
+impl PagedKvCache {
+    /// `pool_bytes` is the device memory granted to the cache pool.
+    pub fn new(pool_bytes: f64, bytes_per_token: f64, block_tokens: usize) -> Self {
+        assert!(block_tokens > 0 && bytes_per_token > 0.0);
+        let block_bytes = bytes_per_token * block_tokens as f64;
+        PagedKvCache {
+            bytes_per_token,
+            block_tokens,
+            capacity_blocks: (pool_bytes / block_bytes) as usize,
+            free_blocks: (pool_bytes / block_bytes) as usize,
+            seqs: BTreeMap::new(),
+        }
+    }
+
+    fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    pub fn block_bytes(&self) -> f64 {
+        self.bytes_per_token * self.block_tokens as f64
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free_blocks
+    }
+
+    /// Total pool capacity in blocks.
+    pub fn capacity_blocks(&self) -> usize {
+        self.capacity_blocks
+    }
+}
+
+impl KvCache for PagedKvCache {
+    fn add_sequence(&mut self, seq: u64, prompt_tokens: usize) -> Result<(), f64> {
+        assert!(!self.seqs.contains_key(&seq), "duplicate sequence {seq}");
+        let need = self.blocks_for(prompt_tokens.max(1));
+        if need > self.free_blocks {
+            return Err((need - self.free_blocks) as f64 * self.block_bytes());
+        }
+        self.free_blocks -= need;
+        self.seqs.insert(seq, SeqAlloc { tokens: prompt_tokens, blocks: need });
+        Ok(())
+    }
+
+    fn append_token(&mut self, seq: u64) -> Result<(), f64> {
+        let a = *self.seqs.get(&seq).expect("unknown sequence");
+        let need = self.blocks_for(a.tokens + 1);
+        if need > a.blocks {
+            if self.free_blocks == 0 {
+                return Err(self.block_bytes());
+            }
+            self.free_blocks -= 1;
+        }
+        let e = self.seqs.get_mut(&seq).unwrap();
+        e.tokens += 1;
+        e.blocks = need.max(a.blocks);
+        Ok(())
+    }
+
+    fn remove_sequence(&mut self, seq: u64) {
+        if let Some(a) = self.seqs.remove(&seq) {
+            self.free_blocks += a.blocks;
+        }
+    }
+
+    fn stats(&self) -> KvStats {
+        let live: usize = self.seqs.values().map(|a| a.tokens).sum();
+        let blocks: usize = self.seqs.values().map(|a| a.blocks).sum();
+        KvStats {
+            live_bytes: live as f64 * self.bytes_per_token,
+            reserved_bytes: blocks as f64 * self.block_bytes(),
+            sequences: self.seqs.len(),
+        }
+    }
+
+    fn tokens_of(&self, seq: u64) -> Option<usize> {
+        self.seqs.get(&seq).map(|a| a.tokens)
+    }
+}
+
+/// Contiguous allocator: reserves `max_seq_tokens` per sequence up front —
+/// the static allocation the paper attributes to HFT (§2.3, Fig. 9).
+#[derive(Debug, Clone)]
+pub struct ContiguousKvCache {
+    bytes_per_token: f64,
+    max_seq_tokens: usize,
+    pool_bytes: f64,
+    reserved: f64,
+    seqs: BTreeMap<u64, usize>,
+}
+
+impl ContiguousKvCache {
+    pub fn new(pool_bytes: f64, bytes_per_token: f64, max_seq_tokens: usize) -> Self {
+        ContiguousKvCache {
+            bytes_per_token,
+            max_seq_tokens,
+            pool_bytes,
+            reserved: 0.0,
+            seqs: BTreeMap::new(),
+        }
+    }
+
+    fn per_seq_bytes(&self) -> f64 {
+        self.bytes_per_token * self.max_seq_tokens as f64
+    }
+}
+
+impl KvCache for ContiguousKvCache {
+    fn add_sequence(&mut self, seq: u64, prompt_tokens: usize) -> Result<(), f64> {
+        assert!(!self.seqs.contains_key(&seq), "duplicate sequence {seq}");
+        assert!(prompt_tokens <= self.max_seq_tokens);
+        let need = self.per_seq_bytes();
+        if self.reserved + need > self.pool_bytes {
+            return Err(self.reserved + need - self.pool_bytes);
+        }
+        self.reserved += need;
+        self.seqs.insert(seq, prompt_tokens);
+        Ok(())
+    }
+
+    fn append_token(&mut self, seq: u64) -> Result<(), f64> {
+        let t = self.seqs.get_mut(&seq).expect("unknown sequence");
+        if *t >= self.max_seq_tokens {
+            return Err(self.bytes_per_token); // over pre-reserved length
+        }
+        *t += 1;
+        Ok(())
+    }
+
+    fn remove_sequence(&mut self, seq: u64) {
+        if self.seqs.remove(&seq).is_some() {
+            self.reserved -= self.per_seq_bytes();
+        }
+    }
+
+    fn stats(&self) -> KvStats {
+        let live: usize = self.seqs.values().sum();
+        KvStats {
+            live_bytes: live as f64 * self.bytes_per_token,
+            reserved_bytes: self.reserved,
+            sequences: self.seqs.len(),
+        }
+    }
+
+    fn tokens_of(&self, seq: u64) -> Option<usize> {
+        self.seqs.get(&seq).copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    const BPT: f64 = 1024.0; // bytes per token, test-sized
+
+    #[test]
+    fn paged_partial_block_waste_bounded() {
+        let mut c = PagedKvCache::new(1e6, BPT, 16);
+        c.add_sequence(1, 17).unwrap(); // 2 blocks, 15 tokens wasted
+        let s = c.stats();
+        assert_eq!(s.reserved_bytes, 2.0 * 16.0 * BPT);
+        assert_eq!(s.live_bytes, 17.0 * BPT);
+        assert!(s.waste_bytes() <= c.block_bytes());
+    }
+
+    #[test]
+    fn paged_append_crosses_block_boundary() {
+        let mut c = PagedKvCache::new(1e6, BPT, 4);
+        c.add_sequence(1, 4).unwrap(); // exactly 1 block
+        let before = c.free_blocks();
+        c.append_token(1).unwrap(); // needs block 2
+        assert_eq!(c.free_blocks(), before - 1);
+        c.append_token(1).unwrap(); // fits in block 2
+        assert_eq!(c.free_blocks(), before - 1);
+    }
+
+    #[test]
+    fn paged_oom_reports_deficit() {
+        let mut c = PagedKvCache::new(16.0 * BPT, BPT, 16); // 1 block total
+        c.add_sequence(1, 8).unwrap();
+        let e = c.add_sequence(2, 8).unwrap_err();
+        assert!(e > 0.0);
+    }
+
+    #[test]
+    fn paged_remove_releases_blocks() {
+        let mut c = PagedKvCache::new(1e6, BPT, 16);
+        let total = c.free_blocks();
+        c.add_sequence(1, 40).unwrap();
+        c.add_sequence(2, 10).unwrap();
+        c.remove_sequence(1);
+        c.remove_sequence(2);
+        assert_eq!(c.free_blocks(), total);
+        assert_eq!(c.stats().sequences, 0);
+    }
+
+    #[test]
+    fn contiguous_reserves_max_length() {
+        let mut c = ContiguousKvCache::new(1e7, BPT, 256);
+        c.add_sequence(1, 20).unwrap();
+        let s = c.stats();
+        assert_eq!(s.reserved_bytes, 256.0 * BPT);
+        assert_eq!(s.live_bytes, 20.0 * BPT);
+        // the Fig. 9 story: waste is huge relative to live for short seqs
+        assert!(s.waste_bytes() > 10.0 * s.live_bytes);
+    }
+
+    #[test]
+    fn contiguous_admits_fewer_sequences_than_paged() {
+        // Same pool: paged fits many short sequences, contiguous few —
+        // the mechanism behind HFT's early OOM (Fig. 11a).
+        let pool = 1024.0 * BPT;
+        let mut paged = PagedKvCache::new(pool, BPT, 16);
+        let mut cont = ContiguousKvCache::new(pool, BPT, 256);
+        let mut n_paged = 0;
+        let mut n_cont = 0;
+        for i in 0..100 {
+            if paged.add_sequence(i, 20).is_ok() {
+                n_paged += 1;
+            }
+            if cont.add_sequence(i, 20).is_ok() {
+                n_cont += 1;
+            }
+        }
+        assert!(n_paged > 3 * n_cont, "paged {n_paged} vs cont {n_cont}");
+    }
+
+    #[test]
+    fn fragmentation_ratios_ordered() {
+        let mut paged = PagedKvCache::new(1e7, BPT, 16);
+        let mut cont = ContiguousKvCache::new(1e7, BPT, 256);
+        for i in 0..8 {
+            paged.add_sequence(i, 30).unwrap();
+            cont.add_sequence(i, 30).unwrap();
+        }
+        assert!(paged.stats().fragmentation() < cont.stats().fragmentation());
+        assert!(paged.stats().fragmentation() >= 1.0);
+    }
+
+    /// Property: block accounting is conserved under random workloads.
+    #[test]
+    fn prop_paged_block_conservation() {
+        prop::check(
+            "paged-conservation",
+            |r: &mut Rng| {
+                let ops: Vec<(u8, u64, usize)> = (0..60)
+                    .map(|_| (r.below(3) as u8, r.below(6), 1 + r.below(40) as usize))
+                    .collect();
+                ops
+            },
+            |ops| {
+                let mut c = PagedKvCache::new(5e5, BPT, 16);
+                let cap = c.free_blocks();
+                let mut live: std::collections::BTreeSet<u64> = Default::default();
+                for &(op, seq, tok) in ops {
+                    match op {
+                        0 if !live.contains(&seq) => {
+                            if c.add_sequence(seq, tok).is_ok() {
+                                live.insert(seq);
+                            }
+                        }
+                        1 if live.contains(&seq) => {
+                            let _ = c.append_token(seq);
+                        }
+                        2 => {
+                            c.remove_sequence(seq);
+                            live.remove(&seq);
+                        }
+                        _ => {}
+                    }
+                    let used: usize = cap - c.free_blocks();
+                    let s = c.stats();
+                    let expect = (s.reserved_bytes / c.block_bytes()).round() as usize;
+                    if used != expect {
+                        return Err(format!("blocks {used} != reserved {expect}"));
+                    }
+                    if s.live_bytes > s.reserved_bytes + 1e-9 {
+                        return Err("live exceeds reserved".into());
+                    }
+                }
+                for s in live.iter() {
+                    c.remove_sequence(*s);
+                }
+                if c.free_blocks() != cap {
+                    return Err("leak after removing all".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,36 @@
+//! # CoCoServe — fine-grained LLM serving via dynamic module scaling
+//!
+//! Reproduction of "Unlock the Potential of Fine-grained LLM Serving via
+//! Dynamic Module Scaling" (CS.DC 2025). The library implements the paper's
+//! CoCoServe system as the L3 Rust coordinator of a three-layer
+//! Rust + JAX + Pallas stack (see DESIGN.md):
+//!
+//! * module-level **replication** and **migration** primitives ([`ops`]),
+//! * the modified-Amdahl **speedup model** and the scale-up / scale-down
+//!   **auto-scaling algorithms** ([`autoscale`]),
+//! * a continuous-batching **scheduler** with batch splitting across layer
+//!   replicas ([`scheduler`]),
+//! * a **PJRT runtime** that loads AOT-compiled HLO artifacts and serves a
+//!   real (tiny) model end-to-end with Python off the request path
+//!   ([`runtime`], [`engine`]),
+//! * a **discrete-event simulator** over A100-calibrated cost models that
+//!   regenerates the paper's 13B/70B-scale tables and figures ([`sim`]),
+//! * **HFT-like and vLLM-like baselines** over the same substrate
+//!   ([`baselines`]).
+
+pub mod autoscale;
+pub mod baselines;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod kvcache;
+pub mod model;
+pub mod monitor;
+pub mod ops;
+pub mod placement;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,209 @@
+//! `cocoserve` — the launcher CLI.
+//!
+//! ```text
+//! cocoserve sim   [--policy coco|vllm|hft] [--model llama2-13b|llama2-70b]
+//!                 [--rps N] [--duration S] [--instances N] [--devices N]
+//!                 [--max-batch N] [--seed N] [--config file.json]
+//! cocoserve serve [--rps N] [--duration S] [--max-batch N] [--seed N]
+//!                 [--artifacts-dir DIR]       # real tiny model on CPU PJRT
+//! cocoserve inspect [--artifacts-dir DIR]     # artifact/manifest summary
+//! ```
+
+use anyhow::{anyhow, Context, Result};
+
+use cocoserve::cluster::Cluster;
+use cocoserve::config::RunConfig;
+use cocoserve::coordinator::{serve_trace, ServeConfig};
+use cocoserve::engine::TinyEngine;
+use cocoserve::placement::Placement;
+use cocoserve::runtime::{default_artifacts_dir, Manifest};
+use cocoserve::scheduler::SchedulerConfig;
+use cocoserve::sim::{SimConfig, Simulation};
+use cocoserve::workload::{Arrival, LengthDist, Trace};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_args(args: &[String]) -> Result<RunConfig> {
+    let mut cfg = RunConfig::default();
+    let mut it = args.iter().peekable();
+    while let Some(a) = it.next() {
+        let key = a
+            .strip_prefix("--")
+            .ok_or_else(|| anyhow!("expected --flag, got `{a}`"))?;
+        if key == "config" {
+            let path = it.next().ok_or_else(|| anyhow!("--config needs a path"))?;
+            let base = RunConfig::load(path)?;
+            let mode = cfg.mode.clone();
+            cfg = base;
+            cfg.mode = mode;
+        } else {
+            let v = it
+                .next()
+                .ok_or_else(|| anyhow!("--{key} needs a value"))?;
+            cfg.set(key, v)?;
+        }
+    }
+    Ok(cfg)
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        eprintln!("usage: cocoserve <sim|serve|inspect> [flags]  (see --help)");
+        return Ok(());
+    };
+    match cmd.as_str() {
+        "sim" => {
+            let mut cfg = parse_args(&args[1..])?;
+            cfg.mode = "sim".into();
+            cmd_sim(&cfg)
+        }
+        "serve" => {
+            let mut cfg = parse_args(&args[1..])?;
+            cfg.mode = "serve".into();
+            cmd_serve(&cfg)
+        }
+        "inspect" => cmd_inspect(&parse_args(&args[1..])?),
+        "--help" | "-h" | "help" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command `{other}` (sim|serve|inspect)")),
+    }
+}
+
+const HELP: &str = "cocoserve — fine-grained LLM serving via dynamic module scaling
+
+commands:
+  sim      paper-scale discrete-event simulation (13B/70B over 4xA100 specs)
+  serve    serve the real tiny model end-to-end on CPU PJRT
+  inspect  summarize the AOT artifact directory
+
+common flags: --policy hft|vllm|coco|coco-noscale  --rps N  --duration S
+              --max-batch N  --instances N  --devices N  --seed N
+              --model llama2-13b|llama2-70b (sim)  --config file.json
+              --artifacts-dir DIR (serve/inspect)";
+
+fn cmd_sim(cfg: &RunConfig) -> Result<()> {
+    let sim_cfg = match cfg.model.as_str() {
+        "llama2-13b" => SimConfig::paper_13b(),
+        "llama2-70b" => SimConfig::paper_70b(),
+        other => return Err(anyhow!("sim supports llama2-13b|llama2-70b, got {other}")),
+    };
+    let cluster = Cluster::homogeneous(
+        cfg.devices,
+        cocoserve::cluster::DeviceSpec::a100_40gb(),
+    );
+    let n_layers = sim_cfg.model.n_layers;
+    let mut placements = Vec::new();
+    for i in 0..cfg.instances {
+        // instance i homed on device i (mod devices); 70B spans two devices
+        let home = i % cfg.devices;
+        let placement = if sim_cfg.model.d_model >= 8192 {
+            let second = (home + 1) % cfg.devices;
+            Placement::contiguous_shards(n_layers, &[home, second])
+        } else {
+            Placement::single_device(n_layers, home)
+        };
+        placements.push((placement, cfg.policy.sim_policy(cfg.max_batch)));
+    }
+    let sim = Simulation::new(sim_cfg, cluster, placements);
+    let trace = Trace::generate(
+        Arrival::Poisson { rps: cfg.rps },
+        LengthDist::alpaca(),
+        cfg.duration_s,
+        cfg.seed,
+    );
+    println!(
+        "sim: {} · {} · {} instance(s) on {} device(s) · {:.0} rps · {:.0}s · {} requests",
+        cfg.policy.name(), cfg.model, cfg.instances, cfg.devices, cfg.rps,
+        cfg.duration_s, trace.len()
+    );
+    let report = sim.run(&trace, cfg.duration_s);
+    let mut lat = report.merged_latency();
+    println!("completed        : {}", report.total_completed());
+    println!("throughput       : {:.1} tok/s", report.total_throughput_tps());
+    println!("latency mean/p95 : {:.2}s / {:.2}s", lat.mean(), lat.p95());
+    println!("SLO attainment   : {:.1}%", report.slo_attainment() * 100.0);
+    println!("OOM events       : {}", report.total_oom_events);
+    println!(
+        "scaling          : {} up / {} down ({:.2}s op time)",
+        report.scale_ups, report.scale_downs, report.scale_op_time_s
+    );
+    for (d, util, mem) in &report.device_util {
+        println!("device {d}         : util {:.0}% · mem {:.0}%", util * 100.0, mem * 100.0);
+    }
+    Ok(())
+}
+
+fn cmd_serve(cfg: &RunConfig) -> Result<()> {
+    let dir = cfg
+        .artifacts_dir
+        .as_ref()
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir);
+    anyhow::ensure!(
+        dir.join("manifest.json").exists(),
+        "no artifacts at {} — run `make artifacts`",
+        dir.display()
+    );
+    let model = if cfg.model.starts_with("llama2") { "tiny-llama" } else { &cfg.model };
+    let engine = TinyEngine::open(&dir, model).context("opening engine")?;
+    let trace = Trace::generate(
+        Arrival::Poisson { rps: cfg.rps },
+        LengthDist::tiny(),
+        cfg.duration_s,
+        cfg.seed,
+    );
+    println!(
+        "serve: {} ({} layers, d={}) · {:.0} rps · {:.0}s · {} requests · CPU PJRT",
+        model, engine.cfg.n_layers, engine.cfg.d_model, cfg.rps, cfg.duration_s,
+        trace.len()
+    );
+    let serve_cfg = ServeConfig {
+        scheduler: SchedulerConfig::continuous(cfg.max_batch),
+        slo_latency_s: 2.0,
+        realtime: true,
+    };
+    let report = serve_trace(&engine, &trace, serve_cfg)?;
+    let mut lat = report.monitor.latency_summary();
+    println!("completed        : {}", report.completed);
+    println!("generated tokens : {}", report.generated_tokens);
+    println!("throughput       : {:.1} tok/s", report.tokens_per_s());
+    println!("latency mean/p95 : {:.0}ms / {:.0}ms", lat.mean() * 1e3, lat.p95() * 1e3);
+    println!("SLO attainment   : {:.1}%", report.monitor.slo_attainment() * 100.0);
+    println!("PJRT executions  : {}", report.executions);
+    Ok(())
+}
+
+fn cmd_inspect(cfg: &RunConfig) -> Result<()> {
+    let dir = cfg
+        .artifacts_dir
+        .as_ref()
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir);
+    let m = Manifest::load(&dir.join("manifest.json"))?;
+    println!("artifacts root : {}", dir.display());
+    println!("batch buckets  : {:?}", m.batch_buckets);
+    println!("seq buckets    : {:?} (max_seq {})", m.seq_buckets, m.max_seq_len);
+    for (name, c) in &m.configs {
+        println!(
+            "config {name}: d={} heads={} layers={} ff={} vocab={}",
+            c.d_model, c.n_heads, c.n_layers, c.d_ff, c.vocab_size
+        );
+    }
+    let mut by_module: std::collections::BTreeMap<&str, usize> = Default::default();
+    for a in m.artifacts() {
+        *by_module.entry(a.module.as_str()).or_insert(0) += 1;
+    }
+    println!("artifacts      :");
+    for (module, n) in by_module {
+        println!("  {module:<14} ×{n}");
+    }
+    Ok(())
+}

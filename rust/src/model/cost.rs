@@ -1,0 +1,304 @@
+//! The paper's §3.3 resource arithmetic — memory and FLOP costs per module.
+//!
+//! Reproduces **Table 1** exactly for LLaMA-13B under the paper's standard
+//! inference conditions (batch 1, seq 256, bf16):
+//!
+//! | module                  | memory | computation  |
+//! |-------------------------|--------|--------------|
+//! | self_attn.q/k/v/o_proj  |  50 MB | 13.42 GFLOPs |
+//! | self_attn               | 200 MB | 55.02 GFLOPs |
+//! | ffn.gate/up/down_proj   | 135 MB | 36.24 GFLOPs |
+//! | decoder layer           | 605 MB | 127.5 GFLOPs |
+//!
+//! Accounting notes (kept faithful to the paper, quirks included):
+//! * "MB" is MiB (2^20) — 5120·5120·2 B = 50 MiB matches the paper's 50 MB.
+//! * The decoder-layer FLOPs count attention + **two** FFN GEMMs
+//!   (4·13.42 + 1.34 + 2·36.24 = 127.5) even though SwiGLU has three
+//!   projections; the memory side counts all three (200 + 3·135 = 605).
+//!   We follow the paper so Table 1 regenerates bit-for-bit; the simulator
+//!   uses this same accounting for internal consistency.
+
+use super::{ModelConfig, ModuleKind};
+
+pub const MIB: f64 = 1024.0 * 1024.0;
+pub const GFLOP: f64 = 1e9;
+
+/// Inference-shape parameters the costs depend on.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Shape {
+    pub batch: usize,
+    pub seq: usize,
+    /// Bytes per parameter/activation element (2 = bf16, 4 = f32).
+    pub dtype_bytes: usize,
+}
+
+impl Shape {
+    /// The paper's "standard inference conditions" (§3.3).
+    pub fn paper_standard() -> Shape {
+        Shape { batch: 1, seq: 256, dtype_bytes: 2 }
+    }
+}
+
+/// Memory + compute cost of one module instance.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Cost {
+    pub weight_bytes: f64,
+    pub flops: f64,
+}
+
+impl Cost {
+    pub fn mem_mib(&self) -> f64 {
+        self.weight_bytes / MIB
+    }
+
+    pub fn gflops(&self) -> f64 {
+        self.flops / GFLOP
+    }
+
+    /// Compute density (GFLOPs per MiB) — the §3.3 classification signal.
+    pub fn density(&self) -> f64 {
+        if self.weight_bytes == 0.0 {
+            f64::INFINITY
+        } else {
+            self.gflops() / self.mem_mib()
+        }
+    }
+}
+
+/// Cost model for a given architecture: the single place all byte/FLOP
+/// arithmetic lives (simulator, autoscaler and benches all call this).
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub cfg: ModelConfig,
+}
+
+impl CostModel {
+    pub fn new(cfg: ModelConfig) -> CostModel {
+        CostModel { cfg }
+    }
+
+    /// Weight bytes of one module (KV cache handled by [`kv_cache_bytes`]).
+    pub fn weight_bytes(&self, kind: ModuleKind, sh: Shape) -> f64 {
+        let d = self.cfg.d_model as f64;
+        let ff = self.cfg.d_ff as f64;
+        let v = self.cfg.vocab_size as f64;
+        let b = sh.dtype_bytes as f64;
+        match kind {
+            ModuleKind::QProj
+            | ModuleKind::KProj
+            | ModuleKind::VProj
+            | ModuleKind::OProj => d * d * b,
+            ModuleKind::Attn => 4.0 * d * d * b,
+            ModuleKind::GateProj | ModuleKind::UpProj | ModuleKind::DownProj => {
+                d * ff * b
+            }
+            ModuleKind::Ffn => 3.0 * d * ff * b,
+            // attn + ffn + two RMSNorm vectors (the norms round to ~0 MB
+            // at paper scale, matching Table 1's 605).
+            ModuleKind::DecoderLayer => {
+                (4.0 * d * d + 3.0 * d * ff + 2.0 * d) * b
+            }
+            ModuleKind::Embed => v * d * b,
+            ModuleKind::LmHead => (v * d + d) * b,
+            ModuleKind::KvCache => 0.0,
+        }
+    }
+
+    /// Prefill-phase FLOPs of one module over `sh.batch`×`sh.seq` tokens,
+    /// using the paper's accounting (see module docs).
+    pub fn flops(&self, kind: ModuleKind, sh: Shape) -> f64 {
+        let d = self.cfg.d_model as f64;
+        let ff = self.cfg.d_ff as f64;
+        let v = self.cfg.vocab_size as f64;
+        let toks = (sh.batch * sh.seq) as f64;
+        let seq = sh.seq as f64;
+        let batch = sh.batch as f64;
+        // Attention-score term: QK^T + PV = 2 · (2·seq²·d) FLOPs per
+        // sequence = 1.34 GFLOPs at paper-standard shape (§3.3).
+        let scores = 4.0 * seq * seq * d * batch;
+        match kind {
+            ModuleKind::QProj
+            | ModuleKind::KProj
+            | ModuleKind::VProj
+            | ModuleKind::OProj => 2.0 * toks * d * d,
+            ModuleKind::Attn => 4.0 * 2.0 * toks * d * d + scores,
+            ModuleKind::GateProj | ModuleKind::UpProj | ModuleKind::DownProj => {
+                2.0 * toks * d * ff
+            }
+            // Paper counts TWO ffn GEMMs in the layer total (127.5).
+            ModuleKind::Ffn => 2.0 * (2.0 * toks * d * ff),
+            ModuleKind::DecoderLayer => {
+                self.flops(ModuleKind::Attn, sh) + self.flops(ModuleKind::Ffn, sh)
+            }
+            ModuleKind::Embed => 0.0, // gather, no MACs
+            ModuleKind::LmHead => 2.0 * batch * d * v,
+            ModuleKind::KvCache => 0.0,
+        }
+    }
+
+    pub fn cost(&self, kind: ModuleKind, sh: Shape) -> Cost {
+        Cost { weight_bytes: self.weight_bytes(kind, sh), flops: self.flops(kind, sh) }
+    }
+
+    /// Decode-phase FLOPs for ONE new token per sequence, with `ctx` tokens
+    /// already cached (attention reads the whole cache).
+    pub fn decode_flops(&self, kind: ModuleKind, batch: usize, ctx: usize) -> f64 {
+        let d = self.cfg.d_model as f64;
+        let ff = self.cfg.d_ff as f64;
+        let v = self.cfg.vocab_size as f64;
+        let b = batch as f64;
+        let ctx = ctx as f64 + 1.0;
+        match kind {
+            ModuleKind::QProj
+            | ModuleKind::KProj
+            | ModuleKind::VProj
+            | ModuleKind::OProj => 2.0 * b * d * d,
+            ModuleKind::Attn => 4.0 * 2.0 * b * d * d + 2.0 * b * ctx * d * 2.0,
+            ModuleKind::GateProj | ModuleKind::UpProj | ModuleKind::DownProj => {
+                2.0 * b * d * ff
+            }
+            ModuleKind::Ffn => 2.0 * (2.0 * b * d * ff),
+            ModuleKind::DecoderLayer => {
+                self.decode_flops(ModuleKind::Attn, batch, ctx as usize - 1)
+                    + self.decode_flops(ModuleKind::Ffn, batch, 0)
+            }
+            ModuleKind::Embed => 0.0,
+            ModuleKind::LmHead => 2.0 * b * d * v,
+            ModuleKind::KvCache => 0.0,
+        }
+    }
+
+    /// KV-cache bytes for one layer: 2 (K+V) · seq · d · dtype per sequence.
+    pub fn kv_cache_bytes(&self, batch: usize, seq: usize, dtype_bytes: usize) -> f64 {
+        2.0 * (batch * seq * self.cfg.d_model * dtype_bytes) as f64
+    }
+
+    /// Bytes *read* per decode step for one layer (weights + KV) — the
+    /// memory-bound side of the decode roofline.
+    pub fn decode_bytes_read(&self, batch: usize, ctx: usize, dtype_bytes: usize) -> f64 {
+        self.weight_bytes(
+            ModuleKind::DecoderLayer,
+            Shape { batch, seq: 1, dtype_bytes },
+        ) + self.kv_cache_bytes(batch, ctx, dtype_bytes)
+    }
+
+    /// Whole-model weight bytes (layers + embed + head).
+    pub fn model_bytes(&self, dtype_bytes: usize) -> f64 {
+        let sh = Shape { batch: 1, seq: 1, dtype_bytes };
+        self.cfg.n_layers as f64 * self.weight_bytes(ModuleKind::DecoderLayer, sh)
+            + self.weight_bytes(ModuleKind::Embed, sh)
+            + self.weight_bytes(ModuleKind::LmHead, sh)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m13b() -> CostModel {
+        CostModel::new(ModelConfig::llama2_13b())
+    }
+
+    /// Table 1 row 1: one attention projection = 50 MB, 13.42 GFLOPs.
+    #[test]
+    fn table1_projection() {
+        let c = m13b().cost(ModuleKind::QProj, Shape::paper_standard());
+        assert!((c.mem_mib() - 50.0).abs() < 0.01, "{}", c.mem_mib());
+        assert!((c.gflops() - 13.42).abs() < 0.01, "{}", c.gflops());
+    }
+
+    /// Table 1 row 2: self_attn = 200 MB, 55.02 GFLOPs
+    /// (4·13.42 GEMM + 1.34 attention scores).
+    #[test]
+    fn table1_self_attn() {
+        let c = m13b().cost(ModuleKind::Attn, Shape::paper_standard());
+        assert!((c.mem_mib() - 200.0).abs() < 0.01, "{}", c.mem_mib());
+        assert!((c.gflops() - 55.02).abs() < 0.05, "{}", c.gflops());
+    }
+
+    /// Table 1 row 3: one FFN projection = 135 MB, 36.24 GFLOPs.
+    #[test]
+    fn table1_ffn_projection() {
+        let c = m13b().cost(ModuleKind::GateProj, Shape::paper_standard());
+        assert!((c.mem_mib() - 135.0).abs() < 0.01, "{}", c.mem_mib());
+        assert!((c.gflops() - 36.24).abs() < 0.05, "{}", c.gflops());
+    }
+
+    /// Table 1 row 4: decoder layer = 605 MB, 127.5 GFLOPs.
+    #[test]
+    fn table1_decoder_layer() {
+        let c = m13b().cost(ModuleKind::DecoderLayer, Shape::paper_standard());
+        assert!((c.mem_mib() - 605.0).abs() < 0.05, "{}", c.mem_mib());
+        assert!((c.gflops() - 127.5).abs() < 0.2, "{}", c.gflops());
+    }
+
+    /// §3.3 compute densities: ~0.275 GFLOPs/MB (attn), ~0.268 (FFN).
+    #[test]
+    fn densities_match_paper() {
+        let m = m13b();
+        let sh = Shape::paper_standard();
+        let attn = m.cost(ModuleKind::Attn, sh).density();
+        assert!((attn - 0.275).abs() < 0.003, "{attn}");
+        let ffn_paperwise = 2.0 * 36.24 / (3.0 * 135.0); // paper's 0.268 uses 2-GEMM flops over 3-proj mem
+        let ffn = m.cost(ModuleKind::Ffn, sh).density();
+        assert!((ffn - ffn_paperwise).abs() < 0.003, "{ffn}");
+    }
+
+    /// §3.3: KV cache fluctuates "hundreds of MB to a few GB".
+    #[test]
+    fn kv_cache_magnitude() {
+        let m = m13b();
+        // one layer, batch 15, seq 256 (the paper's Fig. 4 batch): per-layer
+        // KV; whole model = ×40 layers lands in the hundreds-of-MB..GB band.
+        let one = m.kv_cache_bytes(15, 256, 2);
+        let model_total = one * 40.0;
+        assert!(model_total > 300.0 * MIB && model_total < 4096.0 * MIB,
+                "{}", model_total / MIB);
+    }
+
+    #[test]
+    fn decoder_layer_sums_parts() {
+        let m = m13b();
+        let sh = Shape::paper_standard();
+        let attn = m.weight_bytes(ModuleKind::Attn, sh);
+        let ffn = m.weight_bytes(ModuleKind::Ffn, sh);
+        let layer = m.weight_bytes(ModuleKind::DecoderLayer, sh);
+        assert!(layer >= attn + ffn);
+        assert!(layer - (attn + ffn) < 0.1 * MIB); // + norms only
+    }
+
+    #[test]
+    fn flops_scale_linearly_in_tokens() {
+        let m = m13b();
+        let s1 = Shape { batch: 1, seq: 128, dtype_bytes: 2 };
+        let s2 = Shape { batch: 2, seq: 128, dtype_bytes: 2 };
+        let f1 = m.flops(ModuleKind::QProj, s1);
+        let f2 = m.flops(ModuleKind::QProj, s2);
+        assert!((f2 / f1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decode_flops_much_smaller_than_prefill() {
+        let m = m13b();
+        let pre = m.flops(ModuleKind::DecoderLayer, Shape::paper_standard());
+        let dec = m.decode_flops(ModuleKind::DecoderLayer, 1, 256);
+        assert!(dec < pre / 100.0, "decode {dec} vs prefill {pre}");
+    }
+
+    #[test]
+    fn model_bytes_13b_about_24gib() {
+        // 40 layers · 605 MiB + embed/head ≈ 24.2 GiB in bf16.
+        let gib = m13b().model_bytes(2) / (1024.0 * MIB);
+        assert!((23.0..26.0).contains(&gib), "{gib}");
+    }
+
+    #[test]
+    fn decode_is_memory_bound_on_a100_arithmetic() {
+        // FLOPs/byte of a decode step at batch 1 must sit far below the
+        // A100's ~200 FLOP/byte ridge point — the §2.1 claim.
+        let m = m13b();
+        let f = m.decode_flops(ModuleKind::DecoderLayer, 1, 256);
+        let by = m.decode_bytes_read(1, 256, 2);
+        assert!(f / by < 8.0, "intensity {}", f / by);
+    }
+}

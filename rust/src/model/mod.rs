@@ -1,0 +1,216 @@
+//! Model architecture description and the module taxonomy.
+//!
+//! In the paper (§1 footnote 1) "modules" are: decoder layers, attention,
+//! feed-forward network, projections, and the KV cache. This module defines
+//! that taxonomy ([`ModuleKind`]) plus the architectural constants
+//! ([`ModelConfig`]) shared with the Python compile path via
+//! `artifacts/manifest.json`; [`cost`] implements the paper's §3.3 resource
+//! arithmetic (Table 1).
+
+pub mod cost;
+
+use crate::util::json::Json;
+
+/// Architectural description of a LLaMA-style decoder-only model.
+///
+/// Mirrors `python/compile/configs.py::ModelConfig`; parsed from the
+/// manifest so there is exactly one source of truth.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        debug_assert_eq!(self.d_model % self.n_heads, 0);
+        self.d_model / self.n_heads
+    }
+
+    pub fn from_json(j: &Json) -> ModelConfig {
+        ModelConfig {
+            name: j.req("name").as_str().expect("name").to_string(),
+            vocab_size: j.req("vocab_size").as_usize().expect("vocab_size"),
+            d_model: j.req("d_model").as_usize().expect("d_model"),
+            n_heads: j.req("n_heads").as_usize().expect("n_heads"),
+            n_layers: j.req("n_layers").as_usize().expect("n_layers"),
+            d_ff: j.req("d_ff").as_usize().expect("d_ff"),
+        }
+    }
+
+    /// The paper's LLaMA2-13B reference (d=5120, ff=13824, 40 layers).
+    pub fn llama2_13b() -> ModelConfig {
+        ModelConfig {
+            name: "llama2-13b".into(),
+            vocab_size: 32000,
+            d_model: 5120,
+            n_heads: 40,
+            n_layers: 40,
+            d_ff: 13824,
+        }
+    }
+
+    /// The paper's LLaMA2-70B reference (d=8192, ff=28672, 80 layers).
+    pub fn llama2_70b() -> ModelConfig {
+        ModelConfig {
+            name: "llama2-70b".into(),
+            vocab_size: 32000,
+            d_model: 8192,
+            n_heads: 64,
+            n_layers: 80,
+            d_ff: 28672,
+        }
+    }
+
+    /// The tiny config actually lowered + executed on CPU PJRT.
+    pub fn tiny() -> ModelConfig {
+        ModelConfig {
+            name: "tiny-llama".into(),
+            vocab_size: 512,
+            d_model: 64,
+            n_heads: 4,
+            n_layers: 4,
+            d_ff: 172,
+        }
+    }
+}
+
+/// The paper's module taxonomy — the units of replication and migration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ModuleKind {
+    /// Token embedding table.
+    Embed,
+    /// A whole transformer decoder layer (the primary scaling unit).
+    DecoderLayer,
+    /// The attention block of a layer (QKVO + core).
+    Attn,
+    /// A single attention projection (the finest weight-bearing unit).
+    QProj,
+    KProj,
+    VProj,
+    OProj,
+    /// The SwiGLU feed-forward block.
+    Ffn,
+    /// One FFN projection.
+    GateProj,
+    UpProj,
+    DownProj,
+    /// The per-layer KV cache (memory-intensive, compute-free).
+    KvCache,
+    /// Final norm + output projection.
+    LmHead,
+}
+
+impl ModuleKind {
+    /// All weight-bearing module kinds (everything except the KV cache).
+    pub const WEIGHT_BEARING: [ModuleKind; 12] = [
+        ModuleKind::Embed,
+        ModuleKind::DecoderLayer,
+        ModuleKind::Attn,
+        ModuleKind::QProj,
+        ModuleKind::KProj,
+        ModuleKind::VProj,
+        ModuleKind::OProj,
+        ModuleKind::Ffn,
+        ModuleKind::GateProj,
+        ModuleKind::UpProj,
+        ModuleKind::DownProj,
+        ModuleKind::LmHead,
+    ];
+
+    /// Is this module memory-intensive rather than compute-intensive?
+    /// (§3.3: the KV cache needs "significant memory but minimal
+    /// computation"; everything else has high GFLOPs/MB density.)
+    pub fn memory_intensive(self) -> bool {
+        matches!(self, ModuleKind::KvCache)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ModuleKind::Embed => "embed",
+            ModuleKind::DecoderLayer => "decoder_layer",
+            ModuleKind::Attn => "self_attn",
+            ModuleKind::QProj => "self_attn.q_proj",
+            ModuleKind::KProj => "self_attn.k_proj",
+            ModuleKind::VProj => "self_attn.v_proj",
+            ModuleKind::OProj => "self_attn.o_proj",
+            ModuleKind::Ffn => "ffn",
+            ModuleKind::GateProj => "ffn.gate_proj",
+            ModuleKind::UpProj => "ffn.up_proj",
+            ModuleKind::DownProj => "ffn.down_proj",
+            ModuleKind::KvCache => "kv_cache",
+            ModuleKind::LmHead => "lm_head",
+        }
+    }
+}
+
+/// Identifies a concrete module instance inside a model: `(kind, layer)`.
+/// Layer is `None` for embed / lm_head.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ModuleId {
+    pub kind: ModuleKind,
+    pub layer: Option<usize>,
+}
+
+impl ModuleId {
+    pub fn layer(kind: ModuleKind, layer: usize) -> ModuleId {
+        ModuleId { kind, layer: Some(layer) }
+    }
+
+    pub fn global(kind: ModuleKind) -> ModuleId {
+        ModuleId { kind, layer: None }
+    }
+}
+
+impl std::fmt::Display for ModuleId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.layer {
+            Some(l) => write!(f, "layers.{l}.{}", self.kind.name()),
+            None => write!(f, "{}", self.kind.name()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_dim_divides() {
+        assert_eq!(ModelConfig::llama2_13b().head_dim(), 128);
+        assert_eq!(ModelConfig::tiny().head_dim(), 16);
+    }
+
+    #[test]
+    fn from_json_roundtrip() {
+        let j = Json::parse(
+            r#"{"name":"x","vocab_size":10,"d_model":8,"n_heads":2,
+                "n_layers":3,"d_ff":16,"head_dim":4}"#,
+        )
+        .unwrap();
+        let c = ModelConfig::from_json(&j);
+        assert_eq!(c.d_model, 8);
+        assert_eq!(c.head_dim(), 4);
+    }
+
+    #[test]
+    fn module_display() {
+        assert_eq!(
+            ModuleId::layer(ModuleKind::Attn, 3).to_string(),
+            "layers.3.self_attn"
+        );
+        assert_eq!(ModuleId::global(ModuleKind::LmHead).to_string(), "lm_head");
+    }
+
+    #[test]
+    fn only_kv_cache_is_memory_intensive() {
+        for k in ModuleKind::WEIGHT_BEARING {
+            assert!(!k.memory_intensive(), "{k:?}");
+        }
+        assert!(ModuleKind::KvCache.memory_intensive());
+    }
+}

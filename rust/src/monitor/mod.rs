@@ -1,0 +1,249 @@
+//! Metrics Monitor (§5): utilization + performance telemetry feeding the
+//! controller.
+//!
+//! The paper's monitor reads NVML for utilization and the backend engine
+//! (or injected timers) for performance. Here the same signals come from
+//! the cluster ledgers (memory), busy-time accounting (compute) and the
+//! engine/simulator completion stream (latency, tokens/s, SLO, OOM) — the
+//! closed loop of Fig. 7.
+
+use crate::cluster::Cluster;
+use crate::util::stats::Summary;
+
+use crate::autoscale::ControllerInputs;
+
+/// One completed request's measurements.
+#[derive(Debug, Clone, Copy)]
+pub struct Completion {
+    pub request_id: u64,
+    pub arrival_s: f64,
+    pub finish_s: f64,
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+}
+
+impl Completion {
+    pub fn e2e_latency(&self) -> f64 {
+        self.finish_s - self.arrival_s
+    }
+}
+
+/// Rolling serving metrics over an experiment (or control window).
+#[derive(Debug, Clone)]
+pub struct Monitor {
+    /// SLO: max acceptable end-to-end latency (seconds).
+    pub slo_latency_s: f64,
+    completions: Vec<Completion>,
+    window_start: usize,
+    oom_since_tick: u64,
+    total_oom: u64,
+    oom_affected: u64,
+}
+
+impl Monitor {
+    pub fn new(slo_latency_s: f64) -> Monitor {
+        Monitor {
+            slo_latency_s,
+            completions: vec![],
+            window_start: 0,
+            oom_since_tick: 0,
+            total_oom: 0,
+            oom_affected: 0,
+        }
+    }
+
+    pub fn record(&mut self, c: Completion) {
+        self.completions.push(c);
+    }
+
+    pub fn record_oom(&mut self) {
+        self.oom_since_tick += 1;
+        self.total_oom += 1;
+    }
+
+    pub fn completions(&self) -> &[Completion] {
+        &self.completions
+    }
+
+    pub fn total_oom(&self) -> u64 {
+        self.total_oom
+    }
+
+    /// Requests caught in an OOM failure (Fig. 11a's numerator).
+    pub fn record_oom_affected(&mut self, n: u64) {
+        self.oom_affected += n;
+    }
+
+    pub fn oom_affected(&self) -> u64 {
+        self.oom_affected
+    }
+
+    // ---- whole-experiment summaries (benches, EXPERIMENTS.md) -------------
+
+    pub fn latency_summary(&self) -> Summary {
+        let mut s = Summary::new();
+        for c in &self.completions {
+            s.add(c.e2e_latency());
+        }
+        s
+    }
+
+    /// Output-token throughput over the experiment window (tokens/s).
+    pub fn throughput_tokens_per_s(&self, duration_s: f64) -> f64 {
+        if duration_s <= 0.0 {
+            return 0.0;
+        }
+        let toks: usize = self.completions.iter().map(|c| c.output_tokens).sum();
+        toks as f64 / duration_s
+    }
+
+    /// Completed requests per second.
+    pub fn throughput_rps(&self, duration_s: f64) -> f64 {
+        if duration_s <= 0.0 {
+            return 0.0;
+        }
+        self.completions.len() as f64 / duration_s
+    }
+
+    /// Fraction of completions within the SLO (Fig. 11b's y-axis).
+    pub fn slo_attainment(&self) -> f64 {
+        if self.completions.is_empty() {
+            return 1.0;
+        }
+        let ok = self
+            .completions
+            .iter()
+            .filter(|c| c.e2e_latency() <= self.slo_latency_s)
+            .count();
+        ok as f64 / self.completions.len() as f64
+    }
+
+    pub fn slo_violation_rate(&self) -> f64 {
+        1.0 - self.slo_attainment()
+    }
+
+    // ---- controller feed (windowed) ---------------------------------------
+
+    /// Violation rate over completions since the last `controller_view`.
+    fn window_violation_rate(&self) -> f64 {
+        let w = &self.completions[self.window_start..];
+        if w.is_empty() {
+            return 0.0;
+        }
+        let bad = w
+            .iter()
+            .filter(|c| c.e2e_latency() > self.slo_latency_s)
+            .count();
+        bad as f64 / w.len() as f64
+    }
+
+    /// Build the controller's tick input from cluster state + the window
+    /// since the previous tick, then advance the window.
+    pub fn controller_view(&mut self, cluster: &Cluster, wall_s: f64) -> ControllerInputs {
+        let n = cluster.n().max(1);
+        let vacancy =
+            cluster.devices.iter().map(|d| d.vacancy_rate()).sum::<f64>() / n as f64;
+        // hottest = max by (compute util, mem frac)
+        let hottest = (0..cluster.n())
+            .max_by(|&a, &b| {
+                let ka = cluster.device(a).utilization(wall_s)
+                    + cluster.device(a).mem_frac();
+                let kb = cluster.device(b).utilization(wall_s)
+                    + cluster.device(b).mem_frac();
+                ka.partial_cmp(&kb).unwrap()
+            })
+            .unwrap_or(0);
+        let view = ControllerInputs {
+            vacancy_rate: vacancy,
+            slo_violation_rate: self.window_violation_rate(),
+            oom_events: self.oom_since_tick,
+            hottest_device: hottest,
+            hottest_compute_util: cluster.device(hottest).utilization(wall_s),
+            hottest_mem_frac: cluster.device(hottest).mem_frac(),
+        };
+        self.window_start = self.completions.len();
+        self.oom_since_tick = 0;
+        view
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, GIB};
+
+    fn done(id: u64, at: f64, lat: f64, toks: usize) -> Completion {
+        Completion {
+            request_id: id,
+            arrival_s: at,
+            finish_s: at + lat,
+            prompt_tokens: 10,
+            output_tokens: toks,
+        }
+    }
+
+    #[test]
+    fn throughput_and_latency() {
+        let mut m = Monitor::new(10.0);
+        m.record(done(0, 0.0, 2.0, 50));
+        m.record(done(1, 1.0, 4.0, 150));
+        assert_eq!(m.throughput_tokens_per_s(10.0), 20.0);
+        assert_eq!(m.throughput_rps(10.0), 0.2);
+        assert_eq!(m.latency_summary().mean(), 3.0);
+    }
+
+    #[test]
+    fn slo_attainment_counts_violations() {
+        let mut m = Monitor::new(5.0);
+        m.record(done(0, 0.0, 2.0, 10));
+        m.record(done(1, 0.0, 9.0, 10));
+        m.record(done(2, 0.0, 4.0, 10));
+        m.record(done(3, 0.0, 6.0, 10));
+        assert_eq!(m.slo_attainment(), 0.5);
+        assert_eq!(m.slo_violation_rate(), 0.5);
+    }
+
+    #[test]
+    fn empty_monitor_attains_trivially() {
+        let m = Monitor::new(5.0);
+        assert_eq!(m.slo_attainment(), 1.0);
+        assert_eq!(m.throughput_tokens_per_s(10.0), 0.0);
+    }
+
+    #[test]
+    fn controller_view_windows_reset() {
+        let mut m = Monitor::new(5.0);
+        let cl = Cluster::paper_testbed();
+        m.record(done(0, 0.0, 9.0, 10)); // violation in window 1
+        let v1 = m.controller_view(&cl, 10.0);
+        assert_eq!(v1.slo_violation_rate, 1.0);
+        // window 2 is clean
+        m.record(done(1, 0.0, 1.0, 10));
+        let v2 = m.controller_view(&cl, 10.0);
+        assert_eq!(v2.slo_violation_rate, 0.0);
+    }
+
+    #[test]
+    fn oom_events_flow_once() {
+        let mut m = Monitor::new(5.0);
+        let cl = Cluster::paper_testbed();
+        m.record_oom();
+        m.record_oom();
+        assert_eq!(m.controller_view(&cl, 1.0).oom_events, 2);
+        assert_eq!(m.controller_view(&cl, 1.0).oom_events, 0);
+        assert_eq!(m.total_oom(), 2);
+    }
+
+    #[test]
+    fn hottest_device_by_load() {
+        let mut m = Monitor::new(5.0);
+        let mut cl = Cluster::paper_testbed();
+        cl.device_mut(2).alloc("x", 30.0 * GIB).unwrap();
+        cl.device_mut(2).add_busy(9.0);
+        let v = m.controller_view(&cl, 10.0);
+        assert_eq!(v.hottest_device, 2);
+        assert!(v.hottest_mem_frac > 0.7);
+        assert!(v.hottest_compute_util > 0.8);
+        assert!(v.vacancy_rate > 0.5); // other three devices empty
+    }
+}

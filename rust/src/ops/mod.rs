@@ -1,0 +1,428 @@
+//! Module-level operations: **replicate**, **migrate**, **evict** (§3.1).
+//!
+//! These are the paper's primitive operators. Each operation:
+//!
+//! 1. moves/duplicates the module's bytes between device ledgers (and, on
+//!    the real path, the engine moves the weight literals / KV buffers),
+//! 2. updates the [`Placement`],
+//! 3. returns an [`OpCost`] from the transfer model below.
+//!
+//! ### Cost model (reproduces Table 2)
+//!
+//! The paper measures replication of *n* decoder layers of LLaMA-13B at
+//! 0.2987 s (n=1) → 0.8938 s (n=40) with memory 1107 MB → 24819 MB, and
+//! migration ≈ 45 ms cheaper (no new dataflow hooks to install). We model
+//!
+//! ```text
+//! memory(n) = OVERHEAD + n · (layer_bytes + ACT_BUFFER)       (linear — exact)
+//! time(n)   = LAUNCH + n · layer_bytes / (link_bw · (1 − mem_frac_dst))
+//! ```
+//!
+//! The `(1 − mem_frac)` term models transfer slowdown as the target device
+//! fills (pinned-buffer contention) — it reproduces the paper's superlinear
+//! time growth at n→40 while staying principled (bytes / effective
+//! bandwidth). Post-scaling inter-replica communication setup is the
+//! paper's measured 39.1 ms constant.
+
+use crate::cluster::Cluster;
+use crate::model::cost::{CostModel, Shape, MIB};
+use crate::model::{ModuleId, ModuleKind};
+use crate::placement::Placement;
+
+/// Fixed launch/bookkeeping latency of a replication (hook installation,
+/// allocator setup). Calibrated to Table 2's n=1 row.
+pub const REPLICATION_LAUNCH_S: f64 = 0.292;
+/// Migration launches faster: the source's hooks are reused (§3.1).
+pub const MIGRATION_LAUNCH_S: f64 = 0.242;
+/// Fixed runtime overhead added once per operation batch (CUDA context,
+/// staging buffers) — Table 2's memory intercept.
+pub const OP_OVERHEAD_BYTES: f64 = 499.0 * MIB;
+/// Per-layer activation/workspace buffer beyond the weights (Table 2's
+/// 608 MiB/layer step vs the 605 MiB weight size).
+pub const ACT_BUFFER_BYTES: f64 = 3.0 * MIB;
+/// Post-scaling inter-replica communication setup (§6.5: 39.1 ms).
+pub const REPLICA_COMM_SETUP_S: f64 = 0.0391;
+
+/// Cost of one executed operation.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct OpCost {
+    pub time_s: f64,
+    pub bytes_moved: f64,
+    /// Memory newly resident on the destination device.
+    pub dst_bytes: f64,
+}
+
+impl OpCost {
+    fn merge(self, other: OpCost) -> OpCost {
+        OpCost {
+            time_s: self.time_s + other.time_s,
+            bytes_moved: self.bytes_moved + other.bytes_moved,
+            dst_bytes: self.dst_bytes + other.dst_bytes,
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum OpError {
+    #[error("destination OOM: {0}")]
+    DestinationOom(#[from] crate::cluster::AllocError),
+    #[error("layer {0} already resident on device {1}")]
+    AlreadyResident(usize, usize),
+    #[error("no replica of layer {0} on device {1}")]
+    NoSuchReplica(usize, usize),
+}
+
+/// Executes module operations against a cluster + placement, with costs
+/// from the instance's [`CostModel`].
+pub struct ModuleOps<'a> {
+    pub cost_model: &'a CostModel,
+    /// Precision of resident weights (2 = bf16 at paper scale, 4 = f32 tiny).
+    pub dtype_bytes: usize,
+    /// Tag prefix for ledger entries, e.g. "inst0".
+    pub tag_prefix: String,
+}
+
+impl<'a> ModuleOps<'a> {
+    pub fn new(cost_model: &'a CostModel, dtype_bytes: usize, tag_prefix: &str) -> Self {
+        ModuleOps { cost_model, dtype_bytes, tag_prefix: tag_prefix.into() }
+    }
+
+    fn shape(&self) -> Shape {
+        Shape { batch: 1, seq: 1, dtype_bytes: self.dtype_bytes }
+    }
+
+    /// Resident bytes of a module copy (weights + activation workspace).
+    pub fn module_bytes(&self, kind: ModuleKind) -> f64 {
+        self.cost_model.weight_bytes(kind, self.shape())
+            + if kind == ModuleKind::DecoderLayer { ACT_BUFFER_BYTES } else { 0.0 }
+    }
+
+    /// Ledger tag for a module copy on a device.
+    pub fn tag(&self, m: &ModuleId, device: usize) -> String {
+        format!("{}/{}@{}", self.tag_prefix, m, device)
+    }
+
+    /// Deploy an instance's weights onto the placement's primary devices:
+    /// one tagged allocation per decoder layer plus embed + lm_head on the
+    /// first layer's device. Charges no time (deployment happens before
+    /// serving); the per-module tags are what later migrations move.
+    pub fn deploy_instance(
+        &self,
+        cluster: &mut Cluster,
+        placement: &Placement,
+    ) -> Result<f64, OpError> {
+        let mut total = 0.0;
+        for l in 0..placement.n_layers {
+            let m = ModuleId::layer(ModuleKind::DecoderLayer, l);
+            let d = placement.primary_device(l);
+            let bytes = self.module_bytes(ModuleKind::DecoderLayer);
+            cluster.device_mut(d).alloc(&self.tag(&m, d), bytes)?;
+            total += bytes;
+        }
+        for kind in [ModuleKind::Embed, ModuleKind::LmHead] {
+            let m = ModuleId::global(kind);
+            let d = placement.primary_device(0);
+            let bytes = self.module_bytes(kind);
+            cluster.device_mut(d).alloc(&self.tag(&m, d), bytes)?;
+            total += bytes;
+        }
+        Ok(total)
+    }
+
+    /// Transfer time for `bytes` into `dst`, with fill-contention slowdown.
+    pub fn transfer_time(&self, cluster: &Cluster, src: usize, dst: usize, bytes: f64) -> f64 {
+        let bw = cluster.link_bw(src, dst);
+        let slow = (1.0 - cluster.device(dst).mem_frac()).max(0.25);
+        bytes / (bw * slow)
+    }
+
+    // ---- replicate ---------------------------------------------------------
+
+    /// Replicate decoder layer `layer` onto `dst` (§3.1 Fig. 4): allocate a
+    /// copy of the layer's weights on `dst`, register the replica in the
+    /// placement, charge transfer + hook-installation time.
+    pub fn replicate_layer(
+        &self,
+        cluster: &mut Cluster,
+        placement: &mut Placement,
+        layer: usize,
+        dst: usize,
+    ) -> Result<OpCost, OpError> {
+        if placement.layer_devices(layer).contains(&dst) {
+            return Err(OpError::AlreadyResident(layer, dst));
+        }
+        let src = placement.primary_device(layer);
+        let bytes = self.module_bytes(ModuleKind::DecoderLayer);
+        let m = ModuleId::layer(ModuleKind::DecoderLayer, layer);
+        let time = REPLICATION_LAUNCH_S / 1.0_f64.max(1.0)
+            + self.transfer_time(cluster, src, dst, bytes);
+        cluster
+            .device_mut(dst)
+            .alloc(&self.tag(&m, dst), bytes)?;
+        placement.add_replica(layer, dst);
+        Ok(OpCost { time_s: time, bytes_moved: bytes, dst_bytes: bytes })
+    }
+
+    /// Replicate a *batch* of layers in one operation — the Table 2 shape.
+    /// The launch cost is paid once; transfers are sequential on the link.
+    pub fn replicate_layers(
+        &self,
+        cluster: &mut Cluster,
+        placement: &mut Placement,
+        layers: &[usize],
+        dst: usize,
+    ) -> Result<OpCost, OpError> {
+        let mut total = OpCost { time_s: REPLICATION_LAUNCH_S, ..Default::default() };
+        for &l in layers {
+            let src = placement.primary_device(l);
+            let bytes = self.module_bytes(ModuleKind::DecoderLayer);
+            let m = ModuleId::layer(ModuleKind::DecoderLayer, l);
+            let t = self.transfer_time(cluster, src, dst, bytes);
+            cluster.device_mut(dst).alloc(&self.tag(&m, dst), bytes)?;
+            placement.add_replica(l, dst);
+            total = total.merge(OpCost { time_s: t, bytes_moved: bytes, dst_bytes: bytes });
+        }
+        Ok(total)
+    }
+
+    // ---- migrate -----------------------------------------------------------
+
+    /// Migrate a whole decoder layer: copy to `dst`, free on the source,
+    /// repoint the placement primary (§3.1 Fig. 5; optionally the KV cache
+    /// moves with it — the engine handles cache bytes separately).
+    pub fn migrate_layer(
+        &self,
+        cluster: &mut Cluster,
+        placement: &mut Placement,
+        layer: usize,
+        dst: usize,
+    ) -> Result<OpCost, OpError> {
+        let src = placement.primary_device(layer);
+        if src == dst || placement.layer_devices(layer).contains(&dst) {
+            return Err(OpError::AlreadyResident(layer, dst));
+        }
+        let bytes = self.module_bytes(ModuleKind::DecoderLayer);
+        let m = ModuleId::layer(ModuleKind::DecoderLayer, layer);
+        let time = MIGRATION_LAUNCH_S + self.transfer_time(cluster, src, dst, bytes);
+        cluster.device_mut(dst).alloc(&self.tag(&m, dst), bytes)?;
+        // Free the source copy only after the destination allocation
+        // succeeded (migration must never lose the module).
+        let _ = cluster.device_mut(src).free(&self.tag(&m, src));
+        placement.migrate_layer(layer, dst);
+        Ok(OpCost { time_s: time, bytes_moved: bytes, dst_bytes: bytes })
+    }
+
+    /// Migrate a batch of layers (Table 2's migration column).
+    pub fn migrate_layers(
+        &self,
+        cluster: &mut Cluster,
+        placement: &mut Placement,
+        layers: &[usize],
+        dst: usize,
+    ) -> Result<OpCost, OpError> {
+        let mut total = OpCost { time_s: MIGRATION_LAUNCH_S, ..Default::default() };
+        for &l in layers {
+            let src = placement.primary_device(l);
+            if src == dst {
+                continue;
+            }
+            let bytes = self.module_bytes(ModuleKind::DecoderLayer);
+            let m = ModuleId::layer(ModuleKind::DecoderLayer, l);
+            let t = self.transfer_time(cluster, src, dst, bytes);
+            cluster.device_mut(dst).alloc(&self.tag(&m, dst), bytes)?;
+            let _ = cluster.device_mut(src).free(&self.tag(&m, src));
+            placement.migrate_layer(l, dst);
+            total = total.merge(OpCost { time_s: t, bytes_moved: bytes, dst_bytes: bytes });
+        }
+        Ok(total)
+    }
+
+    /// Migrate a sub-layer module (projection, attention, FFN, or KV cache —
+    /// §3.3 granularity). `extra_bytes` covers dynamic payloads (KV cache
+    /// contents); weight-bearing kinds use the cost model's size.
+    pub fn migrate_module(
+        &self,
+        cluster: &mut Cluster,
+        placement: &mut Placement,
+        m: ModuleId,
+        dst: usize,
+        extra_bytes: f64,
+    ) -> Result<OpCost, OpError> {
+        let src = placement.module_device(m);
+        let bytes = self.module_bytes(m.kind) + extra_bytes;
+        let time = MIGRATION_LAUNCH_S + self.transfer_time(cluster, src, dst, bytes);
+        cluster.device_mut(dst).alloc(&self.tag(&m, dst), bytes)?;
+        let _ = cluster.device_mut(src).free(&self.tag(&m, src));
+        placement.migrate_module(m, dst);
+        Ok(OpCost { time_s: time, bytes_moved: bytes, dst_bytes: bytes })
+    }
+
+    // ---- evict ------------------------------------------------------------
+
+    /// Remove a layer replica (scale-down phase 2). Frees destination
+    /// memory; near-instant (no transfer).
+    pub fn evict_replica(
+        &self,
+        cluster: &mut Cluster,
+        placement: &mut Placement,
+        layer: usize,
+        device: usize,
+    ) -> Result<OpCost, OpError> {
+        if !placement.remove_replica(layer, device) {
+            return Err(OpError::NoSuchReplica(layer, device));
+        }
+        let m = ModuleId::layer(ModuleKind::DecoderLayer, layer);
+        let freed = cluster.device_mut(device).free(&self.tag(&m, device)).unwrap_or(0.0);
+        Ok(OpCost { time_s: 0.002, bytes_moved: 0.0, dst_bytes: -freed })
+    }
+
+    /// Table 2 analytic costs for an n-layer operation onto a device at
+    /// `dst_mem_frac` fill — used by the bench and by planning (the
+    /// controller consults this before executing).
+    pub fn table2_cost(&self, n_layers: usize, link_bw: f64, dst_mem_frac: f64,
+                       migration: bool) -> (f64, f64) {
+        let layer_bytes = self.module_bytes(ModuleKind::DecoderLayer);
+        let launch = if migration { MIGRATION_LAUNCH_S } else { REPLICATION_LAUNCH_S };
+        let slow = (1.0 - dst_mem_frac).max(0.25);
+        let time = launch + n_layers as f64 * layer_bytes / (link_bw * slow);
+        let mem = OP_OVERHEAD_BYTES + n_layers as f64 * layer_bytes;
+        (time, mem)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::model::ModelConfig;
+
+    fn setup() -> (CostModel, Cluster, Placement) {
+        let cm = CostModel::new(ModelConfig::llama2_13b());
+        let cluster = Cluster::paper_testbed();
+        let placement = Placement::single_device(40, 0);
+        (cm, cluster, placement)
+    }
+
+    #[test]
+    fn replicate_allocates_and_registers() {
+        let (cm, mut cl, mut pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let c = ops.replicate_layer(&mut cl, &mut pl, 5, 1).unwrap();
+        assert!(pl.layer_devices(5).contains(&1));
+        assert!(cl.device(1).used_bytes() > 600.0 * MIB);
+        assert!(c.time_s > REPLICATION_LAUNCH_S);
+        assert!(c.time_s < 1.0, "sub-second op: {}", c.time_s);
+    }
+
+    #[test]
+    fn replicate_twice_rejected() {
+        let (cm, mut cl, mut pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        ops.replicate_layer(&mut cl, &mut pl, 5, 1).unwrap();
+        assert!(matches!(
+            ops.replicate_layer(&mut cl, &mut pl, 5, 1),
+            Err(OpError::AlreadyResident(5, 1))
+        ));
+    }
+
+    #[test]
+    fn migrate_moves_bytes_between_ledgers() {
+        let (cm, mut cl, mut pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        // seed the source ledger with the layer's residency
+        let m = ModuleId::layer(ModuleKind::DecoderLayer, 3);
+        let bytes = ops.module_bytes(ModuleKind::DecoderLayer);
+        cl.device_mut(0).alloc(&ops.tag(&m, 0), bytes).unwrap();
+
+        let before_src = cl.device(0).used_bytes();
+        ops.migrate_layer(&mut cl, &mut pl, 3, 2).unwrap();
+        assert_eq!(pl.primary_device(3), 2);
+        assert!(cl.device(0).used_bytes() < before_src);
+        assert!((cl.device(2).used_bytes() - bytes).abs() < 1.0);
+    }
+
+    #[test]
+    fn migration_cheaper_than_replication() {
+        let (cm, cl, _) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let bw = cl.link_bw(0, 1);
+        for n in [1, 10, 20, 40] {
+            let (tr, _) = ops.table2_cost(n, bw, 0.1, false);
+            let (tm, _) = ops.table2_cost(n, bw, 0.1, true);
+            assert!(tm < tr, "n={n}: migration {tm} !< replication {tr}");
+            assert!((tr - tm - 0.05).abs() < 0.01);
+        }
+    }
+
+    /// Table 2's headline properties: sub-second ops, ~3× time for 40×
+    /// layers, exactly-linear memory at 608 MiB/layer + 499 MiB overhead.
+    #[test]
+    fn table2_shape_reproduced() {
+        let (cm, cl, _) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let bw = cl.link_bw(0, 1);
+        let frac = |n: usize| (499.0 + 608.0 * n as f64) * MIB / cl.device(0).spec.mem_bytes;
+        let (t1, m1) = ops.table2_cost(1, bw, frac(1), false);
+        let (t40, m40) = ops.table2_cost(40, bw, frac(40), false);
+        assert!((0.25..0.40).contains(&t1), "t1={t1}");
+        assert!((0.60..1.30).contains(&t40), "t40={t40}");
+        assert!(t40 / t1 < 5.0, "40x layers only ~3x time: {}", t40 / t1);
+        assert!((m1 / MIB - 1107.0).abs() < 5.0, "m1={}", m1 / MIB);
+        assert!((m40 / MIB - 24819.0).abs() < 50.0, "m40={}", m40 / MIB);
+    }
+
+    #[test]
+    fn evict_frees_memory() {
+        let (cm, mut cl, mut pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        ops.replicate_layer(&mut cl, &mut pl, 7, 1).unwrap();
+        let used = cl.device(1).used_bytes();
+        ops.evict_replica(&mut cl, &mut pl, 7, 1).unwrap();
+        assert!(cl.device(1).used_bytes() < used);
+        assert_eq!(pl.degree(7), 1);
+        assert!(matches!(
+            ops.evict_replica(&mut cl, &mut pl, 7, 1),
+            Err(OpError::NoSuchReplica(7, 1))
+        ));
+    }
+
+    #[test]
+    fn kv_cache_migration_charges_payload() {
+        let (cm, mut cl, mut pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let kv = ModuleId::layer(ModuleKind::KvCache, 0);
+        let payload = 2.0e9; // 2 GB of cache
+        let c = ops.migrate_module(&mut cl, &mut pl, kv, 3, payload).unwrap();
+        assert!(c.bytes_moved >= payload);
+        assert_eq!(pl.module_device(kv), 3);
+        assert!(cl.device(3).used_bytes() >= payload);
+    }
+
+    #[test]
+    fn oom_destination_rejected_without_state_change() {
+        let (cm, mut cl, mut pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        cl.device_mut(1).alloc("hog", 39.9 * 1024.0 * MIB).unwrap();
+        let r = ops.replicate_layer(&mut cl, &mut pl, 0, 1);
+        assert!(matches!(r, Err(OpError::DestinationOom(_))));
+        assert_eq!(pl.degree(0), 1);
+    }
+
+    #[test]
+    fn replication_batch_amortizes_launch() {
+        let (cm, mut cl, mut pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let batch = ops
+            .replicate_layers(&mut cl, &mut pl, &[0, 1, 2, 3], 1)
+            .unwrap();
+        let mut cl2 = Cluster::paper_testbed();
+        let mut pl2 = Placement::single_device(40, 0);
+        let mut single = OpCost::default();
+        for l in 0..4 {
+            single = single.merge(
+                ops.replicate_layer(&mut cl2, &mut pl2, l, 1).unwrap(),
+            );
+        }
+        assert!(batch.time_s < single.time_s);
+    }
+}

@@ -1,0 +1,350 @@
+//! Module placement: which device hosts which module (and its replicas).
+//!
+//! The paper's scaling state is the vector `P = [p_1 … p_n]` of per-layer
+//! parallelism degrees (§4.1) plus the device assignment behind each
+//! replica. [`Placement`] is that state for one model instance:
+//!
+//! * every decoder layer has a **primary** device plus zero or more
+//!   **replica** devices (`p_i = 1 + replicas`),
+//! * sub-layer modules (attention, FFN, projections, KV cache) may be
+//!   **migrated** away from the layer's primary device,
+//! * `continuity` scores consecutive-layer co-location — Algorithm 1 sorts
+//!   replication candidates by it to minimize scatter/all-gather boundaries
+//!   (§3.2: "the continuity between replicas affects the communication
+//!   overhead").
+
+use std::collections::BTreeMap;
+
+use crate::model::{ModuleId, ModuleKind};
+
+/// Placement of one model instance across the cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Placement {
+    pub n_layers: usize,
+    /// Primary device of each layer.
+    primary: Vec<usize>,
+    /// Extra replica devices per layer (order = creation order).
+    replicas: Vec<Vec<usize>>,
+    /// Sub-layer modules migrated off their layer's primary device.
+    migrated: BTreeMap<ModuleId, usize>,
+}
+
+impl Placement {
+    /// All layers (and implicitly embed/lm_head) on a single device.
+    pub fn single_device(n_layers: usize, device: usize) -> Placement {
+        Placement {
+            n_layers,
+            primary: vec![device; n_layers],
+            replicas: vec![Vec::new(); n_layers],
+            migrated: BTreeMap::new(),
+        }
+    }
+
+    /// Layers split contiguously across `devices` (pipeline-style shards).
+    pub fn contiguous_shards(n_layers: usize, devices: &[usize]) -> Placement {
+        assert!(!devices.is_empty());
+        let per = n_layers.div_ceil(devices.len());
+        let primary = (0..n_layers).map(|l| devices[(l / per).min(devices.len() - 1)]).collect();
+        Placement {
+            n_layers,
+            primary,
+            replicas: vec![Vec::new(); n_layers],
+            migrated: BTreeMap::new(),
+        }
+    }
+
+    // ---- the paper's P vector -------------------------------------------
+
+    /// Parallelism degree p_i of a layer (1 = unreplicated).
+    pub fn degree(&self, layer: usize) -> usize {
+        1 + self.replicas[layer].len()
+    }
+
+    /// The state vector P = [p_1 … p_n] (§4.1).
+    pub fn p_vector(&self) -> Vec<usize> {
+        (0..self.n_layers).map(|l| self.degree(l)).collect()
+    }
+
+    /// ‖1 ⊘ P‖₁ = Σ 1/p_i — the Hadamard-quotient norm of Algorithm 1.
+    pub fn inv_p_norm(&self) -> f64 {
+        (0..self.n_layers).map(|l| 1.0 / self.degree(l) as f64).sum()
+    }
+
+    // ---- queries ----------------------------------------------------------
+
+    pub fn primary_device(&self, layer: usize) -> usize {
+        self.primary[layer]
+    }
+
+    /// All devices holding an executable copy of a layer (primary first).
+    pub fn layer_devices(&self, layer: usize) -> Vec<usize> {
+        let mut v = vec![self.primary[layer]];
+        v.extend(&self.replicas[layer]);
+        v
+    }
+
+    /// Device a module actually executes on (honouring migrations).
+    pub fn module_device(&self, m: ModuleId) -> usize {
+        if let Some(&d) = self.migrated.get(&m) {
+            return d;
+        }
+        match m.layer {
+            Some(l) => self.primary[l],
+            None => self.primary[0],
+        }
+    }
+
+    pub fn migrations(&self) -> impl Iterator<Item = (&ModuleId, &usize)> {
+        self.migrated.iter()
+    }
+
+    /// Layers whose replica set contains `device`.
+    pub fn replicas_on(&self, device: usize) -> Vec<usize> {
+        (0..self.n_layers)
+            .filter(|&l| self.replicas[l].contains(&device))
+            .collect()
+    }
+
+    /// Layers with primary residence on `device`.
+    pub fn primaries_on(&self, device: usize) -> Vec<usize> {
+        (0..self.n_layers).filter(|&l| self.primary[l] == device).collect()
+    }
+
+    // ---- mutations (called by ops::replicate / ops::migrate) --------------
+
+    /// Add a replica of `layer` on `device`. Idempotence is rejected: a
+    /// device holds at most one copy of a layer.
+    pub fn add_replica(&mut self, layer: usize, device: usize) {
+        assert!(
+            !self.layer_devices(layer).contains(&device),
+            "device {device} already holds layer {layer}"
+        );
+        self.replicas[layer].push(device);
+    }
+
+    /// Remove the replica of `layer` on `device` (not the primary).
+    pub fn remove_replica(&mut self, layer: usize, device: usize) -> bool {
+        if let Some(i) = self.replicas[layer].iter().position(|&d| d == device) {
+            self.replicas[layer].remove(i);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Move a layer's primary residence (whole-layer migration).
+    pub fn migrate_layer(&mut self, layer: usize, to: usize) {
+        assert!(
+            !self.replicas[layer].contains(&to),
+            "target already holds a replica of layer {layer}"
+        );
+        self.primary[layer] = to;
+    }
+
+    /// Migrate a sub-layer module off its layer's primary device.
+    pub fn migrate_module(&mut self, m: ModuleId, to: usize) {
+        assert!(m.kind != ModuleKind::DecoderLayer,
+                "whole layers use migrate_layer");
+        self.migrated.insert(m, to);
+    }
+
+    /// Return a migrated module home (drops the override).
+    pub fn unmigrate_module(&mut self, m: ModuleId) -> bool {
+        self.migrated.remove(&m).is_some()
+    }
+
+    // ---- continuity (§3.2 / Algorithm 1) -----------------------------------
+
+    /// Number of device transitions walking layers 0..n — each transition
+    /// is a scatter/all-gather boundary. Lower = better.
+    pub fn transition_count(&self) -> usize {
+        (1..self.n_layers)
+            .filter(|&l| {
+                let a = self.layer_devices(l - 1);
+                let b = self.layer_devices(l);
+                a != b
+            })
+            .count()
+    }
+
+    /// Length of the longest run of consecutive layers replicated on
+    /// `device` if `candidate` were added — Algorithm 1's
+    /// `SortCandidatesByContinuity` key.
+    pub fn continuity_with(&self, device: usize, candidate: usize) -> usize {
+        let mut held: Vec<bool> = (0..self.n_layers)
+            .map(|l| self.layer_devices(l).contains(&device))
+            .collect();
+        held[candidate] = true;
+        // longest true-run containing `candidate`
+        let mut lo = candidate;
+        while lo > 0 && held[lo - 1] {
+            lo -= 1;
+        }
+        let mut hi = candidate;
+        while hi + 1 < self.n_layers && held[hi + 1] {
+            hi += 1;
+        }
+        hi - lo + 1
+    }
+
+    /// Validity invariant (checked by property tests and debug assertions):
+    /// no duplicate devices per layer, every index in range.
+    pub fn validate(&self, n_devices: usize) -> Result<(), String> {
+        if self.primary.len() != self.n_layers || self.replicas.len() != self.n_layers {
+            return Err("layer arity mismatch".into());
+        }
+        for l in 0..self.n_layers {
+            let devs = self.layer_devices(l);
+            for &d in &devs {
+                if d >= n_devices {
+                    return Err(format!("layer {l} on unknown device {d}"));
+                }
+            }
+            let mut sorted = devs.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            if sorted.len() != devs.len() {
+                return Err(format!("layer {l} has duplicate devices"));
+            }
+        }
+        for (m, &d) in &self.migrated {
+            if d >= n_devices {
+                return Err(format!("module {m} on unknown device {d}"));
+            }
+            if let Some(l) = m.layer {
+                if l >= self.n_layers {
+                    return Err(format!("module {m} beyond layer count"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    #[test]
+    fn single_device_degrees() {
+        let p = Placement::single_device(40, 0);
+        assert_eq!(p.p_vector(), vec![1; 40]);
+        assert_eq!(p.inv_p_norm(), 40.0);
+        assert_eq!(p.transition_count(), 0);
+    }
+
+    #[test]
+    fn contiguous_shards_split_evenly() {
+        let p = Placement::contiguous_shards(40, &[0, 1]);
+        assert_eq!(p.primaries_on(0).len(), 20);
+        assert_eq!(p.primaries_on(1).len(), 20);
+        assert_eq!(p.transition_count(), 1);
+    }
+
+    #[test]
+    fn replica_changes_degree_and_inv_norm() {
+        let mut p = Placement::single_device(4, 0);
+        p.add_replica(2, 1);
+        assert_eq!(p.p_vector(), vec![1, 1, 2, 1]);
+        assert!((p.inv_p_norm() - 3.5).abs() < 1e-12);
+        assert!(p.remove_replica(2, 1));
+        assert!(!p.remove_replica(2, 1));
+        assert_eq!(p.inv_p_norm(), 4.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "already holds")]
+    fn duplicate_replica_rejected() {
+        let mut p = Placement::single_device(4, 0);
+        p.add_replica(1, 0); // device 0 is the primary
+    }
+
+    #[test]
+    fn migration_overrides_module_device() {
+        let mut p = Placement::single_device(4, 0);
+        let kv = ModuleId::layer(ModuleKind::KvCache, 1);
+        assert_eq!(p.module_device(kv), 0);
+        p.migrate_module(kv, 2);
+        assert_eq!(p.module_device(kv), 2);
+        assert!(p.unmigrate_module(kv));
+        assert_eq!(p.module_device(kv), 0);
+    }
+
+    #[test]
+    fn layer_migration_moves_primary() {
+        let mut p = Placement::single_device(4, 0);
+        p.migrate_layer(3, 1);
+        assert_eq!(p.primary_device(3), 1);
+        assert_eq!(p.transition_count(), 1);
+    }
+
+    #[test]
+    fn continuity_prefers_adjacent_layers() {
+        let mut p = Placement::single_device(10, 0);
+        p.add_replica(4, 1);
+        p.add_replica(5, 1);
+        // candidate 6 extends the run [4,5] -> continuity 3
+        assert_eq!(p.continuity_with(1, 6), 3);
+        // candidate 8 starts a fresh run -> continuity 1
+        assert_eq!(p.continuity_with(1, 8), 1);
+        // candidate 3 extends backwards -> 3
+        assert_eq!(p.continuity_with(1, 3), 3);
+    }
+
+    #[test]
+    fn transitions_counted_over_replica_sets() {
+        let mut p = Placement::single_device(6, 0);
+        assert_eq!(p.transition_count(), 0);
+        p.add_replica(2, 1);
+        p.add_replica(3, 1);
+        // boundaries: 1->2 and 3->4
+        assert_eq!(p.transition_count(), 2);
+        p.add_replica(4, 1);
+        assert_eq!(p.transition_count(), 2); // 1->2, 4->5
+    }
+
+    #[test]
+    fn prop_random_ops_keep_placement_valid() {
+        prop::check(
+            "placement-valid",
+            |r: &mut Rng| {
+                (0..40)
+                    .map(|_| (r.below(4) as u8, r.below(8) as usize, r.below(4) as usize))
+                    .collect::<Vec<_>>()
+            },
+            |ops| {
+                let mut p = Placement::single_device(8, 0);
+                for &(op, layer, dev) in ops {
+                    match op {
+                        0 if !p.layer_devices(layer).contains(&dev) => {
+                            p.add_replica(layer, dev);
+                        }
+                        1 => {
+                            p.remove_replica(layer, dev);
+                        }
+                        2 if !p.replicas_on(dev).contains(&layer) => {
+                            if !p.layer_devices(layer).contains(&dev)
+                                || p.primary_device(layer) == dev
+                            {
+                                if !p.replicas_on(dev).contains(&layer)
+                                    && !p.layer_devices(layer)[1..].contains(&dev)
+                                {
+                                    p.migrate_layer(layer, dev);
+                                }
+                            }
+                        }
+                        _ => {
+                            p.migrate_module(
+                                ModuleId::layer(ModuleKind::KvCache, layer),
+                                dev,
+                            );
+                        }
+                    }
+                    p.validate(4).map_err(|e| format!("after {op}: {e}"))?;
+                }
+                Ok(())
+            },
+        );
+    }
+}

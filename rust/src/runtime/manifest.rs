@@ -1,0 +1,224 @@
+//! `artifacts/manifest.json` — the contract between the Python compile path
+//! and the Rust runtime. Written by `python/compile/aot.py`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::model::ModelConfig;
+use crate::util::json::Json;
+
+/// One lowered HLO artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// Path relative to the artifacts root.
+    pub path: String,
+    /// Module kind string (decoder_layer, attn, ffn, embed, lm_head, …).
+    pub module: String,
+    /// "prefill" | "decode".
+    pub phase: String,
+    pub config: String,
+    pub batch: usize,
+    pub seq: usize,
+    /// Argument shapes (for validation).
+    pub arg_shapes: Vec<Vec<usize>>,
+    pub outputs: Vec<String>,
+}
+
+/// A weight tensor dump.
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub path: String,
+    pub shape: Vec<usize>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub batch_buckets: Vec<usize>,
+    pub seq_buckets: Vec<usize>,
+    pub max_seq_len: usize,
+    pub configs: BTreeMap<String, ModelConfig>,
+    pub weights: BTreeMap<String, BTreeMap<String, WeightEntry>>,
+    artifacts: BTreeMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        Manifest::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        anyhow::ensure!(
+            j.req("format").as_u64() == Some(1),
+            "unsupported manifest format"
+        );
+        anyhow::ensure!(
+            j.req("interchange").as_str() == Some("hlo-text"),
+            "runtime only loads hlo-text artifacts"
+        );
+        let buckets = |key: &str| -> Vec<usize> {
+            j.req(key)
+                .as_arr()
+                .expect(key)
+                .iter()
+                .map(|v| v.as_usize().expect(key))
+                .collect()
+        };
+        let mut configs = BTreeMap::new();
+        for (name, cj) in j.req("configs").as_obj().context("configs")? {
+            configs.insert(name.clone(), ModelConfig::from_json(cj));
+        }
+        let mut weights = BTreeMap::new();
+        for (cfg, wj) in j.req("weights").as_obj().context("weights")? {
+            let mut m = BTreeMap::new();
+            for (name, e) in wj.as_obj().context("weight entry")? {
+                m.insert(
+                    name.clone(),
+                    WeightEntry {
+                        path: e.req("path").as_str().context("path")?.to_string(),
+                        shape: e
+                            .req("shape")
+                            .as_arr()
+                            .context("shape")?
+                            .iter()
+                            .map(|v| v.as_usize().unwrap())
+                            .collect(),
+                    },
+                );
+            }
+            weights.insert(cfg.clone(), m);
+        }
+        let mut artifacts = BTreeMap::new();
+        for e in j.req("artifacts").as_arr().context("artifacts")? {
+            let a = ArtifactEntry {
+                name: e.req("name").as_str().context("name")?.to_string(),
+                path: e.req("path").as_str().context("path")?.to_string(),
+                module: e.req("module").as_str().context("module")?.to_string(),
+                phase: e.req("phase").as_str().context("phase")?.to_string(),
+                config: e.req("config").as_str().context("config")?.to_string(),
+                batch: e.req("batch").as_usize().context("batch")?,
+                seq: e.req("seq").as_usize().context("seq")?,
+                arg_shapes: e
+                    .req("args")
+                    .as_arr()
+                    .context("args")?
+                    .iter()
+                    .map(|a| {
+                        a.req("shape")
+                            .as_arr()
+                            .unwrap()
+                            .iter()
+                            .map(|v| v.as_usize().unwrap())
+                            .collect()
+                    })
+                    .collect(),
+                outputs: e
+                    .req("outputs")
+                    .as_arr()
+                    .context("outputs")?
+                    .iter()
+                    .map(|v| v.as_str().unwrap().to_string())
+                    .collect(),
+            };
+            artifacts.insert(a.name.clone(), a);
+        }
+        Ok(Manifest {
+            batch_buckets: buckets("batch_buckets"),
+            seq_buckets: buckets("seq_buckets"),
+            max_seq_len: j.req("max_seq_len").as_usize().context("max_seq_len")?,
+            configs,
+            weights,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.artifacts.get(name)
+    }
+
+    pub fn artifacts(&self) -> impl Iterator<Item = &ArtifactEntry> {
+        self.artifacts.values()
+    }
+
+    /// Smallest bucket ≥ n (None if n exceeds the largest bucket).
+    pub fn batch_bucket(&self, n: usize) -> Option<usize> {
+        self.batch_buckets.iter().copied().find(|&b| b >= n)
+    }
+
+    pub fn seq_bucket(&self, n: usize) -> Option<usize> {
+        self.seq_buckets.iter().copied().find(|&s| s >= n)
+    }
+
+    /// Artifact name for (config, module, phase) at a bucket shape.
+    pub fn artifact_name(
+        &self,
+        config: &str,
+        module_fn: &str,
+        batch: usize,
+        seq: Option<usize>,
+    ) -> String {
+        match seq {
+            Some(s) => format!("{config}__{module_fn}__b{batch}_s{s}"),
+            None => format!("{config}__{module_fn}__b{batch}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::default_artifacts_dir;
+
+    fn built() -> Option<Manifest> {
+        let p = default_artifacts_dir().join("manifest.json");
+        p.exists().then(|| Manifest::load(&p).expect("manifest parses"))
+    }
+
+    #[test]
+    fn bucket_selection_rounds_up() {
+        let Some(m) = built() else { return };
+        assert_eq!(m.batch_bucket(1), Some(1));
+        assert_eq!(m.batch_bucket(3), Some(4));
+        assert_eq!(m.batch_bucket(8), Some(8));
+        assert_eq!(m.batch_bucket(9), None);
+        assert_eq!(m.seq_bucket(17), Some(32));
+    }
+
+    #[test]
+    fn tiny_config_and_artifacts_present() {
+        let Some(m) = built() else { return };
+        let cfg = &m.configs["tiny-llama"];
+        assert_eq!(cfg.d_model, 64);
+        let name = m.artifact_name("tiny-llama", "layer_prefill", 2, Some(16));
+        let a = m.artifact(&name).expect("layer_prefill b2 s16");
+        assert_eq!(a.batch, 2);
+        assert_eq!(a.arg_shapes[0], vec![2, 16, 64]);
+        // decode artifact (no seq suffix)
+        let d = m.artifact(&m.artifact_name("tiny-llama", "layer_decode", 4, None));
+        assert!(d.is_some());
+    }
+
+    #[test]
+    fn paper_configs_ride_along() {
+        let Some(m) = built() else { return };
+        assert_eq!(m.configs["llama2-13b"].n_layers, 40);
+        assert_eq!(m.configs["llama2-70b"].d_model, 8192);
+    }
+
+    #[test]
+    fn weight_entries_have_files() {
+        let Some(m) = built() else { return };
+        let w = &m.weights["tiny-llama"];
+        assert!(w.contains_key("emb"));
+        assert!(w.contains_key("layer0.wq"));
+        for e in w.values() {
+            assert!(default_artifacts_dir().join(&e.path).exists());
+        }
+    }
+}

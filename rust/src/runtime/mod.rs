@@ -1,0 +1,135 @@
+//! PJRT runtime — loads AOT artifacts and executes modules from Rust.
+//!
+//! The request-path half of the AOT bridge (DESIGN.md): `python/compile/
+//! aot.py` lowered every module × shape bucket to HLO *text*;
+//! [`Manifest`] indexes them, [`PjrtEngine`] compiles each on the CPU PJRT
+//! client (once, cached) and executes them with weight literals owned by
+//! the [`WeightStore`]. Python never runs here.
+//!
+//! Interchange is HLO text, not serialized proto: jax ≥ 0.5 emits 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+pub mod manifest;
+pub mod weights;
+
+pub use manifest::{ArtifactEntry, Manifest};
+pub use weights::WeightStore;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+/// Compiles + executes manifest artifacts on a PJRT CPU client.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    root: std::path::PathBuf,
+    /// name -> compiled executable (compiled on first use).
+    compiled: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// Executions performed (perf accounting).
+    exec_count: RefCell<u64>,
+}
+
+impl PjrtEngine {
+    /// Open the artifact directory (must contain `manifest.json`).
+    pub fn open(artifacts_dir: &std::path::Path) -> Result<PjrtEngine> {
+        let manifest = Manifest::load(&artifacts_dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(PjrtEngine {
+            client,
+            manifest,
+            root: artifacts_dir.to_path_buf(),
+            compiled: RefCell::new(HashMap::new()),
+            exec_count: RefCell::new(0),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn executions(&self) -> u64 {
+        *self.exec_count.borrow()
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.compiled.borrow().len()
+    }
+
+    /// Ensure the named artifact is compiled; returns whether it was cached.
+    pub fn ensure_compiled(&self, name: &str) -> Result<bool> {
+        if self.compiled.borrow().contains_key(name) {
+            return Ok(true);
+        }
+        let entry = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?;
+        let path = self.root.join(&entry.path);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path")?,
+        )
+        .map_err(|e| anyhow!("parse {name}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.compiled.borrow_mut().insert(name.to_string(), exe);
+        Ok(false)
+    }
+
+    /// Execute an artifact with the given literal arguments; returns the
+    /// tuple elements (all artifacts are lowered `return_tuple=True`).
+    pub fn execute(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.ensure_compiled(name)?;
+        let compiled = self.compiled.borrow();
+        let exe = compiled.get(name).unwrap();
+        *self.exec_count.borrow_mut() += 1;
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        let out = result
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        if out.is_empty() {
+            return Err(anyhow!("artifact {name} returned an empty tuple"));
+        }
+        Ok(out)
+    }
+
+    /// f32 literal from a slice with a shape.
+    pub fn lit_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+        let n: usize = dims.iter().product();
+        anyhow::ensure!(n == data.len(), "shape {dims:?} vs len {}", data.len());
+        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(data)
+            .reshape(&dims_i64)
+            .map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+
+    /// i32 literal from a slice with a shape.
+    pub fn lit_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+        let n: usize = dims.iter().product();
+        anyhow::ensure!(n == data.len(), "shape {dims:?} vs len {}", data.len());
+        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(data)
+            .reshape(&dims_i64)
+            .map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+}
+
+/// Locate the repo's artifacts directory (tests/examples convenience).
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// True if `make artifacts` has been run.
+pub fn artifacts_available() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}

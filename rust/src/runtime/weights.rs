@@ -1,0 +1,164 @@
+//! Weight store: the module weights the coordinator owns and moves.
+//!
+//! Weights are runtime *arguments* to the HLO artifacts (see
+//! `python/compile/model.py`) — this is what makes module replication/
+//! migration cheap: moving a module between (simulated) devices moves
+//! entries in this store, never recompiles an executable.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::Manifest;
+
+/// Layer-weight argument order shared with `model.py::LAYER_WEIGHT_NAMES`.
+pub const LAYER_WEIGHT_NAMES: [&str; 9] = [
+    "rms1", "wq", "wk", "wv", "wo", "rms2", "w_gate", "w_up", "w_down",
+];
+
+/// One tensor (host-resident f32, row-major).
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.numel() * 4
+    }
+}
+
+/// All weights of one model config, keyed like the manifest index
+/// (`layer{i}.{name}`, `emb`, `w_out`, `rms_f`).
+#[derive(Debug)]
+pub struct WeightStore {
+    pub config: String,
+    tensors: BTreeMap<String, Tensor>,
+    n_layers: usize,
+}
+
+impl WeightStore {
+    /// Load every tensor of `config` from the artifacts directory.
+    pub fn load(root: &Path, manifest: &Manifest, config: &str) -> Result<WeightStore> {
+        let index = manifest
+            .weights
+            .get(config)
+            .ok_or_else(|| anyhow!("no weights for config `{config}`"))?;
+        let mut tensors = BTreeMap::new();
+        for (name, entry) in index {
+            let raw = std::fs::read(root.join(&entry.path))
+                .with_context(|| format!("weight {name}"))?;
+            anyhow::ensure!(raw.len() % 4 == 0, "weight {name} not f32");
+            let data: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            let numel: usize = entry.shape.iter().product();
+            anyhow::ensure!(
+                numel == data.len(),
+                "weight {name}: shape {:?} vs {} elements",
+                entry.shape,
+                data.len()
+            );
+            tensors.insert(
+                name.clone(),
+                Tensor { shape: entry.shape.clone(), data },
+            );
+        }
+        let n_layers = manifest
+            .configs
+            .get(config)
+            .map(|c| c.n_layers)
+            .unwrap_or(0);
+        Ok(WeightStore { config: config.to_string(), tensors, n_layers })
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("missing weight `{name}`"))
+    }
+
+    /// The 9 layer-weight tensors of `layer`, in artifact argument order.
+    pub fn layer_weights(&self, layer: usize) -> Result<Vec<&Tensor>> {
+        LAYER_WEIGHT_NAMES
+            .iter()
+            .map(|n| self.get(&format!("layer{layer}.{n}")))
+            .collect()
+    }
+
+    /// Subset of layer weights by name (attention-only, FFN-only artifacts).
+    pub fn layer_weights_named(&self, layer: usize, names: &[&str]) -> Result<Vec<&Tensor>> {
+        names
+            .iter()
+            .map(|n| self.get(&format!("layer{layer}.{n}")))
+            .collect()
+    }
+
+    /// Total resident bytes (coordinator memory accounting).
+    pub fn total_bytes(&self) -> usize {
+        self.tensors.values().map(|t| t.bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::default_artifacts_dir;
+
+    fn store() -> Option<WeightStore> {
+        let root = default_artifacts_dir();
+        if !root.join("manifest.json").exists() {
+            return None;
+        }
+        let m = Manifest::load(&root.join("manifest.json")).unwrap();
+        Some(WeightStore::load(&root, &m, "tiny-llama").unwrap())
+    }
+
+    #[test]
+    fn loads_all_layer_weights() {
+        let Some(s) = store() else { return };
+        assert_eq!(s.n_layers(), 4);
+        for l in 0..4 {
+            let ws = s.layer_weights(l).unwrap();
+            assert_eq!(ws.len(), 9);
+            assert_eq!(ws[1].shape, vec![64, 64]); // wq
+            assert_eq!(ws[6].shape, vec![64, 172]); // w_gate
+        }
+    }
+
+    #[test]
+    fn embedding_shape_matches_config() {
+        let Some(s) = store() else { return };
+        let emb = s.get("emb").unwrap();
+        assert_eq!(emb.shape, vec![512, 64]);
+        assert_eq!(emb.numel(), 512 * 64);
+        // weights are non-trivial (not all zeros)
+        assert!(emb.data.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn missing_weight_is_an_error() {
+        let Some(s) = store() else { return };
+        assert!(s.get("layer99.wq").is_err());
+        assert!(s.layer_weights(99).is_err());
+    }
+
+    #[test]
+    fn total_bytes_plausible() {
+        let Some(s) = store() else { return };
+        // tiny model: ~0.5–2 MB of f32 weights
+        let mb = s.total_bytes() as f64 / 1e6;
+        assert!((0.2..10.0).contains(&mb), "{mb} MB");
+    }
+}

@@ -1,0 +1,441 @@
+//! Request Scheduler (§5): admission, batching, and replica batch-splitting.
+//!
+//! Decides *what to run next* — the engine (real path) and the simulator
+//! (paper-scale path) both execute its decisions, so baseline policies and
+//! CoCoServe differ only in configuration:
+//!
+//! * [`BatchPolicy::Static`] — HFT-style batch-at-a-time: wait for a full
+//!   batch (or timeout), run it to completion, then take the next batch.
+//! * [`BatchPolicy::Continuous`] — Orca/vLLM-style continuous batching:
+//!   decode every step with whatever is running; admit new sequences the
+//!   moment slots free.
+//!
+//! [`split_batch`] implements Fig. 4's workload distribution across layer
+//! replicas (batch 15 → shares 8/7 at degree 2).
+
+use std::collections::VecDeque;
+
+use crate::workload::Request;
+
+/// Scheduler policy knob.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BatchPolicy {
+    /// Fixed-size synchronous batches (HFT-like). `timeout_s`: dispatch a
+    /// partial batch if the oldest request waited this long.
+    Static { timeout_s: f64 },
+    /// Continuous batching (vLLM/CoCoServe-like).
+    Continuous,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct SchedulerConfig {
+    /// Maximum sequences decoded together (also the static batch size).
+    pub max_batch: usize,
+    pub policy: BatchPolicy,
+}
+
+impl SchedulerConfig {
+    pub fn hft(batch: usize) -> SchedulerConfig {
+        SchedulerConfig { max_batch: batch, policy: BatchPolicy::Static { timeout_s: 0.5 } }
+    }
+
+    pub fn continuous(max_batch: usize) -> SchedulerConfig {
+        SchedulerConfig { max_batch, policy: BatchPolicy::Continuous }
+    }
+}
+
+/// A sequence the scheduler is tracking.
+#[derive(Debug, Clone)]
+struct Tracked {
+    req: Request,
+    /// Tokens generated so far (engine reports progress).
+    generated: usize,
+    /// Set once the prefill step has run.
+    prefilled: bool,
+}
+
+/// What the engine should execute next.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Step {
+    /// Run prefill for these request ids (batched).
+    Prefill { request_ids: Vec<u64> },
+    /// Run one decode iteration for these request ids.
+    Decode { request_ids: Vec<u64> },
+    /// Nothing runnable right now.
+    Idle,
+}
+
+/// The scheduler: pending queue + running set + policy.
+#[derive(Debug)]
+pub struct Scheduler {
+    pub cfg: SchedulerConfig,
+    pending: VecDeque<Tracked>,
+    running: Vec<Tracked>,
+    /// In Static mode: the current synchronous batch must fully drain
+    /// before admission reopens.
+    draining: bool,
+    completed: u64,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerConfig) -> Scheduler {
+        Scheduler { cfg, pending: VecDeque::new(), running: vec![], draining: false, completed: 0 }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.pending.push_back(Tracked { req, generated: 0, prefilled: false });
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn running_len(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.pending.is_empty() && self.running.is_empty()
+    }
+
+    /// Queue depth signal for monitors (pending + running).
+    pub fn load(&self) -> usize {
+        self.pending.len() + self.running.len()
+    }
+
+    /// Decide the next step at time `now`.
+    pub fn next_step(&mut self, now: f64) -> Step {
+        match self.cfg.policy {
+            BatchPolicy::Continuous => self.next_continuous(),
+            BatchPolicy::Static { timeout_s } => self.next_static(now, timeout_s),
+        }
+    }
+
+    fn admit(&mut self, max_new: usize) -> Vec<u64> {
+        let mut ids = vec![];
+        while ids.len() < max_new {
+            let Some(t) = self.pending.pop_front() else { break };
+            ids.push(t.req.id);
+            self.running.push(t);
+        }
+        ids
+    }
+
+    fn next_continuous(&mut self) -> Step {
+        // Admit into free slots; new sequences prefill first.
+        let free = self.cfg.max_batch.saturating_sub(self.running.len());
+        let admitted = self.admit(free);
+        if !admitted.is_empty() {
+            return Step::Prefill { request_ids: admitted };
+        }
+        // Anything admitted-but-not-prefilled (e.g. after engine restart)?
+        let unprefilled: Vec<u64> = self
+            .running
+            .iter()
+            .filter(|t| !t.prefilled)
+            .map(|t| t.req.id)
+            .collect();
+        if !unprefilled.is_empty() {
+            return Step::Prefill { request_ids: unprefilled };
+        }
+        if self.running.is_empty() {
+            return Step::Idle;
+        }
+        Step::Decode {
+            request_ids: self.running.iter().map(|t| t.req.id).collect(),
+        }
+    }
+
+    fn next_static(&mut self, now: f64, timeout_s: f64) -> Step {
+        if self.running.is_empty() {
+            self.draining = false;
+        }
+        if !self.draining {
+            let full = self.pending.len() >= self.cfg.max_batch;
+            let timed_out = self
+                .pending
+                .front()
+                .map(|t| now - t.req.arrival_s >= timeout_s)
+                .unwrap_or(false);
+            if full || (timed_out && !self.pending.is_empty()) {
+                let admitted = self.admit(self.cfg.max_batch);
+                self.draining = true;
+                return Step::Prefill { request_ids: admitted };
+            }
+            return Step::Idle;
+        }
+        // drain the current batch to completion
+        if self.running.is_empty() {
+            self.draining = false;
+            return Step::Idle;
+        }
+        Step::Decode {
+            request_ids: self.running.iter().map(|t| t.req.id).collect(),
+        }
+    }
+
+    /// Engine feedback: the prefill step for these ids ran (1 token each).
+    pub fn on_prefilled(&mut self, ids: &[u64]) {
+        for t in self.running.iter_mut().filter(|t| ids.contains(&t.req.id)) {
+            t.prefilled = true;
+            t.generated = 1; // prefill emits the first new token
+        }
+        self.reap();
+    }
+
+    /// Engine feedback: one decode iteration ran for these ids.
+    pub fn on_decoded(&mut self, ids: &[u64]) {
+        for t in self.running.iter_mut().filter(|t| ids.contains(&t.req.id)) {
+            t.generated += 1;
+        }
+        self.reap();
+    }
+
+    /// Remove sequences that produced all their tokens; returns finished ids.
+    fn reap(&mut self) -> Vec<u64> {
+        let mut done = vec![];
+        self.running.retain(|t| {
+            if t.generated >= t.req.output_tokens {
+                done.push(t.req.id);
+                false
+            } else {
+                true
+            }
+        });
+        self.completed += done.len() as u64;
+        done
+    }
+
+    /// Finished ids drained since the last call (engine completion stream).
+    pub fn take_finished(&mut self) -> Vec<u64> {
+        // reap() already removed them; recompute via counters is awkward —
+        // so reap directly here too and return.
+        self.reap()
+    }
+
+    /// Ids still waiting in the pending queue.
+    pub fn pending_ids(&self) -> Vec<u64> {
+        self.pending.iter().map(|t| t.req.id).collect()
+    }
+
+    /// Forcibly remove a running sequence without completing it (vLLM-style
+    /// preemption; the caller usually resubmits it).
+    pub fn preempt(&mut self, id: u64) -> bool {
+        let before = self.running.len();
+        self.running.retain(|t| t.req.id != id);
+        self.running.len() != before
+    }
+
+    /// Running request ids + their remaining tokens (simulator view).
+    pub fn running_view(&self) -> Vec<(u64, usize, usize)> {
+        self.running
+            .iter()
+            .map(|t| (t.req.id, t.req.prompt_tokens, t.req.output_tokens - t.generated))
+            .collect()
+    }
+}
+
+/// Fig. 4 workload distribution: split `batch` across `degree` replicas as
+/// evenly as possible (15 @ 2 → [8, 7]). Earlier replicas get the +1s.
+pub fn split_batch(batch: usize, degree: usize) -> Vec<usize> {
+    assert!(degree > 0);
+    let base = batch / degree;
+    let extra = batch % degree;
+    (0..degree)
+        .map(|i| base + usize::from(i < extra))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    fn req(id: u64, at: f64, out: usize) -> Request {
+        Request { id, arrival_s: at, prompt_tokens: 8, output_tokens: out }
+    }
+
+    #[test]
+    fn split_batch_matches_fig4() {
+        assert_eq!(split_batch(15, 2), vec![8, 7]);
+        assert_eq!(split_batch(15, 1), vec![15]);
+        assert_eq!(split_batch(7, 3), vec![3, 2, 2]);
+        assert_eq!(split_batch(0, 2), vec![0, 0]);
+    }
+
+    #[test]
+    fn prop_split_batch_conserves_and_balances() {
+        prop::check(
+            "split-batch",
+            |r: &mut Rng| (r.below(200) as usize, 1 + r.below(8) as usize),
+            |&(b, p)| {
+                let s = split_batch(b, p);
+                if s.iter().sum::<usize>() != b {
+                    return Err("sum mismatch".into());
+                }
+                let mx = *s.iter().max().unwrap();
+                let mn = *s.iter().min().unwrap();
+                if mx - mn > 1 {
+                    return Err(format!("imbalance {s:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn continuous_prefills_then_decodes() {
+        let mut s = Scheduler::new(SchedulerConfig::continuous(4));
+        s.submit(req(0, 0.0, 3));
+        s.submit(req(1, 0.0, 2));
+        match s.next_step(0.0) {
+            Step::Prefill { request_ids } => assert_eq!(request_ids, vec![0, 1]),
+            other => panic!("{other:?}"),
+        }
+        s.on_prefilled(&[0, 1]);
+        match s.next_step(0.1) {
+            Step::Decode { request_ids } => assert_eq!(request_ids.len(), 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn continuous_admits_mid_flight() {
+        let mut s = Scheduler::new(SchedulerConfig::continuous(4));
+        s.submit(req(0, 0.0, 10));
+        s.next_step(0.0);
+        s.on_prefilled(&[0]);
+        // a new request arrives while 0 decodes — next step must prefill it
+        s.submit(req(1, 0.5, 5));
+        match s.next_step(0.5) {
+            Step::Prefill { request_ids } => assert_eq!(request_ids, vec![1]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn continuous_respects_max_batch() {
+        let mut s = Scheduler::new(SchedulerConfig::continuous(2));
+        for i in 0..5 {
+            s.submit(req(i, 0.0, 4));
+        }
+        match s.next_step(0.0) {
+            Step::Prefill { request_ids } => assert_eq!(request_ids.len(), 2),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(s.pending_len(), 3);
+    }
+
+    #[test]
+    fn completion_frees_slots() {
+        let mut s = Scheduler::new(SchedulerConfig::continuous(2));
+        s.submit(req(0, 0.0, 1)); // finishes at prefill
+        s.submit(req(1, 0.0, 2));
+        s.submit(req(2, 0.0, 2));
+        s.next_step(0.0);
+        s.on_prefilled(&[0, 1]);
+        assert_eq!(s.completed(), 1);
+        // slot freed → request 2 admitted
+        match s.next_step(0.1) {
+            Step::Prefill { request_ids } => assert_eq!(request_ids, vec![2]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn static_waits_for_full_batch() {
+        let mut s = Scheduler::new(SchedulerConfig::hft(3));
+        s.submit(req(0, 0.0, 2));
+        s.submit(req(1, 0.0, 2));
+        assert_eq!(s.next_step(0.01), Step::Idle); // 2 < 3, no timeout
+        s.submit(req(2, 0.1, 2));
+        match s.next_step(0.1) {
+            Step::Prefill { request_ids } => assert_eq!(request_ids.len(), 3),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn static_timeout_dispatches_partial() {
+        let mut s = Scheduler::new(SchedulerConfig::hft(8));
+        s.submit(req(0, 0.0, 2));
+        assert_eq!(s.next_step(0.1), Step::Idle);
+        match s.next_step(0.6) {
+            Step::Prefill { request_ids } => assert_eq!(request_ids, vec![0]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn static_drains_before_admitting() {
+        let mut s = Scheduler::new(SchedulerConfig::hft(2));
+        for i in 0..4 {
+            s.submit(req(i, 0.0, 2));
+        }
+        s.next_step(0.0); // prefill batch {0,1}
+        s.on_prefilled(&[0, 1]);
+        // batch not drained: new arrivals must NOT be admitted
+        match s.next_step(0.2) {
+            Step::Decode { request_ids } => assert_eq!(request_ids, vec![0, 1]),
+            other => panic!("{other:?}"),
+        }
+        s.on_decoded(&[0, 1]); // both reach 2/2 → finished
+        assert_eq!(s.running_len(), 0);
+        match s.next_step(0.3) {
+            Step::Prefill { request_ids } => assert_eq!(request_ids, vec![2, 3]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn prop_conservation_no_request_lost() {
+        prop::check(
+            "scheduler-conservation",
+            |r: &mut Rng| {
+                let n = 1 + r.below(30) as usize;
+                let max_b = 1 + r.below(8) as usize;
+                let cont = r.f64() < 0.5;
+                let outs: Vec<usize> =
+                    (0..n).map(|_| 1 + r.below(6) as usize).collect();
+                (max_b, cont, outs)
+            },
+            |(max_b, cont, outs)| {
+                let cfg = if *cont {
+                    SchedulerConfig::continuous(*max_b)
+                } else {
+                    SchedulerConfig::hft(*max_b)
+                };
+                let mut s = Scheduler::new(cfg);
+                for (i, &o) in outs.iter().enumerate() {
+                    s.submit(req(i as u64, 0.0, o));
+                }
+                let mut guard = 0;
+                let mut now = 1.0;
+                while !s.is_idle() {
+                    guard += 1;
+                    if guard > 10_000 {
+                        return Err("scheduler stuck".into());
+                    }
+                    now += 0.01;
+                    match s.next_step(now) {
+                        Step::Prefill { request_ids } => s.on_prefilled(&request_ids),
+                        Step::Decode { request_ids } => s.on_decoded(&request_ids),
+                        Step::Idle => {}
+                    }
+                }
+                if s.completed() != outs.len() as u64 {
+                    return Err(format!(
+                        "completed {} != submitted {}",
+                        s.completed(),
+                        outs.len()
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,177 @@
+//! Timing + report harness for `benches/` (std-only criterion replacement).
+//!
+//! Each paper table/figure has a `[[bench]]` target (harness = false) that
+//! builds workloads, runs the system/simulator, and prints the same
+//! rows/series the paper reports. This module provides:
+//!
+//! * [`time_it`] — warmup + timed iterations with mean/p50/p95,
+//! * [`Table`] — aligned text tables matching the paper's row format,
+//! * [`Report`] — JSON sidecar written to `target/bench-reports/` so
+//!   EXPERIMENTS.md numbers are regenerable byte-for-byte.
+
+use std::io::Write as _;
+use std::time::Instant;
+
+use super::json::{self, Json};
+use super::stats::Summary;
+
+/// Timing result for one benchmarked operation.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+/// Time `f` for `iters` iterations after `warmup` unrecorded runs.
+pub fn time_it(warmup: usize, iters: usize, mut f: impl FnMut()) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Summary::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        s.add(t0.elapsed().as_secs_f64());
+    }
+    Timing {
+        iters,
+        mean_s: s.mean(),
+        p50_s: s.p50(),
+        p95_s: s.p95(),
+        min_s: s.min(),
+    }
+}
+
+/// Aligned plain-text table writer (the bench stdout format).
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c, width = w[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", line(&self.header));
+        println!("{}", w.iter().map(|n| "-".repeat(*n)).collect::<Vec<_>>().join("  "));
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+/// JSON sidecar report: one per bench, named by experiment id.
+pub struct Report {
+    name: String,
+    fields: Vec<(String, Json)>,
+}
+
+impl Report {
+    pub fn new(name: &str) -> Self {
+        Report { name: name.to_string(), fields: vec![] }
+    }
+
+    pub fn set(&mut self, key: &str, v: Json) {
+        self.fields.push((key.to_string(), v));
+    }
+
+    pub fn series(&mut self, key: &str, xs: &[f64]) {
+        self.set(key, json::arr(xs.iter().map(|&x| json::num(x))));
+    }
+
+    /// Write to `target/bench-reports/<name>.json`.
+    pub fn write(&self) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("target/bench-reports");
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("{}.json", self.name));
+        let obj = Json::Obj(
+            self.fields
+                .iter()
+                .cloned()
+                .collect::<std::collections::BTreeMap<_, _>>(),
+        );
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "{obj}")?;
+        Ok(path)
+    }
+}
+
+/// Format seconds human-readably (µs/ms/s) for table cells.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_measures_something() {
+        let t = time_it(1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(t.iters, 5);
+        assert!(t.mean_s >= 0.0 && t.min_s <= t.p95_s);
+    }
+
+    #[test]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            t.row(&["1".into()]);
+        }));
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(5e-6).ends_with("µs"));
+        assert!(fmt_secs(5e-3).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+    }
+
+    #[test]
+    fn report_writes_json() {
+        let mut r = Report::new("unit-test-report");
+        r.set("k", json::num(1.0));
+        r.series("xs", &[1.0, 2.0]);
+        let p = r.write().unwrap();
+        let txt = std::fs::read_to_string(&p).unwrap();
+        let j = Json::parse(txt.trim()).unwrap();
+        assert_eq!(j.req("k").as_f64(), Some(1.0));
+        std::fs::remove_file(p).ok();
+    }
+}

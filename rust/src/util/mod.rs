@@ -1,0 +1,17 @@
+//! In-tree utilities.
+//!
+//! The build environment is offline with only the `xla` crate closure
+//! vendored, so the usual ecosystem crates (rand, serde/serde_json,
+//! criterion, proptest) are replaced by small, tested, std-only modules:
+//!
+//! * [`rng`] — SplitMix64/xoshiro256** PRNG + Poisson/normal/lognormal draws
+//! * [`json`] — minimal JSON parser/writer (manifest + config + reports)
+//! * [`stats`] — streaming summaries, percentiles, fixed-bucket histograms
+//! * [`prop`] — property-test harness (randomized cases w/ seed reporting)
+//! * [`bench`] — timing harness used by `benches/` (criterion replacement)
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,93 @@
+//! Tiny property-testing harness (std-only `proptest` replacement).
+//!
+//! Runs a property over many PRNG-generated cases; on failure it reports the
+//! case index and seed so the exact case replays with
+//! `PROP_SEED=<seed> PROP_CASE=<i> cargo test <name>`. Used by the
+//! coordinator invariant tests (placement validity, scheduler conservation,
+//! KV-cache accounting, autoscaler monotonicity).
+
+use super::rng::Rng;
+
+/// Number of cases per property (override with env `PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(128)
+}
+
+fn base_seed() -> u64 {
+    std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0C0_5E21)
+}
+
+/// Run `prop` over `default_cases()` generated cases.
+///
+/// `gen` draws a case from the PRNG; `prop` returns `Err(reason)` to fail.
+/// Panics with the replay seed/case on the first failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let seed = base_seed();
+    let only: Option<usize> = std::env::var("PROP_CASE")
+        .ok()
+        .and_then(|s| s.parse().ok());
+    let cases = default_cases();
+    for i in 0..cases {
+        if let Some(o) = only {
+            if i != o {
+                continue;
+            }
+        }
+        // Independent stream per case: failures replay without running
+        // the preceding cases.
+        let mut rng = Rng::new(seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let case = gen(&mut rng);
+        if let Err(msg) = prop(&case) {
+            panic!(
+                "property `{name}` failed on case {i}/{cases}: {msg}\n\
+                 case: {case:?}\n\
+                 replay: PROP_SEED={seed} PROP_CASE={i}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        check("tautology", |r| r.below(100), |_| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "property `find-big` failed")]
+    fn fails_and_reports_case() {
+        check(
+            "find-big",
+            |r| r.below(1000),
+            |&x| if x < 500 { Ok(()) } else { Err(format!("{x} too big")) },
+        );
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<u64> = vec![];
+        check("collect", |r| r.next_u64(), |&x| {
+            first.push(x);
+            Ok(())
+        });
+        let mut second: Vec<u64> = vec![];
+        check("collect", |r| r.next_u64(), |&x| {
+            second.push(x);
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

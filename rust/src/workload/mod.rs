@@ -1,0 +1,273 @@
+//! Workload generation: request arrivals, length distributions, traces.
+//!
+//! The paper (§6.1) drives all experiments with Alpaca-derived requests at
+//! controlled request rates (RPS 3–50), max generation length 256, each
+//! point repeated 5×. We reproduce that shape: Poisson arrivals at a target
+//! RPS, prompt lengths drawn from an Alpaca-like lognormal (median ≈ 20
+//! tokens, long tail), output lengths geometric-ish capped at
+//! `max_new_tokens`. Traces are recordable/replayable so every bench is
+//! seed-deterministic.
+
+use crate::util::rng::Rng;
+
+/// One inference request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time in seconds from experiment start.
+    pub arrival_s: f64,
+    pub prompt_tokens: usize,
+    /// Number of tokens the request will generate (ground truth; engines
+    /// discover it by hitting EOS, the simulator uses it directly).
+    pub output_tokens: usize,
+}
+
+/// Length distribution parameters (Alpaca-like defaults).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LengthDist {
+    /// Underlying-normal mu of the prompt lognormal.
+    pub prompt_mu: f64,
+    /// Underlying-normal sigma of the prompt lognormal.
+    pub prompt_sigma: f64,
+    pub max_prompt: usize,
+    /// Mean output length (geometric), capped at `max_new_tokens` (§6.1: 256).
+    pub mean_output: f64,
+    pub max_new_tokens: usize,
+}
+
+impl LengthDist {
+    /// Alpaca-statistics defaults: median prompt ≈ 20 tokens with a long
+    /// tail; outputs capped at 256 as in the paper's setup.
+    pub fn alpaca() -> LengthDist {
+        LengthDist {
+            prompt_mu: 3.0, // e^3 ≈ 20 median
+            prompt_sigma: 0.7,
+            max_prompt: 512,
+            mean_output: 64.0,
+            max_new_tokens: 256,
+        }
+    }
+
+    /// Tiny-model variant (prompts fit the 64-token prefill bucket).
+    pub fn tiny() -> LengthDist {
+        LengthDist {
+            prompt_mu: 2.3, // median ≈ 10
+            prompt_sigma: 0.5,
+            max_prompt: 48,
+            mean_output: 12.0,
+            max_new_tokens: 32,
+        }
+    }
+
+    pub fn sample_prompt(&self, rng: &mut Rng) -> usize {
+        (self.sample_raw_prompt(rng)).clamp(1, self.max_prompt)
+    }
+
+    fn sample_raw_prompt(&self, rng: &mut Rng) -> usize {
+        rng.lognormal(self.prompt_mu, self.prompt_sigma).round() as usize
+    }
+
+    pub fn sample_output(&self, rng: &mut Rng) -> usize {
+        // Geometric with the given mean, capped (the cap concentrates mass
+        // at max_new_tokens exactly like real decoding cutoffs).
+        let p = 1.0 / self.mean_output;
+        let u = rng.f64().max(f64::MIN_POSITIVE);
+        let g = (u.ln() / (1.0 - p).ln()).ceil() as usize;
+        g.clamp(1, self.max_new_tokens)
+    }
+}
+
+/// Arrival process shapes used by the benches.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrival {
+    /// Poisson process at a constant rate (requests/second).
+    Poisson { rps: f64 },
+    /// Constant-rate ramp from `from` to `to` RPS over the duration
+    /// (the "unpredictable traffic" scenario motivating auto-scaling).
+    Ramp { from: f64, to: f64 },
+    /// Baseline load plus a burst window at `burst` RPS (Fig. 11 stress).
+    Burst { base: f64, burst: f64, start_s: f64, end_s: f64 },
+}
+
+impl Arrival {
+    fn rate_at(&self, t: f64, duration: f64) -> f64 {
+        match *self {
+            Arrival::Poisson { rps } => rps,
+            Arrival::Ramp { from, to } => {
+                from + (to - from) * (t / duration).clamp(0.0, 1.0)
+            }
+            Arrival::Burst { base, burst, start_s, end_s } => {
+                if (start_s..end_s).contains(&t) { burst } else { base }
+            }
+        }
+    }
+}
+
+/// A reproducible request trace.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub requests: Vec<Request>,
+}
+
+impl Trace {
+    /// Generate a trace of `duration_s` seconds.
+    pub fn generate(
+        arrival: Arrival,
+        lengths: LengthDist,
+        duration_s: f64,
+        seed: u64,
+    ) -> Trace {
+        let mut rng = Rng::new(seed);
+        let mut t = 0.0;
+        let mut reqs = Vec::new();
+        let mut id = 0;
+        loop {
+            // Thinning-free approach: step by exponential at the local rate.
+            let rate = arrival.rate_at(t, duration_s).max(1e-9);
+            t += rng.exponential(rate);
+            if t >= duration_s {
+                break;
+            }
+            reqs.push(Request {
+                id,
+                arrival_s: t,
+                prompt_tokens: lengths.sample_prompt(&mut rng),
+                output_tokens: lengths.sample_output(&mut rng),
+            });
+            id += 1;
+        }
+        Trace { requests: reqs }
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Empirical arrival rate over the trace window.
+    pub fn mean_rps(&self, duration_s: f64) -> f64 {
+        self.requests.len() as f64 / duration_s
+    }
+
+    /// Total tokens (prompt + output) — the throughput denominator.
+    pub fn total_tokens(&self) -> usize {
+        self.requests
+            .iter()
+            .map(|r| r.prompt_tokens + r.output_tokens)
+            .sum()
+    }
+}
+
+/// Deterministic synthetic token ids for the real-path engine: requests
+/// need actual token sequences for the tiny model. Hash-derived from the
+/// request id so traces stay reproducible without storing token arrays.
+pub fn synth_prompt_tokens(req_id: u64, len: usize, vocab: usize) -> Vec<i32> {
+    let mut rng = Rng::new(0x5EED ^ req_id.wrapping_mul(0x9E3779B97F4A7C15));
+    (0..len).map(|_| rng.below(vocab as u64) as i32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_trace_rate_matches() {
+        let t = Trace::generate(
+            Arrival::Poisson { rps: 20.0 },
+            LengthDist::alpaca(),
+            100.0,
+            1,
+        );
+        let rps = t.mean_rps(100.0);
+        assert!((rps - 20.0).abs() < 2.0, "rps {rps}");
+        // arrivals strictly increasing
+        for w in t.requests.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+    }
+
+    #[test]
+    fn trace_deterministic_per_seed() {
+        let a = Trace::generate(Arrival::Poisson { rps: 5.0 },
+                                LengthDist::alpaca(), 10.0, 7);
+        let b = Trace::generate(Arrival::Poisson { rps: 5.0 },
+                                LengthDist::alpaca(), 10.0, 7);
+        assert_eq!(a.requests, b.requests);
+        let c = Trace::generate(Arrival::Poisson { rps: 5.0 },
+                                LengthDist::alpaca(), 10.0, 8);
+        assert_ne!(a.requests, c.requests);
+    }
+
+    #[test]
+    fn lengths_within_bounds() {
+        let d = LengthDist::alpaca();
+        let mut rng = Rng::new(3);
+        for _ in 0..5000 {
+            let p = d.sample_prompt(&mut rng);
+            let o = d.sample_output(&mut rng);
+            assert!((1..=d.max_prompt).contains(&p));
+            assert!((1..=d.max_new_tokens).contains(&o));
+        }
+    }
+
+    #[test]
+    fn prompt_median_about_20() {
+        let d = LengthDist::alpaca();
+        let mut rng = Rng::new(4);
+        let mut v: Vec<usize> = (0..20000).map(|_| d.sample_prompt(&mut rng)).collect();
+        v.sort_unstable();
+        let med = v[v.len() / 2];
+        assert!((15..=26).contains(&med), "median {med}");
+    }
+
+    #[test]
+    fn output_mean_close_to_target() {
+        let d = LengthDist::alpaca();
+        let mut rng = Rng::new(5);
+        let n = 20000;
+        let s: usize = (0..n).map(|_| d.sample_output(&mut rng)).sum();
+        let mean = s as f64 / n as f64;
+        // cap at 256 pulls the mean slightly below 64
+        assert!((50.0..70.0).contains(&mean), "mean {mean}");
+    }
+
+    #[test]
+    fn ramp_rate_increases() {
+        let t = Trace::generate(
+            Arrival::Ramp { from: 2.0, to: 40.0 },
+            LengthDist::alpaca(),
+            100.0,
+            6,
+        );
+        let first_half = t.requests.iter().filter(|r| r.arrival_s < 50.0).count();
+        let second_half = t.len() - first_half;
+        assert!(second_half > 2 * first_half,
+                "{first_half} vs {second_half}");
+    }
+
+    #[test]
+    fn burst_concentrates_arrivals() {
+        let t = Trace::generate(
+            Arrival::Burst { base: 2.0, burst: 50.0, start_s: 40.0, end_s: 60.0 },
+            LengthDist::alpaca(),
+            100.0,
+            9,
+        );
+        let in_burst = t.requests.iter()
+            .filter(|r| (40.0..60.0).contains(&r.arrival_s))
+            .count();
+        assert!(in_burst as f64 > 0.6 * t.len() as f64);
+    }
+
+    #[test]
+    fn synth_tokens_deterministic_and_in_vocab() {
+        let a = synth_prompt_tokens(42, 16, 512);
+        let b = synth_prompt_tokens(42, 16, 512);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&t| (0..512).contains(&t)));
+        assert_ne!(a, synth_prompt_tokens(43, 16, 512));
+    }
+}

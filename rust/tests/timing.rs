@@ -1,0 +1,24 @@
+use cocoserve::engine::TinyEngine;
+use cocoserve::runtime::default_artifacts_dir;
+use std::time::Instant;
+
+#[test]
+fn measure_steps() {
+    let eng = TinyEngine::open(&default_artifacts_dir(), "tiny-llama").unwrap();
+    let prompts: Vec<Vec<i32>> = (0..8).map(|i| vec![i as i32 + 1; 12]).collect();
+    let mut seqs: Vec<_> = prompts.iter().enumerate().map(|(i,p)| eng.new_sequence(i as u64, p)).collect();
+    let t0 = Instant::now();
+    { let mut r: Vec<&mut _> = seqs.iter_mut().collect(); eng.prefill(&mut r).unwrap(); }
+    eprintln!("prefill b8 s16 (first, incl compile): {:?}", t0.elapsed());
+    let t0 = Instant::now();
+    for _ in 0..5 { let mut r: Vec<&mut _> = seqs.iter_mut().collect(); eng.decode(&mut r).unwrap(); }
+    eprintln!("decode b8 x5 (first incl compile): {:?}", t0.elapsed());
+    let t0 = Instant::now();
+    for _ in 0..20 { let mut r: Vec<&mut _> = seqs.iter_mut().collect(); eng.decode(&mut r).unwrap(); }
+    eprintln!("decode b8 x20 warm: {:?} ({:?}/step)", t0.elapsed(), t0.elapsed()/20);
+    let mut one = eng.new_sequence(99, &[1,2,3]);
+    { let mut r: Vec<&mut _> = vec![&mut one]; eng.prefill(&mut r).unwrap(); }
+    let t0 = Instant::now();
+    for _ in 0..20 { let mut r: Vec<&mut _> = vec![&mut one]; eng.decode(&mut r).unwrap(); }
+    eprintln!("decode b1 x20 warm: {:?} ({:?}/step)", t0.elapsed(), t0.elapsed()/20);
+}
