@@ -53,13 +53,25 @@ impl DeviceSpec {
 }
 
 /// Why an allocation was refused.
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum AllocError {
-    #[error("device {device} OOM: requested {requested_mib:.1} MiB, free {free_mib:.1} MiB")]
     Oom { device: usize, requested_mib: f64, free_mib: f64 },
-    #[error("unknown allocation tag `{0}`")]
     UnknownTag(String),
 }
+
+impl std::fmt::Display for AllocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AllocError::Oom { device, requested_mib, free_mib } => write!(
+                f,
+                "device {device} OOM: requested {requested_mib:.1} MiB, free {free_mib:.1} MiB"
+            ),
+            AllocError::UnknownTag(tag) => write!(f, "unknown allocation tag `{tag}`"),
+        }
+    }
+}
+
+impl std::error::Error for AllocError {}
 
 /// One device's ledger: tagged allocations + busy-time accounting.
 #[derive(Debug, Clone)]
@@ -69,6 +81,9 @@ pub struct Device {
     /// Tagged allocations (tag -> bytes), e.g. "inst0/layers.3.weights".
     allocs: BTreeMap<String, f64>,
     used: f64,
+    /// High-water mark of `used` over the device's lifetime — the capacity
+    /// invariant the simulator's property tests assert (peak ≤ capacity).
+    peak_used: f64,
     /// Total busy seconds (simulated) — utilization numerator.
     busy_s: f64,
     /// Monotone per-device OOM event counter (Fig. 11a).
@@ -77,11 +92,24 @@ pub struct Device {
 
 impl Device {
     pub fn new(id: usize, spec: DeviceSpec) -> Device {
-        Device { id, spec, allocs: BTreeMap::new(), used: 0.0, busy_s: 0.0, oom_events: 0 }
+        Device {
+            id,
+            spec,
+            allocs: BTreeMap::new(),
+            used: 0.0,
+            peak_used: 0.0,
+            busy_s: 0.0,
+            oom_events: 0,
+        }
     }
 
     pub fn used_bytes(&self) -> f64 {
         self.used
+    }
+
+    /// Peak bytes ever resident on this device.
+    pub fn peak_used_bytes(&self) -> f64 {
+        self.peak_used
     }
 
     pub fn free_bytes(&self) -> f64 {
@@ -110,6 +138,7 @@ impl Device {
         }
         *self.allocs.entry(tag.to_string()).or_insert(0.0) += bytes;
         self.used += bytes;
+        self.peak_used = self.peak_used.max(self.used);
         Ok(())
     }
 
@@ -136,6 +165,7 @@ impl Device {
             });
         }
         self.used += new_bytes - cur;
+        self.peak_used = self.peak_used.max(self.used);
         if new_bytes == 0.0 {
             self.allocs.remove(tag);
         } else {
@@ -291,6 +321,21 @@ mod tests {
         assert!(d.resize("kv", 45.0 * GIB).is_err());
         assert_eq!(d.oom_events, 1);
         assert_eq!(d.alloc_bytes("kv"), 1.0 * GIB);
+    }
+
+    #[test]
+    fn peak_tracks_high_water_mark() {
+        let mut d = Device::new(0, DeviceSpec::a100_40gb());
+        d.alloc("a", 10.0 * GIB).unwrap();
+        d.alloc("b", 5.0 * GIB).unwrap();
+        d.free("a").unwrap();
+        assert_eq!(d.used_bytes(), 5.0 * GIB);
+        assert_eq!(d.peak_used_bytes(), 15.0 * GIB);
+        d.resize("b", 12.0 * GIB).unwrap();
+        assert_eq!(d.peak_used_bytes(), 15.0 * GIB);
+        d.resize("b", 20.0 * GIB).unwrap();
+        assert_eq!(d.peak_used_bytes(), 20.0 * GIB);
+        assert!(d.peak_used_bytes() <= d.spec.mem_bytes);
     }
 
     #[test]

@@ -13,8 +13,12 @@
 //! * a **PJRT runtime** that loads AOT-compiled HLO artifacts and serves a
 //!   real (tiny) model end-to-end with Python off the request path
 //!   ([`runtime`], [`engine`]),
-//! * a **discrete-event simulator** over A100-calibrated cost models that
-//!   regenerates the paper's 13B/70B-scale tables and figures ([`sim`]),
+//! * an **event-driven multi-instance simulator** over A100-calibrated
+//!   cost models — a deterministic event kernel ([`sim::events`]) driving
+//!   per-instance serving state machines, regenerating the paper's
+//!   13B/70B-scale tables and figures ([`sim`]),
+//! * a **traffic scenario library** (steady / diurnal / burst / ramp /
+//!   two-tenant mix) for dynamic-load experiments ([`workload`]),
 //! * **HFT-like and vLLM-like baselines** over the same substrate
 //!   ([`baselines`]).
 

@@ -8,6 +8,7 @@
 //! closed loop of Fig. 7.
 
 use crate::cluster::Cluster;
+use crate::util::json::{self, Json};
 use crate::util::stats::Summary;
 
 use crate::autoscale::ControllerInputs;
@@ -122,6 +123,20 @@ impl Monitor {
         1.0 - self.slo_attainment()
     }
 
+    /// Deterministic per-monitor metrics document (sorted keys, stable
+    /// float formatting) — one row of the simulator's golden-replay JSON.
+    pub fn metrics_json(&self, duration_s: f64) -> Json {
+        let mut lat = self.latency_summary();
+        json::obj(vec![
+            ("completed", json::num(self.completions.len() as f64)),
+            ("latency_mean_s", json::num(lat.mean())),
+            ("latency_p95_s", json::num(lat.p95())),
+            ("oom_events", json::num(self.total_oom as f64)),
+            ("slo_attainment", json::num(self.slo_attainment())),
+            ("throughput_tps", json::num(self.throughput_tokens_per_s(duration_s))),
+        ])
+    }
+
     // ---- controller feed (windowed) ---------------------------------------
 
     /// Violation rate over completions since the last `controller_view`.
@@ -232,6 +247,22 @@ mod tests {
         assert_eq!(m.controller_view(&cl, 1.0).oom_events, 2);
         assert_eq!(m.controller_view(&cl, 1.0).oom_events, 0);
         assert_eq!(m.total_oom(), 2);
+    }
+
+    #[test]
+    fn metrics_json_deterministic() {
+        let mut m = Monitor::new(5.0);
+        m.record(done(0, 0.0, 2.0, 50));
+        m.record(done(1, 1.0, 9.0, 30));
+        m.record_oom();
+        let a = m.metrics_json(10.0).to_string();
+        let b = m.metrics_json(10.0).to_string();
+        assert_eq!(a, b);
+        let j = crate::util::json::Json::parse(&a).unwrap();
+        assert_eq!(j.req("completed").as_usize(), Some(2));
+        assert_eq!(j.req("oom_events").as_usize(), Some(1));
+        assert_eq!(j.req("slo_attainment").as_f64(), Some(0.5));
+        assert_eq!(j.req("throughput_tps").as_f64(), Some(8.0));
     }
 
     #[test]

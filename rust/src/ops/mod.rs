@@ -62,14 +62,40 @@ impl OpCost {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum OpError {
-    #[error("destination OOM: {0}")]
-    DestinationOom(#[from] crate::cluster::AllocError),
-    #[error("layer {0} already resident on device {1}")]
+    DestinationOom(crate::cluster::AllocError),
     AlreadyResident(usize, usize),
-    #[error("no replica of layer {0} on device {1}")]
     NoSuchReplica(usize, usize),
+}
+
+impl std::fmt::Display for OpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            OpError::DestinationOom(e) => write!(f, "destination OOM: {e}"),
+            OpError::AlreadyResident(l, d) => {
+                write!(f, "layer {l} already resident on device {d}")
+            }
+            OpError::NoSuchReplica(l, d) => {
+                write!(f, "no replica of layer {l} on device {d}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for OpError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            OpError::DestinationOom(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<crate::cluster::AllocError> for OpError {
+    fn from(e: crate::cluster::AllocError) -> OpError {
+        OpError::DestinationOom(e)
+    }
 }
 
 /// Executes module operations against a cluster + placement, with costs

@@ -107,6 +107,23 @@ impl Scheduler {
         self.pending.len() + self.running.len()
     }
 
+    /// Earliest future time at which this scheduler could become runnable
+    /// without any external state change — the event kernel schedules a
+    /// wake-up here. Only static batching has such a deadline (a partial
+    /// batch dispatches when its oldest request times out); continuous
+    /// batching is runnable immediately whenever it has work.
+    pub fn next_deadline(&self) -> Option<f64> {
+        match self.cfg.policy {
+            BatchPolicy::Continuous => None,
+            BatchPolicy::Static { timeout_s } => {
+                if self.draining && !self.running.is_empty() {
+                    return None;
+                }
+                self.pending.front().map(|t| t.req.arrival_s + timeout_s)
+            }
+        }
+    }
+
     /// Decide the next step at time `now`.
     pub fn next_step(&mut self, now: f64) -> Step {
         match self.cfg.policy {
@@ -389,6 +406,29 @@ mod tests {
             Step::Prefill { request_ids } => assert_eq!(request_ids, vec![2, 3]),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn static_deadline_tracks_oldest_pending() {
+        let mut s = Scheduler::new(SchedulerConfig::hft(4));
+        assert_eq!(s.next_deadline(), None);
+        s.submit(req(0, 1.0, 2));
+        s.submit(req(1, 1.5, 2));
+        assert_eq!(s.next_deadline(), Some(1.5)); // 1.0 + timeout 0.5
+        // dispatch at the deadline, then the batch drains with no deadline
+        match s.next_step(1.5) {
+            Step::Prefill { request_ids } => assert_eq!(request_ids.len(), 2),
+            other => panic!("{other:?}"),
+        }
+        s.on_prefilled(&[0, 1]);
+        assert_eq!(s.next_deadline(), None);
+    }
+
+    #[test]
+    fn continuous_has_no_deadline() {
+        let mut s = Scheduler::new(SchedulerConfig::continuous(4));
+        s.submit(req(0, 0.0, 2));
+        assert_eq!(s.next_deadline(), None);
     }
 
     #[test]

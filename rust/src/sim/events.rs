@@ -1,0 +1,217 @@
+//! The discrete-event queue driving the simulation kernel.
+//!
+//! A binary heap of timestamped events with **fully deterministic
+//! ordering**: events pop by ascending time, then by kind priority
+//! (arrivals before controller ticks before step completions before
+//! wake-ups — the same precedence the original lockstep loop applied when
+//! several things coincided on one tick), then by instance id, then by
+//! insertion sequence. Two runs over the same trace therefore process an
+//! identical event sequence, which is what makes the golden-replay test
+//! (byte-identical metrics JSON) possible.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// What happens when an event fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// The `idx`-th trace request reaches the router.
+    Arrival { request_idx: usize },
+    /// The §5 controller evaluates every autoscaling instance.
+    ControllerTick,
+    /// Instance `instance` finishes the in-flight step started as its
+    /// `token`-th step (stale completions — e.g. after an OOM rebuild
+    /// cleared the step — carry an old token and are ignored).
+    StepComplete { instance: usize, token: u64 },
+    /// Re-poll instance `instance` (static-batch timeout or OOM backoff).
+    Wake { instance: usize },
+}
+
+impl EventKind {
+    /// Precedence among same-time events (lower pops first).
+    fn priority(&self) -> u8 {
+        match self {
+            EventKind::Arrival { .. } => 0,
+            EventKind::ControllerTick => 1,
+            EventKind::StepComplete { .. } => 2,
+            EventKind::Wake { .. } => 3,
+        }
+    }
+
+    /// Instance tie-break key (non-instance events sort first).
+    fn instance_key(&self) -> usize {
+        match self {
+            EventKind::Arrival { .. } | EventKind::ControllerTick => 0,
+            EventKind::StepComplete { instance, .. } | EventKind::Wake { instance } => {
+                *instance
+            }
+        }
+    }
+}
+
+/// A scheduled event.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub time: f64,
+    pub kind: EventKind,
+    /// Monotone insertion counter — the final FIFO tie-break.
+    seq: u64,
+}
+
+impl Event {
+    fn key(&self) -> (f64, u8, usize, u64) {
+        (self.time, self.kind.priority(), self.kind.instance_key(), self.seq)
+    }
+}
+
+/// Min-heap wrapper (BinaryHeap is a max-heap, so the ordering is reversed).
+#[derive(Debug)]
+struct HeapEntry(Event);
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for HeapEntry {}
+
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        let (ta, pa, ia, sa) = self.0.key();
+        let (tb, pb, ib, sb) = other.0.key();
+        // reversed: the greatest heap entry is the earliest event
+        tb.total_cmp(&ta)
+            .then(pb.cmp(&pa))
+            .then(ib.cmp(&ia))
+            .then(sb.cmp(&sa))
+    }
+}
+
+/// Deterministic time-ordered event queue.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<HeapEntry>,
+    next_seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    pub fn push(&mut self, time: f64, kind: EventKind) {
+        debug_assert!(time.is_finite(), "event at non-finite time");
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(HeapEntry(Event { time, kind, seq }));
+    }
+
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop().map(|e| e.0)
+    }
+
+    /// Timestamp of the next event without popping it.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.0.time)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(q: &mut EventQueue) -> Vec<Event> {
+        let mut v = vec![];
+        while let Some(e) = q.pop() {
+            v.push(e);
+        }
+        v
+    }
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, EventKind::ControllerTick);
+        q.push(1.0, EventKind::Arrival { request_idx: 0 });
+        q.push(2.0, EventKind::StepComplete { instance: 0, token: 1 });
+        let times: Vec<f64> = drain(&mut q).iter().map(|e| e.time).collect();
+        assert_eq!(times, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn same_time_orders_by_kind_priority() {
+        let mut q = EventQueue::new();
+        q.push(5.0, EventKind::Wake { instance: 0 });
+        q.push(5.0, EventKind::StepComplete { instance: 0, token: 1 });
+        q.push(5.0, EventKind::ControllerTick);
+        q.push(5.0, EventKind::Arrival { request_idx: 7 });
+        let kinds: Vec<EventKind> = drain(&mut q).iter().map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                EventKind::Arrival { request_idx: 7 },
+                EventKind::ControllerTick,
+                EventKind::StepComplete { instance: 0, token: 1 },
+                EventKind::Wake { instance: 0 },
+            ]
+        );
+    }
+
+    #[test]
+    fn same_time_same_kind_orders_by_instance_then_fifo() {
+        let mut q = EventQueue::new();
+        q.push(1.0, EventKind::StepComplete { instance: 2, token: 1 });
+        q.push(1.0, EventKind::StepComplete { instance: 0, token: 4 });
+        q.push(1.0, EventKind::StepComplete { instance: 0, token: 9 });
+        let popped = drain(&mut q);
+        assert_eq!(popped[0].kind, EventKind::StepComplete { instance: 0, token: 4 });
+        assert_eq!(popped[1].kind, EventKind::StepComplete { instance: 0, token: 9 });
+        assert_eq!(popped[2].kind, EventKind::StepComplete { instance: 2, token: 1 });
+    }
+
+    #[test]
+    fn interleaved_push_pop_stays_ordered() {
+        let mut q = EventQueue::new();
+        q.push(2.0, EventKind::ControllerTick);
+        q.push(1.0, EventKind::ControllerTick);
+        assert_eq!(q.pop().unwrap().time, 1.0);
+        q.push(0.5, EventKind::Wake { instance: 3 });
+        q.push(3.0, EventKind::ControllerTick);
+        assert_eq!(q.pop().unwrap().time, 0.5);
+        assert_eq!(q.peek_time(), Some(2.0));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn determinism_across_identical_push_sequences() {
+        let build = || {
+            let mut q = EventQueue::new();
+            for i in 0..50 {
+                let t = (i * 7 % 13) as f64 * 0.5;
+                q.push(t, EventKind::StepComplete { instance: i % 4, token: i as u64 });
+                q.push(t, EventKind::Wake { instance: (i + 1) % 4 });
+            }
+            q
+        };
+        let a: Vec<(f64, EventKind)> =
+            drain(&mut build()).iter().map(|e| (e.time, e.kind)).collect();
+        let b: Vec<(f64, EventKind)> =
+            drain(&mut build()).iter().map(|e| (e.time, e.kind)).collect();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,718 @@
+//! Per-instance serving state machine.
+//!
+//! One [`Instance`] owns everything a single simulated model deployment
+//! needs to serve: its [`Placement`], [`Scheduler`], KV-cache allocator,
+//! monitor, and OOM/penalty bookkeeping. The event kernel
+//! ([`crate::sim::Simulation`]) only decides *when* an instance runs; every
+//! *what* — starting prefill/decode steps, admitting KV, handling OOM per
+//! policy, executing scale-up/scale-down rounds — happens here, against the
+//! shared [`Cluster`] ledgers. That separation is what lets instances
+//! advance at their own step cadence (heterogeneous layer counts, different
+//! batch sizes) instead of a global tick.
+
+use crate::autoscale::{scale_down, scale_up, Pressure, ScaleDownConfig, ScaleUpConfig};
+use crate::cluster::Cluster;
+use crate::kvcache::{ContiguousKvCache, KvCache, KvStats, PagedKvCache};
+use crate::model::cost::{CostModel, Shape};
+use crate::model::{ModuleId, ModuleKind};
+use crate::monitor::{Completion, Monitor};
+use crate::ops::{ModuleOps, REPLICA_COMM_SETUP_S};
+use crate::placement::Placement;
+use crate::scheduler::{split_batch, Scheduler, Step};
+
+use super::metrics::ScaleStats;
+use super::{OomBehavior, SimConfig, SimPolicy, DECODE_BUSY_FRACTION, SYNC_PAUSE_S};
+
+/// Read-only per-event context the kernel hands to instance methods.
+pub(crate) struct StepCtx<'a> {
+    pub cfg: &'a SimConfig,
+    pub cost: &'a CostModel,
+    pub now: f64,
+}
+
+/// What a step-start attempt did.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) enum StepStart {
+    /// Nothing runnable (empty, or a static batch still filling).
+    Idle,
+    /// A step is in flight until `until`; completion carries `token`.
+    Busy { until: f64, token: u64 },
+    /// A KV admission OOM was handled per policy; the kernel should retry
+    /// after a backoff instead of spinning at the same timestamp.
+    OomStall,
+}
+
+/// One simulated model instance.
+pub(crate) struct Instance {
+    pub id: usize,
+    pub placement: Placement,
+    pub scheduler: Scheduler,
+    pub kv: Box<dyn KvCache>,
+    pub policy: SimPolicy,
+    /// Current max batch (phase-3 scale-down shrinks it).
+    pub batch_size: usize,
+    /// Wall time when the in-flight step completes (None = idle).
+    pub busy_until: Option<f64>,
+    /// Monotone step counter; stale `StepComplete` events are detected by
+    /// comparing against the token they carry.
+    pub step_token: u64,
+    /// Post-scaling replica-communication setup to charge to the next step.
+    pub pending_setup_s: f64,
+    /// Steps since the last OOM (drives batch-size recovery after backoff).
+    pub clean_steps: u64,
+    pub monitor: Monitor,
+    /// Peak KV accounting observed (Fig. 9 reads peaks, not end-state).
+    pub kv_peak: KvStats,
+    /// Earliest wake-up already scheduled for this instance (dedup).
+    pub scheduled_wake: Option<f64>,
+    /// Request metadata by id (arrival, prompt, output) for completions.
+    pub requests: std::collections::BTreeMap<u64, (f64, usize, usize)>,
+    /// Per-request accumulated penalty (OOM reloads).
+    pub penalties: std::collections::BTreeMap<u64, f64>,
+    /// Unique requests ever caught in an OOM (Fig. 11a numerator).
+    pub oom_victims: std::collections::BTreeSet<u64>,
+}
+
+impl Instance {
+    /// Build an instance and deploy its weights onto the cluster ledgers.
+    pub fn deploy(
+        id: usize,
+        placement: Placement,
+        policy: SimPolicy,
+        cfg: &SimConfig,
+        cost: &CostModel,
+        cluster: &mut Cluster,
+    ) -> Instance {
+        let ops = ModuleOps::new(cost, cfg.dtype_bytes, &format!("inst{id}"));
+        ops.deploy_instance(cluster, &placement)
+            .expect("instance deployment OOM");
+        let bytes_per_token =
+            cost.kv_cache_bytes(1, 1, cfg.dtype_bytes) * cfg.model.n_layers as f64;
+        let kv: Box<dyn KvCache> = if policy.paged_kv {
+            Box::new(PagedKvCache::new(f64::INFINITY, bytes_per_token, 16))
+        } else {
+            Box::new(ContiguousKvCache::new(
+                f64::INFINITY,
+                bytes_per_token,
+                cfg.max_seq_len,
+            ))
+        };
+        Instance {
+            id,
+            placement,
+            scheduler: Scheduler::new(policy.scheduler),
+            kv,
+            policy,
+            batch_size: policy.scheduler.max_batch,
+            busy_until: None,
+            step_token: 0,
+            pending_setup_s: 0.0,
+            clean_steps: 0,
+            monitor: Monitor::new(cfg.slo_latency_s),
+            kv_peak: Default::default(),
+            scheduled_wake: None,
+            requests: Default::default(),
+            penalties: Default::default(),
+            oom_victims: Default::default(),
+        }
+    }
+
+    pub fn pending_ids(&self) -> Vec<u64> {
+        self.scheduler.pending_ids()
+    }
+
+    /// Has runnable or waiting work (used by the kernel's readiness sweep).
+    pub fn has_work(&self) -> bool {
+        !self.scheduler.is_idle()
+    }
+
+    /// All devices hosting any copy of any of this instance's layers.
+    pub fn device_set(&self) -> std::collections::BTreeSet<usize> {
+        (0..self.placement.n_layers)
+            .flat_map(|l| self.placement.layer_devices(l))
+            .collect()
+    }
+
+    /// Primary devices per layer — the §8 contention footprint.
+    pub fn primary_devices(&self) -> Vec<usize> {
+        (0..self.placement.n_layers)
+            .map(|l| self.placement.primary_device(l))
+            .collect()
+    }
+
+    // ---- step latency (the roofline substitute for real execution) -------
+
+    /// Per-layer prefill time across replicas: batch split (Fig. 4), max
+    /// over replicas, plus scatter/gather per dataflow transition.
+    pub fn prefill_step_time(
+        &self,
+        ctx: &StepCtx<'_>,
+        cluster: &Cluster,
+        batch: usize,
+        seq: usize,
+    ) -> f64 {
+        let d = ctx.cfg.model.d_model as f64;
+        let dt = ctx.cfg.dtype_bytes as f64;
+        let mut t = 0.0;
+        for l in 0..self.placement.n_layers {
+            let devs = self.placement.layer_devices(l);
+            let shares = split_batch(batch, devs.len());
+            let mut worst: f64 = 0.0;
+            for (dev, share) in devs.iter().zip(&shares) {
+                if *share == 0 {
+                    continue;
+                }
+                let sh = Shape { batch: *share, seq, dtype_bytes: ctx.cfg.dtype_bytes };
+                let flops = ctx.cost.flops(ModuleKind::DecoderLayer, sh);
+                let spec = &cluster.device(*dev).spec;
+                worst = worst.max(flops / spec.effective_flops());
+            }
+            t += worst;
+        }
+        // communication at non-consecutive boundaries (§3.2)
+        let transitions = self.placement.transition_count() as f64;
+        let bytes = batch as f64 * seq as f64 * d * dt;
+        let bw = cluster.device(0).spec.link_bw;
+        t += transitions * (bytes / bw + 20e-6);
+        // embed + lm head (primary device)
+        let sh = Shape { batch, seq, dtype_bytes: ctx.cfg.dtype_bytes };
+        let spec = &cluster.device(self.placement.primary_device(0)).spec;
+        t += ctx.cost.flops(ModuleKind::LmHead, sh) / spec.effective_flops();
+        t
+    }
+
+    /// Decode-iteration time: roofline max(compute, HBM bytes) per layer.
+    pub fn decode_step_time(
+        &self,
+        ctx: &StepCtx<'_>,
+        cluster: &Cluster,
+        batch: usize,
+        mean_ctx: usize,
+    ) -> f64 {
+        let d = ctx.cfg.model.d_model as f64;
+        let dt = ctx.cfg.dtype_bytes as f64;
+        let mut t = 0.0;
+        for l in 0..self.placement.n_layers {
+            let devs = self.placement.layer_devices(l);
+            let shares = split_batch(batch, devs.len());
+            let mut worst: f64 = 0.0;
+            for (dev, share) in devs.iter().zip(&shares) {
+                if *share == 0 {
+                    continue;
+                }
+                let spec = &cluster.device(*dev).spec;
+                let flops =
+                    ctx.cost.decode_flops(ModuleKind::DecoderLayer, *share, mean_ctx);
+                let bytes =
+                    ctx.cost.decode_bytes_read(*share, mean_ctx, ctx.cfg.dtype_bytes);
+                worst = worst
+                    .max(flops / spec.effective_flops())
+                    .max(bytes / spec.hbm_bw);
+            }
+            t += worst;
+        }
+        let transitions = self.placement.transition_count() as f64;
+        let bw = cluster.device(0).spec.link_bw;
+        t += transitions * ((batch as f64 * d * dt) / bw + 20e-6);
+        let spec = &cluster.device(self.placement.primary_device(0)).spec;
+        t += ctx.cost.decode_flops(ModuleKind::LmHead, batch, mean_ctx)
+            / spec.effective_flops();
+        t
+    }
+
+    /// Spread this step's busy time across the instance's device set.
+    fn charge_busy(&self, cluster: &mut Cluster, seconds: f64) {
+        let devices = self.device_set();
+        let n = devices.len().max(1) as f64;
+        for d in devices {
+            cluster.device_mut(d).add_busy(seconds / n);
+        }
+    }
+
+    // ---- KV accounting ----------------------------------------------------
+
+    /// Mirror the instance's KV reservation into device ledgers; on ledger
+    /// OOM the caller must invoke [`Instance::handle_oom`].
+    pub fn sync_kv(&mut self, cluster: &mut Cluster) -> Result<(), ()> {
+        let stats = self.kv.stats();
+        if stats.reserved_bytes > self.kv_peak.reserved_bytes {
+            self.kv_peak = stats;
+        }
+        let kv_devices: Vec<usize> = (0..self.placement.n_layers)
+            .map(|l| {
+                self.placement
+                    .module_device(ModuleId::layer(ModuleKind::KvCache, l))
+            })
+            .collect();
+        let per_layer = stats.reserved_bytes / kv_devices.len() as f64;
+        let mut per_device: std::collections::BTreeMap<usize, f64> = Default::default();
+        for d in kv_devices {
+            *per_device.entry(d).or_insert(0.0) += per_layer;
+        }
+        let tag = format!("inst{}/kv", self.id);
+        for (d, bytes) in per_device {
+            if cluster.device_mut(d).resize(&tag, bytes).is_err() {
+                self.monitor.record_oom();
+                return Err(());
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply the policy's OOM behaviour (§2.3 / Fig. 3 / Algorithm 2).
+    pub fn handle_oom(
+        &mut self,
+        ctx: &StepCtx<'_>,
+        cluster: &mut Cluster,
+        scale: &mut ScaleStats,
+    ) {
+        match self.policy.oom {
+            OomBehavior::FailBatch => {
+                // Drop the running batch's KV; requests retry after the
+                // model-reload penalty (§2.3: 8–25 s).
+                let ids: Vec<u64> = self
+                    .scheduler
+                    .running_view()
+                    .iter()
+                    .map(|(id, _, _)| *id)
+                    .collect();
+                let penalty = ctx.cfg.oom_penalty_s;
+                for id in &ids {
+                    self.kv.remove_sequence(*id);
+                    *self.penalties.entry(*id).or_insert(0.0) += penalty;
+                    // requeue as fresh arrival (retry)
+                    if let Some(&(_, p, o)) = self.requests.get(id) {
+                        self.scheduler.submit(crate::workload::Request {
+                            id: *id,
+                            arrival_s: ctx.now,
+                            prompt_tokens: p,
+                            output_tokens: o,
+                        });
+                    }
+                }
+                // The scheduler has no cancel API: rebuild it, moving every
+                // tracked id (previously pending + the resubmitted batch)
+                // into the fresh pending queue.
+                let cfg = self.scheduler.cfg;
+                let mut fresh = Scheduler::new(cfg);
+                for id in self.pending_ids() {
+                    if let Some(&(_, p, o)) = self.requests.get(&id) {
+                        fresh.submit(crate::workload::Request {
+                            id,
+                            arrival_s: ctx.now,
+                            prompt_tokens: p,
+                            output_tokens: o,
+                        });
+                    }
+                }
+                self.scheduler = fresh;
+                self.busy_until = None;
+                // After a reload, the static engine restarts with a halved
+                // batch (§2.3); every request in the failed batch counts
+                // toward the Fig. 11a OOM occurrence rate.
+                for id in &ids {
+                    self.oom_victims.insert(*id);
+                }
+                self.batch_size = (self.batch_size / 2).max(1);
+                self.clean_steps = 0;
+                let _ = self.sync_kv(cluster);
+            }
+            OomBehavior::Preempt => {
+                // Drop the newest running sequence's cache and requeue it.
+                // If it is the only running sequence, re-queuing would spin
+                // (nothing can ever fit) — fail it instead, with the reload
+                // penalty, so the system keeps making progress.
+                let view = self.scheduler.running_view();
+                let victim = view.last().map(|(id, _, _)| *id);
+                let only_one = view.len() <= 1;
+                if let Some(id) = victim {
+                    self.oom_victims.insert(id);
+                    self.kv.remove_sequence(id);
+                    self.scheduler.preempt(id);
+                    if let Some(&(_, p, o)) = self.requests.get(&id) {
+                        if only_one {
+                            *self.penalties.entry(id).or_insert(0.0) +=
+                                ctx.cfg.oom_penalty_s;
+                        }
+                        self.scheduler.submit(crate::workload::Request {
+                            id,
+                            arrival_s: ctx.now,
+                            prompt_tokens: p,
+                            output_tokens: if only_one { 1 } else { o },
+                        });
+                    }
+                }
+                let _ = self.sync_kv(cluster);
+            }
+            OomBehavior::ScaleDown => {
+                self.run_scale_down(ctx, cluster, Pressure::Memory, scale);
+                let _ = self.sync_kv(cluster);
+            }
+        }
+    }
+
+    // ---- auto-scaling -----------------------------------------------------
+
+    /// One Algorithm 1 round for this instance (replica harvesting).
+    pub fn run_scale_up(
+        &mut self,
+        ctx: &StepCtx<'_>,
+        cluster: &mut Cluster,
+        gamma: f64,
+        scale: &mut ScaleStats,
+    ) {
+        let held: usize = (0..self.placement.n_layers)
+            .map(|l| self.placement.degree(l) - 1)
+            .sum();
+        let remaining = ctx.cfg.replica_budget.saturating_sub(held);
+        if remaining == 0 {
+            return;
+        }
+        let ops = ModuleOps::new(ctx.cost, ctx.cfg.dtype_bytes, &format!("inst{}", self.id));
+        let cfg = ScaleUpConfig { gamma, min_vacancy: 0.45, max_ops_per_round: remaining };
+        let out = scale_up(&ops, cluster, &mut self.placement, &cfg);
+        if !out.replicated.is_empty() {
+            scale.scale_ups += 1;
+            // Replication copies weights *concurrently* with serving (§8:
+            // <3% throughput fluctuation on neighbours); the serving path
+            // pays only a short synchronization pause plus the §6.5
+            // 39.1 ms replica communication setup. The full op transfer
+            // time is tracked separately for cost reporting (Table 2).
+            self.pending_setup_s += SYNC_PAUSE_S + REPLICA_COMM_SETUP_S;
+            scale.op_time_s += out.cost.time_s;
+        }
+    }
+
+    /// One Algorithm 2 round for this instance (graduated reduction).
+    pub fn run_scale_down(
+        &mut self,
+        ctx: &StepCtx<'_>,
+        cluster: &mut Cluster,
+        pressure: Pressure,
+        scale: &mut ScaleStats,
+    ) {
+        // the most loaded device hosting this instance
+        let hot = (0..self.placement.n_layers)
+            .map(|l| self.placement.primary_device(l))
+            .max_by(|&a, &b| {
+                cluster
+                    .device(a)
+                    .mem_frac()
+                    .partial_cmp(&cluster.device(b).mem_frac())
+                    .unwrap()
+            })
+            .unwrap_or(0);
+        let kv_per_layer =
+            self.kv.stats().reserved_bytes / self.placement.n_layers as f64;
+        let batch = self.batch_size;
+        let ops = ModuleOps::new(ctx.cost, ctx.cfg.dtype_bytes, &format!("inst{}", self.id));
+        let slo = ctx.cfg.slo_latency_s;
+        let out = scale_down(
+            &ops,
+            cluster,
+            &mut self.placement,
+            hot,
+            pressure,
+            batch,
+            &ScaleDownConfig::default(),
+            |_l| kv_per_layer,
+            |cl, _pl, _bs| cl.device(hot).mem_frac() > 0.92 && slo > 0.0,
+        );
+        if !out.actions.is_empty() {
+            scale.scale_downs += 1;
+            // Migration is a corrective op on the critical path: the hot
+            // device pauses for the transfer (Table 2: 0.25–0.8 s).
+            self.pending_setup_s += out.cost.time_s.min(1.0);
+            self.batch_size = out.batch_size;
+            scale.op_time_s += out.cost.time_s;
+        }
+    }
+
+    // ---- the state machine ------------------------------------------------
+
+    /// Try to start the next step. `contention` is the overlap-weighted
+    /// neighbour slowdown the kernel computed from the fleet's busy sets.
+    pub fn start_step(
+        &mut self,
+        ctx: &StepCtx<'_>,
+        cluster: &mut Cluster,
+        contention: f64,
+        scale: &mut ScaleStats,
+    ) -> StepStart {
+        // Batch capacity = (possibly scaled-down) base batch × the mean
+        // layer degree: replica sets add data-parallel lanes (Fig. 4).
+        // Recovery: a reloaded static engine creeps back toward its
+        // configured batch (operators restart with the original config;
+        // the OOM cycle then recurs under sustained load — the Fig. 11a
+        // occurrence-rate mechanism). clean_steps counts start polls, not
+        // executed steps — the recovery cadence the lockstep loop had.
+        self.clean_steps += 1;
+        if self.clean_steps % 40 == 0 && self.batch_size < self.policy.scheduler.max_batch
+        {
+            self.batch_size = (self.batch_size * 2).min(self.policy.scheduler.max_batch);
+        }
+        let mean_degree = (0..self.placement.n_layers)
+            .map(|l| self.placement.degree(l) as f64)
+            .sum::<f64>()
+            / self.placement.n_layers.max(1) as f64;
+        let cap = ((self.batch_size as f64) * mean_degree) as usize;
+        let mut cfg = self.scheduler.cfg;
+        cfg.max_batch = cap;
+        self.scheduler.cfg = cfg;
+
+        match self.scheduler.next_step(ctx.now) {
+            Step::Idle => StepStart::Idle,
+            Step::Prefill { request_ids } => {
+                // admit KV for the new sequences
+                let mut ok = true;
+                for id in &request_ids {
+                    // idempotent: a previous partially-OOMed prefill may
+                    // have admitted this sequence's cache already
+                    if self.kv.tokens_of(*id).is_some() {
+                        continue;
+                    }
+                    let prompt = self.requests.get(id).map(|r| r.1).unwrap_or(8);
+                    if self.kv.add_sequence(*id, prompt).is_err() {
+                        ok = false;
+                    }
+                }
+                if ok {
+                    ok = self.sync_kv(cluster).is_ok();
+                }
+                if !ok {
+                    self.handle_oom(ctx, cluster, scale);
+                    return StepStart::OomStall;
+                }
+                let batch = request_ids.len();
+                let max_seq = request_ids
+                    .iter()
+                    .filter_map(|id| self.requests.get(id).map(|r| r.1))
+                    .max()
+                    .unwrap_or(8);
+                let mut dt = self.prefill_step_time(ctx, cluster, batch, max_seq);
+                dt *= contention;
+                dt += std::mem::take(&mut self.pending_setup_s);
+                self.charge_busy(cluster, dt); // prefill is compute-bound: full busy
+                self.scheduler.on_prefilled(&request_ids);
+                self.begin_busy(ctx.now + dt)
+            }
+            Step::Decode { request_ids } => {
+                // grow KV by one token per sequence
+                let mut ok = true;
+                for id in &request_ids {
+                    if self.kv.tokens_of(*id).is_some() && self.kv.append_token(*id).is_err()
+                    {
+                        ok = false;
+                    }
+                }
+                if ok {
+                    ok = self.sync_kv(cluster).is_ok();
+                }
+                if !ok {
+                    self.handle_oom(ctx, cluster, scale);
+                    return StepStart::OomStall;
+                }
+                let batch = request_ids.len();
+                let mean_ctx = {
+                    let ctxs: Vec<usize> = request_ids
+                        .iter()
+                        .filter_map(|id| self.kv.tokens_of(*id))
+                        .collect();
+                    (ctxs.iter().sum::<usize>() / ctxs.len().max(1)).max(1)
+                };
+                let mut dt = self.decode_step_time(ctx, cluster, batch, mean_ctx);
+                dt *= contention;
+                dt += std::mem::take(&mut self.pending_setup_s);
+                // Decode is HBM-bandwidth-bound: the SMs are only partially
+                // occupied during the step (what NVML-style compute
+                // utilization reports — the Fig. 2 signal).
+                self.charge_busy(cluster, dt * DECODE_BUSY_FRACTION);
+                self.scheduler.on_decoded(&request_ids);
+                self.begin_busy(ctx.now + dt)
+            }
+        }
+    }
+
+    fn begin_busy(&mut self, until: f64) -> StepStart {
+        self.step_token += 1;
+        self.busy_until = Some(until);
+        StepStart::Busy { until, token: self.step_token }
+    }
+
+    /// Record completions for sequences the scheduler reaped.
+    pub fn finish_completions(&mut self, now: f64, cluster: &mut Cluster) {
+        let tracked: std::collections::BTreeSet<u64> = self
+            .scheduler
+            .running_view()
+            .iter()
+            .map(|(id, _, _)| *id)
+            .chain(self.pending_ids())
+            .collect();
+        let finished: Vec<u64> = self
+            .requests
+            .keys()
+            .copied()
+            .filter(|id| !tracked.contains(id) && self.kv.tokens_of(*id).is_some())
+            .collect();
+        for id in finished {
+            self.kv.remove_sequence(id);
+            let (arrival, prompt, output) = self.requests[&id];
+            let penalty = self.penalties.get(&id).copied().unwrap_or(0.0);
+            self.monitor.record(Completion {
+                request_id: id,
+                arrival_s: arrival,
+                finish_s: now + penalty,
+                prompt_tokens: prompt,
+                output_tokens: output,
+            });
+        }
+        let _ = self.sync_kv(cluster);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines;
+    use crate::cluster::GIB;
+
+    fn setup(policy: SimPolicy) -> (SimConfig, CostModel, Cluster, Instance) {
+        let cfg = SimConfig::paper_13b();
+        let cost = CostModel::new(cfg.model.clone());
+        let mut cluster = Cluster::paper_testbed();
+        let placement = Placement::single_device(cfg.model.n_layers, 0);
+        let inst = Instance::deploy(0, placement, policy, &cfg, &cost, &mut cluster);
+        (cfg, cost, cluster, inst)
+    }
+
+    fn submit(inst: &mut Instance, id: u64, at: f64, prompt: usize, out: usize) {
+        inst.requests.insert(id, (at, prompt, out));
+        inst.scheduler.submit(crate::workload::Request {
+            id,
+            arrival_s: at,
+            prompt_tokens: prompt,
+            output_tokens: out,
+        });
+    }
+
+    #[test]
+    fn deploy_allocates_weights() {
+        let (_, _, cluster, inst) = setup(baselines::vllm_like(8));
+        assert!(cluster.device(0).used_bytes() > 20.0 * GIB);
+        assert!(!inst.has_work());
+        assert_eq!(inst.device_set().into_iter().collect::<Vec<_>>(), vec![0]);
+    }
+
+    #[test]
+    fn prefill_then_decode_advances_state() {
+        let (cfg, cost, mut cluster, mut inst) = setup(baselines::vllm_like(8));
+        let mut scale = ScaleStats::default();
+        submit(&mut inst, 0, 0.0, 32, 4);
+        let ctx = StepCtx { cfg: &cfg, cost: &cost, now: 0.0 };
+        let s1 = inst.start_step(&ctx, &mut cluster, 1.0, &mut scale);
+        let StepStart::Busy { until: t1, token: k1 } = s1 else {
+            panic!("expected busy, got {s1:?}")
+        };
+        assert!(t1 > 0.0);
+        assert_eq!(inst.kv.tokens_of(0), Some(32));
+        inst.busy_until = None;
+        inst.finish_completions(t1, &mut cluster);
+        let ctx = StepCtx { cfg: &cfg, cost: &cost, now: t1 };
+        let s2 = inst.start_step(&ctx, &mut cluster, 1.0, &mut scale);
+        let StepStart::Busy { until: t2, token: k2 } = s2 else {
+            panic!("expected busy, got {s2:?}")
+        };
+        assert!(t2 > t1);
+        assert_eq!(k2, k1 + 1);
+        assert_eq!(inst.kv.tokens_of(0), Some(33));
+    }
+
+    #[test]
+    fn sequences_complete_and_release_kv() {
+        let (cfg, cost, mut cluster, mut inst) = setup(baselines::vllm_like(8));
+        let mut scale = ScaleStats::default();
+        submit(&mut inst, 0, 0.0, 16, 1); // finishes at prefill
+        let ctx = StepCtx { cfg: &cfg, cost: &cost, now: 0.0 };
+        let StepStart::Busy { until, .. } =
+            inst.start_step(&ctx, &mut cluster, 1.0, &mut scale)
+        else {
+            panic!("expected busy")
+        };
+        inst.busy_until = None;
+        inst.finish_completions(until, &mut cluster);
+        assert_eq!(inst.monitor.completions().len(), 1);
+        assert_eq!(inst.kv.tokens_of(0), None);
+        assert_eq!(inst.kv.stats().sequences, 0);
+        assert!(!inst.has_work());
+    }
+
+    #[test]
+    fn failbatch_oom_halves_batch_and_requeues() {
+        let (cfg, cost, mut cluster, mut inst) = setup(baselines::hft(16));
+        let mut scale = ScaleStats::default();
+        // Fill the device so the KV ledger mirror cannot grow.
+        let free = cluster.device(0).free_bytes();
+        cluster.device_mut(0).alloc("hog", free - 1.0).unwrap();
+        for i in 0..16 {
+            submit(&mut inst, i, 0.0, 64, 4);
+        }
+        let ctx = StepCtx { cfg: &cfg, cost: &cost, now: 1.0 };
+        let s = inst.start_step(&ctx, &mut cluster, 1.0, &mut scale);
+        assert_eq!(s, StepStart::OomStall);
+        assert_eq!(inst.batch_size, 8, "batch halves after reload");
+        assert_eq!(inst.scheduler.running_len(), 0, "scheduler rebuilt");
+        assert_eq!(inst.scheduler.pending_len(), 16, "no request lost");
+        assert_eq!(inst.oom_victims.len(), 16);
+        assert!(inst.monitor.total_oom() > 0);
+    }
+
+    #[test]
+    fn contention_inflates_step_time() {
+        let (cfg, cost, cluster, inst) = setup(baselines::vllm_like(8));
+        let ctx = StepCtx { cfg: &cfg, cost: &cost, now: 0.0 };
+        let base = inst.prefill_step_time(&ctx, &cluster, 8, 128);
+        assert!(base > 0.0);
+        // factor applied by start_step multiplies dt — verified indirectly
+        // through the decode roofline being monotone in batch/context
+        let d1 = inst.decode_step_time(&ctx, &cluster, 1, 64);
+        let d2 = inst.decode_step_time(&ctx, &cluster, 16, 256);
+        assert!(d2 > d1);
+    }
+
+    #[test]
+    fn scale_up_adds_replicas_and_setup_pause() {
+        let (cfg, cost, mut cluster, mut inst) = setup(baselines::cocoserve(16));
+        let mut scale = ScaleStats::default();
+        let ctx = StepCtx { cfg: &cfg, cost: &cost, now: 0.0 };
+        inst.run_scale_up(&ctx, &mut cluster, 0.05, &mut scale);
+        assert_eq!(scale.scale_ups, 1);
+        assert!(inst.pending_setup_s > 0.0);
+        assert!(scale.op_time_s > 0.0);
+        let max_deg = (0..inst.placement.n_layers)
+            .map(|l| inst.placement.degree(l))
+            .max()
+            .unwrap();
+        assert!(max_deg > 1, "some layer gained a replica");
+        inst.placement.validate(cluster.n()).unwrap();
+    }
+
+    #[test]
+    fn scale_down_under_memory_pressure_acts() {
+        let (cfg, cost, mut cluster, mut inst) = setup(baselines::cocoserve(16));
+        let mut scale = ScaleStats::default();
+        // push device 0 above the violation line
+        let free = cluster.device(0).free_bytes();
+        cluster
+            .device_mut(0)
+            .alloc("pressure", free - 0.5 * GIB)
+            .unwrap();
+        let ctx = StepCtx { cfg: &cfg, cost: &cost, now: 0.0 };
+        inst.run_scale_down(&ctx, &mut cluster, Pressure::Memory, &mut scale);
+        assert_eq!(scale.scale_downs, 1);
+        // with nothing evictable the graduated response ends in phase 3:
+        // the batch walks down to the floor (performance traded for memory)
+        assert_eq!(inst.batch_size, 1, "phase-3 batch reduction reached the floor");
+        assert!(inst.pending_setup_s > 0.0, "corrective pause charged");
+        inst.placement.validate(cluster.n()).unwrap();
+    }
+}

@@ -1,0 +1,201 @@
+//! Latency / throughput / utilization accounting for simulation runs.
+//!
+//! [`SimReport`] is the single output artifact of [`crate::sim::Simulation`]:
+//! per-instance monitors, device utilization, OOM and scaling counters, and
+//! memory peaks. [`SimReport::to_json`] renders it as a **deterministic**
+//! metrics document (BTreeMap key order, shortest-roundtrip float printing)
+//! — two runs with the same seed and trace produce byte-identical JSON,
+//! which the golden-replay test and the fig10/fig11 benches assert.
+
+use crate::monitor::Monitor;
+use crate::placement::Placement;
+use crate::util::json::{self, Json};
+
+/// Counters for executed scaling operations (Algorithm 1 / 2 rounds).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ScaleStats {
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    /// Total transfer time consumed by scaling operations (background).
+    pub op_time_s: f64,
+}
+
+/// Aggregated outcome of a simulation run.
+#[derive(Debug)]
+pub struct SimReport {
+    pub duration_s: f64,
+    pub monitors: Vec<Monitor>,
+    /// (device, compute utilization, mem frac at end).
+    pub device_util: Vec<(usize, f64, f64)>,
+    /// Per-device peak resident bytes over the run.
+    pub device_peak_bytes: Vec<f64>,
+    pub total_oom_events: u64,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    /// Unique requests ever caught in an OOM failure.
+    pub oom_victims: usize,
+    /// Total transfer time consumed by scaling operations (background).
+    pub scale_op_time_s: f64,
+    /// Total bytes resident at peak (cost/memory comparisons, Fig. 10).
+    pub peak_mem_bytes: f64,
+    /// Peak KV accounting per instance over the run (Fig. 9).
+    pub kv_stats: Vec<crate::kvcache::KvStats>,
+    /// Per-instance final placements (inspection/tests).
+    pub placements: Vec<Placement>,
+    /// Per-instance final batch sizes.
+    pub batch_sizes: Vec<usize>,
+}
+
+impl SimReport {
+    pub fn merged_latency(&self) -> crate::util::stats::Summary {
+        let mut s = crate::util::stats::Summary::new();
+        for m in &self.monitors {
+            for c in m.completions() {
+                s.add(c.e2e_latency());
+            }
+        }
+        s
+    }
+
+    pub fn total_throughput_tps(&self) -> f64 {
+        self.monitors
+            .iter()
+            .map(|m| m.throughput_tokens_per_s(self.duration_s))
+            .sum()
+    }
+
+    pub fn total_completed(&self) -> usize {
+        self.monitors.iter().map(|m| m.completions().len()).sum()
+    }
+
+    pub fn slo_attainment(&self) -> f64 {
+        let (ok, total) = self.monitors.iter().fold((0usize, 0usize), |(o, t), m| {
+            let good = m
+                .completions()
+                .iter()
+                .filter(|c| c.e2e_latency() <= m.slo_latency_s)
+                .count();
+            (o + good, t + m.completions().len())
+        });
+        if total == 0 {
+            1.0
+        } else {
+            ok as f64 / total as f64
+        }
+    }
+
+    /// Fraction of requests caught in an OOM failure (Fig. 11a).
+    pub fn oom_rate(&self) -> f64 {
+        let total = self.total_completed() as f64;
+        if total == 0.0 {
+            0.0
+        } else {
+            self.oom_victims as f64 / total
+        }
+    }
+
+    /// Deterministic metrics document: same seed + trace ⇒ byte-identical
+    /// output (the golden-replay contract).
+    pub fn to_json(&self) -> Json {
+        let instances = json::arr(self.monitors.iter().enumerate().map(|(i, m)| {
+            let o = vec![
+                ("monitor", m.metrics_json(self.duration_s)),
+                ("batch_size", json::num(self.batch_sizes[i] as f64)),
+                (
+                    "kv_peak_reserved_bytes",
+                    json::num(self.kv_stats[i].reserved_bytes),
+                ),
+                (
+                    "p_vector",
+                    json::arr(
+                        self.placements[i]
+                            .p_vector()
+                            .into_iter()
+                            .map(|p| json::num(p as f64)),
+                    ),
+                ),
+                (
+                    "transitions",
+                    json::num(self.placements[i].transition_count() as f64),
+                ),
+            ];
+            json::obj(o)
+        }));
+        let devices = json::arr(self.device_util.iter().map(|&(d, util, mem)| {
+            json::obj(vec![
+                ("device", json::num(d as f64)),
+                ("mem_frac", json::num(mem)),
+                ("peak_bytes", json::num(self.device_peak_bytes[d])),
+                ("util", json::num(util)),
+            ])
+        }));
+        json::obj(vec![
+            ("completed", json::num(self.total_completed() as f64)),
+            ("devices", devices),
+            ("duration_s", json::num(self.duration_s)),
+            ("instances", instances),
+            ("oom_events", json::num(self.total_oom_events as f64)),
+            ("oom_rate", json::num(self.oom_rate())),
+            ("oom_victims", json::num(self.oom_victims as f64)),
+            ("peak_mem_bytes", json::num(self.peak_mem_bytes)),
+            ("scale_downs", json::num(self.scale_downs as f64)),
+            ("scale_op_time_s", json::num(self.scale_op_time_s)),
+            ("scale_ups", json::num(self.scale_ups as f64)),
+            ("slo_attainment", json::num(self.slo_attainment())),
+            ("throughput_tps", json::num(self.total_throughput_tps())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::monitor::Completion;
+
+    fn tiny_report() -> SimReport {
+        let mut m = Monitor::new(10.0);
+        m.record(Completion {
+            request_id: 0,
+            arrival_s: 0.0,
+            finish_s: 2.5,
+            prompt_tokens: 10,
+            output_tokens: 20,
+        });
+        SimReport {
+            duration_s: 10.0,
+            monitors: vec![m],
+            device_util: vec![(0, 0.5, 0.25)],
+            device_peak_bytes: vec![1e9],
+            total_oom_events: 0,
+            scale_ups: 1,
+            scale_downs: 0,
+            oom_victims: 0,
+            scale_op_time_s: 0.3,
+            peak_mem_bytes: 2e9,
+            kv_stats: vec![Default::default()],
+            placements: vec![Placement::single_device(4, 0)],
+            batch_sizes: vec![8],
+        }
+    }
+
+    #[test]
+    fn json_is_deterministic_and_parses() {
+        let a = tiny_report().to_json().to_string();
+        let b = tiny_report().to_json().to_string();
+        assert_eq!(a, b);
+        let parsed = Json::parse(&a).unwrap();
+        assert_eq!(parsed.req("completed").as_usize(), Some(1));
+        assert_eq!(parsed.req("scale_ups").as_usize(), Some(1));
+        assert_eq!(parsed.req("instances").as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn summary_math() {
+        let r = tiny_report();
+        assert_eq!(r.total_completed(), 1);
+        assert!((r.merged_latency().mean() - 2.5).abs() < 1e-12);
+        assert!((r.total_throughput_tps() - 2.0).abs() < 1e-12);
+        assert_eq!(r.slo_attainment(), 1.0);
+        assert_eq!(r.oom_rate(), 0.0);
+    }
+}

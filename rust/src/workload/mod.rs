@@ -7,6 +7,12 @@
 //! tokens, long tail), output lengths geometric-ish capped at
 //! `max_new_tokens`. Traces are recordable/replayable so every bench is
 //! seed-deterministic.
+//!
+//! [`scenarios`] packages the arrival shapes + length distributions into a
+//! named scenario library (steady / diurnal / burst / ramp / two-tenant
+//! mix) that the multi-instance benches sweep.
+
+pub mod scenarios;
 
 use crate::util::rng::Rng;
 
@@ -87,6 +93,10 @@ pub enum Arrival {
     Ramp { from: f64, to: f64 },
     /// Baseline load plus a burst window at `burst` RPS (Fig. 11 stress).
     Burst { base: f64, burst: f64, start_s: f64, end_s: f64 },
+    /// Sinusoidal day/night cycle: rate = mean · (1 + amplitude·sin(2πt/T)).
+    /// `amplitude` ∈ [0, 1]; the MorphServe/FlexPipe-style slowly-varying
+    /// traffic the scale-up/down loop must track.
+    Diurnal { mean: f64, amplitude: f64, period_s: f64 },
 }
 
 impl Arrival {
@@ -98,6 +108,10 @@ impl Arrival {
             }
             Arrival::Burst { base, burst, start_s, end_s } => {
                 if (start_s..end_s).contains(&t) { burst } else { base }
+            }
+            Arrival::Diurnal { mean, amplitude, period_s } => {
+                let phase = std::f64::consts::TAU * t / period_s.max(1e-9);
+                (mean * (1.0 + amplitude.clamp(0.0, 1.0) * phase.sin())).max(0.0)
             }
         }
     }
@@ -158,6 +172,19 @@ impl Trace {
             .iter()
             .map(|r| r.prompt_tokens + r.output_tokens)
             .sum()
+    }
+
+    /// Merge traces into one, sorted by arrival time with ids reassigned
+    /// sequentially (ids must be unique within a trace — the serving path
+    /// keys per-request state on them). Ties break by input order, so the
+    /// merge is deterministic.
+    pub fn merge(parts: Vec<Trace>) -> Trace {
+        let mut all: Vec<Request> = parts.into_iter().flat_map(|t| t.requests).collect();
+        all.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+        for (i, r) in all.iter_mut().enumerate() {
+            r.id = i as u64;
+        }
+        Trace { requests: all }
     }
 }
 
@@ -260,6 +287,39 @@ mod tests {
             .filter(|r| (40.0..60.0).contains(&r.arrival_s))
             .count();
         assert!(in_burst as f64 > 0.6 * t.len() as f64);
+    }
+
+    #[test]
+    fn diurnal_rate_oscillates() {
+        let t = Trace::generate(
+            Arrival::Diurnal { mean: 20.0, amplitude: 0.8, period_s: 100.0 },
+            LengthDist::alpaca(),
+            100.0,
+            12,
+        );
+        // first half-period is the crest, second the trough
+        let crest = t.requests.iter().filter(|r| r.arrival_s < 50.0).count();
+        let trough = t.len() - crest;
+        assert!(crest > 2 * trough, "{crest} vs {trough}");
+        // overall mean stays near the configured mean rate
+        let rps = t.mean_rps(100.0);
+        assert!((rps - 20.0).abs() < 4.0, "rps {rps}");
+    }
+
+    #[test]
+    fn merge_sorts_and_reassigns_ids() {
+        let a = Trace::generate(Arrival::Poisson { rps: 5.0 },
+                                LengthDist::alpaca(), 10.0, 1);
+        let b = Trace::generate(Arrival::Poisson { rps: 5.0 },
+                                LengthDist::tiny(), 10.0, 2);
+        let n = a.len() + b.len();
+        let m = Trace::merge(vec![a, b]);
+        assert_eq!(m.len(), n);
+        for (i, w) in m.requests.windows(2).enumerate() {
+            assert!(w[1].arrival_s >= w[0].arrival_s, "unsorted at {i}");
+        }
+        let ids: Vec<u64> = m.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..n as u64).collect::<Vec<_>>());
     }
 
     #[test]

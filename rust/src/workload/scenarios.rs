@@ -1,0 +1,171 @@
+//! The scenario library: named traffic shapes for multi-instance experiments.
+//!
+//! The paper evaluates under steady Poisson load only (§6.1); the systems it
+//! is compared against are stressed by *dynamic* traffic — MorphServe swaps
+//! under bursty traces, FlexPipe refactors inflight under fragmented,
+//! fluctuating load. These constructors package the shapes the fig10/fig11
+//! benches sweep so every scaling experiment runs the same five scenarios:
+//!
+//! * **steady**  — constant-rate Poisson (the paper's baseline shape),
+//! * **diurnal** — sinusoidal day/night cycle (slow swing the scale-up
+//!   loop should harvest and the scale-down loop should survive),
+//! * **burst**   — a 3× spike window mid-run (flash crowd),
+//! * **ramp**    — monotone growth from 20% to 180% of the target rate
+//!   (capacity walk-up),
+//! * **two-tenant** — interactive chat (short prompts, short outputs)
+//!   mixed with batch summarization (long prompts, long outputs) at the
+//!   same aggregate rate — the fragmented length mix that stresses
+//!   continuous batching and KV accounting.
+//!
+//! All constructors are deterministic in `(rps, duration_s, seed)`.
+
+use super::{Arrival, LengthDist, Trace};
+
+impl LengthDist {
+    /// Interactive-chat tenant: short prompts, short replies.
+    pub fn chat() -> LengthDist {
+        LengthDist {
+            prompt_mu: 2.7, // median ≈ 15 tokens
+            prompt_sigma: 0.6,
+            max_prompt: 256,
+            mean_output: 32.0,
+            max_new_tokens: 128,
+        }
+    }
+
+    /// Batch-summarization tenant: long documents, long outputs.
+    pub fn summarize() -> LengthDist {
+        LengthDist {
+            prompt_mu: 4.6, // median ≈ 100 tokens, heavy tail
+            prompt_sigma: 0.6,
+            max_prompt: 512,
+            mean_output: 160.0,
+            max_new_tokens: 256,
+        }
+    }
+}
+
+impl Trace {
+    /// Steady Poisson arrivals at `rps` with Alpaca-like lengths.
+    pub fn steady(rps: f64, duration_s: f64, seed: u64) -> Trace {
+        Trace::generate(Arrival::Poisson { rps }, LengthDist::alpaca(), duration_s, seed)
+    }
+
+    /// Diurnal sine around `mean_rps` (amplitude 0.7, one full cycle over
+    /// the run, so the trace exercises both crest and trough).
+    pub fn diurnal(mean_rps: f64, duration_s: f64, seed: u64) -> Trace {
+        Trace::generate(
+            Arrival::Diurnal { mean: mean_rps, amplitude: 0.7, period_s: duration_s },
+            LengthDist::alpaca(),
+            duration_s,
+            seed,
+        )
+    }
+
+    /// Burst spike: base load at `rps` with a 3× window over the middle
+    /// fifth of the run.
+    pub fn burst(rps: f64, duration_s: f64, seed: u64) -> Trace {
+        Trace::generate(
+            Arrival::Burst {
+                base: rps,
+                burst: 3.0 * rps,
+                start_s: 0.4 * duration_s,
+                end_s: 0.6 * duration_s,
+            },
+            LengthDist::alpaca(),
+            duration_s,
+            seed,
+        )
+    }
+
+    /// Ramp from 20% to 180% of `rps` over the run (mean ≈ `rps`).
+    pub fn ramp(rps: f64, duration_s: f64, seed: u64) -> Trace {
+        Trace::generate(
+            Arrival::Ramp { from: 0.2 * rps, to: 1.8 * rps },
+            LengthDist::alpaca(),
+            duration_s,
+            seed,
+        )
+    }
+
+    /// Two-tenant mix at an aggregate `rps`: 70% interactive chat, 30%
+    /// batch summarization, each with its own length distribution. Seeds
+    /// are derived per-tenant so the mix is deterministic.
+    pub fn two_tenant(rps: f64, duration_s: f64, seed: u64) -> Trace {
+        let chat = Trace::generate(
+            Arrival::Poisson { rps: 0.7 * rps },
+            LengthDist::chat(),
+            duration_s,
+            seed ^ 0xC047,
+        );
+        let batch = Trace::generate(
+            Arrival::Poisson { rps: 0.3 * rps },
+            LengthDist::summarize(),
+            duration_s,
+            seed ^ 0xBA7C,
+        );
+        Trace::merge(vec![chat, batch])
+    }
+
+    /// The full scenario sweep at a common target rate — what the
+    /// fig10/fig11 benches iterate.
+    pub fn scenario_sweep(rps: f64, duration_s: f64, seed: u64) -> Vec<(&'static str, Trace)> {
+        vec![
+            ("steady", Trace::steady(rps, duration_s, seed)),
+            ("diurnal", Trace::diurnal(rps, duration_s, seed)),
+            ("burst", Trace::burst(rps, duration_s, seed)),
+            ("ramp", Trace::ramp(rps, duration_s, seed)),
+            ("two-tenant", Trace::two_tenant(rps, duration_s, seed)),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_covers_all_scenarios_deterministically() {
+        let a = Trace::scenario_sweep(15.0, 30.0, 9);
+        let b = Trace::scenario_sweep(15.0, 30.0, 9);
+        assert_eq!(a.len(), 5);
+        for ((name_a, ta), (name_b, tb)) in a.iter().zip(&b) {
+            assert_eq!(name_a, name_b);
+            assert_eq!(ta.requests, tb.requests, "{name_a} not deterministic");
+            assert!(!ta.is_empty(), "{name_a} generated no requests");
+        }
+        let names: Vec<_> = a.iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, ["steady", "diurnal", "burst", "ramp", "two-tenant"]);
+    }
+
+    #[test]
+    fn two_tenant_mixes_length_regimes() {
+        let t = Trace::two_tenant(20.0, 60.0, 3);
+        let long_prompts = t.requests.iter().filter(|r| r.prompt_tokens > 64).count();
+        let short_prompts = t.requests.iter().filter(|r| r.prompt_tokens <= 32).count();
+        assert!(long_prompts > t.len() / 10, "batch tenant missing: {long_prompts}");
+        assert!(short_prompts > t.len() / 3, "chat tenant missing: {short_prompts}");
+        // aggregate rate ≈ requested
+        let rps = t.mean_rps(60.0);
+        assert!((rps - 20.0).abs() < 3.0, "rps {rps}");
+    }
+
+    #[test]
+    fn burst_triples_mid_window_rate() {
+        let t = Trace::burst(10.0, 50.0, 4);
+        let during = t.requests.iter()
+            .filter(|r| (20.0..30.0).contains(&r.arrival_s))
+            .count() as f64 / 10.0;
+        let outside = t.requests.iter()
+            .filter(|r| !(20.0..30.0).contains(&r.arrival_s))
+            .count() as f64 / 40.0;
+        assert!(during > 2.0 * outside, "burst {during} vs base {outside}");
+    }
+
+    #[test]
+    fn ramp_mean_near_target() {
+        let t = Trace::ramp(20.0, 60.0, 5);
+        let rps = t.mean_rps(60.0);
+        assert!((rps - 20.0).abs() < 4.0, "rps {rps}");
+    }
+}

@@ -1,0 +1,173 @@
+//! Scheduler invariants, property-tested through the crate's public API
+//! with the `util::prop` harness.
+//!
+//! The contracts under test are the ones the paper's serving layer leans
+//! on:
+//!
+//! * **Fig. 4 batch splitting** — `split_batch` conserves the sequence
+//!   count and never lets two replica shares differ by more than one
+//!   (15 → 8/7 at degree 2).
+//! * **Admission bound** — under both [`BatchPolicy`] variants the
+//!   scheduler never runs more than `max_batch` sequences at once, and no
+//!   step ever names more than `max_batch` requests.
+//! * **Conservation** — every submitted request eventually completes:
+//!   nothing is lost, nothing completes twice.
+
+use cocoserve::scheduler::{split_batch, BatchPolicy, Scheduler, SchedulerConfig, Step};
+use cocoserve::util::{prop, rng::Rng};
+use cocoserve::workload::Request;
+
+#[test]
+fn prop_split_batch_conserves_and_balances() {
+    prop::check(
+        "split-batch-contract",
+        |r: &mut Rng| (r.below(512) as usize, 1 + r.below(16) as usize),
+        |&(batch, degree)| {
+            let shares = split_batch(batch, degree);
+            if shares.len() != degree {
+                return Err(format!("expected {degree} shares, got {}", shares.len()));
+            }
+            if shares.iter().sum::<usize>() != batch {
+                return Err(format!("sum {:?} != batch {batch}", shares));
+            }
+            let mx = *shares.iter().max().unwrap();
+            let mn = *shares.iter().min().unwrap();
+            if mx - mn > 1 {
+                return Err(format!("shares differ by more than 1: {shares:?}"));
+            }
+            // earlier replicas take the remainder (deterministic order)
+            let mut sorted = shares.clone();
+            sorted.sort_unstable_by(|a, b| b.cmp(a));
+            if sorted != shares {
+                return Err(format!("remainder not front-loaded: {shares:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn split_batch_matches_fig4_example() {
+    assert_eq!(split_batch(15, 2), vec![8, 7]);
+}
+
+/// Drive a scheduler to quiescence, checking the admission bound at every
+/// step; returns the number of completed requests.
+fn drive(cfg: SchedulerConfig, requests: &[(f64, usize)]) -> Result<u64, String> {
+    let mut s = Scheduler::new(cfg);
+    let mut pending = requests.to_vec();
+    pending.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut submitted = 0usize;
+    let mut now = 0.0f64;
+    let mut guard = 0;
+    loop {
+        // submit everything that has "arrived" by now
+        while submitted < pending.len() && pending[submitted].0 <= now {
+            let (at, out) = pending[submitted];
+            s.submit(Request {
+                id: submitted as u64,
+                arrival_s: at,
+                prompt_tokens: 8,
+                output_tokens: out,
+            });
+            submitted += 1;
+        }
+        if s.is_idle() && submitted >= pending.len() {
+            return Ok(s.completed());
+        }
+        guard += 1;
+        if guard > 100_000 {
+            return Err("scheduler failed to quiesce".into());
+        }
+        now += 0.05;
+        let step = s.next_step(now);
+        let ids = match &step {
+            Step::Prefill { request_ids } | Step::Decode { request_ids } => {
+                request_ids.clone()
+            }
+            Step::Idle => continue,
+        };
+        // ---- admission bound: the step and the running set never exceed
+        // max_batch, and every id the scheduler names is one we submitted
+        // and is actually running.
+        if ids.len() > s.cfg.max_batch {
+            return Err(format!(
+                "step of {} exceeds max_batch {}",
+                ids.len(),
+                s.cfg.max_batch
+            ));
+        }
+        if s.running_len() > s.cfg.max_batch {
+            return Err(format!(
+                "running {} exceeds max_batch {}",
+                s.running_len(),
+                s.cfg.max_batch
+            ));
+        }
+        if ids.iter().any(|id| *id >= submitted as u64) {
+            return Err("scheduler named an unsubmitted request id".into());
+        }
+        let running: Vec<u64> = s.running_view().iter().map(|(id, _, _)| *id).collect();
+        if ids.iter().any(|id| !running.contains(id)) {
+            return Err("step ids not in running set".into());
+        }
+        // ---- execute the step (the engine's side of the contract)
+        match step {
+            Step::Prefill { request_ids } => s.on_prefilled(&request_ids),
+            Step::Decode { request_ids } => s.on_decoded(&request_ids),
+            Step::Idle => unreachable!(),
+        }
+    }
+}
+
+#[test]
+fn prop_scheduler_admission_and_conservation() {
+    prop::check(
+        "scheduler-admission-conservation",
+        |r: &mut Rng| {
+            let n = 1 + r.below(40) as usize;
+            let max_b = 1 + r.below(10) as usize;
+            let continuous = r.f64() < 0.5;
+            let reqs: Vec<(f64, usize)> = (0..n)
+                .map(|_| (r.f64() * 3.0, 1 + r.below(6) as usize))
+                .collect();
+            (max_b, continuous, reqs)
+        },
+        |(max_b, continuous, reqs)| {
+            let cfg = if *continuous {
+                SchedulerConfig::continuous(*max_b)
+            } else {
+                SchedulerConfig::hft(*max_b)
+            };
+            let done = drive(cfg, reqs)?;
+            if done != reqs.len() as u64 {
+                return Err(format!("completed {done} != submitted {}", reqs.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn both_policies_respect_max_batch_exactly_at_the_boundary() {
+    for cfg in [SchedulerConfig::continuous(3), SchedulerConfig::hft(3)] {
+        let mut s = Scheduler::new(cfg);
+        for i in 0..7 {
+            s.submit(Request {
+                id: i,
+                arrival_s: 0.0,
+                prompt_tokens: 8,
+                output_tokens: 2,
+            });
+        }
+        match s.next_step(10.0) {
+            Step::Prefill { request_ids } => {
+                assert_eq!(request_ids.len(), 3, "{:?}", cfg.policy);
+            }
+            other => panic!("{:?}: {other:?}", cfg.policy),
+        }
+        assert_eq!(s.running_len(), 3);
+        assert_eq!(s.pending_len(), 4);
+        assert!(matches!(cfg.policy, BatchPolicy::Continuous | BatchPolicy::Static { .. }));
+    }
+}

@@ -1,9 +1,17 @@
+//! Step-latency measurements over the real artifacts. Artifact-gated like
+//! `integration.rs`: skips cleanly when `make artifacts` has not run (the
+//! PJRT closure and AOT artifacts are absent on CI and offline builds).
+
 use cocoserve::engine::TinyEngine;
-use cocoserve::runtime::default_artifacts_dir;
+use cocoserve::runtime::{artifacts_available, default_artifacts_dir};
 use std::time::Instant;
 
 #[test]
 fn measure_steps() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
     let eng = TinyEngine::open(&default_artifacts_dir(), "tiny-llama").unwrap();
     let prompts: Vec<Vec<i32>> = (0..8).map(|i| vec![i as i32 + 1; 12]).collect();
     let mut seqs: Vec<_> = prompts.iter().enumerate().map(|(i,p)| eng.new_sequence(i as u64, p)).collect();
