@@ -8,8 +8,9 @@
 
 use cocoserve::cluster::Cluster;
 use cocoserve::model::cost::CostModel;
-use cocoserve::ops::ModuleOps;
+use cocoserve::ops::{ModuleOps, PlanExecutor};
 use cocoserve::placement::Placement;
+use cocoserve::plan::{ModuleOp, ScalePlan};
 use cocoserve::scheduler::SchedulerConfig;
 use cocoserve::sim::{OomBehavior, SimConfig, SimPolicy, Simulation};
 use cocoserve::util::bench::{Report, Table};
@@ -28,7 +29,8 @@ fn policy() -> SimPolicy {
     }
 }
 
-/// Replicate `budget` layers onto devices 1–3 in the given layer order.
+/// Replicate `budget` layers onto devices 1–3 in the given layer order,
+/// as one executed plan.
 fn build(order: &[usize], budget: usize) -> Placement {
     let cfg = SimConfig::paper_13b();
     let mut p = Placement::single_device(cfg.model.n_layers, 0);
@@ -36,9 +38,11 @@ fn build(order: &[usize], budget: usize) -> Placement {
     let ops = ModuleOps::new(&cm, 2, "inst0");
     let mut scratch = Cluster::paper_testbed();
     ops.deploy_instance(&mut scratch, &p).unwrap();
+    let mut plan = ScalePlan::new();
     for (i, &l) in order.iter().take(budget).enumerate() {
-        let _ = ops.replicate_layer(&mut scratch, &mut p, l, 1 + i % 3);
+        plan.push(ModuleOp::Replicate { layer: l, dst: 1 + i % 3 });
     }
+    PlanExecutor::new(&ops).execute(&mut scratch, &mut p, &plan).unwrap();
     p
 }
 
@@ -73,10 +77,12 @@ fn main() {
             let ops = ModuleOps::new(&cm, 2, "inst0");
             let mut scratch = Cluster::paper_testbed();
             ops.deploy_instance(&mut scratch, &p_cont).unwrap();
+            let mut plan = ScalePlan::new();
             for (i, &l) in cont_order.iter().take(budget).enumerate() {
                 let dst = 1 + (i / per).min(2);
-                let _ = ops.replicate_layer(&mut scratch, &mut p_cont, l, dst);
+                plan.push(ModuleOp::Replicate { layer: l, dst });
             }
+            PlanExecutor::new(&ops).execute(&mut scratch, &mut p_cont, &plan).unwrap();
         }
 
         let mut rand_order: Vec<usize> = (0..40).collect();

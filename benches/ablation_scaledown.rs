@@ -11,7 +11,7 @@ use cocoserve::autoscale::{scale_down, Pressure, ScaleDownConfig};
 use cocoserve::cluster::{Cluster, GIB};
 use cocoserve::model::cost::CostModel;
 use cocoserve::model::{ModelConfig, ModuleId, ModuleKind};
-use cocoserve::ops::ModuleOps;
+use cocoserve::ops::{ModuleOps, PlanExecutor};
 use cocoserve::placement::Placement;
 use cocoserve::util::bench::{Report, Table};
 use cocoserve::util::json;
@@ -47,8 +47,8 @@ fn scenario(graduated: bool) -> Outcome {
     // phase 3 can clear it; full mode clears via memory relief.
     let out = scale_down(
         &ops,
-        &mut cl,
-        &mut pl,
+        &cl,
+        &pl,
         0,
         Pressure::Memory,
         32,
@@ -61,6 +61,10 @@ fn scenario(graduated: bool) -> Outcome {
             mem_over && bs > 8
         },
     );
+    // the planner proposed; the executor commits — with dry-run parity
+    let dry = out.plan.dry_run(&ops, &cl, &pl).unwrap();
+    let executed = PlanExecutor::new(&ops).execute(&mut cl, &mut pl, &out.plan).unwrap();
+    assert_eq!(dry, executed, "dry-run must equal executed cost");
     let migrations = out
         .actions
         .iter()

@@ -8,29 +8,12 @@
 
 use cocoserve::autoscale::speedup::{gamma, s_homo};
 use cocoserve::cluster::{Cluster, DeviceSpec};
-use cocoserve::model::cost::CostModel;
-use cocoserve::ops::ModuleOps;
 use cocoserve::placement::Placement;
 use cocoserve::scheduler::SchedulerConfig;
 use cocoserve::sim::{OomBehavior, SimConfig, SimPolicy, Simulation};
-use cocoserve::util::bench::{Report, Table};
+use cocoserve::util::bench::{replicated_placement_13b as placement_with, Report, Table};
 use cocoserve::util::json;
 use cocoserve::workload::{Arrival, LengthDist, Trace};
-
-fn placement_with(n_rep: usize, dop: usize) -> Placement {
-    let cfg = SimConfig::paper_13b();
-    let mut p = Placement::single_device(cfg.model.n_layers, 0);
-    let cm = CostModel::new(cfg.model);
-    let ops = ModuleOps::new(&cm, 2, "inst0");
-    let mut scratch = Cluster::paper_testbed();
-    ops.deploy_instance(&mut scratch, &p).unwrap();
-    for extra in 0..dop.saturating_sub(1) {
-        for l in 0..n_rep {
-            let _ = ops.replicate_layer(&mut scratch, &mut p, l, 1 + (extra + l) % 3);
-        }
-    }
-    p
-}
 
 fn measured_throughput(p: &Placement) -> f64 {
     let cfg = SimConfig::paper_13b();

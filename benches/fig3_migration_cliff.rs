@@ -10,8 +10,9 @@
 
 use cocoserve::cluster::{Cluster, DeviceSpec, GIB};
 use cocoserve::model::cost::CostModel;
-use cocoserve::ops::ModuleOps;
+use cocoserve::ops::{ModuleOps, PlanExecutor};
 use cocoserve::placement::Placement;
+use cocoserve::plan::ScalePlan;
 use cocoserve::scheduler::SchedulerConfig;
 use cocoserve::sim::{OomBehavior, SimConfig, SimPolicy, Simulation};
 use cocoserve::util::bench::{Report, Table};
@@ -42,13 +43,16 @@ fn run(migrated: bool, rps: f64, seed: u64) -> (f64, u64) {
         .unwrap();
     let mut placement = Placement::single_device(cfg.model.n_layers, 0);
     if migrated {
-        // Perform the actual migration op on a scratch cluster to get the
-        // migrated placement (Simulation::new deploys from the placement).
+        // Execute the actual migration plan on a scratch cluster to get
+        // the migrated placement (Simulation::new deploys from the
+        // placement).
         let cm = CostModel::new(cfg.model.clone());
         let ops = ModuleOps::new(&cm, 2, "inst0");
         let mut scratch = Cluster::homogeneous(2, DeviceSpec::a100_40gb());
         ops.deploy_instance(&mut scratch, &placement).unwrap();
-        ops.migrate_layer(&mut scratch, &mut placement, 39, 1).unwrap();
+        PlanExecutor::new(&ops)
+            .execute(&mut scratch, &mut placement, &ScalePlan::migrate_batch(&[39], 1))
+            .unwrap();
     }
     let sim = Simulation::new(cfg, cluster, vec![(placement, policy())]);
     let trace = Trace::generate(Arrival::Poisson { rps }, LengthDist::alpaca(), 20.0, seed);

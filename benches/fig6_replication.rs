@@ -9,12 +9,10 @@
 //!   below 30 RPS, diminishing returns at high load.
 
 use cocoserve::cluster::Cluster;
-use cocoserve::model::cost::CostModel;
-use cocoserve::ops::ModuleOps;
 use cocoserve::placement::Placement;
 use cocoserve::scheduler::SchedulerConfig;
 use cocoserve::sim::{OomBehavior, SimConfig, SimPolicy, Simulation};
-use cocoserve::util::bench::{Report, Table};
+use cocoserve::util::bench::{replicated_placement_13b as replicated_placement, Report, Table};
 use cocoserve::util::json;
 use cocoserve::workload::{Arrival, LengthDist, Trace};
 
@@ -27,24 +25,6 @@ fn policy() -> SimPolicy {
         autoscale: false, // replication is applied statically per arm
         oom: OomBehavior::Preempt,
     }
-}
-
-/// Build a placement with the first `n_rep` layers replicated to degree
-/// `dop` (replicas spread round-robin over devices 1..4).
-fn replicated_placement(n_rep: usize, dop: usize) -> Placement {
-    let cfg = SimConfig::paper_13b();
-    let mut p = Placement::single_device(cfg.model.n_layers, 0);
-    let cm = CostModel::new(cfg.model);
-    let ops = ModuleOps::new(&cm, 2, "inst0");
-    let mut scratch = Cluster::paper_testbed();
-    ops.deploy_instance(&mut scratch, &p).unwrap();
-    for extra in 0..dop.saturating_sub(1) {
-        for l in 0..n_rep {
-            let dst = 1 + (extra + l) % 3;
-            let _ = ops.replicate_layer(&mut scratch, &mut p, l, dst);
-        }
-    }
-    p
 }
 
 fn run(p: &Placement, rps: f64) -> (f64, f64) {

@@ -11,14 +11,17 @@
 //!
 //! Plus: inter-replica communication setup 39.1 ms. Properties asserted:
 //! memory exactly linear (499 + 608·n MiB), sub-second ops, time grows
-//! ~3× for 40× layers, migration cheaper than replication. We report both
-//! the analytic model and *executed* operations against the cluster ledger.
+//! ~3× for 40× layers, migration cheaper than replication. We report the
+//! analytic model and *executed* plans against the cluster ledger — and
+//! assert the plan/execute contract on every row: `ScalePlan::dry_run`
+//! equals the executed `PlanCost` bit for bit.
 
 use cocoserve::cluster::Cluster;
 use cocoserve::model::cost::{CostModel, MIB};
 use cocoserve::model::ModelConfig;
-use cocoserve::ops::{ModuleOps, REPLICA_COMM_SETUP_S};
+use cocoserve::ops::{ModuleOps, PlanExecutor, REPLICA_COMM_SETUP_S};
 use cocoserve::placement::Placement;
+use cocoserve::plan::ScalePlan;
 use cocoserve::util::bench::{Report, Table};
 use cocoserve::util::json;
 
@@ -66,30 +69,40 @@ fn main() {
     }
     t.print();
 
-    // executed (not just modeled) batch replication against the ledger
-    println!("\nexecuted ops (ledger-backed):");
+    // executed (not just modeled) batch plans against the ledger, with
+    // the dry-run parity contract checked on every row
+    println!("\nexecuted plans (ledger-backed, dry-run == executed asserted):");
     let mut t2 = Table::new(&["layers", "executed repl", "executed migr",
                               "dst resident MB"]);
+    let executor = PlanExecutor::new(&ops);
     for &n in &LAYERS {
+        let layers: Vec<usize> = (0..n).collect();
+
         let mut cl = Cluster::paper_testbed();
         let mut pl = Placement::single_device(40, 0);
         ops.deploy_instance(&mut cl, &pl).unwrap();
-        let layers: Vec<usize> = (0..n).collect();
-        let c = ops.replicate_layers(&mut cl, &mut pl, &layers, 1).unwrap();
+        let repl = ScalePlan::replicate_batch(&layers, 1);
+        let dry = repl.dry_run(&ops, &cl, &pl).unwrap();
+        let c = executor.execute(&mut cl, &mut pl, &repl).unwrap();
+        assert_eq!(dry, c, "replication n={n}: dry-run must equal executed");
 
         let mut cl2 = Cluster::paper_testbed();
         let mut pl2 = Placement::single_device(40, 0);
         ops.deploy_instance(&mut cl2, &pl2).unwrap();
-        let c2 = ops.migrate_layers(&mut cl2, &mut pl2, &layers, 1).unwrap();
+        let migr = ScalePlan::migrate_batch(&layers, 1);
+        let dry2 = migr.dry_run(&ops, &cl2, &pl2).unwrap();
+        let c2 = executor.execute(&mut cl2, &mut pl2, &migr).unwrap();
+        assert_eq!(dry2, c2, "migration n={n}: dry-run must equal executed");
 
         t2.row(&[
             format!("{n}"),
-            format!("{:.4}s", c.time_s),
-            format!("{:.4}s", c2.time_s),
+            format!("{:.4}s", c.total.time_s),
+            format!("{:.4}s", c2.total.time_s),
             format!("{:.0}", cl.device(1).used_bytes() / MIB),
         ]);
     }
     t2.print();
+    println!("dry-run == executed PlanCost held on all {} rows", LAYERS.len());
 
     println!(
         "\ninter-replica communication setup: {:.1} ms (paper: 39.1 ms)",

@@ -1,12 +1,26 @@
-//! The Auto-Scaling Controller (§5): threshold decisions + cooldown.
+//! The Auto-Scaling Controller (§5): threshold decisions + cooldown,
+//! closing the loop as **plans**.
 //!
-//! Periodically evaluates monitor feedback and picks an action:
-//! scale-up when the cluster-wide resource vacancy exceeds `T_up`,
-//! scale-down when the SLO violation rate exceeds `T_down` (or any OOM
-//! occurred). A cooldown suppresses decision flapping while a previous
-//! operation's cost is still being amortized.
+//! Periodically evaluates monitor feedback in two stages:
+//!
+//! 1. [`Controller::decide`] — the raw threshold stage: scale-up when the
+//!    cluster-wide resource vacancy exceeds `T_up`, scale-down when the
+//!    SLO violation rate exceeds `T_down` (or any OOM occurred), with a
+//!    cooldown suppressing decision flapping while a previous operation's
+//!    cost is still being amortized.
+//! 2. [`Controller::tick`] — runs the matching **pure planner** over a
+//!    [`PlanCtx`] and emits a [`PlannedDecision`] carrying a validated,
+//!    costed [`crate::plan::ScalePlan`]. Nothing is mutated here; the
+//!    caller executes the plan (atomically via
+//!    [`crate::ops::PlanExecutor`], or in flight in the simulation
+//!    kernel).
 
-use super::scale_down::Pressure;
+use crate::cluster::Cluster;
+use crate::ops::ModuleOps;
+use crate::placement::Placement;
+
+use super::scale_down::{scale_down, Pressure, ScaleDownConfig, ScaleDownPlan};
+use super::scale_up::{scale_up, ScaleUpConfig, ScaleUpPlan};
 
 /// Snapshot of the signals the controller consumes each tick (produced by
 /// `monitor::Monitor::controller_view`).
@@ -26,12 +40,38 @@ pub struct ControllerInputs {
     pub hottest_mem_frac: f64,
 }
 
-/// Controller decision for one tick.
+/// Raw threshold decision for one tick (stage 1).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Decision {
     None,
     ScaleUp,
     ScaleDown { device: usize, pressure: Pressure },
+}
+
+/// A threshold decision elaborated into an executable plan (stage 2).
+#[derive(Debug)]
+pub enum PlannedDecision {
+    None,
+    ScaleUp(ScaleUpPlan),
+    ScaleDown(ScaleDownPlan),
+}
+
+/// Everything the planners need to elaborate a decision, borrowed
+/// read-only from the deployment being controlled. Ownership rule:
+/// planners never see `&mut Cluster` — the controller cannot mutate.
+pub struct PlanCtx<'a> {
+    pub ops: &'a ModuleOps<'a>,
+    pub cluster: &'a Cluster,
+    pub placement: &'a Placement,
+    pub up_cfg: ScaleUpConfig,
+    pub down_cfg: ScaleDownConfig,
+    /// Current serving batch size (phase-3 scale-down input).
+    pub batch_size: usize,
+    /// Live KV payload per layer, for KV-cache migration costing.
+    pub kv_bytes_per_layer: f64,
+    /// Scale-down source override (e.g. the instance-local hottest
+    /// device); defaults to the monitor's cluster-wide hottest.
+    pub down_src: Option<usize>,
 }
 
 /// Threshold configuration (T_up / T_down of §5).
@@ -68,12 +108,12 @@ impl Controller {
         self.decisions
     }
 
-    /// Evaluate one control tick.
+    /// Stage 1: evaluate the thresholds for one control tick.
     ///
     /// Priority: OOM/SLO pressure outranks idle-resource harvesting —
     /// scale-down is checked first (§4.2 runs "when workload intensifies
     /// beyond capacity"), and an OOM bypasses the cooldown entirely.
-    pub fn tick(&mut self, inp: &ControllerInputs) -> Decision {
+    pub fn decide(&mut self, inp: &ControllerInputs) -> Decision {
         let emergency = inp.oom_events > 0;
         if self.cooldown > 0 && !emergency {
             self.cooldown -= 1;
@@ -102,6 +142,62 @@ impl Controller {
         Decision::None
     }
 
+    /// Stage 2: evaluate one control tick and elaborate the decision into
+    /// an executable plan via the pure planners. Decisions that plan to a
+    /// no-op (empty plan, unchanged batch) collapse to
+    /// [`PlannedDecision::None`].
+    pub fn tick(
+        &mut self,
+        inp: &ControllerInputs,
+        ctx: &PlanCtx<'_>,
+        is_violating: impl FnMut(&Cluster, &Placement, usize) -> bool,
+    ) -> PlannedDecision {
+        let decision = self.decide(inp);
+        self.plan(decision, ctx, is_violating)
+    }
+
+    /// Elaborate a stage-1 decision into a plan (stateless — callers that
+    /// want to skip building a [`PlanCtx`] on `Decision::None` ticks run
+    /// [`Controller::decide`] first and call this only when acting).
+    pub fn plan(
+        &self,
+        decision: Decision,
+        ctx: &PlanCtx<'_>,
+        is_violating: impl FnMut(&Cluster, &Placement, usize) -> bool,
+    ) -> PlannedDecision {
+        match decision {
+            Decision::None => PlannedDecision::None,
+            Decision::ScaleUp => {
+                let plan = scale_up(ctx.ops, ctx.cluster, ctx.placement, &ctx.up_cfg);
+                if plan.plan.is_empty() {
+                    PlannedDecision::None
+                } else {
+                    PlannedDecision::ScaleUp(plan)
+                }
+            }
+            Decision::ScaleDown { device, pressure } => {
+                let src = ctx.down_src.unwrap_or(device);
+                let kv = ctx.kv_bytes_per_layer;
+                let plan = scale_down(
+                    ctx.ops,
+                    ctx.cluster,
+                    ctx.placement,
+                    src,
+                    pressure,
+                    ctx.batch_size,
+                    &ctx.down_cfg,
+                    |_| kv,
+                    is_violating,
+                );
+                if plan.plan.is_empty() && plan.batch_size == ctx.batch_size {
+                    PlannedDecision::None
+                } else {
+                    PlannedDecision::ScaleDown(plan)
+                }
+            }
+        }
+    }
+
     fn arm(&mut self) {
         self.cooldown = self.cfg.cooldown_ticks;
         self.decisions += 1;
@@ -111,6 +207,9 @@ impl Controller {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::GIB;
+    use crate::model::cost::CostModel;
+    use crate::model::ModelConfig;
 
     fn idle() -> ControllerInputs {
         ControllerInputs {
@@ -137,14 +236,14 @@ mod tests {
     #[test]
     fn idle_cluster_scales_up() {
         let mut c = Controller::new(ControllerConfig::default());
-        assert_eq!(c.tick(&idle()), Decision::ScaleUp);
+        assert_eq!(c.decide(&idle()), Decision::ScaleUp);
     }
 
     #[test]
     fn slo_violation_scales_down_with_compute_pressure() {
         let mut c = Controller::new(ControllerConfig::default());
         assert_eq!(
-            c.tick(&overloaded()),
+            c.decide(&overloaded()),
             Decision::ScaleDown { device: 2, pressure: Pressure::Compute }
         );
     }
@@ -156,7 +255,7 @@ mod tests {
         inp.hottest_mem_frac = 0.99;
         inp.hottest_compute_util = 0.5;
         assert!(matches!(
-            c.tick(&inp),
+            c.decide(&inp),
             Decision::ScaleDown { pressure: Pressure::Memory, .. }
         ));
     }
@@ -164,20 +263,20 @@ mod tests {
     #[test]
     fn cooldown_suppresses_consecutive_actions() {
         let mut c = Controller::new(ControllerConfig::default());
-        assert_eq!(c.tick(&idle()), Decision::ScaleUp);
-        assert_eq!(c.tick(&idle()), Decision::None);
-        assert_eq!(c.tick(&idle()), Decision::None);
-        assert_eq!(c.tick(&idle()), Decision::ScaleUp); // cooldown over
+        assert_eq!(c.decide(&idle()), Decision::ScaleUp);
+        assert_eq!(c.decide(&idle()), Decision::None);
+        assert_eq!(c.decide(&idle()), Decision::None);
+        assert_eq!(c.decide(&idle()), Decision::ScaleUp); // cooldown over
         assert_eq!(c.decisions_made(), 2);
     }
 
     #[test]
     fn oom_bypasses_cooldown() {
         let mut c = Controller::new(ControllerConfig::default());
-        assert_eq!(c.tick(&idle()), Decision::ScaleUp); // arms cooldown
+        assert_eq!(c.decide(&idle()), Decision::ScaleUp); // arms cooldown
         let mut inp = overloaded();
         inp.oom_events = 3;
-        assert!(matches!(c.tick(&inp), Decision::ScaleDown { .. }));
+        assert!(matches!(c.decide(&inp), Decision::ScaleDown { .. }));
     }
 
     #[test]
@@ -186,7 +285,7 @@ mod tests {
         let mut c = Controller::new(ControllerConfig::default());
         let mut inp = idle();
         inp.slo_violation_rate = 0.2;
-        assert!(matches!(c.tick(&inp), Decision::ScaleDown { .. }));
+        assert!(matches!(c.decide(&inp), Decision::ScaleDown { .. }));
     }
 
     #[test]
@@ -194,7 +293,81 @@ mod tests {
         let mut c = Controller::new(ControllerConfig::default());
         let mut inp = idle();
         inp.vacancy_rate = 0.2; // below T_up, above trouble
-        assert_eq!(c.tick(&inp), Decision::None);
+        assert_eq!(c.decide(&inp), Decision::None);
         assert_eq!(c.decisions_made(), 0);
+    }
+
+    // ---- stage 2: plan emission -------------------------------------------
+
+    fn plan_fixture() -> (CostModel, crate::cluster::Cluster, Placement) {
+        let cm = CostModel::new(ModelConfig::llama2_13b());
+        let mut cl = crate::cluster::Cluster::paper_testbed();
+        cl.device_mut(0).alloc("inst0/model", 24.2 * GIB).unwrap();
+        (cm, cl, Placement::single_device(40, 0))
+    }
+
+    #[test]
+    fn tick_emits_a_scale_up_plan_without_mutating() {
+        let (cm, cl, pl) = plan_fixture();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let ctx = PlanCtx {
+            ops: &ops,
+            cluster: &cl,
+            placement: &pl,
+            up_cfg: ScaleUpConfig { max_ops_per_round: 4, ..Default::default() },
+            down_cfg: ScaleDownConfig::default(),
+            batch_size: 16,
+            kv_bytes_per_layer: 0.0,
+            down_src: None,
+        };
+        let mut c = Controller::new(ControllerConfig::default());
+        let d = c.tick(&idle(), &ctx, |_, _, _| false);
+        let PlannedDecision::ScaleUp(up) = d else { panic!("expected plan, got {d:?}") };
+        assert_eq!(up.planned.len(), 4);
+        assert_eq!(pl.inv_p_norm(), 40.0, "tick must not mutate the placement");
+        assert_eq!(up.cost.per_op.len(), 4);
+    }
+
+    #[test]
+    fn tick_emits_a_scale_down_plan_with_batch_decision() {
+        let (cm, cl, pl) = plan_fixture();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let ctx = PlanCtx {
+            ops: &ops,
+            cluster: &cl,
+            placement: &pl,
+            up_cfg: ScaleUpConfig::default(),
+            down_cfg: ScaleDownConfig::default(),
+            batch_size: 15,
+            kv_bytes_per_layer: 1.0 * GIB,
+            down_src: Some(0),
+        };
+        let mut c = Controller::new(ControllerConfig::default());
+        let d = c.tick(&overloaded(), &ctx, |_, _, bs| bs > 5);
+        let PlannedDecision::ScaleDown(down) = d else { panic!("expected plan, got {d:?}") };
+        assert!(down.resolved);
+        assert_eq!(down.batch_size, 5, "phase-3 batch decision carried in the plan");
+    }
+
+    #[test]
+    fn tick_collapses_empty_plans_to_none() {
+        let (cm, mut cl, pl) = plan_fixture();
+        for d in 1..4 {
+            cl.device_mut(d).alloc("hog", 39.0 * GIB).unwrap();
+        }
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let ctx = PlanCtx {
+            ops: &ops,
+            cluster: &cl,
+            placement: &pl,
+            up_cfg: ScaleUpConfig::default(),
+            down_cfg: ScaleDownConfig::default(),
+            batch_size: 16,
+            kv_bytes_per_layer: 0.0,
+            down_src: None,
+        };
+        let mut c = Controller::new(ControllerConfig::default());
+        // thresholds say scale up, but no eligible destination exists
+        assert!(matches!(c.tick(&idle(), &ctx, |_, _, _| false), PlannedDecision::None));
     }
 }

@@ -1,16 +1,25 @@
-//! The dynamic auto-scaling mechanism (§4) — CoCoServe's core contribution.
+//! The dynamic auto-scaling mechanism (§4) — CoCoServe's core
+//! contribution, structured as **pure planners** feeding the plan
+//! executor.
 //!
 //! * [`speedup`] — the modified-Amdahl model, Eqs. 1–4,
-//! * [`scale_up`] — Algorithm 1: greedy continuity-sorted layer replication,
+//! * [`scale_up`] — Algorithm 1: greedy continuity-sorted layer
+//!   replication, returning a [`crate::plan::ScalePlan`],
 //! * [`scale_down`] — Algorithm 2: migrate → evict → reduce, graduated,
+//!   returning a plan plus the phase-3 batch decision,
 //! * [`controller`] — the §5 threshold controller closing the loop with
-//!   the monitor.
+//!   the monitor, emitting [`controller::PlannedDecision`]s.
+//!
+//! Ownership rule: planners never take `&mut Cluster`. All mutation flows
+//! through [`crate::ops::PlanExecutor`] / [`crate::ops::PlanExecution`].
 
 pub mod controller;
 pub mod scale_down;
 pub mod scale_up;
 pub mod speedup;
 
-pub use controller::{Controller, ControllerConfig, ControllerInputs, Decision};
-pub use scale_down::{scale_down, Pressure, ScaleDownConfig, ScaleDownOutcome};
-pub use scale_up::{scale_up, ScaleUpConfig, ScaleUpOutcome};
+pub use controller::{
+    Controller, ControllerConfig, ControllerInputs, Decision, PlanCtx, PlannedDecision,
+};
+pub use scale_down::{scale_down, Pressure, ScaleDownConfig, ScaleDownPlan};
+pub use scale_up::{scale_up, ScaleUpConfig, ScaleUpPlan};

@@ -1,7 +1,8 @@
-//! Algorithm 2 — Scale-Down via Module Reduction (§4.2).
+//! Algorithm 2 — Scale-Down via Module Reduction (§4.2), as a **pure
+//! planner**.
 //!
 //! A graduated three-phase intervention, each phase costlier than the last,
-//! executed only until the violation predicate clears:
+//! planned only until the violation predicate clears:
 //!
 //! 1. **Module Migration** — move §3.3-selected modules (KV caches under
 //!    memory pressure, attention/FFN blocks under compute pressure) off the
@@ -10,11 +11,19 @@
 //!    first.
 //! 3. **Performance Reduction** — step the batch size down by Δbs and
 //!    offload, trading the instance's own throughput for stability.
+//!
+//! The planner walks *shadow* copies of the cluster and placement (the
+//! violation predicate observes the shadow state each phase would leave
+//! behind) and returns a [`ScaleDownPlan`]: module ops for phases 1–2 plus
+//! the phase-3 batch decision. Nothing is mutated here — the caller
+//! executes the plan through [`crate::ops::PlanExecutor`] or in flight via
+//! the simulation kernel, and applies `batch_size` itself.
 
 use crate::cluster::Cluster;
 use crate::model::{ModuleId, ModuleKind};
-use crate::ops::{ModuleOps, OpCost};
+use crate::ops::{ModuleOps, PlanExecution};
 use crate::placement::Placement;
+use crate::plan::{ModuleOp, PlanCost, ScalePlan};
 
 /// What kind of pressure is the violating device under? Determines the
 /// §3.3 module filter (memory → KV cache first; compute → attn/FFN).
@@ -46,7 +55,7 @@ impl Default for ScaleDownConfig {
     }
 }
 
-/// One remediation step taken by Algorithm 2 (for logs + tests + benches).
+/// One remediation step planned by Algorithm 2 (for logs + tests + benches).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Action {
     Migrated { module: ModuleId, from: usize, to: usize },
@@ -55,15 +64,19 @@ pub enum Action {
     Offloaded { device: usize },
 }
 
-/// Outcome of a scale-down invocation.
+/// Outcome of a scale-down planning round.
 #[derive(Debug, Clone)]
-pub struct ScaleDownOutcome {
+pub struct ScaleDownPlan {
+    /// Executable module ops (phases 1–2); phase 3 is batch-only.
+    pub plan: ScalePlan,
     pub actions: Vec<Action>,
-    /// Did the violation predicate clear?
+    /// Did the violation predicate clear on the planned end state?
     pub resolved: bool,
-    /// Possibly-reduced batch size.
+    /// Possibly-reduced batch size the caller should adopt.
     pub batch_size: usize,
-    pub cost: OpCost,
+    /// Dry-run cost against the planning-time state — equals the executed
+    /// cost when the plan is applied to that same state.
+    pub cost: PlanCost,
 }
 
 /// `FilterModules` (§4.2 phase 1): migration candidates on `src`, ordered
@@ -147,97 +160,98 @@ pub fn sort_evictees(placement: &Placement, device: usize) -> Vec<usize> {
     evictees
 }
 
-/// Algorithm 2. `is_violating(cluster, placement, batch)` is the SLO/OOM
-/// predicate (θ comparison); `kv_bytes(layer)` reports the live cache
-/// payload for KV migrations.
-#[allow(clippy::too_many_arguments)]
+/// Algorithm 2 as a pure planner. `is_violating(cluster, placement, batch)`
+/// is the SLO/OOM predicate (θ comparison), evaluated against the shadow
+/// state each planned step would produce; `kv_bytes(layer)` reports the
+/// live cache payload for KV migrations.
 pub fn scale_down(
     ops: &ModuleOps<'_>,
-    cluster: &mut Cluster,
-    placement: &mut Placement,
+    cluster: &Cluster,
+    placement: &Placement,
     src: usize,
     pressure: Pressure,
     batch_size: usize,
     cfg: &ScaleDownConfig,
     kv_bytes: impl Fn(usize) -> f64,
     mut is_violating: impl FnMut(&Cluster, &Placement, usize) -> bool,
-) -> ScaleDownOutcome {
-    let mut out = ScaleDownOutcome {
+) -> ScaleDownPlan {
+    let mut shadow_cl = cluster.clone();
+    let mut shadow_pl = placement.clone();
+    let mut exec = PlanExecution::eager();
+    let mut out = ScaleDownPlan {
+        plan: ScalePlan::new(),
         actions: vec![],
         resolved: false,
         batch_size,
-        cost: OpCost::default(),
+        cost: PlanCost::default(),
     };
-    let charge = |out: &mut ScaleDownOutcome, c: OpCost| {
-        out.cost.time_s += c.time_s;
-        out.cost.bytes_moved += c.bytes_moved;
-        out.cost.dst_bytes += c.dst_bytes;
-    };
+    fn finish(mut out: ScaleDownPlan, exec: PlanExecution, resolved: bool) -> ScaleDownPlan {
+        out.cost = exec.into_cost();
+        out.resolved = resolved;
+        out
+    }
 
-    if !is_violating(cluster, placement, out.batch_size) {
-        out.resolved = true;
-        return out;
+    if !is_violating(&shadow_cl, &shadow_pl, out.batch_size) {
+        return finish(out, exec, true);
     }
 
     // ---- Phase 1: Module Migration -------------------------------------
-    for m in filter_modules(placement, src, pressure, cfg.max_migration_candidates) {
+    for m in filter_modules(&shadow_pl, src, pressure, cfg.max_migration_candidates) {
         let payload = match m.kind {
             ModuleKind::KvCache => kv_bytes(m.layer.unwrap_or(0)),
             _ => 0.0,
         };
         let bytes = ops.module_bytes(m.kind) + payload;
         let Some(dst) =
-            find_optimal_destination(cluster, src, bytes, cfg.dst_headroom_frac)
+            find_optimal_destination(&shadow_cl, src, bytes, cfg.dst_headroom_frac)
         else {
             continue;
         };
-        let res = if m.kind == ModuleKind::DecoderLayer {
-            ops.migrate_layer(cluster, placement, m.layer.unwrap(), dst)
+        let op = if m.kind == ModuleKind::DecoderLayer {
+            ModuleOp::MigrateLayer { layer: m.layer.unwrap(), dst }
         } else {
-            ops.migrate_module(cluster, placement, m, dst, payload)
+            ModuleOp::MigrateModule { module: m, dst, payload_bytes: payload }
         };
-        if let Ok(c) = res {
-            charge(&mut out, c);
+        if exec.apply_next(ops, &mut shadow_cl, &mut shadow_pl, &op).is_ok() {
+            out.plan.push(op);
             out.actions.push(Action::Migrated { module: m, from: src, to: dst });
-            if !is_violating(cluster, placement, out.batch_size) {
-                out.resolved = true;
-                return out;
+            if !is_violating(&shadow_cl, &shadow_pl, out.batch_size) {
+                return finish(out, exec, true);
             }
         }
     }
 
     // ---- Phase 2: Replica Eviction --------------------------------------
-    for layer in sort_evictees(placement, src) {
-        if let Ok(c) = ops.evict_replica(cluster, placement, layer, src) {
-            charge(&mut out, c);
+    for layer in sort_evictees(&shadow_pl, src) {
+        let op = ModuleOp::Evict { layer, device: src };
+        if exec.apply_next(ops, &mut shadow_cl, &mut shadow_pl, &op).is_ok() {
+            out.plan.push(op);
             out.actions.push(Action::Evicted { layer, device: src });
-            if !is_violating(cluster, placement, out.batch_size) {
-                out.resolved = true;
-                return out;
+            if !is_violating(&shadow_cl, &shadow_pl, out.batch_size) {
+                return finish(out, exec, true);
             }
         }
     }
 
     // ---- Phase 3: Performance Reduction ----------------------------------
-    while is_violating(cluster, placement, out.batch_size) && out.batch_size >= 1 {
+    while is_violating(&shadow_cl, &shadow_pl, out.batch_size) && out.batch_size >= 1 {
         let from = out.batch_size;
         let to = from.saturating_sub(cfg.batch_step).max(1);
         if to == from {
             // batch floor reached; offload as the last resort and stop.
             out.actions.push(Action::Offloaded { device: src });
-            out.resolved = !is_violating(cluster, placement, out.batch_size);
-            return out;
+            let resolved = !is_violating(&shadow_cl, &shadow_pl, out.batch_size);
+            return finish(out, exec, resolved);
         }
         out.batch_size = to;
         out.actions.push(Action::BatchReduced { from, to });
         out.actions.push(Action::Offloaded { device: src });
-        if !is_violating(cluster, placement, out.batch_size) {
-            out.resolved = true;
-            return out;
+        if !is_violating(&shadow_cl, &shadow_pl, out.batch_size) {
+            return finish(out, exec, true);
         }
     }
-    out.resolved = !is_violating(cluster, placement, out.batch_size);
-    out
+    let resolved = !is_violating(&shadow_cl, &shadow_pl, out.batch_size);
+    finish(out, exec, resolved)
 }
 
 #[cfg(test)]
@@ -246,6 +260,7 @@ mod tests {
     use crate::cluster::{Cluster, GIB};
     use crate::model::cost::{CostModel, MIB};
     use crate::model::ModelConfig;
+    use crate::ops::PlanExecutor;
 
     fn setup() -> (CostModel, Cluster, Placement) {
         let cm = CostModel::new(ModelConfig::llama2_13b());
@@ -254,17 +269,45 @@ mod tests {
         (cm, cl, Placement::single_device(40, 0))
     }
 
+    fn replicate(
+        ops: &ModuleOps<'_>,
+        cl: &mut Cluster,
+        pl: &mut Placement,
+        layer: usize,
+        dst: usize,
+    ) {
+        PlanExecutor::new(ops)
+            .execute(cl, pl, &ScalePlan::replicate_batch(&[layer], dst))
+            .unwrap();
+    }
+
     #[test]
     fn already_healthy_is_noop() {
-        let (cm, mut cl, mut pl) = setup();
+        let (cm, cl, pl) = setup();
         let ops = ModuleOps::new(&cm, 2, "inst0");
         let out = scale_down(
-            &ops, &mut cl, &mut pl, 0, Pressure::Memory, 15,
+            &ops, &cl, &pl, 0, Pressure::Memory, 15,
             &ScaleDownConfig::default(), |_| 0.0, |_, _, _| false,
         );
         assert!(out.resolved);
         assert!(out.actions.is_empty());
+        assert!(out.plan.is_empty());
         assert_eq!(out.batch_size, 15);
+    }
+
+    #[test]
+    fn planner_leaves_inputs_untouched() {
+        let (cm, cl, pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let used: Vec<f64> = (0..cl.n()).map(|d| cl.device(d).used_bytes()).collect();
+        let _ = scale_down(
+            &ops, &cl, &pl, 0, Pressure::Memory, 15,
+            &ScaleDownConfig::default(), |_| 1.0 * GIB, |_, _, _| true,
+        );
+        for d in 0..cl.n() {
+            assert_eq!(cl.device(d).used_bytes(), used[d], "planner mutated device {d}");
+        }
+        assert_eq!(pl.migrations().count(), 0, "planner mutated placement");
     }
 
     #[test]
@@ -279,7 +322,7 @@ mod tests {
         }
         cl.device_mut(0).alloc("activations", 6.0 * GIB).unwrap();
         let out = scale_down(
-            &ops, &mut cl, &mut pl, 0, Pressure::Memory, 15,
+            &ops, &cl, &pl, 0, Pressure::Memory, 15,
             &ScaleDownConfig::default(),
             |_| 2.0 * GIB, // each KV cache holds 2 GiB
             // violating while device 0 is above 90%
@@ -295,16 +338,21 @@ mod tests {
         if let Action::Migrated { module, .. } = &out.actions[0] {
             assert_eq!(module.kind, ModuleKind::KvCache);
         }
+        // the planned ops execute cleanly and resolve the real violation
+        let executed =
+            PlanExecutor::new(&ops).execute(&mut cl, &mut pl, &out.plan).unwrap();
+        assert_eq!(executed, out.cost, "executed cost == planned cost");
+        assert!(cl.device(0).mem_frac() <= 0.90, "execution clears the violation");
         pl.validate(cl.n()).unwrap();
     }
 
     #[test]
     fn compute_pressure_prefers_attention_modules() {
-        let (cm, mut cl, mut pl) = setup();
+        let (cm, cl, pl) = setup();
         let ops = ModuleOps::new(&cm, 2, "inst0");
         let mut calls = 0;
         let out = scale_down(
-            &ops, &mut cl, &mut pl, 0, Pressure::Compute, 15,
+            &ops, &cl, &pl, 0, Pressure::Compute, 15,
             &ScaleDownConfig::default(), |_| 0.0,
             move |_, _, _| {
                 calls += 1;
@@ -326,11 +374,11 @@ mod tests {
         // replicas ON device 0 belonging to a placement homed on device 1
         let mut pl = Placement::single_device(40, 1);
         for l in 0..4 {
-            ops.replicate_layer(&mut cl, &mut pl, l, 0).unwrap();
+            replicate(&ops, &mut cl, &mut pl, l, 0);
         }
         let mut violations = 6; // phase 1 (4 candidates) won't clear it
         let out = scale_down(
-            &ops, &mut cl, &mut pl, 0, Pressure::Memory, 15,
+            &ops, &cl, &pl, 0, Pressure::Memory, 15,
             &ScaleDownConfig::default(), |_| 0.0,
             move |_, _, _| {
                 violations -= 1;
@@ -344,11 +392,11 @@ mod tests {
 
     #[test]
     fn phase3_reduces_batch_to_floor() {
-        let (cm, mut cl, mut pl) = setup();
+        let (cm, cl, pl) = setup();
         let ops = ModuleOps::new(&cm, 2, "inst0");
         // never clears: every phase runs; batch walks 15 → 10 → 5 → 1
         let out = scale_down(
-            &ops, &mut cl, &mut pl, 0, Pressure::Memory, 15,
+            &ops, &cl, &pl, 0, Pressure::Memory, 15,
             &ScaleDownConfig::default(), |_| 0.0, |_, _, _| true,
         );
         assert!(!out.resolved);
@@ -367,10 +415,10 @@ mod tests {
 
     #[test]
     fn batch_clears_mid_way() {
-        let (cm, mut cl, mut pl) = setup();
+        let (cm, cl, pl) = setup();
         let ops = ModuleOps::new(&cm, 2, "inst0");
         let out = scale_down(
-            &ops, &mut cl, &mut pl, 0, Pressure::Memory, 20,
+            &ops, &cl, &pl, 0, Pressure::Memory, 20,
             &ScaleDownConfig::default(), |_| 0.0,
             |_, _, bs| bs > 10,
         );
@@ -382,11 +430,11 @@ mod tests {
     fn graduated_cost_ordering() {
         // phase 1+2 must not reduce batch; only phase 3 does — the
         // "remediation with lower performance impact first" guarantee.
-        let (cm, mut cl, mut pl) = setup();
+        let (cm, cl, pl) = setup();
         let ops = ModuleOps::new(&cm, 2, "inst0");
         let mut phase_seen = vec![];
         let out = scale_down(
-            &ops, &mut cl, &mut pl, 0, Pressure::Memory, 15,
+            &ops, &cl, &pl, 0, Pressure::Memory, 15,
             &ScaleDownConfig::default(), |_| 1.0 * GIB,
             |_, _, _| true,
         );
@@ -407,9 +455,9 @@ mod tests {
         let (cm, mut cl, _) = setup();
         let ops = ModuleOps::new(&cm, 2, "inst0");
         let mut pl = Placement::single_device(40, 1);
-        ops.replicate_layer(&mut cl, &mut pl, 5, 0).unwrap();
-        ops.replicate_layer(&mut cl, &mut pl, 6, 0).unwrap();
-        ops.replicate_layer(&mut cl, &mut pl, 6, 2).unwrap(); // degree 3
+        replicate(&ops, &mut cl, &mut pl, 5, 0);
+        replicate(&ops, &mut cl, &mut pl, 6, 0);
+        replicate(&ops, &mut cl, &mut pl, 6, 2); // degree 3
         let ev = sort_evictees(&pl, 0);
         assert_eq!(ev[0], 6, "highest-degree replica evicted first");
     }

@@ -1,16 +1,24 @@
-//! Algorithm 1 — Scale-Up via layer replication (§4.1).
+//! Algorithm 1 — Scale-Up via layer replication (§4.1), as a **pure
+//! planner**.
 //!
 //! Greedy search over (eligible device, continuity-sorted candidate layer)
-//! pairs: a replica is added iff the Eq. 4 speedup strictly improves and
-//! the destination has room. Guarantees from the paper, kept as tested
+//! pairs: a replica is planned iff the Eq. 4 speedup strictly improves and
+//! the destination has room. The search runs against *shadow* copies of
+//! the cluster and placement — the caller's state is never touched; the
+//! returned [`ScaleUpPlan`] is applied through
+//! [`crate::ops::PlanExecutor`] (atomically) or executed in flight by the
+//! simulation kernel. Guarantees from the paper, kept as tested
 //! invariants:
 //!
 //! * (a) monotonic speedup improvement (greedy local optimality),
-//! * (b) communication efficiency via continuity-first candidate order.
+//! * (b) communication efficiency via continuity-first candidate order,
+//! * (c) the plan's dry-run cost equals its executed cost (the shadow
+//!   replay and the executor walk the same state evolution).
 
 use crate::cluster::Cluster;
-use crate::ops::{ModuleOps, OpCost};
+use crate::ops::{ModuleOps, PlanExecution};
 use crate::placement::Placement;
+use crate::plan::{ModuleOp, PlanCost, ScalePlan};
 
 use super::speedup::s_homo_from_norm;
 
@@ -21,8 +29,8 @@ pub struct ScaleUpConfig {
     pub gamma: f64,
     /// Vacancy-rate filter of `GetEligibleNodes` (T_up in §5).
     pub min_vacancy: f64,
-    /// Cap on replicas added per invocation (keeps each control-loop tick
-    /// bounded; the loop converges over successive ticks).
+    /// Cap on replicas planned per invocation (keeps each control-loop
+    /// tick bounded; the loop converges over successive ticks).
     pub max_ops_per_round: usize,
 }
 
@@ -32,14 +40,18 @@ impl Default for ScaleUpConfig {
     }
 }
 
-/// What one scale-up round did.
+/// What one scale-up planning round proposes.
 #[derive(Debug, Clone, Default)]
-pub struct ScaleUpOutcome {
-    /// (layer, destination device) for each executed replication.
-    pub replicated: Vec<(usize, usize)>,
+pub struct ScaleUpPlan {
+    /// The executable plan (replications only).
+    pub plan: ScalePlan,
+    /// (layer, destination device) for each planned replication.
+    pub planned: Vec<(usize, usize)>,
     pub speedup_before: f64,
     pub speedup_after: f64,
-    pub cost: OpCost,
+    /// Dry-run cost against the planning-time state — equals the executed
+    /// cost when the plan is applied to that same state.
+    pub cost: PlanCost,
 }
 
 /// `SortCandidatesByContinuity` (§4.1): layers not yet resident on `dst`,
@@ -60,61 +72,68 @@ pub fn sort_candidates_by_continuity(
     cands
 }
 
-/// Algorithm 1. Mutates `cluster` + `placement` through `ops`; returns the
-/// executed strategy change.
+/// Algorithm 1. Pure: reads `cluster` + `placement`, returns the plan; no
+/// mutation happens here.
 pub fn scale_up(
     ops: &ModuleOps<'_>,
-    cluster: &mut Cluster,
-    placement: &mut Placement,
+    cluster: &Cluster,
+    placement: &Placement,
     cfg: &ScaleUpConfig,
-) -> ScaleUpOutcome {
+) -> ScaleUpPlan {
     let n = placement.n_layers;
     let replica_bytes = ops.module_bytes(crate::model::ModuleKind::DecoderLayer);
 
+    // Shadow state: the greedy must observe its own accepted replications
+    // (destination fill, placement degrees) without touching the caller's.
+    let mut shadow_cl = cluster.clone();
+    let mut shadow_pl = placement.clone();
+    let mut exec = PlanExecution::eager();
+
     // line 1: sp_best ← 1 / (γ + (1−γ)/n · ‖1 ⊘ P‖₁)
-    let mut inv_norm = placement.inv_p_norm();
+    let mut inv_norm = shadow_pl.inv_p_norm();
     let mut sp_best = s_homo_from_norm(cfg.gamma, n, inv_norm);
-    let mut out = ScaleUpOutcome {
+    let mut out = ScaleUpPlan {
         speedup_before: sp_best,
         speedup_after: sp_best,
         ..Default::default()
     };
 
     // line 2: for g_dst ∈ GetEligibleNodes(G)
-    for dst in cluster.eligible_nodes(cfg.min_vacancy) {
+    for dst in shadow_cl.eligible_nodes(cfg.min_vacancy) {
         // line 3: max_replicas ← available / r
         let max_replicas =
-            (cluster.device(dst).free_bytes() / replica_bytes) as usize;
+            (shadow_cl.device(dst).free_bytes() / replica_bytes) as usize;
         if max_replicas == 0 {
             continue;
         }
         // line 4: continuity-sorted candidates
         let candidates =
-            sort_candidates_by_continuity(placement, dst, max_replicas);
+            sort_candidates_by_continuity(&shadow_pl, dst, max_replicas);
         // lines 5–12: greedy accept while speedup strictly improves
         for layer in candidates {
-            if out.replicated.len() >= cfg.max_ops_per_round {
+            if out.planned.len() >= cfg.max_ops_per_round {
+                out.cost = exec.into_cost();
                 return out;
             }
-            let p_old = placement.degree(layer) as f64;
+            let p_old = shadow_pl.degree(layer) as f64;
             let new_norm = inv_norm - 1.0 / p_old + 1.0 / (p_old + 1.0);
             let sp = s_homo_from_norm(cfg.gamma, n, new_norm);
             if sp > sp_best {
-                match ops.replicate_layer(cluster, placement, layer, dst) {
-                    Ok(c) => {
+                let op = ModuleOp::Replicate { layer, dst };
+                match exec.apply_next(ops, &mut shadow_cl, &mut shadow_pl, &op) {
+                    Ok(_) => {
                         inv_norm = new_norm;
                         sp_best = sp;
                         out.speedup_after = sp;
-                        out.replicated.push((layer, dst));
-                        out.cost.time_s += c.time_s;
-                        out.cost.bytes_moved += c.bytes_moved;
-                        out.cost.dst_bytes += c.dst_bytes;
+                        out.planned.push((layer, dst));
+                        out.plan.push(op);
                     }
                     Err(_) => break, // destination full — next device
                 }
             }
         }
     }
+    out.cost = exec.into_cost();
     out
 }
 
@@ -124,6 +143,7 @@ mod tests {
     use crate::cluster::{Cluster, GIB};
     use crate::model::cost::CostModel;
     use crate::model::ModelConfig;
+    use crate::ops::PlanExecutor;
     use crate::util::{prop, rng::Rng};
 
     fn setup() -> (CostModel, Cluster, Placement) {
@@ -135,12 +155,26 @@ mod tests {
     }
 
     #[test]
+    fn planner_leaves_inputs_untouched() {
+        let (cm, cl, pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let used: Vec<f64> = (0..cl.n()).map(|d| cl.device(d).used_bytes()).collect();
+        let out = scale_up(&ops, &cl, &pl, &ScaleUpConfig::default());
+        assert!(!out.plan.is_empty());
+        for d in 0..cl.n() {
+            assert_eq!(cl.device(d).used_bytes(), used[d], "planner mutated device {d}");
+        }
+        assert_eq!(pl.inv_p_norm(), 40.0, "planner mutated placement");
+    }
+
+    #[test]
     fn speedup_monotonically_improves() {
         let (cm, mut cl, mut pl) = setup();
         let ops = ModuleOps::new(&cm, 2, "inst0");
-        let out = scale_up(&ops, &mut cl, &mut pl, &ScaleUpConfig::default());
-        assert!(!out.replicated.is_empty());
+        let out = scale_up(&ops, &cl, &pl, &ScaleUpConfig::default());
+        assert!(!out.planned.is_empty());
         assert!(out.speedup_after > out.speedup_before);
+        PlanExecutor::new(&ops).execute(&mut cl, &mut pl, &out.plan).unwrap();
         pl.validate(cl.n()).unwrap();
     }
 
@@ -148,34 +182,57 @@ mod tests {
     fn fills_eligible_devices_up_to_capacity() {
         let (cm, mut cl, mut pl) = setup();
         let ops = ModuleOps::new(&cm, 2, "inst0");
-        let out = scale_up(&ops, &mut cl, &mut pl, &ScaleUpConfig::default());
+        let out = scale_up(&ops, &cl, &pl, &ScaleUpConfig::default());
         // 3 empty A100s × (40960/608 ≈ 67 layers capacity) but only 40
         // layers exist per device — expect 120 replicas (40 on each).
-        assert_eq!(out.replicated.len(), 120, "{}", out.replicated.len());
+        assert_eq!(out.planned.len(), 120, "{}", out.planned.len());
+        PlanExecutor::new(&ops).execute(&mut cl, &mut pl, &out.plan).unwrap();
         for l in 0..40 {
             assert_eq!(pl.degree(l), 4);
         }
     }
 
     #[test]
-    fn respects_max_ops_per_round() {
-        let (cm, mut cl, mut pl) = setup();
+    fn dry_run_cost_matches_planner_cost() {
+        let (cm, cl, pl) = setup();
         let ops = ModuleOps::new(&cm, 2, "inst0");
-        let cfg = ScaleUpConfig { max_ops_per_round: 5, ..Default::default() };
-        let out = scale_up(&ops, &mut cl, &mut pl, &cfg);
-        assert_eq!(out.replicated.len(), 5);
+        let out = scale_up(&ops, &cl, &pl, &ScaleUpConfig::default());
+        let dry = out.plan.dry_run(&ops, &cl, &pl).unwrap();
+        assert_eq!(dry, out.cost, "planner shadow cost == dry-run cost");
     }
 
     #[test]
-    fn no_eligible_nodes_means_noop() {
+    fn executed_cost_matches_dry_run_exactly() {
         let (cm, mut cl, mut pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let cfg = ScaleUpConfig { max_ops_per_round: 12, ..Default::default() };
+        let out = scale_up(&ops, &cl, &pl, &cfg);
+        let dry = out.plan.dry_run(&ops, &cl, &pl).unwrap();
+        let executed =
+            PlanExecutor::new(&ops).execute(&mut cl, &mut pl, &out.plan).unwrap();
+        assert_eq!(dry, executed, "Table 2 parity: dry-run == executed");
+    }
+
+    #[test]
+    fn respects_max_ops_per_round() {
+        let (cm, cl, pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let cfg = ScaleUpConfig { max_ops_per_round: 5, ..Default::default() };
+        let out = scale_up(&ops, &cl, &pl, &cfg);
+        assert_eq!(out.planned.len(), 5);
+        assert_eq!(out.cost.per_op.len(), 5);
+    }
+
+    #[test]
+    fn no_eligible_nodes_means_empty_plan() {
+        let (cm, mut cl, pl) = setup();
         for d in 1..4 {
             cl.device_mut(d).alloc("hog", 35.0 * GIB).unwrap();
         }
         let ops = ModuleOps::new(&cm, 2, "inst0");
         let cfg = ScaleUpConfig { min_vacancy: 0.3, ..Default::default() };
-        let out = scale_up(&ops, &mut cl, &mut pl, &cfg);
-        assert!(out.replicated.is_empty());
+        let out = scale_up(&ops, &cl, &pl, &cfg);
+        assert!(out.plan.is_empty());
         assert_eq!(out.speedup_before, out.speedup_after);
     }
 
@@ -197,8 +254,9 @@ mod tests {
         let (cm, mut cl, mut pl) = setup();
         let ops = ModuleOps::new(&cm, 2, "inst0");
         let cfg = ScaleUpConfig { max_ops_per_round: 10, ..Default::default() };
-        let out = scale_up(&ops, &mut cl, &mut pl, &cfg);
-        assert_eq!(out.replicated.len(), 10);
+        let out = scale_up(&ops, &cl, &pl, &cfg);
+        assert_eq!(out.planned.len(), 10);
+        PlanExecutor::new(&ops).execute(&mut cl, &mut pl, &out.plan).unwrap();
         let continuity_transitions = pl.transition_count();
 
         // random order baseline
@@ -207,9 +265,10 @@ mod tests {
         let mut rng = Rng::new(99);
         let mut layers: Vec<usize> = (0..40).collect();
         rng.shuffle(&mut layers);
-        for &l in layers.iter().take(10) {
-            ops2.replicate_layer(&mut cl2, &mut pl2, l, 1).unwrap();
-        }
+        let random: Vec<usize> = layers.into_iter().take(10).collect();
+        PlanExecutor::new(&ops2)
+            .execute(&mut cl2, &mut pl2, &ScalePlan::replicate_batch(&random, 1))
+            .unwrap();
         let random_transitions = pl2.transition_count();
         assert!(
             continuity_transitions <= random_transitions,
@@ -218,7 +277,7 @@ mod tests {
     }
 
     #[test]
-    fn prop_scale_up_never_invalidates_placement() {
+    fn prop_scale_up_plans_stay_valid_and_monotone() {
         prop::check(
             "scale-up-valid",
             |r: &mut Rng| {
@@ -236,8 +295,17 @@ mod tests {
                 let mut pl = Placement::single_device(*n_layers, 0);
                 let ops = ModuleOps::new(&cm, 2, "inst0");
                 let before = s_homo_from_norm(0.05, *n_layers, pl.inv_p_norm());
-                let out = scale_up(&ops, &mut cl, &mut pl,
-                                   &ScaleUpConfig::default());
+                let out = scale_up(&ops, &cl, &pl, &ScaleUpConfig::default());
+                // the plan validates and executes against the same state
+                out.plan
+                    .validate(&ops, &cl, &pl)
+                    .map_err(|e| format!("planned plan invalid: {e}"))?;
+                let executed = PlanExecutor::new(&ops)
+                    .execute(&mut cl, &mut pl, &out.plan)
+                    .map_err(|e| format!("planned plan failed: {e}"))?;
+                if executed != out.cost {
+                    return Err("executed cost != planned cost".into());
+                }
                 pl.validate(cl.n())?;
                 if out.speedup_after + 1e-12 < before {
                     return Err("speedup regressed".into());

@@ -174,6 +174,23 @@ impl Device {
         Ok(())
     }
 
+    /// Restore `tag` to an exact previously-observed size, bypassing the
+    /// OOM check — the plan executor's rollback primitive. Rollback
+    /// re-establishes a state that *was* valid (it only ever shrinks
+    /// plan-made allocations back), so it must be infallible. `used` is
+    /// adjusted incrementally — the exact inverse of the `alloc` that is
+    /// being undone — rather than re-summed, so the restored value stays
+    /// in the same accumulation regime as the rest of the ledger.
+    pub(crate) fn restore_alloc(&mut self, tag: &str, prev_bytes: f64) {
+        let cur = self.allocs.get(tag).copied().unwrap_or(0.0);
+        if prev_bytes == 0.0 {
+            self.allocs.remove(tag);
+        } else {
+            self.allocs.insert(tag.to_string(), prev_bytes);
+        }
+        self.used = (self.used + prev_bytes - cur).max(0.0);
+    }
+
     pub fn alloc_bytes(&self, tag: &str) -> f64 {
         self.allocs.get(tag).copied().unwrap_or(0.0)
     }

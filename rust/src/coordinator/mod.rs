@@ -7,7 +7,13 @@
 //! involved.
 //!
 //! Paper-scale path: [`crate::sim::Simulation`] (same scheduler/autoscaler
-//! code over the cost-model substrate).
+//! code over the cost-model substrate). Scaling follows the plan/execute
+//! split everywhere: the [`crate::autoscale`] planners emit
+//! [`crate::plan::ScalePlan`]s and every ledger/placement mutation flows
+//! through [`crate::ops::PlanExecutor`] — the real-path coordinator will
+//! adopt the same executor once the engine grows multi-device placements,
+//! so a leader process can dry-run-cost a reconfiguration before
+//! committing to it.
 //!
 //! [`TinyEngine`]: crate::engine::TinyEngine
 //! [`Scheduler`]: crate::scheduler::Scheduler

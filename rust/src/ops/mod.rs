@@ -1,11 +1,17 @@
-//! Module-level operations: **replicate**, **migrate**, **evict** (§3.1).
+//! Module-operation costing and the **plan executor** (§3.1).
 //!
-//! These are the paper's primitive operators. Each operation:
+//! Replicate / migrate / evict are the paper's primitive operators. Since
+//! the plan/execute redesign, *all* ledger + placement mutation flows
+//! through [`PlanExecutor`] (atomic, two-phase) or [`PlanExecution`]
+//! (stepwise, used by the simulator's in-flight path):
 //!
-//! 1. moves/duplicates the module's bytes between device ledgers (and, on
-//!    the real path, the engine moves the weight literals / KV buffers),
-//! 2. updates the [`Placement`],
-//! 3. returns an [`OpCost`] from the transfer model below.
+//! * planners ([`crate::autoscale`]) build a [`crate::plan::ScalePlan`]
+//!   without touching any state,
+//! * [`crate::plan::ScalePlan::dry_run`] prices it — identical code path,
+//!   shadow state — so dry-run cost equals executed cost exactly,
+//! * the executor applies it with full rollback: a mid-plan failure leaves
+//!   cluster allocations and placement byte-identical to the pre-plan
+//!   state.
 //!
 //! ### Cost model (reproduces Table 2)
 //!
@@ -21,19 +27,24 @@
 //! The `(1 − mem_frac)` term models transfer slowdown as the target device
 //! fills (pinned-buffer contention) — it reproduces the paper's superlinear
 //! time growth at n→40 while staying principled (bytes / effective
-//! bandwidth). Post-scaling inter-replica communication setup is the
-//! paper's measured 39.1 ms constant.
+//! bandwidth). The launch cost is paid once per consecutive run of
+//! same-kind, same-destination ops in a plan — the Table 2 batch shape.
+//! Post-scaling inter-replica communication setup is the paper's measured
+//! 39.1 ms constant.
 
 use crate::cluster::Cluster;
 use crate::model::cost::{CostModel, Shape, MIB};
 use crate::model::{ModuleId, ModuleKind};
 use crate::placement::Placement;
+use crate::plan::{ModuleOp, PlanCost, PlanError, ScalePlan};
 
 /// Fixed launch/bookkeeping latency of a replication (hook installation,
 /// allocator setup). Calibrated to Table 2's n=1 row.
 pub const REPLICATION_LAUNCH_S: f64 = 0.292;
 /// Migration launches faster: the source's hooks are reused (§3.1).
 pub const MIGRATION_LAUNCH_S: f64 = 0.242;
+/// Replica eviction is metadata + a free — near-instant.
+pub const EVICT_TIME_S: f64 = 0.002;
 /// Fixed runtime overhead added once per operation batch (CUDA context,
 /// staging buffers) — Table 2's memory intercept.
 pub const OP_OVERHEAD_BYTES: f64 = 499.0 * MIB;
@@ -53,7 +64,7 @@ pub struct OpCost {
 }
 
 impl OpCost {
-    fn merge(self, other: OpCost) -> OpCost {
+    pub fn merge(self, other: OpCost) -> OpCost {
         OpCost {
             time_s: self.time_s + other.time_s,
             bytes_moved: self.bytes_moved + other.bytes_moved,
@@ -98,8 +109,9 @@ impl From<crate::cluster::AllocError> for OpError {
     }
 }
 
-/// Executes module operations against a cluster + placement, with costs
-/// from the instance's [`CostModel`].
+/// Costing + tagging context for module operations: the cost model, the
+/// serving precision, and the instance's ledger tag prefix. Pure — every
+/// mutation happens through [`PlanExecutor`] / [`PlanExecution`].
 pub struct ModuleOps<'a> {
     pub cost_model: &'a CostModel,
     /// Precision of resident weights (2 = bf16 at paper scale, 4 = f32 tiny).
@@ -162,146 +174,6 @@ impl<'a> ModuleOps<'a> {
         bytes / (bw * slow)
     }
 
-    // ---- replicate ---------------------------------------------------------
-
-    /// Replicate decoder layer `layer` onto `dst` (§3.1 Fig. 4): allocate a
-    /// copy of the layer's weights on `dst`, register the replica in the
-    /// placement, charge transfer + hook-installation time.
-    pub fn replicate_layer(
-        &self,
-        cluster: &mut Cluster,
-        placement: &mut Placement,
-        layer: usize,
-        dst: usize,
-    ) -> Result<OpCost, OpError> {
-        if placement.layer_devices(layer).contains(&dst) {
-            return Err(OpError::AlreadyResident(layer, dst));
-        }
-        let src = placement.primary_device(layer);
-        let bytes = self.module_bytes(ModuleKind::DecoderLayer);
-        let m = ModuleId::layer(ModuleKind::DecoderLayer, layer);
-        let time = REPLICATION_LAUNCH_S / 1.0_f64.max(1.0)
-            + self.transfer_time(cluster, src, dst, bytes);
-        cluster
-            .device_mut(dst)
-            .alloc(&self.tag(&m, dst), bytes)?;
-        placement.add_replica(layer, dst);
-        Ok(OpCost { time_s: time, bytes_moved: bytes, dst_bytes: bytes })
-    }
-
-    /// Replicate a *batch* of layers in one operation — the Table 2 shape.
-    /// The launch cost is paid once; transfers are sequential on the link.
-    pub fn replicate_layers(
-        &self,
-        cluster: &mut Cluster,
-        placement: &mut Placement,
-        layers: &[usize],
-        dst: usize,
-    ) -> Result<OpCost, OpError> {
-        let mut total = OpCost { time_s: REPLICATION_LAUNCH_S, ..Default::default() };
-        for &l in layers {
-            let src = placement.primary_device(l);
-            let bytes = self.module_bytes(ModuleKind::DecoderLayer);
-            let m = ModuleId::layer(ModuleKind::DecoderLayer, l);
-            let t = self.transfer_time(cluster, src, dst, bytes);
-            cluster.device_mut(dst).alloc(&self.tag(&m, dst), bytes)?;
-            placement.add_replica(l, dst);
-            total = total.merge(OpCost { time_s: t, bytes_moved: bytes, dst_bytes: bytes });
-        }
-        Ok(total)
-    }
-
-    // ---- migrate -----------------------------------------------------------
-
-    /// Migrate a whole decoder layer: copy to `dst`, free on the source,
-    /// repoint the placement primary (§3.1 Fig. 5; optionally the KV cache
-    /// moves with it — the engine handles cache bytes separately).
-    pub fn migrate_layer(
-        &self,
-        cluster: &mut Cluster,
-        placement: &mut Placement,
-        layer: usize,
-        dst: usize,
-    ) -> Result<OpCost, OpError> {
-        let src = placement.primary_device(layer);
-        if src == dst || placement.layer_devices(layer).contains(&dst) {
-            return Err(OpError::AlreadyResident(layer, dst));
-        }
-        let bytes = self.module_bytes(ModuleKind::DecoderLayer);
-        let m = ModuleId::layer(ModuleKind::DecoderLayer, layer);
-        let time = MIGRATION_LAUNCH_S + self.transfer_time(cluster, src, dst, bytes);
-        cluster.device_mut(dst).alloc(&self.tag(&m, dst), bytes)?;
-        // Free the source copy only after the destination allocation
-        // succeeded (migration must never lose the module).
-        let _ = cluster.device_mut(src).free(&self.tag(&m, src));
-        placement.migrate_layer(layer, dst);
-        Ok(OpCost { time_s: time, bytes_moved: bytes, dst_bytes: bytes })
-    }
-
-    /// Migrate a batch of layers (Table 2's migration column).
-    pub fn migrate_layers(
-        &self,
-        cluster: &mut Cluster,
-        placement: &mut Placement,
-        layers: &[usize],
-        dst: usize,
-    ) -> Result<OpCost, OpError> {
-        let mut total = OpCost { time_s: MIGRATION_LAUNCH_S, ..Default::default() };
-        for &l in layers {
-            let src = placement.primary_device(l);
-            if src == dst {
-                continue;
-            }
-            let bytes = self.module_bytes(ModuleKind::DecoderLayer);
-            let m = ModuleId::layer(ModuleKind::DecoderLayer, l);
-            let t = self.transfer_time(cluster, src, dst, bytes);
-            cluster.device_mut(dst).alloc(&self.tag(&m, dst), bytes)?;
-            let _ = cluster.device_mut(src).free(&self.tag(&m, src));
-            placement.migrate_layer(l, dst);
-            total = total.merge(OpCost { time_s: t, bytes_moved: bytes, dst_bytes: bytes });
-        }
-        Ok(total)
-    }
-
-    /// Migrate a sub-layer module (projection, attention, FFN, or KV cache —
-    /// §3.3 granularity). `extra_bytes` covers dynamic payloads (KV cache
-    /// contents); weight-bearing kinds use the cost model's size.
-    pub fn migrate_module(
-        &self,
-        cluster: &mut Cluster,
-        placement: &mut Placement,
-        m: ModuleId,
-        dst: usize,
-        extra_bytes: f64,
-    ) -> Result<OpCost, OpError> {
-        let src = placement.module_device(m);
-        let bytes = self.module_bytes(m.kind) + extra_bytes;
-        let time = MIGRATION_LAUNCH_S + self.transfer_time(cluster, src, dst, bytes);
-        cluster.device_mut(dst).alloc(&self.tag(&m, dst), bytes)?;
-        let _ = cluster.device_mut(src).free(&self.tag(&m, src));
-        placement.migrate_module(m, dst);
-        Ok(OpCost { time_s: time, bytes_moved: bytes, dst_bytes: bytes })
-    }
-
-    // ---- evict ------------------------------------------------------------
-
-    /// Remove a layer replica (scale-down phase 2). Frees destination
-    /// memory; near-instant (no transfer).
-    pub fn evict_replica(
-        &self,
-        cluster: &mut Cluster,
-        placement: &mut Placement,
-        layer: usize,
-        device: usize,
-    ) -> Result<OpCost, OpError> {
-        if !placement.remove_replica(layer, device) {
-            return Err(OpError::NoSuchReplica(layer, device));
-        }
-        let m = ModuleId::layer(ModuleKind::DecoderLayer, layer);
-        let freed = cluster.device_mut(device).free(&self.tag(&m, device)).unwrap_or(0.0);
-        Ok(OpCost { time_s: 0.002, bytes_moved: 0.0, dst_bytes: -freed })
-    }
-
     /// Table 2 analytic costs for an n-layer operation onto a device at
     /// `dst_mem_frac` fill — used by the bench and by planning (the
     /// controller consults this before executing).
@@ -313,6 +185,279 @@ impl<'a> ModuleOps<'a> {
         let time = launch + n_layers as f64 * layer_bytes / (link_bw * slow);
         let mem = OP_OVERHEAD_BYTES + n_layers as f64 * layer_bytes;
         (time, mem)
+    }
+}
+
+// ---- plan execution --------------------------------------------------------
+
+/// Launch-amortization classes (replication vs migration hooks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum LaunchKind {
+    Replicate,
+    Migrate,
+}
+
+/// One reversible effect recorded while applying a plan.
+#[derive(Debug, Clone)]
+enum UndoEntry {
+    /// A ledger tag's size before the op touched it.
+    Ledger { device: usize, tag: String, prev_bytes: f64 },
+    AddedReplica { layer: usize, device: usize },
+    MovedPrimary { layer: usize, from: usize },
+    MovedModule { module: ModuleId, prev: Option<usize> },
+    RemovedReplica { layer: usize, device: usize },
+}
+
+/// Stepwise execution state of one plan: the undo log, the accumulated
+/// [`PlanCost`], and the launch-amortization cursor.
+///
+/// [`ScalePlan::dry_run`] drives one of these over shadow state; the
+/// simulator drives one op-at-a-time as `OpCompleted` events fire (so
+/// scaling overlaps serving); [`PlanExecutor::execute`] drives one to
+/// completion atomically. All three therefore price ops identically.
+#[derive(Debug, Default)]
+pub struct PlanExecution {
+    undo: Vec<UndoEntry>,
+    /// Source allocations to release at [`PlanExecution::commit`], as
+    /// (device, tag, bytes-at-apply-time). Migration is copy-then-free:
+    /// the source copy stays resident (and serving) until the whole plan
+    /// lands, so rollback never has to re-acquire memory another actor
+    /// may have claimed meanwhile. The recorded *amount* is subtracted at
+    /// commit — a later op in the same plan may legitimately re-allocate
+    /// under the same tag (evict-then-replicate, migrate-back), and its
+    /// bytes must survive the commit.
+    pending_frees: Vec<(usize, String, f64)>,
+    cost: PlanCost,
+    last_launch: Option<(LaunchKind, usize)>,
+    applied: usize,
+    eager_frees: bool,
+}
+
+impl PlanExecution {
+    pub fn new() -> PlanExecution {
+        PlanExecution::default()
+    }
+
+    /// Planner mode: frees apply immediately so a shadow search observes
+    /// the relief an op buys (Algorithm 2's violation predicate). Not
+    /// rollback-safe — planners discard their shadows instead.
+    pub fn eager() -> PlanExecution {
+        PlanExecution { eager_frees: true, ..PlanExecution::default() }
+    }
+
+    /// Release the current allocation under `tag` now (eager/planner
+    /// mode) or at commit (two-phase mode). Returns the bytes released.
+    fn release(&mut self, cluster: &mut Cluster, device: usize, tag: String) -> f64 {
+        let bytes = cluster.device(device).alloc_bytes(&tag);
+        if self.eager_frees {
+            let _ = cluster.device_mut(device).free(&tag);
+        } else if bytes > 0.0 {
+            self.pending_frees.push((device, tag, bytes));
+        }
+        bytes
+    }
+
+    /// Commit the plan: release every deferred source allocation and
+    /// return the accumulated cost. Call after the last op applied.
+    /// Frees subtract the amount recorded at apply time, never the whole
+    /// tag — bytes a later op re-allocated under the same tag survive.
+    pub fn commit(mut self, cluster: &mut Cluster) -> PlanCost {
+        for (device, tag, bytes) in self.pending_frees.drain(..) {
+            let dev = cluster.device_mut(device);
+            let remaining = (dev.alloc_bytes(&tag) - bytes).max(0.0);
+            let _ = dev.resize(&tag, remaining);
+        }
+        self.cost
+    }
+
+    /// Ops applied so far.
+    pub fn applied(&self) -> usize {
+        self.applied
+    }
+
+    /// Cost accumulated so far.
+    pub fn cost(&self) -> &PlanCost {
+        &self.cost
+    }
+
+    pub fn into_cost(self) -> PlanCost {
+        self.cost
+    }
+
+    /// Launch cost for this op: paid once per consecutive run of same-kind
+    /// ops to the same destination (Table 2 batch amortization). Pure —
+    /// the cursor advances via [`PlanExecution::note_launch`] only after
+    /// the op's fallible part succeeded, so a failed op leaves no trace.
+    fn launch_cost(&self, kind: LaunchKind, dst: usize) -> f64 {
+        if self.last_launch == Some((kind, dst)) {
+            return 0.0;
+        }
+        match kind {
+            LaunchKind::Replicate => REPLICATION_LAUNCH_S,
+            LaunchKind::Migrate => MIGRATION_LAUNCH_S,
+        }
+    }
+
+    fn note_launch(&mut self, kind: LaunchKind, dst: usize) {
+        self.last_launch = Some((kind, dst));
+    }
+
+    /// Apply one op against live state, recording its inverse. On `Err`
+    /// the op itself left no trace; previously applied ops stay applied
+    /// (call [`PlanExecution::rollback`] to unwind them).
+    pub fn apply_next(
+        &mut self,
+        ops: &ModuleOps<'_>,
+        cluster: &mut Cluster,
+        placement: &mut Placement,
+        op: &ModuleOp,
+    ) -> Result<OpCost, OpError> {
+        let cost = match *op {
+            ModuleOp::Replicate { layer, dst } => {
+                if placement.layer_devices(layer).contains(&dst) {
+                    return Err(OpError::AlreadyResident(layer, dst));
+                }
+                let src = placement.primary_device(layer);
+                let bytes = ops.module_bytes(ModuleKind::DecoderLayer);
+                let m = ModuleId::layer(ModuleKind::DecoderLayer, layer);
+                let time = self.launch_cost(LaunchKind::Replicate, dst)
+                    + ops.transfer_time(cluster, src, dst, bytes);
+                let tag = ops.tag(&m, dst);
+                let prev_bytes = cluster.device(dst).alloc_bytes(&tag);
+                cluster.device_mut(dst).alloc(&tag, bytes)?;
+                self.note_launch(LaunchKind::Replicate, dst);
+                self.undo.push(UndoEntry::Ledger { device: dst, tag, prev_bytes });
+                placement.add_replica(layer, dst);
+                self.undo.push(UndoEntry::AddedReplica { layer, device: dst });
+                OpCost { time_s: time, bytes_moved: bytes, dst_bytes: bytes }
+            }
+            ModuleOp::MigrateLayer { layer, dst } => {
+                let src = placement.primary_device(layer);
+                if src == dst || placement.layer_devices(layer).contains(&dst) {
+                    return Err(OpError::AlreadyResident(layer, dst));
+                }
+                let bytes = ops.module_bytes(ModuleKind::DecoderLayer);
+                let m = ModuleId::layer(ModuleKind::DecoderLayer, layer);
+                let time = self.launch_cost(LaunchKind::Migrate, dst)
+                    + ops.transfer_time(cluster, src, dst, bytes);
+                let dst_tag = ops.tag(&m, dst);
+                let prev_bytes = cluster.device(dst).alloc_bytes(&dst_tag);
+                cluster.device_mut(dst).alloc(&dst_tag, bytes)?;
+                self.note_launch(LaunchKind::Migrate, dst);
+                self.undo.push(UndoEntry::Ledger { device: dst, tag: dst_tag, prev_bytes });
+                // Copy-then-free: the source copy is released only when
+                // the plan commits (migration must never lose the module,
+                // and rollback must never need to re-acquire memory).
+                self.release(cluster, src, ops.tag(&m, src));
+                placement.migrate_layer(layer, dst);
+                self.undo.push(UndoEntry::MovedPrimary { layer, from: src });
+                OpCost { time_s: time, bytes_moved: bytes, dst_bytes: bytes }
+            }
+            ModuleOp::MigrateModule { module, dst, payload_bytes } => {
+                let src = placement.module_device(module);
+                if src == dst {
+                    return Err(OpError::AlreadyResident(module.layer.unwrap_or(0), dst));
+                }
+                let bytes = ops.module_bytes(module.kind) + payload_bytes;
+                let time = self.launch_cost(LaunchKind::Migrate, dst)
+                    + ops.transfer_time(cluster, src, dst, bytes);
+                let dst_tag = ops.tag(&module, dst);
+                let prev_bytes = cluster.device(dst).alloc_bytes(&dst_tag);
+                cluster.device_mut(dst).alloc(&dst_tag, bytes)?;
+                self.note_launch(LaunchKind::Migrate, dst);
+                self.undo.push(UndoEntry::Ledger { device: dst, tag: dst_tag, prev_bytes });
+                self.release(cluster, src, ops.tag(&module, src));
+                let prev = placement.module_override(module);
+                placement.migrate_module(module, dst);
+                self.undo.push(UndoEntry::MovedModule { module, prev });
+                OpCost { time_s: time, bytes_moved: bytes, dst_bytes: bytes }
+            }
+            ModuleOp::Evict { layer, device } => {
+                if !placement.remove_replica(layer, device) {
+                    return Err(OpError::NoSuchReplica(layer, device));
+                }
+                self.undo.push(UndoEntry::RemovedReplica { layer, device });
+                let m = ModuleId::layer(ModuleKind::DecoderLayer, layer);
+                let freed = self.release(cluster, device, ops.tag(&m, device));
+                // an eviction breaks a transfer batch: the next transfer
+                // pays its launch again
+                self.last_launch = None;
+                OpCost { time_s: EVICT_TIME_S, bytes_moved: 0.0, dst_bytes: -freed }
+            }
+        };
+        self.applied += 1;
+        self.cost.push(cost);
+        Ok(cost)
+    }
+
+    /// Unwind every applied op, newest first, restoring the exact ledger
+    /// sizes and placement entries recorded before each effect. Source
+    /// frees were deferred to commit, so rollback only ever *releases*
+    /// destination allocations — it cannot fail; placement inverses
+    /// tolerate entries a concurrent actor already reverted.
+    pub fn rollback(mut self, cluster: &mut Cluster, placement: &mut Placement) {
+        debug_assert!(!self.eager_frees, "eager (planner) executions are not rolled back");
+        self.pending_frees.clear(); // sources were never freed
+        for entry in self.undo.drain(..).rev() {
+            match entry {
+                UndoEntry::Ledger { device, tag, prev_bytes } => {
+                    cluster.device_mut(device).restore_alloc(&tag, prev_bytes);
+                }
+                UndoEntry::AddedReplica { layer, device } => {
+                    placement.remove_replica(layer, device);
+                }
+                UndoEntry::MovedPrimary { layer, from } => {
+                    if placement.primary_device(layer) != from
+                        && !placement.layer_devices(layer).contains(&from)
+                    {
+                        placement.migrate_layer(layer, from);
+                    }
+                }
+                UndoEntry::MovedModule { module, prev } => match prev {
+                    Some(d) => placement.migrate_module(module, d),
+                    None => {
+                        placement.unmigrate_module(module);
+                    }
+                },
+                UndoEntry::RemovedReplica { layer, device } => {
+                    if !placement.layer_devices(layer).contains(&device) {
+                        placement.add_replica(layer, device);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Atomic plan executor: two-phase **prepare** (validate against the
+/// current state, touching nothing) then **commit** (apply op-by-op; the
+/// first failure rolls every applied op back). Either the whole plan
+/// lands, or cluster allocations and placement are byte-identical to the
+/// pre-call state.
+pub struct PlanExecutor<'a> {
+    pub ops: &'a ModuleOps<'a>,
+}
+
+impl<'a> PlanExecutor<'a> {
+    pub fn new(ops: &'a ModuleOps<'a>) -> PlanExecutor<'a> {
+        PlanExecutor { ops }
+    }
+
+    pub fn execute(
+        &self,
+        cluster: &mut Cluster,
+        placement: &mut Placement,
+        plan: &ScalePlan,
+    ) -> Result<PlanCost, PlanError> {
+        plan.validate(self.ops, cluster, placement)?;
+        let mut exec = PlanExecution::new();
+        for (i, op) in plan.ops.iter().enumerate() {
+            if let Err(error) = exec.apply_next(self.ops, cluster, placement, op) {
+                exec.rollback(cluster, placement);
+                return Err(PlanError::Failed { op_idx: i, error });
+            }
+        }
+        Ok(exec.commit(cluster))
     }
 }
 
@@ -329,25 +474,35 @@ mod tests {
         (cm, cluster, placement)
     }
 
+    fn replicate(
+        ops: &ModuleOps<'_>,
+        cl: &mut Cluster,
+        pl: &mut Placement,
+        layer: usize,
+        dst: usize,
+    ) -> Result<PlanCost, PlanError> {
+        PlanExecutor::new(ops).execute(cl, pl, &ScalePlan::replicate_batch(&[layer], dst))
+    }
+
     #[test]
     fn replicate_allocates_and_registers() {
         let (cm, mut cl, mut pl) = setup();
         let ops = ModuleOps::new(&cm, 2, "inst0");
-        let c = ops.replicate_layer(&mut cl, &mut pl, 5, 1).unwrap();
+        let c = replicate(&ops, &mut cl, &mut pl, 5, 1).unwrap();
         assert!(pl.layer_devices(5).contains(&1));
         assert!(cl.device(1).used_bytes() > 600.0 * MIB);
-        assert!(c.time_s > REPLICATION_LAUNCH_S);
-        assert!(c.time_s < 1.0, "sub-second op: {}", c.time_s);
+        assert!(c.total.time_s > REPLICATION_LAUNCH_S);
+        assert!(c.total.time_s < 1.0, "sub-second op: {}", c.total.time_s);
     }
 
     #[test]
     fn replicate_twice_rejected() {
         let (cm, mut cl, mut pl) = setup();
         let ops = ModuleOps::new(&cm, 2, "inst0");
-        ops.replicate_layer(&mut cl, &mut pl, 5, 1).unwrap();
+        replicate(&ops, &mut cl, &mut pl, 5, 1).unwrap();
         assert!(matches!(
-            ops.replicate_layer(&mut cl, &mut pl, 5, 1),
-            Err(OpError::AlreadyResident(5, 1))
+            replicate(&ops, &mut cl, &mut pl, 5, 1),
+            Err(PlanError::Rejected { op_idx: 0, .. })
         ));
     }
 
@@ -361,7 +516,9 @@ mod tests {
         cl.device_mut(0).alloc(&ops.tag(&m, 0), bytes).unwrap();
 
         let before_src = cl.device(0).used_bytes();
-        ops.migrate_layer(&mut cl, &mut pl, 3, 2).unwrap();
+        PlanExecutor::new(&ops)
+            .execute(&mut cl, &mut pl, &ScalePlan::migrate_batch(&[3], 2))
+            .unwrap();
         assert_eq!(pl.primary_device(3), 2);
         assert!(cl.device(0).used_bytes() < before_src);
         assert!((cl.device(2).used_bytes() - bytes).abs() < 1.0);
@@ -401,14 +558,16 @@ mod tests {
     fn evict_frees_memory() {
         let (cm, mut cl, mut pl) = setup();
         let ops = ModuleOps::new(&cm, 2, "inst0");
-        ops.replicate_layer(&mut cl, &mut pl, 7, 1).unwrap();
+        replicate(&ops, &mut cl, &mut pl, 7, 1).unwrap();
         let used = cl.device(1).used_bytes();
-        ops.evict_replica(&mut cl, &mut pl, 7, 1).unwrap();
+        let evict = ScalePlan { ops: vec![ModuleOp::Evict { layer: 7, device: 1 }] };
+        let c = PlanExecutor::new(&ops).execute(&mut cl, &mut pl, &evict).unwrap();
         assert!(cl.device(1).used_bytes() < used);
+        assert!(c.total.dst_bytes < 0.0, "eviction frees destination bytes");
         assert_eq!(pl.degree(7), 1);
         assert!(matches!(
-            ops.evict_replica(&mut cl, &mut pl, 7, 1),
-            Err(OpError::NoSuchReplica(7, 1))
+            PlanExecutor::new(&ops).execute(&mut cl, &mut pl, &evict),
+            Err(PlanError::Rejected { op_idx: 0, .. })
         ));
     }
 
@@ -418,8 +577,11 @@ mod tests {
         let ops = ModuleOps::new(&cm, 2, "inst0");
         let kv = ModuleId::layer(ModuleKind::KvCache, 0);
         let payload = 2.0e9; // 2 GB of cache
-        let c = ops.migrate_module(&mut cl, &mut pl, kv, 3, payload).unwrap();
-        assert!(c.bytes_moved >= payload);
+        let plan = ScalePlan {
+            ops: vec![ModuleOp::MigrateModule { module: kv, dst: 3, payload_bytes: payload }],
+        };
+        let c = PlanExecutor::new(&ops).execute(&mut cl, &mut pl, &plan).unwrap();
+        assert!(c.total.bytes_moved >= payload);
         assert_eq!(pl.module_device(kv), 3);
         assert!(cl.device(3).used_bytes() >= payload);
     }
@@ -429,8 +591,8 @@ mod tests {
         let (cm, mut cl, mut pl) = setup();
         let ops = ModuleOps::new(&cm, 2, "inst0");
         cl.device_mut(1).alloc("hog", 39.9 * 1024.0 * MIB).unwrap();
-        let r = ops.replicate_layer(&mut cl, &mut pl, 0, 1);
-        assert!(matches!(r, Err(OpError::DestinationOom(_))));
+        let r = replicate(&ops, &mut cl, &mut pl, 0, 1);
+        assert!(matches!(r, Err(PlanError::Rejected { .. })));
         assert_eq!(pl.degree(0), 1);
     }
 
@@ -438,17 +600,124 @@ mod tests {
     fn replication_batch_amortizes_launch() {
         let (cm, mut cl, mut pl) = setup();
         let ops = ModuleOps::new(&cm, 2, "inst0");
-        let batch = ops
-            .replicate_layers(&mut cl, &mut pl, &[0, 1, 2, 3], 1)
+        let ex = PlanExecutor::new(&ops);
+        let batch = ex
+            .execute(&mut cl, &mut pl, &ScalePlan::replicate_batch(&[0, 1, 2, 3], 1))
             .unwrap();
         let mut cl2 = Cluster::paper_testbed();
         let mut pl2 = Placement::single_device(40, 0);
         let mut single = OpCost::default();
-        for l in 0..4 {
-            single = single.merge(
-                ops.replicate_layer(&mut cl2, &mut pl2, l, 1).unwrap(),
-            );
+        for l in 0..4usize {
+            let c = ex
+                .execute(&mut cl2, &mut pl2, &ScalePlan::replicate_batch(&[l], 1))
+                .unwrap();
+            single = single.merge(c.total);
         }
-        assert!(batch.time_s < single.time_s);
+        assert!(batch.total.time_s < single.time_s);
+    }
+
+    #[test]
+    fn mid_plan_failure_rolls_back_applied_ops() {
+        // The simulator's in-flight path applies ops without re-validating
+        // the whole plan, so a later op can hit a genuine OOM; rollback
+        // must restore the pre-plan state exactly.
+        let (cm, mut cl, mut pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let layer_bytes = ops.module_bytes(ModuleKind::DecoderLayer);
+        let hog = cl.device(1).free_bytes() - 1.5 * layer_bytes;
+        cl.device_mut(1).alloc("hog", hog).unwrap();
+        let used_before = cl.device(1).used_bytes();
+
+        let plan = ScalePlan::replicate_batch(&[0, 1], 1);
+        let mut exec = PlanExecution::new();
+        assert!(exec.apply_next(&ops, &mut cl, &mut pl, &plan.ops[0]).is_ok());
+        assert!(matches!(
+            exec.apply_next(&ops, &mut cl, &mut pl, &plan.ops[1]),
+            Err(OpError::DestinationOom(_))
+        ));
+        assert_eq!(pl.degree(0), 2, "first replica really landed");
+        exec.rollback(&mut cl, &mut pl);
+        assert_eq!(pl.degree(0), 1, "replica retracted");
+        assert_eq!(cl.device(1).used_bytes(), used_before);
+    }
+
+    #[test]
+    fn migration_defers_source_free_to_commit() {
+        let (cm, mut cl, mut pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let m = ModuleId::layer(ModuleKind::DecoderLayer, 3);
+        let bytes = ops.module_bytes(ModuleKind::DecoderLayer);
+        cl.device_mut(0).alloc(&ops.tag(&m, 0), bytes).unwrap();
+        let src_before = cl.device(0).used_bytes();
+
+        let plan = ScalePlan::migrate_batch(&[3], 2);
+        let mut exec = PlanExecution::new();
+        exec.apply_next(&ops, &mut cl, &mut pl, &plan.ops[0]).unwrap();
+        // both copies resident while the plan is in flight (copy-then-free)
+        assert_eq!(cl.device(0).used_bytes(), src_before);
+        assert!(cl.device(2).used_bytes() >= bytes);
+        assert_eq!(pl.primary_device(3), 2);
+        exec.commit(&mut cl);
+        assert!(cl.device(0).used_bytes() < src_before, "source freed at commit");
+    }
+
+    #[test]
+    fn commit_preserves_bytes_reallocated_under_a_pending_tag() {
+        // evict-then-replicate the same layer on the same device: the
+        // replicate lands new bytes under the tag whose old bytes are
+        // pending free — commit must subtract only the evicted amount.
+        let (cm, mut cl, mut pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let ex = PlanExecutor::new(&ops);
+        ex.execute(&mut cl, &mut pl, &ScalePlan::replicate_batch(&[7], 1)).unwrap();
+        let bytes = ops.module_bytes(ModuleKind::DecoderLayer);
+        let tag = ops.tag(&ModuleId::layer(ModuleKind::DecoderLayer, 7), 1);
+
+        let plan = ScalePlan {
+            ops: vec![
+                ModuleOp::Evict { layer: 7, device: 1 },
+                ModuleOp::Replicate { layer: 7, dst: 1 },
+            ],
+        };
+        ex.execute(&mut cl, &mut pl, &plan).unwrap();
+        assert_eq!(pl.degree(7), 2, "replica re-established");
+        assert!(
+            (cl.device(1).alloc_bytes(&tag) - bytes).abs() < 1.0,
+            "commit must not destroy the re-allocated copy: {} vs {bytes}",
+            cl.device(1).alloc_bytes(&tag)
+        );
+    }
+
+    #[test]
+    fn failed_op_does_not_consume_launch_amortization() {
+        let (cm, mut cl, mut pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let free = cl.device(1).free_bytes();
+        cl.device_mut(1).alloc("hog", free - 1.0).unwrap();
+        let mut exec = PlanExecution::new();
+        let op = ModuleOp::Replicate { layer: 0, dst: 1 };
+        assert!(exec.apply_next(&ops, &mut cl, &mut pl, &op).is_err());
+        // space frees up; the retried op must still pay its launch
+        cl.device_mut(1).free("hog").unwrap();
+        let c = exec.apply_next(&ops, &mut cl, &mut pl, &op).unwrap();
+        assert!(
+            c.time_s > REPLICATION_LAUNCH_S,
+            "launch not charged after a failed attempt: {}",
+            c.time_s
+        );
+    }
+
+    #[test]
+    fn stepwise_execution_matches_atomic_cost() {
+        let (cm, mut cl, mut pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let plan = ScalePlan::replicate_batch(&[0, 1, 2], 1);
+        let dry = plan.dry_run(&ops, &cl, &pl).unwrap();
+        let mut exec = PlanExecution::new();
+        for op in &plan.ops {
+            exec.apply_next(&ops, &mut cl, &mut pl, op).unwrap();
+        }
+        assert_eq!(exec.applied(), 3);
+        assert_eq!(*exec.cost(), dry, "stepwise == dry-run, bit for bit");
     }
 }

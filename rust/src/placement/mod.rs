@@ -98,6 +98,13 @@ impl Placement {
         self.migrated.iter()
     }
 
+    /// The migration override for a module, if any (`None` = the module
+    /// lives with its layer's primary). Used by the plan executor to
+    /// record the exact pre-op state for rollback.
+    pub fn module_override(&self, m: ModuleId) -> Option<usize> {
+        self.migrated.get(&m).copied()
+    }
+
     /// Layers whose replica set contains `device`.
     pub fn replicas_on(&self, device: usize) -> Vec<usize> {
         (0..self.n_layers)

@@ -1,0 +1,433 @@
+//! Declarative scaling plans — the *what* of a scaling decision, decoupled
+//! from the *when* and *how* of its execution.
+//!
+//! The paper's §3.1 claim is that module operations are cheap enough to run
+//! **while serving continues**. Modeling that precisely requires scaling to
+//! be a first-class, timed, abortable activity instead of an instantaneous
+//! side effect — so the scaling stack is split three ways:
+//!
+//! 1. **Planners** ([`crate::autoscale::scale_up`] /
+//!    [`crate::autoscale::scale_down`]) are *pure*: they read the cluster
+//!    and placement and return a [`ScalePlan`], never a mutation.
+//! 2. **Plans** (this module) are validated, costed batches of
+//!    [`ModuleOp`]s. [`ScalePlan::dry_run`] prices a plan against the
+//!    current ledgers without touching them; the dry-run cost equals the
+//!    executed cost *exactly* (Table 2 parity) because both walk the same
+//!    state evolution.
+//! 3. **The executor** ([`crate::ops::PlanExecutor`]) applies a plan with
+//!    two-phase prepare/commit semantics: a mid-plan failure (e.g.
+//!    [`crate::ops::OpError::DestinationOom`]) rolls every prior op back,
+//!    leaving cluster allocations and placement byte-identical to the
+//!    pre-plan state.
+//!
+//! The simulation kernel executes plans *in flight*: each op becomes an
+//! `OpStarted`/`OpCompleted` event pair whose duration comes from the
+//! plan's costed ops, so replication genuinely overlaps serving and
+//! migration blocks only the moved module (see `sim`).
+
+use crate::cluster::Cluster;
+use crate::model::{ModuleId, ModuleKind};
+use crate::ops::{ModuleOps, OpCost, OpError, PlanExecution};
+use crate::placement::Placement;
+
+/// One primitive module operation (§3.1): the unit of a [`ScalePlan`].
+///
+/// Sources are implicit — resolved from the placement at validation /
+/// execution time — so a plan stays valid under re-planning as long as the
+/// ops themselves remain feasible.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ModuleOp {
+    /// Copy decoder layer `layer` onto `dst`, registering a replica
+    /// (Fig. 4). The source copy keeps serving during the transfer.
+    Replicate { layer: usize, dst: usize },
+    /// Move decoder layer `layer`'s primary residence to `dst` (Fig. 5).
+    /// The layer is unavailable for the transfer's duration.
+    MigrateLayer { layer: usize, dst: usize },
+    /// Move a sub-layer module (attention, FFN, projection, KV cache) to
+    /// `dst`. `payload_bytes` covers dynamic contents (live KV cache).
+    MigrateModule { module: ModuleId, dst: usize, payload_bytes: f64 },
+    /// Drop the replica of `layer` on `device` (scale-down phase 2).
+    Evict { layer: usize, device: usize },
+}
+
+impl ModuleOp {
+    /// Does executing this op take a serving-path module offline for the
+    /// op's duration? Replication never does (the source keeps serving);
+    /// migration blocks exactly the moved module; eviction is metadata.
+    pub fn blocks_serving(&self) -> bool {
+        matches!(self, ModuleOp::MigrateLayer { .. } | ModuleOp::MigrateModule { .. })
+    }
+
+    /// Is this a replication (drives the post-plan inter-replica
+    /// communication setup barrier, §6.5)?
+    pub fn is_replication(&self) -> bool {
+        matches!(self, ModuleOp::Replicate { .. })
+    }
+
+    /// Compact human-readable form for logs and event records.
+    pub fn describe(&self) -> String {
+        match self {
+            ModuleOp::Replicate { layer, dst } => format!("replicate L{layer}->d{dst}"),
+            ModuleOp::MigrateLayer { layer, dst } => format!("migrate L{layer}->d{dst}"),
+            ModuleOp::MigrateModule { module, dst, .. } => {
+                format!("migrate {module}->d{dst}")
+            }
+            ModuleOp::Evict { layer, device } => format!("evict L{layer}@d{device}"),
+        }
+    }
+}
+
+/// Why a plan was refused before execution, or where it failed during it.
+#[derive(Debug)]
+pub enum PlanError {
+    /// Validation rejected op `op_idx` — nothing was touched.
+    Rejected { op_idx: usize, reason: String },
+    /// Execution (or dry-run) failed at op `op_idx`. After an execution
+    /// failure the executor has already rolled back; state is pre-plan.
+    Failed { op_idx: usize, error: OpError },
+}
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanError::Rejected { op_idx, reason } => {
+                write!(f, "plan rejected at op {op_idx}: {reason}")
+            }
+            PlanError::Failed { op_idx, error } => {
+                write!(f, "plan failed at op {op_idx}: {error}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PlanError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            PlanError::Failed { error, .. } => Some(error),
+            PlanError::Rejected { .. } => None,
+        }
+    }
+}
+
+/// Full price of a plan: per-op costs (event durations in the simulator)
+/// plus their merged total. Produced identically by [`ScalePlan::dry_run`]
+/// and [`crate::ops::PlanExecutor::execute`].
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct PlanCost {
+    pub per_op: Vec<OpCost>,
+    pub total: OpCost,
+}
+
+impl PlanCost {
+    pub fn push(&mut self, c: OpCost) {
+        self.total = self.total.merge(c);
+        self.per_op.push(c);
+    }
+
+    pub fn time_s(&self) -> f64 {
+        self.total.time_s
+    }
+}
+
+/// An ordered batch of module operations, executed atomically by the
+/// [`crate::ops::PlanExecutor`] or op-by-op (in flight) by the simulator.
+///
+/// Launch cost amortizes across consecutive ops of the same kind to the
+/// same destination — the Table 2 batch shape (`n` layers in one
+/// operation pay one launch).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ScalePlan {
+    pub ops: Vec<ModuleOp>,
+}
+
+impl ScalePlan {
+    pub fn new() -> ScalePlan {
+        ScalePlan::default()
+    }
+
+    pub fn push(&mut self, op: ModuleOp) {
+        self.ops.push(op);
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// The Table 2 batch-replication shape: `layers` onto one destination.
+    pub fn replicate_batch(layers: &[usize], dst: usize) -> ScalePlan {
+        ScalePlan {
+            ops: layers.iter().map(|&layer| ModuleOp::Replicate { layer, dst }).collect(),
+        }
+    }
+
+    /// The Table 2 batch-migration shape.
+    pub fn migrate_batch(layers: &[usize], dst: usize) -> ScalePlan {
+        ScalePlan {
+            ops: layers.iter().map(|&layer| ModuleOp::MigrateLayer { layer, dst }).collect(),
+        }
+    }
+
+    /// Check feasibility against the *current* cluster + placement without
+    /// touching either: index ranges, residency rules, and destination
+    /// capacity, walking the plan's own state evolution (an op may depend
+    /// on memory freed or residency created by an earlier op).
+    pub fn validate(
+        &self,
+        ops: &ModuleOps<'_>,
+        cluster: &Cluster,
+        placement: &Placement,
+    ) -> Result<(), PlanError> {
+        let mut pl = placement.clone();
+        let mut free: Vec<f64> =
+            (0..cluster.n()).map(|d| cluster.device(d).free_bytes()).collect();
+        let reject = |op_idx: usize, reason: String| -> Result<(), PlanError> {
+            Err(PlanError::Rejected { op_idx, reason })
+        };
+        for (i, op) in self.ops.iter().enumerate() {
+            match *op {
+                ModuleOp::Replicate { layer, dst } => {
+                    if dst >= cluster.n() {
+                        return reject(i, format!("unknown device {dst}"));
+                    }
+                    if layer >= pl.n_layers {
+                        return reject(i, format!("layer {layer} out of range"));
+                    }
+                    if pl.layer_devices(layer).contains(&dst) {
+                        return reject(i, format!("layer {layer} already on device {dst}"));
+                    }
+                    let bytes = ops.module_bytes(ModuleKind::DecoderLayer);
+                    if bytes > free[dst] {
+                        return reject(i, format!("device {dst} lacks {bytes:.0} B"));
+                    }
+                    free[dst] -= bytes;
+                    pl.add_replica(layer, dst);
+                }
+                ModuleOp::MigrateLayer { layer, dst } => {
+                    if dst >= cluster.n() {
+                        return reject(i, format!("unknown device {dst}"));
+                    }
+                    if layer >= pl.n_layers {
+                        return reject(i, format!("layer {layer} out of range"));
+                    }
+                    let src = pl.primary_device(layer);
+                    if src == dst || pl.layer_devices(layer).contains(&dst) {
+                        return reject(i, format!("layer {layer} already on device {dst}"));
+                    }
+                    let bytes = ops.module_bytes(ModuleKind::DecoderLayer);
+                    if bytes > free[dst] {
+                        return reject(i, format!("device {dst} lacks {bytes:.0} B"));
+                    }
+                    // Source bytes are released only at plan commit
+                    // (copy-then-free), so they are never credited here.
+                    free[dst] -= bytes;
+                    pl.migrate_layer(layer, dst);
+                }
+                ModuleOp::MigrateModule { module, dst, payload_bytes } => {
+                    if dst >= cluster.n() {
+                        return reject(i, format!("unknown device {dst}"));
+                    }
+                    if module.kind == ModuleKind::DecoderLayer {
+                        return reject(i, "whole layers use MigrateLayer".into());
+                    }
+                    if let Some(l) = module.layer {
+                        if l >= pl.n_layers {
+                            return reject(i, format!("layer {l} out of range"));
+                        }
+                    }
+                    if payload_bytes < 0.0 || !payload_bytes.is_finite() {
+                        return reject(i, format!("bad payload {payload_bytes}"));
+                    }
+                    let src = pl.module_device(module);
+                    if src == dst {
+                        return reject(i, format!("module {module} already on device {dst}"));
+                    }
+                    let bytes = ops.module_bytes(module.kind) + payload_bytes;
+                    if bytes > free[dst] {
+                        return reject(i, format!("device {dst} lacks {bytes:.0} B"));
+                    }
+                    free[dst] -= bytes;
+                    // The source may not carry a dedicated ledger tag (the
+                    // module ships inside its layer's deployment alloc), so
+                    // freed source bytes are not credited predictively.
+                    pl.migrate_module(module, dst);
+                }
+                ModuleOp::Evict { layer, device } => {
+                    if device >= cluster.n() {
+                        return reject(i, format!("unknown device {device}"));
+                    }
+                    if layer >= pl.n_layers {
+                        return reject(i, format!("layer {layer} out of range"));
+                    }
+                    if !pl.remove_replica(layer, device) {
+                        return reject(i, format!("no replica of layer {layer} on {device}"));
+                    }
+                    // eviction's free is deferred to commit — no credit
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Price the plan against the current state **without mutating it**:
+    /// replays the plan on shadow copies through the exact code path the
+    /// executor uses, so the returned [`PlanCost`] equals the executed
+    /// cost bit-for-bit (Table 2 parity contract).
+    pub fn dry_run(
+        &self,
+        ops: &ModuleOps<'_>,
+        cluster: &Cluster,
+        placement: &Placement,
+    ) -> Result<PlanCost, PlanError> {
+        let mut cl = cluster.clone();
+        let mut pl = placement.clone();
+        let mut exec = PlanExecution::new();
+        for (i, op) in self.ops.iter().enumerate() {
+            exec.apply_next(ops, &mut cl, &mut pl, op)
+                .map_err(|error| PlanError::Failed { op_idx: i, error })?;
+        }
+        Ok(exec.commit(&mut cl))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::cost::CostModel;
+    use crate::model::ModelConfig;
+    use crate::ops::{PlanExecutor, MIGRATION_LAUNCH_S, REPLICATION_LAUNCH_S};
+
+    fn setup() -> (CostModel, Cluster, Placement) {
+        let cm = CostModel::new(ModelConfig::llama2_13b());
+        let cluster = Cluster::paper_testbed();
+        let placement = Placement::single_device(40, 0);
+        (cm, cluster, placement)
+    }
+
+    #[test]
+    fn validate_accepts_feasible_plans() {
+        let (cm, cl, pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let plan = ScalePlan::replicate_batch(&[0, 1, 2], 1);
+        plan.validate(&ops, &cl, &pl).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_double_residency() {
+        let (cm, cl, pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        // second op replicates a layer the first op already placed on d1
+        let mut plan = ScalePlan::new();
+        plan.push(ModuleOp::Replicate { layer: 3, dst: 1 });
+        plan.push(ModuleOp::Replicate { layer: 3, dst: 1 });
+        let err = plan.validate(&ops, &cl, &pl).unwrap_err();
+        assert!(matches!(err, PlanError::Rejected { op_idx: 1, .. }), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_predicted_oom() {
+        let (cm, mut cl, pl) = setup();
+        cl.device_mut(1).alloc("hog", cl.device(1).free_bytes() - 1.0).unwrap();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let plan = ScalePlan::replicate_batch(&[0], 1);
+        assert!(matches!(
+            plan.validate(&ops, &cl, &pl),
+            Err(PlanError::Rejected { op_idx: 0, .. })
+        ));
+    }
+
+    #[test]
+    fn validate_never_credits_deferred_frees() {
+        // Frees (migration sources, evictions) happen at plan *commit*,
+        // after every alloc — so validation must not count them as
+        // available capacity, in either op order.
+        let (cm, mut cl, mut pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let ex = PlanExecutor::new(&ops);
+        ex.execute(&mut cl, &mut pl, &ScalePlan::replicate_batch(&[7], 1)).unwrap();
+        let slack = ops.module_bytes(ModuleKind::DecoderLayer) * 0.5;
+        let hog = cl.device(1).free_bytes() - slack;
+        cl.device_mut(1).alloc("hog", hog).unwrap();
+        // evicting first does NOT make room for the new replica pre-commit
+        let mut plan = ScalePlan::new();
+        plan.push(ModuleOp::Evict { layer: 7, device: 1 });
+        plan.push(ModuleOp::Replicate { layer: 8, dst: 1 });
+        assert!(matches!(
+            plan.validate(&ops, &cl, &pl),
+            Err(PlanError::Rejected { op_idx: 1, .. })
+        ));
+        // with a full slot free, the same plan validates and executes
+        cl.device_mut(1).free("hog").unwrap();
+        let hog = cl.device(1).free_bytes() - 1.5 * ops.module_bytes(ModuleKind::DecoderLayer);
+        cl.device_mut(1).alloc("hog", hog).unwrap();
+        plan.validate(&ops, &cl, &pl).unwrap();
+        ex.execute(&mut cl, &mut pl, &plan).unwrap();
+        assert_eq!(pl.degree(7), 1);
+        assert!(pl.layer_devices(8).contains(&1));
+    }
+
+    #[test]
+    fn dry_run_leaves_state_untouched() {
+        let (cm, cl, pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let used_before: Vec<f64> =
+            (0..cl.n()).map(|d| cl.device(d).used_bytes()).collect();
+        let plan = ScalePlan::replicate_batch(&[0, 1, 2, 3], 1);
+        let cost = plan.dry_run(&ops, &cl, &pl).unwrap();
+        assert!(cost.total.time_s > REPLICATION_LAUNCH_S);
+        assert_eq!(cost.per_op.len(), 4);
+        for d in 0..cl.n() {
+            assert_eq!(cl.device(d).used_bytes(), used_before[d]);
+        }
+        assert_eq!(pl.degree(0), 1, "dry run must not register replicas");
+    }
+
+    #[test]
+    fn launch_amortizes_within_same_destination_runs() {
+        let (cm, cl, pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let batch = ScalePlan::replicate_batch(&[0, 1, 2, 3], 1)
+            .dry_run(&ops, &cl, &pl)
+            .unwrap();
+        // four separate single-op plans each pay the launch
+        let mut singles = 0.0;
+        for l in 0..4usize {
+            singles += ScalePlan::replicate_batch(&[l], 1)
+                .dry_run(&ops, &cl, &pl)
+                .unwrap()
+                .total
+                .time_s;
+        }
+        assert!(batch.total.time_s < singles);
+        // only the first op of the run carries the launch term
+        assert!(batch.per_op[0].time_s > REPLICATION_LAUNCH_S);
+        assert!(batch.per_op[1].time_s < MIGRATION_LAUNCH_S);
+    }
+
+    #[test]
+    fn dry_run_detects_execution_failures() {
+        let (cm, mut cl, pl) = setup();
+        cl.device_mut(1).alloc("hog", cl.device(1).free_bytes() - 1.0).unwrap();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let plan = ScalePlan::replicate_batch(&[0, 1], 1);
+        assert!(matches!(
+            plan.dry_run(&ops, &cl, &pl),
+            Err(PlanError::Failed { op_idx: 0, error: OpError::DestinationOom(_) })
+        ));
+    }
+
+    #[test]
+    fn describe_is_compact() {
+        assert_eq!(
+            ModuleOp::Replicate { layer: 3, dst: 1 }.describe(),
+            "replicate L3->d1"
+        );
+        assert_eq!(ModuleOp::Evict { layer: 2, device: 0 }.describe(), "evict L2@d0");
+        assert!(ModuleOp::MigrateLayer { layer: 0, dst: 2 }.blocks_serving());
+        assert!(!ModuleOp::Replicate { layer: 0, dst: 2 }.blocks_serving());
+        assert!(!ModuleOp::Evict { layer: 0, device: 2 }.blocks_serving());
+    }
+}

@@ -2,12 +2,13 @@
 //!
 //! A binary heap of timestamped events with **fully deterministic
 //! ordering**: events pop by ascending time, then by kind priority
-//! (arrivals before controller ticks before step completions before
-//! wake-ups — the same precedence the original lockstep loop applied when
-//! several things coincided on one tick), then by instance id, then by
-//! insertion sequence. Two runs over the same trace therefore process an
-//! identical event sequence, which is what makes the golden-replay test
-//! (byte-identical metrics JSON) possible.
+//! (arrivals before controller ticks before scaling-op starts/completions
+//! before step completions before wake-ups — scaling ops apply before a
+//! coinciding step completion so the step's successor sees the post-op
+//! placement), then by instance id, then by insertion sequence. Two runs
+//! over the same trace therefore process an identical event sequence,
+//! which is what makes the golden-replay test (byte-identical metrics
+//! JSON) possible.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -19,6 +20,15 @@ pub enum EventKind {
     Arrival { request_idx: usize },
     /// The §5 controller evaluates every autoscaling instance.
     ControllerTick,
+    /// Op `op_idx` of instance `instance`'s in-flight [`crate::plan::ScalePlan`]
+    /// finishes: its ledger + placement effects apply now — this is what
+    /// makes scaling overlap serving instead of pausing it. Completions
+    /// order before starts so an abort invalidates the next op's start
+    /// event (epoch bump) before it fires at the same instant.
+    OpCompleted { instance: usize, op_idx: usize, epoch: u64 },
+    /// Op `op_idx` begins its transfer. `epoch` guards against events of
+    /// an aborted/superseded plan (stale epochs are ignored).
+    OpStarted { instance: usize, op_idx: usize, epoch: u64 },
     /// Instance `instance` finishes the in-flight step started as its
     /// `token`-th step (stale completions — e.g. after an OOM rebuild
     /// cleared the step — carry an old token and are ignored).
@@ -33,8 +43,10 @@ impl EventKind {
         match self {
             EventKind::Arrival { .. } => 0,
             EventKind::ControllerTick => 1,
-            EventKind::StepComplete { .. } => 2,
-            EventKind::Wake { .. } => 3,
+            EventKind::OpCompleted { .. } => 2,
+            EventKind::OpStarted { .. } => 3,
+            EventKind::StepComplete { .. } => 4,
+            EventKind::Wake { .. } => 5,
         }
     }
 
@@ -42,9 +54,10 @@ impl EventKind {
     fn instance_key(&self) -> usize {
         match self {
             EventKind::Arrival { .. } | EventKind::ControllerTick => 0,
-            EventKind::StepComplete { instance, .. } | EventKind::Wake { instance } => {
-                *instance
-            }
+            EventKind::OpCompleted { instance, .. }
+            | EventKind::OpStarted { instance, .. }
+            | EventKind::StepComplete { instance, .. }
+            | EventKind::Wake { instance } => *instance,
         }
     }
 }
@@ -160,12 +173,16 @@ mod tests {
         q.push(5.0, EventKind::StepComplete { instance: 0, token: 1 });
         q.push(5.0, EventKind::ControllerTick);
         q.push(5.0, EventKind::Arrival { request_idx: 7 });
+        q.push(5.0, EventKind::OpCompleted { instance: 0, op_idx: 0, epoch: 1 });
+        q.push(5.0, EventKind::OpStarted { instance: 0, op_idx: 1, epoch: 1 });
         let kinds: Vec<EventKind> = drain(&mut q).iter().map(|e| e.kind).collect();
         assert_eq!(
             kinds,
             vec![
                 EventKind::Arrival { request_idx: 7 },
                 EventKind::ControllerTick,
+                EventKind::OpCompleted { instance: 0, op_idx: 0, epoch: 1 },
+                EventKind::OpStarted { instance: 0, op_idx: 1, epoch: 1 },
                 EventKind::StepComplete { instance: 0, token: 1 },
                 EventKind::Wake { instance: 0 },
             ]

@@ -5,22 +5,35 @@
 //! monitor, and OOM/penalty bookkeeping. The event kernel
 //! ([`crate::sim::Simulation`]) only decides *when* an instance runs; every
 //! *what* — starting prefill/decode steps, admitting KV, handling OOM per
-//! policy, executing scale-up/scale-down rounds — happens here, against the
-//! shared [`Cluster`] ledgers. That separation is what lets instances
-//! advance at their own step cadence (heterogeneous layer counts, different
-//! batch sizes) instead of a global tick.
+//! policy, applying scaling-plan ops as their events fire — happens here,
+//! against the shared [`Cluster`] ledgers. That separation is what lets
+//! instances advance at their own step cadence (heterogeneous layer
+//! counts, different batch sizes) instead of a global tick.
+//!
+//! ### In-flight plan execution
+//!
+//! Scaling is not instantaneous: an admitted [`ScalePlan`] becomes a
+//! sequence of `OpStarted`/`OpCompleted` events whose durations come from
+//! the plan's dry-run costing. Replication overlaps serving entirely (the
+//! source replica keeps serving; only the §6.5 communication-setup barrier
+//! pauses the instance when the plan lands). Migration blocks *only the
+//! moved module* — modeled as the instance not starting new steps while a
+//! migrate op is in flight (every step traverses the moved module, so it
+//! is on the critical path), while steps already in flight finish
+//! untouched. A mid-plan failure rolls every applied op back.
 
-use crate::autoscale::{scale_down, scale_up, Pressure, ScaleDownConfig, ScaleUpConfig};
+use crate::autoscale::{scale_down, Pressure, ScaleDownConfig};
 use crate::cluster::Cluster;
 use crate::kvcache::{ContiguousKvCache, KvCache, KvStats, PagedKvCache};
 use crate::model::cost::{CostModel, Shape};
 use crate::model::{ModuleId, ModuleKind};
 use crate::monitor::{Completion, Monitor};
-use crate::ops::{ModuleOps, REPLICA_COMM_SETUP_S};
+use crate::ops::{ModuleOps, OpCost, PlanExecution, PlanExecutor, REPLICA_COMM_SETUP_S};
 use crate::placement::Placement;
+use crate::plan::{PlanCost, ScalePlan};
 use crate::scheduler::{split_batch, Scheduler, Step};
 
-use super::metrics::ScaleStats;
+use super::metrics::{OpEvent, OpPhase, ScaleStats};
 use super::{OomBehavior, SimConfig, SimPolicy, DECODE_BUSY_FRACTION, SYNC_PAUSE_S};
 
 /// Read-only per-event context the kernel hands to instance methods.
@@ -40,6 +53,37 @@ pub(crate) enum StepStart {
     /// A KV admission OOM was handled per policy; the kernel should retry
     /// after a backoff instead of spinning at the same timestamp.
     OomStall,
+    /// A scaling op blocks the serving path (in-flight migration or the
+    /// post-replication sync barrier); retry at `until`.
+    Blocked { until: f64 },
+}
+
+/// A plan being executed op-by-op by the event kernel.
+pub(crate) struct InflightPlan {
+    pub plan: ScalePlan,
+    /// Undo log + launch-amortization cursor for the applied prefix.
+    pub exec: PlanExecution,
+    /// Admission-time per-op costs — the scheduled event durations.
+    pub costs: Vec<OpCost>,
+    /// Guards against events of superseded plans.
+    pub epoch: u64,
+    /// Next op expected to complete.
+    pub next_op: usize,
+    /// Replication plans pay the §6.5 comm-setup barrier at completion.
+    pub had_replication: bool,
+}
+
+/// What applying one in-flight op event did (for the kernel's log).
+#[derive(Debug)]
+pub(crate) enum OpOutcome {
+    /// Event belongs to a superseded/aborted plan — ignored.
+    Stale,
+    /// Op transfer began.
+    Started { desc: String },
+    /// Op effects applied; `finished` = whole plan landed.
+    Applied { desc: String, cost: OpCost, finished: bool },
+    /// Op failed against the live ledgers; the plan was rolled back.
+    Aborted { desc: String },
 }
 
 /// One simulated model instance.
@@ -56,8 +100,15 @@ pub(crate) struct Instance {
     /// Monotone step counter; stale `StepComplete` events are detected by
     /// comparing against the token they carry.
     pub step_token: u64,
-    /// Post-scaling replica-communication setup to charge to the next step.
-    pub pending_setup_s: f64,
+    /// Serving-path block horizon: new steps cannot start before this
+    /// (in-flight migrations, post-replication sync barrier, emergency
+    /// corrective pauses).
+    pub op_block_until: f64,
+    /// The scaling plan currently executing in flight, if any.
+    pub inflight: Option<InflightPlan>,
+    /// Monotone plan counter; events carry the epoch they were scheduled
+    /// under so an aborted plan's remaining events die quietly.
+    pub plan_epoch: u64,
     /// Steps since the last OOM (drives batch-size recovery after backoff).
     pub clean_steps: u64,
     pub monitor: Monitor,
@@ -106,7 +157,9 @@ impl Instance {
             batch_size: policy.scheduler.max_batch,
             busy_until: None,
             step_token: 0,
-            pending_setup_s: 0.0,
+            op_block_until: 0.0,
+            inflight: None,
+            plan_epoch: 0,
             clean_steps: 0,
             monitor: Monitor::new(cfg.slo_latency_s),
             kv_peak: Default::default(),
@@ -138,6 +191,10 @@ impl Instance {
         (0..self.placement.n_layers)
             .map(|l| self.placement.primary_device(l))
             .collect()
+    }
+
+    fn module_ops<'a>(&self, ctx: &StepCtx<'a>) -> ModuleOps<'a> {
+        ModuleOps::new(ctx.cost, ctx.cfg.dtype_bytes, &format!("inst{}", self.id))
     }
 
     // ---- step latency (the roofline substitute for real execution) -------
@@ -345,54 +402,207 @@ impl Instance {
                 let _ = self.sync_kv(cluster);
             }
             OomBehavior::ScaleDown => {
-                self.run_scale_down(ctx, cluster, Pressure::Memory, scale);
+                self.emergency_scale_down(ctx, cluster, Pressure::Memory, scale);
                 let _ = self.sync_kv(cluster);
             }
         }
     }
 
-    // ---- auto-scaling -----------------------------------------------------
+    // ---- in-flight plan execution -----------------------------------------
 
-    /// One Algorithm 1 round for this instance (replica harvesting).
-    pub fn run_scale_up(
+    /// Accept a controller-planned [`ScalePlan`] for in-flight execution.
+    /// Returns the plan epoch and each op's `(start, end)` times for the
+    /// kernel to schedule as `OpStarted`/`OpCompleted` events. `batch_after`
+    /// (the phase-3 scale-down decision) applies immediately — it is a
+    /// scheduler config change, not a transfer.
+    pub fn admit_plan(
         &mut self,
-        ctx: &StepCtx<'_>,
+        now: f64,
+        plan: ScalePlan,
+        cost: PlanCost,
+        batch_after: Option<usize>,
+    ) -> (u64, Vec<(f64, f64)>) {
+        debug_assert_eq!(plan.len(), cost.per_op.len());
+        if let Some(b) = batch_after {
+            self.batch_size = b;
+        }
+        self.plan_epoch += 1;
+        let epoch = self.plan_epoch;
+        let mut spans = Vec::with_capacity(cost.per_op.len());
+        let mut t = now;
+        for c in &cost.per_op {
+            spans.push((t, t + c.time_s));
+            t += c.time_s;
+        }
+        let had_replication = plan.ops.iter().any(|o| o.is_replication());
+        self.inflight = Some(InflightPlan {
+            plan,
+            exec: PlanExecution::new(),
+            costs: cost.per_op,
+            epoch,
+            next_op: 0,
+            had_replication,
+        });
+        (epoch, spans)
+    }
+
+    /// Roll back and discard the in-flight plan, if any (emergency
+    /// corrections supersede background scaling).
+    pub fn abort_inflight(
+        &mut self,
+        now: f64,
         cluster: &mut Cluster,
-        gamma: f64,
         scale: &mut ScaleStats,
     ) {
-        let held: usize = (0..self.placement.n_layers)
-            .map(|l| self.placement.degree(l) - 1)
-            .sum();
-        let remaining = ctx.cfg.replica_budget.saturating_sub(held);
-        if remaining == 0 {
-            return;
-        }
-        let ops = ModuleOps::new(ctx.cost, ctx.cfg.dtype_bytes, &format!("inst{}", self.id));
-        let cfg = ScaleUpConfig { gamma, min_vacancy: 0.45, max_ops_per_round: remaining };
-        let out = scale_up(&ops, cluster, &mut self.placement, &cfg);
-        if !out.replicated.is_empty() {
-            scale.scale_ups += 1;
-            // Replication copies weights *concurrently* with serving (§8:
-            // <3% throughput fluctuation on neighbours); the serving path
-            // pays only a short synchronization pause plus the §6.5
-            // 39.1 ms replica communication setup. The full op transfer
-            // time is tracked separately for cost reporting (Table 2).
-            self.pending_setup_s += SYNC_PAUSE_S + REPLICA_COMM_SETUP_S;
-            scale.op_time_s += out.cost.time_s;
+        if let Some(fl) = self.inflight.take() {
+            let desc = fl
+                .plan
+                .ops
+                .get(fl.next_op)
+                .map(|o| o.describe())
+                .unwrap_or_default();
+            fl.exec.rollback(cluster, &mut self.placement);
+            self.plan_epoch += 1; // kill the plan's remaining events
+            scale.plans_aborted += 1;
+            scale.events.push(OpEvent {
+                t: now,
+                instance: self.id,
+                op_idx: fl.next_op,
+                phase: OpPhase::Aborted,
+                desc,
+            });
         }
     }
 
-    /// One Algorithm 2 round for this instance (graduated reduction).
-    pub fn run_scale_down(
+    /// An `OpStarted` event fired: begin blocking the serving path if the
+    /// op takes a serving module offline (migration).
+    pub fn on_op_started(&mut self, now: f64, op_idx: usize, epoch: u64) -> OpOutcome {
+        let Some(fl) = self.inflight.as_ref() else { return OpOutcome::Stale };
+        if fl.epoch != epoch || op_idx >= fl.plan.len() {
+            return OpOutcome::Stale;
+        }
+        let op = fl.plan.ops[op_idx];
+        let duration = fl.costs[op_idx].time_s;
+        if op.blocks_serving() {
+            self.op_block_until = self.op_block_until.max(now + duration);
+        }
+        OpOutcome::Started { desc: op.describe() }
+    }
+
+    /// An `OpCompleted` event fired: apply the op's ledger + placement
+    /// effects now (the transfer is done). On failure against the live
+    /// ledgers — serving may have grown into the planned space — the whole
+    /// plan rolls back, leaving allocations and placement as before it
+    /// started.
+    pub fn on_op_completed(
+        &mut self,
+        ctx: &StepCtx<'_>,
+        cluster: &mut Cluster,
+        op_idx: usize,
+        epoch: u64,
+    ) -> OpOutcome {
+        let Some(mut fl) = self.inflight.take() else { return OpOutcome::Stale };
+        if fl.epoch != epoch || fl.next_op != op_idx {
+            self.inflight = Some(fl);
+            return OpOutcome::Stale;
+        }
+        let ops = self.module_ops(ctx);
+        let op = fl.plan.ops[op_idx];
+        match fl.exec.apply_next(&ops, cluster, &mut self.placement, &op) {
+            Ok(cost) => {
+                fl.next_op += 1;
+                let finished = fl.next_op == fl.plan.len();
+                if finished {
+                    // commit: release migrated/evicted source copies now
+                    // that the whole plan landed (copy-then-free)
+                    let _ = fl.exec.commit(cluster);
+                    if fl.had_replication {
+                        // §6.5: inter-replica communication setup — the
+                        // only serving-path pause replication causes.
+                        self.op_block_until = self
+                            .op_block_until
+                            .max(ctx.now + SYNC_PAUSE_S + REPLICA_COMM_SETUP_S);
+                    }
+                } else {
+                    self.inflight = Some(fl);
+                }
+                OpOutcome::Applied { desc: op.describe(), cost, finished }
+            }
+            Err(_) => {
+                fl.exec.rollback(cluster, &mut self.placement);
+                self.plan_epoch += 1;
+                OpOutcome::Aborted { desc: op.describe() }
+            }
+        }
+    }
+
+    // ---- emergency corrective scaling -------------------------------------
+
+    /// Synchronous Algorithm 2 round, used on the OOM path where relief
+    /// cannot wait for in-flight execution: plan (pure), then execute
+    /// atomically through the [`PlanExecutor`]. The serving path pays the
+    /// transfer as a corrective pause (Table 2: 0.25–0.8 s), capped at 1 s.
+    pub fn emergency_scale_down(
         &mut self,
         ctx: &StepCtx<'_>,
         cluster: &mut Cluster,
         pressure: Pressure,
         scale: &mut ScaleStats,
     ) {
-        // the most loaded device hosting this instance
-        let hot = (0..self.placement.n_layers)
+        // an emergency supersedes background scaling — unwind it first so
+        // the corrective plan sees consistent state
+        self.abort_inflight(ctx.now, cluster, scale);
+        let hot = self.hottest_primary_device(cluster);
+        let kv_per_layer =
+            self.kv.stats().reserved_bytes / self.placement.n_layers as f64;
+        let ops = self.module_ops(ctx);
+        let slo = ctx.cfg.slo_latency_s;
+        let out = scale_down(
+            &ops,
+            cluster,
+            &self.placement,
+            hot,
+            pressure,
+            self.batch_size,
+            &ScaleDownConfig::default(),
+            |_l| kv_per_layer,
+            |cl, _pl, _bs| cl.device(hot).mem_frac() > 0.92 && slo > 0.0,
+        );
+        if out.actions.is_empty() {
+            return;
+        }
+        scale.scale_downs += 1;
+        self.batch_size = out.batch_size;
+        if out.plan.is_empty() {
+            return; // phase-3-only relief: nothing to execute
+        }
+        match PlanExecutor::new(&ops).execute(cluster, &mut self.placement, &out.plan) {
+            Ok(cost) => {
+                scale.op_time_s += cost.total.time_s;
+                self.op_block_until =
+                    self.op_block_until.max(ctx.now + cost.total.time_s.min(1.0));
+                for (k, op) in out.plan.ops.iter().enumerate() {
+                    scale.events.push(OpEvent {
+                        t: ctx.now,
+                        instance: self.id,
+                        op_idx: k,
+                        phase: OpPhase::Completed,
+                        desc: op.describe(),
+                    });
+                }
+            }
+            Err(_) => {
+                // Planned against this exact state, so execution cannot
+                // fail in practice; if it ever does the executor has
+                // already rolled back — only the batch reduction stands.
+                scale.plans_aborted += 1;
+            }
+        }
+    }
+
+    /// The most memory-loaded device hosting this instance's primaries.
+    pub fn hottest_primary_device(&self, cluster: &Cluster) -> usize {
+        (0..self.placement.n_layers)
             .map(|l| self.placement.primary_device(l))
             .max_by(|&a, &b| {
                 cluster
@@ -401,31 +611,7 @@ impl Instance {
                     .partial_cmp(&cluster.device(b).mem_frac())
                     .unwrap()
             })
-            .unwrap_or(0);
-        let kv_per_layer =
-            self.kv.stats().reserved_bytes / self.placement.n_layers as f64;
-        let batch = self.batch_size;
-        let ops = ModuleOps::new(ctx.cost, ctx.cfg.dtype_bytes, &format!("inst{}", self.id));
-        let slo = ctx.cfg.slo_latency_s;
-        let out = scale_down(
-            &ops,
-            cluster,
-            &mut self.placement,
-            hot,
-            pressure,
-            batch,
-            &ScaleDownConfig::default(),
-            |_l| kv_per_layer,
-            |cl, _pl, _bs| cl.device(hot).mem_frac() > 0.92 && slo > 0.0,
-        );
-        if !out.actions.is_empty() {
-            scale.scale_downs += 1;
-            // Migration is a corrective op on the critical path: the hot
-            // device pauses for the transfer (Table 2: 0.25–0.8 s).
-            self.pending_setup_s += out.cost.time_s.min(1.0);
-            self.batch_size = out.batch_size;
-            scale.op_time_s += out.cost.time_s;
-        }
+            .unwrap_or(0)
     }
 
     // ---- the state machine ------------------------------------------------
@@ -439,6 +625,11 @@ impl Instance {
         contention: f64,
         scale: &mut ScaleStats,
     ) -> StepStart {
+        // A migration in flight (or the post-replication sync barrier)
+        // holds the serving path: every step traverses the moved module.
+        if ctx.now + 1e-9 < self.op_block_until {
+            return StepStart::Blocked { until: self.op_block_until };
+        }
         // Batch capacity = (possibly scaled-down) base batch × the mean
         // layer degree: replica sets add data-parallel lanes (Fig. 4).
         // Recovery: a reloaded static engine creeps back toward its
@@ -491,7 +682,6 @@ impl Instance {
                     .unwrap_or(8);
                 let mut dt = self.prefill_step_time(ctx, cluster, batch, max_seq);
                 dt *= contention;
-                dt += std::mem::take(&mut self.pending_setup_s);
                 self.charge_busy(cluster, dt); // prefill is compute-bound: full busy
                 self.scheduler.on_prefilled(&request_ids);
                 self.begin_busy(ctx.now + dt)
@@ -522,7 +712,6 @@ impl Instance {
                 };
                 let mut dt = self.decode_step_time(ctx, cluster, batch, mean_ctx);
                 dt *= contention;
-                dt += std::mem::take(&mut self.pending_setup_s);
                 // Decode is HBM-bandwidth-bound: the SMs are only partially
                 // occupied during the step (what NVML-style compute
                 // utilization reports — the Fig. 2 signal).
@@ -573,6 +762,7 @@ impl Instance {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::autoscale::{scale_up, ScaleUpConfig};
     use crate::baselines;
     use crate::cluster::GIB;
 
@@ -593,6 +783,20 @@ mod tests {
             prompt_tokens: prompt,
             output_tokens: out,
         });
+    }
+
+    /// Plan a scale-up round against the live state (test helper mirroring
+    /// the controller path).
+    fn plan_up(
+        cfg: &SimConfig,
+        cost: &CostModel,
+        cluster: &Cluster,
+        inst: &Instance,
+        max_ops: usize,
+    ) -> crate::autoscale::ScaleUpPlan {
+        let ops = ModuleOps::new(cost, cfg.dtype_bytes, "inst0");
+        let up = ScaleUpConfig { min_vacancy: 0.45, max_ops_per_round: max_ops, ..Default::default() };
+        scale_up(&ops, cluster, &inst.placement, &up)
     }
 
     #[test]
@@ -680,24 +884,111 @@ mod tests {
     }
 
     #[test]
-    fn scale_up_adds_replicas_and_setup_pause() {
+    fn inflight_plan_applies_op_by_op_then_pays_barrier() {
         let (cfg, cost, mut cluster, mut inst) = setup(baselines::cocoserve(16));
-        let mut scale = ScaleStats::default();
-        let ctx = StepCtx { cfg: &cfg, cost: &cost, now: 0.0 };
-        inst.run_scale_up(&ctx, &mut cluster, 0.05, &mut scale);
-        assert_eq!(scale.scale_ups, 1);
-        assert!(inst.pending_setup_s > 0.0);
-        assert!(scale.op_time_s > 0.0);
+        let up = plan_up(&cfg, &cost, &cluster, &inst, 3);
+        assert_eq!(up.planned.len(), 3);
+        let (epoch, spans) = inst.admit_plan(0.0, up.plan, up.cost, None);
+        assert_eq!(spans.len(), 3);
+        assert!(spans[0].1 > spans[0].0, "ops take time");
+        for (k, &(t0, t1)) in spans.iter().enumerate() {
+            let s = inst.on_op_started(t0, k, epoch);
+            assert!(matches!(s, OpOutcome::Started { .. }));
+            // replication never blocks serving mid-transfer
+            assert!(inst.op_block_until <= t0 + 1e-12, "replication blocked serving");
+            let ctx = StepCtx { cfg: &cfg, cost: &cost, now: t1 };
+            let done = inst.on_op_completed(&ctx, &mut cluster, k, epoch);
+            let OpOutcome::Applied { finished, .. } = done else {
+                panic!("expected applied, got {done:?}")
+            };
+            assert_eq!(finished, k == 2);
+        }
+        assert!(inst.inflight.is_none());
+        // the §6.5 comm-setup barrier lands after the last op
+        let end = spans[2].1;
+        assert!(
+            (inst.op_block_until - (end + SYNC_PAUSE_S + REPLICA_COMM_SETUP_S)).abs()
+                < 1e-9
+        );
         let max_deg = (0..inst.placement.n_layers)
             .map(|l| inst.placement.degree(l))
             .max()
             .unwrap();
-        assert!(max_deg > 1, "some layer gained a replica");
+        assert!(max_deg > 1, "replicas landed");
         inst.placement.validate(cluster.n()).unwrap();
     }
 
     #[test]
-    fn scale_down_under_memory_pressure_acts() {
+    fn mid_flight_failure_rolls_the_whole_plan_back() {
+        let (cfg, cost, mut cluster, mut inst) = setup(baselines::cocoserve(16));
+        let up = plan_up(&cfg, &cost, &cluster, &inst, 2);
+        let (epoch, spans) = inst.admit_plan(0.0, up.plan, up.cost, None);
+        let allocs_before: Vec<Vec<(String, u64)>> = (0..cluster.n())
+            .map(|d| {
+                cluster
+                    .device(d)
+                    .allocations()
+                    .map(|(t, b)| (t.to_string(), b.to_bits()))
+                    .collect()
+            })
+            .collect();
+        let pl_before = format!("{:?}", inst.placement);
+        // op 0 applies…
+        let ctx = StepCtx { cfg: &cfg, cost: &cost, now: spans[0].1 };
+        assert!(matches!(
+            inst.on_op_completed(&ctx, &mut cluster, 0, epoch),
+            OpOutcome::Applied { finished: false, .. }
+        ));
+        // …then serving eats the destination's memory before op 1 lands
+        let dst = up.planned[1].1;
+        let free = cluster.device(dst).free_bytes();
+        cluster.device_mut(dst).alloc("kv-burst", free - 1.0).unwrap();
+        let ctx = StepCtx { cfg: &cfg, cost: &cost, now: spans[1].1 };
+        assert!(matches!(
+            inst.on_op_completed(&ctx, &mut cluster, 1, epoch),
+            OpOutcome::Aborted { .. }
+        ));
+        cluster.device_mut(dst).free("kv-burst").unwrap();
+        // pre-plan state restored exactly (modulo the burst we injected)
+        let allocs_after: Vec<Vec<(String, u64)>> = (0..cluster.n())
+            .map(|d| {
+                cluster
+                    .device(d)
+                    .allocations()
+                    .map(|(t, b)| (t.to_string(), b.to_bits()))
+                    .collect()
+            })
+            .collect();
+        assert_eq!(allocs_before, allocs_after);
+        assert_eq!(pl_before, format!("{:?}", inst.placement));
+        assert!(inst.inflight.is_none());
+        // the dead plan's remaining events are ignored
+        assert!(matches!(
+            inst.on_op_started(spans[1].1, 1, epoch),
+            OpOutcome::Stale
+        ));
+    }
+
+    #[test]
+    fn blocked_step_waits_for_op_block() {
+        let (cfg, cost, mut cluster, mut inst) = setup(baselines::vllm_like(8));
+        let mut scale = ScaleStats::default();
+        submit(&mut inst, 0, 0.0, 32, 4);
+        inst.op_block_until = 5.0;
+        let ctx = StepCtx { cfg: &cfg, cost: &cost, now: 1.0 };
+        assert_eq!(
+            inst.start_step(&ctx, &mut cluster, 1.0, &mut scale),
+            StepStart::Blocked { until: 5.0 }
+        );
+        let ctx = StepCtx { cfg: &cfg, cost: &cost, now: 5.0 };
+        assert!(matches!(
+            inst.start_step(&ctx, &mut cluster, 1.0, &mut scale),
+            StepStart::Busy { .. }
+        ));
+    }
+
+    #[test]
+    fn emergency_scale_down_acts_atomically() {
         let (cfg, cost, mut cluster, mut inst) = setup(baselines::cocoserve(16));
         let mut scale = ScaleStats::default();
         // push device 0 above the violation line
@@ -707,12 +998,11 @@ mod tests {
             .alloc("pressure", free - 0.5 * GIB)
             .unwrap();
         let ctx = StepCtx { cfg: &cfg, cost: &cost, now: 0.0 };
-        inst.run_scale_down(&ctx, &mut cluster, Pressure::Memory, &mut scale);
+        inst.emergency_scale_down(&ctx, &mut cluster, Pressure::Memory, &mut scale);
         assert_eq!(scale.scale_downs, 1);
         // with nothing evictable the graduated response ends in phase 3:
         // the batch walks down to the floor (performance traded for memory)
         assert_eq!(inst.batch_size, 1, "phase-3 batch reduction reached the floor");
-        assert!(inst.pending_setup_s > 0.0, "corrective pause charged");
         inst.placement.validate(cluster.n()).unwrap();
     }
 }

@@ -11,13 +11,53 @@ use crate::monitor::Monitor;
 use crate::placement::Placement;
 use crate::util::json::{self, Json};
 
-/// Counters for executed scaling operations (Algorithm 1 / 2 rounds).
-#[derive(Debug, Clone, Copy, Default, PartialEq)]
+/// Lifecycle phase of one logged scaling-op event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpPhase {
+    /// The op's transfer began (replication overlaps serving from here).
+    Started,
+    /// The op's effects were applied to the ledgers + placement.
+    Completed,
+    /// The op failed; the whole plan was rolled back at this timestamp.
+    Aborted,
+}
+
+impl OpPhase {
+    pub fn name(self) -> &'static str {
+        match self {
+            OpPhase::Started => "started",
+            OpPhase::Completed => "completed",
+            OpPhase::Aborted => "aborted",
+        }
+    }
+}
+
+/// One timestamped scaling-op lifecycle record — the evidence that plans
+/// execute *in flight* (op events interleave with request completions in
+/// the golden-replay tests).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpEvent {
+    pub t: f64,
+    pub instance: usize,
+    pub op_idx: usize,
+    pub phase: OpPhase,
+    /// `ModuleOp::describe()` of the op.
+    pub desc: String,
+}
+
+/// Counters + event log for executed scaling operations (Algorithm 1 / 2
+/// plans).
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct ScaleStats {
     pub scale_ups: u64,
     pub scale_downs: u64,
     /// Total transfer time consumed by scaling operations (background).
     pub op_time_s: f64,
+    /// Plans aborted mid-flight (rolled back after an op failed against
+    /// the live ledgers).
+    pub plans_aborted: u64,
+    /// Timestamped op lifecycle log.
+    pub events: Vec<OpEvent>,
 }
 
 /// Aggregated outcome of a simulation run.
@@ -44,6 +84,10 @@ pub struct SimReport {
     pub placements: Vec<Placement>,
     /// Per-instance final batch sizes.
     pub batch_sizes: Vec<usize>,
+    /// Plans aborted mid-flight (rolled back).
+    pub plans_aborted: u64,
+    /// Timestamped scaling-op lifecycle log (in-flight execution trace).
+    pub op_events: Vec<OpEvent>,
 }
 
 impl SimReport {
@@ -129,6 +173,15 @@ impl SimReport {
                 ("util", json::num(util)),
             ])
         }));
+        let op_events = json::arr(self.op_events.iter().map(|e| {
+            json::obj(vec![
+                ("desc", json::s(&e.desc)),
+                ("instance", json::num(e.instance as f64)),
+                ("op", json::num(e.op_idx as f64)),
+                ("phase", json::s(e.phase.name())),
+                ("t", json::num(e.t)),
+            ])
+        }));
         json::obj(vec![
             ("completed", json::num(self.total_completed() as f64)),
             ("devices", devices),
@@ -137,7 +190,9 @@ impl SimReport {
             ("oom_events", json::num(self.total_oom_events as f64)),
             ("oom_rate", json::num(self.oom_rate())),
             ("oom_victims", json::num(self.oom_victims as f64)),
+            ("op_events", op_events),
             ("peak_mem_bytes", json::num(self.peak_mem_bytes)),
+            ("plans_aborted", json::num(self.plans_aborted as f64)),
             ("scale_downs", json::num(self.scale_downs as f64)),
             ("scale_op_time_s", json::num(self.scale_op_time_s)),
             ("scale_ups", json::num(self.scale_ups as f64)),
@@ -175,6 +230,14 @@ mod tests {
             kv_stats: vec![Default::default()],
             placements: vec![Placement::single_device(4, 0)],
             batch_sizes: vec![8],
+            plans_aborted: 0,
+            op_events: vec![OpEvent {
+                t: 1.5,
+                instance: 0,
+                op_idx: 0,
+                phase: OpPhase::Completed,
+                desc: "replicate L0->d1".into(),
+            }],
         }
     }
 
@@ -187,6 +250,9 @@ mod tests {
         assert_eq!(parsed.req("completed").as_usize(), Some(1));
         assert_eq!(parsed.req("scale_ups").as_usize(), Some(1));
         assert_eq!(parsed.req("instances").as_arr().unwrap().len(), 1);
+        let evs = parsed.req("op_events").as_arr().unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].req("phase").as_str(), Some("completed"));
     }
 
     #[test]

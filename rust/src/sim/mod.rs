@@ -15,21 +15,30 @@
 //! The simulator is a discrete-event kernel, not a lockstep tick loop:
 //!
 //! * [`events`] — a deterministic binary-heap event queue (arrivals,
-//!   controller ticks, step completions, wake-ups), tie-broken by kind
-//!   priority, instance id and FIFO order;
+//!   controller ticks, scaling-op starts/completions, step completions,
+//!   wake-ups), tie-broken by kind priority, instance id and FIFO order;
 //! * [`instance`] — the per-instance serving state machine (prefill/decode
-//!   roofline steps, KV admission, per-policy OOM handling, Algorithm 1/2
-//!   scaling rounds);
+//!   roofline steps, KV admission, per-policy OOM handling, in-flight
+//!   plan-op application);
 //! * [`metrics`] — [`SimReport`] accounting plus the deterministic metrics
 //!   JSON the golden-replay tests and benches assert on;
 //! * this module — a thin orchestrator: it routes arrivals, pops events,
-//!   computes cross-instance contention, and asks ready instances to start
-//!   their next step.
+//!   computes cross-instance contention, admits controller-planned
+//!   [`crate::plan::ScalePlan`]s, and asks ready instances to start their
+//!   next step.
 //!
-//! Instances therefore advance independently at their own step cadence —
-//! an instance with no queued work costs one boolean check per event, and
-//! heterogeneous per-instance layer counts (after migration) or batch
-//! sizes never force a global tick.
+//! ### In-flight scaling (the §3.1 non-disruption claim, made measurable)
+//!
+//! A controller tick runs the **pure planners** over the live state and
+//! emits a plan; the kernel schedules one `OpStarted`/`OpCompleted` pair
+//! per op, with durations from the plan's dry-run costing. Serving
+//! continues while ops are in flight: replication never blocks the source
+//! (only the §6.5 communication-setup barrier pauses the instance when
+//! the plan lands), migration blocks new steps only while the moved
+//! module is in transit, and a mid-flight failure rolls the whole plan
+//! back. There is no global pause — scaling events interleave with
+//! request completions in the event log, which is exactly what the
+//! golden-replay suite asserts.
 //!
 //! [`cluster`]: crate::cluster
 //! [`model::cost`]: crate::model::cost
@@ -44,22 +53,26 @@ pub mod events;
 pub(crate) mod instance;
 pub mod metrics;
 
-pub use metrics::{ScaleStats, SimReport};
+pub use metrics::{OpEvent, OpPhase, ScaleStats, SimReport};
 
-use crate::autoscale::{Controller, ControllerConfig, Decision};
+use crate::autoscale::{
+    Controller, ControllerConfig, PlanCtx, PlannedDecision, ScaleDownConfig, ScaleUpConfig,
+};
 use crate::cluster::Cluster;
 use crate::model::cost::CostModel;
 use crate::model::ModelConfig;
+use crate::ops::ModuleOps;
 use crate::placement::Placement;
+use crate::plan::{PlanCost, ScalePlan};
 use crate::scheduler::SchedulerConfig;
 use crate::workload::Trace;
 
 use events::{EventKind, EventQueue};
-use instance::{Instance, StepCtx, StepStart};
+use instance::{Instance, OpOutcome, StepCtx, StepStart};
 
-/// Serving-path pause for one background scaling round (synchronization
-/// barrier while dataflow hooks swap in; the weight copy itself overlaps
-/// serving — §8 measures <3 % neighbour jitter).
+/// Serving-path pause when a replication plan lands (synchronization
+/// barrier while dataflow hooks swap in; the weight copies themselves
+/// overlap serving — §8 measures <3 % neighbour jitter).
 pub const SYNC_PAUSE_S: f64 = 0.05;
 
 /// Fraction of a decode step the SMs are actually busy (bandwidth-bound
@@ -219,37 +232,91 @@ impl Simulation {
         factor
     }
 
-    fn controller_tick(&mut self) {
+    /// One §5 control tick: run the planners for every autoscaling
+    /// instance and admit emitted plans for in-flight execution.
+    fn controller_tick(&mut self, q: &mut EventQueue) {
         for i in 0..self.instances.len() {
             if !self.instances[i].policy.autoscale {
+                continue;
+            }
+            // one plan in flight per instance — its execution is the
+            // natural cooldown for further background scaling
+            if self.instances[i].inflight.is_some() {
                 continue;
             }
             let view = {
                 let cluster = &self.cluster;
                 self.instances[i].monitor.controller_view(cluster, self.now.max(1e-9))
             };
-            match self.controller.tick(&view) {
-                Decision::ScaleUp => {
-                    let gamma = self.gamma();
-                    let ctx = StepCtx { cfg: &self.cfg, cost: &self.cost, now: self.now };
-                    self.instances[i].run_scale_up(
-                        &ctx,
-                        &mut self.cluster,
-                        gamma,
-                        &mut self.scale,
-                    );
-                }
-                Decision::ScaleDown { pressure, .. } => {
-                    let ctx = StepCtx { cfg: &self.cfg, cost: &self.cost, now: self.now };
-                    self.instances[i].run_scale_down(
-                        &ctx,
-                        &mut self.cluster,
-                        pressure,
-                        &mut self.scale,
-                    );
-                }
-                Decision::None => {}
+            // stage 1 (thresholds + cooldown) is cheap; the planning
+            // context is only assembled when the controller wants to act
+            let decision = self.controller.decide(&view);
+            if matches!(decision, crate::autoscale::Decision::None) {
+                continue;
             }
+            let gamma = self.gamma();
+            let held: usize = (0..self.instances[i].placement.n_layers)
+                .map(|l| self.instances[i].placement.degree(l) - 1)
+                .sum();
+            let remaining = self.cfg.replica_budget.saturating_sub(held);
+            let hot = self.instances[i].hottest_primary_device(&self.cluster);
+            let kv_per_layer = self.instances[i].kv.stats().reserved_bytes
+                / self.instances[i].placement.n_layers as f64;
+            let slo = self.cfg.slo_latency_s;
+            let ops =
+                ModuleOps::new(&self.cost, self.cfg.dtype_bytes, &format!("inst{i}"));
+            let ctx = PlanCtx {
+                ops: &ops,
+                cluster: &self.cluster,
+                placement: &self.instances[i].placement,
+                up_cfg: ScaleUpConfig {
+                    gamma,
+                    min_vacancy: 0.45,
+                    max_ops_per_round: remaining,
+                },
+                down_cfg: ScaleDownConfig::default(),
+                batch_size: self.instances[i].batch_size,
+                kv_bytes_per_layer: kv_per_layer,
+                down_src: Some(hot),
+            };
+            let planned = self.controller.plan(decision, &ctx, |cl, _pl, _bs| {
+                cl.device(hot).mem_frac() > 0.92 && slo > 0.0
+            });
+            match planned {
+                PlannedDecision::None => {}
+                PlannedDecision::ScaleUp(up) => {
+                    self.scale.scale_ups += 1;
+                    self.admit(i, up.plan, up.cost, None, q);
+                }
+                PlannedDecision::ScaleDown(down) => {
+                    self.scale.scale_downs += 1;
+                    self.admit(i, down.plan, down.cost, Some(down.batch_size), q);
+                }
+            }
+        }
+    }
+
+    /// Admit a plan for in-flight execution: schedule its op events with
+    /// the dry-run durations. Batch-only plans (phase-3 relief) apply
+    /// immediately and schedule nothing.
+    fn admit(
+        &mut self,
+        i: usize,
+        plan: ScalePlan,
+        cost: PlanCost,
+        batch_after: Option<usize>,
+        q: &mut EventQueue,
+    ) {
+        if plan.is_empty() {
+            if let Some(b) = batch_after {
+                self.instances[i].batch_size = b;
+            }
+            return;
+        }
+        let (epoch, spans) = self.instances[i].admit_plan(self.now, plan, cost, batch_after);
+        for (op_idx, &(start, end)) in spans.iter().enumerate() {
+            q.push(start, EventKind::OpStarted { instance: i, op_idx, epoch });
+            q.push(end, EventKind::OpCompleted { instance: i, op_idx, epoch });
         }
     }
 
@@ -267,7 +334,8 @@ impl Simulation {
     }
 
     /// Ask an idle instance to start its next step; schedule the follow-up
-    /// event (completion, timeout wake, or OOM-backoff wake).
+    /// event (completion, timeout wake, op-block wake, or OOM-backoff
+    /// wake).
     fn try_start(&mut self, i: usize, q: &mut EventQueue) {
         if self.instances[i].busy_until.is_some() {
             return;
@@ -293,6 +361,11 @@ impl Simulation {
                     }
                 }
             }
+            StepStart::Blocked { until } => {
+                // A migration transfer (or the post-replication barrier)
+                // holds the serving path; re-poll when it clears.
+                self.schedule_wake(i, until, q);
+            }
             StepStart::OomStall => {
                 // Back off one controller period before retrying, matching
                 // the recovery cadence of the lockstep loop this kernel
@@ -306,7 +379,7 @@ impl Simulation {
     fn all_idle(&self) -> bool {
         self.instances
             .iter()
-            .all(|i| i.scheduler.is_idle() && i.busy_until.is_none())
+            .all(|i| i.scheduler.is_idle() && i.busy_until.is_none() && i.inflight.is_none())
     }
 
     // ---- the event loop ---------------------------------------------------
@@ -341,15 +414,58 @@ impl Simulation {
                     self.route(req);
                 }
                 EventKind::ControllerTick => {
-                    self.controller_tick();
+                    self.controller_tick(&mut q);
                     q.push(self.now + self.cfg.controller_tick_s, EventKind::ControllerTick);
+                }
+                EventKind::OpStarted { instance, op_idx, epoch } => {
+                    let outcome =
+                        self.instances[instance].on_op_started(self.now, op_idx, epoch);
+                    if let OpOutcome::Started { desc } = outcome {
+                        self.scale.events.push(OpEvent {
+                            t: self.now,
+                            instance,
+                            op_idx,
+                            phase: OpPhase::Started,
+                            desc,
+                        });
+                    }
+                }
+                EventKind::OpCompleted { instance, op_idx, epoch } => {
+                    let ctx = StepCtx { cfg: &self.cfg, cost: &self.cost, now: self.now };
+                    let outcome = self.instances[instance].on_op_completed(
+                        &ctx,
+                        &mut self.cluster,
+                        op_idx,
+                        epoch,
+                    );
+                    match outcome {
+                        OpOutcome::Applied { desc, cost, .. } => {
+                            self.scale.op_time_s += cost.time_s;
+                            self.scale.events.push(OpEvent {
+                                t: self.now,
+                                instance,
+                                op_idx,
+                                phase: OpPhase::Completed,
+                                desc,
+                            });
+                        }
+                        OpOutcome::Aborted { desc } => {
+                            self.scale.plans_aborted += 1;
+                            self.scale.events.push(OpEvent {
+                                t: self.now,
+                                instance,
+                                op_idx,
+                                phase: OpPhase::Aborted,
+                                desc,
+                            });
+                        }
+                        OpOutcome::Started { .. } | OpOutcome::Stale => {}
+                    }
                 }
                 EventKind::StepComplete { instance, token } => {
                     let inst = &mut self.instances[instance];
-                    // Defensive: no current path cancels an in-flight step,
-                    // so the token always matches today — the guard exists
-                    // so a future cancellation path (in-flight preemption,
-                    // migration pause) cannot double-complete a step.
+                    // Stale tokens: an OOM rebuild cleared the in-flight
+                    // step after this completion was scheduled.
                     if inst.step_token == token && inst.busy_until.is_some() {
                         inst.busy_until = None;
                         self.instances[instance]
@@ -405,6 +521,8 @@ impl Simulation {
             kv_stats: self.instances.iter().map(|i| i.kv_peak).collect(),
             placements: self.instances.iter().map(|i| i.placement.clone()).collect(),
             batch_sizes: self.instances.iter().map(|i| i.batch_size).collect(),
+            plans_aborted: self.scale.plans_aborted,
+            op_events: self.scale.events,
             monitors: self.instances.into_iter().map(|i| i.monitor).collect(),
         }
     }
@@ -456,6 +574,12 @@ mod tests {
             .max()
             .unwrap();
         assert!(maxdeg > 1);
+        // the replicas arrived through in-flight op events, not a pause
+        assert!(!r.op_events.is_empty(), "no op events logged");
+        assert!(r
+            .op_events
+            .iter()
+            .any(|e| e.phase == OpPhase::Completed && e.desc.starts_with("replicate")));
     }
 
     #[test]
@@ -600,40 +724,12 @@ mod debug_tests {
             let n_req = trace.len();
             let r = sim.run(&trace, 30.0);
             let mut lat = r.merged_latency();
-            eprintln!("{name}: req={n_req} done={} mean={:.2} p95={:.2} dur={:.1} tps={:.0} ups={} downs={} oom={} batch={:?} trans={} degmax={}",
+            eprintln!("{name}: req={n_req} done={} mean={:.2} p95={:.2} dur={:.1} tps={:.0} ups={} downs={} aborts={} opev={} oom={} batch={:?} trans={} degmax={}",
                 r.total_completed(), lat.mean(), lat.p95(), r.duration_s,
-                r.total_throughput_tps(), r.scale_ups, r.scale_downs, r.total_oom_events,
+                r.total_throughput_tps(), r.scale_ups, r.scale_downs, r.plans_aborted,
+                r.op_events.len(), r.total_oom_events,
                 r.batch_sizes, r.placements[0].transition_count(),
                 (0..r.placements[0].n_layers).map(|l| r.placements[0].degree(l)).max().unwrap());
         }
-    }
-
-    #[test]
-    #[ignore]
-    fn debug_steps() {
-        let cfg = SimConfig::paper_13b();
-        let cluster = Cluster::paper_testbed();
-        let placement = Placement::single_device(cfg.model.n_layers, 0);
-        let mut sim = Simulation::new(cfg, cluster, vec![(placement, baselines::cocoserve(16))]);
-        let ctx = StepCtx { cfg: &sim.cfg, cost: &sim.cost, now: 0.0 };
-        let pre1 = sim.instances[0].prefill_step_time(&ctx, &sim.cluster, 16, 256);
-        let dec1 = sim.instances[0].decode_step_time(&ctx, &sim.cluster, 16, 256);
-        // replicate everything
-        let gamma = sim.gamma();
-        let mut scale = ScaleStats::default();
-        for _ in 0..20 {
-            let ctx = StepCtx { cfg: &sim.cfg, cost: &sim.cost, now: 0.0 };
-            sim.instances[0].run_scale_up(&ctx, &mut sim.cluster, gamma, &mut scale);
-        }
-        let inst = &sim.instances[0];
-        let degs: Vec<usize> = (0..40).map(|l| inst.placement.degree(l)).collect();
-        let ctx = StepCtx { cfg: &sim.cfg, cost: &sim.cost, now: 0.0 };
-        let pre4 = inst.prefill_step_time(&ctx, &sim.cluster, 16, 256);
-        let dec4 = inst.decode_step_time(&ctx, &sim.cluster, 16, 256);
-        eprintln!("deg={:?}", &degs[..10]);
-        eprintln!("prefill 16x256: before={pre1:.4}s after={pre4:.4}s");
-        eprintln!("decode  16@256: before={dec1:.4}s after={dec4:.4}s");
-        eprintln!("setup pending: {:.3}s", sim.instances[0].pending_setup_s);
-        eprintln!("transitions: {}", sim.instances[0].placement.transition_count());
     }
 }

@@ -14,6 +14,36 @@ use std::time::Instant;
 
 use super::json::{self, Json};
 use super::stats::Summary;
+use crate::cluster::Cluster;
+use crate::model::cost::CostModel;
+use crate::model::ModelConfig;
+use crate::ops::{ModuleOps, PlanExecutor};
+use crate::placement::Placement;
+use crate::plan::{ModuleOp, ScalePlan};
+
+/// Shared fixture for the fig6/eq4 benches: a 13B placement with the
+/// first `n_rep` layers replicated to degree `dop`, replicas spread
+/// round-robin over devices 1..4 — built by planning one replication
+/// batch and executing it against a scratch paper-testbed cluster.
+pub fn replicated_placement_13b(n_rep: usize, dop: usize) -> Placement {
+    let model = ModelConfig::llama2_13b();
+    let mut p = Placement::single_device(model.n_layers, 0);
+    let cm = CostModel::new(model);
+    let ops = ModuleOps::new(&cm, 2, "inst0");
+    let mut scratch = Cluster::paper_testbed();
+    ops.deploy_instance(&mut scratch, &p).unwrap();
+    let mut plan = ScalePlan::new();
+    for extra in 0..dop.saturating_sub(1) {
+        for l in 0..n_rep {
+            let op = ModuleOp::Replicate { layer: l, dst: 1 + (extra + l) % 3 };
+            if !plan.ops.contains(&op) {
+                plan.push(op);
+            }
+        }
+    }
+    PlanExecutor::new(&ops).execute(&mut scratch, &mut p, &plan).unwrap();
+    p
+}
 
 /// Timing result for one benchmarked operation.
 #[derive(Debug, Clone)]

@@ -1,0 +1,225 @@
+//! Plan atomicity contracts, tested through the public API.
+//!
+//! * **Rollback is byte-identical** — a plan that fails mid-execution
+//!   (OOM-injected) or is rejected up front (validation) must leave the
+//!   cluster's allocation ledgers and the `Placement` exactly as they
+//!   were: serialized before/after snapshots compare equal, with f64
+//!   sizes compared by bit pattern.
+//! * **Dry-run equals executed** — for any plan that lands, the
+//!   `PlanCost` from `ScalePlan::dry_run` equals the executed cost
+//!   bit for bit (the Table 2 parity contract).
+
+use cocoserve::cluster::{Cluster, GIB};
+use cocoserve::model::cost::CostModel;
+use cocoserve::model::{ModelConfig, ModuleId, ModuleKind};
+use cocoserve::ops::{ModuleOps, PlanExecution, PlanExecutor};
+use cocoserve::placement::Placement;
+use cocoserve::plan::{ModuleOp, PlanError, ScalePlan};
+use cocoserve::util::{prop, rng::Rng};
+
+/// Deterministic byte-exact snapshot of every ledger (f64 sizes as raw
+/// bits) plus the placement's full debug state.
+fn snapshot(cluster: &Cluster, placement: &Placement) -> String {
+    let mut s = String::new();
+    for d in 0..cluster.n() {
+        s.push_str(&format!("device {d}:\n"));
+        for (tag, bytes) in cluster.device(d).allocations() {
+            s.push_str(&format!("  {tag} = {:016x}\n", bytes.to_bits()));
+        }
+    }
+    s.push_str(&format!("placement: {placement:?}\n"));
+    s
+}
+
+fn setup() -> (CostModel, Cluster, Placement) {
+    let cm = CostModel::new(ModelConfig::llama2_13b());
+    let mut cl = Cluster::paper_testbed();
+    let pl = Placement::single_device(40, 0);
+    let ops = ModuleOps::new(&cm, 2, "inst0");
+    let deployed = ops.deploy_instance(&mut cl, &pl).unwrap();
+    assert!(deployed > 0.0);
+    (cm, cl, pl)
+}
+
+#[test]
+fn validation_rejected_plan_touches_nothing() {
+    let (cm, mut cl, mut pl) = setup();
+    let ops = ModuleOps::new(&cm, 2, "inst0");
+    let before = snapshot(&cl, &pl);
+    // layer 0 already lives on device 0 — replicating it there is invalid
+    let plan = ScalePlan {
+        ops: vec![
+            ModuleOp::Replicate { layer: 1, dst: 1 },
+            ModuleOp::Replicate { layer: 0, dst: 0 },
+        ],
+    };
+    let err = PlanExecutor::new(&ops).execute(&mut cl, &mut pl, &plan).unwrap_err();
+    assert!(matches!(err, PlanError::Rejected { op_idx: 1, .. }), "{err}");
+    assert_eq!(before, snapshot(&cl, &pl), "rejected plan must touch nothing");
+}
+
+#[test]
+fn oom_injected_failure_rolls_back_byte_identically() {
+    let (cm, mut cl, mut pl) = setup();
+    let ops = ModuleOps::new(&cm, 2, "inst0");
+    // leave room on device 1 for exactly two layer replicas
+    let layer_bytes = ops.module_bytes(ModuleKind::DecoderLayer);
+    let hog = cl.device(1).free_bytes() - 2.5 * layer_bytes;
+    cl.device_mut(1).alloc("hog", hog).unwrap();
+
+    let before = snapshot(&cl, &pl);
+    // five replications: ops 0-1 fit, op 2 OOMs mid-plan. Validation's
+    // predictive capacity check rejects this plan outright; drive the
+    // stepwise executor (the simulator's in-flight path) to exercise the
+    // genuine mid-plan OOM + rollback.
+    let plan = ScalePlan::replicate_batch(&[0, 1, 2, 3, 4], 1);
+    let mut exec = PlanExecution::new();
+    let mut failed_at = None;
+    for (i, op) in plan.ops.iter().enumerate() {
+        if exec.apply_next(&ops, &mut cl, &mut pl, op).is_err() {
+            failed_at = Some(i);
+            break;
+        }
+    }
+    assert_eq!(failed_at, Some(2), "third replica must hit the injected OOM");
+    assert_eq!(exec.applied(), 2);
+    assert_ne!(before, snapshot(&cl, &pl), "two ops really landed");
+    exec.rollback(&mut cl, &mut pl);
+    assert_eq!(before, snapshot(&cl, &pl), "rollback must be byte-identical");
+}
+
+#[test]
+fn validation_is_conservative_about_deferred_frees() {
+    // Source frees happen at plan *commit* (copy-then-free), after every
+    // allocation — so a plan that would only fit if an eviction's bytes
+    // were reusable mid-plan is rejected up front, touching nothing.
+    let (cm, mut cl, mut pl) = setup();
+    let ops = ModuleOps::new(&cm, 2, "inst0");
+    PlanExecutor::new(&ops)
+        .execute(&mut cl, &mut pl, &ScalePlan::replicate_batch(&[7], 1))
+        .unwrap();
+    let layer_bytes = ops.module_bytes(ModuleKind::DecoderLayer);
+    let hog = cl.device(1).free_bytes() - 0.5 * layer_bytes;
+    cl.device_mut(1).alloc("hog", hog).unwrap();
+
+    let before = snapshot(&cl, &pl);
+    let plan = ScalePlan {
+        ops: vec![
+            ModuleOp::Evict { layer: 7, device: 1 },
+            ModuleOp::Replicate { layer: 8, dst: 1 },
+        ],
+    };
+    let err = PlanExecutor::new(&ops).execute(&mut cl, &mut pl, &plan).unwrap_err();
+    assert!(matches!(err, PlanError::Rejected { op_idx: 1, .. }), "{err}");
+    assert_eq!(before, snapshot(&cl, &pl), "rejected plan must touch nothing");
+}
+
+#[test]
+fn mixed_op_rollback_restores_migrations_and_evictions() {
+    let (cm, mut cl, mut pl) = setup();
+    let ops = ModuleOps::new(&cm, 2, "inst0");
+    // pre-state: a replica on d1 and a migrated KV cache
+    let kv = ModuleId::layer(ModuleKind::KvCache, 3);
+    let prep = ScalePlan {
+        ops: vec![
+            ModuleOp::Replicate { layer: 5, dst: 1 },
+            ModuleOp::MigrateModule { module: kv, dst: 2, payload_bytes: 1.0 * GIB },
+        ],
+    };
+    PlanExecutor::new(&ops).execute(&mut cl, &mut pl, &prep).unwrap();
+
+    let before = snapshot(&cl, &pl);
+    // apply a mixed plan stepwise, then roll the whole thing back
+    let plan = ScalePlan {
+        ops: vec![
+            ModuleOp::MigrateLayer { layer: 9, dst: 2 },
+            ModuleOp::Evict { layer: 5, device: 1 },
+            ModuleOp::MigrateModule { module: kv, dst: 3, payload_bytes: 1.0 * GIB },
+            ModuleOp::Replicate { layer: 6, dst: 1 },
+        ],
+    };
+    let mut exec = PlanExecution::new();
+    for op in &plan.ops {
+        exec.apply_next(&ops, &mut cl, &mut pl, op).unwrap();
+    }
+    assert_eq!(pl.primary_device(9), 2);
+    assert_eq!(pl.module_device(kv), 3);
+    assert_eq!(pl.degree(5), 1);
+    exec.rollback(&mut cl, &mut pl);
+    assert_eq!(before, snapshot(&cl, &pl), "mixed-op rollback byte-identical");
+    assert_eq!(pl.primary_device(9), 0);
+    assert_eq!(pl.module_device(kv), 2);
+    assert_eq!(pl.degree(5), 2);
+}
+
+#[test]
+fn prop_failed_or_aborted_plans_leave_state_byte_identical() {
+    // Random fills + random plans. Whatever happens — success, validation
+    // rejection, or mid-plan failure — the invariants hold:
+    //   success  ⇒ executed cost == dry-run cost (bit for bit)
+    //   failure  ⇒ allocation ledgers + placement byte-identical
+    prop::check(
+        "plan-rollback",
+        |r: &mut Rng| {
+            let seed = r.next_u64();
+            let fills: Vec<f64> = (0..4).map(|_| r.f64() * 14.0).collect();
+            let n_ops = 1 + r.below(8) as usize;
+            (seed, fills, n_ops)
+        },
+        |&(seed, ref fills, n_ops)| {
+            let cm = CostModel::new(ModelConfig::llama2_13b());
+            let mut cl = Cluster::paper_testbed();
+            let pl0 = Placement::single_device(40, 0);
+            let ops = ModuleOps::new(&cm, 2, "inst0");
+            ops.deploy_instance(&mut cl, &pl0).map_err(|e| e.to_string())?;
+            for (d, gib) in fills.iter().enumerate().skip(1) {
+                cl.device_mut(d).alloc("fill", gib * GIB).map_err(|e| e.to_string())?;
+            }
+            let mut pl = pl0;
+            // seed a couple of replicas so evictions have targets
+            let seed_plan = ScalePlan::replicate_batch(&[0, 1], 1);
+            PlanExecutor::new(&ops)
+                .execute(&mut cl, &mut pl, &seed_plan)
+                .map_err(|e| e.to_string())?;
+
+            let mut rng = Rng::new(seed);
+            let mut plan = ScalePlan::new();
+            for _ in 0..n_ops {
+                let layer = rng.below(40) as usize;
+                let dst = rng.below(4) as usize;
+                let op = match rng.below(4) {
+                    0 => ModuleOp::Replicate { layer, dst },
+                    1 => ModuleOp::MigrateLayer { layer, dst },
+                    2 => ModuleOp::Evict { layer, device: dst },
+                    _ => ModuleOp::MigrateModule {
+                        module: ModuleId::layer(ModuleKind::KvCache, layer),
+                        dst,
+                        payload_bytes: rng.f64() * 2.0 * GIB,
+                    },
+                };
+                plan.push(op);
+            }
+
+            let before = snapshot(&cl, &pl);
+            let dry = plan.dry_run(&ops, &cl, &pl);
+            match PlanExecutor::new(&ops).execute(&mut cl, &mut pl, &plan) {
+                Ok(executed) => {
+                    let dry = dry.map_err(|e| format!("dry-run failed on ok plan: {e}"))?;
+                    if dry != executed {
+                        return Err(format!(
+                            "parity broken: dry {dry:?} != executed {executed:?}"
+                        ));
+                    }
+                    pl.validate(cl.n())?;
+                }
+                Err(_) => {
+                    let after = snapshot(&cl, &pl);
+                    if before != after {
+                        return Err("failed plan left residue".into());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

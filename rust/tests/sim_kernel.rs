@@ -143,6 +143,81 @@ fn prop_kv_accounting_never_exceeds_device_capacity() {
 }
 
 #[test]
+fn golden_replay_inflight_plan_overlaps_serving() {
+    // The §3.1 non-disruption claim, as a replayable kernel contract: a
+    // CoCoServe instance under sustained load executes scaling plans *in
+    // flight* — OpStarted/OpCompleted events interleave with request
+    // completions (no global pause) — and the whole interleaving is
+    // deterministic (byte-identical metrics JSON, op events included).
+    let trace = Trace::steady(20.0, 30.0, 42);
+    let a = run_fleet(1, 4, baselines::cocoserve(16), &trace, 30.0);
+    let b = run_fleet(1, 4, baselines::cocoserve(16), &trace, 30.0);
+    assert_eq!(
+        a.to_json().to_string(),
+        b.to_json().to_string(),
+        "in-flight scaling must be replay-deterministic"
+    );
+
+    assert!(a.scale_ups > 0, "no plans were admitted");
+    assert!(!a.op_events.is_empty(), "no op events were logged");
+    let started = a
+        .op_events
+        .iter()
+        .filter(|e| e.phase == cocoserve::sim::OpPhase::Started)
+        .count();
+    let completed = a
+        .op_events
+        .iter()
+        .filter(|e| e.phase == cocoserve::sim::OpPhase::Completed)
+        .count();
+    assert!(started > 0 && completed > 0, "{started} started / {completed} completed");
+
+    // ops take simulated time: every completion strictly after its start
+    let first_start = a
+        .op_events
+        .iter()
+        .find(|e| e.phase == cocoserve::sim::OpPhase::Started)
+        .map(|e| e.t)
+        .unwrap();
+    let last_end = a
+        .op_events
+        .iter()
+        .rev()
+        .find(|e| e.phase == cocoserve::sim::OpPhase::Completed)
+        .map(|e| e.t)
+        .unwrap();
+    assert!(last_end > first_start, "ops must span simulated time");
+
+    // the overlap itself: requests are in flight across the entire op
+    // window (serving continued through scaling — no global pause), and
+    // op events fire strictly inside the serving window (interleaving)
+    let in_flight_across = a
+        .monitors
+        .iter()
+        .flat_map(|m| m.completions())
+        .filter(|c| c.arrival_s < first_start && c.finish_s > last_end)
+        .count();
+    assert!(
+        in_flight_across > 0,
+        "no request spanned the op window [{first_start}, {last_end}] — \
+         scaling paused serving"
+    );
+    let (serving_from, serving_to) = a
+        .monitors
+        .iter()
+        .flat_map(|m| m.completions())
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), c| {
+            (lo.min(c.arrival_s), hi.max(c.finish_s))
+        });
+    let ops_during_serving = a
+        .op_events
+        .iter()
+        .filter(|e| e.t >= serving_from && e.t <= serving_to)
+        .count();
+    assert!(ops_during_serving > 0, "ops did not interleave with serving");
+}
+
+#[test]
 fn drain_completes_all_requests_under_light_load() {
     let trace = Trace::two_tenant(8.0, 12.0, 21);
     let n = trace.len();
