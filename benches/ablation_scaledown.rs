@@ -57,7 +57,7 @@ fn scenario(graduated: bool) -> Outcome {
         |cl, _pl, bs| {
             // violating while device 0 above 90% AND batch demand high;
             // batch reduction relieves KV demand proportionally.
-            let mem_over = cl.device(0).mem_frac() > 0.90;
+            let mem_over = cl.mem_frac(0) > 0.90;
             mem_over && bs > 8
         },
     );

@@ -1,0 +1,371 @@
+//! Fleet-scale kernel benchmark — the perf-trajectory artifact.
+//!
+//! Runs the event kernel at a scale the paper never touched: ≥128
+//! thirteen-B instances over a 160-device fleet, ≥500k requests across
+//! all five traffic scenarios, CoCoServe policy (so plans execute in
+//! flight and profile recompilation is exercised). Reports, per scenario
+//! and in aggregate:
+//!
+//! * **events/sec** and **steps/sec** — kernel throughput (wall-clock),
+//! * **allocations/step** — heap allocations per serving step, measured
+//!   by a counting global allocator,
+//! * **p50/p99 end-to-end latency** — streamed through the O(1)-memory
+//!   P² estimator, so the percentile pass adds no second materialized
+//!   copy and no O(n log n) sort over 500k+ latencies (the per-instance
+//!   monitors still retain their completion records — that retention is
+//!   what the golden-replay metrics contract is computed from),
+//!
+//! and writes the whole document to `BENCH_fleet.json` at the repo root.
+//!
+//! Before any simulation runs, a targeted probe asserts the compiled
+//! step-cost path (`PlacementProfile::{prefill,decode}_step_time`)
+//! performs **zero** heap allocations — the tentpole contract of the
+//! compiled-profile refactor.
+//!
+//! ```bash
+//! cargo bench --bench fleet_scale                 # full fleet (~minutes)
+//! FLEET_SCALE_SMOKE=1 cargo bench --bench fleet_scale   # CI smoke
+//! ```
+//!
+//! Smoke mode (8 instances, 5k requests) additionally enforces the
+//! checked-in regression floors: events/sec must stay above half of
+//! `SMOKE_EVENTS_PER_SEC_FLOOR`, and allocations/step must stay within
+//! `SMOKE_ALLOCS_PER_STEP_BUDGET`.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use cocoserve::baselines;
+use cocoserve::cluster::{Cluster, DeviceSpec};
+use cocoserve::placement::{Placement, PlacementProfile};
+use cocoserve::sim::{SimConfig, SimReport, Simulation};
+use cocoserve::util::bench::Table;
+use cocoserve::util::json::{self, Json};
+use cocoserve::util::stats::P2Quantile;
+use cocoserve::workload::Trace;
+
+// ---- counting allocator ----------------------------------------------------
+
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+// ---- regression floors (checked in; enforced in smoke mode) ----------------
+
+/// Smoke-mode kernel throughput floor. CI fails when the measured rate
+/// regresses more than 2× below this (i.e. below FLOOR / 2) — deliberately
+/// conservative so shared-runner jitter cannot flake the gate.
+const SMOKE_EVENTS_PER_SEC_FLOOR: f64 = 20_000.0;
+
+/// Smoke-mode heap budget per serving step (scheduler admission vectors,
+/// KV bookkeeping; the step-cost path itself contributes zero).
+const SMOKE_ALLOCS_PER_STEP_BUDGET: f64 = 512.0;
+
+// ---- configuration ---------------------------------------------------------
+
+struct FleetConfig {
+    instances: usize,
+    devices: usize,
+    requests_per_scenario: usize,
+    duration_s: f64,
+    smoke: bool,
+}
+
+impl FleetConfig {
+    fn from_env() -> FleetConfig {
+        let smoke = std::env::var("FLEET_SCALE_SMOKE")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false)
+            || std::env::args().any(|a| a == "--smoke");
+        if smoke {
+            // 8 instances / 5k requests total: the CI configuration.
+            FleetConfig {
+                instances: 8,
+                devices: 10,
+                requests_per_scenario: 1_000,
+                duration_s: 10.0,
+                smoke,
+            }
+        } else {
+            // ≥128 instances, ≥500k requests across the five scenarios.
+            FleetConfig {
+                instances: 128,
+                devices: 160,
+                requests_per_scenario: 100_000,
+                duration_s: 30.0,
+                smoke,
+            }
+        }
+    }
+
+    fn rps(&self) -> f64 {
+        self.requests_per_scenario as f64 / self.duration_s
+    }
+}
+
+// ---- the zero-allocation probe --------------------------------------------
+
+/// Assert the compiled step-cost path performs zero heap allocations.
+/// Returns the number of probed calls (for the report).
+fn assert_step_cost_zero_alloc(cfg: &SimConfig) -> u64 {
+    let cost = cfg.cost_model();
+    let cluster = Cluster::homogeneous(4, DeviceSpec::a100_40gb());
+    let mut pl = Placement::single_device(cfg.model.n_layers, 0);
+    pl.add_replica(0, 1);
+    pl.add_replica(1, 1);
+    pl.add_replica(2, 2);
+    let prof = PlacementProfile::compile(&pl, &cluster, 0);
+    // warm up (first call may fault in lazily-initialized runtime state)
+    std::hint::black_box(prof.prefill_step_time(&cost, cfg.dtype_bytes, 16, 128));
+    std::hint::black_box(prof.decode_step_time(&cost, cfg.dtype_bytes, 16, 128));
+    let calls = 2 * 64;
+    let before = allocs();
+    for b in 1..=64usize {
+        std::hint::black_box(prof.prefill_step_time(&cost, cfg.dtype_bytes, b, 128));
+        std::hint::black_box(prof.decode_step_time(&cost, cfg.dtype_bytes, b, 256));
+    }
+    let delta = allocs() - before;
+    assert_eq!(
+        delta, 0,
+        "steady-state step-cost path allocated {delta} times over {calls} calls"
+    );
+    calls
+}
+
+// ---- per-scenario measurement ----------------------------------------------
+
+struct ScenarioResult {
+    name: &'static str,
+    requests: usize,
+    completed: usize,
+    events: u64,
+    steps: u64,
+    wall_s: f64,
+    allocs_total: u64,
+    p50_s: f64,
+    p99_s: f64,
+    scale_ups: u64,
+    scale_downs: u64,
+}
+
+impl ScenarioResult {
+    fn events_per_sec(&self) -> f64 {
+        self.events as f64 / self.wall_s.max(1e-9)
+    }
+
+    fn steps_per_sec(&self) -> f64 {
+        self.steps as f64 / self.wall_s.max(1e-9)
+    }
+
+    fn allocs_per_step(&self) -> f64 {
+        self.allocs_total as f64 / self.steps.max(1) as f64
+    }
+}
+
+fn run_scenario(fleet: &FleetConfig, name: &'static str, trace: &Trace) -> ScenarioResult {
+    let cfg = SimConfig::paper_13b();
+    let cluster = Cluster::homogeneous(fleet.devices, DeviceSpec::a100_40gb());
+    let placements: Vec<_> = (0..fleet.instances)
+        .map(|i| {
+            (
+                Placement::single_device(cfg.model.n_layers, i % fleet.devices),
+                baselines::cocoserve(32),
+            )
+        })
+        .collect();
+    let sim = Simulation::new(cfg, cluster, placements);
+
+    let allocs_before = allocs();
+    let t0 = Instant::now();
+    let report: SimReport = sim.run(trace, fleet.duration_s);
+    let wall_s = t0.elapsed().as_secs_f64();
+    let allocs_total = allocs() - allocs_before;
+
+    // Percentiles via the streaming P² estimator: no merged latency
+    // vector is materialized and nothing is sorted. (The monitors still
+    // hold their completion records — the golden-replay metrics are
+    // computed from them, so that retention stays.)
+    let mut p50 = P2Quantile::new(0.50);
+    let mut p99 = P2Quantile::new(0.99);
+    for m in &report.monitors {
+        for c in m.completions() {
+            p50.add(c.e2e_latency());
+            p99.add(c.e2e_latency());
+        }
+    }
+
+    ScenarioResult {
+        name,
+        requests: trace.len(),
+        completed: report.total_completed(),
+        events: report.events_processed,
+        steps: report.steps_started,
+        wall_s,
+        allocs_total,
+        p50_s: p50.value(),
+        p99_s: p99.value(),
+        scale_ups: report.scale_ups,
+        scale_downs: report.scale_downs,
+    }
+}
+
+fn main() {
+    let fleet = FleetConfig::from_env();
+    println!(
+        "Fleet-scale kernel bench — {} instances / {} devices / {} requests × 5 scenarios{}\n",
+        fleet.instances,
+        fleet.devices,
+        fleet.requests_per_scenario,
+        if fleet.smoke { " (SMOKE)" } else { "" }
+    );
+
+    let probe_calls = assert_step_cost_zero_alloc(&SimConfig::paper_13b());
+    println!("zero-alloc probe: {probe_calls} step-cost calls, 0 heap allocations ✓\n");
+
+    let sweep = Trace::scenario_sweep(fleet.rps(), fleet.duration_s, 4096);
+    let mut results = Vec::new();
+    let mut table = Table::new(&[
+        "scenario", "requests", "completed", "events/s", "steps/s", "allocs/step",
+        "p50", "p99", "ups", "downs",
+    ]);
+    for (name, trace) in sweep {
+        let r = run_scenario(&fleet, name, &trace);
+        table.row(&[
+            r.name.to_string(),
+            format!("{}", r.requests),
+            format!("{}", r.completed),
+            format!("{:.0}", r.events_per_sec()),
+            format!("{:.0}", r.steps_per_sec()),
+            format!("{:.1}", r.allocs_per_step()),
+            format!("{:.2}s", r.p50_s),
+            format!("{:.2}s", r.p99_s),
+            format!("{}", r.scale_ups),
+            format!("{}", r.scale_downs),
+        ]);
+        results.push(r);
+    }
+    table.print();
+
+    let total_requests: usize = results.iter().map(|r| r.requests).sum();
+    let total_events: u64 = results.iter().map(|r| r.events).sum();
+    let total_steps: u64 = results.iter().map(|r| r.steps).sum();
+    let total_wall: f64 = results.iter().map(|r| r.wall_s).sum();
+    let total_allocs: u64 = results.iter().map(|r| r.allocs_total).sum();
+    let agg_events_per_sec = total_events as f64 / total_wall.max(1e-9);
+    let agg_allocs_per_step = total_allocs as f64 / total_steps.max(1) as f64;
+    println!(
+        "\naggregate: {total_requests} requests, {total_events} events, {total_steps} \
+         steps in {total_wall:.1}s — {agg_events_per_sec:.0} events/s, \
+         {agg_allocs_per_step:.1} allocs/step"
+    );
+
+    // ---- BENCH_fleet.json ---------------------------------------------------
+    let scenarios = json::arr(results.iter().map(|r| {
+        json::obj(vec![
+            ("allocs_per_step", json::num(r.allocs_per_step())),
+            ("allocs_total", json::num(r.allocs_total as f64)),
+            ("completed", json::num(r.completed as f64)),
+            ("events", json::num(r.events as f64)),
+            ("events_per_sec", json::num(r.events_per_sec())),
+            ("latency_p50_s", json::num(r.p50_s)),
+            ("latency_p99_s", json::num(r.p99_s)),
+            ("requests", json::num(r.requests as f64)),
+            ("scale_downs", json::num(r.scale_downs as f64)),
+            ("scale_ups", json::num(r.scale_ups as f64)),
+            ("scenario", json::s(r.name)),
+            ("steps", json::num(r.steps as f64)),
+            ("steps_per_sec", json::num(r.steps_per_sec())),
+            ("wall_s", json::num(r.wall_s)),
+        ])
+    }));
+    let doc = json::obj(vec![
+        (
+            "aggregate",
+            json::obj(vec![
+                ("allocs_per_step", json::num(agg_allocs_per_step)),
+                ("events_per_sec", json::num(agg_events_per_sec)),
+                ("requests", json::num(total_requests as f64)),
+                ("steps", json::num(total_steps as f64)),
+                ("wall_s", json::num(total_wall)),
+            ]),
+        ),
+        (
+            "config",
+            json::obj(vec![
+                ("devices", json::num(fleet.devices as f64)),
+                ("instances", json::num(fleet.instances as f64)),
+                (
+                    "requests_per_scenario",
+                    json::num(fleet.requests_per_scenario as f64),
+                ),
+                ("smoke", json::num(f64::from(u8::from(fleet.smoke)))),
+            ]),
+        ),
+        (
+            "floors",
+            json::obj(vec![
+                ("smoke_allocs_per_step_budget", json::num(SMOKE_ALLOCS_PER_STEP_BUDGET)),
+                ("smoke_events_per_sec_floor", json::num(SMOKE_EVENTS_PER_SEC_FLOOR)),
+            ]),
+        ),
+        (
+            "zero_alloc_probe",
+            json::obj(vec![
+                ("allocations", json::num(0.0)),
+                ("step_cost_calls", json::num(probe_calls as f64)),
+            ]),
+        ),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_fleet.json");
+    std::fs::write(&path, format!("{doc}\n")).expect("write BENCH_fleet.json");
+    println!("report: {}", path.display());
+    let _ = Json::parse(&doc.to_string()).expect("self-parse");
+
+    // ---- smoke-mode regression gates ---------------------------------------
+    if fleet.smoke {
+        assert!(
+            agg_events_per_sec >= SMOKE_EVENTS_PER_SEC_FLOOR / 2.0,
+            "kernel throughput regressed >2x below the floor: {agg_events_per_sec:.0} \
+             events/s < {}/2",
+            SMOKE_EVENTS_PER_SEC_FLOOR
+        );
+        assert!(
+            agg_allocs_per_step <= SMOKE_ALLOCS_PER_STEP_BUDGET,
+            "allocation budget exceeded: {agg_allocs_per_step:.1} allocs/step > {}",
+            SMOKE_ALLOCS_PER_STEP_BUDGET
+        );
+        println!("smoke gates passed: events/s ≥ floor/2, allocs/step ≤ budget ✓");
+    }
+    for r in &results {
+        assert!(r.completed > 0, "scenario `{}` served nothing", r.name);
+    }
+}

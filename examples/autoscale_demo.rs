@@ -18,7 +18,7 @@
 use cocoserve::autoscale::{scale_up, ScaleUpConfig};
 use cocoserve::baselines;
 use cocoserve::cluster::Cluster;
-use cocoserve::model::cost::{CostModel, MIB};
+use cocoserve::model::cost::MIB;
 use cocoserve::ops::{ModuleOps, PlanExecutor};
 use cocoserve::placement::Placement;
 use cocoserve::sim::{SimConfig, Simulation};
@@ -29,7 +29,7 @@ fn main() {
 
     // ---- part 1: plan → dry-run → execute, with cost parity -------------
     println!("== plan lifecycle: plan → validate → dry-run → execute ==\n");
-    let cost_model = CostModel::new(cfg.model.clone());
+    let cost_model = cfg.cost_model();
     let ops = ModuleOps::new(&cost_model, cfg.dtype_bytes, "inst0");
     let mut cluster = Cluster::paper_testbed();
     let mut placement = Placement::single_device(cfg.model.n_layers, 0);

@@ -15,7 +15,7 @@
 //!    [`crate::ops::PlanExecutor`], or in flight in the simulation
 //!    kernel).
 
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, ShadowLedger};
 use crate::ops::ModuleOps;
 use crate::placement::Placement;
 
@@ -150,7 +150,7 @@ impl Controller {
         &mut self,
         inp: &ControllerInputs,
         ctx: &PlanCtx<'_>,
-        is_violating: impl FnMut(&Cluster, &Placement, usize) -> bool,
+        is_violating: impl FnMut(&ShadowLedger<'_>, &Placement, usize) -> bool,
     ) -> PlannedDecision {
         let decision = self.decide(inp);
         self.plan(decision, ctx, is_violating)
@@ -163,7 +163,7 @@ impl Controller {
         &self,
         decision: Decision,
         ctx: &PlanCtx<'_>,
-        is_violating: impl FnMut(&Cluster, &Placement, usize) -> bool,
+        is_violating: impl FnMut(&ShadowLedger<'_>, &Placement, usize) -> bool,
     ) -> PlannedDecision {
         match decision {
             Decision::None => PlannedDecision::None,

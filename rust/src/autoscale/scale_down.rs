@@ -12,14 +12,15 @@
 //! 3. **Performance Reduction** — step the batch size down by Δbs and
 //!    offload, trading the instance's own throughput for stability.
 //!
-//! The planner walks *shadow* copies of the cluster and placement (the
-//! violation predicate observes the shadow state each phase would leave
-//! behind) and returns a [`ScaleDownPlan`]: module ops for phases 1–2 plus
-//! the phase-3 batch decision. Nothing is mutated here — the caller
-//! executes the plan through [`crate::ops::PlanExecutor`] or in flight via
-//! the simulation kernel, and applies `batch_size` itself.
+//! The planner walks a copy-on-write [`ShadowLedger`] plus a shadow
+//! placement (the violation predicate observes the shadow state each
+//! phase would leave behind — the cluster is never cloned) and returns a
+//! [`ScaleDownPlan`]: module ops for phases 1–2 plus the phase-3 batch
+//! decision. Nothing is mutated here — the caller executes the plan
+//! through [`crate::ops::PlanExecutor`] or in flight via the simulation
+//! kernel, and applies `batch_size` itself.
 
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, LedgerView, ShadowLedger};
 use crate::model::{ModuleId, ModuleKind};
 use crate::ops::{ModuleOps, PlanExecution};
 use crate::placement::Placement;
@@ -129,20 +130,16 @@ pub fn filter_modules(
 
 /// `FindOptimalDestination`: the non-violating device with the most free
 /// memory that can hold `bytes` while keeping `headroom_frac` free.
-pub fn find_optimal_destination(
-    cluster: &Cluster,
+/// Generic over the ledger view so the planner can consult its shadow.
+pub fn find_optimal_destination<V: LedgerView + ?Sized>(
+    view: &V,
     src: usize,
     bytes: f64,
     headroom_frac: f64,
 ) -> Option<usize> {
-    cluster
-        .by_free_memory()
-        .into_iter()
-        .find(|&d| {
-            d != src
-                && cluster.device(d).free_bytes() - bytes
-                    >= headroom_frac * cluster.device(d).spec.mem_bytes
-        })
+    view.by_free_memory().into_iter().find(|&d| {
+        d != src && view.free_bytes(d) - bytes >= headroom_frac * view.mem_bytes(d)
+    })
 }
 
 /// `SortEvicteesBy` (§4.2 phase 2): replicas co-located on the violating
@@ -160,10 +157,10 @@ pub fn sort_evictees(placement: &Placement, device: usize) -> Vec<usize> {
     evictees
 }
 
-/// Algorithm 2 as a pure planner. `is_violating(cluster, placement, batch)`
+/// Algorithm 2 as a pure planner. `is_violating(shadow, placement, batch)`
 /// is the SLO/OOM predicate (θ comparison), evaluated against the shadow
-/// state each planned step would produce; `kv_bytes(layer)` reports the
-/// live cache payload for KV migrations.
+/// ledger state each planned step would produce; `kv_bytes(layer)` reports
+/// the live cache payload for KV migrations.
 pub fn scale_down(
     ops: &ModuleOps<'_>,
     cluster: &Cluster,
@@ -173,9 +170,9 @@ pub fn scale_down(
     batch_size: usize,
     cfg: &ScaleDownConfig,
     kv_bytes: impl Fn(usize) -> f64,
-    mut is_violating: impl FnMut(&Cluster, &Placement, usize) -> bool,
+    mut is_violating: impl FnMut(&ShadowLedger<'_>, &Placement, usize) -> bool,
 ) -> ScaleDownPlan {
-    let mut shadow_cl = cluster.clone();
+    let mut shadow_cl = ShadowLedger::new(cluster);
     let mut shadow_pl = placement.clone();
     let mut exec = PlanExecution::eager();
     let mut out = ScaleDownPlan {
@@ -326,7 +323,7 @@ mod tests {
             &ScaleDownConfig::default(),
             |_| 2.0 * GIB, // each KV cache holds 2 GiB
             // violating while device 0 is above 90%
-            |cl, _, _| cl.device(0).mem_frac() > 0.90,
+            |cl, _, _| cl.mem_frac(0) > 0.90,
         );
         assert!(out.resolved, "actions: {:?}", out.actions);
         assert!(out

@@ -3,9 +3,10 @@
 //!
 //! Greedy search over (eligible device, continuity-sorted candidate layer)
 //! pairs: a replica is planned iff the Eq. 4 speedup strictly improves and
-//! the destination has room. The search runs against *shadow* copies of
-//! the cluster and placement — the caller's state is never touched; the
-//! returned [`ScaleUpPlan`] is applied through
+//! the destination has room. The search runs against a copy-on-write
+//! [`ShadowLedger`] (free-bytes + residency deltas — the cluster is never
+//! cloned) plus a shadow placement — the caller's state is never touched;
+//! the returned [`ScaleUpPlan`] is applied through
 //! [`crate::ops::PlanExecutor`] (atomically) or executed in flight by the
 //! simulation kernel. Guarantees from the paper, kept as tested
 //! invariants:
@@ -15,7 +16,7 @@
 //! * (c) the plan's dry-run cost equals its executed cost (the shadow
 //!   replay and the executor walk the same state evolution).
 
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, LedgerView, ShadowLedger};
 use crate::ops::{ModuleOps, PlanExecution};
 use crate::placement::Placement;
 use crate::plan::{ModuleOp, PlanCost, ScalePlan};
@@ -63,7 +64,7 @@ pub fn sort_candidates_by_continuity(
     max_replicas: usize,
 ) -> Vec<usize> {
     let mut cands: Vec<usize> = (0..placement.n_layers)
-        .filter(|&l| !placement.layer_devices(l).contains(&dst))
+        .filter(|&l| !placement.holds(l, dst))
         .collect();
     cands.sort_by_key(|&l| {
         (std::cmp::Reverse(placement.continuity_with(dst, l)), l)
@@ -85,7 +86,8 @@ pub fn scale_up(
 
     // Shadow state: the greedy must observe its own accepted replications
     // (destination fill, placement degrees) without touching the caller's.
-    let mut shadow_cl = cluster.clone();
+    // The ledger is a copy-on-write view — no cluster clone per round.
+    let mut shadow_cl = ShadowLedger::new(cluster);
     let mut shadow_pl = placement.clone();
     let mut exec = PlanExecution::eager();
 
@@ -99,10 +101,9 @@ pub fn scale_up(
     };
 
     // line 2: for g_dst ∈ GetEligibleNodes(G)
-    for dst in shadow_cl.eligible_nodes(cfg.min_vacancy) {
+    for dst in LedgerView::eligible_nodes(&shadow_cl, cfg.min_vacancy) {
         // line 3: max_replicas ← available / r
-        let max_replicas =
-            (shadow_cl.device(dst).free_bytes() / replica_bytes) as usize;
+        let max_replicas = (shadow_cl.free_bytes(dst) / replica_bytes) as usize;
         if max_replicas == 0 {
             continue;
         }

@@ -8,9 +8,13 @@
 //! accounting from which the monitor derives utilization — the same signals
 //! NVML gave the paper's monitor.
 
+pub mod shadow;
+
 use std::collections::BTreeMap;
 
 use crate::model::cost::MIB;
+
+pub use shadow::ShadowLedger;
 
 pub const GIB: f64 = 1024.0 * MIB;
 pub const TFLOPS: f64 = 1e12;
@@ -195,6 +199,11 @@ impl Device {
         self.allocs.get(tag).copied().unwrap_or(0.0)
     }
 
+    /// Is an allocation entry present under `tag` (even at zero bytes)?
+    pub fn has_alloc(&self, tag: &str) -> bool {
+        self.allocs.contains_key(tag)
+    }
+
     pub fn allocations(&self) -> impl Iterator<Item = (&str, f64)> {
         self.allocs.iter().map(|(k, v)| (k.as_str(), *v))
     }
@@ -216,6 +225,75 @@ impl Device {
             (self.busy_s / wall_s).min(1.0)
         }
     }
+}
+
+/// Read-only memory-ledger view: everything the pure planners and the
+/// plan costing need to observe about a cluster. Implemented by
+/// [`Cluster`] (the live ledgers) and [`ShadowLedger`] (a copy-on-write
+/// overlay), so planning and execution observe state through one
+/// interface and therefore price operations identically — the Table 2
+/// dry-run == executed parity contract.
+///
+/// The default implementations mirror [`Device`]'s formulas exactly;
+/// implementors must keep `used_bytes`/`mem_bytes` in the same
+/// accumulation regime as the live ledger so derived fractions stay
+/// bit-identical.
+pub trait LedgerView {
+    fn n(&self) -> usize;
+    fn used_bytes(&self, device: usize) -> f64;
+    /// Device memory capacity in bytes.
+    fn mem_bytes(&self, device: usize) -> f64;
+    fn link_bw(&self, a: usize, b: usize) -> f64;
+    /// Current bytes under `tag` on `device` (0.0 when absent).
+    fn alloc_bytes(&self, device: usize, tag: &str) -> f64;
+
+    fn free_bytes(&self, device: usize) -> f64 {
+        (self.mem_bytes(device) - self.used_bytes(device)).max(0.0)
+    }
+
+    fn mem_frac(&self, device: usize) -> f64 {
+        self.used_bytes(device) / self.mem_bytes(device)
+    }
+
+    /// §4.1 `GetEligibleNodes` filter signal: fraction of memory vacant.
+    fn vacancy_rate(&self, device: usize) -> f64 {
+        1.0 - self.mem_frac(device)
+    }
+
+    /// Devices sorted by descending free memory (placement preference).
+    fn by_free_memory(&self) -> Vec<usize> {
+        let mut ids: Vec<usize> = (0..self.n()).collect();
+        ids.sort_by(|&a, &b| {
+            self.free_bytes(b).partial_cmp(&self.free_bytes(a)).unwrap()
+        });
+        ids
+    }
+
+    /// §4.1 `GetEligibleNodes`: devices whose vacancy rate ≥ threshold,
+    /// most-vacant first.
+    fn eligible_nodes(&self, min_vacancy: f64) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..self.n())
+            .filter(|&i| self.vacancy_rate(i) >= min_vacancy)
+            .collect();
+        v.sort_by(|&a, &b| {
+            self.vacancy_rate(b).partial_cmp(&self.vacancy_rate(a)).unwrap()
+        });
+        v
+    }
+}
+
+/// A [`LedgerView`] that can also be mutated — the interface
+/// [`crate::ops::PlanExecution`] drives, live ([`Cluster`]) or shadowed
+/// ([`ShadowLedger`]). `restore_alloc` is the rollback primitive: it
+/// re-establishes a previously observed tag size bypassing the OOM check
+/// (rollback only ever shrinks plan-made allocations back).
+pub trait Ledger: LedgerView {
+    fn alloc(&mut self, device: usize, tag: &str, bytes: f64) -> Result<(), AllocError>;
+    /// Free the whole allocation under `tag`, returning its size.
+    fn free(&mut self, device: usize, tag: &str) -> Result<f64, AllocError>;
+    /// Shrink/grow an existing tag to an exact size.
+    fn resize(&mut self, device: usize, tag: &str, bytes: f64) -> Result<(), AllocError>;
+    fn restore_alloc(&mut self, device: usize, tag: &str, prev_bytes: f64);
 }
 
 /// The cluster: a set of devices plus the interconnect description.
@@ -253,29 +331,13 @@ impl Cluster {
 
     /// Devices sorted by descending free memory (placement preference).
     pub fn by_free_memory(&self) -> Vec<usize> {
-        let mut ids: Vec<usize> = (0..self.n()).collect();
-        ids.sort_by(|&a, &b| {
-            self.devices[b]
-                .free_bytes()
-                .partial_cmp(&self.devices[a].free_bytes())
-                .unwrap()
-        });
-        ids
+        LedgerView::by_free_memory(self)
     }
 
     /// §4.1 `GetEligibleNodes`: devices whose vacancy rate ≥ threshold.
+    /// Most-vacant first, so replicas land where the most room is.
     pub fn eligible_nodes(&self, min_vacancy: f64) -> Vec<usize> {
-        let mut v: Vec<usize> = (0..self.n())
-            .filter(|&i| self.devices[i].vacancy_rate() >= min_vacancy)
-            .collect();
-        // Most-vacant first, so replicas land where the most room is.
-        v.sort_by(|&a, &b| {
-            self.devices[b]
-                .vacancy_rate()
-                .partial_cmp(&self.devices[a].vacancy_rate())
-                .unwrap()
-        });
-        v
+        LedgerView::eligible_nodes(self, min_vacancy)
     }
 
     pub fn total_used_bytes(&self) -> f64 {
@@ -284,6 +346,58 @@ impl Cluster {
 
     pub fn total_oom_events(&self) -> u64 {
         self.devices.iter().map(|d| d.oom_events).sum()
+    }
+}
+
+impl LedgerView for Cluster {
+    fn n(&self) -> usize {
+        self.devices.len()
+    }
+
+    fn used_bytes(&self, device: usize) -> f64 {
+        self.devices[device].used_bytes()
+    }
+
+    fn mem_bytes(&self, device: usize) -> f64 {
+        self.devices[device].spec.mem_bytes
+    }
+
+    fn link_bw(&self, a: usize, b: usize) -> f64 {
+        Cluster::link_bw(self, a, b)
+    }
+
+    fn alloc_bytes(&self, device: usize, tag: &str) -> f64 {
+        self.devices[device].alloc_bytes(tag)
+    }
+
+    fn free_bytes(&self, device: usize) -> f64 {
+        self.devices[device].free_bytes()
+    }
+
+    fn mem_frac(&self, device: usize) -> f64 {
+        self.devices[device].mem_frac()
+    }
+
+    fn vacancy_rate(&self, device: usize) -> f64 {
+        self.devices[device].vacancy_rate()
+    }
+}
+
+impl Ledger for Cluster {
+    fn alloc(&mut self, device: usize, tag: &str, bytes: f64) -> Result<(), AllocError> {
+        self.devices[device].alloc(tag, bytes)
+    }
+
+    fn free(&mut self, device: usize, tag: &str) -> Result<f64, AllocError> {
+        self.devices[device].free(tag)
+    }
+
+    fn resize(&mut self, device: usize, tag: &str, bytes: f64) -> Result<(), AllocError> {
+        self.devices[device].resize(tag, bytes)
+    }
+
+    fn restore_alloc(&mut self, device: usize, tag: &str, prev_bytes: f64) {
+        self.devices[device].restore_alloc(tag, prev_bytes)
     }
 }
 

@@ -1,0 +1,309 @@
+//! Copy-on-write shadow ledger — planning without cloning the cluster.
+//!
+//! The pure planners (Algorithm 1/2) and [`crate::plan::ScalePlan::dry_run`]
+//! must observe the state evolution their own ops produce (destination
+//! fill, freed bytes) without touching the live ledgers. They used to deep-
+//! clone the whole [`Cluster`] — every tag of every instance on every
+//! device — per planning round. A [`ShadowLedger`] keeps only what
+//! planning can change: a per-device `used` counter seeded from the live
+//! value, plus a sparse per-device tag overlay. Reads fall through to the
+//! borrowed base cluster; writes land in the overlay.
+//!
+//! ### Parity contract
+//!
+//! The shadow applies the **same arithmetic in the same order** as
+//! [`super::Device`]'s mutators (`alloc` adds, `free` subtracts with the
+//! same `max(0.0)` clamp, `resize` adds the delta), and its `used` starts
+//! from the live device's exact f64 value — so `mem_frac` trajectories,
+//! and therefore transfer times and plan costs, are bit-identical to what
+//! execution against the live cluster produces. That is what keeps the
+//! dry-run == executed (Table 2) parity intact after the clone removal;
+//! the `profile_cache` test suite asserts it property-style.
+
+use std::collections::BTreeMap;
+
+use super::{AllocError, Cluster, Ledger, LedgerView};
+use crate::model::cost::MIB;
+
+/// A lightweight mutable view over a borrowed [`Cluster`]: free-bytes +
+/// tag-residency deltas only. Dropping it discards every planned change.
+#[derive(Debug)]
+pub struct ShadowLedger<'a> {
+    base: &'a Cluster,
+    /// Evolved per-device used bytes (seeded from the live ledgers).
+    used: Vec<f64>,
+    /// Per-device tag overrides; absent tags read through to the base.
+    /// `Some(bytes)` = tag present at that size, `None` = tag removed —
+    /// presence matters because [`super::Device::free`] errors on an
+    /// absent tag, and the shadow must refuse identically.
+    overlays: Vec<BTreeMap<String, Option<f64>>>,
+}
+
+impl<'a> ShadowLedger<'a> {
+    pub fn new(base: &'a Cluster) -> ShadowLedger<'a> {
+        ShadowLedger {
+            used: (0..base.n()).map(|d| base.device(d).used_bytes()).collect(),
+            overlays: vec![BTreeMap::new(); base.n()],
+            base,
+        }
+    }
+
+    /// Convenience inherent mirrors of the [`LedgerView`] accessors, so
+    /// violation predicates (`|cl, _, _| cl.mem_frac(0) > 0.9`) need no
+    /// trait import.
+    pub fn n(&self) -> usize {
+        LedgerView::n(self)
+    }
+
+    pub fn used_bytes(&self, device: usize) -> f64 {
+        LedgerView::used_bytes(self, device)
+    }
+
+    pub fn free_bytes(&self, device: usize) -> f64 {
+        LedgerView::free_bytes(self, device)
+    }
+
+    pub fn mem_frac(&self, device: usize) -> f64 {
+        LedgerView::mem_frac(self, device)
+    }
+
+    pub fn vacancy_rate(&self, device: usize) -> f64 {
+        LedgerView::vacancy_rate(self, device)
+    }
+
+    /// Number of tags the planning session has touched (diagnostics).
+    pub fn touched_tags(&self) -> usize {
+        self.overlays.iter().map(|o| o.len()).sum()
+    }
+}
+
+impl LedgerView for ShadowLedger<'_> {
+    fn n(&self) -> usize {
+        self.base.n()
+    }
+
+    fn used_bytes(&self, device: usize) -> f64 {
+        self.used[device]
+    }
+
+    fn mem_bytes(&self, device: usize) -> f64 {
+        self.base.device(device).spec.mem_bytes
+    }
+
+    fn link_bw(&self, a: usize, b: usize) -> f64 {
+        self.base.link_bw(a, b)
+    }
+
+    fn alloc_bytes(&self, device: usize, tag: &str) -> f64 {
+        match self.overlays[device].get(tag) {
+            Some(&Some(b)) => b,
+            Some(&None) => 0.0,
+            None => self.base.device(device).alloc_bytes(tag),
+        }
+    }
+}
+
+impl ShadowLedger<'_> {
+    /// Is the tag currently present (overlay first, base fallback)?
+    fn tag_present(&self, device: usize, tag: &str) -> bool {
+        match self.overlays[device].get(tag) {
+            Some(o) => o.is_some(),
+            None => self.base.device(device).has_alloc(tag),
+        }
+    }
+}
+
+impl Ledger for ShadowLedger<'_> {
+    fn alloc(&mut self, device: usize, tag: &str, bytes: f64) -> Result<(), AllocError> {
+        debug_assert!(bytes >= 0.0);
+        if bytes > self.free_bytes(device) {
+            return Err(AllocError::Oom {
+                device,
+                requested_mib: bytes / MIB,
+                free_mib: self.free_bytes(device) / MIB,
+            });
+        }
+        let cur = self.alloc_bytes(device, tag);
+        self.overlays[device].insert(tag.to_string(), Some(cur + bytes));
+        self.used[device] += bytes;
+        Ok(())
+    }
+
+    fn free(&mut self, device: usize, tag: &str) -> Result<f64, AllocError> {
+        if !self.tag_present(device, tag) {
+            return Err(AllocError::UnknownTag(tag.to_string()));
+        }
+        let cur = self.alloc_bytes(device, tag);
+        self.overlays[device].insert(tag.to_string(), None);
+        self.used[device] = (self.used[device] - cur).max(0.0);
+        Ok(cur)
+    }
+
+    fn resize(&mut self, device: usize, tag: &str, bytes: f64) -> Result<(), AllocError> {
+        let cur = self.alloc_bytes(device, tag);
+        if bytes > cur && bytes - cur > self.free_bytes(device) {
+            return Err(AllocError::Oom {
+                device,
+                requested_mib: (bytes - cur) / MIB,
+                free_mib: self.free_bytes(device) / MIB,
+            });
+        }
+        self.used[device] += bytes - cur;
+        // Device::resize drops the entry entirely at size 0.
+        let entry = if bytes == 0.0 { None } else { Some(bytes) };
+        self.overlays[device].insert(tag.to_string(), entry);
+        Ok(())
+    }
+
+    fn restore_alloc(&mut self, device: usize, tag: &str, prev_bytes: f64) {
+        let cur = self.alloc_bytes(device, tag);
+        let entry = if prev_bytes == 0.0 { None } else { Some(prev_bytes) };
+        self.overlays[device].insert(tag.to_string(), entry);
+        self.used[device] = (self.used[device] + prev_bytes - cur).max(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{DeviceSpec, GIB};
+    use crate::util::{prop, rng::Rng};
+
+    fn base() -> Cluster {
+        let mut c = Cluster::homogeneous(3, DeviceSpec::a100_40gb());
+        c.device_mut(0).alloc("w", 10.0 * GIB).unwrap();
+        c.device_mut(1).alloc("kv", 2.5 * GIB).unwrap();
+        c
+    }
+
+    #[test]
+    fn reads_fall_through_to_base() {
+        let c = base();
+        let s = ShadowLedger::new(&c);
+        assert_eq!(s.used_bytes(0).to_bits(), c.device(0).used_bytes().to_bits());
+        assert_eq!(s.alloc_bytes(1, "kv"), 2.5 * GIB);
+        assert_eq!(s.alloc_bytes(1, "nope"), 0.0);
+        assert_eq!(s.mem_frac(2), 0.0);
+        assert_eq!(s.touched_tags(), 0);
+    }
+
+    #[test]
+    fn writes_never_touch_the_base() {
+        let c = base();
+        let mut s = ShadowLedger::new(&c);
+        s.alloc(2, "plan", 5.0 * GIB).unwrap();
+        Ledger::free(&mut s, 0, "w").unwrap();
+        s.resize(1, "kv", 4.0 * GIB).unwrap();
+        assert_eq!(c.device(2).used_bytes(), 0.0);
+        assert_eq!(c.device(0).alloc_bytes("w"), 10.0 * GIB);
+        assert_eq!(c.device(1).alloc_bytes("kv"), 2.5 * GIB);
+        assert_eq!(s.used_bytes(2), 5.0 * GIB);
+        assert_eq!(s.alloc_bytes(0, "w"), 0.0);
+        assert_eq!(s.alloc_bytes(1, "kv"), 4.0 * GIB);
+    }
+
+    #[test]
+    fn oom_refused_like_a_device() {
+        let c = base();
+        let mut s = ShadowLedger::new(&c);
+        assert!(matches!(s.alloc(0, "x", 31.0 * GIB), Err(AllocError::Oom { .. })));
+        assert_eq!(s.used_bytes(0), 10.0 * GIB, "failed alloc leaves no trace");
+        assert!(matches!(
+            Ledger::free(&mut s, 0, "absent"),
+            Err(AllocError::UnknownTag(_))
+        ));
+    }
+
+    #[test]
+    fn prop_shadow_tracks_cloned_cluster_bit_for_bit() {
+        // Random op sequences applied both to a ShadowLedger over the base
+        // and to a deep clone of the base must produce identical
+        // free/used/mem_frac/alloc_bytes trajectories — the parity that
+        // lets planners drop the clone without changing any planned cost.
+        prop::check(
+            "shadow-parity",
+            |r: &mut Rng| {
+                (0..40)
+                    .map(|_| {
+                        (
+                            r.below(4) as u8,
+                            r.below(3) as usize,
+                            r.below(4),
+                            r.f64() * 8.0,
+                        )
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |ops| {
+                let c = base();
+                let mut clone = c.clone();
+                let mut shadow = ShadowLedger::new(&c);
+                for &(op, d, tag_i, gib) in ops {
+                    let tag = format!("t{tag_i}");
+                    let bytes = gib * GIB;
+                    match op {
+                        0 => {
+                            let a = clone.device_mut(d).alloc(&tag, bytes).is_ok();
+                            let b = shadow.alloc(d, &tag, bytes).is_ok();
+                            if a != b {
+                                return Err(format!("alloc diverged: {a} vs {b}"));
+                            }
+                        }
+                        1 => {
+                            let a = clone.device_mut(d).free(&tag).ok();
+                            let b = Ledger::free(&mut shadow, d, &tag).ok();
+                            if a.map(f64::to_bits) != b.map(f64::to_bits) {
+                                return Err("free diverged".into());
+                            }
+                        }
+                        2 => {
+                            let a = clone.device_mut(d).resize(&tag, bytes).is_ok();
+                            let b = shadow.resize(d, &tag, bytes).is_ok();
+                            if a != b {
+                                return Err("resize diverged".into());
+                            }
+                        }
+                        _ => {
+                            clone.device_mut(d).restore_alloc(&tag, bytes);
+                            shadow.restore_alloc(d, &tag, bytes);
+                        }
+                    }
+                    for dev in 0..3 {
+                        if clone.device(dev).used_bytes().to_bits()
+                            != shadow.used_bytes(dev).to_bits()
+                        {
+                            return Err(format!("used diverged on device {dev}"));
+                        }
+                        if clone.device(dev).mem_frac().to_bits()
+                            != shadow.mem_frac(dev).to_bits()
+                        {
+                            return Err(format!("mem_frac diverged on device {dev}"));
+                        }
+                        if clone.device(dev).alloc_bytes(&tag).to_bits()
+                            != shadow.alloc_bytes(dev, &tag).to_bits()
+                        {
+                            return Err(format!("tag bytes diverged on device {dev}"));
+                        }
+                    }
+                }
+                // the borrowed base never moved
+                for dev in 0..3 {
+                    if c.device(dev).used_bytes() != base().device(dev).used_bytes() {
+                        return Err("base mutated".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn eligible_nodes_and_ordering_match_cluster() {
+        let mut c = Cluster::homogeneous(4, DeviceSpec::a100_40gb());
+        c.device_mut(0).alloc("x", 30.0 * GIB).unwrap();
+        c.device_mut(1).alloc("x", 10.0 * GIB).unwrap();
+        let s = ShadowLedger::new(&c);
+        assert_eq!(LedgerView::eligible_nodes(&s, 0.5), c.eligible_nodes(0.5));
+        assert_eq!(LedgerView::by_free_memory(&s), c.by_free_memory());
+    }
+}

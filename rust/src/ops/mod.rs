@@ -32,7 +32,7 @@
 //! Post-scaling inter-replica communication setup is the paper's measured
 //! 39.1 ms constant.
 
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, Ledger, LedgerView};
 use crate::model::cost::{CostModel, Shape, MIB};
 use crate::model::{ModuleId, ModuleKind};
 use crate::placement::Placement;
@@ -168,9 +168,17 @@ impl<'a> ModuleOps<'a> {
     }
 
     /// Transfer time for `bytes` into `dst`, with fill-contention slowdown.
-    pub fn transfer_time(&self, cluster: &Cluster, src: usize, dst: usize, bytes: f64) -> f64 {
-        let bw = cluster.link_bw(src, dst);
-        let slow = (1.0 - cluster.device(dst).mem_frac()).max(0.25);
+    /// Generic over the ledger view so live execution and shadow planning
+    /// observe the destination's fill through the same arithmetic.
+    pub fn transfer_time<L: LedgerView + ?Sized>(
+        &self,
+        ledger: &L,
+        src: usize,
+        dst: usize,
+        bytes: f64,
+    ) -> f64 {
+        let bw = ledger.link_bw(src, dst);
+        let slow = (1.0 - ledger.mem_frac(dst)).max(0.25);
         bytes / (bw * slow)
     }
 
@@ -247,10 +255,10 @@ impl PlanExecution {
 
     /// Release the current allocation under `tag` now (eager/planner
     /// mode) or at commit (two-phase mode). Returns the bytes released.
-    fn release(&mut self, cluster: &mut Cluster, device: usize, tag: String) -> f64 {
-        let bytes = cluster.device(device).alloc_bytes(&tag);
+    fn release<L: Ledger + ?Sized>(&mut self, ledger: &mut L, device: usize, tag: String) -> f64 {
+        let bytes = ledger.alloc_bytes(device, &tag);
         if self.eager_frees {
-            let _ = cluster.device_mut(device).free(&tag);
+            let _ = ledger.free(device, &tag);
         } else if bytes > 0.0 {
             self.pending_frees.push((device, tag, bytes));
         }
@@ -261,11 +269,10 @@ impl PlanExecution {
     /// return the accumulated cost. Call after the last op applied.
     /// Frees subtract the amount recorded at apply time, never the whole
     /// tag — bytes a later op re-allocated under the same tag survive.
-    pub fn commit(mut self, cluster: &mut Cluster) -> PlanCost {
+    pub fn commit<L: Ledger + ?Sized>(mut self, ledger: &mut L) -> PlanCost {
         for (device, tag, bytes) in self.pending_frees.drain(..) {
-            let dev = cluster.device_mut(device);
-            let remaining = (dev.alloc_bytes(&tag) - bytes).max(0.0);
-            let _ = dev.resize(&tag, remaining);
+            let remaining = (ledger.alloc_bytes(device, &tag) - bytes).max(0.0);
+            let _ = ledger.resize(device, &tag, remaining);
         }
         self.cost
     }
@@ -302,29 +309,30 @@ impl PlanExecution {
         self.last_launch = Some((kind, dst));
     }
 
-    /// Apply one op against live state, recording its inverse. On `Err`
+    /// Apply one op against a ledger (live [`Cluster`] or a planner's
+    /// [`crate::cluster::ShadowLedger`]), recording its inverse. On `Err`
     /// the op itself left no trace; previously applied ops stay applied
     /// (call [`PlanExecution::rollback`] to unwind them).
-    pub fn apply_next(
+    pub fn apply_next<L: Ledger + ?Sized>(
         &mut self,
         ops: &ModuleOps<'_>,
-        cluster: &mut Cluster,
+        ledger: &mut L,
         placement: &mut Placement,
         op: &ModuleOp,
     ) -> Result<OpCost, OpError> {
         let cost = match *op {
             ModuleOp::Replicate { layer, dst } => {
-                if placement.layer_devices(layer).contains(&dst) {
+                if placement.holds(layer, dst) {
                     return Err(OpError::AlreadyResident(layer, dst));
                 }
                 let src = placement.primary_device(layer);
                 let bytes = ops.module_bytes(ModuleKind::DecoderLayer);
                 let m = ModuleId::layer(ModuleKind::DecoderLayer, layer);
                 let time = self.launch_cost(LaunchKind::Replicate, dst)
-                    + ops.transfer_time(cluster, src, dst, bytes);
+                    + ops.transfer_time(ledger, src, dst, bytes);
                 let tag = ops.tag(&m, dst);
-                let prev_bytes = cluster.device(dst).alloc_bytes(&tag);
-                cluster.device_mut(dst).alloc(&tag, bytes)?;
+                let prev_bytes = ledger.alloc_bytes(dst, &tag);
+                ledger.alloc(dst, &tag, bytes)?;
                 self.note_launch(LaunchKind::Replicate, dst);
                 self.undo.push(UndoEntry::Ledger { device: dst, tag, prev_bytes });
                 placement.add_replica(layer, dst);
@@ -333,22 +341,22 @@ impl PlanExecution {
             }
             ModuleOp::MigrateLayer { layer, dst } => {
                 let src = placement.primary_device(layer);
-                if src == dst || placement.layer_devices(layer).contains(&dst) {
+                if src == dst || placement.holds(layer, dst) {
                     return Err(OpError::AlreadyResident(layer, dst));
                 }
                 let bytes = ops.module_bytes(ModuleKind::DecoderLayer);
                 let m = ModuleId::layer(ModuleKind::DecoderLayer, layer);
                 let time = self.launch_cost(LaunchKind::Migrate, dst)
-                    + ops.transfer_time(cluster, src, dst, bytes);
+                    + ops.transfer_time(ledger, src, dst, bytes);
                 let dst_tag = ops.tag(&m, dst);
-                let prev_bytes = cluster.device(dst).alloc_bytes(&dst_tag);
-                cluster.device_mut(dst).alloc(&dst_tag, bytes)?;
+                let prev_bytes = ledger.alloc_bytes(dst, &dst_tag);
+                ledger.alloc(dst, &dst_tag, bytes)?;
                 self.note_launch(LaunchKind::Migrate, dst);
                 self.undo.push(UndoEntry::Ledger { device: dst, tag: dst_tag, prev_bytes });
                 // Copy-then-free: the source copy is released only when
                 // the plan commits (migration must never lose the module,
                 // and rollback must never need to re-acquire memory).
-                self.release(cluster, src, ops.tag(&m, src));
+                self.release(ledger, src, ops.tag(&m, src));
                 placement.migrate_layer(layer, dst);
                 self.undo.push(UndoEntry::MovedPrimary { layer, from: src });
                 OpCost { time_s: time, bytes_moved: bytes, dst_bytes: bytes }
@@ -360,13 +368,13 @@ impl PlanExecution {
                 }
                 let bytes = ops.module_bytes(module.kind) + payload_bytes;
                 let time = self.launch_cost(LaunchKind::Migrate, dst)
-                    + ops.transfer_time(cluster, src, dst, bytes);
+                    + ops.transfer_time(ledger, src, dst, bytes);
                 let dst_tag = ops.tag(&module, dst);
-                let prev_bytes = cluster.device(dst).alloc_bytes(&dst_tag);
-                cluster.device_mut(dst).alloc(&dst_tag, bytes)?;
+                let prev_bytes = ledger.alloc_bytes(dst, &dst_tag);
+                ledger.alloc(dst, &dst_tag, bytes)?;
                 self.note_launch(LaunchKind::Migrate, dst);
                 self.undo.push(UndoEntry::Ledger { device: dst, tag: dst_tag, prev_bytes });
-                self.release(cluster, src, ops.tag(&module, src));
+                self.release(ledger, src, ops.tag(&module, src));
                 let prev = placement.module_override(module);
                 placement.migrate_module(module, dst);
                 self.undo.push(UndoEntry::MovedModule { module, prev });
@@ -378,7 +386,7 @@ impl PlanExecution {
                 }
                 self.undo.push(UndoEntry::RemovedReplica { layer, device });
                 let m = ModuleId::layer(ModuleKind::DecoderLayer, layer);
-                let freed = self.release(cluster, device, ops.tag(&m, device));
+                let freed = self.release(ledger, device, ops.tag(&m, device));
                 // an eviction breaks a transfer batch: the next transfer
                 // pays its launch again
                 self.last_launch = None;
@@ -395,20 +403,20 @@ impl PlanExecution {
     /// frees were deferred to commit, so rollback only ever *releases*
     /// destination allocations — it cannot fail; placement inverses
     /// tolerate entries a concurrent actor already reverted.
-    pub fn rollback(mut self, cluster: &mut Cluster, placement: &mut Placement) {
+    pub fn rollback<L: Ledger + ?Sized>(mut self, ledger: &mut L, placement: &mut Placement) {
         debug_assert!(!self.eager_frees, "eager (planner) executions are not rolled back");
         self.pending_frees.clear(); // sources were never freed
         for entry in self.undo.drain(..).rev() {
             match entry {
                 UndoEntry::Ledger { device, tag, prev_bytes } => {
-                    cluster.device_mut(device).restore_alloc(&tag, prev_bytes);
+                    ledger.restore_alloc(device, &tag, prev_bytes);
                 }
                 UndoEntry::AddedReplica { layer, device } => {
                     placement.remove_replica(layer, device);
                 }
                 UndoEntry::MovedPrimary { layer, from } => {
                     if placement.primary_device(layer) != from
-                        && !placement.layer_devices(layer).contains(&from)
+                        && !placement.holds(layer, from)
                     {
                         placement.migrate_layer(layer, from);
                     }
@@ -420,7 +428,7 @@ impl PlanExecution {
                     }
                 },
                 UndoEntry::RemovedReplica { layer, device } => {
-                    if !placement.layer_devices(layer).contains(&device) {
+                    if !placement.holds(layer, device) {
                         placement.add_replica(layer, device);
                     }
                 }

@@ -13,9 +13,13 @@
 //!   (§3.2: "the continuity between replicas affects the communication
 //!   overhead").
 
+pub mod profile;
+
 use std::collections::BTreeMap;
 
 use crate::model::{ModuleId, ModuleKind};
+
+pub use profile::PlacementProfile;
 
 /// Placement of one model instance across the cluster.
 #[derive(Debug, Clone, PartialEq)]
@@ -77,10 +81,25 @@ impl Placement {
     }
 
     /// All devices holding an executable copy of a layer (primary first).
+    ///
+    /// Allocates; hot paths use [`Placement::layer_device_iter`] /
+    /// [`Placement::holds`] instead.
     pub fn layer_devices(&self, layer: usize) -> Vec<usize> {
-        let mut v = vec![self.primary[layer]];
-        v.extend(&self.replicas[layer]);
-        v
+        self.layer_device_iter(layer).collect()
+    }
+
+    /// Non-allocating view of a layer's devices, primary first, replicas in
+    /// creation order — the same sequence [`Placement::layer_devices`]
+    /// returns.
+    pub fn layer_device_iter(&self, layer: usize) -> impl Iterator<Item = usize> + '_ {
+        std::iter::once(self.primary[layer]).chain(self.replicas[layer].iter().copied())
+    }
+
+    /// Does `device` hold an executable copy (primary or replica) of
+    /// `layer`? Non-allocating replacement for
+    /// `layer_devices(layer).contains(&device)`.
+    pub fn holds(&self, layer: usize, device: usize) -> bool {
+        self.primary[layer] == device || self.replicas[layer].contains(&device)
     }
 
     /// Device a module actually executes on (honouring migrations).
@@ -123,7 +142,7 @@ impl Placement {
     /// device holds at most one copy of a layer.
     pub fn add_replica(&mut self, layer: usize, device: usize) {
         assert!(
-            !self.layer_devices(layer).contains(&device),
+            !self.holds(layer, device),
             "device {device} already holds layer {layer}"
         );
         self.replicas[layer].push(device);
@@ -163,32 +182,27 @@ impl Placement {
     // ---- continuity (§3.2 / Algorithm 1) -----------------------------------
 
     /// Number of device transitions walking layers 0..n — each transition
-    /// is a scatter/all-gather boundary. Lower = better.
+    /// is a scatter/all-gather boundary. Lower = better. Allocation-free:
+    /// compares the device sequences element-wise.
     pub fn transition_count(&self) -> usize {
         (1..self.n_layers)
-            .filter(|&l| {
-                let a = self.layer_devices(l - 1);
-                let b = self.layer_devices(l);
-                a != b
-            })
+            .filter(|&l| !self.layer_device_iter(l - 1).eq(self.layer_device_iter(l)))
             .count()
     }
 
     /// Length of the longest run of consecutive layers replicated on
     /// `device` if `candidate` were added — Algorithm 1's
-    /// `SortCandidatesByContinuity` key.
+    /// `SortCandidatesByContinuity` key. Allocation-free: walks outward
+    /// from the candidate instead of materializing a held-layers table.
     pub fn continuity_with(&self, device: usize, candidate: usize) -> usize {
-        let mut held: Vec<bool> = (0..self.n_layers)
-            .map(|l| self.layer_devices(l).contains(&device))
-            .collect();
-        held[candidate] = true;
-        // longest true-run containing `candidate`
+        let held = |l: usize| l == candidate || self.holds(l, device);
+        // longest held-run containing `candidate`
         let mut lo = candidate;
-        while lo > 0 && held[lo - 1] {
+        while lo > 0 && held(lo - 1) {
             lo -= 1;
         }
         let mut hi = candidate;
-        while hi + 1 < self.n_layers && held[hi + 1] {
+        while hi + 1 < self.n_layers && held(hi + 1) {
             hi += 1;
         }
         hi - lo + 1
@@ -309,6 +323,22 @@ mod tests {
         assert_eq!(p.transition_count(), 2);
         p.add_replica(4, 1);
         assert_eq!(p.transition_count(), 2); // 1->2, 4->5
+    }
+
+    #[test]
+    fn iter_accessors_match_vec_accessors() {
+        let mut p = Placement::single_device(8, 0);
+        p.add_replica(2, 1);
+        p.add_replica(2, 3);
+        p.add_replica(5, 2);
+        for l in 0..8 {
+            let v = p.layer_devices(l);
+            let i: Vec<usize> = p.layer_device_iter(l).collect();
+            assert_eq!(v, i, "layer {l}");
+            for d in 0..4 {
+                assert_eq!(p.holds(l, d), v.contains(&d), "layer {l} device {d}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,336 @@
+//! Compiled placement profiles — the zero-allocation step-cost kernel.
+//!
+//! The simulator's roofline step costs (`prefill_step_time` /
+//! `decode_step_time`) are the hottest code in a fleet-scale run: they
+//! execute once per serving step per instance. Walking the [`Placement`]
+//! directly pays O(layers × replicas) with two heap allocations *per
+//! layer* per call (`layer_devices` builds a `Vec`, `split_batch`
+//! allocates the shares). A [`PlacementProfile`] compiles the placement
+//! once — Noria-style: compile the dataflow, invalidate incrementally —
+//! into contiguous per-layer device-group segments with the roofline
+//! coefficients (effective FLOPs, HBM bandwidth) precomputed, so the step
+//! costs become allocation-free linear scans over flat arrays.
+//!
+//! ### Determinism contract
+//!
+//! A profile is a *cache*, never a re-derivation: its scans perform the
+//! **same f64 operations in the same order** as the uncompiled reference
+//! walk over `Placement` + `Cluster`:
+//!
+//! * segments store devices in `layer_device_iter` order (primary first,
+//!   replicas in creation order), so the per-replica `max` fold visits
+//!   the same operands in the same order;
+//! * batch shares are recomputed arithmetically (`base + (i < extra)`) —
+//!   integer math, exactly [`crate::scheduler::split_batch`]'s values;
+//! * `effective_flops` (`peak × mfu`) and `hbm_bw` are pure functions of
+//!   the static [`crate::cluster::DeviceSpec`], so hoisting them to
+//!   compile time cannot change a bit.
+//!
+//! The `profile_cache` integration test asserts this bit-for-bit
+//! (`f64::to_bits`) against an uncompiled reference across randomized
+//! plan mutations.
+//!
+//! ### Invalidation
+//!
+//! Profiles are keyed by an epoch the owner bumps on every placement
+//! mutation. In the simulator that is exactly the plan lifecycle: an
+//! `OpCompleted` event applying a [`crate::plan::ScalePlan`] op, a
+//! mid-flight rollback, or an emergency scale-down. Steady-state serving
+//! never recompiles.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::cluster::Cluster;
+use crate::model::cost::{CostModel, Shape};
+use crate::model::{ModuleId, ModuleKind};
+
+use super::Placement;
+
+/// Per-layer communication constant of the §3.2 transition term (launch
+/// latency of a scatter/all-gather pair). Kept identical to the inline
+/// constant the uncompiled step costs used.
+const TRANSITION_LAUNCH_S: f64 = 20e-6;
+
+/// A placement compiled against a cluster's device specs: flat per-layer
+/// device-group segments plus every placement-derived constant the serving
+/// hot path needs. Rebuild via [`PlacementProfile::compile`] whenever the
+/// placement changes; everything here is otherwise immutable.
+#[derive(Debug, Clone)]
+pub struct PlacementProfile {
+    pub n_layers: usize,
+    /// Cache key: the owner's placement revision at compile time.
+    pub epoch: u64,
+    /// Segment offsets: layer `l`'s device entries live at
+    /// `seg_off[l]..seg_off[l + 1]` in the flat arrays below.
+    seg_off: Vec<u32>,
+    /// Effective sustained FLOPs of each device entry (peak × MFU).
+    seg_eff_flops: Vec<f64>,
+    /// HBM bandwidth of each device entry (decode-roofline denominator).
+    seg_hbm_bw: Vec<f64>,
+    /// Device id of each entry (diagnostics + tests).
+    seg_device: Vec<u32>,
+    /// Precompiled `Placement::transition_count()`.
+    pub transitions: usize,
+    /// Link bandwidth the transition term divides by (device 0's, as in
+    /// the uncompiled reference).
+    link_bw0: f64,
+    /// Effective FLOPs of layer 0's primary device (embed + lm_head term).
+    head_eff_flops: f64,
+    /// Mean layer degree — the batch-capacity multiplier (Fig. 4 lanes).
+    pub mean_degree: f64,
+    /// Distinct devices hosting any copy of any layer, ascending — the
+    /// busy-charge set (BTreeSet iteration order, precompiled).
+    pub device_set: Vec<usize>,
+    /// Distinct primary devices, ascending — the §8 contention footprint.
+    pub primary_set: Vec<usize>,
+    /// Primary device per layer, in layer order (hottest-device scans).
+    pub primary_devices: Vec<usize>,
+    /// KV-cache residency groups: (device, layer count), ascending by
+    /// device — the per-device grouping `sync_kv` mirrors into ledgers.
+    pub kv_groups: Vec<(usize, u32)>,
+}
+
+impl PlacementProfile {
+    /// Flatten `placement` against `cluster`'s device specs. Allocates —
+    /// called only at deploy time and at plan-epoch invalidation points,
+    /// never on the steady-state step path.
+    pub fn compile(placement: &Placement, cluster: &Cluster, epoch: u64) -> PlacementProfile {
+        let n = placement.n_layers;
+        let mut seg_off = Vec::with_capacity(n + 1);
+        let mut seg_eff_flops = Vec::new();
+        let mut seg_hbm_bw = Vec::new();
+        let mut seg_device = Vec::new();
+        let mut device_set = BTreeSet::new();
+        seg_off.push(0u32);
+        for l in 0..n {
+            for d in placement.layer_device_iter(l) {
+                let spec = &cluster.device(d).spec;
+                seg_eff_flops.push(spec.effective_flops());
+                seg_hbm_bw.push(spec.hbm_bw);
+                seg_device.push(d as u32);
+                device_set.insert(d);
+            }
+            seg_off.push(seg_eff_flops.len() as u32);
+        }
+        let primary_devices: Vec<usize> =
+            (0..n).map(|l| placement.primary_device(l)).collect();
+        let primary_set: Vec<usize> =
+            primary_devices.iter().copied().collect::<BTreeSet<_>>().into_iter().collect();
+        let mean_degree = (0..n).map(|l| placement.degree(l) as f64).sum::<f64>()
+            / n.max(1) as f64;
+        let mut kv_counts: BTreeMap<usize, u32> = BTreeMap::new();
+        for l in 0..n {
+            let d = placement.module_device(ModuleId::layer(ModuleKind::KvCache, l));
+            *kv_counts.entry(d).or_insert(0) += 1;
+        }
+        let head_device = primary_devices.first().copied().unwrap_or(0);
+        PlacementProfile {
+            n_layers: n,
+            epoch,
+            seg_off,
+            seg_eff_flops,
+            seg_hbm_bw,
+            seg_device,
+            transitions: placement.transition_count(),
+            link_bw0: cluster.device(0).spec.link_bw,
+            head_eff_flops: cluster.device(head_device).spec.effective_flops(),
+            mean_degree,
+            device_set: device_set.into_iter().collect(),
+            primary_set,
+            primary_devices,
+            kv_groups: kv_counts.into_iter().collect(),
+        }
+    }
+
+    /// Device ids of layer `l`'s segment (primary first) — tests/debug.
+    pub fn layer_segment(&self, l: usize) -> &[u32] {
+        &self.seg_device[self.seg_off[l] as usize..self.seg_off[l + 1] as usize]
+    }
+
+    /// Per-layer prefill time across replicas: batch split (Fig. 4), max
+    /// over replicas, plus scatter/gather per dataflow transition and the
+    /// embed/lm_head term. Allocation-free; bit-identical to the
+    /// uncompiled reference walk.
+    pub fn prefill_step_time(
+        &self,
+        cost: &CostModel,
+        dtype_bytes: usize,
+        batch: usize,
+        seq: usize,
+    ) -> f64 {
+        let d = cost.cfg.d_model as f64;
+        let dt = dtype_bytes as f64;
+        let mut t = 0.0;
+        for l in 0..self.n_layers {
+            let (a, b) = (self.seg_off[l] as usize, self.seg_off[l + 1] as usize);
+            let degree = b - a;
+            let (base, extra) = (batch / degree, batch % degree);
+            let mut worst: f64 = 0.0;
+            for (i, eff) in self.seg_eff_flops[a..b].iter().enumerate() {
+                let share = base + usize::from(i < extra);
+                if share == 0 {
+                    continue;
+                }
+                let sh = Shape { batch: share, seq, dtype_bytes };
+                let flops = cost.flops(ModuleKind::DecoderLayer, sh);
+                worst = worst.max(flops / eff);
+            }
+            t += worst;
+        }
+        // communication at non-consecutive boundaries (§3.2)
+        let bytes = batch as f64 * seq as f64 * d * dt;
+        t += self.transitions as f64 * (bytes / self.link_bw0 + TRANSITION_LAUNCH_S);
+        // embed + lm head (primary device)
+        let sh = Shape { batch, seq, dtype_bytes };
+        t += cost.flops(ModuleKind::LmHead, sh) / self.head_eff_flops;
+        t
+    }
+
+    /// Decode-iteration time: roofline max(compute, HBM bytes) per layer.
+    /// Allocation-free; bit-identical to the uncompiled reference walk.
+    pub fn decode_step_time(
+        &self,
+        cost: &CostModel,
+        dtype_bytes: usize,
+        batch: usize,
+        mean_ctx: usize,
+    ) -> f64 {
+        let d = cost.cfg.d_model as f64;
+        let dt = dtype_bytes as f64;
+        let mut t = 0.0;
+        for l in 0..self.n_layers {
+            let (a, b) = (self.seg_off[l] as usize, self.seg_off[l + 1] as usize);
+            let degree = b - a;
+            let (base, extra) = (batch / degree, batch % degree);
+            let mut worst: f64 = 0.0;
+            for i in 0..degree {
+                let share = base + usize::from(i < extra);
+                if share == 0 {
+                    continue;
+                }
+                let flops = cost.decode_flops(ModuleKind::DecoderLayer, share, mean_ctx);
+                let bytes = cost.decode_bytes_read(share, mean_ctx, dtype_bytes);
+                worst = worst
+                    .max(flops / self.seg_eff_flops[a + i])
+                    .max(bytes / self.seg_hbm_bw[a + i]);
+            }
+            t += worst;
+        }
+        t += self.transitions as f64
+            * ((batch as f64 * d * dt) / self.link_bw0 + TRANSITION_LAUNCH_S);
+        t += cost.decode_flops(ModuleKind::LmHead, batch, mean_ctx) / self.head_eff_flops;
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::scheduler::split_batch;
+
+    fn setup() -> (CostModel, Cluster, Placement) {
+        let cm = CostModel::new(ModelConfig::llama2_13b());
+        (cm, Cluster::paper_testbed(), Placement::single_device(40, 0))
+    }
+
+    /// The uncompiled reference: the exact per-layer walk the simulator
+    /// performed before profiles existed.
+    fn reference_prefill(
+        pl: &Placement,
+        cl: &Cluster,
+        cost: &CostModel,
+        dtype_bytes: usize,
+        batch: usize,
+        seq: usize,
+    ) -> f64 {
+        let d = cost.cfg.d_model as f64;
+        let dt = dtype_bytes as f64;
+        let mut t = 0.0;
+        for l in 0..pl.n_layers {
+            let devs = pl.layer_devices(l);
+            let shares = split_batch(batch, devs.len());
+            let mut worst: f64 = 0.0;
+            for (dev, share) in devs.iter().zip(&shares) {
+                if *share == 0 {
+                    continue;
+                }
+                let sh = Shape { batch: *share, seq, dtype_bytes };
+                let flops = cost.flops(ModuleKind::DecoderLayer, sh);
+                worst = worst.max(flops / cl.device(*dev).spec.effective_flops());
+            }
+            t += worst;
+        }
+        let bytes = batch as f64 * seq as f64 * d * dt;
+        t += pl.transition_count() as f64
+            * (bytes / cl.device(0).spec.link_bw + TRANSITION_LAUNCH_S);
+        let sh = Shape { batch, seq, dtype_bytes };
+        t += cost.flops(ModuleKind::LmHead, sh)
+            / cl.device(pl.primary_device(0)).spec.effective_flops();
+        t
+    }
+
+    #[test]
+    fn compiled_prefill_bit_equals_reference() {
+        let (cm, cl, mut pl) = setup();
+        pl.add_replica(3, 1);
+        pl.add_replica(4, 1);
+        pl.add_replica(20, 2);
+        let prof = PlacementProfile::compile(&pl, &cl, 0);
+        for (batch, seq) in [(1, 8), (15, 256), (32, 64), (7, 512)] {
+            let a = prof.prefill_step_time(&cm, 2, batch, seq);
+            let b = reference_prefill(&pl, &cl, &cm, 2, batch, seq);
+            assert_eq!(a.to_bits(), b.to_bits(), "batch={batch} seq={seq}");
+        }
+    }
+
+    #[test]
+    fn segments_follow_layer_device_order() {
+        let (_, cl, mut pl) = setup();
+        pl.add_replica(5, 2);
+        pl.add_replica(5, 1); // creation order: primary 0, then 2, then 1
+        let prof = PlacementProfile::compile(&pl, &cl, 7);
+        assert_eq!(prof.layer_segment(5), &[0, 2, 1]);
+        assert_eq!(prof.layer_segment(0), &[0]);
+        assert_eq!(prof.epoch, 7);
+        assert_eq!(prof.device_set, vec![0, 1, 2]);
+        assert_eq!(prof.primary_set, vec![0]);
+        assert_eq!(prof.transitions, pl.transition_count());
+    }
+
+    #[test]
+    fn mean_degree_and_kv_groups_match_placement() {
+        let (_, cl, mut pl) = setup();
+        pl.add_replica(0, 1);
+        pl.add_replica(1, 1);
+        pl.migrate_module(ModuleId::layer(ModuleKind::KvCache, 2), 3);
+        let prof = PlacementProfile::compile(&pl, &cl, 0);
+        let expect = (0..40).map(|l| pl.degree(l) as f64).sum::<f64>() / 40.0;
+        assert_eq!(prof.mean_degree.to_bits(), expect.to_bits());
+        // 39 KV layers on the primary device, 1 migrated to device 3
+        assert_eq!(prof.kv_groups, vec![(0, 39), (3, 1)]);
+    }
+
+    #[test]
+    fn decode_monotone_in_batch_and_context() {
+        let (cm, cl, pl) = setup();
+        let prof = PlacementProfile::compile(&pl, &cl, 0);
+        let d1 = prof.decode_step_time(&cm, 2, 1, 64);
+        let d2 = prof.decode_step_time(&cm, 2, 16, 256);
+        assert!(d2 > d1);
+        assert!(d1 > 0.0);
+    }
+
+    #[test]
+    fn replica_speeds_up_prefill() {
+        let (cm, cl, mut pl) = setup();
+        let before = PlacementProfile::compile(&pl, &cl, 0)
+            .prefill_step_time(&cm, 2, 16, 128);
+        for l in 0..40 {
+            pl.add_replica(l, 1);
+        }
+        let after = PlacementProfile::compile(&pl, &cl, 1)
+            .prefill_step_time(&cm, 2, 16, 128);
+        assert!(after < before, "{after} !< {before}");
+    }
+}

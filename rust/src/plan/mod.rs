@@ -25,7 +25,7 @@
 //! plan's costed ops, so replication genuinely overlaps serving and
 //! migration blocks only the moved module (see `sim`).
 
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, ShadowLedger};
 use crate::model::{ModuleId, ModuleKind};
 use crate::ops::{ModuleOps, OpCost, OpError, PlanExecution};
 use crate::placement::Placement;
@@ -196,7 +196,7 @@ impl ScalePlan {
                     if layer >= pl.n_layers {
                         return reject(i, format!("layer {layer} out of range"));
                     }
-                    if pl.layer_devices(layer).contains(&dst) {
+                    if pl.holds(layer, dst) {
                         return reject(i, format!("layer {layer} already on device {dst}"));
                     }
                     let bytes = ops.module_bytes(ModuleKind::DecoderLayer);
@@ -214,7 +214,7 @@ impl ScalePlan {
                         return reject(i, format!("layer {layer} out of range"));
                     }
                     let src = pl.primary_device(layer);
-                    if src == dst || pl.layer_devices(layer).contains(&dst) {
+                    if src == dst || pl.holds(layer, dst) {
                         return reject(i, format!("layer {layer} already on device {dst}"));
                     }
                     let bytes = ops.module_bytes(ModuleKind::DecoderLayer);
@@ -273,23 +273,24 @@ impl ScalePlan {
     }
 
     /// Price the plan against the current state **without mutating it**:
-    /// replays the plan on shadow copies through the exact code path the
-    /// executor uses, so the returned [`PlanCost`] equals the executed
-    /// cost bit-for-bit (Table 2 parity contract).
+    /// replays the plan over a copy-on-write [`ShadowLedger`] (free-bytes
+    /// + residency deltas only — the full cluster is never cloned) through
+    /// the exact code path the executor uses, so the returned [`PlanCost`]
+    /// equals the executed cost bit-for-bit (Table 2 parity contract).
     pub fn dry_run(
         &self,
         ops: &ModuleOps<'_>,
         cluster: &Cluster,
         placement: &Placement,
     ) -> Result<PlanCost, PlanError> {
-        let mut cl = cluster.clone();
+        let mut ledger = ShadowLedger::new(cluster);
         let mut pl = placement.clone();
         let mut exec = PlanExecution::new();
         for (i, op) in self.ops.iter().enumerate() {
-            exec.apply_next(ops, &mut cl, &mut pl, op)
+            exec.apply_next(ops, &mut ledger, &mut pl, op)
                 .map_err(|error| PlanError::Failed { op_idx: i, error })?;
         }
-        Ok(exec.commit(&mut cl))
+        Ok(exec.commit(&mut ledger))
     }
 }
 

@@ -25,13 +25,12 @@
 use crate::autoscale::{scale_down, Pressure, ScaleDownConfig};
 use crate::cluster::Cluster;
 use crate::kvcache::{ContiguousKvCache, KvCache, KvStats, PagedKvCache};
-use crate::model::cost::{CostModel, Shape};
-use crate::model::{ModuleId, ModuleKind};
+use crate::model::cost::CostModel;
 use crate::monitor::{Completion, Monitor};
 use crate::ops::{ModuleOps, OpCost, PlanExecution, PlanExecutor, REPLICA_COMM_SETUP_S};
-use crate::placement::Placement;
+use crate::placement::{Placement, PlacementProfile};
 use crate::plan::{PlanCost, ScalePlan};
-use crate::scheduler::{split_batch, Scheduler, Step};
+use crate::scheduler::{Scheduler, Step};
 
 use super::metrics::{OpEvent, OpPhase, ScaleStats};
 use super::{OomBehavior, SimConfig, SimPolicy, DECODE_BUSY_FRACTION, SYNC_PAUSE_S};
@@ -90,6 +89,17 @@ pub(crate) enum OpOutcome {
 pub(crate) struct Instance {
     pub id: usize,
     pub placement: Placement,
+    /// Compiled step-cost profile of `placement` — the zero-allocation
+    /// roofline kernel. Invalidated (recompiled, epoch bumped) only when
+    /// the placement mutates: a plan op landing (`OpCompleted`), a
+    /// mid-flight rollback, or an emergency scale-down. Steady-state
+    /// steps never recompile.
+    pub profile: PlacementProfile,
+    /// Monotone placement revision — the profile cache key.
+    pub placement_rev: u64,
+    /// Ledger tag of this instance's mirrored KV reservation (cached —
+    /// `sync_kv` runs on every step).
+    kv_tag: String,
     pub scheduler: Scheduler,
     pub kv: Box<dyn KvCache>,
     pub policy: SimPolicy,
@@ -148,9 +158,13 @@ impl Instance {
                 cfg.max_seq_len,
             ))
         };
+        let profile = PlacementProfile::compile(&placement, cluster, 0);
         Instance {
             id,
             placement,
+            profile,
+            placement_rev: 0,
+            kv_tag: format!("inst{id}/kv"),
             scheduler: Scheduler::new(policy.scheduler),
             kv,
             policy,
@@ -181,107 +195,48 @@ impl Instance {
 
     /// All devices hosting any copy of any of this instance's layers.
     pub fn device_set(&self) -> std::collections::BTreeSet<usize> {
-        (0..self.placement.n_layers)
-            .flat_map(|l| self.placement.layer_devices(l))
-            .collect()
-    }
-
-    /// Primary devices per layer — the §8 contention footprint.
-    pub fn primary_devices(&self) -> Vec<usize> {
-        (0..self.placement.n_layers)
-            .map(|l| self.placement.primary_device(l))
-            .collect()
+        self.profile.device_set.iter().copied().collect()
     }
 
     fn module_ops<'a>(&self, ctx: &StepCtx<'a>) -> ModuleOps<'a> {
         ModuleOps::new(ctx.cost, ctx.cfg.dtype_bytes, &format!("inst{}", self.id))
     }
 
+    /// Recompile the step-cost profile after a placement mutation. The
+    /// only call sites are the plan-epoch transitions: an op landing, a
+    /// rollback, an emergency scale-down, and deploy itself.
+    fn recompile_profile(&mut self, cluster: &Cluster) {
+        self.placement_rev += 1;
+        self.profile =
+            PlacementProfile::compile(&self.placement, cluster, self.placement_rev);
+    }
+
     // ---- step latency (the roofline substitute for real execution) -------
+    //
+    // Both step costs run on the compiled profile: allocation-free linear
+    // scans over precompiled per-layer segments, bit-identical to the
+    // uncompiled per-layer walk (see `placement::profile`).
 
     /// Per-layer prefill time across replicas: batch split (Fig. 4), max
     /// over replicas, plus scatter/gather per dataflow transition.
-    pub fn prefill_step_time(
-        &self,
-        ctx: &StepCtx<'_>,
-        cluster: &Cluster,
-        batch: usize,
-        seq: usize,
-    ) -> f64 {
-        let d = ctx.cfg.model.d_model as f64;
-        let dt = ctx.cfg.dtype_bytes as f64;
-        let mut t = 0.0;
-        for l in 0..self.placement.n_layers {
-            let devs = self.placement.layer_devices(l);
-            let shares = split_batch(batch, devs.len());
-            let mut worst: f64 = 0.0;
-            for (dev, share) in devs.iter().zip(&shares) {
-                if *share == 0 {
-                    continue;
-                }
-                let sh = Shape { batch: *share, seq, dtype_bytes: ctx.cfg.dtype_bytes };
-                let flops = ctx.cost.flops(ModuleKind::DecoderLayer, sh);
-                let spec = &cluster.device(*dev).spec;
-                worst = worst.max(flops / spec.effective_flops());
-            }
-            t += worst;
-        }
-        // communication at non-consecutive boundaries (§3.2)
-        let transitions = self.placement.transition_count() as f64;
-        let bytes = batch as f64 * seq as f64 * d * dt;
-        let bw = cluster.device(0).spec.link_bw;
-        t += transitions * (bytes / bw + 20e-6);
-        // embed + lm head (primary device)
-        let sh = Shape { batch, seq, dtype_bytes: ctx.cfg.dtype_bytes };
-        let spec = &cluster.device(self.placement.primary_device(0)).spec;
-        t += ctx.cost.flops(ModuleKind::LmHead, sh) / spec.effective_flops();
-        t
+    pub fn prefill_step_time(&self, ctx: &StepCtx<'_>, batch: usize, seq: usize) -> f64 {
+        debug_assert_eq!(self.profile.epoch, self.placement_rev, "stale profile");
+        self.profile
+            .prefill_step_time(ctx.cost, ctx.cfg.dtype_bytes, batch, seq)
     }
 
     /// Decode-iteration time: roofline max(compute, HBM bytes) per layer.
-    pub fn decode_step_time(
-        &self,
-        ctx: &StepCtx<'_>,
-        cluster: &Cluster,
-        batch: usize,
-        mean_ctx: usize,
-    ) -> f64 {
-        let d = ctx.cfg.model.d_model as f64;
-        let dt = ctx.cfg.dtype_bytes as f64;
-        let mut t = 0.0;
-        for l in 0..self.placement.n_layers {
-            let devs = self.placement.layer_devices(l);
-            let shares = split_batch(batch, devs.len());
-            let mut worst: f64 = 0.0;
-            for (dev, share) in devs.iter().zip(&shares) {
-                if *share == 0 {
-                    continue;
-                }
-                let spec = &cluster.device(*dev).spec;
-                let flops =
-                    ctx.cost.decode_flops(ModuleKind::DecoderLayer, *share, mean_ctx);
-                let bytes =
-                    ctx.cost.decode_bytes_read(*share, mean_ctx, ctx.cfg.dtype_bytes);
-                worst = worst
-                    .max(flops / spec.effective_flops())
-                    .max(bytes / spec.hbm_bw);
-            }
-            t += worst;
-        }
-        let transitions = self.placement.transition_count() as f64;
-        let bw = cluster.device(0).spec.link_bw;
-        t += transitions * ((batch as f64 * d * dt) / bw + 20e-6);
-        let spec = &cluster.device(self.placement.primary_device(0)).spec;
-        t += ctx.cost.decode_flops(ModuleKind::LmHead, batch, mean_ctx)
-            / spec.effective_flops();
-        t
+    pub fn decode_step_time(&self, ctx: &StepCtx<'_>, batch: usize, mean_ctx: usize) -> f64 {
+        debug_assert_eq!(self.profile.epoch, self.placement_rev, "stale profile");
+        self.profile
+            .decode_step_time(ctx.cost, ctx.cfg.dtype_bytes, batch, mean_ctx)
     }
 
     /// Spread this step's busy time across the instance's device set.
     fn charge_busy(&self, cluster: &mut Cluster, seconds: f64) {
-        let devices = self.device_set();
+        let devices = &self.profile.device_set;
         let n = devices.len().max(1) as f64;
-        for d in devices {
+        for &d in devices {
             cluster.device_mut(d).add_busy(seconds / n);
         }
     }
@@ -289,26 +244,33 @@ impl Instance {
     // ---- KV accounting ----------------------------------------------------
 
     /// Mirror the instance's KV reservation into device ledgers; on ledger
-    /// OOM the caller must invoke [`Instance::handle_oom`].
+    /// OOM the caller must invoke [`Instance::handle_oom`]. Runs on every
+    /// step, so it walks the profile's precompiled KV residency groups —
+    /// no per-call Vec/BTreeMap/String. The per-device total is built by
+    /// repeated addition of the per-layer share (count identical addends),
+    /// matching the uncompiled per-layer accumulation bit-for-bit.
+    ///
+    /// KNOWN QUIRK (pre-existing, deliberately preserved): only devices in
+    /// the *current* KV residency groups are resized. A device whose last
+    /// KV layer migrates away keeps its final `inst{N}/kv` ledger size
+    /// until (if ever) a layer returns — the mirror is never shrunk to
+    /// zero there. The pre-profile implementation (per-layer walk into a
+    /// fresh per-device map) had exactly the same behaviour, and the
+    /// golden-replay byte-identity contract of this refactor forbids
+    /// changing it here; a future change that is allowed to move the
+    /// goldens should resize departed devices to zero.
     pub fn sync_kv(&mut self, cluster: &mut Cluster) -> Result<(), ()> {
         let stats = self.kv.stats();
         if stats.reserved_bytes > self.kv_peak.reserved_bytes {
             self.kv_peak = stats;
         }
-        let kv_devices: Vec<usize> = (0..self.placement.n_layers)
-            .map(|l| {
-                self.placement
-                    .module_device(ModuleId::layer(ModuleKind::KvCache, l))
-            })
-            .collect();
-        let per_layer = stats.reserved_bytes / kv_devices.len() as f64;
-        let mut per_device: std::collections::BTreeMap<usize, f64> = Default::default();
-        for d in kv_devices {
-            *per_device.entry(d).or_insert(0.0) += per_layer;
-        }
-        let tag = format!("inst{}/kv", self.id);
-        for (d, bytes) in per_device {
-            if cluster.device_mut(d).resize(&tag, bytes).is_err() {
+        let per_layer = stats.reserved_bytes / self.placement.n_layers as f64;
+        for &(d, count) in &self.profile.kv_groups {
+            let mut bytes = 0.0;
+            for _ in 0..count {
+                bytes += per_layer;
+            }
+            if cluster.device_mut(d).resize(&self.kv_tag, bytes).is_err() {
                 self.monitor.record_oom();
                 return Err(());
             }
@@ -463,6 +425,7 @@ impl Instance {
                 .unwrap_or_default();
             fl.exec.rollback(cluster, &mut self.placement);
             self.plan_epoch += 1; // kill the plan's remaining events
+            self.recompile_profile(cluster); // rollback moved the placement
             scale.plans_aborted += 1;
             scale.events.push(OpEvent {
                 t: now,
@@ -526,11 +489,15 @@ impl Instance {
                 } else {
                     self.inflight = Some(fl);
                 }
+                // the op moved the placement — invalidate the step-cost
+                // cache (the only steady-state invalidation point)
+                self.recompile_profile(cluster);
                 OpOutcome::Applied { desc: op.describe(), cost, finished }
             }
             Err(_) => {
                 fl.exec.rollback(cluster, &mut self.placement);
                 self.plan_epoch += 1;
+                self.recompile_profile(cluster);
                 OpOutcome::Aborted { desc: op.describe() }
             }
         }
@@ -566,7 +533,7 @@ impl Instance {
             self.batch_size,
             &ScaleDownConfig::default(),
             |_l| kv_per_layer,
-            |cl, _pl, _bs| cl.device(hot).mem_frac() > 0.92 && slo > 0.0,
+            |cl, _pl, _bs| cl.mem_frac(hot) > 0.92 && slo > 0.0,
         );
         if out.actions.is_empty() {
             return;
@@ -578,6 +545,7 @@ impl Instance {
         }
         match PlanExecutor::new(&ops).execute(cluster, &mut self.placement, &out.plan) {
             Ok(cost) => {
+                self.recompile_profile(cluster); // corrective ops landed
                 scale.op_time_s += cost.total.time_s;
                 self.op_block_until =
                     self.op_block_until.max(ctx.now + cost.total.time_s.min(1.0));
@@ -601,9 +569,14 @@ impl Instance {
     }
 
     /// The most memory-loaded device hosting this instance's primaries.
+    /// Walks the profile's precompiled per-layer primary list — same
+    /// sequence (and therefore the same tie-breaking) as walking the
+    /// placement, without the per-call lookups.
     pub fn hottest_primary_device(&self, cluster: &Cluster) -> usize {
-        (0..self.placement.n_layers)
-            .map(|l| self.placement.primary_device(l))
+        self.profile
+            .primary_devices
+            .iter()
+            .copied()
             .max_by(|&a, &b| {
                 cluster
                     .device(a)
@@ -642,11 +615,7 @@ impl Instance {
         {
             self.batch_size = (self.batch_size * 2).min(self.policy.scheduler.max_batch);
         }
-        let mean_degree = (0..self.placement.n_layers)
-            .map(|l| self.placement.degree(l) as f64)
-            .sum::<f64>()
-            / self.placement.n_layers.max(1) as f64;
-        let cap = ((self.batch_size as f64) * mean_degree) as usize;
+        let cap = ((self.batch_size as f64) * self.profile.mean_degree) as usize;
         let mut cfg = self.scheduler.cfg;
         cfg.max_batch = cap;
         self.scheduler.cfg = cfg;
@@ -680,7 +649,7 @@ impl Instance {
                     .filter_map(|id| self.requests.get(id).map(|r| r.1))
                     .max()
                     .unwrap_or(8);
-                let mut dt = self.prefill_step_time(ctx, cluster, batch, max_seq);
+                let mut dt = self.prefill_step_time(ctx, batch, max_seq);
                 dt *= contention;
                 self.charge_busy(cluster, dt); // prefill is compute-bound: full busy
                 self.scheduler.on_prefilled(&request_ids);
@@ -710,7 +679,7 @@ impl Instance {
                         .collect();
                     (ctxs.iter().sum::<usize>() / ctxs.len().max(1)).max(1)
                 };
-                let mut dt = self.decode_step_time(ctx, cluster, batch, mean_ctx);
+                let mut dt = self.decode_step_time(ctx, batch, mean_ctx);
                 dt *= contention;
                 // Decode is HBM-bandwidth-bound: the SMs are only partially
                 // occupied during the step (what NVML-style compute
@@ -768,7 +737,7 @@ mod tests {
 
     fn setup(policy: SimPolicy) -> (SimConfig, CostModel, Cluster, Instance) {
         let cfg = SimConfig::paper_13b();
-        let cost = CostModel::new(cfg.model.clone());
+        let cost = cfg.cost_model();
         let mut cluster = Cluster::paper_testbed();
         let placement = Placement::single_device(cfg.model.n_layers, 0);
         let inst = Instance::deploy(0, placement, policy, &cfg, &cost, &mut cluster);
@@ -872,15 +841,49 @@ mod tests {
 
     #[test]
     fn contention_inflates_step_time() {
-        let (cfg, cost, cluster, inst) = setup(baselines::vllm_like(8));
+        let (cfg, cost, _cluster, inst) = setup(baselines::vllm_like(8));
         let ctx = StepCtx { cfg: &cfg, cost: &cost, now: 0.0 };
-        let base = inst.prefill_step_time(&ctx, &cluster, 8, 128);
+        let base = inst.prefill_step_time(&ctx, 8, 128);
         assert!(base > 0.0);
         // factor applied by start_step multiplies dt — verified indirectly
         // through the decode roofline being monotone in batch/context
-        let d1 = inst.decode_step_time(&ctx, &cluster, 1, 64);
-        let d2 = inst.decode_step_time(&ctx, &cluster, 16, 256);
+        let d1 = inst.decode_step_time(&ctx, 1, 64);
+        let d2 = inst.decode_step_time(&ctx, 16, 256);
         assert!(d2 > d1);
+    }
+
+    #[test]
+    fn profile_invalidates_exactly_at_plan_epochs() {
+        // The step-cost cache recompiles when (and only when) an op event
+        // moves the placement: each applied op bumps the revision, and the
+        // cached times always equal a fresh compile of the live placement.
+        let (cfg, cost, mut cluster, mut inst) = setup(baselines::cocoserve(16));
+        let ctx = StepCtx { cfg: &cfg, cost: &cost, now: 0.0 };
+        assert_eq!(inst.placement_rev, 0);
+        let before = inst.decode_step_time(&ctx, 16, 128);
+
+        let up = plan_up(&cfg, &cost, &cluster, &inst, 2);
+        let (epoch, spans) = inst.admit_plan(0.0, up.plan, up.cost, None);
+        assert_eq!(inst.placement_rev, 0, "admitting alone must not invalidate");
+
+        for (k, &(t0, t1)) in spans.iter().enumerate() {
+            inst.on_op_started(t0, k, epoch);
+            let ctx = StepCtx { cfg: &cfg, cost: &cost, now: t1 };
+            inst.on_op_completed(&ctx, &mut cluster, k, epoch);
+            assert_eq!(inst.placement_rev, k as u64 + 1, "one recompile per op");
+            let fresh = crate::placement::PlacementProfile::compile(
+                &inst.placement,
+                &cluster,
+                inst.placement_rev,
+            );
+            assert_eq!(
+                inst.decode_step_time(&ctx, 16, 128).to_bits(),
+                fresh.decode_step_time(&cost, cfg.dtype_bytes, 16, 128).to_bits(),
+                "cached profile must equal a fresh compile"
+            );
+        }
+        let after = inst.decode_step_time(&ctx, 16, 128);
+        assert_ne!(before.to_bits(), after.to_bits(), "replicas changed the cost");
     }
 
     #[test]

@@ -64,6 +64,13 @@ pub struct ScaleStats {
 #[derive(Debug)]
 pub struct SimReport {
     pub duration_s: f64,
+    /// Events the kernel popped (wall-clock throughput denominator for
+    /// the fleet-scale bench). Deliberately NOT part of [`SimReport::to_json`]
+    /// — the golden-replay document is a serving-metrics contract.
+    pub events_processed: u64,
+    /// Serving steps started (prefill + decode) across the fleet. Also
+    /// excluded from the golden JSON.
+    pub steps_started: u64,
     pub monitors: Vec<Monitor>,
     /// (device, compute utilization, mem frac at end).
     pub device_util: Vec<(usize, f64, f64)>,
@@ -218,6 +225,8 @@ mod tests {
         });
         SimReport {
             duration_s: 10.0,
+            events_processed: 0,
+            steps_started: 0,
             monitors: vec![m],
             device_util: vec![(0, 0.5, 0.25)],
             device_peak_bytes: vec![1e9],

@@ -79,6 +79,24 @@ pub const SYNC_PAUSE_S: f64 = 0.05;
 /// GEMV) — the compute-utilization signal NVML reports in Fig. 2.
 pub const DECODE_BUSY_FRACTION: f64 = 0.65;
 
+/// Size of the intersection of two sorted, deduplicated device slices
+/// (two-pointer merge — the allocation-free `BTreeSet::intersection`).
+fn sorted_intersection_count(a: &[usize], b: &[usize]) -> usize {
+    let (mut i, mut j, mut n) = (0, 0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                n += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    n
+}
+
 /// What an instance does when a KV allocation hits device OOM.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum OomBehavior {
@@ -127,6 +145,14 @@ pub struct SimConfig {
 }
 
 impl SimConfig {
+    /// The single construction site of the simulator's [`CostModel`]:
+    /// [`Simulation::new`] builds it once here and shares it by reference
+    /// (through [`instance::StepCtx`]) with every instance, planner and
+    /// test fixture.
+    pub fn cost_model(&self) -> CostModel {
+        CostModel::new(self.model.clone())
+    }
+
     pub fn paper_13b() -> SimConfig {
         SimConfig {
             model: ModelConfig::llama2_13b(),
@@ -155,6 +181,10 @@ pub struct Simulation {
     now: f64,
     scale: ScaleStats,
     peak_mem: f64,
+    /// Events popped off the queue (fleet-scale bench throughput metric).
+    events_processed: u64,
+    /// Serving steps started (prefill + decode) across the fleet.
+    steps_started: u64,
 }
 
 impl Simulation {
@@ -165,7 +195,7 @@ impl Simulation {
         cluster: Cluster,
         placements: Vec<(Placement, SimPolicy)>,
     ) -> Simulation {
-        let cost = CostModel::new(cfg.model.clone());
+        let cost = cfg.cost_model();
         let mut cluster = cluster;
         let instances = placements
             .into_iter()
@@ -183,6 +213,8 @@ impl Simulation {
             now: 0.0,
             scale: ScaleStats::default(),
             peak_mem: 0.0,
+            events_processed: 0,
+            steps_started: 0,
         }
     }
 
@@ -215,16 +247,18 @@ impl Simulation {
     /// ours by a fraction f contributes +f (full co-location doubles step
     /// time; a single shared device out of four adds 25%). This yields the
     /// §8 behaviour: spread replicas barely perturb neighbours.
+    ///
+    /// Runs on every step start, so the device sets come precompiled
+    /// (sorted, deduplicated) from the instances' placement profiles and
+    /// the overlap is a two-pointer merge — no per-call set construction.
     fn contention(&self, inst_id: usize) -> f64 {
-        let mine: std::collections::BTreeSet<usize> =
-            self.instances[inst_id].primary_devices().into_iter().collect();
+        let mine = &self.instances[inst_id].profile.primary_set;
         let mut factor = 1.0;
         for other in &self.instances {
             if other.id == inst_id || other.busy_until.is_none() {
                 continue;
             }
-            let theirs = other.device_set();
-            let shared = mine.intersection(&theirs).count();
+            let shared = sorted_intersection_count(mine, &other.profile.device_set);
             if shared > 0 {
                 factor += shared as f64 / mine.len().max(1) as f64;
             }
@@ -280,7 +314,7 @@ impl Simulation {
                 down_src: Some(hot),
             };
             let planned = self.controller.plan(decision, &ctx, |cl, _pl, _bs| {
-                cl.device(hot).mem_frac() > 0.92 && slo > 0.0
+                cl.mem_frac(hot) > 0.92 && slo > 0.0
             });
             match planned {
                 PlannedDecision::None => {}
@@ -350,6 +384,7 @@ impl Simulation {
         self.peak_mem = self.peak_mem.max(self.cluster.total_used_bytes());
         match outcome {
             StepStart::Busy { until, token } => {
+                self.steps_started += 1;
                 q.push(until, EventKind::StepComplete { instance: i, token });
             }
             StepStart::Idle => {
@@ -403,10 +438,13 @@ impl Simulation {
                 break;
             }
             self.now = ev.time;
+            self.events_processed += 1;
 
             match ev.kind {
                 EventKind::Arrival { request_idx } => {
-                    let req = trace.requests[request_idx].clone();
+                    // Request is Copy: arrivals index into the trace, no
+                    // per-arrival heap clone.
+                    let req = trace.requests[request_idx];
                     next_req = request_idx + 1;
                     if let Some(r) = trace.requests.get(next_req) {
                         q.push(r.arrival_s, EventKind::Arrival { request_idx: next_req });
@@ -499,6 +537,8 @@ impl Simulation {
         let wall = self.now.max(1e-9);
         SimReport {
             duration_s: wall,
+            events_processed: self.events_processed,
+            steps_started: self.steps_started,
             device_util: (0..self.cluster.n())
                 .map(|d| {
                     (

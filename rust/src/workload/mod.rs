@@ -16,8 +16,10 @@ pub mod scenarios;
 
 use crate::util::rng::Rng;
 
-/// One inference request.
-#[derive(Debug, Clone, PartialEq)]
+/// One inference request. Plain-old-data and `Copy`: the event kernel
+/// hands arrivals around by value straight out of the trace — no
+/// per-arrival heap clone.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Request {
     pub id: u64,
     /// Arrival time in seconds from experiment start.
