@@ -21,5 +21,8 @@ pub mod speedup;
 pub use controller::{
     Controller, ControllerConfig, ControllerInputs, Decision, PlanCtx, PlannedDecision,
 };
-pub use scale_down::{scale_down, Pressure, ScaleDownConfig, ScaleDownPlan};
+pub use scale_down::{
+    memory_violation, scale_down, Pressure, ScaleDownConfig, ScaleDownPlan,
+    MEM_VIOLATION_FRAC,
+};
 pub use scale_up::{scale_up, ScaleUpConfig, ScaleUpPlan};

@@ -80,6 +80,24 @@ pub struct ScaleDownPlan {
     pub cost: PlanCost,
 }
 
+/// Memory fraction above which a device counts as violating for the
+/// kernel's standard OOM/memory-pressure predicate.
+pub const MEM_VIOLATION_FRAC: f64 = 0.92;
+
+/// The kernel's standard OOM-violation predicate for Algorithm 2: the hot
+/// device is above [`MEM_VIOLATION_FRAC`] of its memory (and an SLO is
+/// actually configured — a zero SLO disables the check). One named
+/// definition shared by the controller tick and the emergency
+/// scale-down path, so the two loops can never drift apart.
+pub fn memory_violation(
+    hot: usize,
+    slo_latency_s: f64,
+) -> impl FnMut(&ShadowLedger<'_>, &Placement, usize) -> bool {
+    move |ledger, _placement, _batch| {
+        ledger.mem_frac(hot) > MEM_VIOLATION_FRAC && slo_latency_s > 0.0
+    }
+}
+
 /// `FilterModules` (§4.2 phase 1): migration candidates on `src`, ordered
 /// by the §3.3 analysis for the pressure kind.
 pub fn filter_modules(
@@ -276,6 +294,27 @@ mod tests {
         PlanExecutor::new(ops)
             .execute(cl, pl, &ScalePlan::replicate_batch(&[layer], dst))
             .unwrap();
+    }
+
+    #[test]
+    fn memory_violation_predicate_matches_the_documented_threshold() {
+        let mut cl = Cluster::paper_testbed();
+        let cap = cl.device(0).spec.mem_bytes;
+        cl.device_mut(0).alloc("load", cap * 0.95).unwrap();
+        let pl = Placement::single_device(40, 0);
+        let shadow = ShadowLedger::new(&cl);
+        // above the line with an SLO configured → violating
+        assert!(memory_violation(0, 15.0)(&shadow, &pl, 16));
+        // a different (empty) hot device → healthy
+        assert!(!memory_violation(1, 15.0)(&shadow, &pl, 16));
+        // zero SLO disables the check entirely
+        assert!(!memory_violation(0, 0.0)(&shadow, &pl, 16));
+        // exactly at the threshold is not a violation (strict >)
+        let mut at = Cluster::paper_testbed();
+        let at_line = at.device(2).spec.mem_bytes * MEM_VIOLATION_FRAC;
+        at.device_mut(2).alloc("load", at_line).unwrap();
+        let shadow_at = ShadowLedger::new(&at);
+        assert!(!memory_violation(2, 15.0)(&shadow_at, &pl, 16));
     }
 
     #[test]

@@ -16,13 +16,17 @@ use crate::model::cost::MIB;
 
 pub use shadow::ShadowLedger;
 
+/// One gibibyte in bytes.
 pub const GIB: f64 = 1024.0 * MIB;
+/// 10¹² floating-point operations per second.
 pub const TFLOPS: f64 = 1e12;
 
 /// Static description of a device type.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DeviceSpec {
+    /// Human-readable device name (e.g. "A100-40GB").
     pub name: String,
+    /// Total device memory in bytes.
     pub mem_bytes: f64,
     /// Dense matmul throughput (FLOPs/s) at serving precision.
     pub peak_flops: f64,
@@ -59,7 +63,17 @@ impl DeviceSpec {
 /// Why an allocation was refused.
 #[derive(Debug, Clone, PartialEq)]
 pub enum AllocError {
-    Oom { device: usize, requested_mib: f64, free_mib: f64 },
+    /// The device lacked the requested free bytes (an OOM event was
+    /// recorded on its ledger).
+    Oom {
+        /// Device whose ledger refused the allocation.
+        device: usize,
+        /// Requested size, in MiB.
+        requested_mib: f64,
+        /// Free bytes at refusal time, in MiB.
+        free_mib: f64,
+    },
+    /// `free`/`resize` named a tag the ledger does not hold.
     UnknownTag(String),
 }
 
@@ -80,7 +94,9 @@ impl std::error::Error for AllocError {}
 /// One device's ledger: tagged allocations + busy-time accounting.
 #[derive(Debug, Clone)]
 pub struct Device {
+    /// Cluster-wide device index.
     pub id: usize,
+    /// Static hardware description.
     pub spec: DeviceSpec,
     /// Tagged allocations (tag -> bytes), e.g. "inst0/layers.3.weights".
     allocs: BTreeMap<String, f64>,
@@ -95,6 +111,7 @@ pub struct Device {
 }
 
 impl Device {
+    /// An empty ledger for one device of the given spec.
     pub fn new(id: usize, spec: DeviceSpec) -> Device {
         Device {
             id,
@@ -107,6 +124,7 @@ impl Device {
         }
     }
 
+    /// Bytes currently resident on this device.
     pub fn used_bytes(&self) -> f64 {
         self.used
     }
@@ -116,10 +134,12 @@ impl Device {
         self.peak_used
     }
 
+    /// Bytes still allocatable.
     pub fn free_bytes(&self) -> f64 {
         (self.spec.mem_bytes - self.used).max(0.0)
     }
 
+    /// Fraction of device memory in use.
     pub fn mem_frac(&self) -> f64 {
         self.used / self.spec.mem_bytes
     }
@@ -195,6 +215,7 @@ impl Device {
         self.used = (self.used + prev_bytes - cur).max(0.0);
     }
 
+    /// Current bytes under `tag` (0.0 when absent).
     pub fn alloc_bytes(&self, tag: &str) -> f64 {
         self.allocs.get(tag).copied().unwrap_or(0.0)
     }
@@ -204,6 +225,7 @@ impl Device {
         self.allocs.contains_key(tag)
     }
 
+    /// Every tagged allocation on this device, in tag order.
     pub fn allocations(&self) -> impl Iterator<Item = (&str, f64)> {
         self.allocs.iter().map(|(k, v)| (k.as_str(), *v))
     }
@@ -213,6 +235,7 @@ impl Device {
         self.busy_s += seconds;
     }
 
+    /// Total simulated busy seconds recorded so far.
     pub fn busy_seconds(&self) -> f64 {
         self.busy_s
     }
@@ -239,18 +262,23 @@ impl Device {
 /// accumulation regime as the live ledger so derived fractions stay
 /// bit-identical.
 pub trait LedgerView {
+    /// Number of devices in the cluster.
     fn n(&self) -> usize;
+    /// Bytes currently resident on `device`.
     fn used_bytes(&self, device: usize) -> f64;
     /// Device memory capacity in bytes.
     fn mem_bytes(&self, device: usize) -> f64;
+    /// Link bandwidth between two devices (bytes/s).
     fn link_bw(&self, a: usize, b: usize) -> f64;
     /// Current bytes under `tag` on `device` (0.0 when absent).
     fn alloc_bytes(&self, device: usize, tag: &str) -> f64;
 
+    /// Bytes still allocatable on `device`.
     fn free_bytes(&self, device: usize) -> f64 {
         (self.mem_bytes(device) - self.used_bytes(device)).max(0.0)
     }
 
+    /// Fraction of `device`'s memory in use.
     fn mem_frac(&self, device: usize) -> f64 {
         self.used_bytes(device) / self.mem_bytes(device)
     }
@@ -288,21 +316,26 @@ pub trait LedgerView {
 /// re-establishes a previously observed tag size bypassing the OOM check
 /// (rollback only ever shrinks plan-made allocations back).
 pub trait Ledger: LedgerView {
+    /// Allocate `bytes` under `tag` on `device`, or fail with OOM.
     fn alloc(&mut self, device: usize, tag: &str, bytes: f64) -> Result<(), AllocError>;
     /// Free the whole allocation under `tag`, returning its size.
     fn free(&mut self, device: usize, tag: &str) -> Result<f64, AllocError>;
     /// Shrink/grow an existing tag to an exact size.
     fn resize(&mut self, device: usize, tag: &str, bytes: f64) -> Result<(), AllocError>;
+    /// Restore `tag` to a previously observed size, bypassing the OOM
+    /// check (the rollback primitive — see the trait docs).
     fn restore_alloc(&mut self, device: usize, tag: &str, prev_bytes: f64);
 }
 
 /// The cluster: a set of devices plus the interconnect description.
 #[derive(Debug, Clone)]
 pub struct Cluster {
+    /// Per-device ledgers, indexed by device id.
     pub devices: Vec<Device>,
 }
 
 impl Cluster {
+    /// `n` identical devices of the given spec.
     pub fn homogeneous(n: usize, spec: DeviceSpec) -> Cluster {
         Cluster { devices: (0..n).map(|i| Device::new(i, spec.clone())).collect() }
     }
@@ -312,14 +345,17 @@ impl Cluster {
         Cluster::homogeneous(4, DeviceSpec::a100_40gb())
     }
 
+    /// Number of devices.
     pub fn n(&self) -> usize {
         self.devices.len()
     }
 
+    /// Borrow one device's ledger.
     pub fn device(&self, id: usize) -> &Device {
         &self.devices[id]
     }
 
+    /// Mutably borrow one device's ledger.
     pub fn device_mut(&mut self, id: usize) -> &mut Device {
         &mut self.devices[id]
     }
@@ -340,10 +376,12 @@ impl Cluster {
         LedgerView::eligible_nodes(self, min_vacancy)
     }
 
+    /// Bytes resident across the whole cluster.
     pub fn total_used_bytes(&self) -> f64 {
         self.devices.iter().map(|d| d.used_bytes()).sum()
     }
 
+    /// OOM events recorded across every device ledger.
     pub fn total_oom_events(&self) -> u64 {
         self.devices.iter().map(|d| d.oom_events).sum()
     }

@@ -40,6 +40,8 @@ pub struct ShadowLedger<'a> {
 }
 
 impl<'a> ShadowLedger<'a> {
+    /// A fresh shadow over `base`: per-device `used` seeded from the live
+    /// values, no overlays.
     pub fn new(base: &'a Cluster) -> ShadowLedger<'a> {
         ShadowLedger {
             used: (0..base.n()).map(|d| base.device(d).used_bytes()).collect(),
@@ -48,25 +50,31 @@ impl<'a> ShadowLedger<'a> {
         }
     }
 
-    /// Convenience inherent mirrors of the [`LedgerView`] accessors, so
-    /// violation predicates (`|cl, _, _| cl.mem_frac(0) > 0.9`) need no
-    /// trait import.
+    // Convenience inherent mirrors of the [`LedgerView`] accessors, so
+    // violation predicates (`|cl, _, _| cl.mem_frac(0) > 0.9`) need no
+    // trait import.
+
+    /// Number of devices (mirrors [`LedgerView::n`]).
     pub fn n(&self) -> usize {
         LedgerView::n(self)
     }
 
+    /// Shadowed resident bytes (mirrors [`LedgerView::used_bytes`]).
     pub fn used_bytes(&self, device: usize) -> f64 {
         LedgerView::used_bytes(self, device)
     }
 
+    /// Shadowed free bytes (mirrors [`LedgerView::free_bytes`]).
     pub fn free_bytes(&self, device: usize) -> f64 {
         LedgerView::free_bytes(self, device)
     }
 
+    /// Shadowed memory fraction (mirrors [`LedgerView::mem_frac`]).
     pub fn mem_frac(&self, device: usize) -> f64 {
         LedgerView::mem_frac(self, device)
     }
 
+    /// Shadowed vacancy rate (mirrors [`LedgerView::vacancy_rate`]).
     pub fn vacancy_rate(&self, device: usize) -> f64 {
         LedgerView::vacancy_rate(self, device)
     }

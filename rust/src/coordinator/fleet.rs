@@ -1,0 +1,369 @@
+//! Fleet-level autoscaling: instance lifecycle + the module-vs-instance
+//! arbitration, plus the device-seconds cost ledger.
+//!
+//! The per-instance controllers (§5) scale *modules*; this controller
+//! scales the *fleet*. Each control tick it reads one aggregate signal —
+//! mean outstanding requests per active instance, including requests
+//! parked at the router — and walks a three-state decision:
+//!
+//! * **scale out** when the fleet is oversubscribed. The kernel then
+//!   arbitrates between the two concrete options at hand by dry-run cost
+//!   per unit of added capacity ([`FleetController::arbitrate`]): a layer
+//!   replication round on the most-loaded instance (cheap, small capacity,
+//!   flows through the existing in-flight [`crate::plan::ScalePlan`]
+//!   machinery) versus spinning up a whole new instance (expensive
+//!   cold start, a full instance of capacity).
+//! * **scale in** when the fleet has been underloaded for several
+//!   consecutive ticks: the least-loaded instance is marked *draining* —
+//!   the router stops offering it work, it finishes what it holds, and a
+//!   later tick *releases* it (frees every ledger allocation), which is
+//!   the moment its devices stop billing.
+//! * **hold** otherwise, with a cooldown after every action.
+//!
+//! ### The cost model behind the 46 % claim
+//!
+//! [`CostLedger`] meters **device-seconds**: a device is billed for every
+//! simulated second during which it holds at least one module (weights,
+//! replica, or migrated module) of any live instance. Static
+//! over-provisioning bills every device for the whole run; the fleet
+//! controller bills the small steady-state footprint plus burst capacity
+//! only while it exists. `benches/fig1_cost_availability.rs` sweeps the
+//! scenario library comparing the two at equal SLO attainment.
+
+use crate::sim::SimPolicy;
+
+/// Fleet-autoscaling configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetConfig {
+    /// Never drain below this many live (active + draining) instances.
+    pub min_instances: usize,
+    /// Never spin up beyond this many live instances.
+    pub max_instances: usize,
+    /// Latency between the spin-up decision and the instance accepting
+    /// traffic (process launch + weight load; §2.3 reports 8–25 s for a
+    /// 13B reload). Billing starts at the decision — the weights are
+    /// resident from then on.
+    pub cold_start_s: f64,
+    /// Scale out when mean outstanding requests per active instance
+    /// (router-parked requests included) exceeds this.
+    pub scale_out_queue: f64,
+    /// Scale in when mean outstanding per active instance is below this…
+    pub scale_in_queue: f64,
+    /// …for this many consecutive ticks.
+    pub idle_ticks_before_drain: u32,
+    /// Ticks to wait after any fleet action before acting again.
+    pub cooldown_ticks: u32,
+    /// Serving policy deployed on spun-up instances.
+    pub policy: SimPolicy,
+}
+
+impl FleetConfig {
+    /// The fig1 bench shape: elastic between `min` and `max` instances,
+    /// with the paper's ~8 s cold start.
+    pub fn elastic(min: usize, max: usize, policy: SimPolicy) -> FleetConfig {
+        FleetConfig {
+            min_instances: min,
+            max_instances: max,
+            cold_start_s: 8.0,
+            scale_out_queue: 24.0,
+            scale_in_queue: 2.0,
+            idle_ticks_before_drain: 3,
+            cooldown_ticks: 3,
+            policy,
+        }
+    }
+}
+
+/// What the fleet controller wants to do this tick (before arbitration).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetPressure {
+    /// Load is inside the healthy band (or the controller is cooling
+    /// down) — no lifecycle action.
+    Hold,
+    /// The fleet is oversubscribed: add capacity (replicate or spin up).
+    ScaleOut,
+    /// The fleet has been underloaded long enough: drain one instance.
+    ScaleIn,
+}
+
+/// The capacity-addition option the scale-out arbitration chose.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleOutChoice {
+    /// Run the replication plan already priced against the live state.
+    Replicate,
+    /// Spin up a whole new instance.
+    SpinUp,
+    /// Neither option is available (no plan, no room, at max instances).
+    Neither,
+}
+
+/// Stateful fleet controller: cooldown + the consecutive-idle counter.
+/// Pure decision logic — the simulation kernel executes the outcomes.
+#[derive(Debug, Clone)]
+pub struct FleetController {
+    /// Configuration this controller was built with.
+    pub cfg: FleetConfig,
+    cooldown: u32,
+    idle_ticks: u32,
+    /// Lifecycle actions taken (spin-ups + drains), for diagnostics.
+    actions: u64,
+}
+
+impl FleetController {
+    /// Build a controller for the given configuration.
+    pub fn new(cfg: FleetConfig) -> FleetController {
+        FleetController { cfg, cooldown: 0, idle_ticks: 0, actions: 0 }
+    }
+
+    /// Lifecycle actions taken so far.
+    pub fn actions_taken(&self) -> u64 {
+        self.actions
+    }
+
+    /// Stage 1: classify this tick's pressure. `mean_outstanding` is the
+    /// fleet-wide outstanding-request count (router-parked included)
+    /// divided by the number of traffic-accepting instances; `live` counts
+    /// active + draining instances (the spin-up/drain bounds).
+    pub fn pressure(&mut self, mean_outstanding: f64, live: usize) -> FleetPressure {
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            // keep observing idleness through the cooldown so a quiet
+            // fleet drains promptly once the cooldown expires
+            if mean_outstanding < self.cfg.scale_in_queue {
+                self.idle_ticks += 1;
+            } else {
+                self.idle_ticks = 0;
+            }
+            return FleetPressure::Hold;
+        }
+        if mean_outstanding > self.cfg.scale_out_queue && live < self.cfg.max_instances {
+            self.idle_ticks = 0;
+            self.arm();
+            return FleetPressure::ScaleOut;
+        }
+        if mean_outstanding < self.cfg.scale_in_queue {
+            self.idle_ticks += 1;
+            if self.idle_ticks >= self.cfg.idle_ticks_before_drain
+                && live > self.cfg.min_instances
+            {
+                self.idle_ticks = 0;
+                self.arm();
+                return FleetPressure::ScaleIn;
+            }
+        } else {
+            self.idle_ticks = 0;
+        }
+        FleetPressure::Hold
+    }
+
+    /// Stage 2 of scale-out: pick the cheaper capacity per dry-run cost.
+    ///
+    /// `replication`: `(plan time, capacity gain)` of the candidate layer-
+    /// replication round, where capacity gain is the fraction of an
+    /// instance-equivalent the round adds (planned replicas / layer
+    /// count — full replication of every layer ≈ one extra instance of
+    /// decode lanes, Fig. 4). `spin_up`: `(cold start + weight transfer
+    /// time, 1.0)` when a device can host a new instance. The option with
+    /// the lower cost **per instance-equivalent of capacity** wins; a
+    /// replication round that plans nothing, or a full cluster, removes
+    /// that option.
+    pub fn arbitrate(
+        &self,
+        replication: Option<(f64, f64)>,
+        spin_up: Option<f64>,
+    ) -> ScaleOutChoice {
+        let rep = replication
+            .filter(|&(_, gain)| gain > 0.0)
+            .map(|(time_s, gain)| time_s / gain);
+        match (rep, spin_up) {
+            (Some(r), Some(s)) if r <= s => ScaleOutChoice::Replicate,
+            (Some(_), Some(_)) => ScaleOutChoice::SpinUp,
+            (Some(_), None) => ScaleOutChoice::Replicate,
+            (None, Some(_)) => ScaleOutChoice::SpinUp,
+            (None, None) => ScaleOutChoice::Neither,
+        }
+    }
+
+    fn arm(&mut self) {
+        self.cooldown = self.cfg.cooldown_ticks;
+        self.actions += 1;
+    }
+}
+
+// ---- the device-seconds cost ledger ----------------------------------------
+
+/// Meters device-seconds: a device bills for every simulated second during
+/// which at least one live instance holds a module on it. The kernel
+/// advances the ledger at each event pop (piecewise-constant integration)
+/// and adjusts per-device holder refcounts at the discrete points where
+/// placements change (deploy, plan op landing, rollback, emergency
+/// scale-down, release).
+#[derive(Debug, Clone, Default)]
+pub struct CostLedger {
+    /// Per-device count of instances holding ≥1 module there.
+    holders: Vec<u32>,
+    /// Devices with `holders > 0` (cached — the integration rate).
+    billed: usize,
+    last_t: f64,
+    device_seconds: f64,
+}
+
+impl CostLedger {
+    /// A ledger for `n_devices`, starting unbilled at t = 0.
+    pub fn new(n_devices: usize) -> CostLedger {
+        CostLedger { holders: vec![0; n_devices], billed: 0, last_t: 0.0, device_seconds: 0.0 }
+    }
+
+    /// Integrate billing up to `now` at the current billed-device count.
+    pub fn advance(&mut self, now: f64) {
+        if now > self.last_t {
+            self.device_seconds += (now - self.last_t) * self.billed as f64;
+            self.last_t = now;
+        }
+    }
+
+    /// One instance started holding a module on `device`.
+    pub fn acquire(&mut self, device: usize) {
+        self.holders[device] += 1;
+        if self.holders[device] == 1 {
+            self.billed += 1;
+        }
+    }
+
+    /// One instance stopped holding any module on `device`.
+    pub fn release(&mut self, device: usize) {
+        debug_assert!(self.holders[device] > 0, "release without acquire");
+        self.holders[device] -= 1;
+        if self.holders[device] == 0 {
+            self.billed -= 1;
+        }
+    }
+
+    /// Devices currently billing.
+    pub fn billed_devices(&self) -> usize {
+        self.billed
+    }
+
+    /// Total device-seconds billed so far.
+    pub fn device_seconds(&self) -> f64 {
+        self.device_seconds
+    }
+}
+
+// ---- the fleet event log ----------------------------------------------------
+
+/// Lifecycle phase of one logged fleet event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetPhase {
+    /// A new instance was deployed (billing starts; serving starts after
+    /// the cold start).
+    SpinUp,
+    /// An instance stopped accepting traffic and began draining.
+    Drain,
+    /// A drained instance released every ledger allocation (billing for
+    /// its devices stops unless shared).
+    Release,
+}
+
+impl FleetPhase {
+    /// Stable name used in the golden metrics JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            FleetPhase::SpinUp => "spin_up",
+            FleetPhase::Drain => "drain",
+            FleetPhase::Release => "release",
+        }
+    }
+}
+
+/// One timestamped fleet lifecycle record (part of the golden JSON).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetEvent {
+    /// Simulated time of the action.
+    pub t: f64,
+    /// Instance the action applied to.
+    pub instance: usize,
+    /// Lifecycle phase.
+    pub phase: FleetPhase,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines;
+
+    fn ctl() -> FleetController {
+        let mut cfg = FleetConfig::elastic(2, 6, baselines::cocoserve(32));
+        cfg.cooldown_ticks = 1;
+        cfg.idle_ticks_before_drain = 2;
+        FleetController::new(cfg)
+    }
+
+    #[test]
+    fn oversubscription_scales_out_with_cooldown() {
+        let mut c = ctl();
+        assert_eq!(c.pressure(30.0, 3), FleetPressure::ScaleOut);
+        assert_eq!(c.pressure(30.0, 3), FleetPressure::Hold, "cooling down");
+        assert_eq!(c.pressure(30.0, 3), FleetPressure::ScaleOut);
+        assert_eq!(c.actions_taken(), 2);
+    }
+
+    #[test]
+    fn max_instances_bounds_scale_out() {
+        let mut c = ctl();
+        assert_eq!(c.pressure(99.0, 6), FleetPressure::Hold);
+    }
+
+    #[test]
+    fn sustained_idleness_drains_but_respects_min() {
+        let mut c = ctl();
+        assert_eq!(c.pressure(0.5, 4), FleetPressure::Hold); // idle tick 1
+        assert_eq!(c.pressure(0.5, 4), FleetPressure::ScaleIn); // tick 2
+        assert_eq!(c.pressure(0.5, 2), FleetPressure::Hold, "cooldown");
+        assert_eq!(c.pressure(0.5, 2), FleetPressure::Hold, "at min_instances");
+    }
+
+    #[test]
+    fn load_blip_resets_the_idle_counter() {
+        let mut c = ctl();
+        assert_eq!(c.pressure(0.5, 4), FleetPressure::Hold);
+        assert_eq!(c.pressure(10.0, 4), FleetPressure::Hold); // healthy band
+        assert_eq!(c.pressure(0.5, 4), FleetPressure::Hold); // counter restarted
+        assert_eq!(c.pressure(0.5, 4), FleetPressure::ScaleIn);
+    }
+
+    #[test]
+    fn arbitration_picks_cheaper_capacity() {
+        let c = ctl();
+        // 0.5 s for 0.1 instance-equivalents = 5 s/inst vs 8 s spin-up
+        assert_eq!(c.arbitrate(Some((0.5, 0.1)), Some(8.0)), ScaleOutChoice::Replicate);
+        // 2 s for 0.1 = 20 s/inst loses to an 8 s spin-up
+        assert_eq!(c.arbitrate(Some((2.0, 0.1)), Some(8.0)), ScaleOutChoice::SpinUp);
+        assert_eq!(c.arbitrate(None, Some(8.0)), ScaleOutChoice::SpinUp);
+        assert_eq!(c.arbitrate(Some((0.5, 0.1)), None), ScaleOutChoice::Replicate);
+        assert_eq!(c.arbitrate(None, None), ScaleOutChoice::Neither);
+        // a zero-gain plan is not an option
+        assert_eq!(c.arbitrate(Some((0.5, 0.0)), None), ScaleOutChoice::Neither);
+    }
+
+    #[test]
+    fn cost_ledger_bills_only_held_devices() {
+        let mut l = CostLedger::new(3);
+        l.advance(5.0);
+        assert_eq!(l.device_seconds(), 0.0, "nothing held, nothing billed");
+        l.acquire(0);
+        l.acquire(0); // second holder on the same device
+        l.acquire(2);
+        assert_eq!(l.billed_devices(), 2);
+        l.advance(7.0); // 2 devices × 2 s
+        assert_eq!(l.device_seconds(), 4.0);
+        l.release(0);
+        assert_eq!(l.billed_devices(), 2, "device 0 still has one holder");
+        l.release(0);
+        assert_eq!(l.billed_devices(), 1);
+        l.advance(10.0); // 1 device × 3 s
+        assert_eq!(l.device_seconds(), 7.0);
+        l.advance(9.0); // time never runs backwards
+        assert_eq!(l.device_seconds(), 7.0);
+    }
+}

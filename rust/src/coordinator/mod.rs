@@ -1,23 +1,43 @@
-//! The CoCoServe coordinator — the leader that ties the stack together.
+//! The CoCoServe coordinator — the fleet control plane.
 //!
-//! Real path ([`serve_trace`]): drives the [`TinyEngine`] with the
-//! [`Scheduler`]'s continuous-batching decisions against a wall-clock
-//! arrival process, recording completions in the [`Monitor`]. This is the
-//! end-to-end driver `examples/quickstart.rs` runs — Python is never
-//! involved.
+//! Three responsibilities live here:
 //!
-//! Paper-scale path: [`crate::sim::Simulation`] (same scheduler/autoscaler
-//! code over the cost-model substrate). Scaling follows the plan/execute
-//! split everywhere: the [`crate::autoscale`] planners emit
-//! [`crate::plan::ScalePlan`]s and every ledger/placement mutation flows
-//! through [`crate::ops::PlanExecutor`] — the real-path coordinator will
-//! adopt the same executor once the engine grows multi-device placements,
-//! so a leader process can dry-run-cost a reconfiguration before
-//! committing to it.
+//! * **Routing** ([`route`]): arrivals land at the coordinator, never at a
+//!   fixed instance. A pluggable [`RoutePolicy`] (round-robin /
+//!   least-outstanding / KV-headroom-aware) picks the serving instance;
+//!   per-instance admission limits push back, parking overflow in a FIFO
+//!   the kernel retries; requests shed by an instance's OOM handling can
+//!   be re-routed instead of failed.
+//! * **Fleet autoscaling** ([`fleet`]): a [`FleetController`] composes the
+//!   per-instance module planners with instance lifecycle operations —
+//!   spin-up with cold-start latency, drain-then-release — arbitrating
+//!   module replication vs. whole-instance scaling by dry-run cost. The
+//!   [`CostLedger`] meters device-seconds (a device bills while it holds
+//!   any module), the denominator of the paper's 46 % cost-reduction
+//!   claim (`benches/fig1_cost_availability.rs`).
+//! * **Real-path serving** ([`serve_trace`]): drives the [`TinyEngine`]
+//!   with the [`Scheduler`]'s continuous-batching decisions against a
+//!   wall-clock arrival process, recording completions in the
+//!   [`Monitor`] — the end-to-end driver `examples/quickstart.rs` runs,
+//!   with Python off the request path.
+//!
+//! Paper-scale path: [`crate::sim::Simulation`] executes the routing and
+//! fleet decisions inside the deterministic event kernel (same
+//! scheduler/autoscaler code over the cost-model substrate). Scaling
+//! follows the plan/execute split everywhere: the [`crate::autoscale`]
+//! planners emit [`crate::plan::ScalePlan`]s and every ledger/placement
+//! mutation flows through [`crate::ops::PlanExecutor`] — so the fleet
+//! controller can dry-run-cost a reconfiguration before committing to it.
 //!
 //! [`TinyEngine`]: crate::engine::TinyEngine
 //! [`Scheduler`]: crate::scheduler::Scheduler
 //! [`Monitor`]: crate::monitor::Monitor
+
+pub mod fleet;
+pub mod route;
+
+pub use fleet::{CostLedger, FleetConfig, FleetController, FleetEvent, FleetPhase};
+pub use route::{RouteCandidate, RoutePolicy, Router, RouterConfig};
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -32,6 +52,7 @@ use crate::workload::{synth_prompt_tokens, Trace};
 /// Serving configuration for the real path.
 #[derive(Debug, Clone, Copy)]
 pub struct ServeConfig {
+    /// Batching policy + batch bound for the scheduler.
     pub scheduler: SchedulerConfig,
     /// End-to-end latency SLO (seconds).
     pub slo_latency_s: f64,
@@ -53,7 +74,9 @@ impl Default for ServeConfig {
 
 /// Outcome of a serve run.
 pub struct ServeReport {
+    /// Completion records + SLO accounting for the run.
     pub monitor: Monitor,
+    /// Wall-clock duration of the run (seconds).
     pub duration_s: f64,
     /// PJRT executions performed (perf accounting).
     pub executions: u64,
@@ -64,6 +87,7 @@ pub struct ServeReport {
 }
 
 impl ServeReport {
+    /// Generated-token throughput over the run.
     pub fn tokens_per_s(&self) -> f64 {
         self.generated_tokens as f64 / self.duration_s.max(1e-9)
     }

@@ -1,0 +1,236 @@
+//! Cross-instance request routing — the fleet's front door.
+//!
+//! Arrivals land at the coordinator, not at a fixed instance: the event
+//! kernel pops an `Arrival`, asks the [`Router`] to pick a serving
+//! instance, and dispatches the request as a `Routed` event to that
+//! instance. The policy is pluggable ([`RoutePolicy`]) and every decision
+//! is deterministic: candidates are examined in ascending instance-id
+//! order and every comparison breaks ties toward the lower id, so the same
+//! trace always produces the same routing sequence (the fleet golden-replay
+//! contract).
+//!
+//! ### Backpressure
+//!
+//! Each instance may carry an admission limit (max outstanding requests).
+//! When no instance can admit, the request parks in the router's FIFO
+//! [`Router::pending`] queue and is retried after every kernel event — the
+//! first instance to free capacity drains the queue head. Requests shed by
+//! an instance's OOM handling can likewise be handed back for re-routing
+//! (see `sim::instance`), which is what lets a fleet survive a single
+//! instance's memory cliff without failing the requests outright.
+
+use std::collections::VecDeque;
+
+use crate::workload::Request;
+
+/// How the coordinator picks a serving instance for each request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Cycle through admitting instances in id order. Oblivious to load —
+    /// the baseline policy real gateways start from.
+    RoundRobin,
+    /// The instance with the fewest outstanding requests (pending +
+    /// running + already-routed-but-undelivered); ties go to the lowest
+    /// id. This reproduces the pre-fleet kernel's least-loaded dispatch.
+    LeastOutstanding,
+    /// The instance whose device set has the most free ledger bytes —
+    /// KV-cache headroom — so long decodes land where their cache can
+    /// grow; ties go to the lowest id.
+    KvHeadroom,
+}
+
+/// Routing configuration for a simulation run.
+#[derive(Debug, Clone, Copy)]
+pub struct RouterConfig {
+    /// Instance-selection policy.
+    pub policy: RoutePolicy,
+    /// Max outstanding requests an instance may hold before the router
+    /// stops offering it new work (`None` = unlimited, the legacy
+    /// behaviour).
+    pub admission_limit: Option<usize>,
+    /// Hand requests shed by an instance's OOM handling back to the
+    /// router for re-routing instead of requeueing them locally.
+    pub reroute_on_shed: bool,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            policy: RoutePolicy::LeastOutstanding,
+            admission_limit: None,
+            reroute_on_shed: false,
+        }
+    }
+}
+
+/// One instance's routing-relevant state, snapshotted by the kernel at
+/// decision time.
+#[derive(Debug, Clone, Copy)]
+pub struct RouteCandidate {
+    /// Is the instance accepting new work (active, past its cold start,
+    /// not draining)?
+    pub accepting: bool,
+    /// Outstanding requests: scheduler pending + running + routed-but-
+    /// undelivered.
+    pub outstanding: usize,
+    /// Free ledger bytes summed over the instance's device set (the
+    /// KV-headroom signal).
+    pub free_bytes: f64,
+}
+
+/// A request parked at the router under admission backpressure.
+#[derive(Debug, Clone, Copy)]
+pub struct Parked {
+    /// The request itself (original arrival time preserved).
+    pub req: Request,
+    /// OOM-reload penalty the request carries from a previous instance.
+    pub penalty: f64,
+    /// Was this a shed re-route (vs. a first-time arrival)?
+    pub reroute: bool,
+}
+
+/// The fleet's request router: policy + admission backpressure + the
+/// parked-request queue.
+#[derive(Debug)]
+pub struct Router {
+    /// Routing configuration this router was built with.
+    pub cfg: RouterConfig,
+    /// Requests no instance could admit, in arrival order. Retried after
+    /// every kernel event.
+    pub pending: VecDeque<Parked>,
+    /// Round-robin cursor (next instance id to try first).
+    cursor: usize,
+    /// First-time routing decisions made (each trace arrival counts once).
+    pub routes: u64,
+    /// Re-routing decisions for shed requests.
+    pub reroutes: u64,
+}
+
+impl Router {
+    /// Build a router with the given configuration.
+    pub fn new(cfg: RouterConfig) -> Router {
+        Router { cfg, pending: VecDeque::new(), cursor: 0, routes: 0, reroutes: 0 }
+    }
+
+    /// Park a request that no instance could admit; the kernel retries the
+    /// queue head after every event.
+    pub fn park(&mut self, req: Request, penalty: f64, reroute: bool) {
+        self.pending.push_back(Parked { req, penalty, reroute });
+    }
+
+    /// Can this candidate admit one more request under the configured
+    /// backpressure limit?
+    fn admits(&self, c: &RouteCandidate) -> bool {
+        c.accepting
+            && match self.cfg.admission_limit {
+                Some(limit) => c.outstanding < limit,
+                None => true,
+            }
+    }
+
+    /// Pick an instance for one request, or `None` when every instance is
+    /// saturated (the caller parks the request in [`Router::pending`]).
+    /// Deterministic: candidates scan in ascending id order; every policy
+    /// breaks ties toward the lower id (round-robin toward the cursor).
+    pub fn pick(&mut self, candidates: &[RouteCandidate]) -> Option<usize> {
+        let n = candidates.len();
+        if n == 0 {
+            return None;
+        }
+        match self.cfg.policy {
+            RoutePolicy::RoundRobin => {
+                for k in 0..n {
+                    let i = (self.cursor + k) % n;
+                    if self.admits(&candidates[i]) {
+                        self.cursor = (i + 1) % n;
+                        return Some(i);
+                    }
+                }
+                None
+            }
+            RoutePolicy::LeastOutstanding => candidates
+                .iter()
+                .enumerate()
+                .filter(|(_, c)| self.admits(c))
+                .min_by_key(|&(i, c)| (c.outstanding, i))
+                .map(|(i, _)| i),
+            RoutePolicy::KvHeadroom => candidates
+                .iter()
+                .enumerate()
+                .filter(|(_, c)| self.admits(c))
+                // max free bytes; total_cmp is a total order so ties fall
+                // to the lower id via min_by's first-wins semantics
+                .min_by(|(ia, a), (ib, b)| {
+                    b.free_bytes.total_cmp(&a.free_bytes).then(ia.cmp(ib))
+                })
+                .map(|(i, _)| i),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(outstanding: usize, free_bytes: f64) -> RouteCandidate {
+        RouteCandidate { accepting: true, outstanding, free_bytes }
+    }
+
+    fn router(policy: RoutePolicy, limit: Option<usize>) -> Router {
+        Router::new(RouterConfig {
+            policy,
+            admission_limit: limit,
+            reroute_on_shed: false,
+        })
+    }
+
+    #[test]
+    fn round_robin_cycles_in_id_order() {
+        let mut r = router(RoutePolicy::RoundRobin, None);
+        let c = vec![cand(0, 0.0); 3];
+        let picks: Vec<_> = (0..5).map(|_| r.pick(&c).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1]);
+    }
+
+    #[test]
+    fn round_robin_skips_saturated_instances() {
+        let mut r = router(RoutePolicy::RoundRobin, Some(4));
+        let c = vec![cand(4, 0.0), cand(1, 0.0), cand(4, 0.0)];
+        assert_eq!(r.pick(&c), Some(1));
+        assert_eq!(r.pick(&c), Some(1), "only instance 1 admits");
+    }
+
+    #[test]
+    fn least_outstanding_ties_to_lowest_id() {
+        let mut r = router(RoutePolicy::LeastOutstanding, None);
+        let c = vec![cand(3, 0.0), cand(1, 0.0), cand(1, 0.0)];
+        assert_eq!(r.pick(&c), Some(1));
+        let even = vec![cand(2, 0.0); 4];
+        assert_eq!(r.pick(&even), Some(0));
+    }
+
+    #[test]
+    fn kv_headroom_prefers_most_free_bytes() {
+        let mut r = router(RoutePolicy::KvHeadroom, None);
+        let c = vec![cand(0, 1.0), cand(0, 9.0), cand(0, 9.0)];
+        assert_eq!(r.pick(&c), Some(1), "ties break to the lower id");
+    }
+
+    #[test]
+    fn saturation_returns_none() {
+        let mut r = router(RoutePolicy::LeastOutstanding, Some(2));
+        let c = vec![cand(2, 0.0), cand(5, 0.0)];
+        assert_eq!(r.pick(&c), None);
+    }
+
+    #[test]
+    fn non_accepting_instances_are_skipped() {
+        let mut r = router(RoutePolicy::LeastOutstanding, None);
+        let mut c = vec![cand(0, 0.0), cand(9, 0.0)];
+        c[0].accepting = false;
+        assert_eq!(r.pick(&c), Some(1));
+        c[1].accepting = false;
+        assert_eq!(r.pick(&c), None);
+        assert_eq!(r.pick(&[]), None);
+    }
+}

@@ -24,6 +24,7 @@ pub use profile::PlacementProfile;
 /// Placement of one model instance across the cluster.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Placement {
+    /// Decoder-layer count of the placed model.
     pub n_layers: usize,
     /// Primary device of each layer.
     primary: Vec<usize>,
@@ -76,6 +77,7 @@ impl Placement {
 
     // ---- queries ----------------------------------------------------------
 
+    /// Primary (original) device of a layer.
     pub fn primary_device(&self, layer: usize) -> usize {
         self.primary[layer]
     }
@@ -113,6 +115,7 @@ impl Placement {
         }
     }
 
+    /// Every sub-layer module migrated off its layer's primary device.
     pub fn migrations(&self) -> impl Iterator<Item = (&ModuleId, &usize)> {
         self.migrated.iter()
     }

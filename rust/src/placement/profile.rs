@@ -57,6 +57,7 @@ const TRANSITION_LAUNCH_S: f64 = 20e-6;
 /// placement changes; everything here is otherwise immutable.
 #[derive(Debug, Clone)]
 pub struct PlacementProfile {
+    /// Decoder-layer count of the compiled placement.
     pub n_layers: usize,
     /// Cache key: the owner's placement revision at compile time.
     pub epoch: u64,

@@ -114,16 +114,20 @@ impl std::error::Error for PlanError {
 /// and [`crate::ops::PlanExecutor::execute`].
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct PlanCost {
+    /// Cost of each op, in plan order (the simulator's event durations).
     pub per_op: Vec<OpCost>,
+    /// Merged total across every op.
     pub total: OpCost,
 }
 
 impl PlanCost {
+    /// Append one op's cost, folding it into the total.
     pub fn push(&mut self, c: OpCost) {
         self.total = self.total.merge(c);
         self.per_op.push(c);
     }
 
+    /// Total plan time in seconds.
     pub fn time_s(&self) -> f64 {
         self.total.time_s
     }
@@ -137,22 +141,27 @@ impl PlanCost {
 /// operation pay one launch).
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct ScalePlan {
+    /// The operations, in execution order.
     pub ops: Vec<ModuleOp>,
 }
 
 impl ScalePlan {
+    /// An empty plan.
     pub fn new() -> ScalePlan {
         ScalePlan::default()
     }
 
+    /// Append one operation.
     pub fn push(&mut self, op: ModuleOp) {
         self.ops.push(op);
     }
 
+    /// Number of operations.
     pub fn len(&self) -> usize {
         self.ops.len()
     }
 
+    /// Does the plan contain no operations?
     pub fn is_empty(&self) -> bool {
         self.ops.is_empty()
     }

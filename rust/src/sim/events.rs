@@ -2,10 +2,12 @@
 //!
 //! A binary heap of timestamped events with **fully deterministic
 //! ordering**: events pop by ascending time, then by kind priority
-//! (arrivals before controller ticks before scaling-op starts/completions
-//! before step completions before wake-ups — scaling ops apply before a
-//! coinciding step completion so the step's successor sees the post-op
-//! placement), then by instance id, then by insertion sequence. Two runs
+//! (arrivals before their routing deliveries before controller ticks
+//! before scaling-op starts/completions before step completions before
+//! wake-ups — routing delivers before a coinciding controller tick reads
+//! the queues, and scaling ops apply before a coinciding step completion
+//! so the step's successor sees the post-op placement), then by instance
+//! id, then by insertion sequence. Two runs
 //! over the same trace therefore process an identical event sequence,
 //! which is what makes the golden-replay test (byte-identical metrics
 //! JSON) possible.
@@ -18,6 +20,12 @@ use std::collections::BinaryHeap;
 pub enum EventKind {
     /// The `idx`-th trace request reaches the router.
     Arrival { request_idx: usize },
+    /// The coordinator routed trace request `request_idx` to `instance`;
+    /// delivery (scheduler submission) happens when this event fires.
+    /// Routed orders directly after Arrival so a routing decision made at
+    /// an arrival's timestamp delivers before any same-time controller
+    /// tick or step completion observes the queue.
+    Routed { request_idx: usize, instance: usize },
     /// The §5 controller evaluates every autoscaling instance.
     ControllerTick,
     /// Op `op_idx` of instance `instance`'s in-flight [`crate::plan::ScalePlan`]
@@ -42,11 +50,12 @@ impl EventKind {
     fn priority(&self) -> u8 {
         match self {
             EventKind::Arrival { .. } => 0,
-            EventKind::ControllerTick => 1,
-            EventKind::OpCompleted { .. } => 2,
-            EventKind::OpStarted { .. } => 3,
-            EventKind::StepComplete { .. } => 4,
-            EventKind::Wake { .. } => 5,
+            EventKind::Routed { .. } => 1,
+            EventKind::ControllerTick => 2,
+            EventKind::OpCompleted { .. } => 3,
+            EventKind::OpStarted { .. } => 4,
+            EventKind::StepComplete { .. } => 5,
+            EventKind::Wake { .. } => 6,
         }
     }
 
@@ -54,7 +63,8 @@ impl EventKind {
     fn instance_key(&self) -> usize {
         match self {
             EventKind::Arrival { .. } | EventKind::ControllerTick => 0,
-            EventKind::OpCompleted { instance, .. }
+            EventKind::Routed { instance, .. }
+            | EventKind::OpCompleted { instance, .. }
             | EventKind::OpStarted { instance, .. }
             | EventKind::StepComplete { instance, .. }
             | EventKind::Wake { instance } => *instance,
@@ -172,6 +182,7 @@ mod tests {
         q.push(5.0, EventKind::Wake { instance: 0 });
         q.push(5.0, EventKind::StepComplete { instance: 0, token: 1 });
         q.push(5.0, EventKind::ControllerTick);
+        q.push(5.0, EventKind::Routed { request_idx: 7, instance: 0 });
         q.push(5.0, EventKind::Arrival { request_idx: 7 });
         q.push(5.0, EventKind::OpCompleted { instance: 0, op_idx: 0, epoch: 1 });
         q.push(5.0, EventKind::OpStarted { instance: 0, op_idx: 1, epoch: 1 });
@@ -180,6 +191,7 @@ mod tests {
             kinds,
             vec![
                 EventKind::Arrival { request_idx: 7 },
+                EventKind::Routed { request_idx: 7, instance: 0 },
                 EventKind::ControllerTick,
                 EventKind::OpCompleted { instance: 0, op_idx: 0, epoch: 1 },
                 EventKind::OpStarted { instance: 0, op_idx: 1, epoch: 1 },

@@ -57,6 +57,32 @@ pub(crate) enum StepStart {
     Blocked { until: f64 },
 }
 
+/// Fleet lifecycle state of an instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Lifecycle {
+    /// Serving and accepting routed traffic (once past its cold start).
+    Active,
+    /// No longer offered new work by the router; finishes what it holds.
+    Draining,
+    /// Drained and released: every ledger allocation freed, devices no
+    /// longer billed for this instance.
+    Retired,
+}
+
+/// A request shed by OOM handling, handed back to the coordinator for
+/// re-routing (fleet mode only — local requeue is the default).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Shed {
+    pub id: u64,
+    /// Original arrival time (end-to-end latency keeps accruing across
+    /// the re-route).
+    pub arrival_s: f64,
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+    /// Accumulated OOM-reload penalty the request carries with it.
+    pub penalty: f64,
+}
+
 /// A plan being executed op-by-op by the event kernel.
 pub(crate) struct InflightPlan {
     pub plan: ScalePlan,
@@ -126,6 +152,16 @@ pub(crate) struct Instance {
     pub kv_peak: KvStats,
     /// Earliest wake-up already scheduled for this instance (dedup).
     pub scheduled_wake: Option<f64>,
+    /// Fleet lifecycle state (always `Active` outside fleet mode).
+    pub lifecycle: Lifecycle,
+    /// Earliest time the router may offer this instance traffic (spin-up
+    /// cold start; 0.0 for instances deployed before the run).
+    pub active_after: f64,
+    /// Hand OOM-shed requests back to the coordinator instead of
+    /// requeueing them locally (set by the kernel in fleet mode).
+    pub reroute_shed: bool,
+    /// Requests shed since the kernel last collected them.
+    pub shed_outbox: Vec<Shed>,
     /// Request metadata by id (arrival, prompt, output) for completions.
     pub requests: std::collections::BTreeMap<u64, (f64, usize, usize)>,
     /// Per-request accumulated penalty (OOM reloads).
@@ -178,6 +214,10 @@ impl Instance {
             monitor: Monitor::new(cfg.slo_latency_s),
             kv_peak: Default::default(),
             scheduled_wake: None,
+            lifecycle: Lifecycle::Active,
+            active_after: 0.0,
+            reroute_shed: false,
+            shed_outbox: Vec::new(),
             requests: Default::default(),
             penalties: Default::default(),
             oom_victims: Default::default(),
@@ -191,6 +231,48 @@ impl Instance {
     /// Has runnable or waiting work (used by the kernel's readiness sweep).
     pub fn has_work(&self) -> bool {
         !self.scheduler.is_idle()
+    }
+
+    /// May the router offer this instance new traffic at `now`? Active,
+    /// past its spin-up cold start, not draining.
+    pub fn accepting(&self, now: f64) -> bool {
+        self.lifecycle == Lifecycle::Active && now + 1e-12 >= self.active_after
+    }
+
+    /// Deliver a routed request: register its metadata (original arrival —
+    /// end-to-end latency spans re-routes) plus any penalty it carries,
+    /// and submit it to the scheduler.
+    pub fn deliver(&mut self, req: crate::workload::Request, penalty: f64) {
+        self.requests.insert(req.id, (req.arrival_s, req.prompt_tokens, req.output_tokens));
+        if penalty > 0.0 {
+            *self.penalties.entry(req.id).or_insert(0.0) += penalty;
+        }
+        self.scheduler.submit(req);
+    }
+
+    /// Fully drained? (Nothing queued, running, or scaling in flight.)
+    pub fn drained(&self) -> bool {
+        self.scheduler.is_idle() && self.busy_until.is_none() && self.inflight.is_none()
+    }
+
+    /// Release the instance: free every ledger allocation it holds (module
+    /// weights, replicas, migrated modules, the KV mirror) and mark it
+    /// retired. The caller stops billing its devices from here on.
+    pub fn release(&mut self, cluster: &mut Cluster) {
+        debug_assert!(self.drained(), "release before drain completes");
+        let prefix = format!("inst{}/", self.id);
+        for d in 0..cluster.n() {
+            let dev = cluster.device_mut(d);
+            let tags: Vec<String> = dev
+                .allocations()
+                .filter(|(t, _)| t.starts_with(&prefix))
+                .map(|(t, _)| t.to_string())
+                .collect();
+            for t in tags {
+                let _ = dev.free(&t);
+            }
+        }
+        self.lifecycle = Lifecycle::Retired;
     }
 
     /// All devices hosting any copy of any of this instance's layers.
@@ -298,6 +380,22 @@ impl Instance {
                 let penalty = ctx.cfg.oom_penalty_s;
                 for id in &ids {
                     self.kv.remove_sequence(*id);
+                    if self.reroute_shed {
+                        // Fleet mode: hand the failed batch back to the
+                        // coordinator; the request (and its accumulated
+                        // penalty) leaves this instance entirely.
+                        if let Some((arr, p, o)) = self.requests.remove(id) {
+                            let carried = self.penalties.remove(id).unwrap_or(0.0) + penalty;
+                            self.shed_outbox.push(Shed {
+                                id: *id,
+                                arrival_s: arr,
+                                prompt_tokens: p,
+                                output_tokens: o,
+                                penalty: carried,
+                            });
+                        }
+                        continue;
+                    }
                     *self.penalties.entry(*id).or_insert(0.0) += penalty;
                     // requeue as fresh arrival (retry)
                     if let Some(&(_, p, o)) = self.requests.get(id) {
@@ -523,7 +621,6 @@ impl Instance {
         let kv_per_layer =
             self.kv.stats().reserved_bytes / self.placement.n_layers as f64;
         let ops = self.module_ops(ctx);
-        let slo = ctx.cfg.slo_latency_s;
         let out = scale_down(
             &ops,
             cluster,
@@ -533,7 +630,7 @@ impl Instance {
             self.batch_size,
             &ScaleDownConfig::default(),
             |_l| kv_per_layer,
-            |cl, _pl, _bs| cl.mem_frac(hot) > 0.92 && slo > 0.0,
+            crate::autoscale::memory_violation(hot, ctx.cfg.slo_latency_s),
         );
         if out.actions.is_empty() {
             return;
@@ -764,7 +861,11 @@ mod tests {
         max_ops: usize,
     ) -> crate::autoscale::ScaleUpPlan {
         let ops = ModuleOps::new(cost, cfg.dtype_bytes, "inst0");
-        let up = ScaleUpConfig { min_vacancy: 0.45, max_ops_per_round: max_ops, ..Default::default() };
+        let up = ScaleUpConfig {
+            min_vacancy: crate::sim::SCALE_UP_MIN_VACANCY,
+            max_ops_per_round: max_ops,
+            ..Default::default()
+        };
         scale_up(&ops, cluster, &inst.placement, &up)
     }
 

@@ -7,6 +7,7 @@
 //! — two runs with the same seed and trace produce byte-identical JSON,
 //! which the golden-replay test and the fig10/fig11 benches assert.
 
+use crate::coordinator::FleetEvent;
 use crate::monitor::Monitor;
 use crate::placement::Placement;
 use crate::util::json::{self, Json};
@@ -71,6 +72,18 @@ pub struct SimReport {
     /// Serving steps started (prefill + decode) across the fleet. Also
     /// excluded from the golden JSON.
     pub steps_started: u64,
+    /// Device-seconds billed over the run: each device bills for every
+    /// simulated second during which it holds at least one module of a
+    /// live instance (weights, replica, or migrated module). The cost
+    /// denominator of the paper's 46 % claim (fig1 bench).
+    pub device_seconds: f64,
+    /// First-time routing decisions the coordinator made (one per
+    /// delivered trace arrival).
+    pub routes: u64,
+    /// Re-routing decisions for requests shed by OOM handling.
+    pub reroutes: u64,
+    /// Timestamped fleet lifecycle log (spin-up / drain / release).
+    pub fleet_events: Vec<FleetEvent>,
     pub monitors: Vec<Monitor>,
     /// (device, compute utilization, mem frac at end).
     pub device_util: Vec<(usize, f64, f64)>,
@@ -189,11 +202,22 @@ impl SimReport {
                 ("t", json::num(e.t)),
             ])
         }));
+        let fleet_events = json::arr(self.fleet_events.iter().map(|e| {
+            json::obj(vec![
+                ("instance", json::num(e.instance as f64)),
+                ("phase", json::s(e.phase.name())),
+                ("t", json::num(e.t)),
+            ])
+        }));
         json::obj(vec![
             ("completed", json::num(self.total_completed() as f64)),
+            ("device_seconds", json::num(self.device_seconds)),
             ("devices", devices),
             ("duration_s", json::num(self.duration_s)),
+            ("fleet_events", fleet_events),
             ("instances", instances),
+            ("reroutes", json::num(self.reroutes as f64)),
+            ("routes", json::num(self.routes as f64)),
             ("oom_events", json::num(self.total_oom_events as f64)),
             ("oom_rate", json::num(self.oom_rate())),
             ("oom_victims", json::num(self.oom_victims as f64)),
@@ -227,6 +251,14 @@ mod tests {
             duration_s: 10.0,
             events_processed: 0,
             steps_started: 0,
+            device_seconds: 10.0,
+            routes: 1,
+            reroutes: 0,
+            fleet_events: vec![crate::coordinator::FleetEvent {
+                t: 0.5,
+                instance: 0,
+                phase: crate::coordinator::FleetPhase::SpinUp,
+            }],
             monitors: vec![m],
             device_util: vec![(0, 0.5, 0.25)],
             device_peak_bytes: vec![1e9],
@@ -262,6 +294,12 @@ mod tests {
         let evs = parsed.req("op_events").as_arr().unwrap();
         assert_eq!(evs.len(), 1);
         assert_eq!(evs[0].req("phase").as_str(), Some("completed"));
+        assert_eq!(parsed.req("device_seconds").as_f64(), Some(10.0));
+        assert_eq!(parsed.req("routes").as_usize(), Some(1));
+        assert_eq!(parsed.req("reroutes").as_usize(), Some(0));
+        let fev = parsed.req("fleet_events").as_arr().unwrap();
+        assert_eq!(fev.len(), 1);
+        assert_eq!(fev[0].req("phase").as_str(), Some("spin_up"));
     }
 
     #[test]

@@ -22,10 +22,13 @@
 //!   plan-op application);
 //! * [`metrics`] — [`SimReport`] accounting plus the deterministic metrics
 //!   JSON the golden-replay tests and benches assert on;
-//! * this module — a thin orchestrator: it routes arrivals, pops events,
-//!   computes cross-instance contention, admits controller-planned
-//!   [`crate::plan::ScalePlan`]s, and asks ready instances to start their
-//!   next step.
+//! * this module — a thin orchestrator: it pops events, routes arrivals
+//!   through the [`crate::coordinator`] router (`Routed` events, admission
+//!   backpressure, OOM-shed re-routing), computes cross-instance
+//!   contention, admits controller-planned [`crate::plan::ScalePlan`]s,
+//!   runs the fleet controller (spin-up / drain-then-release, module-vs-
+//!   instance arbitration), meters device-seconds, and asks ready
+//!   instances to start their next step.
 //!
 //! ### In-flight scaling (the §3.1 non-disruption claim, made measurable)
 //!
@@ -56,19 +59,25 @@ pub mod metrics;
 pub use metrics::{OpEvent, OpPhase, ScaleStats, SimReport};
 
 use crate::autoscale::{
-    Controller, ControllerConfig, PlanCtx, PlannedDecision, ScaleDownConfig, ScaleUpConfig,
+    memory_violation, scale_up, Controller, ControllerConfig, PlanCtx, PlannedDecision,
+    ScaleDownConfig, ScaleUpConfig,
 };
 use crate::cluster::Cluster;
+use crate::coordinator::fleet::ScaleOutChoice;
+use crate::coordinator::{
+    CostLedger, FleetConfig, FleetController, FleetEvent, FleetPhase, RouteCandidate,
+    Router, RouterConfig,
+};
 use crate::model::cost::CostModel;
-use crate::model::ModelConfig;
+use crate::model::{ModelConfig, ModuleKind};
 use crate::ops::ModuleOps;
 use crate::placement::Placement;
 use crate::plan::{PlanCost, ScalePlan};
 use crate::scheduler::SchedulerConfig;
-use crate::workload::Trace;
+use crate::workload::{Request, Trace};
 
 use events::{EventKind, EventQueue};
-use instance::{Instance, OpOutcome, StepCtx, StepStart};
+use instance::{Instance, Lifecycle, OpOutcome, StepCtx, StepStart};
 
 /// Serving-path pause when a replication plan lands (synchronization
 /// barrier while dataflow hooks swap in; the weight copies themselves
@@ -78,6 +87,12 @@ pub const SYNC_PAUSE_S: f64 = 0.05;
 /// Fraction of a decode step the SMs are actually busy (bandwidth-bound
 /// GEMV) — the compute-utilization signal NVML reports in Fig. 2.
 pub const DECODE_BUSY_FRACTION: f64 = 0.65;
+
+/// Vacancy floor (`GetEligibleNodes`) the kernel's scale-up planning
+/// uses, for both the per-instance controller and the fleet arbitration —
+/// stricter than `ScaleUpConfig::default`'s 0.3 because replicas must
+/// leave headroom for the serving KV growing next to them.
+pub(crate) const SCALE_UP_MIN_VACANCY: f64 = 0.45;
 
 /// Size of the intersection of two sorted, deduplicated device slices
 /// (two-pointer merge — the allocation-free `BTreeSet::intersection`).
@@ -171,6 +186,20 @@ impl SimConfig {
     }
 }
 
+/// Coordinator wiring for a simulation run: routing policy, optional
+/// fleet autoscaling, and the per-instance §5 controller thresholds. The
+/// default is the pre-fleet behaviour — least-outstanding routing, no
+/// admission limit, no instance lifecycle management.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FleetSetup {
+    /// Routing policy + admission backpressure + shed re-routing.
+    pub router: RouterConfig,
+    /// Fleet-level instance autoscaling (None = fixed fleet).
+    pub fleet: Option<FleetConfig>,
+    /// Threshold configuration of the per-instance controllers.
+    pub controller: ControllerConfig,
+}
+
 /// The simulator: an event kernel over per-instance state machines.
 pub struct Simulation {
     pub cfg: SimConfig,
@@ -178,6 +207,21 @@ pub struct Simulation {
     cost: CostModel,
     instances: Vec<Instance>,
     controller: Controller,
+    /// The coordinator's request router (front door of the fleet).
+    router: Router,
+    /// Requests routed (Routed event scheduled) but not yet delivered,
+    /// per instance — counted into the routing load signal so same-time
+    /// decisions observe each other.
+    outstanding_routes: Vec<u32>,
+    /// Fleet-level lifecycle controller (None = fixed fleet).
+    fleet: Option<FleetController>,
+    /// Device-seconds cost meter.
+    ledger: CostLedger,
+    /// Per-instance (placement_rev, billed device set) — the ledger's
+    /// incremental-update cache.
+    bill_cache: Vec<(u64, Vec<usize>)>,
+    /// Timestamped fleet lifecycle log (spin-up / drain / release).
+    fleet_events: Vec<FleetEvent>,
     now: f64,
     scale: ScaleStats,
     peak_mem: f64,
@@ -189,27 +233,61 @@ pub struct Simulation {
 
 impl Simulation {
     /// Build a simulation: each entry of `placements` is one instance with
-    /// its policy; instance weights are deployed onto the ledgers.
+    /// its policy; instance weights are deployed onto the ledgers. Uses
+    /// the default [`FleetSetup`] (legacy least-outstanding routing, no
+    /// fleet autoscaling).
     pub fn new(
         cfg: SimConfig,
         cluster: Cluster,
         placements: Vec<(Placement, SimPolicy)>,
     ) -> Simulation {
+        Simulation::with_fleet(cfg, cluster, placements, FleetSetup::default())
+    }
+
+    /// Build a simulation with explicit coordinator wiring (routing
+    /// policy, fleet autoscaling, controller thresholds).
+    pub fn with_fleet(
+        cfg: SimConfig,
+        cluster: Cluster,
+        placements: Vec<(Placement, SimPolicy)>,
+        setup: FleetSetup,
+    ) -> Simulation {
         let cost = cfg.cost_model();
         let mut cluster = cluster;
-        let instances = placements
+        let reroute = setup.router.reroute_on_shed;
+        let instances: Vec<Instance> = placements
             .into_iter()
             .enumerate()
             .map(|(i, (placement, policy))| {
-                Instance::deploy(i, placement, policy, &cfg, &cost, &mut cluster)
+                let mut inst = Instance::deploy(i, placement, policy, &cfg, &cost, &mut cluster);
+                inst.reroute_shed = reroute;
+                inst
             })
             .collect();
+        let mut ledger = CostLedger::new(cluster.n());
+        let bill_cache: Vec<(u64, Vec<usize>)> = instances
+            .iter()
+            .map(|inst| {
+                let devs = inst.profile.device_set.clone();
+                for &d in &devs {
+                    ledger.acquire(d);
+                }
+                (inst.placement_rev, devs)
+            })
+            .collect();
+        let outstanding_routes = vec![0; instances.len()];
         Simulation {
             cfg,
             cluster,
             cost,
             instances,
-            controller: Controller::new(ControllerConfig::default()),
+            controller: Controller::new(setup.controller),
+            router: Router::new(setup.router),
+            outstanding_routes,
+            fleet: setup.fleet.map(FleetController::new),
+            ledger,
+            bill_cache,
+            fleet_events: Vec::new(),
             now: 0.0,
             scale: ScaleStats::default(),
             peak_mem: 0.0,
@@ -230,16 +308,117 @@ impl Simulation {
         })
     }
 
-    /// Route a request to the least-loaded instance (§5 Scheduler).
-    fn route(&mut self, req: crate::workload::Request) {
-        let inst = self
-            .instances
-            .iter_mut()
-            .min_by_key(|i| i.scheduler.load())
-            .expect("no instances");
-        inst.requests
-            .insert(req.id, (req.arrival_s, req.prompt_tokens, req.output_tokens));
-        inst.scheduler.submit(req);
+    // ---- routing (the coordinator's front door) ---------------------------
+
+    /// Snapshot every instance's routing-relevant state for one decision.
+    /// Outstanding load counts requests already routed this timestamp but
+    /// not yet delivered, so coinciding decisions observe each other.
+    fn route_candidates(&self) -> Vec<RouteCandidate> {
+        self.instances
+            .iter()
+            .enumerate()
+            .map(|(i, inst)| RouteCandidate {
+                accepting: inst.accepting(self.now),
+                outstanding: inst.scheduler.load() + self.outstanding_routes[i] as usize,
+                free_bytes: inst
+                    .profile
+                    .device_set
+                    .iter()
+                    .map(|&d| self.cluster.device(d).free_bytes())
+                    .sum(),
+            })
+            .collect()
+    }
+
+    /// Route one arrival: pick an instance and schedule its `Routed`
+    /// delivery at the current time, or park the request under admission
+    /// backpressure.
+    fn route_arrival(&mut self, request_idx: usize, req: Request, q: &mut EventQueue) {
+        let cands = self.route_candidates();
+        match self.router.pick(&cands) {
+            Some(i) => {
+                self.router.routes += 1;
+                self.outstanding_routes[i] += 1;
+                q.push(self.now, EventKind::Routed { request_idx, instance: i });
+            }
+            None => self.router.park(req, 0.0, false),
+        }
+    }
+
+    /// Hand requests shed by OOM handling back through the router
+    /// (re-route), parking them if no instance admits right now. The
+    /// shedding instance is excluded from its own re-route pick — the
+    /// point of shedding is to move the request *away* from the OOMing
+    /// instance; parked overflow may still return to it at a later event
+    /// when nothing else admits.
+    fn collect_shed(&mut self) {
+        for i in 0..self.instances.len() {
+            if self.instances[i].shed_outbox.is_empty() {
+                continue;
+            }
+            let shed = std::mem::take(&mut self.instances[i].shed_outbox);
+            for s in shed {
+                let req = Request {
+                    id: s.id,
+                    arrival_s: s.arrival_s,
+                    prompt_tokens: s.prompt_tokens,
+                    output_tokens: s.output_tokens,
+                };
+                let mut cands = self.route_candidates();
+                cands[i].accepting = false;
+                match self.router.pick(&cands) {
+                    Some(j) => {
+                        self.router.reroutes += 1;
+                        self.instances[j].deliver(req, s.penalty);
+                    }
+                    None => self.router.park(req, s.penalty, true),
+                }
+            }
+        }
+    }
+
+    /// Retry parked requests in FIFO order until the head fails to route.
+    fn drain_parked(&mut self) {
+        while let Some(parked) = self.router.pending.front().copied() {
+            let cands = self.route_candidates();
+            let Some(i) = self.router.pick(&cands) else { break };
+            self.router.pending.pop_front();
+            if parked.reroute {
+                self.router.reroutes += 1;
+            } else {
+                self.router.routes += 1;
+            }
+            self.instances[i].deliver(parked.req, parked.penalty);
+        }
+    }
+
+    // ---- device-seconds billing -------------------------------------------
+
+    /// Reconcile the cost ledger with any placement that moved during this
+    /// event (plan ops landing, rollbacks, emergency scale-downs). The
+    /// ledger was already advanced to `now` at the event pop, so the
+    /// refcount flip is exactly timed. O(1) per unmoved instance.
+    fn sync_billing(&mut self) {
+        for i in 0..self.instances.len() {
+            let rev = self.instances[i].placement_rev;
+            if self.bill_cache[i].0 == rev {
+                continue;
+            }
+            if self.instances[i].lifecycle != Lifecycle::Retired {
+                for &d in &self.instances[i].profile.device_set {
+                    self.ledger.acquire(d);
+                }
+            }
+            for &d in &self.bill_cache[i].1 {
+                self.ledger.release(d);
+            }
+            let devs = if self.instances[i].lifecycle == Lifecycle::Retired {
+                Vec::new()
+            } else {
+                self.instances[i].profile.device_set.clone()
+            };
+            self.bill_cache[i] = (rev, devs);
+        }
     }
 
     /// Device contention factor: overlap-weighted slowdown from other
@@ -270,7 +449,9 @@ impl Simulation {
     /// instance and admit emitted plans for in-flight execution.
     fn controller_tick(&mut self, q: &mut EventQueue) {
         for i in 0..self.instances.len() {
-            if !self.instances[i].policy.autoscale {
+            if !self.instances[i].policy.autoscale
+                || self.instances[i].lifecycle != Lifecycle::Active
+            {
                 continue;
             }
             // one plan in flight per instance — its execution is the
@@ -305,7 +486,7 @@ impl Simulation {
                 placement: &self.instances[i].placement,
                 up_cfg: ScaleUpConfig {
                     gamma,
-                    min_vacancy: 0.45,
+                    min_vacancy: SCALE_UP_MIN_VACANCY,
                     max_ops_per_round: remaining,
                 },
                 down_cfg: ScaleDownConfig::default(),
@@ -313,9 +494,7 @@ impl Simulation {
                 kv_bytes_per_layer: kv_per_layer,
                 down_src: Some(hot),
             };
-            let planned = self.controller.plan(decision, &ctx, |cl, _pl, _bs| {
-                cl.mem_frac(hot) > 0.92 && slo > 0.0
-            });
+            let planned = self.controller.plan(decision, &ctx, memory_violation(hot, slo));
             match planned {
                 PlannedDecision::None => {}
                 PlannedDecision::ScaleUp(up) => {
@@ -328,6 +507,175 @@ impl Simulation {
                 }
             }
         }
+    }
+
+    // ---- fleet lifecycle (spin-up / drain / release) ----------------------
+
+    /// One fleet-controller tick: release drained instances, read the
+    /// aggregate pressure signal, and scale out (module replication vs.
+    /// whole-instance spin-up, arbitrated by dry-run cost) or drain.
+    /// Runs before the per-instance controllers on every `ControllerTick`.
+    fn fleet_tick(&mut self, q: &mut EventQueue) {
+        if self.fleet.is_none() {
+            return;
+        }
+        // 1. drain-then-release: a draining instance that emptied out
+        //    frees every ledger allocation; its devices stop billing now.
+        for i in 0..self.instances.len() {
+            if self.instances[i].lifecycle == Lifecycle::Draining && self.instances[i].drained() {
+                self.instances[i].release(&mut self.cluster);
+                for &d in &self.bill_cache[i].1 {
+                    self.ledger.release(d);
+                }
+                self.bill_cache[i] = (self.instances[i].placement_rev, Vec::new());
+                self.fleet_events.push(FleetEvent {
+                    t: self.now,
+                    instance: i,
+                    phase: FleetPhase::Release,
+                });
+            }
+        }
+        // 2. pressure signal: mean outstanding per traffic-accepting
+        //    instance, router-parked requests included.
+        let live = self
+            .instances
+            .iter()
+            .filter(|inst| inst.lifecycle != Lifecycle::Retired)
+            .count();
+        let accepting = self.instances.iter().filter(|inst| inst.accepting(self.now)).count();
+        let outstanding: usize = self
+            .instances
+            .iter()
+            .enumerate()
+            .filter(|(_, inst)| inst.lifecycle != Lifecycle::Retired)
+            .map(|(i, inst)| inst.scheduler.load() + self.outstanding_routes[i] as usize)
+            .sum::<usize>()
+            + self.router.pending.len();
+        let mean = outstanding as f64 / accepting.max(1) as f64;
+        let pressure = self.fleet.as_mut().expect("fleet").pressure(mean, live);
+        match pressure {
+            crate::coordinator::fleet::FleetPressure::Hold => {}
+            crate::coordinator::fleet::FleetPressure::ScaleOut => self.fleet_scale_out(q),
+            crate::coordinator::fleet::FleetPressure::ScaleIn => {
+                // least-loaded active instance drains; ties drain the
+                // youngest (LIFO elasticity, deterministic)
+                let cand = self
+                    .instances
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, inst)| inst.lifecycle == Lifecycle::Active)
+                    .min_by_key(|&(i, inst)| (inst.scheduler.load(), std::cmp::Reverse(i)))
+                    .map(|(i, _)| i);
+                if let Some(i) = cand {
+                    self.instances[i].lifecycle = Lifecycle::Draining;
+                    self.fleet_events.push(FleetEvent {
+                        t: self.now,
+                        instance: i,
+                        phase: FleetPhase::Drain,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Scale-out arbitration: price a replication round on the busiest
+    /// instance against a whole-instance spin-up, per instance-equivalent
+    /// of added capacity, and execute the cheaper option. Replication
+    /// flows through the normal in-flight plan path; spin-up deploys a new
+    /// instance that starts accepting traffic after the cold start.
+    fn fleet_scale_out(&mut self, q: &mut EventQueue) {
+        // option A: one Algorithm 1 round on the busiest accepting
+        // instance that still has replica budget and no plan in flight
+        let busiest = self
+            .instances
+            .iter()
+            .enumerate()
+            .filter(|(_, inst)| inst.accepting(self.now) && inst.inflight.is_none())
+            .max_by_key(|&(i, inst)| (inst.scheduler.load(), std::cmp::Reverse(i)))
+            .map(|(i, _)| i);
+        let mut replication = None;
+        if let Some(i) = busiest {
+            let held: usize = (0..self.instances[i].placement.n_layers)
+                .map(|l| self.instances[i].placement.degree(l) - 1)
+                .sum();
+            let remaining = self.cfg.replica_budget.saturating_sub(held);
+            if remaining > 0 {
+                let gamma = self.gamma();
+                let ops =
+                    ModuleOps::new(&self.cost, self.cfg.dtype_bytes, &format!("inst{i}"));
+                let up_cfg = ScaleUpConfig {
+                    gamma,
+                    min_vacancy: SCALE_UP_MIN_VACANCY,
+                    max_ops_per_round: remaining.min(4),
+                };
+                let up = scale_up(&ops, &self.cluster, &self.instances[i].placement, &up_cfg);
+                if !up.plan.is_empty() {
+                    replication = Some((i, up));
+                }
+            }
+        }
+        // option B: spin up a fresh single-device instance on the device
+        // with the most free memory that fits the whole model
+        let fc = self.fleet.as_ref().expect("fleet mode").cfg;
+        let ops = ModuleOps::new(&self.cost, self.cfg.dtype_bytes, "fleet-probe");
+        let inst_bytes = ops.module_bytes(ModuleKind::DecoderLayer)
+            * self.cfg.model.n_layers as f64
+            + ops.module_bytes(ModuleKind::Embed)
+            + ops.module_bytes(ModuleKind::LmHead);
+        let spin_dev = self
+            .cluster
+            .by_free_memory()
+            .into_iter()
+            .find(|&d| self.cluster.device(d).free_bytes() >= inst_bytes * 1.02);
+        // priced exactly as enacted: cold_start_s covers process launch +
+        // weight load (see FleetConfig), and spin_up gates activation on
+        // cold_start_s alone
+        let spin_cost = spin_dev.map(|_| fc.cold_start_s);
+        let rep_option = replication
+            .as_ref()
+            .map(|(_, up)| {
+                (
+                    up.cost.total.time_s,
+                    up.planned.len() as f64 / self.cfg.model.n_layers.max(1) as f64,
+                )
+            });
+        let choice = self.fleet.as_ref().expect("fleet").arbitrate(rep_option, spin_cost);
+        match choice {
+            ScaleOutChoice::Replicate => {
+                let (i, up) = replication.expect("arbitrated option exists");
+                self.scale.scale_ups += 1;
+                self.admit(i, up.plan, up.cost, None, q);
+            }
+            ScaleOutChoice::SpinUp => {
+                self.spin_up(spin_dev.expect("arbitrated option exists"), q);
+            }
+            ScaleOutChoice::Neither => {}
+        }
+    }
+
+    /// Deploy a new instance on `device`. Weights are resident (and its
+    /// devices billed) from now; the router starts offering it traffic
+    /// after the configured cold start.
+    fn spin_up(&mut self, device: usize, q: &mut EventQueue) {
+        let id = self.instances.len();
+        let fc = self.fleet.as_ref().expect("fleet mode").cfg;
+        let placement = Placement::single_device(self.cfg.model.n_layers, device);
+        let mut inst =
+            Instance::deploy(id, placement, fc.policy, &self.cfg, &self.cost, &mut self.cluster);
+        inst.active_after = self.now + fc.cold_start_s;
+        inst.reroute_shed = self.router.cfg.reroute_on_shed;
+        let active_after = inst.active_after;
+        let devs = inst.profile.device_set.clone();
+        for &d in &devs {
+            self.ledger.acquire(d);
+        }
+        self.bill_cache.push((inst.placement_rev, devs));
+        self.outstanding_routes.push(0);
+        self.instances.push(inst);
+        self.fleet_events.push(FleetEvent { t: self.now, instance: id, phase: FleetPhase::SpinUp });
+        // wake at activation so parked requests route promptly even when
+        // no other event happens to fire first
+        self.schedule_wake(id, active_after, q);
     }
 
     /// Admit a plan for in-flight execution: schedule its op events with
@@ -412,9 +760,13 @@ impl Simulation {
     }
 
     fn all_idle(&self) -> bool {
-        self.instances
-            .iter()
-            .all(|i| i.scheduler.is_idle() && i.busy_until.is_none() && i.inflight.is_none())
+        self.router.pending.is_empty()
+            // a routed-but-undelivered request still has its Routed event
+            // in the queue — the fleet is not idle until it lands
+            && self.outstanding_routes.iter().all(|&n| n == 0)
+            && self.instances.iter().all(|i| {
+                i.scheduler.is_idle() && i.busy_until.is_none() && i.inflight.is_none()
+            })
     }
 
     // ---- the event loop ---------------------------------------------------
@@ -439,6 +791,8 @@ impl Simulation {
             }
             self.now = ev.time;
             self.events_processed += 1;
+            // bill device-seconds up to this event at the pre-event rate
+            self.ledger.advance(self.now);
 
             match ev.kind {
                 EventKind::Arrival { request_idx } => {
@@ -449,9 +803,14 @@ impl Simulation {
                     if let Some(r) = trace.requests.get(next_req) {
                         q.push(r.arrival_s, EventKind::Arrival { request_idx: next_req });
                     }
-                    self.route(req);
+                    self.route_arrival(request_idx, req, &mut q);
+                }
+                EventKind::Routed { request_idx, instance } => {
+                    self.outstanding_routes[instance] -= 1;
+                    self.instances[instance].deliver(trace.requests[request_idx], 0.0);
                 }
                 EventKind::ControllerTick => {
+                    self.fleet_tick(&mut q);
                     self.controller_tick(&mut q);
                     q.push(self.now + self.cfg.controller_tick_s, EventKind::ControllerTick);
                 }
@@ -519,6 +878,13 @@ impl Simulation {
             }
             self.peak_mem = self.peak_mem.max(self.cluster.total_used_bytes());
 
+            // Coordinator follow-ups: re-route requests shed by OOM
+            // handling during this event, then retry parked requests —
+            // both before the readiness sweep so newly delivered work can
+            // start at this timestamp.
+            self.collect_shed();
+            self.drain_parked();
+
             // Readiness sweep: every idle instance with queued work gets a
             // chance to start, in ascending id order (deterministic). Idle
             // instances *without* work are skipped cheaply; instances with
@@ -532,13 +898,24 @@ impl Simulation {
                     self.try_start(i, &mut q);
                 }
             }
+            // The sweep can shed too (OOM on step start) — collect before
+            // leaving the timestamp so the requests are not stranded.
+            self.collect_shed();
+            // Reconcile device-seconds billing with any placement moves
+            // this event (or its sweep) made.
+            self.sync_billing();
         }
 
         let wall = self.now.max(1e-9);
+        self.ledger.advance(self.now);
         SimReport {
             duration_s: wall,
             events_processed: self.events_processed,
             steps_started: self.steps_started,
+            device_seconds: self.ledger.device_seconds(),
+            routes: self.router.routes,
+            reroutes: self.router.reroutes,
+            fleet_events: self.fleet_events,
             device_util: (0..self.cluster.n())
                 .map(|d| {
                     (

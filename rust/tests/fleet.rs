@@ -1,0 +1,262 @@
+//! Fleet control-plane contracts, tested through the public simulation API.
+//!
+//! * **Fleet golden replay** — the full fleet configuration (routing
+//!   policies, admission backpressure, shed re-routing, instance
+//!   spin-up/drain) must be byte-identically replayable per scenario and
+//!   per routing policy, exactly like the fixed-fleet kernel.
+//! * **Routing invariants** — every trace arrival is routed exactly once
+//!   (the `routes` counter equals the trace length no matter how much
+//!   backpressure parking happened), and conservation holds across
+//!   OOM-shed re-routes: no request ever completes twice.
+//! * **Lifecycle** — under burst pressure an elastic fleet spins new
+//!   instances up, and the device-seconds bill stays strictly below the
+//!   every-device-always-on ceiling.
+
+use std::collections::BTreeSet;
+
+use cocoserve::baselines;
+use cocoserve::cluster::{Cluster, DeviceSpec, GIB};
+use cocoserve::coordinator::{FleetConfig, FleetPhase, RoutePolicy, RouterConfig};
+use cocoserve::placement::Placement;
+use cocoserve::sim::{FleetSetup, SimConfig, SimPolicy, SimReport, Simulation};
+use cocoserve::workload::{Request, Trace};
+
+fn run_fleet(
+    n_seed: usize,
+    n_devices: usize,
+    policy: SimPolicy,
+    setup: FleetSetup,
+    trace: &Trace,
+    duration_s: f64,
+) -> SimReport {
+    let cfg = SimConfig::paper_13b();
+    let cluster = Cluster::homogeneous(n_devices, DeviceSpec::a100_40gb());
+    let placements: Vec<_> = (0..n_seed)
+        .map(|i| {
+            (
+                Placement::single_device(cfg.model.n_layers, i % n_devices),
+                policy,
+            )
+        })
+        .collect();
+    Simulation::with_fleet(cfg, cluster, placements, setup).run(trace, duration_s)
+}
+
+fn elastic_setup(route: RoutePolicy, policy: SimPolicy) -> FleetSetup {
+    FleetSetup {
+        router: RouterConfig {
+            policy: route,
+            admission_limit: Some(64),
+            reroute_on_shed: true,
+        },
+        fleet: Some(FleetConfig::elastic(2, 5, policy)),
+        ..Default::default()
+    }
+}
+
+/// Unique completed request ids across every monitor; panics on a
+/// duplicate (a request that completed twice would break conservation).
+fn completed_ids(r: &SimReport) -> BTreeSet<u64> {
+    let mut seen = BTreeSet::new();
+    for m in &r.monitors {
+        for c in m.completions() {
+            assert!(
+                seen.insert(c.request_id),
+                "request {} completed more than once",
+                c.request_id
+            );
+        }
+    }
+    seen
+}
+
+#[test]
+fn fleet_golden_replay_across_scenarios() {
+    for (name, trace) in Trace::scenario_sweep(18.0, 12.0, 91) {
+        let setup = elastic_setup(RoutePolicy::KvHeadroom, baselines::cocoserve(32));
+        let a = run_fleet(2, 5, baselines::cocoserve(32), setup, &trace, 12.0);
+        let b = run_fleet(2, 5, baselines::cocoserve(32), setup, &trace, 12.0);
+        assert_eq!(
+            a.to_json().to_string(),
+            b.to_json().to_string(),
+            "fleet scenario `{name}` not replay-deterministic"
+        );
+        assert!(a.total_completed() > 0, "fleet scenario `{name}` served nothing");
+    }
+}
+
+#[test]
+fn fleet_golden_replay_holds_for_every_route_policy() {
+    let trace = Trace::burst(20.0, 12.0, 17);
+    for policy in [
+        RoutePolicy::RoundRobin,
+        RoutePolicy::LeastOutstanding,
+        RoutePolicy::KvHeadroom,
+    ] {
+        let setup = elastic_setup(policy, baselines::cocoserve(32));
+        let a = run_fleet(2, 5, baselines::cocoserve(32), setup, &trace, 12.0)
+            .to_json()
+            .to_string();
+        let b = run_fleet(2, 5, baselines::cocoserve(32), setup, &trace, 12.0)
+            .to_json()
+            .to_string();
+        assert_eq!(a, b, "route policy {policy:?} not replay-deterministic");
+    }
+}
+
+#[test]
+fn every_arrival_is_routed_exactly_once() {
+    // A tight admission limit forces the router to park requests; parked
+    // requests are first-time routes when they finally deliver, so the
+    // counter still comes out to exactly one route per arrival — and at
+    // light load everything drains.
+    let trace = Trace::steady(10.0, 12.0, 33);
+    let setup = FleetSetup {
+        router: RouterConfig {
+            policy: RoutePolicy::LeastOutstanding,
+            admission_limit: Some(4),
+            reroute_on_shed: false,
+        },
+        ..Default::default()
+    };
+    let r = run_fleet(2, 2, baselines::vllm_like(16), setup, &trace, 12.0);
+    assert_eq!(r.routes, trace.len() as u64, "each arrival routed exactly once");
+    assert_eq!(r.reroutes, 0);
+    let ids = completed_ids(&r);
+    assert_eq!(ids.len(), trace.len(), "light load must fully drain");
+    assert_eq!(r.total_completed(), trace.len());
+}
+
+#[test]
+fn oom_shed_requests_reroute_without_double_completion() {
+    // Memory-tight HFT fleet: FailBatch OOM handling sheds whole batches;
+    // in fleet mode those requests go back through the router. Every
+    // arrival is still routed exactly once as a first-time route, the
+    // shed deliveries show up as reroutes, and no request completes on
+    // two instances.
+    let cfg = SimConfig::paper_13b();
+    let mut cluster = Cluster::homogeneous(2, DeviceSpec::a100_40gb());
+    for d in 0..2 {
+        cluster.device_mut(d).alloc("co-tenant", 12.0 * GIB).unwrap();
+    }
+    let policy = baselines::hft(16);
+    let placements: Vec<_> = (0..2)
+        .map(|i| (Placement::single_device(cfg.model.n_layers, i), policy))
+        .collect();
+    let setup = FleetSetup {
+        router: RouterConfig {
+            policy: RoutePolicy::LeastOutstanding,
+            admission_limit: None,
+            reroute_on_shed: true,
+        },
+        ..Default::default()
+    };
+    let trace = Trace::burst(30.0, 15.0, 29);
+    let r = Simulation::with_fleet(cfg, cluster, placements, setup).run(&trace, 15.0);
+    assert_eq!(r.routes, trace.len() as u64, "first-time routes == arrivals");
+    assert!(r.reroutes > 0, "memory-tight HFT fleet must shed and re-route");
+    let ids = completed_ids(&r); // panics on any double completion
+    assert!(ids.len() <= trace.len());
+    assert!(
+        r.total_completed() >= trace.len() * 8 / 10,
+        "re-routing must keep most requests alive: {}/{}",
+        r.total_completed(),
+        trace.len()
+    );
+}
+
+#[test]
+fn burst_pressure_spins_instances_up_and_bills_less_than_static() {
+    // Elastic fleet with module replication disabled (replica_budget 0):
+    // the arbitration's only capacity option is whole-instance spin-up,
+    // so burst pressure must produce SpinUp fleet events. The
+    // device-seconds bill stays strictly below the every-device-always-on
+    // ceiling that a static over-provisioned deployment would pay.
+    let mut cfg = SimConfig::paper_13b();
+    cfg.replica_budget = 0;
+    let n_devices = 6;
+    let cluster = Cluster::homogeneous(n_devices, DeviceSpec::a100_40gb());
+    let policy = baselines::cocoserve_no_autoscale(32);
+    let placements: Vec<_> = (0..2)
+        .map(|i| (Placement::single_device(cfg.model.n_layers, i), policy))
+        .collect();
+    let mut fleet = FleetConfig::elastic(2, 6, policy);
+    fleet.cooldown_ticks = 1;
+    fleet.scale_out_queue = 12.0;
+    let setup = FleetSetup {
+        router: RouterConfig {
+            policy: RoutePolicy::LeastOutstanding,
+            admission_limit: None,
+            reroute_on_shed: true,
+        },
+        fleet: Some(fleet),
+        ..Default::default()
+    };
+    let trace = Trace::burst(30.0, 30.0, 57);
+    let r = Simulation::with_fleet(cfg, cluster, placements, setup).run(&trace, 30.0);
+    assert!(
+        r.fleet_events.iter().any(|e| e.phase == FleetPhase::SpinUp),
+        "burst pressure must spin up at least one instance: {:?}",
+        r.fleet_events
+    );
+    let ceiling = n_devices as f64 * r.duration_s;
+    assert!(
+        r.device_seconds < ceiling,
+        "elastic bill {} must undercut the static ceiling {}",
+        r.device_seconds,
+        ceiling
+    );
+    assert!(r.device_seconds > 0.0);
+}
+
+#[test]
+fn a_single_request_trace_completes() {
+    // Regression: delivery happens via a same-timestamp Routed event, so
+    // the kernel must count routed-but-undelivered requests as live —
+    // otherwise the run loop breaks before the lone arrival lands.
+    let trace = Trace {
+        requests: vec![Request {
+            id: 0,
+            arrival_s: 0.5,
+            prompt_tokens: 16,
+            output_tokens: 4,
+        }],
+    };
+    let r = run_fleet(2, 2, baselines::vllm_like(16), FleetSetup::default(), &trace, 5.0);
+    assert_eq!(r.total_completed(), 1, "the lone arrival must be delivered and served");
+    assert_eq!(r.routes, 1);
+}
+
+#[test]
+fn default_setup_reproduces_the_fixed_fleet_kernel() {
+    // Simulation::new must behave exactly like with_fleet + defaults —
+    // the legacy least-outstanding routing with no lifecycle management.
+    let trace = Trace::steady(15.0, 10.0, 3);
+    let cfg = SimConfig::paper_13b();
+    let make_placements = |cfg: &SimConfig| {
+        (0..2)
+            .map(|i| {
+                (
+                    Placement::single_device(cfg.model.n_layers, i),
+                    baselines::vllm_like(16),
+                )
+            })
+            .collect::<Vec<_>>()
+    };
+    let a = Simulation::new(
+        cfg.clone(),
+        Cluster::homogeneous(2, DeviceSpec::a100_40gb()),
+        make_placements(&cfg),
+    )
+    .run(&trace, 10.0);
+    let b = Simulation::with_fleet(
+        cfg.clone(),
+        Cluster::homogeneous(2, DeviceSpec::a100_40gb()),
+        make_placements(&cfg),
+        FleetSetup::default(),
+    )
+    .run(&trace, 10.0);
+    assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    assert!(a.fleet_events.is_empty(), "no lifecycle events without a fleet config");
+    assert_eq!(a.reroutes, 0);
+}
