@@ -82,6 +82,7 @@ fn fleet_setup(policy: SimPolicy) -> FleetSetup {
             t_up: 2.0,
             ..Default::default()
         },
+        predictor: None,
     }
 }
 

@@ -17,10 +17,12 @@
 //!
 //! and writes the whole document to `BENCH_fleet.json` at the repo root.
 //!
-//! Before any simulation runs, a targeted probe asserts the compiled
-//! step-cost path (`PlacementProfile::{prefill,decode}_step_time`)
-//! performs **zero** heap allocations — the tentpole contract of the
-//! compiled-profile refactor.
+//! Before any simulation runs, two targeted probes assert that the
+//! compiled step-cost path (`PlacementProfile::{prefill,decode}_step_time`)
+//! and the predictive forecaster's observe/advance/forecast path
+//! (`forecast::TrafficForecaster`) perform **zero** heap allocations —
+//! the zero-alloc contracts of the compiled-profile refactor and the
+//! predictive control plane.
 //!
 //! ```bash
 //! cargo bench --bench fleet_scale                 # full fleet (~minutes)
@@ -38,11 +40,11 @@ use std::time::Instant;
 
 use cocoserve::baselines;
 use cocoserve::cluster::{Cluster, DeviceSpec};
+use cocoserve::forecast::{BurstDetector, Ewma, Holt, HoltWinters, TrafficForecaster};
 use cocoserve::placement::{Placement, PlacementProfile};
 use cocoserve::sim::{SimConfig, SimReport, Simulation};
 use cocoserve::util::bench::Table;
 use cocoserve::util::json::{self, Json};
-use cocoserve::util::stats::P2Quantile;
 use cocoserve::workload::Trace;
 
 // ---- counting allocator ----------------------------------------------------
@@ -161,6 +163,42 @@ fn assert_step_cost_zero_alloc(cfg: &SimConfig) -> u64 {
     calls
 }
 
+/// Assert the forecaster's observe/advance/forecast path performs zero
+/// heap allocations — the predictive control plane rides the same
+/// zero-alloc discipline as the compiled step costs. Returns the number
+/// of probed updates (for the report).
+fn assert_forecaster_zero_alloc() -> u64 {
+    let mut f = TrafficForecaster::new(
+        1.0,
+        Ewma::new(0.3),
+        Holt::new(0.4, 0.2),
+        HoltWinters::new(0.4, 0.2, 0.3, 60), // seasonal table allocated here
+        BurstDetector::new(0.05, 3.0),
+    );
+    // warm up: prime every estimator and close a few buckets
+    for i in 0..64 {
+        f.observe(i as f64 * 0.25);
+    }
+    f.advance(20.0);
+    std::hint::black_box(f.forecast(8.0));
+    let updates = 4096u64;
+    let before = allocs();
+    for i in 0..updates {
+        let t = 20.0 + i as f64 * 0.05; // ~80 arrivals/bucket + gap closes
+        f.observe(t);
+        std::hint::black_box(f.forecast(8.0));
+        std::hint::black_box(f.forecast(1.0));
+    }
+    f.advance(20.0 + updates as f64 * 0.05 + 30.0); // idle-gap bucket closes
+    std::hint::black_box(f.mae());
+    let delta = allocs() - before;
+    assert_eq!(
+        delta, 0,
+        "forecaster update path allocated {delta} times over {updates} observes"
+    );
+    updates
+}
+
 // ---- per-scenario measurement ----------------------------------------------
 
 struct ScenarioResult {
@@ -210,19 +248,11 @@ fn run_scenario(fleet: &FleetConfig, name: &'static str, trace: &Trace) -> Scena
     let wall_s = t0.elapsed().as_secs_f64();
     let allocs_total = allocs() - allocs_before;
 
-    // Percentiles via the streaming P² estimator: no merged latency
-    // vector is materialized and nothing is sorted. (The monitors still
-    // hold their completion records — the golden-replay metrics are
-    // computed from them, so that retention stays.)
-    let mut p50 = P2Quantile::new(0.50);
-    let mut p99 = P2Quantile::new(0.99);
-    for m in &report.monitors {
-        for c in m.completions() {
-            p50.add(c.e2e_latency());
-            p99.add(c.e2e_latency());
-        }
-    }
-
+    // Percentiles via SimReport's streaming P² path: one pass, no merged
+    // latency vector, nothing sorted. (The monitors still hold their
+    // completion records — the golden-replay metrics are computed from
+    // them, so that retention stays.)
+    let quantiles = report.latency_p2s(&[0.50, 0.99]);
     ScenarioResult {
         name,
         requests: trace.len(),
@@ -231,8 +261,8 @@ fn run_scenario(fleet: &FleetConfig, name: &'static str, trace: &Trace) -> Scena
         steps: report.steps_started,
         wall_s,
         allocs_total,
-        p50_s: p50.value(),
-        p99_s: p99.value(),
+        p50_s: quantiles[0],
+        p99_s: quantiles[1],
         scale_ups: report.scale_ups,
         scale_downs: report.scale_downs,
     }
@@ -249,7 +279,12 @@ fn main() {
     );
 
     let probe_calls = assert_step_cost_zero_alloc(&SimConfig::paper_13b());
-    println!("zero-alloc probe: {probe_calls} step-cost calls, 0 heap allocations ✓\n");
+    println!("zero-alloc probe: {probe_calls} step-cost calls, 0 heap allocations ✓");
+    let forecast_updates = assert_forecaster_zero_alloc();
+    println!(
+        "zero-alloc probe: {forecast_updates} forecaster observe/forecast rounds, \
+         0 heap allocations ✓\n"
+    );
 
     let sweep = Trace::scenario_sweep(fleet.rps(), fleet.duration_s, 4096);
     let mut results = Vec::new();
@@ -341,6 +376,7 @@ fn main() {
             "zero_alloc_probe",
             json::obj(vec![
                 ("allocations", json::num(0.0)),
+                ("forecaster_updates", json::num(forecast_updates as f64)),
                 ("step_cost_calls", json::num(probe_calls as f64)),
             ]),
         ),

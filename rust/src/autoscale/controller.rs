@@ -43,16 +43,23 @@ pub struct ControllerInputs {
 /// Raw threshold decision for one tick (stage 1).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Decision {
+    /// Thresholds in the healthy band (or cooling down) — no action.
     None,
+    /// Vacancy above T_up with a clean SLO: harvest idle resources.
     ScaleUp,
+    /// SLO violations or OOM: relieve the named device under the given
+    /// pressure kind.
     ScaleDown { device: usize, pressure: Pressure },
 }
 
 /// A threshold decision elaborated into an executable plan (stage 2).
 #[derive(Debug)]
 pub enum PlannedDecision {
+    /// Nothing to do (or the decision planned to a no-op).
     None,
+    /// An Algorithm 1 replication plan.
     ScaleUp(ScaleUpPlan),
+    /// An Algorithm 2 relief plan plus its batch decision.
     ScaleDown(ScaleDownPlan),
 }
 
@@ -60,10 +67,15 @@ pub enum PlannedDecision {
 /// read-only from the deployment being controlled. Ownership rule:
 /// planners never see `&mut Cluster` — the controller cannot mutate.
 pub struct PlanCtx<'a> {
+    /// Module sizing + transfer costing for the controlled instance.
     pub ops: &'a ModuleOps<'a>,
+    /// The live device ledgers (read-only).
     pub cluster: &'a Cluster,
+    /// The instance's live placement (read-only).
     pub placement: &'a Placement,
+    /// Algorithm 1 knobs for the scale-up planner.
     pub up_cfg: ScaleUpConfig,
+    /// Algorithm 2 knobs for the scale-down planner.
     pub down_cfg: ScaleDownConfig,
     /// Current serving batch size (phase-3 scale-down input).
     pub batch_size: usize,
@@ -94,16 +106,19 @@ impl Default for ControllerConfig {
 /// Stateful threshold controller.
 #[derive(Debug, Clone)]
 pub struct Controller {
+    /// Threshold configuration this controller was built with.
     pub cfg: ControllerConfig,
     cooldown: u32,
     decisions: u64,
 }
 
 impl Controller {
+    /// Build a controller for the given thresholds.
     pub fn new(cfg: ControllerConfig) -> Controller {
         Controller { cfg, cooldown: 0, decisions: 0 }
     }
 
+    /// Non-`None` decisions made so far.
     pub fn decisions_made(&self) -> u64 {
         self.decisions
     }

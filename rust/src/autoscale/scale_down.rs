@@ -30,7 +30,9 @@ use crate::plan::{ModuleOp, PlanCost, ScalePlan};
 /// §3.3 module filter (memory → KV cache first; compute → attn/FFN).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Pressure {
+    /// Memory-dominated: relieve resident bytes first.
     Memory,
+    /// Compute-dominated: relieve FLOPs-dense modules first.
     Compute,
 }
 
@@ -59,9 +61,13 @@ impl Default for ScaleDownConfig {
 /// One remediation step planned by Algorithm 2 (for logs + tests + benches).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Action {
+    /// Phase 1: a module planned to move off the violating device.
     Migrated { module: ModuleId, from: usize, to: usize },
+    /// Phase 2: a co-located replica planned for eviction.
     Evicted { layer: usize, device: usize },
+    /// Phase 3: the serving batch stepped down by Δbs.
     BatchReduced { from: usize, to: usize },
+    /// Phase 3 companion: pending work offloaded from the device.
     Offloaded { device: usize },
 }
 
@@ -70,6 +76,7 @@ pub enum Action {
 pub struct ScaleDownPlan {
     /// Executable module ops (phases 1–2); phase 3 is batch-only.
     pub plan: ScalePlan,
+    /// Every remediation step planned, in phase order.
     pub actions: Vec<Action>,
     /// Did the violation predicate clear on the planned end state?
     pub resolved: bool,

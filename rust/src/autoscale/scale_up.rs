@@ -48,7 +48,9 @@ pub struct ScaleUpPlan {
     pub plan: ScalePlan,
     /// (layer, destination device) for each planned replication.
     pub planned: Vec<(usize, usize)>,
+    /// Eq. 4 speedup of the placement before the round.
     pub speedup_before: f64,
+    /// Eq. 4 speedup the placement reaches when the plan lands.
     pub speedup_after: f64,
     /// Dry-run cost against the planning-time state — equals the executed
     /// cost when the plan is applied to that same state.

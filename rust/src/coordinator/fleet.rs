@@ -30,6 +30,7 @@
 //! only while it exists. `benches/fig1_cost_availability.rs` sweeps the
 //! scenario library comparing the two at equal SLO attainment.
 
+use crate::monitor::FleetInputs;
 use crate::sim::SimPolicy;
 
 /// Fleet-autoscaling configuration.
@@ -120,11 +121,13 @@ impl FleetController {
         self.actions
     }
 
-    /// Stage 1: classify this tick's pressure. `mean_outstanding` is the
-    /// fleet-wide outstanding-request count (router-parked included)
-    /// divided by the number of traffic-accepting instances; `live` counts
-    /// active + draining instances (the spin-up/drain bounds).
-    pub fn pressure(&mut self, mean_outstanding: f64, live: usize) -> FleetPressure {
+    /// Stage 1: classify this tick's pressure from the fleet telemetry
+    /// window ([`FleetInputs`] — mean outstanding per traffic-accepting
+    /// instance, router-parked requests included; `live` counts active +
+    /// draining instances, the spin-up/drain bounds).
+    pub fn pressure(&mut self, inputs: &FleetInputs) -> FleetPressure {
+        let mean_outstanding = inputs.mean_outstanding();
+        let live = inputs.live;
         if self.cooldown > 0 {
             self.cooldown -= 1;
             // keep observing idleness through the cooldown so a quiet
@@ -154,6 +157,29 @@ impl FleetController {
             self.idle_ticks = 0;
         }
         FleetPressure::Hold
+    }
+
+    /// Is the post-action cooldown still running? Predictive proposals
+    /// respect it — reactive and predictive actions share one cooldown so
+    /// the two controllers cannot double-fire within a window.
+    pub fn cooling_down(&self) -> bool {
+        self.cooldown > 0
+    }
+
+    /// Arm the shared cooldown for an externally-enacted capacity action
+    /// (a predictive proposal the kernel executed). Counts toward
+    /// [`FleetController::actions_taken`] like any lifecycle action.
+    pub fn arm_cooldown(&mut self) {
+        self.arm();
+    }
+
+    /// Undo the arm for an action an external arbiter vetoed before it
+    /// happened (a forecast-gated drain): the cooldown is released and
+    /// the action un-counted, so a vetoed no-op can neither suppress the
+    /// next controller decision nor inflate the diagnostics.
+    pub fn cancel_action(&mut self) {
+        self.cooldown = 0;
+        self.actions = self.actions.saturating_sub(1);
     }
 
     /// Stage 2 of scale-out: pick the cheaper capacity per dry-run cost.
@@ -299,37 +325,88 @@ mod tests {
         FleetController::new(cfg)
     }
 
+    /// A telemetry window whose mean outstanding per accepting instance
+    /// comes out to exactly `mean` over `live` instances.
+    fn window(mean: f64, live: usize) -> FleetInputs {
+        FleetInputs {
+            live,
+            accepting: live,
+            outstanding: (mean * live as f64).round() as usize,
+            parked: 0,
+        }
+    }
+
     #[test]
     fn oversubscription_scales_out_with_cooldown() {
         let mut c = ctl();
-        assert_eq!(c.pressure(30.0, 3), FleetPressure::ScaleOut);
-        assert_eq!(c.pressure(30.0, 3), FleetPressure::Hold, "cooling down");
-        assert_eq!(c.pressure(30.0, 3), FleetPressure::ScaleOut);
+        assert_eq!(c.pressure(&window(30.0, 3)), FleetPressure::ScaleOut);
+        assert!(c.cooling_down());
+        assert_eq!(c.pressure(&window(30.0, 3)), FleetPressure::Hold, "cooling down");
+        assert!(!c.cooling_down());
+        assert_eq!(c.pressure(&window(30.0, 3)), FleetPressure::ScaleOut);
         assert_eq!(c.actions_taken(), 2);
     }
 
     #[test]
     fn max_instances_bounds_scale_out() {
         let mut c = ctl();
-        assert_eq!(c.pressure(99.0, 6), FleetPressure::Hold);
+        assert_eq!(c.pressure(&window(99.0, 6)), FleetPressure::Hold);
     }
 
     #[test]
     fn sustained_idleness_drains_but_respects_min() {
         let mut c = ctl();
-        assert_eq!(c.pressure(0.5, 4), FleetPressure::Hold); // idle tick 1
-        assert_eq!(c.pressure(0.5, 4), FleetPressure::ScaleIn); // tick 2
-        assert_eq!(c.pressure(0.5, 2), FleetPressure::Hold, "cooldown");
-        assert_eq!(c.pressure(0.5, 2), FleetPressure::Hold, "at min_instances");
+        assert_eq!(c.pressure(&window(0.5, 4)), FleetPressure::Hold); // idle tick 1
+        assert_eq!(c.pressure(&window(0.5, 4)), FleetPressure::ScaleIn); // tick 2
+        assert_eq!(c.pressure(&window(0.5, 2)), FleetPressure::Hold, "cooldown");
+        assert_eq!(c.pressure(&window(0.5, 2)), FleetPressure::Hold, "at min_instances");
     }
 
     #[test]
     fn load_blip_resets_the_idle_counter() {
         let mut c = ctl();
-        assert_eq!(c.pressure(0.5, 4), FleetPressure::Hold);
-        assert_eq!(c.pressure(10.0, 4), FleetPressure::Hold); // healthy band
-        assert_eq!(c.pressure(0.5, 4), FleetPressure::Hold); // counter restarted
-        assert_eq!(c.pressure(0.5, 4), FleetPressure::ScaleIn);
+        assert_eq!(c.pressure(&window(0.5, 4)), FleetPressure::Hold);
+        assert_eq!(c.pressure(&window(10.0, 4)), FleetPressure::Hold); // healthy band
+        assert_eq!(c.pressure(&window(0.5, 4)), FleetPressure::Hold); // counter restarted
+        assert_eq!(c.pressure(&window(0.5, 4)), FleetPressure::ScaleIn);
+    }
+
+    #[test]
+    fn parked_requests_count_toward_pressure() {
+        let mut c = ctl();
+        // 10 outstanding over 2 accepting = 5 (healthy band)…
+        let mut w = window(5.0, 2);
+        assert_eq!(c.pressure(&w), FleetPressure::Hold);
+        // …but 40 more parked at the router pushes the mean to 25
+        w.parked = 40;
+        assert_eq!(c.pressure(&w), FleetPressure::ScaleOut);
+    }
+
+    #[test]
+    fn external_actions_arm_the_shared_cooldown() {
+        let mut c = ctl();
+        assert!(!c.cooling_down());
+        c.arm_cooldown();
+        assert!(c.cooling_down());
+        assert_eq!(c.actions_taken(), 1);
+        // the armed cooldown suppresses the next reactive decision
+        assert_eq!(c.pressure(&window(30.0, 3)), FleetPressure::Hold);
+    }
+
+    #[test]
+    fn cancelled_actions_release_the_cooldown_and_uncount() {
+        let mut c = ctl();
+        // an idle fleet decides to drain (arms cooldown, counts action)…
+        assert_eq!(c.pressure(&window(0.5, 4)), FleetPressure::Hold);
+        assert_eq!(c.pressure(&window(0.5, 4)), FleetPressure::ScaleIn);
+        assert!(c.cooling_down());
+        assert_eq!(c.actions_taken(), 1);
+        // …but the drain is vetoed before it happens
+        c.cancel_action();
+        assert!(!c.cooling_down());
+        assert_eq!(c.actions_taken(), 0);
+        // the controller is immediately free to decide again
+        assert_eq!(c.pressure(&window(30.0, 3)), FleetPressure::ScaleOut);
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! Horizon capacity model: predicted arrival rate → required capacity.
+//!
+//! The predictive controller needs one conversion: "the forecaster says
+//! λ requests/second will arrive `h` seconds from now — how many
+//! instance-equivalents of serving capacity does that take, and how many
+//! layer replicas (or whole instances) close the gap?" This module does
+//! that conversion by **inverting the costing the kernel already
+//! enacts**, not by introducing a parallel formula:
+//!
+//! * the sustainable per-instance request rate μ comes from the compiled
+//!   roofline step costs ([`crate::placement::PlacementProfile`]
+//!   `prefill_step_time` / `decode_step_time` — the exact arithmetic a
+//!   serving step is charged in the simulator), amortized over a mean
+//!   request's one prefill + ō decode steps;
+//! * the capacity contribution of a replicated placement is its Eq. 4
+//!   speedup ([`crate::autoscale::speedup::s_homo_from_norm`] — the same
+//!   closed form Algorithm 1 maximizes), and replica requirements come
+//!   from inverting that closed form.
+
+use crate::autoscale::speedup::s_homo_from_norm;
+use crate::model::cost::CostModel;
+use crate::placement::PlacementProfile;
+
+/// Invert Eq. 4 for a uniform strategy: the smallest per-layer degree
+/// `p` with `S_homo(γ, [p; n]) ≥ target`. Returns 1 for targets ≤ 1;
+/// saturates at `usize::MAX` when γ alone caps the speedup below the
+/// target (communication dominates — no degree reaches it).
+pub fn uniform_degree_for_speedup(gamma: f64, target: f64) -> usize {
+    if target <= 1.0 {
+        return 1;
+    }
+    // S = 1 / (γ + (1−γ)/p)  ⇒  p = (1−γ) / (1/S − γ)
+    let denom = 1.0 / target - gamma;
+    if denom <= 0.0 {
+        return usize::MAX;
+    }
+    ((1.0 - gamma) / denom).ceil() as usize
+}
+
+/// Invert Eq. 4 incrementally: how many single-replica additions (each
+/// taking one degree-1 layer to degree 2, the cheapest Algorithm 1 move,
+/// shrinking ‖1 ⊘ P‖₁ by ½) does it take to lift a placement with the
+/// given norm to `target` speedup? Saturates at `n_layers` (every layer
+/// already at degree ≥ 2 would need deeper replication — the caller
+/// falls back to whole-instance scaling there).
+pub fn replicas_for_speedup(
+    gamma: f64,
+    n_layers: usize,
+    inv_p_norm: f64,
+    target: f64,
+) -> usize {
+    if target <= s_homo_from_norm(gamma, n_layers, inv_p_norm) {
+        return 0;
+    }
+    // target norm from Eq. 4: S = 1/(γ + (1−γ)/n · norm)
+    let denom = 1.0 / target - gamma;
+    if denom <= 0.0 {
+        return n_layers;
+    }
+    let target_norm = n_layers as f64 * denom / (1.0 - gamma);
+    let deficit = inv_p_norm - target_norm;
+    ((deficit / 0.5).ceil().max(0.0) as usize).min(n_layers)
+}
+
+/// The horizon capacity model: a predicted rate in, required
+/// instance-equivalents (and the replica count closing a fractional
+/// deficit) out. Built once per simulation from the shared
+/// [`CostModel`]; see the module docs for the shared-costing argument.
+#[derive(Debug, Clone, Copy)]
+pub struct CapacityModel {
+    /// Sustainable request rate of one unreplicated reference instance
+    /// (requests/second), from the compiled roofline step costs.
+    pub mu_base_rps: f64,
+    /// Eq. 4 cluster coefficient γ.
+    pub gamma: f64,
+    /// Decoder-layer count of the served model.
+    pub n_layers: usize,
+    /// Fraction of μ the planner is willing to load an instance to —
+    /// the calibration margin absorbing contention, batch underfill and
+    /// prompt-length tails the mean-request amortization cannot see.
+    pub target_util: f64,
+}
+
+impl CapacityModel {
+    /// Derive μ from a reference placement's compiled step costs: a mean
+    /// request occupies one prefill step (at `mean_prompt` tokens) and
+    /// `mean_output` decode steps (at the mean decode context), shared
+    /// across a `batch`-wide cohort.
+    pub fn from_profile(
+        cost: &CostModel,
+        profile: &PlacementProfile,
+        dtype_bytes: usize,
+        batch: usize,
+        mean_prompt: usize,
+        mean_output: usize,
+        gamma: f64,
+        target_util: f64,
+    ) -> CapacityModel {
+        let batch = batch.max(1);
+        let prefill = profile.prefill_step_time(cost, dtype_bytes, batch, mean_prompt.max(1));
+        let mean_ctx = (mean_prompt + mean_output / 2).max(1);
+        let decode = profile.decode_step_time(cost, dtype_bytes, batch, mean_ctx);
+        let per_cohort = prefill + mean_output as f64 * decode;
+        CapacityModel {
+            mu_base_rps: batch as f64 / per_cohort.max(1e-9),
+            gamma,
+            n_layers: profile.n_layers,
+            target_util: target_util.clamp(0.05, 1.0),
+        }
+    }
+
+    /// Instance-equivalents needed to serve `rps` at the target
+    /// utilization.
+    pub fn required_equivalents(&self, rps: f64) -> f64 {
+        rps.max(0.0) / (self.mu_base_rps * self.target_util).max(1e-9)
+    }
+
+    /// Capacity contribution of one instance with the given
+    /// ‖1 ⊘ P‖₁, in instance-equivalents: its Eq. 4 speedup (an
+    /// unreplicated placement contributes exactly 1.0).
+    pub fn equivalents_of(&self, inv_p_norm: f64) -> f64 {
+        s_homo_from_norm(self.gamma, self.n_layers, inv_p_norm)
+    }
+
+    /// Replicas that lift an instance with the given norm by
+    /// `deficit_eq` instance-equivalents (via the Eq. 4 inversion).
+    pub fn replicas_for_deficit(&self, inv_p_norm: f64, deficit_eq: f64) -> usize {
+        let target = self.equivalents_of(inv_p_norm) + deficit_eq.max(0.0);
+        replicas_for_speedup(self.gamma, self.n_layers, inv_p_norm, target)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::placement::Placement;
+    use crate::sim::SimConfig;
+
+    fn model() -> CapacityModel {
+        let cfg = SimConfig::paper_13b();
+        let cost = cfg.cost_model();
+        let cluster = Cluster::paper_testbed();
+        let pl = Placement::single_device(cfg.model.n_layers, 0);
+        let profile = PlacementProfile::compile(&pl, &cluster, 0);
+        CapacityModel::from_profile(&cost, &profile, cfg.dtype_bytes, 16, 96, 64, 0.05, 0.6)
+    }
+
+    #[test]
+    fn mu_lands_in_a_plausible_band_for_13b_on_a100() {
+        let m = model();
+        // a 13B instance on one A100 sustains single-digit-to-tens rps
+        assert!(
+            (1.0..200.0).contains(&m.mu_base_rps),
+            "mu {} rps out of band",
+            m.mu_base_rps
+        );
+    }
+
+    #[test]
+    fn required_equivalents_is_linear_and_clamped() {
+        let m = model();
+        let one = m.required_equivalents(m.mu_base_rps * m.target_util);
+        assert!((one - 1.0).abs() < 1e-9, "exactly μ·util needs 1.0 eq, got {one}");
+        assert!((m.required_equivalents(2.0 * m.mu_base_rps * m.target_util) - 2.0).abs() < 1e-9);
+        assert_eq!(m.required_equivalents(-5.0), 0.0);
+    }
+
+    #[test]
+    fn uniform_degree_inversion_roundtrips_eq4() {
+        for &gamma in &[0.0, 0.05, 0.2] {
+            for &target in &[1.0, 1.5, 2.0, 3.5] {
+                let p = uniform_degree_for_speedup(gamma, target);
+                if p == usize::MAX {
+                    continue;
+                }
+                let n = 40;
+                let got = s_homo_from_norm(gamma, n, n as f64 / p as f64);
+                assert!(
+                    got + 1e-9 >= target,
+                    "γ={gamma} target={target}: degree {p} gives only {got}"
+                );
+                if p > 1 {
+                    let under = s_homo_from_norm(gamma, n, n as f64 / (p - 1) as f64);
+                    assert!(under < target, "degree {} already reaches {target}", p - 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gamma_bound_saturates_the_inversion() {
+        // γ = 0.5 caps S below 2: no degree reaches it
+        assert_eq!(uniform_degree_for_speedup(0.5, 2.5), usize::MAX);
+        assert_eq!(uniform_degree_for_speedup(0.5, 1.0), 1);
+    }
+
+    #[test]
+    fn replicas_for_speedup_roundtrips_eq4() {
+        let (gamma, n) = (0.05, 40usize);
+        let norm = n as f64; // unreplicated
+        for &target in &[1.05, 1.2, 1.4] {
+            let k = replicas_for_speedup(gamma, n, norm, target);
+            assert!(k > 0 && k <= n, "k={k}");
+            let got = s_homo_from_norm(gamma, n, norm - 0.5 * k as f64);
+            assert!(got + 1e-9 >= target, "{k} replicas give {got} < {target}");
+            let under = s_homo_from_norm(gamma, n, norm - 0.5 * (k - 1) as f64);
+            assert!(under < target, "{} replicas already reach {target}", k - 1);
+        }
+        assert_eq!(replicas_for_speedup(gamma, n, norm, 0.9), 0, "already satisfied");
+        // unreachable targets saturate at n_layers
+        assert_eq!(replicas_for_speedup(0.5, n, norm, 3.0), n);
+    }
+
+    #[test]
+    fn capacity_model_replica_helper_matches_inversion() {
+        let m = model();
+        let norm = m.n_layers as f64;
+        let k = m.replicas_for_deficit(norm, 0.25);
+        let lifted = m.equivalents_of(norm - 0.5 * k as f64);
+        assert!(lifted + 1e-9 >= 1.25, "{k} replicas lift to {lifted}");
+        assert_eq!(m.replicas_for_deficit(norm, 0.0), 0);
+    }
+}

@@ -1,0 +1,579 @@
+//! Streaming traffic estimators — the O(1)-memory signal path of the
+//! predictive control plane.
+//!
+//! Every estimator consumes the arrival stream as a sequence of
+//! fixed-width *rate buckets* (arrivals per second over `bucket_s`
+//! windows) and is pure `f64` arithmetic over that sequence: no
+//! allocation on the update path (the Holt-Winters seasonal table and the
+//! oracle rate table are allocated once, at construction / configuration
+//! time), no clocks, no randomness. Two runs over the same arrival
+//! sequence therefore produce bit-identical forecasts — the property the
+//! fleet golden-replay suite depends on, and the reason the
+//! `fleet_scale` bench's counting-allocator probe can assert the
+//! observe/forecast path allocation-free.
+//!
+//! Four estimators cover the scenario library's shapes:
+//!
+//! * [`Ewma`] — exponentially-weighted rate (steady traffic),
+//! * [`Holt`] — double exponential smoothing, level + trend (ramps),
+//! * [`HoltWinters`] — additive seasonality over a configurable period
+//!   (diurnal cycles),
+//! * [`BurstDetector`] — a z-score detector over exponentially-weighted
+//!   mean/variance (flash crowds the smoothers are too slow for).
+//!
+//! [`TrafficForecaster`] composes them behind one `observe`/`forecast`
+//! interface, tracks each estimator's one-bucket-ahead mean absolute
+//! error (the `forecast` block of the simulator's metrics JSON), and can
+//! be switched into *oracle* mode — forecasts read from a precomputed
+//! table of the trace's true future rates — for upper-bound benching.
+
+/// Exponentially-weighted moving average of the bucket rate.
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    alpha: f64,
+    value: f64,
+    primed: bool,
+}
+
+impl Ewma {
+    /// An EWMA with smoothing factor `alpha` ∈ (0, 1].
+    pub fn new(alpha: f64) -> Ewma {
+        Ewma { alpha, value: 0.0, primed: false }
+    }
+
+    /// Fold one closed bucket's rate into the average.
+    pub fn update(&mut self, rate: f64) {
+        if self.primed {
+            self.value += self.alpha * (rate - self.value);
+        } else {
+            self.value = rate;
+            self.primed = true;
+        }
+    }
+
+    /// Current rate estimate (also the EWMA's forecast at any horizon).
+    pub fn value(&self) -> f64 {
+        self.value
+    }
+}
+
+/// Holt double exponential smoothing: level + trend, the ramp tracker.
+#[derive(Debug, Clone)]
+pub struct Holt {
+    alpha: f64,
+    beta: f64,
+    level: f64,
+    trend: f64,
+    primed: bool,
+}
+
+impl Holt {
+    /// Holt smoothing with level factor `alpha` and trend factor `beta`.
+    pub fn new(alpha: f64, beta: f64) -> Holt {
+        Holt { alpha, beta, level: 0.0, trend: 0.0, primed: false }
+    }
+
+    /// Fold one closed bucket's rate into level and trend.
+    pub fn update(&mut self, rate: f64) {
+        if !self.primed {
+            self.level = rate;
+            self.trend = 0.0;
+            self.primed = true;
+            return;
+        }
+        let prev_level = self.level;
+        self.level = self.alpha * rate + (1.0 - self.alpha) * (self.level + self.trend);
+        self.trend = self.beta * (self.level - prev_level) + (1.0 - self.beta) * self.trend;
+    }
+
+    /// Forecast `k` buckets ahead: level + k·trend (callers clamp to ≥ 0 —
+    /// a downtrend extrapolates below zero).
+    pub fn forecast(&self, k: f64) -> f64 {
+        self.level + k * self.trend
+    }
+
+    /// Current level estimate.
+    pub fn level(&self) -> f64 {
+        self.level
+    }
+
+    /// Current per-bucket trend estimate.
+    pub fn trend(&self) -> f64 {
+        self.trend
+    }
+}
+
+/// Additive Holt-Winters triple exponential smoothing: level + trend +
+/// a seasonal table of `period` buckets (the diurnal tracker). Until one
+/// full period of data has been seen the seasonal terms are zero and the
+/// estimator behaves exactly like [`Holt`].
+#[derive(Debug, Clone)]
+pub struct HoltWinters {
+    alpha: f64,
+    beta: f64,
+    gamma: f64,
+    level: f64,
+    trend: f64,
+    /// Per-phase additive seasonal offsets — allocated once here, indexed
+    /// (never grown) on the update path.
+    season: Vec<f64>,
+    /// Phase of the *next* bucket to fold (0..period).
+    idx: usize,
+    buckets_seen: u64,
+    primed: bool,
+}
+
+impl HoltWinters {
+    /// Holt-Winters with the given smoothing factors and seasonal
+    /// `period` (in buckets; ≥ 1 — a period of 1 degenerates to Holt).
+    pub fn new(alpha: f64, beta: f64, gamma: f64, period: usize) -> HoltWinters {
+        HoltWinters {
+            alpha,
+            beta,
+            gamma,
+            level: 0.0,
+            trend: 0.0,
+            season: vec![0.0; period.max(1)],
+            idx: 0,
+            buckets_seen: 0,
+            primed: false,
+        }
+    }
+
+    /// Seasonal period in buckets.
+    pub fn period(&self) -> usize {
+        self.season.len()
+    }
+
+    /// Fold one closed bucket's rate into level, trend, and the bucket's
+    /// seasonal phase.
+    pub fn update(&mut self, rate: f64) {
+        let p = self.season.len();
+        if !self.primed {
+            self.level = rate;
+            self.trend = 0.0;
+            self.primed = true;
+            self.idx = 1 % p;
+            self.buckets_seen = 1;
+            return;
+        }
+        let i = self.idx;
+        let prev_level = self.level;
+        let deseason = rate - self.season[i];
+        self.level = self.alpha * deseason + (1.0 - self.alpha) * (self.level + self.trend);
+        self.trend = self.beta * (self.level - prev_level) + (1.0 - self.beta) * self.trend;
+        self.season[i] = self.gamma * (rate - self.level) + (1.0 - self.gamma) * self.season[i];
+        self.idx = (i + 1) % p;
+        self.buckets_seen += 1;
+    }
+
+    /// Forecast `k` buckets ahead: level + k·trend + the seasonal offset
+    /// of the target phase (zero until a full period has been seen).
+    pub fn forecast(&self, k: usize) -> f64 {
+        let p = self.season.len();
+        let seasonal = if self.buckets_seen as usize >= p {
+            self.season[(self.idx + k.saturating_sub(1)) % p]
+        } else {
+            0.0
+        };
+        self.level + k as f64 * self.trend + seasonal
+    }
+}
+
+/// Variance-ratio burst detector: flags a bucket whose rate sits more
+/// than `sigma` standard deviations above the long-run exponentially-
+/// weighted mean. The smoothers above deliberately lag (that is what
+/// makes them stable); this is the fast path that lets the predictive
+/// controller react to a flash crowd within one bucket.
+#[derive(Debug, Clone)]
+pub struct BurstDetector {
+    alpha: f64,
+    sigma: f64,
+    mean: f64,
+    var: f64,
+    last_z: f64,
+    primed_buckets: u64,
+}
+
+impl BurstDetector {
+    /// A detector with long-run smoothing factor `alpha` (small = long
+    /// memory) firing above `sigma` standard deviations.
+    pub fn new(alpha: f64, sigma: f64) -> BurstDetector {
+        BurstDetector { alpha, sigma, mean: 0.0, var: 0.0, last_z: 0.0, primed_buckets: 0 }
+    }
+
+    /// Score one closed bucket against the long-run statistics, then fold
+    /// it in (the bucket never scores against itself).
+    pub fn update(&mut self, rate: f64) {
+        // require a few buckets of history before scoring — the first
+        // observations define the baseline, they cannot deviate from it
+        if self.primed_buckets >= 3 {
+            let std = self.var.max(1e-12).sqrt();
+            self.last_z = (rate - self.mean) / std;
+        } else {
+            self.last_z = 0.0;
+        }
+        if self.primed_buckets == 0 {
+            self.mean = rate;
+            self.var = 0.0;
+        } else {
+            let d = rate - self.mean;
+            let incr = self.alpha * d;
+            self.mean += incr;
+            self.var = (1.0 - self.alpha) * (self.var + d * incr);
+        }
+        self.primed_buckets += 1;
+    }
+
+    /// Did the most recent bucket score as a burst?
+    pub fn is_burst(&self) -> bool {
+        self.last_z > self.sigma
+    }
+
+    /// z-score of the most recent bucket against the long-run statistics.
+    pub fn last_z(&self) -> f64 {
+        self.last_z
+    }
+
+    /// Long-run exponentially-weighted mean rate.
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+}
+
+/// One estimator's running one-bucket-ahead forecast-error account.
+#[derive(Debug, Clone, Copy, Default)]
+struct ErrAcc {
+    /// Forecast made for the bucket currently open.
+    pending: f64,
+    have_pending: bool,
+    abs_err_sum: f64,
+    n: u64,
+}
+
+impl ErrAcc {
+    fn settle(&mut self, actual: f64) {
+        if self.have_pending {
+            self.abs_err_sum += (self.pending - actual).abs();
+            self.n += 1;
+        }
+    }
+
+    fn predict(&mut self, forecast: f64) {
+        self.pending = forecast;
+        self.have_pending = true;
+    }
+
+    fn mae(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.abs_err_sum / self.n as f64
+        }
+    }
+}
+
+/// The composed arrival-rate forecaster the simulation kernel feeds from
+/// `Routed` events. See the module docs for the determinism and
+/// zero-allocation contracts.
+#[derive(Debug, Clone)]
+pub struct TrafficForecaster {
+    bucket_s: f64,
+    /// Start time of the currently open bucket.
+    bucket_start: f64,
+    /// Arrivals observed in the open bucket.
+    open_count: u64,
+    /// Rate of the most recently closed bucket (the burst-mode floor).
+    last_rate: f64,
+    /// Closed buckets folded so far.
+    buckets_closed: u64,
+    /// EWMA rate estimator.
+    pub ewma: Ewma,
+    /// Holt level+trend estimator.
+    pub holt: Holt,
+    /// Holt-Winters seasonal estimator.
+    pub hw: HoltWinters,
+    /// z-score burst detector.
+    pub burst: BurstDetector,
+    err_ewma: ErrAcc,
+    err_holt: ErrAcc,
+    err_hw: ErrAcc,
+    /// Oracle mode: per-bucket true rates of the trace being served.
+    oracle: Option<Vec<f64>>,
+}
+
+impl TrafficForecaster {
+    /// Compose a forecaster over `bucket_s`-second rate buckets.
+    pub fn new(
+        bucket_s: f64,
+        ewma: Ewma,
+        holt: Holt,
+        hw: HoltWinters,
+        burst: BurstDetector,
+    ) -> TrafficForecaster {
+        assert!(bucket_s > 0.0, "bucket width must be positive");
+        TrafficForecaster {
+            bucket_s,
+            bucket_start: 0.0,
+            open_count: 0,
+            last_rate: 0.0,
+            buckets_closed: 0,
+            ewma,
+            holt,
+            hw,
+            burst,
+            err_ewma: ErrAcc::default(),
+            err_holt: ErrAcc::default(),
+            err_hw: ErrAcc::default(),
+            oracle: None,
+        }
+    }
+
+    /// Switch to oracle mode: forecasts read the trace's true per-bucket
+    /// rates instead of the estimators (which keep running, so the MAE
+    /// report stays meaningful). `rates[i]` is the true arrival rate over
+    /// `[i·bucket_s, (i+1)·bucket_s)`.
+    pub fn set_oracle(&mut self, rates: Vec<f64>) {
+        self.oracle = Some(rates);
+    }
+
+    /// Is this forecaster reading a trace oracle instead of estimating?
+    pub fn is_oracle(&self) -> bool {
+        self.oracle.is_some()
+    }
+
+    /// Bucket width in seconds.
+    pub fn bucket_s(&self) -> f64 {
+        self.bucket_s
+    }
+
+    /// Closed buckets folded so far.
+    pub fn buckets_closed(&self) -> u64 {
+        self.buckets_closed
+    }
+
+    /// Record one arrival at time `t` (seconds). Closes any buckets that
+    /// ended at or before `t` first, so quiet gaps decay the estimators.
+    pub fn observe(&mut self, t: f64) {
+        self.advance(t);
+        self.open_count += 1;
+    }
+
+    /// Close every bucket that ended at or before `t` (zero-rate buckets
+    /// for gaps with no arrivals). Called by the kernel's `ForecastTick`
+    /// so lulls decay the estimators even with no traffic at all.
+    pub fn advance(&mut self, t: f64) {
+        while t >= self.bucket_start + self.bucket_s {
+            let rate = self.open_count as f64 / self.bucket_s;
+            self.close_bucket(rate);
+            self.open_count = 0;
+            self.bucket_start += self.bucket_s;
+        }
+    }
+
+    fn close_bucket(&mut self, rate: f64) {
+        // settle last tick's one-bucket-ahead forecasts against the truth
+        self.err_ewma.settle(rate);
+        self.err_holt.settle(rate);
+        self.err_hw.settle(rate);
+        // fold the bucket in
+        self.ewma.update(rate);
+        self.holt.update(rate);
+        self.hw.update(rate);
+        self.burst.update(rate);
+        self.last_rate = rate;
+        self.buckets_closed += 1;
+        // stage next tick's one-bucket-ahead forecasts
+        self.err_ewma.predict(self.ewma.value());
+        self.err_holt.predict(self.holt.forecast(1.0));
+        self.err_hw.predict(self.hw.forecast(1));
+    }
+
+    /// Forecast the arrival rate `h_s` seconds past the last
+    /// `observe`/`advance` time. Estimator mode takes the *max* of the
+    /// three smoothers (capacity planning wants the conservative
+    /// envelope), floored at the latest closed bucket's rate while the
+    /// burst detector is firing; oracle mode reads the trace's true rate.
+    /// Clamped to ≥ 0 (a Holt downtrend extrapolates below zero).
+    pub fn forecast(&self, h_s: f64) -> f64 {
+        if let Some(rates) = &self.oracle {
+            if rates.is_empty() {
+                return 0.0;
+            }
+            let idx = ((self.bucket_start + h_s.max(0.0)) / self.bucket_s) as usize;
+            return rates[idx.min(rates.len() - 1)];
+        }
+        let k = (h_s / self.bucket_s).ceil().max(1.0);
+        let mut f =
+            self.ewma.value().max(self.holt.forecast(k)).max(self.hw.forecast(k as usize));
+        if self.burst.is_burst() {
+            f = f.max(self.last_rate);
+        }
+        f.max(0.0)
+    }
+
+    /// Mean absolute one-bucket-ahead error of (EWMA, Holt, Holt-Winters).
+    pub fn mae(&self) -> (f64, f64, f64) {
+        (self.err_ewma.mae(), self.err_holt.mae(), self.err_hw.mae())
+    }
+
+    /// Rate of the most recently closed bucket.
+    pub fn last_rate(&self) -> f64 {
+        self.last_rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn forecaster(bucket_s: f64, period: usize) -> TrafficForecaster {
+        TrafficForecaster::new(
+            bucket_s,
+            Ewma::new(0.3),
+            Holt::new(0.4, 0.2),
+            HoltWinters::new(0.4, 0.2, 0.3, period),
+            BurstDetector::new(0.05, 3.0),
+        )
+    }
+
+    /// Feed a rate function as evenly-spaced arrivals over [0, dur).
+    fn feed(f: &mut TrafficForecaster, rate_at: impl Fn(f64) -> f64, dur: f64) {
+        let mut t = 0.0;
+        while t < dur {
+            let r = rate_at(t).max(0.0);
+            if r > 0.0 {
+                let step = 1.0 / r;
+                f.observe(t);
+                t += step;
+            } else {
+                t += 0.25;
+            }
+        }
+        f.advance(dur);
+    }
+
+    #[test]
+    fn ewma_converges_to_constant_rate() {
+        let mut f = forecaster(1.0, 8);
+        feed(&mut f, |_| 20.0, 60.0);
+        assert!((f.ewma.value() - 20.0).abs() < 2.0, "ewma {}", f.ewma.value());
+        assert!((f.forecast(5.0) - 20.0).abs() < 4.0, "forecast {}", f.forecast(5.0));
+        assert!(!f.burst.is_burst(), "steady traffic must not flag a burst");
+    }
+
+    #[test]
+    fn holt_extrapolates_a_ramp() {
+        let mut f = forecaster(1.0, 8);
+        // 2 rps → 42 rps over 40 s: slope 1 rps/s
+        feed(&mut f, |t| 2.0 + t, 40.0);
+        let trend = f.holt.trend();
+        assert!((0.5..1.5).contains(&trend), "trend {trend}");
+        // forecast 10 s out must exceed the current level by ≈ the slope
+        let now = f.holt.level();
+        let ahead = f.holt.forecast(10.0);
+        assert!(ahead > now + 4.0, "holt ahead {ahead} vs level {now}");
+        // composed forecast is the conservative envelope, so ≥ holt's
+        assert!(f.forecast(10.0) >= ahead - 1e-9);
+    }
+
+    #[test]
+    fn holt_winters_learns_a_season() {
+        let period_s = 20.0;
+        let mut f = forecaster(1.0, period_s as usize);
+        // three full sinusoidal cycles
+        let rate = |t: f64| 20.0 * (1.0 + 0.7 * (std::f64::consts::TAU * t / period_s).sin());
+        feed(&mut f, rate, 3.0 * period_s);
+        // forecasting a quarter period ahead from the cycle start should
+        // beat a seasonal-blind Holt at the crest
+        let crest = f.hw.forecast(5); // t = 60 + 5 → crest phase
+        let holt = f.holt.forecast(5.0);
+        let truth = rate(65.0);
+        assert!(
+            (crest - truth).abs() < (holt - truth).abs() + 3.0,
+            "hw {crest} vs holt {holt} vs truth {truth}"
+        );
+        assert!(f.buckets_closed() >= 58);
+    }
+
+    #[test]
+    fn burst_detector_fires_on_step_and_not_on_steady() {
+        let mut f = forecaster(1.0, 8);
+        feed(&mut f, |_| 10.0, 30.0);
+        assert!(!f.burst.is_burst());
+        let base_forecast = f.forecast(1.0);
+        // 3× step
+        let mut t = 30.0;
+        while t < 33.0 {
+            f.observe(t);
+            t += 1.0 / 30.0;
+        }
+        f.advance(33.0);
+        assert!(f.burst.is_burst(), "z = {}", f.burst.last_z());
+        // burst floors the forecast at the observed burst rate
+        assert!(
+            f.forecast(1.0) > base_forecast * 1.8,
+            "burst forecast {} vs base {base_forecast}",
+            f.forecast(1.0)
+        );
+    }
+
+    #[test]
+    fn quiet_gaps_decay_the_estimate() {
+        let mut f = forecaster(1.0, 8);
+        feed(&mut f, |_| 20.0, 20.0);
+        let busy = f.forecast(1.0);
+        f.advance(60.0); // 40 s of silence
+        let idle = f.forecast(1.0);
+        assert!(idle < busy * 0.25, "idle {idle} vs busy {busy}");
+    }
+
+    #[test]
+    fn mae_tracks_prediction_quality() {
+        let mut f = forecaster(1.0, 8);
+        feed(&mut f, |_| 15.0, 40.0);
+        let (e, h, hw) = f.mae();
+        // constant traffic: every estimator converges, MAE stays small
+        // relative to the rate (Poisson-free deterministic feed)
+        assert!(e < 5.0, "ewma mae {e}");
+        assert!(h < 5.0, "holt mae {h}");
+        assert!(hw < 5.0, "hw mae {hw}");
+        assert!(e >= 0.0 && h >= 0.0 && hw >= 0.0);
+    }
+
+    #[test]
+    fn oracle_reads_true_future_rates() {
+        let mut f = forecaster(1.0, 8);
+        f.set_oracle(vec![5.0, 10.0, 40.0, 40.0]);
+        assert!(f.is_oracle());
+        f.advance(0.0);
+        assert_eq!(f.forecast(0.0), 5.0);
+        assert_eq!(f.forecast(2.5), 40.0);
+        assert_eq!(f.forecast(99.0), 40.0, "clamps to the last bucket");
+        f.observe(1.2); // open bucket 1
+        assert_eq!(f.forecast(0.0), 10.0);
+    }
+
+    #[test]
+    fn forecasts_are_deterministic() {
+        let run = || {
+            let mut f = forecaster(0.5, 16);
+            feed(&mut f, |t| 8.0 + 0.4 * t, 30.0);
+            (
+                f.forecast(4.0).to_bits(),
+                f.mae().0.to_bits(),
+                f.mae().1.to_bits(),
+                f.mae().2.to_bits(),
+            )
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn forecast_never_negative_on_downtrend() {
+        let mut f = forecaster(1.0, 8);
+        feed(&mut f, |t| (40.0 - 2.0 * t).max(0.0), 25.0);
+        assert!(f.holt.trend() < 0.0, "downtrend learned");
+        assert!(f.forecast(30.0) >= 0.0);
+    }
+}

@@ -1,0 +1,38 @@
+//! The predictive control plane: streaming traffic forecasting + horizon
+//! capacity planning.
+//!
+//! The reactive controllers ([`crate::autoscale::Controller`] per
+//! instance, [`crate::coordinator::FleetController`] per fleet) act on
+//! *live* pressure — by the time they fire, demand has already arrived,
+//! and whole-instance capacity pays `cold_start_s` before it serves a
+//! single request. The paper's cost/availability headline depends on
+//! scaling *before* demand arrives; this module is that missing half:
+//!
+//! * [`estimator`] — deterministic O(1)-memory streaming estimators over
+//!   the arrival stream (EWMA / Holt / Holt-Winters / burst z-score),
+//!   fed from `Routed` events so the predictor sees exactly what the
+//!   coordinator routes;
+//! * [`capacity`] — the horizon capacity model converting a predicted
+//!   rate into required instance-equivalents by inverting the existing
+//!   Eq. 4 speedup model and the compiled roofline step costs — one
+//!   shared costing path, no parallel formulas;
+//! * [`predictive`] — the [`PredictiveController`]: per-action lead
+//!   times equal to enactment latency (dry-run plan duration for
+//!   replication, `cold_start_s` for spin-up), proposals arbitrated with
+//!   the reactive signal (predictive proposes, reactive can
+//!   veto/escalate), and forecast-gated scale-down.
+//!
+//! Wiring: [`crate::sim::FleetSetup`] carries an optional
+//! [`PredictConfig`]; with none configured the event kernel schedules no
+//! `ForecastTick` events and the metrics JSON is byte-identical to the
+//! reactive-only kernel — the subsystem is strictly additive.
+//! `benches/fig12_predictive.rs` measures the resulting SLO/cost gains
+//! against reactive-only and trace-oracle bounds.
+
+pub mod capacity;
+pub mod estimator;
+pub mod predictive;
+
+pub use capacity::{replicas_for_speedup, uniform_degree_for_speedup, CapacityModel};
+pub use estimator::{BurstDetector, Ewma, Holt, HoltWinters, TrafficForecaster};
+pub use predictive::{PredictConfig, PredictReport, PredictStats, PredictiveController};

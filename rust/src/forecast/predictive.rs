@@ -1,0 +1,297 @@
+//! The predictive controller: forecast-driven capacity proposals, with
+//! the reactive fleet controller as arbiter.
+//!
+//! ### Division of labor
+//!
+//! The reactive [`crate::coordinator::FleetController`] reads *live*
+//! pressure (mean outstanding requests) and acts after demand has
+//! arrived; this controller reads the [`TrafficForecaster`] and proposes
+//! capacity *before* it arrives. The two are arbitrated by the kernel
+//! under a documented precedence (DESIGN.md "Predictive control plane"):
+//!
+//! 1. **Reactive escalation always wins.** A live `ScaleOut` signal means
+//!    demand is already here — it is enacted unconditionally.
+//! 2. **Predictive proposals fill the Hold band**, subject to a reactive
+//!    veto ([`PredictiveController::reactive_veto`]): when the live
+//!    signal is deeply idle, the forecasted deficit is weak, and no burst
+//!    is flagged, the live evidence outvotes the forecast.
+//! 3. **Reactive scale-in is forecast-gated**
+//!    ([`PredictiveController::block_drain`]): an instance is not drained
+//!    if the forecast says its capacity is needed again within the drain
+//!    horizon (cold start + margin — what re-acquiring it would cost).
+//!
+//! ### Lead-time selection
+//!
+//! Each action's forecast horizon is its own enactment latency, priced
+//! exactly as the kernel enacts it: a replication plan's horizon is its
+//! dry-run [`crate::plan::PlanCost`] duration (the op events are
+//! scheduled with those exact spans), a spin-up's horizon is
+//! `cold_start_s` (activation is gated on exactly that). Replication —
+//! short horizon — bridges imminent deficits; spin-up — long horizon —
+//! covers sustained ones; a tick may enact both when a burst needs the
+//! bridge *and* the instance (see `Simulation::predictive_tick`).
+
+use super::capacity::CapacityModel;
+use super::estimator::{BurstDetector, Ewma, Holt, HoltWinters, TrafficForecaster};
+
+/// Configuration of the predictive control plane. `Copy` so
+/// [`crate::sim::FleetSetup`] stays `Copy`; everything sized here is
+/// allocated once at controller construction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PredictConfig {
+    /// Rate-bucket width (seconds) of the streaming estimators.
+    pub bucket_s: f64,
+    /// Target instance utilization the capacity conversion plans to
+    /// (the margin absorbing contention and length tails).
+    pub target_util: f64,
+    /// Mean prompt length of the planning-reference request (tokens).
+    pub mean_prompt: usize,
+    /// Mean output length of the planning-reference request (tokens).
+    pub mean_output: usize,
+    /// Reference batch size for the μ derivation.
+    pub batch: usize,
+    /// EWMA smoothing factor.
+    pub ewma_alpha: f64,
+    /// Holt level smoothing factor.
+    pub holt_alpha: f64,
+    /// Holt trend smoothing factor.
+    pub holt_beta: f64,
+    /// Holt-Winters seasonal smoothing factor.
+    pub hw_gamma: f64,
+    /// Holt-Winters seasonal period in buckets (1 degenerates to Holt).
+    pub season_buckets: usize,
+    /// Burst detector long-run smoothing factor (small = long memory).
+    pub burst_alpha: f64,
+    /// Burst detector firing threshold (standard deviations).
+    pub burst_sigma: f64,
+    /// Deficit (instance-equivalents) at the spin-up horizon from which
+    /// a whole-instance spin-up is warranted.
+    pub spin_deficit_eq: f64,
+    /// Deficit below which a deeply-idle live signal vetoes the proposal.
+    pub veto_deficit_eq: f64,
+    /// Margin added to `cold_start_s` for the drain-gating horizon.
+    pub drain_margin_s: f64,
+    /// Oracle mode: forecasts read the trace's true future rates
+    /// (upper-bound benching; the kernel installs the rate table).
+    pub oracle: bool,
+}
+
+impl Default for PredictConfig {
+    fn default() -> Self {
+        PredictConfig {
+            bucket_s: 1.0,
+            target_util: 0.6,
+            mean_prompt: 96,
+            mean_output: 64,
+            batch: 16,
+            ewma_alpha: 0.3,
+            holt_alpha: 0.4,
+            holt_beta: 0.2,
+            hw_gamma: 0.3,
+            season_buckets: 60,
+            burst_alpha: 0.05,
+            burst_sigma: 3.0,
+            spin_deficit_eq: 0.9,
+            veto_deficit_eq: 0.5,
+            drain_margin_s: 2.0,
+            oracle: false,
+        }
+    }
+}
+
+/// Counters of every predictive decision taken, vetoed, or gated —
+/// surfaced in the `forecast` block of the simulator's metrics JSON.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PredictStats {
+    /// Ticks on which the forecast showed a capacity deficit.
+    pub proposed: u64,
+    /// Capacity actions actually enacted (replications + spin-ups).
+    pub enacted: u64,
+    /// Proposals vetoed by the reactive live signal.
+    pub vetoed: u64,
+    /// Reactive drains blocked by the forecast gate.
+    pub drain_vetoes: u64,
+}
+
+/// Summary of a run's forecasting quality and predictive activity (the
+/// data behind the metrics JSON's `forecast` object).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PredictReport {
+    /// One-bucket-ahead mean absolute error of the EWMA estimator.
+    pub mae_ewma: f64,
+    /// One-bucket-ahead mean absolute error of the Holt estimator.
+    pub mae_holt: f64,
+    /// One-bucket-ahead mean absolute error of the Holt-Winters estimator.
+    pub mae_hw: f64,
+    /// Rate buckets closed over the run.
+    pub buckets: u64,
+    /// Decision counters.
+    pub stats: PredictStats,
+    /// Was the forecaster in trace-oracle mode?
+    pub oracle: bool,
+}
+
+/// The stateful predictive controller the kernel owns alongside the
+/// reactive [`crate::coordinator::FleetController`].
+#[derive(Debug, Clone)]
+pub struct PredictiveController {
+    /// Configuration this controller was built with.
+    pub cfg: PredictConfig,
+    /// The composed arrival-rate forecaster (fed from `Routed` events).
+    pub forecaster: TrafficForecaster,
+    /// The rate → instance-equivalents conversion.
+    pub cap: CapacityModel,
+    /// Decision counters.
+    pub stats: PredictStats,
+}
+
+impl PredictiveController {
+    /// Build a controller: estimators from `cfg`, capacity conversion
+    /// from the caller-derived [`CapacityModel`].
+    pub fn new(cfg: PredictConfig, cap: CapacityModel) -> PredictiveController {
+        let forecaster = TrafficForecaster::new(
+            cfg.bucket_s,
+            Ewma::new(cfg.ewma_alpha),
+            Holt::new(cfg.holt_alpha, cfg.holt_beta),
+            HoltWinters::new(cfg.holt_alpha, cfg.holt_beta, cfg.hw_gamma, cfg.season_buckets),
+            BurstDetector::new(cfg.burst_alpha, cfg.burst_sigma),
+        );
+        PredictiveController { cfg, forecaster, cap, stats: PredictStats::default() }
+    }
+
+    /// Forecasted capacity deficit (instance-equivalents) at horizon
+    /// `h_s`, given `capacity_eq` of live capacity. Positive = the
+    /// forecast says demand will exceed capacity when the horizon lands.
+    pub fn deficit_at(&self, h_s: f64, capacity_eq: f64) -> f64 {
+        self.cap.required_equivalents(self.forecaster.forecast(h_s)) - capacity_eq
+    }
+
+    /// Precedence rule 2 (module docs): may the live signal veto a
+    /// predictive proposal? Yes iff the fleet is deeply idle (mean
+    /// outstanding below the reactive scale-in line), the forecasted
+    /// deficit is weak (< `veto_deficit_eq`), and no burst is flagged.
+    /// A strong forecast overrides idleness — that is the diurnal
+    /// trough-before-crest case predictive scaling exists for.
+    pub fn reactive_veto(
+        &self,
+        mean_outstanding: f64,
+        scale_in_queue: f64,
+        deficit_eq: f64,
+    ) -> bool {
+        mean_outstanding < scale_in_queue
+            && deficit_eq < self.cfg.veto_deficit_eq
+            && !self.forecaster.burst.is_burst()
+    }
+
+    /// Precedence rule 3 (module docs): should a reactive drain be
+    /// blocked? Yes iff the forecast at the drain horizon needs more
+    /// capacity than the fleet would have after the drain.
+    pub fn block_drain(&self, capacity_after_eq: f64, horizon_s: f64) -> bool {
+        self.deficit_at(horizon_s, capacity_after_eq) > 0.0
+    }
+
+    /// Summarize the run (the metrics JSON's `forecast` block).
+    pub fn report(&self) -> PredictReport {
+        let (mae_ewma, mae_holt, mae_hw) = self.forecaster.mae();
+        PredictReport {
+            mae_ewma,
+            mae_holt,
+            mae_hw,
+            buckets: self.forecaster.buckets_closed(),
+            stats: self.stats,
+            oracle: self.forecaster.is_oracle(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn controller(mu: f64) -> PredictiveController {
+        let cap = CapacityModel {
+            mu_base_rps: mu,
+            gamma: 0.05,
+            n_layers: 40,
+            target_util: 1.0,
+        };
+        PredictiveController::new(
+            PredictConfig { season_buckets: 8, ..Default::default() },
+            cap,
+        )
+    }
+
+    fn feed_rate(p: &mut PredictiveController, rate: f64, from: f64, to: f64) {
+        let mut t = from;
+        while t < to {
+            p.forecaster.observe(t);
+            t += 1.0 / rate;
+        }
+        p.forecaster.advance(to);
+    }
+
+    #[test]
+    fn deficit_positive_when_forecast_exceeds_capacity() {
+        let mut p = controller(10.0); // 1 eq serves 10 rps
+        feed_rate(&mut p, 30.0, 0.0, 20.0);
+        // 30 rps needs 3 eq; with 2 live the deficit is ≈ 1
+        let d = p.deficit_at(1.0, 2.0);
+        assert!((0.4..1.8).contains(&d), "deficit {d}");
+        // abundant capacity → negative deficit
+        assert!(p.deficit_at(1.0, 5.0) < 0.0);
+    }
+
+    #[test]
+    fn drain_gate_blocks_only_when_capacity_is_needed() {
+        let mut p = controller(10.0);
+        feed_rate(&mut p, 25.0, 0.0, 20.0);
+        // 25 rps needs 2.5 eq: draining from 3 → 2 would undershoot
+        assert!(p.block_drain(2.0, 8.0));
+        // draining from 5 → 4 keeps headroom
+        assert!(!p.block_drain(4.0, 8.0));
+    }
+
+    #[test]
+    fn reactive_veto_requires_idle_and_weak_and_no_burst() {
+        let mut p = controller(10.0);
+        feed_rate(&mut p, 5.0, 0.0, 20.0);
+        // idle live signal + weak deficit → veto
+        assert!(p.reactive_veto(0.5, 2.0, 0.2));
+        // strong deficit overrides idleness (the trough-before-crest case)
+        assert!(!p.reactive_veto(0.5, 2.0, 0.8));
+        // live pressure present → no veto
+        assert!(!p.reactive_veto(5.0, 2.0, 0.2));
+        // burst flag overrides the veto even with a weak deficit
+        let mut t = 20.0;
+        while t < 22.0 {
+            p.forecaster.observe(t);
+            t += 1.0 / 40.0;
+        }
+        p.forecaster.advance(22.0);
+        assert!(p.forecaster.burst.is_burst());
+        assert!(!p.reactive_veto(0.5, 2.0, 0.2));
+    }
+
+    #[test]
+    fn report_carries_stats_and_mae() {
+        let mut p = controller(10.0);
+        feed_rate(&mut p, 12.0, 0.0, 10.0);
+        p.stats.proposed = 3;
+        p.stats.enacted = 2;
+        p.stats.vetoed = 1;
+        let r = p.report();
+        assert_eq!(r.stats.proposed, 3);
+        assert_eq!(r.buckets, 10);
+        assert!(!r.oracle);
+        assert!(r.mae_ewma >= 0.0 && r.mae_holt >= 0.0 && r.mae_hw >= 0.0);
+    }
+
+    #[test]
+    fn default_config_is_sane() {
+        let c = PredictConfig::default();
+        assert!(c.bucket_s > 0.0);
+        assert!((0.0..=1.0).contains(&c.target_util));
+        assert!(c.spin_deficit_eq > c.veto_deficit_eq);
+        assert!(!c.oracle);
+    }
+}

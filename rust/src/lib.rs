@@ -19,6 +19,10 @@
 //!   cost models — a deterministic event kernel ([`sim::events`]) driving
 //!   per-instance serving state machines, regenerating the paper's
 //!   13B/70B-scale tables and figures ([`sim`]),
+//! * a **predictive control plane** — streaming traffic forecasting
+//!   (EWMA / Holt / Holt-Winters / burst detection) and horizon capacity
+//!   planning that provisions *before* demand arrives, arbitrated with
+//!   the reactive fleet controller ([`forecast`]),
 //! * a **traffic scenario library** (steady / diurnal / burst / ramp /
 //!   two-tenant mix) for dynamic-load experiments ([`workload`]),
 //! * **HFT-like and vLLM-like baselines** over the same substrate
@@ -31,12 +35,13 @@
 #![allow(clippy::needless_range_loop)]
 #![allow(clippy::too_many_arguments)]
 // Every public item should carry rustdoc. Fully burned down in the
-// scaling-API surface (`cluster`, `coordinator`, `placement`, `plan`);
-// the per-module `allow`s below mark the modules whose burn-down is still
-// pending — remove one to enlist that module.
+// scaling-API surface (`cluster`, `coordinator`, `placement`, `plan` —
+// PR 4) and the control/telemetry surface (`autoscale`, `forecast`,
+// `monitor`, `sim`, `workload` — this PR); the per-module `allow`s below
+// mark the modules whose burn-down is still pending — remove one to
+// enlist that module.
 #![warn(missing_docs)]
 
-#[allow(missing_docs)]
 pub mod autoscale;
 pub mod baselines;
 pub mod cluster;
@@ -45,11 +50,11 @@ pub mod config;
 pub mod coordinator;
 #[allow(missing_docs)]
 pub mod engine;
+pub mod forecast;
 #[allow(missing_docs)]
 pub mod kvcache;
 #[allow(missing_docs)]
 pub mod model;
-#[allow(missing_docs)]
 pub mod monitor;
 #[allow(missing_docs)]
 pub mod ops;
@@ -59,11 +64,9 @@ pub mod plan;
 pub mod runtime;
 #[allow(missing_docs)]
 pub mod scheduler;
-#[allow(missing_docs)]
 pub mod sim;
 #[allow(missing_docs)]
 pub mod util;
-#[allow(missing_docs)]
 pub mod workload;
 
 /// The README's code blocks compile and run as doctests, so the quickstart

@@ -13,17 +13,63 @@ use crate::util::stats::Summary;
 
 use crate::autoscale::ControllerInputs;
 
+/// The fleet-level half of the telemetry spine: the aggregate load
+/// window the fleet-scale controllers (reactive
+/// [`crate::coordinator::FleetController`], predictive
+/// [`crate::forecast::PredictiveController`]) read each control tick.
+/// Assembled once per tick by the simulation kernel — streaming adds, no
+/// allocation — so every fleet-level consumer sees the same numbers,
+/// just as [`Monitor::controller_view`] is the single source of the
+/// per-instance [`ControllerInputs`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FleetInputs {
+    /// Instances not yet retired (the spin-up/drain bounds).
+    pub live: usize,
+    /// Instances currently accepting routed traffic.
+    pub accepting: usize,
+    /// Outstanding requests (pending + running + routed-but-undelivered)
+    /// summed over live instances.
+    pub outstanding: usize,
+    /// Requests parked at the router under admission backpressure.
+    pub parked: usize,
+}
+
+impl FleetInputs {
+    /// Fold one instance's state into the window.
+    pub fn add_instance(&mut self, live: bool, accepting: bool, outstanding: usize) {
+        if live {
+            self.live += 1;
+            self.outstanding += outstanding;
+        }
+        if accepting {
+            self.accepting += 1;
+        }
+    }
+
+    /// The fleet pressure signal: outstanding work (router-parked
+    /// included) per traffic-accepting instance.
+    pub fn mean_outstanding(&self) -> f64 {
+        (self.outstanding + self.parked) as f64 / self.accepting.max(1) as f64
+    }
+}
+
 /// One completed request's measurements.
 #[derive(Debug, Clone, Copy)]
 pub struct Completion {
+    /// Id of the completed request.
     pub request_id: u64,
+    /// Original arrival time (spans re-routes).
     pub arrival_s: f64,
+    /// Completion time, including any carried OOM penalty.
     pub finish_s: f64,
+    /// Prompt length served.
     pub prompt_tokens: usize,
+    /// Tokens generated.
     pub output_tokens: usize,
 }
 
 impl Completion {
+    /// End-to-end latency (arrival → finish, seconds).
     pub fn e2e_latency(&self) -> f64 {
         self.finish_s - self.arrival_s
     }
@@ -42,6 +88,7 @@ pub struct Monitor {
 }
 
 impl Monitor {
+    /// A monitor judging completions against `slo_latency_s`.
     pub fn new(slo_latency_s: f64) -> Monitor {
         Monitor {
             slo_latency_s,
@@ -53,19 +100,23 @@ impl Monitor {
         }
     }
 
+    /// Record one completed request.
     pub fn record(&mut self, c: Completion) {
         self.completions.push(c);
     }
 
+    /// Record one OOM event (feeds the next controller window too).
     pub fn record_oom(&mut self) {
         self.oom_since_tick += 1;
         self.total_oom += 1;
     }
 
+    /// Every completion recorded so far.
     pub fn completions(&self) -> &[Completion] {
         &self.completions
     }
 
+    /// Total OOM events recorded over the run.
     pub fn total_oom(&self) -> u64 {
         self.total_oom
     }
@@ -75,12 +126,14 @@ impl Monitor {
         self.oom_affected += n;
     }
 
+    /// Requests caught in an OOM failure so far.
     pub fn oom_affected(&self) -> u64 {
         self.oom_affected
     }
 
     // ---- whole-experiment summaries (benches, EXPERIMENTS.md) -------------
 
+    /// Exact-sample summary of every completion's end-to-end latency.
     pub fn latency_summary(&self) -> Summary {
         let mut s = Summary::new();
         for c in &self.completions {
@@ -119,6 +172,7 @@ impl Monitor {
         ok as f64 / self.completions.len() as f64
     }
 
+    /// `1 − slo_attainment()`.
     pub fn slo_violation_rate(&self) -> f64 {
         1.0 - self.slo_attainment()
     }
@@ -195,6 +249,24 @@ mod tests {
             prompt_tokens: 10,
             output_tokens: toks,
         }
+    }
+
+    #[test]
+    fn fleet_inputs_window_aggregates_like_the_kernel() {
+        let mut w = FleetInputs::default();
+        w.add_instance(true, true, 10); // active, serving
+        w.add_instance(true, false, 6); // draining: live, not accepting
+        w.add_instance(false, false, 0); // retired
+        w.add_instance(true, true, 0); // cold-started idle
+        w.parked = 4;
+        assert_eq!(w.live, 3);
+        assert_eq!(w.accepting, 2);
+        assert_eq!(w.outstanding, 16);
+        // (16 outstanding + 4 parked) / 2 accepting
+        assert_eq!(w.mean_outstanding(), 10.0);
+        // no accepting instances: the denominator clamps to 1
+        let empty = FleetInputs { parked: 3, ..Default::default() };
+        assert_eq!(empty.mean_outstanding(), 3.0);
     }
 
     #[test]

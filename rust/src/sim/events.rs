@@ -2,11 +2,13 @@
 //!
 //! A binary heap of timestamped events with **fully deterministic
 //! ordering**: events pop by ascending time, then by kind priority
-//! (arrivals before their routing deliveries before controller ticks
-//! before scaling-op starts/completions before step completions before
-//! wake-ups — routing delivers before a coinciding controller tick reads
-//! the queues, and scaling ops apply before a coinciding step completion
-//! so the step's successor sees the post-op placement), then by instance
+//! (arrivals before their routing deliveries before forecast ticks
+//! before controller ticks before scaling-op starts/completions before
+//! step completions before wake-ups — routing delivers before a
+//! coinciding forecast tick closes its rate buckets, the forecast closes
+//! before a coinciding controller tick consumes it, and scaling ops
+//! apply before a coinciding step completion so the step's successor
+//! sees the post-op placement), then by instance
 //! id, then by insertion sequence. Two runs
 //! over the same trace therefore process an identical event sequence,
 //! which is what makes the golden-replay test (byte-identical metrics
@@ -26,6 +28,13 @@ pub enum EventKind {
     /// an arrival's timestamp delivers before any same-time controller
     /// tick or step completion observes the queue.
     Routed { request_idx: usize, instance: usize },
+    /// The predictive control plane advances its rate buckets to now.
+    /// Scheduled only when a predictor is configured, at the controller
+    /// period. Priority-slotted after `Routed` and before
+    /// `ControllerTick`: a forecast closed at time t has seen every
+    /// arrival routed at ≤ t, and a coinciding controller tick consumes
+    /// *this* tick's forecast, never last period's.
+    ForecastTick,
     /// The §5 controller evaluates every autoscaling instance.
     ControllerTick,
     /// Op `op_idx` of instance `instance`'s in-flight [`crate::plan::ScalePlan`]
@@ -51,18 +60,21 @@ impl EventKind {
         match self {
             EventKind::Arrival { .. } => 0,
             EventKind::Routed { .. } => 1,
-            EventKind::ControllerTick => 2,
-            EventKind::OpCompleted { .. } => 3,
-            EventKind::OpStarted { .. } => 4,
-            EventKind::StepComplete { .. } => 5,
-            EventKind::Wake { .. } => 6,
+            EventKind::ForecastTick => 2,
+            EventKind::ControllerTick => 3,
+            EventKind::OpCompleted { .. } => 4,
+            EventKind::OpStarted { .. } => 5,
+            EventKind::StepComplete { .. } => 6,
+            EventKind::Wake { .. } => 7,
         }
     }
 
     /// Instance tie-break key (non-instance events sort first).
     fn instance_key(&self) -> usize {
         match self {
-            EventKind::Arrival { .. } | EventKind::ControllerTick => 0,
+            EventKind::Arrival { .. }
+            | EventKind::ForecastTick
+            | EventKind::ControllerTick => 0,
             EventKind::Routed { instance, .. }
             | EventKind::OpCompleted { instance, .. }
             | EventKind::OpStarted { instance, .. }
@@ -75,7 +87,9 @@ impl EventKind {
 /// A scheduled event.
 #[derive(Debug, Clone, Copy)]
 pub struct Event {
+    /// Simulated firing time (seconds).
     pub time: f64,
+    /// What fires.
     pub kind: EventKind,
     /// Monotone insertion counter — the final FIFO tie-break.
     seq: u64,
@@ -125,10 +139,12 @@ pub struct EventQueue {
 }
 
 impl EventQueue {
+    /// An empty queue.
     pub fn new() -> EventQueue {
         EventQueue::default()
     }
 
+    /// Schedule `kind` to fire at `time` (must be finite).
     pub fn push(&mut self, time: f64, kind: EventKind) {
         debug_assert!(time.is_finite(), "event at non-finite time");
         let seq = self.next_seq;
@@ -136,6 +152,7 @@ impl EventQueue {
         self.heap.push(HeapEntry(Event { time, kind, seq }));
     }
 
+    /// Pop the earliest event (ties broken as the module docs describe).
     pub fn pop(&mut self) -> Option<Event> {
         self.heap.pop().map(|e| e.0)
     }
@@ -145,10 +162,12 @@ impl EventQueue {
         self.heap.peek().map(|e| e.0.time)
     }
 
+    /// Events currently scheduled.
     pub fn len(&self) -> usize {
         self.heap.len()
     }
 
+    /// Is nothing scheduled?
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
@@ -184,6 +203,7 @@ mod tests {
         q.push(5.0, EventKind::ControllerTick);
         q.push(5.0, EventKind::Routed { request_idx: 7, instance: 0 });
         q.push(5.0, EventKind::Arrival { request_idx: 7 });
+        q.push(5.0, EventKind::ForecastTick);
         q.push(5.0, EventKind::OpCompleted { instance: 0, op_idx: 0, epoch: 1 });
         q.push(5.0, EventKind::OpStarted { instance: 0, op_idx: 1, epoch: 1 });
         let kinds: Vec<EventKind> = drain(&mut q).iter().map(|e| e.kind).collect();
@@ -192,6 +212,7 @@ mod tests {
             vec![
                 EventKind::Arrival { request_idx: 7 },
                 EventKind::Routed { request_idx: 7, instance: 0 },
+                EventKind::ForecastTick,
                 EventKind::ControllerTick,
                 EventKind::OpCompleted { instance: 0, op_idx: 0, epoch: 1 },
                 EventKind::OpStarted { instance: 0, op_idx: 1, epoch: 1 },

@@ -8,9 +8,11 @@
 //! which the golden-replay test and the fig10/fig11 benches assert.
 
 use crate::coordinator::FleetEvent;
+use crate::forecast::PredictReport;
 use crate::monitor::Monitor;
 use crate::placement::Placement;
 use crate::util::json::{self, Json};
+use crate::util::stats::P2Quantile;
 
 /// Lifecycle phase of one logged scaling-op event.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -24,6 +26,7 @@ pub enum OpPhase {
 }
 
 impl OpPhase {
+    /// Stable name used in the golden metrics JSON.
     pub fn name(self) -> &'static str {
         match self {
             OpPhase::Started => "started",
@@ -38,9 +41,13 @@ impl OpPhase {
 /// the golden-replay tests).
 #[derive(Debug, Clone, PartialEq)]
 pub struct OpEvent {
+    /// Simulated time of the phase transition.
     pub t: f64,
+    /// Instance whose plan the op belongs to.
     pub instance: usize,
+    /// Index of the op within its plan.
     pub op_idx: usize,
+    /// Lifecycle phase recorded.
     pub phase: OpPhase,
     /// `ModuleOp::describe()` of the op.
     pub desc: String,
@@ -50,7 +57,9 @@ pub struct OpEvent {
 /// plans).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct ScaleStats {
+    /// Scale-up plans admitted (Algorithm 1 rounds).
     pub scale_ups: u64,
+    /// Scale-down plans admitted or executed (Algorithm 2 rounds).
     pub scale_downs: u64,
     /// Total transfer time consumed by scaling operations (background).
     pub op_time_s: f64,
@@ -64,6 +73,7 @@ pub struct ScaleStats {
 /// Aggregated outcome of a simulation run.
 #[derive(Debug)]
 pub struct SimReport {
+    /// Simulated wall time the run covered (trace + drain).
     pub duration_s: f64,
     /// Events the kernel popped (wall-clock throughput denominator for
     /// the fleet-scale bench). Deliberately NOT part of [`SimReport::to_json`]
@@ -84,13 +94,17 @@ pub struct SimReport {
     pub reroutes: u64,
     /// Timestamped fleet lifecycle log (spin-up / drain / release).
     pub fleet_events: Vec<FleetEvent>,
+    /// Per-instance monitors (completion records, SLO accounting).
     pub monitors: Vec<Monitor>,
     /// (device, compute utilization, mem frac at end).
     pub device_util: Vec<(usize, f64, f64)>,
     /// Per-device peak resident bytes over the run.
     pub device_peak_bytes: Vec<f64>,
+    /// OOM events across device ledgers and instance monitors.
     pub total_oom_events: u64,
+    /// Scale-up plans admitted over the run.
     pub scale_ups: u64,
+    /// Scale-down plans admitted or executed over the run.
     pub scale_downs: u64,
     /// Unique requests ever caught in an OOM failure.
     pub oom_victims: usize,
@@ -108,9 +122,18 @@ pub struct SimReport {
     pub plans_aborted: u64,
     /// Timestamped scaling-op lifecycle log (in-flight execution trace).
     pub op_events: Vec<OpEvent>,
+    /// Forecast quality + predictive-action summary. `None` when no
+    /// predictor was configured — and then the metrics JSON carries no
+    /// `forecast` key at all, keeping reactive-only documents
+    /// byte-identical to the pre-forecast kernel.
+    pub forecast: Option<PredictReport>,
 }
 
 impl SimReport {
+    /// All completions' end-to-end latencies as an exact-sample summary.
+    /// Materializes (and, on percentile reads, sorts) a merged copy —
+    /// fine for bounded experiments; bench-scale percentile tracking
+    /// should use [`SimReport::latency_p2`] instead.
     pub fn merged_latency(&self) -> crate::util::stats::Summary {
         let mut s = crate::util::stats::Summary::new();
         for m in &self.monitors {
@@ -121,6 +144,32 @@ impl SimReport {
         s
     }
 
+    /// Streaming end-to-end latency quantile across every monitor via the
+    /// O(1)-memory P² estimator: no merged sample vector, no sort — the
+    /// fleet-bench path for p50/p99 over 500k+ completions. The golden
+    /// metrics JSON keeps the exact per-monitor summaries; this is the
+    /// reporting path.
+    pub fn latency_p2(&self, q: f64) -> f64 {
+        self.latency_p2s(&[q])[0]
+    }
+
+    /// Several streaming quantiles in **one** pass over the completions
+    /// (one P² estimator per requested quantile) — the `[p50, p99]`
+    /// bench path without re-iterating 500k+ records per read.
+    pub fn latency_p2s(&self, qs: &[f64]) -> Vec<f64> {
+        let mut ps: Vec<P2Quantile> = qs.iter().map(|&q| P2Quantile::new(q)).collect();
+        for m in &self.monitors {
+            for c in m.completions() {
+                let lat = c.e2e_latency();
+                for p in &mut ps {
+                    p.add(lat);
+                }
+            }
+        }
+        ps.iter().map(|p| p.value()).collect()
+    }
+
+    /// Output-token throughput summed across every instance (tokens/s).
     pub fn total_throughput_tps(&self) -> f64 {
         self.monitors
             .iter()
@@ -128,10 +177,12 @@ impl SimReport {
             .sum()
     }
 
+    /// Completed requests across every instance.
     pub fn total_completed(&self) -> usize {
         self.monitors.iter().map(|m| m.completions().len()).sum()
     }
 
+    /// Fraction of completions within their monitor's SLO, fleet-wide.
     pub fn slo_attainment(&self) -> f64 {
         let (ok, total) = self.monitors.iter().fold((0usize, 0usize), |(o, t), m| {
             let good = m
@@ -209,7 +260,7 @@ impl SimReport {
                 ("t", json::num(e.t)),
             ])
         }));
-        json::obj(vec![
+        let mut pairs = vec![
             ("completed", json::num(self.total_completed() as f64)),
             ("device_seconds", json::num(self.device_seconds)),
             ("devices", devices),
@@ -229,7 +280,27 @@ impl SimReport {
             ("scale_ups", json::num(self.scale_ups as f64)),
             ("slo_attainment", json::num(self.slo_attainment())),
             ("throughput_tps", json::num(self.total_throughput_tps())),
-        ])
+        ];
+        // strictly additive: the `forecast` key exists only when a
+        // predictor was configured, so reactive-only documents stay
+        // byte-identical to the pre-forecast kernel
+        if let Some(f) = &self.forecast {
+            pairs.push((
+                "forecast",
+                json::obj(vec![
+                    ("buckets", json::num(f.buckets as f64)),
+                    ("drain_vetoes", json::num(f.stats.drain_vetoes as f64)),
+                    ("enacted", json::num(f.stats.enacted as f64)),
+                    ("mae_ewma", json::num(f.mae_ewma)),
+                    ("mae_holt", json::num(f.mae_holt)),
+                    ("mae_holt_winters", json::num(f.mae_hw)),
+                    ("oracle", json::num(f64::from(u8::from(f.oracle)))),
+                    ("proposed", json::num(f.stats.proposed as f64)),
+                    ("vetoed", json::num(f.stats.vetoed as f64)),
+                ]),
+            ));
+        }
+        json::obj(pairs)
     }
 }
 
@@ -279,6 +350,7 @@ mod tests {
                 phase: OpPhase::Completed,
                 desc: "replicate L0->d1".into(),
             }],
+            forecast: None,
         }
     }
 
@@ -300,6 +372,50 @@ mod tests {
         let fev = parsed.req("fleet_events").as_arr().unwrap();
         assert_eq!(fev.len(), 1);
         assert_eq!(fev[0].req("phase").as_str(), Some("spin_up"));
+    }
+
+    #[test]
+    fn forecast_block_is_strictly_additive() {
+        let without = tiny_report().to_json().to_string();
+        assert!(
+            !without.contains("\"forecast\""),
+            "no predictor → no forecast key: {without}"
+        );
+        let mut r = tiny_report();
+        r.forecast = Some(crate::forecast::PredictReport {
+            mae_ewma: 1.5,
+            mae_holt: 1.0,
+            mae_hw: 2.0,
+            buckets: 30,
+            stats: crate::forecast::PredictStats {
+                proposed: 4,
+                enacted: 2,
+                vetoed: 1,
+                drain_vetoes: 3,
+            },
+            oracle: false,
+        });
+        let with = r.to_json().to_string();
+        let parsed = Json::parse(&with).unwrap();
+        let f = parsed.req("forecast");
+        assert_eq!(f.req("buckets").as_usize(), Some(30));
+        assert_eq!(f.req("proposed").as_usize(), Some(4));
+        assert_eq!(f.req("enacted").as_usize(), Some(2));
+        assert_eq!(f.req("vetoed").as_usize(), Some(1));
+        assert_eq!(f.req("drain_vetoes").as_usize(), Some(3));
+        assert_eq!(f.req("mae_holt").as_f64(), Some(1.0));
+        assert_eq!(f.req("oracle").as_f64(), Some(0.0));
+        // everything else is unchanged
+        let base = Json::parse(&without).unwrap();
+        assert_eq!(base.req("completed"), parsed.req("completed"));
+    }
+
+    #[test]
+    fn latency_p2_matches_exact_summary_on_small_samples() {
+        let r = tiny_report();
+        // a single completion: P² is exact below five samples
+        assert_eq!(r.latency_p2(0.99), 2.5);
+        assert_eq!(r.latency_p2(0.5), r.merged_latency().p50());
     }
 
     #[test]

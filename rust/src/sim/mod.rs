@@ -27,8 +27,11 @@
 //!   backpressure, OOM-shed re-routing), computes cross-instance
 //!   contention, admits controller-planned [`crate::plan::ScalePlan`]s,
 //!   runs the fleet controller (spin-up / drain-then-release, module-vs-
-//!   instance arbitration), meters device-seconds, and asks ready
-//!   instances to start their next step.
+//!   instance arbitration) and — when a predictor is configured — the
+//!   [`crate::forecast`] control plane (`ForecastTick` events feeding the
+//!   streaming estimators; predictive proposals arbitrated against the
+//!   reactive signal; forecast-gated drains), meters device-seconds, and
+//!   asks ready instances to start their next step.
 //!
 //! ### In-flight scaling (the §3.1 non-disruption claim, made measurable)
 //!
@@ -60,18 +63,20 @@ pub use metrics::{OpEvent, OpPhase, ScaleStats, SimReport};
 
 use crate::autoscale::{
     memory_violation, scale_up, Controller, ControllerConfig, PlanCtx, PlannedDecision,
-    ScaleDownConfig, ScaleUpConfig,
+    ScaleDownConfig, ScaleUpConfig, ScaleUpPlan,
 };
 use crate::cluster::Cluster;
-use crate::coordinator::fleet::ScaleOutChoice;
+use crate::coordinator::fleet::{FleetPressure, ScaleOutChoice};
 use crate::coordinator::{
     CostLedger, FleetConfig, FleetController, FleetEvent, FleetPhase, RouteCandidate,
     Router, RouterConfig,
 };
+use crate::forecast::{CapacityModel, PredictConfig, PredictiveController};
 use crate::model::cost::CostModel;
 use crate::model::{ModelConfig, ModuleKind};
+use crate::monitor::FleetInputs;
 use crate::ops::ModuleOps;
-use crate::placement::Placement;
+use crate::placement::{Placement, PlacementProfile};
 use crate::plan::{PlanCost, ScalePlan};
 use crate::scheduler::SchedulerConfig;
 use crate::workload::{Request, Trace};
@@ -112,6 +117,22 @@ fn sorted_intersection_count(a: &[usize], b: &[usize]) -> usize {
     n
 }
 
+/// γ for Eq. 4 (Algorithm 1 / the capacity model): the configured value,
+/// or derived from the cluster's device-0 constants for the homogeneous
+/// default. One definition shared by the controller tick, the fleet
+/// arbitration, and the predictive capacity model.
+fn default_gamma(cfg: &SimConfig, cluster: &Cluster) -> f64 {
+    cfg.gamma.unwrap_or_else(|| {
+        let spec = &cluster.device(0).spec;
+        crate::autoscale::speedup::gamma(
+            0.3,
+            spec.effective_flops(),
+            cfg.model.d_model as f64,
+            spec.link_bw,
+        )
+    })
+}
+
 /// What an instance does when a KV allocation hits device OOM.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum OomBehavior {
@@ -128,17 +149,20 @@ pub enum OomBehavior {
 /// Per-instance serving policy — baselines and CoCoServe differ only here.
 #[derive(Debug, Clone, Copy)]
 pub struct SimPolicy {
+    /// Batching policy (continuous vs static) + batch bound.
     pub scheduler: SchedulerConfig,
     /// Paged (vLLM/CoCo) vs contiguous max-length (HFT) KV allocation.
     pub paged_kv: bool,
     /// Run the §5 controller loop (CoCoServe only).
     pub autoscale: bool,
+    /// What a KV-admission OOM does under this policy.
     pub oom: OomBehavior,
 }
 
 /// Simulation-wide configuration.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
+    /// Architecture of the simulated model (layer count, dims).
     pub model: ModelConfig,
     /// bf16 at paper scale.
     pub dtype_bytes: usize,
@@ -168,6 +192,7 @@ impl SimConfig {
         CostModel::new(self.model.clone())
     }
 
+    /// The paper's primary 13B experiment shape (§6.1 constants).
     pub fn paper_13b() -> SimConfig {
         SimConfig {
             model: ModelConfig::llama2_13b(),
@@ -181,6 +206,7 @@ impl SimConfig {
         }
     }
 
+    /// The 70B variant: same knobs over the larger architecture.
     pub fn paper_70b() -> SimConfig {
         SimConfig { model: ModelConfig::llama2_70b(), ..SimConfig::paper_13b() }
     }
@@ -198,11 +224,19 @@ pub struct FleetSetup {
     pub fleet: Option<FleetConfig>,
     /// Threshold configuration of the per-instance controllers.
     pub controller: ControllerConfig,
+    /// Predictive control plane (None = reactive only — the kernel then
+    /// schedules no `ForecastTick` events and the metrics JSON is
+    /// byte-identical to the pre-forecast kernel). Predictive capacity
+    /// actions require `fleet` to be configured too; without it the
+    /// forecaster still runs and reports, but proposes nothing.
+    pub predictor: Option<PredictConfig>,
 }
 
 /// The simulator: an event kernel over per-instance state machines.
 pub struct Simulation {
+    /// Simulation-wide configuration the kernel was built with.
     pub cfg: SimConfig,
+    /// The device ledgers every instance allocates against.
     pub cluster: Cluster,
     cost: CostModel,
     instances: Vec<Instance>,
@@ -215,6 +249,8 @@ pub struct Simulation {
     outstanding_routes: Vec<u32>,
     /// Fleet-level lifecycle controller (None = fixed fleet).
     fleet: Option<FleetController>,
+    /// Predictive control plane (None = reactive only).
+    predictive: Option<PredictiveController>,
     /// Device-seconds cost meter.
     ledger: CostLedger,
     /// Per-instance (placement_rev, billed device set) — the ledger's
@@ -276,6 +312,24 @@ impl Simulation {
             })
             .collect();
         let outstanding_routes = vec![0; instances.len()];
+        // The predictor's capacity conversion is derived from the same
+        // cost model and compiled step costs the kernel charges serving
+        // steps with — one costing path (see forecast::capacity).
+        let predictive = setup.predictor.map(|pc| {
+            let reference = Placement::single_device(cfg.model.n_layers, 0);
+            let profile = PlacementProfile::compile(&reference, &cluster, 0);
+            let cap = CapacityModel::from_profile(
+                &cost,
+                &profile,
+                cfg.dtype_bytes,
+                pc.batch,
+                pc.mean_prompt,
+                pc.mean_output,
+                default_gamma(&cfg, &cluster),
+                pc.target_util,
+            );
+            PredictiveController::new(pc, cap)
+        });
         Simulation {
             cfg,
             cluster,
@@ -285,6 +339,7 @@ impl Simulation {
             router: Router::new(setup.router),
             outstanding_routes,
             fleet: setup.fleet.map(FleetController::new),
+            predictive,
             ledger,
             bill_cache,
             fleet_events: Vec::new(),
@@ -297,29 +352,28 @@ impl Simulation {
     }
 
     fn gamma(&self) -> f64 {
-        self.cfg.gamma.unwrap_or_else(|| {
-            let spec = &self.cluster.device(0).spec;
-            crate::autoscale::speedup::gamma(
-                0.3,
-                spec.effective_flops(),
-                self.cfg.model.d_model as f64,
-                spec.link_bw,
-            )
-        })
+        default_gamma(&self.cfg, &self.cluster)
     }
 
     // ---- routing (the coordinator's front door) ---------------------------
 
+    /// Instance `i`'s outstanding load: scheduler pending + running, plus
+    /// requests already routed this timestamp but not yet delivered. The
+    /// one load definition behind routing decisions and the fleet
+    /// telemetry window, so coinciding decisions observe each other and
+    /// the controllers read the numbers the router acts on.
+    fn outstanding(&self, i: usize) -> usize {
+        self.instances[i].scheduler.load() + self.outstanding_routes[i] as usize
+    }
+
     /// Snapshot every instance's routing-relevant state for one decision.
-    /// Outstanding load counts requests already routed this timestamp but
-    /// not yet delivered, so coinciding decisions observe each other.
     fn route_candidates(&self) -> Vec<RouteCandidate> {
         self.instances
             .iter()
             .enumerate()
             .map(|(i, inst)| RouteCandidate {
                 accepting: inst.accepting(self.now),
-                outstanding: inst.scheduler.load() + self.outstanding_routes[i] as usize,
+                outstanding: self.outstanding(i),
                 free_bytes: inst
                     .profile
                     .device_set
@@ -387,6 +441,14 @@ impl Simulation {
                 self.router.reroutes += 1;
             } else {
                 self.router.routes += 1;
+                // a parked arrival delivers straight from the queue (no
+                // Routed event), so this is where the forecaster sees it
+                // — demand must not vanish from the rate signal exactly
+                // when the fleet is saturated. Shed re-routes stay
+                // excluded: same demand again, not new demand.
+                if let Some(p) = &mut self.predictive {
+                    p.forecaster.observe(self.now);
+                }
             }
             self.instances[i].deliver(parked.req, parked.penalty);
         }
@@ -535,47 +597,223 @@ impl Simulation {
                 });
             }
         }
-        // 2. pressure signal: mean outstanding per traffic-accepting
-        //    instance, router-parked requests included.
-        let live = self
-            .instances
-            .iter()
-            .filter(|inst| inst.lifecycle != Lifecycle::Retired)
-            .count();
-        let accepting = self.instances.iter().filter(|inst| inst.accepting(self.now)).count();
-        let outstanding: usize = self
+        // 2. telemetry spine: one FleetInputs window per tick (assembled
+        //    through the monitor's fleet-signal type), shared by the
+        //    reactive pressure classifier and the predictive controller.
+        let mut inputs = FleetInputs::default();
+        for i in 0..self.instances.len() {
+            let inst = &self.instances[i];
+            inputs.add_instance(
+                inst.lifecycle != Lifecycle::Retired,
+                inst.accepting(self.now),
+                self.outstanding(i),
+            );
+        }
+        inputs.parked = self.router.pending.len();
+        // 3. arbitration (precedence documented in DESIGN.md): a live
+        //    ScaleOut always wins; a live ScaleIn is forecast-gated; the
+        //    Hold band is where predictive proposals act. The cooldown
+        //    snapshot is taken BEFORE pressure() decrements it, so a
+        //    predictive action observes the same spacing a reactive one
+        //    would — the shared window has no off-by-one tick.
+        let was_cooling = self.fleet.as_ref().expect("fleet").cooling_down();
+        let pressure = self.fleet.as_mut().expect("fleet").pressure(&inputs);
+        match pressure {
+            FleetPressure::Hold => {
+                if !was_cooling {
+                    self.predictive_tick(&inputs, q);
+                }
+            }
+            FleetPressure::ScaleOut => self.fleet_scale_out(q),
+            FleetPressure::ScaleIn => self.fleet_scale_in(),
+        }
+    }
+
+    /// Reactive scale-in: drain the least-loaded active instance (ties
+    /// drain the youngest — LIFO elasticity, deterministic), unless the
+    /// predictor says its capacity is needed again within the drain
+    /// horizon (a cold start plus margin — what re-acquiring the
+    /// capacity would cost).
+    fn fleet_scale_in(&mut self) {
+        let cand = self
             .instances
             .iter()
             .enumerate()
-            .filter(|(_, inst)| inst.lifecycle != Lifecycle::Retired)
-            .map(|(i, inst)| inst.scheduler.load() + self.outstanding_routes[i] as usize)
-            .sum::<usize>()
-            + self.router.pending.len();
-        let mean = outstanding as f64 / accepting.max(1) as f64;
-        let pressure = self.fleet.as_mut().expect("fleet").pressure(mean, live);
-        match pressure {
-            crate::coordinator::fleet::FleetPressure::Hold => {}
-            crate::coordinator::fleet::FleetPressure::ScaleOut => self.fleet_scale_out(q),
-            crate::coordinator::fleet::FleetPressure::ScaleIn => {
-                // least-loaded active instance drains; ties drain the
-                // youngest (LIFO elasticity, deterministic)
-                let cand = self
-                    .instances
-                    .iter()
-                    .enumerate()
-                    .filter(|(_, inst)| inst.lifecycle == Lifecycle::Active)
-                    .min_by_key(|&(i, inst)| (inst.scheduler.load(), std::cmp::Reverse(i)))
-                    .map(|(i, _)| i);
-                if let Some(i) = cand {
-                    self.instances[i].lifecycle = Lifecycle::Draining;
-                    self.fleet_events.push(FleetEvent {
-                        t: self.now,
-                        instance: i,
-                        phase: FleetPhase::Drain,
-                    });
-                }
+            .filter(|(_, inst)| inst.lifecycle == Lifecycle::Active)
+            .min_by_key(|&(i, inst)| (inst.scheduler.load(), std::cmp::Reverse(i)))
+            .map(|(i, _)| i);
+        let Some(i) = cand else { return };
+        if self.predictive.is_some() {
+            let fc = self.fleet.as_ref().expect("fleet mode").cfg;
+            let horizon = fc.cold_start_s
+                + self.predictive.as_ref().expect("predictor").cfg.drain_margin_s;
+            let after = self.capacity_equivalents_at(horizon, Some(i));
+            if self.predictive.as_ref().expect("predictor").block_drain(after, horizon) {
+                self.predictive.as_mut().expect("predictor").stats.drain_vetoes += 1;
+                // the drain never happened: hand the reactive cooldown
+                // back so the veto of a no-op cannot suppress the very
+                // predictive provisioning the forecast calls for
+                self.fleet.as_mut().expect("fleet mode").cancel_action();
+                return;
             }
         }
+        self.instances[i].lifecycle = Lifecycle::Draining;
+        self.fleet_events.push(FleetEvent {
+            t: self.now,
+            instance: i,
+            phase: FleetPhase::Drain,
+        });
+    }
+
+    /// Serving capacity in instance-equivalents *as of* `horizon_s`
+    /// seconds from now: each active instance that will be past its cold
+    /// start by then contributes its Eq. 4 speedup (1.0 unreplicated),
+    /// optionally excluding one instance (drain what-if). Counting
+    /// capacity at the horizon — not just what accepts right now — is
+    /// what stops the predictive controller re-spinning for a deficit an
+    /// in-flight cold start already covers. Predictor-only (the capacity
+    /// conversion lives there).
+    fn capacity_equivalents_at(&self, horizon_s: f64, exclude: Option<usize>) -> f64 {
+        let cap = &self.predictive.as_ref().expect("predictor").cap;
+        let by = self.now + horizon_s + 1e-9;
+        self.instances
+            .iter()
+            .enumerate()
+            .filter(|&(i, inst)| {
+                Some(i) != exclude
+                    && inst.lifecycle == Lifecycle::Active
+                    && inst.active_after <= by
+            })
+            .map(|(_, inst)| cap.equivalents_of(inst.placement.inv_p_norm()))
+            .sum()
+    }
+
+    /// One predictive control tick (the Hold band of the arbitration):
+    /// compare forecasted demand against live capacity at each action's
+    /// own enactment latency and enact what the lead time allows —
+    /// replication (horizon = the plan's dry-run duration) bridges an
+    /// imminent deficit, spin-up (horizon = `cold_start_s`) covers a
+    /// sustained one, and a burst may need both in the same tick.
+    /// Proposals are subject to the reactive veto; enactments arm the
+    /// shared fleet cooldown.
+    fn predictive_tick(&mut self, inputs: &FleetInputs, q: &mut EventQueue) {
+        if self.predictive.is_none() || self.fleet.is_none() {
+            return;
+        }
+        if self.fleet.as_ref().expect("fleet mode").cooling_down() {
+            return;
+        }
+        let fc = self.fleet.as_ref().expect("fleet mode").cfg;
+        // each deficit compares demand at a horizon against the capacity
+        // that will be live AT that horizon — an instance already cold-
+        // starting counts toward the spin-horizon capacity, so one
+        // deficit cannot trigger a redundant second spin-up
+        let bucket_s = self.predictive.as_ref().expect("predictor").cfg.bucket_s;
+        let cap_spin = self.capacity_equivalents_at(fc.cold_start_s, None);
+        let cap_next = self.capacity_equivalents_at(bucket_s, None);
+        let (deficit_spin, deficit_next) = {
+            let p = self.predictive.as_ref().expect("predictor");
+            (
+                p.deficit_at(fc.cold_start_s, cap_spin),
+                p.deficit_at(bucket_s, cap_next),
+            )
+        };
+        if deficit_spin <= 0.0 && deficit_next <= 0.0 {
+            return;
+        }
+        {
+            let p = self.predictive.as_mut().expect("predictor");
+            p.stats.proposed += 1;
+            if p.reactive_veto(
+                inputs.mean_outstanding(),
+                fc.scale_in_queue,
+                deficit_spin.max(deficit_next),
+            ) {
+                p.stats.vetoed += 1;
+                return;
+            }
+        }
+        let mut acted = false;
+        // replication first: its lead time is the plan's own dry-run
+        // duration, priced exactly as the kernel schedules the op events
+        if let Some((i, up)) = self.replication_option() {
+            let h_rep = up.cost.total.time_s;
+            let cap_rep = self.capacity_equivalents_at(h_rep, None);
+            let deficit_rep = self
+                .predictive
+                .as_ref()
+                .expect("predictor")
+                .deficit_at(h_rep, cap_rep);
+            if deficit_rep > 0.0 {
+                self.scale.scale_ups += 1;
+                self.admit(i, up.plan, up.cost, None, q);
+                acted = true;
+            }
+        }
+        // spin-up covers a deficit at least an instance-equivalent deep
+        // at its own lead time (cold_start_s — activation is gated on
+        // exactly that)
+        let spin_floor = self.predictive.as_ref().expect("predictor").cfg.spin_deficit_eq;
+        if deficit_spin >= spin_floor && inputs.live < fc.max_instances {
+            if let Some(dev) = self.spin_candidate() {
+                self.spin_up(dev, q);
+                acted = true;
+            }
+        }
+        if acted {
+            self.fleet.as_mut().expect("fleet mode").arm_cooldown();
+            self.predictive.as_mut().expect("predictor").stats.enacted += 1;
+        }
+    }
+
+    /// Option A of any scale-out: one Algorithm 1 replication round on
+    /// the busiest accepting instance that still has replica budget and
+    /// no plan in flight. The returned plan carries its dry-run cost —
+    /// both the arbitration price and (for the predictive path) the
+    /// action's lead time.
+    fn replication_option(&self) -> Option<(usize, ScaleUpPlan)> {
+        let busiest = self
+            .instances
+            .iter()
+            .enumerate()
+            .filter(|(_, inst)| inst.accepting(self.now) && inst.inflight.is_none())
+            .max_by_key(|&(i, inst)| (inst.scheduler.load(), std::cmp::Reverse(i)))
+            .map(|(i, _)| i)?;
+        let i = busiest;
+        let held: usize = (0..self.instances[i].placement.n_layers)
+            .map(|l| self.instances[i].placement.degree(l) - 1)
+            .sum();
+        let remaining = self.cfg.replica_budget.saturating_sub(held);
+        if remaining == 0 {
+            return None;
+        }
+        let gamma = self.gamma();
+        let ops = ModuleOps::new(&self.cost, self.cfg.dtype_bytes, &format!("inst{i}"));
+        let up_cfg = ScaleUpConfig {
+            gamma,
+            min_vacancy: SCALE_UP_MIN_VACANCY,
+            max_ops_per_round: remaining.min(4),
+        };
+        let up = scale_up(&ops, &self.cluster, &self.instances[i].placement, &up_cfg);
+        if up.plan.is_empty() {
+            None
+        } else {
+            Some((i, up))
+        }
+    }
+
+    /// Option B of any scale-out: the device with the most free memory
+    /// that fits a whole fresh single-device instance (with 2% headroom).
+    fn spin_candidate(&self) -> Option<usize> {
+        let ops = ModuleOps::new(&self.cost, self.cfg.dtype_bytes, "fleet-probe");
+        let inst_bytes = ops.module_bytes(ModuleKind::DecoderLayer)
+            * self.cfg.model.n_layers as f64
+            + ops.module_bytes(ModuleKind::Embed)
+            + ops.module_bytes(ModuleKind::LmHead);
+        self.cluster
+            .by_free_memory()
+            .into_iter()
+            .find(|&d| self.cluster.device(d).free_bytes() >= inst_bytes * 1.02)
     }
 
     /// Scale-out arbitration: price a replication round on the busiest
@@ -584,49 +822,9 @@ impl Simulation {
     /// flows through the normal in-flight plan path; spin-up deploys a new
     /// instance that starts accepting traffic after the cold start.
     fn fleet_scale_out(&mut self, q: &mut EventQueue) {
-        // option A: one Algorithm 1 round on the busiest accepting
-        // instance that still has replica budget and no plan in flight
-        let busiest = self
-            .instances
-            .iter()
-            .enumerate()
-            .filter(|(_, inst)| inst.accepting(self.now) && inst.inflight.is_none())
-            .max_by_key(|&(i, inst)| (inst.scheduler.load(), std::cmp::Reverse(i)))
-            .map(|(i, _)| i);
-        let mut replication = None;
-        if let Some(i) = busiest {
-            let held: usize = (0..self.instances[i].placement.n_layers)
-                .map(|l| self.instances[i].placement.degree(l) - 1)
-                .sum();
-            let remaining = self.cfg.replica_budget.saturating_sub(held);
-            if remaining > 0 {
-                let gamma = self.gamma();
-                let ops =
-                    ModuleOps::new(&self.cost, self.cfg.dtype_bytes, &format!("inst{i}"));
-                let up_cfg = ScaleUpConfig {
-                    gamma,
-                    min_vacancy: SCALE_UP_MIN_VACANCY,
-                    max_ops_per_round: remaining.min(4),
-                };
-                let up = scale_up(&ops, &self.cluster, &self.instances[i].placement, &up_cfg);
-                if !up.plan.is_empty() {
-                    replication = Some((i, up));
-                }
-            }
-        }
-        // option B: spin up a fresh single-device instance on the device
-        // with the most free memory that fits the whole model
+        let replication = self.replication_option();
         let fc = self.fleet.as_ref().expect("fleet mode").cfg;
-        let ops = ModuleOps::new(&self.cost, self.cfg.dtype_bytes, "fleet-probe");
-        let inst_bytes = ops.module_bytes(ModuleKind::DecoderLayer)
-            * self.cfg.model.n_layers as f64
-            + ops.module_bytes(ModuleKind::Embed)
-            + ops.module_bytes(ModuleKind::LmHead);
-        let spin_dev = self
-            .cluster
-            .by_free_memory()
-            .into_iter()
-            .find(|&d| self.cluster.device(d).free_bytes() >= inst_bytes * 1.02);
+        let spin_dev = self.spin_candidate();
         // priced exactly as enacted: cold_start_s covers process launch +
         // weight load (see FleetConfig), and spin_up gates activation on
         // cold_start_s alone
@@ -780,6 +978,24 @@ impl Simulation {
             q.push(r.arrival_s, EventKind::Arrival { request_idx: 0 });
         }
         q.push(self.cfg.controller_tick_s, EventKind::ControllerTick);
+        if let Some(p) = &mut self.predictive {
+            if p.cfg.oracle {
+                // trace-peeking upper bound: install the true per-bucket
+                // arrival rates (covering the drain window too)
+                let bucket = p.cfg.bucket_s;
+                let n_buckets = (drain_deadline / bucket).ceil().max(1.0) as usize;
+                let mut rates = vec![0.0; n_buckets];
+                for r in &trace.requests {
+                    let idx = ((r.arrival_s / bucket) as usize).min(n_buckets - 1);
+                    rates[idx] += 1.0;
+                }
+                for r in &mut rates {
+                    *r /= bucket;
+                }
+                p.forecaster.set_oracle(rates);
+            }
+            q.push(self.cfg.controller_tick_s, EventKind::ForecastTick);
+        }
 
         loop {
             if next_req >= trace.requests.len() && self.all_idle() {
@@ -806,8 +1022,24 @@ impl Simulation {
                     self.route_arrival(request_idx, req, &mut q);
                 }
                 EventKind::Routed { request_idx, instance } => {
+                    // the predictor sees what the coordinator routes
+                    if let Some(p) = &mut self.predictive {
+                        p.forecaster.observe(self.now);
+                    }
                     self.outstanding_routes[instance] -= 1;
                     self.instances[instance].deliver(trace.requests[request_idx], 0.0);
+                }
+                EventKind::ForecastTick => {
+                    // close rate buckets up to now (quiet gaps decay the
+                    // estimators) right before the coinciding controller
+                    // tick consumes the forecast
+                    if let Some(p) = &mut self.predictive {
+                        p.forecaster.advance(self.now);
+                        q.push(
+                            self.now + self.cfg.controller_tick_s,
+                            EventKind::ForecastTick,
+                        );
+                    }
                 }
                 EventKind::ControllerTick => {
                     self.fleet_tick(&mut q);
@@ -940,6 +1172,7 @@ impl Simulation {
             batch_sizes: self.instances.iter().map(|i| i.batch_size).collect(),
             plans_aborted: self.scale.plans_aborted,
             op_events: self.scale.events,
+            forecast: self.predictive.map(|p| p.report()),
             monitors: self.instances.into_iter().map(|i| i.monitor).collect(),
         }
     }

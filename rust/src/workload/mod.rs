@@ -21,9 +21,11 @@ use crate::util::rng::Rng;
 /// per-arrival heap clone.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Request {
+    /// Unique id within the trace (per-request state is keyed on it).
     pub id: u64,
     /// Arrival time in seconds from experiment start.
     pub arrival_s: f64,
+    /// Prompt length in tokens.
     pub prompt_tokens: usize,
     /// Number of tokens the request will generate (ground truth; engines
     /// discover it by hitting EOS, the simulator uses it directly).
@@ -37,9 +39,11 @@ pub struct LengthDist {
     pub prompt_mu: f64,
     /// Underlying-normal sigma of the prompt lognormal.
     pub prompt_sigma: f64,
+    /// Hard cap on sampled prompt lengths.
     pub max_prompt: usize,
     /// Mean output length (geometric), capped at `max_new_tokens` (§6.1: 256).
     pub mean_output: f64,
+    /// Hard cap on sampled output lengths (the decoding cutoff).
     pub max_new_tokens: usize,
 }
 
@@ -67,6 +71,7 @@ impl LengthDist {
         }
     }
 
+    /// Draw one prompt length (clamped to `[1, max_prompt]`).
     pub fn sample_prompt(&self, rng: &mut Rng) -> usize {
         (self.sample_raw_prompt(rng)).clamp(1, self.max_prompt)
     }
@@ -75,6 +80,7 @@ impl LengthDist {
         rng.lognormal(self.prompt_mu, self.prompt_sigma).round() as usize
     }
 
+    /// Draw one output length (geometric, clamped to `[1, max_new_tokens]`).
     pub fn sample_output(&self, rng: &mut Rng) -> usize {
         // Geometric with the given mean, capped (the cap concentrates mass
         // at max_new_tokens exactly like real decoding cutoffs).
@@ -122,6 +128,7 @@ impl Arrival {
 /// A reproducible request trace.
 #[derive(Debug, Clone, Default)]
 pub struct Trace {
+    /// The requests, ascending by arrival time.
     pub requests: Vec<Request>,
 }
 
@@ -155,10 +162,12 @@ impl Trace {
         Trace { requests: reqs }
     }
 
+    /// Number of requests in the trace.
     pub fn len(&self) -> usize {
         self.requests.len()
     }
 
+    /// Does the trace contain no requests?
     pub fn is_empty(&self) -> bool {
         self.requests.is_empty()
     }

@@ -168,4 +168,178 @@ mod tests {
         let rps = t.mean_rps(60.0);
         assert!((rps - 20.0).abs() < 4.0, "rps {rps}");
     }
+
+    // ---- property tests: the forecaster's ground truth ---------------------
+    //
+    // The predictive control plane is evaluated against these traces
+    // (benches/fig12_predictive.rs), so the scenario library itself must
+    // be deterministic, order-preserving under merge, and periodic where
+    // it claims to be.
+
+    use crate::util::{prop, rng::Rng};
+
+    /// Fingerprint a trace cheaply but collision-sensitively.
+    fn fingerprint(t: &Trace) -> (usize, u64) {
+        let mut acc = 0u64;
+        for r in &t.requests {
+            acc = acc
+                .wrapping_mul(0x100000001B3)
+                .wrapping_add(r.arrival_s.to_bits())
+                .wrapping_add((r.prompt_tokens * 31 + r.output_tokens) as u64);
+        }
+        (t.len(), acc)
+    }
+
+    #[test]
+    fn prop_every_constructor_is_deterministic_per_seed() {
+        prop::check(
+            "scenario-deterministic",
+            |r: &mut Rng| {
+                let rps = 2.0 + r.f64() * 28.0;
+                let dur = 5.0 + r.f64() * 40.0;
+                let seed = r.next_u64();
+                (rps, dur, seed)
+            },
+            |&(rps, dur, seed)| {
+                let build = |which: usize| match which {
+                    0 => Trace::steady(rps, dur, seed),
+                    1 => Trace::diurnal(rps, dur, seed),
+                    2 => Trace::burst(rps, dur, seed),
+                    3 => Trace::ramp(rps, dur, seed),
+                    _ => Trace::two_tenant(rps, dur, seed),
+                };
+                for which in 0..5 {
+                    let a = build(which);
+                    let b = build(which);
+                    if a.requests != b.requests {
+                        return Err(format!("constructor {which} not deterministic"));
+                    }
+                    if fingerprint(&a) != fingerprint(&b) {
+                        return Err(format!("constructor {which} fingerprint drifted"));
+                    }
+                    // arrivals must be non-decreasing and in-window
+                    for w in a.requests.windows(2) {
+                        if w[1].arrival_s < w[0].arrival_s {
+                            return Err(format!("constructor {which} unsorted"));
+                        }
+                    }
+                    if a.requests.iter().any(|q| q.arrival_s < 0.0 || q.arrival_s >= dur) {
+                        return Err(format!("constructor {which} out-of-window arrival"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_merge_preserves_tenant_counts_and_global_order() {
+        prop::check(
+            "merge-conservation",
+            |r: &mut Rng| {
+                let n_parts = 2 + r.below(4) as usize;
+                let seeds: Vec<u64> = (0..n_parts).map(|_| r.next_u64()).collect();
+                let rps = 2.0 + r.f64() * 15.0;
+                (seeds, rps)
+            },
+            |(seeds, rps)| {
+                // tag tenants by construction: each part uses a distinct
+                // length regime so its requests stay identifiable by the
+                // (prompt, output) payload multiset after the merge
+                let parts: Vec<Trace> = seeds
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &s)| {
+                        let dist = if i % 2 == 0 {
+                            super::LengthDist::chat()
+                        } else {
+                            super::LengthDist::summarize()
+                        };
+                        Trace::generate(Arrival::Poisson { rps: *rps }, dist, 12.0, s)
+                    })
+                    .collect();
+                let per_tenant: Vec<usize> = parts.iter().map(|t| t.len()).collect();
+                let total: usize = per_tenant.iter().sum();
+                let mut payloads: Vec<(u64, usize, usize)> = parts
+                    .iter()
+                    .flat_map(|t| t.requests.iter())
+                    .map(|q| (q.arrival_s.to_bits(), q.prompt_tokens, q.output_tokens))
+                    .collect();
+                payloads.sort_unstable();
+
+                let merged = Trace::merge(parts);
+                if merged.len() != total {
+                    return Err(format!("lost requests: {} != {total}", merged.len()));
+                }
+                // global arrival-time ordering
+                for w in merged.requests.windows(2) {
+                    if w[1].arrival_s < w[0].arrival_s {
+                        return Err("merge broke arrival ordering".into());
+                    }
+                }
+                // ids reassigned densely
+                for (i, q) in merged.requests.iter().enumerate() {
+                    if q.id != i as u64 {
+                        return Err(format!("id {} at position {i}", q.id));
+                    }
+                }
+                // per-tenant conservation: the payload multiset survives
+                let mut merged_payloads: Vec<(u64, usize, usize)> = merged
+                    .requests
+                    .iter()
+                    .map(|q| (q.arrival_s.to_bits(), q.prompt_tokens, q.output_tokens))
+                    .collect();
+                merged_payloads.sort_unstable();
+                if merged_payloads != payloads {
+                    return Err("merge changed some request payload".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_diurnal_respects_its_configured_period() {
+        prop::check(
+            "diurnal-period",
+            |r: &mut Rng| {
+                let mean = 12.0 + r.f64() * 20.0;
+                let period = 16.0 + r.f64() * 16.0;
+                let cycles = 2 + r.below(2) as usize;
+                let seed = r.next_u64();
+                (mean, period, cycles, seed)
+            },
+            |&(mean, period, cycles, seed)| {
+                let dur = period * cycles as f64;
+                let t = Trace::generate(
+                    Arrival::Diurnal { mean, amplitude: 0.8, period_s: period },
+                    super::LengthDist::alpaca(),
+                    dur,
+                    seed,
+                );
+                // every cycle's crest half must out-arrive its trough half
+                for c in 0..cycles {
+                    let base = c as f64 * period;
+                    let crest = t
+                        .requests
+                        .iter()
+                        .filter(|q| (base..base + period / 2.0).contains(&q.arrival_s))
+                        .count();
+                    let trough = t
+                        .requests
+                        .iter()
+                        .filter(|q| {
+                            (base + period / 2.0..base + period).contains(&q.arrival_s)
+                        })
+                        .count();
+                    if crest <= trough {
+                        return Err(format!(
+                            "cycle {c}: crest {crest} !> trough {trough} (period {period:.1})"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
 }
