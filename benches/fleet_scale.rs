@@ -1,7 +1,7 @@
 //! Fleet-scale kernel benchmark — the perf-trajectory artifact.
 //!
-//! Runs the event kernel at a scale the paper never touched: ≥128
-//! thirteen-B instances over a 160-device fleet, ≥500k requests across
+//! Runs the event kernel at a scale the paper never touched: 1024
+//! thirteen-B instances over a 1280-device fleet, ≥5M requests across
 //! all five traffic scenarios, CoCoServe policy (so plans execute in
 //! flight and profile recompilation is exercised). Reports, per scenario
 //! and in aggregate:
@@ -24,10 +24,24 @@
 //! the zero-alloc contracts of the compiled-profile refactor and the
 //! predictive control plane.
 //!
+//! After the scenario sweep, a **shards sweep** re-runs the steady
+//! scenario under the sharded event kernel at 1/2/4/8 shards and reports
+//! a speedup table (wall-clock vs the sequential kernel) — the sharded
+//! kernel's metrics are byte-identical by contract, so the sweep measures
+//! pure kernel overhead/offload.
+//!
 //! ```bash
 //! cargo bench --bench fleet_scale                 # full fleet (~minutes)
 //! FLEET_SCALE_SMOKE=1 cargo bench --bench fleet_scale   # CI smoke
+//! SHARDS=4 cargo bench --bench fleet_scale        # shard count for the sweep runs
+//! GOLDEN_OUT=golden.json FLEET_SCALE_SMOKE=1 cargo bench --bench fleet_scale
 //! ```
+//!
+//! `SHARDS=<k>` sets the event-kernel shard count used for the scenario
+//! sweep (default 1 — the sequential kernel). `GOLDEN_OUT=<path>` writes
+//! the concatenated per-scenario golden metrics JSON to `<path>`; CI runs
+//! the smoke twice (`SHARDS=1` and `SHARDS=4`) and byte-compares the two
+//! files — the cross-kernel parity gate at bench scale.
 //!
 //! Smoke mode (8 instances, 5k requests) additionally enforces the
 //! checked-in regression floors: events/sec must stay above half of
@@ -100,6 +114,10 @@ struct FleetConfig {
     requests_per_scenario: usize,
     duration_s: f64,
     smoke: bool,
+    /// Event-kernel shard count for the scenario sweep (`SHARDS` env,
+    /// default 1 = sequential kernel). Metrics are byte-identical at any
+    /// value — this only changes which kernel produces them.
+    shards: usize,
 }
 
 impl FleetConfig {
@@ -108,6 +126,11 @@ impl FleetConfig {
             .map(|v| !v.is_empty() && v != "0")
             .unwrap_or(false)
             || std::env::args().any(|a| a == "--smoke");
+        let shards = std::env::var("SHARDS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&s| s >= 1)
+            .unwrap_or(1);
         if smoke {
             // 8 instances / 5k requests total: the CI configuration.
             FleetConfig {
@@ -116,15 +139,17 @@ impl FleetConfig {
                 requests_per_scenario: 1_000,
                 duration_s: 10.0,
                 smoke,
+                shards,
             }
         } else {
-            // ≥128 instances, ≥500k requests across the five scenarios.
+            // 1024 instances, ≥5M requests across the five scenarios.
             FleetConfig {
-                instances: 128,
-                devices: 160,
-                requests_per_scenario: 100_000,
-                duration_s: 30.0,
+                instances: 1024,
+                devices: 1280,
+                requests_per_scenario: 1_000_000,
+                duration_s: 60.0,
                 smoke,
+                shards,
             }
         }
     }
@@ -213,6 +238,8 @@ struct ScenarioResult {
     p99_s: f64,
     scale_ups: u64,
     scale_downs: u64,
+    /// Golden metrics JSON (captured only when `GOLDEN_OUT` is set).
+    golden: Option<String>,
 }
 
 impl ScenarioResult {
@@ -229,8 +256,15 @@ impl ScenarioResult {
     }
 }
 
-fn run_scenario(fleet: &FleetConfig, name: &'static str, trace: &Trace) -> ScenarioResult {
-    let cfg = SimConfig::paper_13b();
+fn run_scenario(
+    fleet: &FleetConfig,
+    name: &'static str,
+    trace: &Trace,
+    shards: usize,
+    capture_golden: bool,
+) -> ScenarioResult {
+    let mut cfg = SimConfig::paper_13b();
+    cfg.shards = shards;
     let cluster = Cluster::homogeneous(fleet.devices, DeviceSpec::a100_40gb());
     let placements: Vec<_> = (0..fleet.instances)
         .map(|i| {
@@ -253,6 +287,7 @@ fn run_scenario(fleet: &FleetConfig, name: &'static str, trace: &Trace) -> Scena
     // completion records — the golden-replay metrics are computed from
     // them, so that retention stays.)
     let quantiles = report.latency_p2s(&[0.50, 0.99]);
+    let golden = capture_golden.then(|| report.to_json().to_string());
     ScenarioResult {
         name,
         requests: trace.len(),
@@ -265,16 +300,20 @@ fn run_scenario(fleet: &FleetConfig, name: &'static str, trace: &Trace) -> Scena
         p99_s: quantiles[1],
         scale_ups: report.scale_ups,
         scale_downs: report.scale_downs,
+        golden,
     }
 }
 
 fn main() {
     let fleet = FleetConfig::from_env();
+    let golden_out = std::env::var("GOLDEN_OUT").ok().filter(|p| !p.is_empty());
     println!(
-        "Fleet-scale kernel bench — {} instances / {} devices / {} requests × 5 scenarios{}\n",
+        "Fleet-scale kernel bench — {} instances / {} devices / {} requests × 5 scenarios, \
+         shards={}{}\n",
         fleet.instances,
         fleet.devices,
         fleet.requests_per_scenario,
+        fleet.shards,
         if fleet.smoke { " (SMOKE)" } else { "" }
     );
 
@@ -293,7 +332,7 @@ fn main() {
         "p50", "p99", "ups", "downs",
     ]);
     for (name, trace) in sweep {
-        let r = run_scenario(&fleet, name, &trace);
+        let r = run_scenario(&fleet, name, &trace, fleet.shards, golden_out.is_some());
         table.row(&[
             r.name.to_string(),
             format!("{}", r.requests),
@@ -322,6 +361,46 @@ fn main() {
          steps in {total_wall:.1}s — {agg_events_per_sec:.0} events/s, \
          {agg_allocs_per_step:.1} allocs/step"
     );
+
+    // ---- golden metrics dump (cross-kernel parity gate) ---------------------
+    if let Some(path) = &golden_out {
+        // One concatenated document, scenarios in sweep order. CI runs the
+        // smoke at SHARDS=1 and SHARDS=4 and byte-compares the two files.
+        let mut dump = String::new();
+        for r in &results {
+            dump.push_str(r.name);
+            dump.push('\n');
+            dump.push_str(r.golden.as_deref().expect("golden captured"));
+            dump.push('\n');
+        }
+        std::fs::write(path, dump).expect("write GOLDEN_OUT");
+        println!("golden metrics: {path} (shards={})", fleet.shards);
+    }
+
+    // ---- shards sweep: sequential vs sharded kernel wall-clock --------------
+    // Same steady trace, shards ∈ {1,2,4,8}; metrics are byte-identical by
+    // contract (asserted in tests + CI), so this isolates kernel cost. The
+    // sharded kernel parallelizes epoch drains (heap maintenance); event
+    // application stays sequential for parity, so expect modest deltas —
+    // the table records what is, not what marketing wants.
+    let sweep_trace = Trace::steady(fleet.rps(), fleet.duration_s, 4096);
+    let mut sweep_results = Vec::new();
+    let mut sweep_table = Table::new(&["shards", "wall_s", "events/s", "speedup vs 1"]);
+    for shards in [1usize, 2, 4, 8] {
+        let r = run_scenario(&fleet, "steady", &sweep_trace, shards, false);
+        sweep_results.push((shards, r));
+    }
+    let base_wall = sweep_results[0].1.wall_s.max(1e-9);
+    for (shards, r) in &sweep_results {
+        sweep_table.row(&[
+            format!("{shards}"),
+            format!("{:.2}", r.wall_s),
+            format!("{:.0}", r.events_per_sec()),
+            format!("{:.2}x", base_wall / r.wall_s.max(1e-9)),
+        ]);
+    }
+    println!("\nshards sweep (steady scenario):");
+    sweep_table.print();
 
     // ---- BENCH_fleet.json ---------------------------------------------------
     let scenarios = json::arr(results.iter().map(|r| {
@@ -362,6 +441,7 @@ fn main() {
                     "requests_per_scenario",
                     json::num(fleet.requests_per_scenario as f64),
                 ),
+                ("shards", json::num(fleet.shards as f64)),
                 ("smoke", json::num(f64::from(u8::from(fleet.smoke)))),
             ]),
         ),
@@ -371,6 +451,17 @@ fn main() {
                 ("smoke_allocs_per_step_budget", json::num(SMOKE_ALLOCS_PER_STEP_BUDGET)),
                 ("smoke_events_per_sec_floor", json::num(SMOKE_EVENTS_PER_SEC_FLOOR)),
             ]),
+        ),
+        (
+            "shards_sweep",
+            json::arr(sweep_results.iter().map(|(shards, r)| {
+                json::obj(vec![
+                    ("events_per_sec", json::num(r.events_per_sec())),
+                    ("shards", json::num(*shards as f64)),
+                    ("speedup_vs_1", json::num(base_wall / r.wall_s.max(1e-9))),
+                    ("wall_s", json::num(r.wall_s)),
+                ])
+            })),
         ),
         (
             "zero_alloc_probe",

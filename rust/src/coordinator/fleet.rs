@@ -241,7 +241,19 @@ impl CostLedger {
     }
 
     /// Integrate billing up to `now` at the current billed-device count.
+    ///
+    /// The integral is only correct if events reach the coordinator in
+    /// nondecreasing time order — exactly what the event kernels
+    /// guarantee (a single queue trivially; the sharded kernel via its
+    /// barrier merge). A backwards `now` would mean a shard leaked an
+    /// event past its epoch window, so it is a hard error rather than a
+    /// silently dropped interval.
     pub fn advance(&mut self, now: f64) {
+        assert!(
+            now >= self.last_t,
+            "billing time went backwards (or NaN): {now} < {}",
+            self.last_t
+        );
         if now > self.last_t {
             self.device_seconds += (now - self.last_t) * self.billed as f64;
             self.last_t = now;
@@ -440,7 +452,18 @@ mod tests {
         assert_eq!(l.billed_devices(), 1);
         l.advance(10.0); // 1 device × 3 s
         assert_eq!(l.device_seconds(), 7.0);
-        l.advance(9.0); // time never runs backwards
+        l.advance(10.0); // same-time re-advance is a no-op
         assert_eq!(l.device_seconds(), 7.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "billing time went backwards")]
+    fn cost_ledger_rejects_backwards_time() {
+        // A backwards advance means an event escaped its epoch window in
+        // the sharded kernel (or a caller reordered events) — the billing
+        // integral would silently drop the interval, so it is a hard error.
+        let mut l = CostLedger::new(1);
+        l.advance(10.0);
+        l.advance(9.0);
     }
 }

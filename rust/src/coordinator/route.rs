@@ -18,6 +18,16 @@
 //! an instance's OOM handling can likewise be handed back for re-routing
 //! (see `sim::instance`), which is what lets a fleet survive a single
 //! instance's memory cliff without failing the requests outright.
+//!
+//! ### Barrier-time routing (sharded kernel)
+//!
+//! Under the sharded event kernel (`SimConfig::shards ≥ 2`), arrivals
+//! are *global* events — epoch barriers — so every routing decision is
+//! made coordinator-side at a barrier, over candidate state that all
+//! shards have fully caught up to. The router itself never observes a
+//! half-drained shard. Combined with the deterministic scan order below,
+//! this is why the sharded kernel's routing sequence (and hence its
+//! metrics JSON) is byte-identical to the sequential kernel's.
 
 use std::collections::VecDeque;
 
@@ -221,6 +231,29 @@ mod tests {
         let mut r = router(RoutePolicy::LeastOutstanding, Some(2));
         let c = vec![cand(2, 0.0), cand(5, 0.0)];
         assert_eq!(r.pick(&c), None);
+    }
+
+    #[test]
+    fn replayed_candidate_stream_routes_identically() {
+        // The golden-replay contract: two routers fed the same candidate
+        // snapshots make the same decisions — including hidden cursor
+        // state. This is what barrier-time routing leans on for parity.
+        for policy in
+            [RoutePolicy::RoundRobin, RoutePolicy::LeastOutstanding, RoutePolicy::KvHeadroom]
+        {
+            let mut a = router(policy, Some(3));
+            let mut b = router(policy, Some(3));
+            let mut seed = 0x9e3779b97f4a7c15u64;
+            for step in 0..200 {
+                let c: Vec<_> = (0..4u64)
+                    .map(|i| {
+                        seed = seed.wrapping_mul(6364136223846793005).wrapping_add(i + 1);
+                        cand((seed >> 60) as usize % 4, (seed >> 32) as f64)
+                    })
+                    .collect();
+                assert_eq!(a.pick(&c), b.pick(&c), "{policy:?} diverged at step {step}");
+            }
+        }
     }
 
     #[test]

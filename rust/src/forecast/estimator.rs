@@ -169,10 +169,16 @@ impl HoltWinters {
 
     /// Forecast `k` buckets ahead: level + k·trend + the seasonal offset
     /// of the target phase (zero until a full period has been seen).
+    ///
+    /// The last folded bucket sat at phase `idx - 1` (mod p), so the
+    /// bucket `k` ahead of it sits at phase `idx - 1 + k` (mod p) —
+    /// `k = 0` is the bucket just closed, `k = 1` the next one (phase
+    /// `idx`). The old `k.saturating_sub(1)` derivation made horizons 0
+    /// and 1 silently read the same seasonal slot.
     pub fn forecast(&self, k: usize) -> f64 {
         let p = self.season.len();
         let seasonal = if self.buckets_seen as usize >= p {
-            self.season[(self.idx + k.saturating_sub(1)) % p]
+            self.season[(self.idx + p - 1 + k) % p]
         } else {
             0.0
         };
@@ -475,6 +481,31 @@ mod tests {
         assert!(ahead > now + 4.0, "holt ahead {ahead} vs level {now}");
         // composed forecast is the conservative envelope, so ≥ holt's
         assert!(f.forecast(10.0) >= ahead - 1e-9);
+    }
+
+    #[test]
+    fn holt_winters_horizons_zero_and_one_read_distinct_seasonal_slots() {
+        // regression: `k.saturating_sub(1)` aliased horizons 0 and 1 onto
+        // the same seasonal slot. Alternate low/high rates (period 2) and
+        // pin each horizon to its own phase.
+        let mut hw = HoltWinters::new(0.5, 0.1, 0.5, 2);
+        for _ in 0..20 {
+            hw.update(2.0); // phase 0
+            hw.update(10.0); // phase 1
+        }
+        // last folded bucket: rate 10 at phase 1 → horizon 0 re-reads the
+        // high phase, horizon 1 (one bucket ahead) lands on the low phase
+        let now = hw.forecast(0);
+        let next = hw.forecast(1);
+        assert!(
+            now - next > 3.0,
+            "horizon 0 ({now}) must sit well above horizon 1 ({next})"
+        );
+        assert!((now - 10.0).abs() < (now - 2.0).abs(), "h=0 tracks the high phase");
+        assert!((next - 2.0).abs() < (next - 10.0).abs(), "h=1 tracks the low phase");
+        // two buckets ahead wraps back onto the high phase
+        let wrap = hw.forecast(2);
+        assert!((wrap - now).abs() < 2.0, "h=2 ({wrap}) wraps to h=0's phase ({now})");
     }
 
     #[test]

@@ -122,7 +122,12 @@ impl KvCache for PagedKvCache {
     }
 
     fn append_token(&mut self, seq: u64) -> Result<(), f64> {
-        let a = *self.seqs.get(&seq).expect("unknown sequence");
+        // An unknown id (e.g. a sequence preempted/removed between the
+        // decode decision and the append) is an error, not a panic: no
+        // bytes are missing, so the reported deficit is zero.
+        let Some(&a) = self.seqs.get(&seq) else {
+            return Err(0.0);
+        };
         let need = self.blocks_for(a.tokens + 1);
         if need > a.blocks {
             if self.free_blocks == 0 {
@@ -130,7 +135,7 @@ impl KvCache for PagedKvCache {
             }
             self.free_blocks -= 1;
         }
-        let e = self.seqs.get_mut(&seq).unwrap();
+        let e = self.seqs.get_mut(&seq).expect("checked above");
         e.tokens += 1;
         e.blocks = need.max(a.blocks);
         Ok(())
@@ -198,7 +203,11 @@ impl KvCache for ContiguousKvCache {
     }
 
     fn append_token(&mut self, seq: u64) -> Result<(), f64> {
-        let t = self.seqs.get_mut(&seq).expect("unknown sequence");
+        // same contract as the paged allocator: unknown ids report an
+        // error (zero deficit) instead of panicking
+        let Some(t) = self.seqs.get_mut(&seq) else {
+            return Err(0.0);
+        };
         if *t >= self.max_seq_tokens {
             return Err(self.bytes_per_token); // over pre-reserved length
         }
@@ -260,6 +269,27 @@ mod tests {
         c.add_sequence(1, 8).unwrap();
         let e = c.add_sequence(2, 8).unwrap_err();
         assert!(e > 0.0);
+    }
+
+    #[test]
+    fn append_to_unknown_sequence_errs_instead_of_panicking() {
+        // regression: both allocators used to unwrap/expect on the seq
+        // map, so appending to an unknown id took the process down
+        let mut paged = PagedKvCache::new(1e6, BPT, 16);
+        paged.add_sequence(1, 8).unwrap();
+        let free_before = paged.free_blocks();
+        assert!(paged.append_token(99).is_err());
+        assert_eq!(paged.free_blocks(), free_before, "no blocks leaked");
+        assert_eq!(paged.tokens_of(1), Some(8), "live sequences untouched");
+
+        let mut cont = ContiguousKvCache::new(1e7, BPT, 256);
+        cont.add_sequence(1, 8).unwrap();
+        let reserved_before = cont.stats().reserved_bytes;
+        assert!(cont.append_token(99).is_err());
+        assert_eq!(cont.stats().reserved_bytes, reserved_before);
+        // a removed sequence behaves exactly like a never-known one
+        cont.remove_sequence(1);
+        assert!(cont.append_token(1).is_err());
     }
 
     #[test]

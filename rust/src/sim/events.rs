@@ -15,7 +15,7 @@
 //! JSON) possible.
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 
 /// What happens when an event fires.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -145,8 +145,13 @@ impl EventQueue {
     }
 
     /// Schedule `kind` to fire at `time` (must be finite).
+    ///
+    /// Non-finite time is a hard error in **all** builds: a NaN timestamp
+    /// would silently corrupt `total_cmp` heap order (NaN sorts last) and
+    /// with it every determinism guarantee the kernel makes — doubly so
+    /// now that the shard merge relies on cross-queue key comparisons.
     pub fn push(&mut self, time: f64, kind: EventKind) {
-        debug_assert!(time.is_finite(), "event at non-finite time");
+        assert!(time.is_finite(), "event scheduled at non-finite time {time}");
         let seq = self.next_seq;
         self.next_seq += 1;
         self.heap.push(HeapEntry(Event { time, kind, seq }));
@@ -155,6 +160,11 @@ impl EventQueue {
     /// Pop the earliest event (ties broken as the module docs describe).
     pub fn pop(&mut self) -> Option<Event> {
         self.heap.pop().map(|e| e.0)
+    }
+
+    /// The earliest event without popping it.
+    pub fn peek(&self) -> Option<&Event> {
+        self.heap.peek().map(|e| &e.0)
     }
 
     /// Timestamp of the next event without popping it.
@@ -173,9 +183,237 @@ impl EventQueue {
     }
 }
 
+/// Anything the kernel can schedule events into. The event handlers are
+/// written against this so the sequential loop (one [`EventQueue`]) and
+/// the sharded epoch loop ([`ShardedEventQueue`]) share one dispatch body
+/// — which is the whole byte-parity argument: same handlers, same push
+/// sequence, provably same pop order.
+pub trait EventSink {
+    /// Schedule `kind` to fire at `time` (must be finite).
+    fn push(&mut self, time: f64, kind: EventKind);
+}
+
+impl EventSink for EventQueue {
+    fn push(&mut self, time: f64, kind: EventKind) {
+        EventQueue::push(self, time, kind);
+    }
+}
+
+/// Strict `<` over the cross-queue merge key (time, kind priority,
+/// instance id). `total_cmp` is safe here: push rejects non-finite times.
+fn key3_lt(a: (f64, u8, usize), b: (f64, u8, usize)) -> bool {
+    a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)) == Ordering::Less
+}
+
+/// Strict `<` over the full per-queue key (merge key + FIFO seq). Only
+/// ever decides ties *within* one shard (buffer front vs. its own queue
+/// head, which share a seq counter); across queues the first three
+/// components never tie — see [`ShardedEventQueue`].
+fn key4_lt(a: (f64, u8, usize, u64), b: (f64, u8, usize, u64)) -> bool {
+    a.0.total_cmp(&b.0)
+        .then(a.1.cmp(&b.1))
+        .then(a.2.cmp(&b.2))
+        .then(a.3.cmp(&b.3))
+        == Ordering::Less
+}
+
+/// Below this many queued shard events an epoch drain runs inline —
+/// spawning scoped threads costs more than it saves. The choice is
+/// performance-only: drained-vs-live events merge identically either way.
+const PARALLEL_DRAIN_MIN: usize = 4096;
+
+/// One instance-group shard: its own deterministic queue plus the window
+/// buffer the epoch fan-out drains into (front = next to merge).
+#[derive(Debug, Default)]
+struct Shard {
+    queue: EventQueue,
+    buffer: VecDeque<Event>,
+}
+
+impl Shard {
+    /// Pop every event ordering strictly before `bound` (the next
+    /// coordinator barrier; `None` = drain everything) into the buffer.
+    fn drain_due(&mut self, bound: Option<(f64, u8, usize)>) {
+        while let Some(e) = self.queue.peek() {
+            let k = (e.time, e.kind.priority(), e.kind.instance_key());
+            if let Some(b) = bound {
+                if !key3_lt(k, b) {
+                    break;
+                }
+            }
+            let e = self.queue.pop().expect("peeked event");
+            self.buffer.push_back(e);
+        }
+    }
+
+    /// Full key of this shard's next event: the earlier of the buffer
+    /// front and the live queue head (both keyed by one seq counter).
+    fn head_key(&self) -> Option<((f64, u8, usize, u64), bool)> {
+        let b = self.buffer.front().map(|e| e.key());
+        let q = self.queue.peek().map(|e| e.key());
+        match (b, q) {
+            (None, None) => None,
+            (Some(bk), None) => Some((bk, true)),
+            (None, Some(qk)) => Some((qk, false)),
+            (Some(bk), Some(qk)) => {
+                // same counter, distinct seqs — strictly ordered
+                if key4_lt(bk, qk) {
+                    Some((bk, true))
+                } else {
+                    Some((qk, false))
+                }
+            }
+        }
+    }
+}
+
+/// The sharded event queue behind the epoch-barrier drive loop.
+///
+/// Events split by kind: **global** kinds (`Arrival`, `ForecastTick`,
+/// `ControllerTick` — the coordinator barriers) live in one global queue;
+/// **instance-local** kinds (`Routed`, `OpStarted`, `OpCompleted`,
+/// `StepComplete`, `Wake`) go to the shard owning their instance
+/// (`instance % n_shards`). Within an epoch — the span between two
+/// global events — each shard drains its due events independently (in
+/// parallel via [`std::thread::scope`] when there is enough queued work),
+/// and [`ShardedEventQueue::pop_merged`] merges shard windows and barrier
+/// events back into one stream.
+///
+/// ### Why the merged order is *identical* to one [`EventQueue`]
+///
+/// The single-queue order is (time, kind priority, instance id, FIFO
+/// seq). Across sub-queues the first three components never tie: global
+/// kinds hold priorities {0, 2, 3} and local kinds {1, 4, 5, 6, 7}
+/// (disjoint), and two local events with equal (time, priority) in
+/// different shards name different instances by construction. A tie can
+/// therefore only occur *within* one sub-queue, where its own FIFO
+/// counter reproduces global push order (pushes interleave identically —
+/// the kernel pushes in the same sequence either way). Hence per-queue
+/// seq counters suffice, and the merge is exact — the property test
+/// below drives randomly split streams through both paths and asserts
+/// equality.
+#[derive(Debug)]
+pub struct ShardedEventQueue {
+    shards: Vec<Shard>,
+    global: EventQueue,
+}
+
+impl ShardedEventQueue {
+    /// A queue with `n_shards` instance-group shards (≥ 1).
+    pub fn new(n_shards: usize) -> ShardedEventQueue {
+        assert!(n_shards >= 1, "need at least one shard");
+        ShardedEventQueue {
+            shards: (0..n_shards).map(|_| Shard::default()).collect(),
+            global: EventQueue::new(),
+        }
+    }
+
+    /// Number of instance-group shards.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Which shard owns `kind` (`None` = the global barrier queue).
+    fn shard_of(&self, kind: &EventKind) -> Option<usize> {
+        match kind {
+            EventKind::Arrival { .. }
+            | EventKind::ForecastTick
+            | EventKind::ControllerTick => None,
+            _ => Some(kind.instance_key() % self.shards.len()),
+        }
+    }
+
+    /// Events currently scheduled (all shards + barriers + windows).
+    pub fn len(&self) -> usize {
+        self.global.len()
+            + self.shards.iter().map(|s| s.queue.len() + s.buffer.len()).sum::<usize>()
+    }
+
+    /// Is nothing scheduled?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Start-of-epoch fan-out: when every window buffer is empty, pop
+    /// each shard's events ordering before the next coordinator barrier
+    /// (the global queue's head) into that shard's window buffer — in
+    /// parallel across shards when enough work is queued to pay for the
+    /// threads. Mid-epoch (windows still being consumed) this is a no-op;
+    /// events scheduled during the epoch stay in their live shard queues
+    /// and merge through [`Self::pop_merged`]'s head comparison, so the
+    /// buffered/live split never affects the merged order.
+    pub fn drain_epoch(&mut self) {
+        if self.shards.iter().any(|s| !s.buffer.is_empty()) {
+            return;
+        }
+        let bound = self
+            .global
+            .peek()
+            .map(|e| (e.time, e.kind.priority(), e.kind.instance_key()));
+        let queued: usize = self.shards.iter().map(|s| s.queue.len()).sum();
+        if self.shards.len() >= 2 && queued >= PARALLEL_DRAIN_MIN {
+            std::thread::scope(|scope| {
+                for shard in self.shards.iter_mut() {
+                    scope.spawn(move || shard.drain_due(bound));
+                }
+            });
+        } else {
+            for shard in self.shards.iter_mut() {
+                shard.drain_due(bound);
+            }
+        }
+    }
+
+    /// Pop the earliest event across every shard window, live shard
+    /// queue, and the global barrier queue — the deterministic K-way
+    /// merge. Exactly reproduces a single queue's pop order (see the
+    /// type-level docs for the tie-impossibility argument).
+    pub fn pop_merged(&mut self) -> Option<Event> {
+        enum Src {
+            Shard(usize, bool), // (index, from_buffer)
+            Global,
+        }
+        let mut best: Option<((f64, u8, usize, u64), Src)> = None;
+        let beats = |k: (f64, u8, usize, u64), best: &Option<((f64, u8, usize, u64), Src)>| {
+            match best {
+                None => true,
+                Some((bk, _)) => key4_lt(k, *bk),
+            }
+        };
+        for (i, shard) in self.shards.iter().enumerate() {
+            if let Some((k, from_buffer)) = shard.head_key() {
+                if beats(k, &best) {
+                    best = Some((k, Src::Shard(i, from_buffer)));
+                }
+            }
+        }
+        if let Some(e) = self.global.peek() {
+            let k = e.key();
+            if beats(k, &best) {
+                best = Some((k, Src::Global));
+            }
+        }
+        match best?.1 {
+            Src::Shard(i, true) => self.shards[i].buffer.pop_front(),
+            Src::Shard(i, false) => self.shards[i].queue.pop(),
+            Src::Global => self.global.pop(),
+        }
+    }
+}
+
+impl EventSink for ShardedEventQueue {
+    fn push(&mut self, time: f64, kind: EventKind) {
+        match self.shard_of(&kind) {
+            None => self.global.push(time, kind),
+            Some(s) => self.shards[s].queue.push(time, kind),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::{prop, rng::Rng};
 
     fn drain(q: &mut EventQueue) -> Vec<Event> {
         let mut v = vec![];
@@ -245,6 +483,129 @@ mod tests {
         assert_eq!(q.pop().unwrap().time, 0.5);
         assert_eq!(q.peek_time(), Some(2.0));
         assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite time")]
+    fn non_finite_time_is_a_hard_error_in_all_builds() {
+        // regression: this used to be a debug_assert!, so a release build
+        // would silently accept NaN and corrupt the heap order
+        let mut q = EventQueue::new();
+        q.push(f64::NAN, EventKind::ControllerTick);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite time")]
+    fn infinite_time_is_rejected_too() {
+        let mut q = EventQueue::new();
+        q.push(f64::INFINITY, EventKind::Wake { instance: 0 });
+    }
+
+    /// Random event kind for the merge property (same-time batches across
+    /// all kinds and instances).
+    fn arbitrary_kind(r: &mut Rng) -> EventKind {
+        let instance = r.below(6) as usize;
+        match r.below(8) {
+            0 => EventKind::Arrival { request_idx: r.below(50) as usize },
+            1 => EventKind::Routed { request_idx: r.below(50) as usize, instance },
+            2 => EventKind::ForecastTick,
+            3 => EventKind::ControllerTick,
+            4 => EventKind::OpCompleted {
+                instance,
+                op_idx: r.below(4) as usize,
+                epoch: r.below(3),
+            },
+            5 => EventKind::OpStarted {
+                instance,
+                op_idx: r.below(4) as usize,
+                epoch: r.below(3),
+            },
+            6 => EventKind::StepComplete { instance, token: r.below(20) },
+            _ => EventKind::Wake { instance },
+        }
+    }
+
+    /// Property: splitting a push stream across K shards and merging back
+    /// pops the exact sequence a single sequential queue pops over the
+    /// union — with randomized same-time batches across kinds/instances,
+    /// interleaved pops, and epoch drains exercising the window buffers.
+    #[test]
+    fn prop_shard_merge_matches_sequential_queue() {
+        prop::check(
+            "shard-merge-parity",
+            |r: &mut Rng| {
+                // (time, kind) pushes from a coarse time grid so same-time
+                // ties across kinds + instances are common, plus an action
+                // tape: 0 = push, 1 = pop, 2 = drain_epoch
+                let pushes: Vec<(f64, EventKind)> = (0..120)
+                    .map(|_| (r.below(8) as f64 * 0.5, arbitrary_kind(r)))
+                    .collect();
+                let actions: Vec<u8> =
+                    (0..200).map(|_| r.below(3) as u8).collect();
+                let k = 1 + r.below(5) as usize;
+                (pushes, actions, k)
+            },
+            |(pushes, actions, k)| {
+                let mut single = EventQueue::new();
+                let mut sharded = ShardedEventQueue::new(*k);
+                let mut next_push = 0usize;
+                for &a in actions {
+                    match a {
+                        0 if next_push < pushes.len() => {
+                            let (t, kind) = pushes[next_push];
+                            next_push += 1;
+                            single.push(t, kind);
+                            EventSink::push(&mut sharded, t, kind);
+                        }
+                        1 => {
+                            let want = single.pop().map(|e| (e.time, e.kind));
+                            let got = sharded.pop_merged().map(|e| (e.time, e.kind));
+                            if want != got {
+                                return Err(format!("pop mismatch: {want:?} vs {got:?}"));
+                            }
+                        }
+                        _ => sharded.drain_epoch(),
+                    }
+                }
+                // flush the remainder in lockstep
+                loop {
+                    let want = single.pop().map(|e| (e.time, e.kind));
+                    let got = sharded.pop_merged().map(|e| (e.time, e.kind));
+                    if want != got {
+                        return Err(format!("tail mismatch: {want:?} vs {got:?}"));
+                    }
+                    if want.is_none() {
+                        return Ok(());
+                    }
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shard_merge_interleaves_barrier_and_local_events() {
+        // at one timestamp: Arrival(0) < Routed(1) < Forecast(2) <
+        // Controller(3) < locals — the merge must interleave the global
+        // queue between local priorities, not treat it as one block
+        let mut q = ShardedEventQueue::new(2);
+        EventSink::push(&mut q, 1.0, EventKind::StepComplete { instance: 3, token: 9 });
+        EventSink::push(&mut q, 1.0, EventKind::ControllerTick);
+        EventSink::push(&mut q, 1.0, EventKind::Routed { request_idx: 0, instance: 4 });
+        EventSink::push(&mut q, 1.0, EventKind::Arrival { request_idx: 0 });
+        q.drain_epoch(); // windows stop at the Arrival barrier
+        let mut kinds = vec![];
+        while let Some(e) = q.pop_merged() {
+            kinds.push(e.kind);
+        }
+        assert_eq!(
+            kinds,
+            vec![
+                EventKind::Arrival { request_idx: 0 },
+                EventKind::Routed { request_idx: 0, instance: 4 },
+                EventKind::ControllerTick,
+                EventKind::StepComplete { instance: 3, token: 9 },
+            ]
+        );
     }
 
     #[test]

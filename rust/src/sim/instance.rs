@@ -152,6 +152,11 @@ pub(crate) struct Instance {
     pub kv_peak: KvStats,
     /// Earliest wake-up already scheduled for this instance (dedup).
     pub scheduled_wake: Option<f64>,
+    /// Requests routed here but not yet delivered (the `Routed` event is
+    /// still in flight). Shard-local load state: keeping it on the
+    /// instance rather than in a coordinator-side vector means the
+    /// sharded kernel's router reads it without cross-shard traffic.
+    pub outstanding_routes: u32,
     /// Fleet lifecycle state (always `Active` outside fleet mode).
     pub lifecycle: Lifecycle,
     /// Earliest time the router may offer this instance traffic (spin-up
@@ -214,6 +219,7 @@ impl Instance {
             monitor: Monitor::new(cfg.slo_latency_s),
             kv_peak: Default::default(),
             scheduled_wake: None,
+            outstanding_routes: 0,
             lifecycle: Lifecycle::Active,
             active_after: 0.0,
             reroute_shed: false,

@@ -81,7 +81,7 @@ use crate::plan::{PlanCost, ScalePlan};
 use crate::scheduler::SchedulerConfig;
 use crate::workload::{Request, Trace};
 
-use events::{EventKind, EventQueue};
+use events::{Event, EventKind, EventQueue, EventSink, ShardedEventQueue};
 use instance::{Instance, Lifecycle, OpOutcome, StepCtx, StepStart};
 
 /// Serving-path pause when a replication plan lands (synchronization
@@ -181,6 +181,13 @@ pub struct SimConfig {
     /// cost/benefit knob behind Fig. 10's "+9% memory over HFT×2" point
     /// (unbounded harvesting would converge to full model copies).
     pub replica_budget: usize,
+    /// Event-queue shards (instance groups drained between coordinator
+    /// barriers). `1` (the default everywhere) runs the single-queue
+    /// sequential loop; `≥ 2` runs the epoch-barrier sharded kernel,
+    /// whose golden metrics JSON is byte-identical to the sequential
+    /// one — asserted per scenario in `rust/tests/shard_parity.rs` and
+    /// by the CI smoke step.
+    pub shards: usize,
 }
 
 impl SimConfig {
@@ -203,6 +210,7 @@ impl SimConfig {
             oom_penalty_s: 12.0,
             max_seq_len: 512,
             replica_budget: 12,
+            shards: 1,
         }
     }
 
@@ -243,10 +251,6 @@ pub struct Simulation {
     controller: Controller,
     /// The coordinator's request router (front door of the fleet).
     router: Router,
-    /// Requests routed (Routed event scheduled) but not yet delivered,
-    /// per instance — counted into the routing load signal so same-time
-    /// decisions observe each other.
-    outstanding_routes: Vec<u32>,
     /// Fleet-level lifecycle controller (None = fixed fleet).
     fleet: Option<FleetController>,
     /// Predictive control plane (None = reactive only).
@@ -311,7 +315,6 @@ impl Simulation {
                 (inst.placement_rev, devs)
             })
             .collect();
-        let outstanding_routes = vec![0; instances.len()];
         // The predictor's capacity conversion is derived from the same
         // cost model and compiled step costs the kernel charges serving
         // steps with — one costing path (see forecast::capacity).
@@ -337,7 +340,6 @@ impl Simulation {
             instances,
             controller: Controller::new(setup.controller),
             router: Router::new(setup.router),
-            outstanding_routes,
             fleet: setup.fleet.map(FleetController::new),
             predictive,
             ledger,
@@ -358,12 +360,14 @@ impl Simulation {
     // ---- routing (the coordinator's front door) ---------------------------
 
     /// Instance `i`'s outstanding load: scheduler pending + running, plus
-    /// requests already routed this timestamp but not yet delivered. The
-    /// one load definition behind routing decisions and the fleet
-    /// telemetry window, so coinciding decisions observe each other and
-    /// the controllers read the numbers the router acts on.
+    /// requests already routed this timestamp but not yet delivered (the
+    /// in-flight count lives on the instance itself, next to the rest of
+    /// its shard-local state). The one load definition behind routing
+    /// decisions and the fleet telemetry window, so coinciding decisions
+    /// observe each other and the controllers read the numbers the
+    /// router acts on.
     fn outstanding(&self, i: usize) -> usize {
-        self.instances[i].scheduler.load() + self.outstanding_routes[i] as usize
+        self.instances[i].scheduler.load() + self.instances[i].outstanding_routes as usize
     }
 
     /// Snapshot every instance's routing-relevant state for one decision.
@@ -387,12 +391,12 @@ impl Simulation {
     /// Route one arrival: pick an instance and schedule its `Routed`
     /// delivery at the current time, or park the request under admission
     /// backpressure.
-    fn route_arrival(&mut self, request_idx: usize, req: Request, q: &mut EventQueue) {
+    fn route_arrival(&mut self, request_idx: usize, req: Request, q: &mut dyn EventSink) {
         let cands = self.route_candidates();
         match self.router.pick(&cands) {
             Some(i) => {
                 self.router.routes += 1;
-                self.outstanding_routes[i] += 1;
+                self.instances[i].outstanding_routes += 1;
                 q.push(self.now, EventKind::Routed { request_idx, instance: i });
             }
             None => self.router.park(req, 0.0, false),
@@ -509,7 +513,7 @@ impl Simulation {
 
     /// One §5 control tick: run the planners for every autoscaling
     /// instance and admit emitted plans for in-flight execution.
-    fn controller_tick(&mut self, q: &mut EventQueue) {
+    fn controller_tick(&mut self, q: &mut dyn EventSink) {
         for i in 0..self.instances.len() {
             if !self.instances[i].policy.autoscale
                 || self.instances[i].lifecycle != Lifecycle::Active
@@ -577,7 +581,7 @@ impl Simulation {
     /// aggregate pressure signal, and scale out (module replication vs.
     /// whole-instance spin-up, arbitrated by dry-run cost) or drain.
     /// Runs before the per-instance controllers on every `ControllerTick`.
-    fn fleet_tick(&mut self, q: &mut EventQueue) {
+    fn fleet_tick(&mut self, q: &mut dyn EventSink) {
         if self.fleet.is_none() {
             return;
         }
@@ -696,7 +700,7 @@ impl Simulation {
     /// sustained one, and a burst may need both in the same tick.
     /// Proposals are subject to the reactive veto; enactments arm the
     /// shared fleet cooldown.
-    fn predictive_tick(&mut self, inputs: &FleetInputs, q: &mut EventQueue) {
+    fn predictive_tick(&mut self, inputs: &FleetInputs, q: &mut dyn EventSink) {
         if self.predictive.is_none() || self.fleet.is_none() {
             return;
         }
@@ -821,7 +825,7 @@ impl Simulation {
     /// of added capacity, and execute the cheaper option. Replication
     /// flows through the normal in-flight plan path; spin-up deploys a new
     /// instance that starts accepting traffic after the cold start.
-    fn fleet_scale_out(&mut self, q: &mut EventQueue) {
+    fn fleet_scale_out(&mut self, q: &mut dyn EventSink) {
         let replication = self.replication_option();
         let fc = self.fleet.as_ref().expect("fleet mode").cfg;
         let spin_dev = self.spin_candidate();
@@ -854,7 +858,7 @@ impl Simulation {
     /// Deploy a new instance on `device`. Weights are resident (and its
     /// devices billed) from now; the router starts offering it traffic
     /// after the configured cold start.
-    fn spin_up(&mut self, device: usize, q: &mut EventQueue) {
+    fn spin_up(&mut self, device: usize, q: &mut dyn EventSink) {
         let id = self.instances.len();
         let fc = self.fleet.as_ref().expect("fleet mode").cfg;
         let placement = Placement::single_device(self.cfg.model.n_layers, device);
@@ -868,7 +872,6 @@ impl Simulation {
             self.ledger.acquire(d);
         }
         self.bill_cache.push((inst.placement_rev, devs));
-        self.outstanding_routes.push(0);
         self.instances.push(inst);
         self.fleet_events.push(FleetEvent { t: self.now, instance: id, phase: FleetPhase::SpinUp });
         // wake at activation so parked requests route promptly even when
@@ -885,7 +888,7 @@ impl Simulation {
         plan: ScalePlan,
         cost: PlanCost,
         batch_after: Option<usize>,
-        q: &mut EventQueue,
+        q: &mut dyn EventSink,
     ) {
         if plan.is_empty() {
             if let Some(b) = batch_after {
@@ -902,7 +905,7 @@ impl Simulation {
 
     /// Schedule a wake-up for instance `i` at `at`, unless one is already
     /// pending at or before that time.
-    fn schedule_wake(&mut self, i: usize, at: f64, q: &mut EventQueue) {
+    fn schedule_wake(&mut self, i: usize, at: f64, q: &mut dyn EventSink) {
         let now = self.now;
         let inst = &mut self.instances[i];
         let covered =
@@ -916,7 +919,7 @@ impl Simulation {
     /// Ask an idle instance to start its next step; schedule the follow-up
     /// event (completion, timeout wake, op-block wake, or OOM-backoff
     /// wake).
-    fn try_start(&mut self, i: usize, q: &mut EventQueue) {
+    fn try_start(&mut self, i: usize, q: &mut dyn EventSink) {
         if self.instances[i].busy_until.is_some() {
             return;
         }
@@ -961,19 +964,19 @@ impl Simulation {
         self.router.pending.is_empty()
             // a routed-but-undelivered request still has its Routed event
             // in the queue — the fleet is not idle until it lands
-            && self.outstanding_routes.iter().all(|&n| n == 0)
             && self.instances.iter().all(|i| {
-                i.scheduler.is_idle() && i.busy_until.is_none() && i.inflight.is_none()
+                i.outstanding_routes == 0
+                    && i.scheduler.is_idle()
+                    && i.busy_until.is_none()
+                    && i.inflight.is_none()
             })
     }
 
     // ---- the event loop ---------------------------------------------------
 
-    /// Run the trace to completion (plus drain); returns the report.
-    pub fn run(mut self, trace: &Trace, duration_s: f64) -> SimReport {
-        let drain_deadline = duration_s + 300.0;
-        let mut q = EventQueue::new();
-        let mut next_req = 0usize;
+    /// Seed the queue: the first arrival, the controller tick train, and
+    /// (when a predictor is configured) the forecast tick train + oracle.
+    fn seed(&mut self, trace: &Trace, drain_deadline: f64, q: &mut dyn EventSink) {
         if let Some(r) = trace.requests.first() {
             q.push(r.arrival_s, EventKind::Arrival { request_idx: 0 });
         }
@@ -996,7 +999,169 @@ impl Simulation {
             }
             q.push(self.cfg.controller_tick_s, EventKind::ForecastTick);
         }
+    }
 
+    /// Process one popped event: the handler match plus the coordinator
+    /// follow-ups (shed re-routes, parked retries, the readiness sweep,
+    /// billing reconciliation). **This is the one dispatch body both
+    /// drive loops share** — the sequential loop feeds it from a single
+    /// [`EventQueue`], the sharded loop from [`ShardedEventQueue`]'s
+    /// merged stream. Same events in the same order through the same
+    /// code is what makes the two kernels' metrics JSON byte-identical.
+    fn dispatch(
+        &mut self,
+        ev: Event,
+        trace: &Trace,
+        next_req: &mut usize,
+        q: &mut dyn EventSink,
+    ) {
+        self.now = ev.time;
+        self.events_processed += 1;
+        // bill device-seconds up to this event at the pre-event rate
+        self.ledger.advance(self.now);
+
+        match ev.kind {
+            EventKind::Arrival { request_idx } => {
+                // Request is Copy: arrivals index into the trace, no
+                // per-arrival heap clone.
+                let req = trace.requests[request_idx];
+                *next_req = request_idx + 1;
+                if let Some(r) = trace.requests.get(*next_req) {
+                    q.push(r.arrival_s, EventKind::Arrival { request_idx: *next_req });
+                }
+                self.route_arrival(request_idx, req, q);
+            }
+            EventKind::Routed { request_idx, instance } => {
+                // the predictor sees what the coordinator routes
+                if let Some(p) = &mut self.predictive {
+                    p.forecaster.observe(self.now);
+                }
+                self.instances[instance].outstanding_routes -= 1;
+                self.instances[instance].deliver(trace.requests[request_idx], 0.0);
+            }
+            EventKind::ForecastTick => {
+                // close rate buckets up to now (quiet gaps decay the
+                // estimators) right before the coinciding controller
+                // tick consumes the forecast
+                if let Some(p) = &mut self.predictive {
+                    p.forecaster.advance(self.now);
+                    q.push(self.now + self.cfg.controller_tick_s, EventKind::ForecastTick);
+                }
+            }
+            EventKind::ControllerTick => {
+                self.fleet_tick(q);
+                self.controller_tick(q);
+                q.push(self.now + self.cfg.controller_tick_s, EventKind::ControllerTick);
+            }
+            EventKind::OpStarted { instance, op_idx, epoch } => {
+                let outcome = self.instances[instance].on_op_started(self.now, op_idx, epoch);
+                if let OpOutcome::Started { desc } = outcome {
+                    self.scale.events.push(OpEvent {
+                        t: self.now,
+                        instance,
+                        op_idx,
+                        phase: OpPhase::Started,
+                        desc,
+                    });
+                }
+            }
+            EventKind::OpCompleted { instance, op_idx, epoch } => {
+                let ctx = StepCtx { cfg: &self.cfg, cost: &self.cost, now: self.now };
+                let outcome = self.instances[instance].on_op_completed(
+                    &ctx,
+                    &mut self.cluster,
+                    op_idx,
+                    epoch,
+                );
+                match outcome {
+                    OpOutcome::Applied { desc, cost, .. } => {
+                        self.scale.op_time_s += cost.time_s;
+                        self.scale.events.push(OpEvent {
+                            t: self.now,
+                            instance,
+                            op_idx,
+                            phase: OpPhase::Completed,
+                            desc,
+                        });
+                    }
+                    OpOutcome::Aborted { desc } => {
+                        self.scale.plans_aborted += 1;
+                        self.scale.events.push(OpEvent {
+                            t: self.now,
+                            instance,
+                            op_idx,
+                            phase: OpPhase::Aborted,
+                            desc,
+                        });
+                    }
+                    OpOutcome::Started { .. } | OpOutcome::Stale => {}
+                }
+            }
+            EventKind::StepComplete { instance, token } => {
+                let inst = &mut self.instances[instance];
+                // Stale tokens: an OOM rebuild cleared the in-flight
+                // step after this completion was scheduled.
+                if inst.step_token == token && inst.busy_until.is_some() {
+                    inst.busy_until = None;
+                    self.instances[instance].finish_completions(self.now, &mut self.cluster);
+                }
+            }
+            EventKind::Wake { instance } => {
+                let inst = &mut self.instances[instance];
+                if matches!(inst.scheduled_wake, Some(w) if w <= self.now + 1e-9) {
+                    inst.scheduled_wake = None;
+                }
+            }
+        }
+        self.peak_mem = self.peak_mem.max(self.cluster.total_used_bytes());
+
+        // Coordinator follow-ups: re-route requests shed by OOM
+        // handling during this event, then retry parked requests —
+        // both before the readiness sweep so newly delivered work can
+        // start at this timestamp.
+        self.collect_shed();
+        self.drain_parked();
+
+        // Readiness sweep: every idle instance with queued work gets a
+        // chance to start, in ascending id order (deterministic). Idle
+        // instances *without* work are skipped cheaply; instances with
+        // queued work are deliberately re-polled on every event — that
+        // keeps the lockstep loop's retry cadence for OOM-stalled and
+        // timeout-waiting instances (their wake events are only the
+        // no-other-traffic fallback).
+        for i in 0..self.instances.len() {
+            if self.instances[i].busy_until.is_none() && self.instances[i].has_work() {
+                self.try_start(i, q);
+            }
+        }
+        // The sweep can shed too (OOM on step start) — collect before
+        // leaving the timestamp so the requests are not stranded.
+        self.collect_shed();
+        // Reconcile device-seconds billing with any placement moves
+        // this event (or its sweep) made.
+        self.sync_billing();
+    }
+
+    /// Run the trace to completion (plus drain); returns the report.
+    ///
+    /// `cfg.shards == 1` (the default) runs today's single-queue loop;
+    /// `cfg.shards ≥ 2` runs the epoch-barrier sharded kernel. The two
+    /// produce byte-identical metrics JSON (asserted per scenario in
+    /// `rust/tests/shard_parity.rs`).
+    pub fn run(self, trace: &Trace, duration_s: f64) -> SimReport {
+        if self.cfg.shards <= 1 {
+            self.run_sequential(trace, duration_s)
+        } else {
+            self.run_sharded(trace, duration_s)
+        }
+    }
+
+    /// The sequential kernel: one deterministic queue, one pop loop.
+    fn run_sequential(mut self, trace: &Trace, duration_s: f64) -> SimReport {
+        let drain_deadline = duration_s + 300.0;
+        let mut q = EventQueue::new();
+        let mut next_req = 0usize;
+        self.seed(trace, drain_deadline, &mut q);
         loop {
             if next_req >= trace.requests.len() && self.all_idle() {
                 break;
@@ -1005,139 +1170,42 @@ impl Simulation {
             if ev.time > drain_deadline {
                 break;
             }
-            self.now = ev.time;
-            self.events_processed += 1;
-            // bill device-seconds up to this event at the pre-event rate
-            self.ledger.advance(self.now);
-
-            match ev.kind {
-                EventKind::Arrival { request_idx } => {
-                    // Request is Copy: arrivals index into the trace, no
-                    // per-arrival heap clone.
-                    let req = trace.requests[request_idx];
-                    next_req = request_idx + 1;
-                    if let Some(r) = trace.requests.get(next_req) {
-                        q.push(r.arrival_s, EventKind::Arrival { request_idx: next_req });
-                    }
-                    self.route_arrival(request_idx, req, &mut q);
-                }
-                EventKind::Routed { request_idx, instance } => {
-                    // the predictor sees what the coordinator routes
-                    if let Some(p) = &mut self.predictive {
-                        p.forecaster.observe(self.now);
-                    }
-                    self.outstanding_routes[instance] -= 1;
-                    self.instances[instance].deliver(trace.requests[request_idx], 0.0);
-                }
-                EventKind::ForecastTick => {
-                    // close rate buckets up to now (quiet gaps decay the
-                    // estimators) right before the coinciding controller
-                    // tick consumes the forecast
-                    if let Some(p) = &mut self.predictive {
-                        p.forecaster.advance(self.now);
-                        q.push(
-                            self.now + self.cfg.controller_tick_s,
-                            EventKind::ForecastTick,
-                        );
-                    }
-                }
-                EventKind::ControllerTick => {
-                    self.fleet_tick(&mut q);
-                    self.controller_tick(&mut q);
-                    q.push(self.now + self.cfg.controller_tick_s, EventKind::ControllerTick);
-                }
-                EventKind::OpStarted { instance, op_idx, epoch } => {
-                    let outcome =
-                        self.instances[instance].on_op_started(self.now, op_idx, epoch);
-                    if let OpOutcome::Started { desc } = outcome {
-                        self.scale.events.push(OpEvent {
-                            t: self.now,
-                            instance,
-                            op_idx,
-                            phase: OpPhase::Started,
-                            desc,
-                        });
-                    }
-                }
-                EventKind::OpCompleted { instance, op_idx, epoch } => {
-                    let ctx = StepCtx { cfg: &self.cfg, cost: &self.cost, now: self.now };
-                    let outcome = self.instances[instance].on_op_completed(
-                        &ctx,
-                        &mut self.cluster,
-                        op_idx,
-                        epoch,
-                    );
-                    match outcome {
-                        OpOutcome::Applied { desc, cost, .. } => {
-                            self.scale.op_time_s += cost.time_s;
-                            self.scale.events.push(OpEvent {
-                                t: self.now,
-                                instance,
-                                op_idx,
-                                phase: OpPhase::Completed,
-                                desc,
-                            });
-                        }
-                        OpOutcome::Aborted { desc } => {
-                            self.scale.plans_aborted += 1;
-                            self.scale.events.push(OpEvent {
-                                t: self.now,
-                                instance,
-                                op_idx,
-                                phase: OpPhase::Aborted,
-                                desc,
-                            });
-                        }
-                        OpOutcome::Started { .. } | OpOutcome::Stale => {}
-                    }
-                }
-                EventKind::StepComplete { instance, token } => {
-                    let inst = &mut self.instances[instance];
-                    // Stale tokens: an OOM rebuild cleared the in-flight
-                    // step after this completion was scheduled.
-                    if inst.step_token == token && inst.busy_until.is_some() {
-                        inst.busy_until = None;
-                        self.instances[instance]
-                            .finish_completions(self.now, &mut self.cluster);
-                    }
-                }
-                EventKind::Wake { instance } => {
-                    let inst = &mut self.instances[instance];
-                    if matches!(inst.scheduled_wake, Some(w) if w <= self.now + 1e-9) {
-                        inst.scheduled_wake = None;
-                    }
-                }
-            }
-            self.peak_mem = self.peak_mem.max(self.cluster.total_used_bytes());
-
-            // Coordinator follow-ups: re-route requests shed by OOM
-            // handling during this event, then retry parked requests —
-            // both before the readiness sweep so newly delivered work can
-            // start at this timestamp.
-            self.collect_shed();
-            self.drain_parked();
-
-            // Readiness sweep: every idle instance with queued work gets a
-            // chance to start, in ascending id order (deterministic). Idle
-            // instances *without* work are skipped cheaply; instances with
-            // queued work are deliberately re-polled on every event — that
-            // keeps the lockstep loop's retry cadence for OOM-stalled and
-            // timeout-waiting instances (their wake events are only the
-            // no-other-traffic fallback).
-            for i in 0..self.instances.len() {
-                if self.instances[i].busy_until.is_none() && self.instances[i].has_work()
-                {
-                    self.try_start(i, &mut q);
-                }
-            }
-            // The sweep can shed too (OOM on step start) — collect before
-            // leaving the timestamp so the requests are not stranded.
-            self.collect_shed();
-            // Reconcile device-seconds billing with any placement moves
-            // this event (or its sweep) made.
-            self.sync_billing();
+            self.dispatch(ev, trace, &mut next_req, &mut q);
         }
+        self.finish()
+    }
 
+    /// The sharded kernel: instance-local events live in per-shard
+    /// queues (`instance % shards`); coordinator events (`Arrival`,
+    /// `ForecastTick`, `ControllerTick`) are the barriers. At each epoch
+    /// boundary the shards drain their due window in parallel
+    /// (`std::thread::scope` inside [`ShardedEventQueue::drain_epoch`]);
+    /// the coordinator then applies the merged stream — shard windows
+    /// interleaved with barrier events by the same time → kind-priority
+    /// → instance-id → FIFO tie-break a single queue uses, so every
+    /// cross-shard effect (routing, shed re-routes, fleet plans, ledger
+    /// advances) lands in exactly the sequential kernel's order.
+    fn run_sharded(mut self, trace: &Trace, duration_s: f64) -> SimReport {
+        let drain_deadline = duration_s + 300.0;
+        let mut q = ShardedEventQueue::new(self.cfg.shards);
+        let mut next_req = 0usize;
+        self.seed(trace, drain_deadline, &mut q);
+        loop {
+            if next_req >= trace.requests.len() && self.all_idle() {
+                break;
+            }
+            q.drain_epoch();
+            let Some(ev) = q.pop_merged() else { break };
+            if ev.time > drain_deadline {
+                break;
+            }
+            self.dispatch(ev, trace, &mut next_req, &mut q);
+        }
+        self.finish()
+    }
+
+    /// Close the books and build the report (shared by both kernels).
+    fn finish(mut self) -> SimReport {
         let wall = self.now.max(1e-9);
         self.ledger.advance(self.now);
         SimReport {

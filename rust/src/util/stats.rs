@@ -276,7 +276,13 @@ impl Histogram {
         Histogram { lo, hi, buckets: vec![0; n_buckets], under: 0, over: 0, count: 0 }
     }
 
+    /// Count one sample. `x == hi` lands in the overflow bucket (the
+    /// range is half-open); a finite `x` just under `hi` whose scaled
+    /// index rounds up to `n` is clamped into the last bucket (float
+    /// rounding must never index out of bounds). NaN is a hard error —
+    /// `NaN as usize` is 0, which would silently corrupt bucket 0.
     pub fn add(&mut self, x: f64) {
+        assert!(!x.is_nan(), "NaN histogram sample");
         self.count += 1;
         if x < self.lo {
             self.under += 1;
@@ -466,6 +472,42 @@ mod tests {
         h.add(2.0);
         assert_eq!(h.count(), 2);
         assert!((h.frac_ge(0.5) - 0.5).abs() < 1e-9); // only the overflow
+    }
+
+    #[test]
+    fn histogram_bucket_index_edge_cases() {
+        // regression: the scaled bucket index must be clamped — a sample
+        // at (or float-rounding onto) the upper edge used to be able to
+        // index one past the last bucket
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.add(10.0); // x == hi: overflow bucket, not buckets[10]
+        assert_eq!(h.buckets().iter().sum::<u64>(), 0);
+        assert_eq!(h.count(), 1);
+
+        // largest representable value below hi: clamp puts it in the
+        // last bucket even when (x-lo)/(hi-lo)*n rounds up to n
+        let just_below = f64::from_bits(10.0_f64.to_bits() - 1);
+        assert!(just_below < 10.0);
+        h.add(just_below);
+        assert_eq!(*h.buckets().last().unwrap(), 1);
+
+        // lower edge is inclusive: bucket 0, not underflow
+        h.add(0.0);
+        assert_eq!(h.buckets()[0], 1);
+
+        // a single-bucket histogram exercises the clamp hardest
+        let mut one = Histogram::new(0.0, 1.0, 1);
+        one.add(0.999999999999);
+        one.add(0.0);
+        assert_eq!(one.buckets(), &[2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "NaN histogram sample")]
+    fn histogram_rejects_nan_samples() {
+        // regression: `NaN as usize` is 0 — a NaN sample used to be
+        // silently counted into bucket 0
+        Histogram::new(0.0, 1.0, 4).add(f64::NAN);
     }
 
     #[test]

@@ -1,0 +1,128 @@
+//! Sharded-kernel parity: `SimConfig::shards ≥ 2` must be **byte-identical**
+//! to the sequential kernel on every scenario.
+//!
+//! The sharded kernel partitions instance-local events into per-shard
+//! queues (`instance % shards`) and drains epoch windows in parallel
+//! between coordinator barriers; the merged stream must replay the exact
+//! sequential order (time → kind-priority → instance-id → FIFO). These
+//! tests assert the strongest observable form of that contract: the full
+//! metrics JSON — latency histograms, routing counters, op-event logs,
+//! billing integrals, placement vectors — compared as raw bytes
+//! (`Vec<u8>`), for fixed fleets, elastic fleets, and the predictive
+//! control plane, across the five workload scenarios.
+
+use cocoserve::baselines;
+use cocoserve::cluster::{Cluster, DeviceSpec};
+use cocoserve::coordinator::{FleetConfig, RoutePolicy, RouterConfig};
+use cocoserve::forecast::PredictConfig;
+use cocoserve::placement::Placement;
+use cocoserve::sim::{FleetSetup, SimConfig, Simulation};
+use cocoserve::workload::Trace;
+
+/// Run one scenario at a given shard count and return the golden bytes.
+fn golden(shards: usize, setup: FleetSetup, trace: &Trace, duration_s: f64) -> Vec<u8> {
+    let mut cfg = SimConfig::paper_13b();
+    cfg.shards = shards;
+    let n_devices = 5;
+    let cluster = Cluster::homogeneous(n_devices, DeviceSpec::a100_40gb());
+    let placements: Vec<_> = (0..3)
+        .map(|i| {
+            (
+                Placement::single_device(cfg.model.n_layers, i % n_devices),
+                baselines::cocoserve(32),
+            )
+        })
+        .collect();
+    let sim = Simulation::with_fleet(cfg, cluster, placements, setup);
+    sim.run(trace, duration_s).to_json().to_string().into_bytes()
+}
+
+fn fixed_fleet() -> FleetSetup {
+    FleetSetup {
+        router: RouterConfig {
+            policy: RoutePolicy::LeastOutstanding,
+            admission_limit: Some(64),
+            reroute_on_shed: true,
+        },
+        ..Default::default()
+    }
+}
+
+fn elastic_fleet() -> FleetSetup {
+    FleetSetup {
+        router: RouterConfig {
+            policy: RoutePolicy::KvHeadroom,
+            admission_limit: Some(64),
+            reroute_on_shed: true,
+        },
+        fleet: Some(FleetConfig::elastic(2, 5, baselines::cocoserve(32))),
+        ..Default::default()
+    }
+}
+
+fn predictive_fleet() -> FleetSetup {
+    let mut setup = elastic_fleet();
+    setup.predictor = Some(PredictConfig::default());
+    setup
+}
+
+/// The headline acceptance test: on all five scenarios, shard counts
+/// 2 and 4 reproduce the sequential kernel's metrics JSON byte-for-byte.
+#[test]
+fn sharded_kernel_is_byte_identical_on_all_scenarios() {
+    for (name, trace) in Trace::scenario_sweep(18.0, 10.0, 77) {
+        let setup = fixed_fleet();
+        let seq = golden(1, setup, &trace, 10.0);
+        for shards in [2, 4] {
+            let sharded = golden(shards, setup, &trace, 10.0);
+            assert_eq!(
+                seq, sharded,
+                "scenario {name}: shards={shards} diverged from sequential kernel"
+            );
+        }
+    }
+}
+
+/// Elastic fleets exercise spin-up/drain (instances appearing mid-run,
+/// so shard membership changes) — parity must survive that too.
+#[test]
+fn sharded_kernel_is_byte_identical_with_elastic_fleet() {
+    for (name, trace) in Trace::scenario_sweep(20.0, 10.0, 91) {
+        let setup = elastic_fleet();
+        let seq = golden(1, setup, &trace, 10.0);
+        let sharded = golden(3, setup, &trace, 10.0);
+        assert_eq!(seq, sharded, "scenario {name}: elastic fleet diverged at shards=3");
+    }
+}
+
+/// The predictive control plane adds `ForecastTick` barriers and
+/// observation-order-sensitive estimators; burst is the scenario that
+/// stresses forecast-driven scale-out hardest.
+#[test]
+fn sharded_kernel_is_byte_identical_with_predictor() {
+    for (name, trace) in [
+        ("burst", Trace::burst(24.0, 12.0, 13)),
+        ("diurnal", Trace::diurnal(16.0, 12.0, 13)),
+    ] {
+        let setup = predictive_fleet();
+        let seq = golden(1, setup, &trace, 12.0);
+        for shards in [2, 8] {
+            let sharded = golden(shards, setup, &trace, 12.0);
+            assert_eq!(
+                seq, sharded,
+                "scenario {name}: predictive fleet diverged at shards={shards}"
+            );
+        }
+    }
+}
+
+/// More shards than instances (each shard holds at most one instance)
+/// is the degenerate-partition edge case.
+#[test]
+fn more_shards_than_instances_is_still_identical() {
+    let trace = Trace::steady(18.0, 8.0, 5);
+    let setup = fixed_fleet();
+    let seq = golden(1, setup, &trace, 8.0);
+    let sharded = golden(16, setup, &trace, 8.0);
+    assert_eq!(seq, sharded, "shards=16 over 3 instances diverged");
+}
