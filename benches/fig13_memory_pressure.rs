@@ -1,0 +1,199 @@
+//! Fig. 13 (extension) — the memory-pressure governor's claim check:
+//! elastic KV resizing + quantized layer swapping shed strictly fewer
+//! requests than the raw OOM policy, at equal-or-lower device-seconds.
+//!
+//! One 13B instance serves identical traces on a deliberately memory-
+//! starved A100 (a ledger hog leaves ~3 GiB of post-deploy headroom, so
+//! KV pressure — not compute — is the binding constraint). Two cells per
+//! scenario:
+//!
+//! * **governor off** — the vLLM-like baseline's raw `Preempt` behaviour:
+//!   every pressure episode immediately sheds the newest sequence.
+//! * **governor on** — the same instance behind `MempressConfig::default()`:
+//!   episodes first grow the pre-granted KV pool into device headroom,
+//!   then swap the coldest decoder layers to int8 (freeing half their
+//!   weight bytes as KV headroom, paid for as a per-step quality penalty
+//!   in the metrics JSON), and only shed once the whole ladder is
+//!   exhausted.
+//!
+//! Asserted per scenario (burst spike and two-tenant mix — the shapes
+//! whose transient peaks a static reservation cannot ride out):
+//! (a) governor-off sheds at least one request (the pressure is real);
+//! (b) governor-on sheds strictly fewer requests;
+//! (c) governor-on spends equal-or-lower device-seconds;
+//! (d) the governor actually walked the ladder (episodes > 0, and at
+//!     least one grow or swap landed);
+//! (e) every cell golden-replays byte-identically.
+//!
+//! ```bash
+//! cargo bench --bench fig13_memory_pressure              # full sweep
+//! FIG13_SMOKE=1 cargo bench --bench fig13_memory_pressure  # CI smoke
+//! ```
+
+use cocoserve::baselines;
+use cocoserve::cluster::{Cluster, DeviceSpec, GIB};
+use cocoserve::mempress::MempressConfig;
+use cocoserve::placement::Placement;
+use cocoserve::sim::{SimConfig, SimReport, Simulation};
+use cocoserve::util::bench::{Report, Table};
+use cocoserve::util::json;
+use cocoserve::workload::Trace;
+
+const SEED: u64 = 130;
+/// Post-deploy device headroom the hog leaves for KV (bytes). Small
+/// enough that scenario peaks overrun it, large enough that the base
+/// load fits — the regime where the ladder, not the shed, should absorb
+/// the transient.
+const KV_HEADROOM_BYTES: f64 = 3.0 * GIB;
+
+struct BenchShape {
+    rps: f64,
+    duration_s: f64,
+    smoke: bool,
+}
+
+impl BenchShape {
+    fn from_env() -> BenchShape {
+        let smoke = std::env::var("FIG13_SMOKE")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false)
+            || std::env::args().any(|a| a == "--smoke");
+        if smoke {
+            BenchShape { rps: 15.0, duration_s: 24.0, smoke }
+        } else {
+            BenchShape { rps: 15.0, duration_s: 40.0, smoke }
+        }
+    }
+}
+
+fn run(governed: bool, trace: &Trace, duration_s: f64) -> SimReport {
+    let mut cfg = SimConfig::paper_13b();
+    if governed {
+        cfg.mempress = Some(MempressConfig::default());
+    }
+    let cost = cfg.cost_model();
+    let mut cluster = Cluster::homogeneous(1, DeviceSpec::a100_40gb());
+    // Starve the device: after the 13B weights deploy, exactly
+    // KV_HEADROOM_BYTES remain. Identical for both cells, so the only
+    // difference between runs is the governor.
+    let free = cluster.device(0).free_bytes();
+    let hog = free - cost.model_bytes(cfg.dtype_bytes) - KV_HEADROOM_BYTES;
+    cluster.device_mut(0).alloc("fig13-hog", hog).unwrap();
+    let placement = Placement::single_device(cfg.model.n_layers, 0);
+    Simulation::new(cfg, cluster, vec![(placement, baselines::vllm_like(64))])
+        .run(trace, duration_s)
+}
+
+fn main() {
+    let shape = BenchShape::from_env();
+    println!(
+        "Fig. 13 — memory-pressure governor, 13B on 1×A100 with {:.0} GiB KV \
+         headroom, {:.0} rps base, {:.0}s{}\n",
+        KV_HEADROOM_BYTES / GIB,
+        shape.rps,
+        shape.duration_s,
+        if shape.smoke { " (SMOKE)" } else { "" }
+    );
+
+    let scenarios: Vec<(&str, Trace)> = vec![
+        ("burst", Trace::burst(shape.rps, shape.duration_s, SEED)),
+        ("two_tenant", Trace::two_tenant(2.0 * shape.rps, shape.duration_s, SEED)),
+    ];
+
+    let mut table = Table::new(&[
+        "scenario", "governor", "sheds", "dev·s", "SLO%", "grows", "swaps",
+        "escalations", "quality",
+    ]);
+    let mut rep = Report::new("fig13_memory_pressure");
+    let mut replay_ok = true;
+
+    for (name, trace) in &scenarios {
+        let mut cells = Vec::new();
+        for governed in [false, true] {
+            let r = run(governed, trace, shape.duration_s);
+            // (e) golden replay per cell
+            let again = run(governed, trace, shape.duration_s);
+            let identical = r.to_json().to_string() == again.to_json().to_string();
+            replay_ok &= identical;
+            if !identical {
+                eprintln!(
+                    "WARNING: {name}/governor={governed} not replay-deterministic"
+                );
+            }
+            let mp = r.mempress;
+            table.row(&[
+                name.to_string(),
+                if governed { "on" } else { "off" }.to_string(),
+                r.oom_victims.to_string(),
+                format!("{:.0}", r.device_seconds),
+                format!("{:.1}", r.slo_attainment() * 100.0),
+                mp.map_or("-".into(), |m| m.kv_grows.to_string()),
+                mp.map_or("-".into(), |m| m.swaps_applied.to_string()),
+                mp.map_or("-".into(), |m| m.escalations.to_string()),
+                mp.map_or("-".into(), |m| format!("{:.2}", m.quality_penalty)),
+            ]);
+            rep.set(
+                &format!("{name}_{}", if governed { "on" } else { "off" }),
+                json::obj(vec![
+                    ("sheds", json::num(r.oom_victims as f64)),
+                    ("device_seconds", json::num(r.device_seconds)),
+                    ("slo_attainment", json::num(r.slo_attainment())),
+                    ("completed", json::num(r.total_completed() as f64)),
+                    ("kv_grows", json::num(mp.map_or(0.0, |m| m.kv_grows as f64))),
+                    (
+                        "swaps_applied",
+                        json::num(mp.map_or(0.0, |m| m.swaps_applied as f64)),
+                    ),
+                    (
+                        "sheds_averted",
+                        json::num(mp.map_or(0.0, |m| m.sheds_averted as f64)),
+                    ),
+                    (
+                        "quality_penalty",
+                        json::num(mp.map_or(0.0, |m| m.quality_penalty)),
+                    ),
+                    ("replay_deterministic", json::num(f64::from(u8::from(identical)))),
+                ]),
+            );
+            cells.push(r);
+        }
+
+        let (off, on) = (&cells[0], &cells[1]);
+        // (a) the scenario genuinely overruns the raw policy's memory
+        assert!(
+            off.oom_victims > 0,
+            "{name}: governor-off shed nothing — the scenario is miscalibrated"
+        );
+        // (b) the ladder sheds strictly less
+        assert!(
+            on.oom_victims < off.oom_victims,
+            "{name}: governed sheds ({}) must be strictly below raw ({})",
+            on.oom_victims,
+            off.oom_victims
+        );
+        // (c) at equal-or-lower device cost
+        assert!(
+            on.device_seconds <= off.device_seconds,
+            "{name}: governed {:.1} dev·s must not exceed raw {:.1}",
+            on.device_seconds,
+            off.device_seconds
+        );
+        // (d) the relief was earned by the ladder, not by accident
+        let mp = on.mempress.expect("governed cell carries a mempress block");
+        assert!(mp.episodes > 0, "{name}: the governor never saw pressure");
+        assert!(
+            mp.kv_grows + mp.swaps_applied > 0,
+            "{name}: no grow or swap landed — relief came from nowhere"
+        );
+        assert!(off.mempress.is_none(), "ungoverned cell must carry no block");
+    }
+
+    table.print();
+    println!(
+        "\ngolden replay across all cells: {}",
+        if replay_ok { "byte-identical ✓" } else { "MISMATCH ✗" }
+    );
+    rep.set("replay_ok", json::num(f64::from(u8::from(replay_ok))));
+    println!("report: {}", rep.write().unwrap().display());
+    assert!(replay_ok, "metrics JSON must be identical across same-seed runs");
+}

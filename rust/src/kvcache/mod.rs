@@ -54,8 +54,27 @@ pub trait KvCache {
     /// Drop a finished sequence, releasing its reservation.
     fn remove_sequence(&mut self, seq: u64);
 
+    /// Retarget the pool to `pool_bytes` total capacity.
+    ///
+    /// Shrinking reclaims only *free* capacity — live reservations are never
+    /// evicted. Returns `Ok(freed_bytes)`, the bytes actually released back
+    /// to the device (`0.0` when growing), or `Err(deficit_bytes)` when live
+    /// reservations alone exceed the requested pool; on `Err` the pool is
+    /// left untouched. Growing is always accepted here — bounding it by
+    /// device headroom (via `LedgerView`) is the caller's job (the
+    /// memory-pressure governor checks before asking).
+    fn resize(&mut self, pool_bytes: f64) -> Result<f64, f64>;
+
+    /// Total pool capacity in bytes — the pre-granted device reservation
+    /// a governed instance mirrors into the ledger (reserved ≤ pool). For
+    /// a paged pool this is the block-rounded capacity; unbounded pools
+    /// report what they were constructed with.
+    fn pool_bytes(&self) -> f64;
+
+    /// Accounting snapshot (live/reserved bytes, sequence count).
     fn stats(&self) -> KvStats;
 
+    /// Tokens currently cached for `seq`, or `None` if unknown.
     fn tokens_of(&self, seq: u64) -> Option<usize>;
 }
 
@@ -95,10 +114,12 @@ impl PagedKvCache {
         tokens.div_ceil(self.block_tokens)
     }
 
+    /// Bytes in one allocation block (`bytes_per_token * block_tokens`).
     pub fn block_bytes(&self) -> f64 {
         self.bytes_per_token * self.block_tokens as f64
     }
 
+    /// Blocks currently unallocated.
     pub fn free_blocks(&self) -> usize {
         self.free_blocks
     }
@@ -111,7 +132,12 @@ impl PagedKvCache {
 
 impl KvCache for PagedKvCache {
     fn add_sequence(&mut self, seq: u64, prompt_tokens: usize) -> Result<(), f64> {
-        assert!(!self.seqs.contains_key(&seq), "duplicate sequence {seq}");
+        // A duplicate id is an error, not a panic — same contract as
+        // `append_token` on an unknown id: nothing is allocated, so the
+        // reported deficit is zero.
+        if self.seqs.contains_key(&seq) {
+            return Err(0.0);
+        }
         let need = self.blocks_for(prompt_tokens.max(1));
         if need > self.free_blocks {
             return Err((need - self.free_blocks) as f64 * self.block_bytes());
@@ -147,6 +173,22 @@ impl KvCache for PagedKvCache {
         }
     }
 
+    fn resize(&mut self, pool_bytes: f64) -> Result<f64, f64> {
+        let new_capacity = (pool_bytes / self.block_bytes()) as usize;
+        let used = self.capacity_blocks - self.free_blocks;
+        if new_capacity < used {
+            return Err((used - new_capacity) as f64 * self.block_bytes());
+        }
+        let freed = self.capacity_blocks.saturating_sub(new_capacity) as f64 * self.block_bytes();
+        self.capacity_blocks = new_capacity;
+        self.free_blocks = new_capacity - used;
+        Ok(freed)
+    }
+
+    fn pool_bytes(&self) -> f64 {
+        self.capacity_blocks as f64 * self.block_bytes()
+    }
+
     fn stats(&self) -> KvStats {
         let live: usize = self.seqs.values().map(|a| a.tokens).sum();
         let blocks: usize = self.seqs.values().map(|a| a.blocks).sum();
@@ -174,6 +216,8 @@ pub struct ContiguousKvCache {
 }
 
 impl ContiguousKvCache {
+    /// `pool_bytes` is the device memory granted to the cache pool; every
+    /// sequence reserves `bytes_per_token * max_seq_tokens` up front.
     pub fn new(pool_bytes: f64, bytes_per_token: f64, max_seq_tokens: usize) -> Self {
         ContiguousKvCache {
             bytes_per_token,
@@ -191,8 +235,15 @@ impl ContiguousKvCache {
 
 impl KvCache for ContiguousKvCache {
     fn add_sequence(&mut self, seq: u64, prompt_tokens: usize) -> Result<(), f64> {
-        assert!(!self.seqs.contains_key(&seq), "duplicate sequence {seq}");
-        assert!(prompt_tokens <= self.max_seq_tokens);
+        // duplicate ids and over-length prompts are errors, not panics —
+        // a duplicate allocates nothing (deficit 0), an over-length prompt
+        // reports the bytes it would need beyond the fixed reservation
+        if self.seqs.contains_key(&seq) {
+            return Err(0.0);
+        }
+        if prompt_tokens > self.max_seq_tokens {
+            return Err((prompt_tokens - self.max_seq_tokens) as f64 * self.bytes_per_token);
+        }
         let need = self.per_seq_bytes();
         if self.reserved + need > self.pool_bytes {
             return Err(self.reserved + need - self.pool_bytes);
@@ -219,6 +270,19 @@ impl KvCache for ContiguousKvCache {
         if self.seqs.remove(&seq).is_some() {
             self.reserved -= self.per_seq_bytes();
         }
+    }
+
+    fn resize(&mut self, pool_bytes: f64) -> Result<f64, f64> {
+        if pool_bytes < self.reserved {
+            return Err(self.reserved - pool_bytes);
+        }
+        let freed = (self.pool_bytes - pool_bytes).max(0.0);
+        self.pool_bytes = pool_bytes;
+        Ok(freed)
+    }
+
+    fn pool_bytes(&self) -> f64 {
+        self.pool_bytes
     }
 
     fn stats(&self) -> KvStats {
@@ -290,6 +354,69 @@ mod tests {
         // a removed sequence behaves exactly like a never-known one
         cont.remove_sequence(1);
         assert!(cont.append_token(1).is_err());
+    }
+
+    #[test]
+    fn duplicate_add_errs_instead_of_panicking() {
+        // regression: both allocators used to assert! on a duplicate id,
+        // so a re-admitted request id took the process down
+        let mut paged = PagedKvCache::new(1e6, BPT, 16);
+        paged.add_sequence(1, 8).unwrap();
+        let free_before = paged.free_blocks();
+        assert_eq!(paged.add_sequence(1, 8), Err(0.0));
+        assert_eq!(paged.free_blocks(), free_before, "no blocks leaked");
+        assert_eq!(paged.tokens_of(1), Some(8), "original alloc untouched");
+
+        let mut cont = ContiguousKvCache::new(1e7, BPT, 256);
+        cont.add_sequence(1, 8).unwrap();
+        let reserved_before = cont.stats().reserved_bytes;
+        assert_eq!(cont.add_sequence(1, 8), Err(0.0));
+        assert_eq!(cont.stats().reserved_bytes, reserved_before);
+        assert_eq!(cont.tokens_of(1), Some(8));
+        // over-length prompts report the excess bytes instead of asserting
+        assert!(cont.add_sequence(2, 257).unwrap_err() > 0.0);
+    }
+
+    #[test]
+    fn paged_resize_shrinks_only_free_blocks() {
+        let mut c = PagedKvCache::new(64.0 * 16.0 * BPT, BPT, 16); // 64 blocks
+        c.add_sequence(1, 160).unwrap(); // 10 blocks live
+        // shrink to 16 blocks: 48 blocks of free capacity released
+        let freed = c.resize(16.0 * 16.0 * BPT).unwrap();
+        assert_eq!(freed, 48.0 * c.block_bytes());
+        assert_eq!(c.capacity_blocks(), 16);
+        assert_eq!(c.free_blocks(), 6);
+        assert_eq!(c.pool_bytes(), 16.0 * 16.0 * BPT);
+        // shrinking below live reservations reports the deficit and leaves
+        // the pool untouched
+        let deficit = c.resize(4.0 * 16.0 * BPT).unwrap_err();
+        assert_eq!(deficit, 6.0 * c.block_bytes());
+        assert_eq!(c.capacity_blocks(), 16);
+        // growing is always accepted (headroom is the caller's check)
+        assert_eq!(c.resize(64.0 * 16.0 * BPT).unwrap(), 0.0);
+        assert_eq!(c.free_blocks(), 54);
+    }
+
+    #[test]
+    fn resize_round_trip_is_bit_identical() {
+        let mut paged = PagedKvCache::new(64.0 * 16.0 * BPT, BPT, 16);
+        paged.add_sequence(1, 33).unwrap();
+        let before = paged.stats();
+        let free_before = paged.free_blocks();
+        paged.resize(16.0 * 16.0 * BPT).unwrap();
+        paged.resize(64.0 * 16.0 * BPT).unwrap();
+        assert_eq!(paged.stats(), before);
+        assert_eq!(paged.free_blocks(), free_before);
+
+        let mut cont = ContiguousKvCache::new(1e7, BPT, 256);
+        cont.add_sequence(1, 33).unwrap();
+        let before = cont.stats();
+        cont.resize(512.0 * BPT).unwrap();
+        cont.resize(1e7).unwrap();
+        assert_eq!(cont.stats(), before);
+        // shrinking below live reservations is refused with the deficit
+        let deficit = cont.resize(128.0 * BPT).unwrap_err();
+        assert_eq!(deficit, 128.0 * BPT);
     }
 
     #[test]

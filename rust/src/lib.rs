@@ -23,6 +23,10 @@
 //!   (EWMA / Holt / Holt-Winters / burst detection) and horizon capacity
 //!   planning that provisions *before* demand arrives, arbitrated with
 //!   the reactive fleet controller ([`forecast`]),
+//! * a **memory-pressure governor** — elastic KV-pool resizing plus
+//!   quantized layer swapping walked as an escalation ladder so governed
+//!   instances shed requests only as a last resort ([`mempress`],
+//!   [`kvcache`]),
 //! * a **traffic scenario library** (steady / diurnal / burst / ramp /
 //!   two-tenant mix) for dynamic-load experiments ([`workload`]),
 //! * **HFT-like and vLLM-like baselines** over the same substrate
@@ -36,10 +40,11 @@
 #![allow(clippy::too_many_arguments)]
 // Every public item should carry rustdoc. Fully burned down in the
 // scaling-API surface (`cluster`, `coordinator`, `placement`, `plan` —
-// PR 4) and the control/telemetry surface (`autoscale`, `forecast`,
-// `monitor`, `sim`, `workload` — this PR); the per-module `allow`s below
-// mark the modules whose burn-down is still pending — remove one to
-// enlist that module.
+// PR 4), the control/telemetry surface (`autoscale`, `forecast`,
+// `monitor`, `sim`, `workload` — PR 5), and the memory surface
+// (`kvcache`, `mempress`, `model` — this PR); the per-module `allow`s
+// below mark the modules whose burn-down is still pending — remove one
+// to enlist that module.
 #![warn(missing_docs)]
 
 pub mod autoscale;
@@ -51,9 +56,8 @@ pub mod coordinator;
 #[allow(missing_docs)]
 pub mod engine;
 pub mod forecast;
-#[allow(missing_docs)]
 pub mod kvcache;
-#[allow(missing_docs)]
+pub mod mempress;
 pub mod model;
 pub mod monitor;
 #[allow(missing_docs)]

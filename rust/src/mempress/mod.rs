@@ -1,0 +1,416 @@
+//! Memory-pressure governor — elastic KV resizing and quantized layer
+//! swapping *before* any request is shed.
+//!
+//! The paper treats the KV cache as a first-class migratable module (§3.3),
+//! but the OOM path of PRs 1–6 still had only two answers: shed the batch or
+//! emergency scale-down. MorphServe (arXiv 2506.02006) shows a third: resize
+//! KV pools and swap decoder layers to quantized variants at runtime,
+//! freeing HBM without dropping requests; FlexPipe (arXiv 2510.11938) shows
+//! such reconfiguration can happen in flight without stalling serving.
+//!
+//! ### The escalation ladder
+//!
+//! The governor sits between the scheduler's admission/OOM signals and the
+//! plan executor. A governed instance pre-grants its KV pool (the vLLM
+//! deployment reality: the pool is reserved up front, whether or not tokens
+//! fill it) and the governor arbitrates every pressure episode through a
+//! tiered ladder — each rung strictly cheaper than the next:
+//!
+//! 1. **Elastic pool resize.** Pool exhausted at admission → grow it within
+//!    device headroom ([`crate::kvcache::KvCache::resize`], bounded via the
+//!    ledger's free bytes). Device ledger pressure → shrink the pool's
+//!    pre-granted *waste* (capacity − reserved) back to what live sequences
+//!    actually hold.
+//! 2. **Quantized layer swapping.** No headroom left → request
+//!    [`crate::plan::ModuleOp::SwapPrecision`] on the coldest resident
+//!    layers (int8 halves a layer's bytes), executed by the event kernel as
+//!    in-flight `OpStarted`/`OpCompleted` events through the full
+//!    validate→dry-run→apply→rollback machinery. While relief is in flight
+//!    the governor holds admission (a bounded stall), instead of shedding.
+//! 3. **Shed.** Relief exhausted (every swappable layer already int8, the
+//!    stall budget spent) → escalate to the instance's configured
+//!    [`crate::sim::OomBehavior`] (fail-batch / preempt).
+//! 4. **Emergency scale-down** stays the policy's last rung, unchanged.
+//!
+//! ### Determinism
+//!
+//! The governor is a pure state machine over a [`PressureView`] snapshot:
+//! identical traces produce identical decisions, so governed runs golden-
+//! replay like everything else. With [`MempressConfig`] unset the governor
+//! is never constructed, KV pools stay unbounded, and every byte of the
+//! ungoverned kernel's output is untouched (the same `Option<_>` discipline
+//! as the PR 5 `forecast` block).
+
+use crate::plan::ScalePlan;
+
+/// Tuning knobs of the memory-pressure governor. Attach to
+/// [`crate::sim::SimConfig::mempress`] to enable governing; `None` keeps
+/// the kernel byte-identical to the ungoverned one.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MempressConfig {
+    /// Initial KV pool, as a fraction of the pool device's free bytes
+    /// after the instance's weights landed (the pre-granted reservation a
+    /// real engine makes at startup).
+    pub initial_pool_frac: f64,
+    /// Fraction of the tightest KV device's free bytes one grow episode
+    /// may claim — the device-headroom bound on elastic growth.
+    pub grow_frac: f64,
+    /// Bytes granted beyond the immediate admission deficit when growing,
+    /// so back-to-back admissions don't each pay a pressure episode.
+    pub grow_chunk_bytes: f64,
+    /// Most decoder layers the governor may hold at int8 per instance —
+    /// the quality-budget ceiling of rung 2.
+    pub max_swapped_layers: usize,
+    /// Layers quantized per swap request (one in-flight plan).
+    pub swap_batch_layers: usize,
+    /// Consecutive stalled episodes tolerated while relief is pending
+    /// before escalating to the shed rung.
+    pub max_stalls: u32,
+}
+
+impl Default for MempressConfig {
+    fn default() -> MempressConfig {
+        MempressConfig {
+            initial_pool_frac: 0.5,
+            grow_frac: 0.5,
+            grow_chunk_bytes: 1024.0 * 1024.0 * 1024.0, // 1 GiB
+            max_swapped_layers: 8,
+            swap_batch_layers: 4,
+            max_stalls: 6,
+        }
+    }
+}
+
+/// Why an instance is under memory pressure.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PressureCause {
+    /// KV admission failed: the pool lacks `deficit` bytes for the
+    /// sequences being admitted.
+    PoolExhausted {
+        /// Bytes short at admission (summed over the failing sequences).
+        deficit: f64,
+    },
+    /// The device ledger refused the instance's KV mirror (or another
+    /// allocation): pressure comes from the device side, not the pool.
+    LedgerMirror,
+}
+
+/// What the governor decided for one pressure episode.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Relief {
+    /// Grow the KV pool by `grant` bytes (rung 1, admission side).
+    GrowPool {
+        /// Bytes to add to the pool.
+        grant: f64,
+    },
+    /// Shrink the KV pool to `to` bytes, releasing pre-granted waste back
+    /// to the device (rung 1, device side).
+    ShrinkPool {
+        /// New pool size in bytes (never below live reservations).
+        to: f64,
+    },
+    /// Quantize these layers to int8 via in-flight `SwapPrecision` ops
+    /// (rung 2). The kernel admits the plan; admission stalls meanwhile.
+    RequestSwaps {
+        /// Layer indices to swap, coldest first.
+        layers: Vec<usize>,
+    },
+    /// Relief is already in flight — hold admission one more episode.
+    Wait,
+    /// Ladder exhausted: fall through to the policy shed (rung 3).
+    Escalate,
+}
+
+/// Everything the governor needs to know about one pressure episode,
+/// snapshotted by the instance. Keeping the decision a pure function of
+/// this view is what makes governed runs deterministic and the ladder
+/// unit-testable without a simulator.
+#[derive(Debug, Clone)]
+pub struct PressureView {
+    /// Current KV pool capacity in bytes.
+    pub pool_bytes: f64,
+    /// Bytes of the pool live sequences actually reserve.
+    pub reserved_bytes: f64,
+    /// Free bytes of the tightest device hosting this instance's KV.
+    pub headroom_bytes: f64,
+    /// Cold, unquantized, swappable layers (coldest first) on the
+    /// pressured device.
+    pub swap_candidates: Vec<usize>,
+    /// Layers already held at int8.
+    pub swapped: usize,
+    /// A scaling plan (swap or otherwise) is already executing in flight,
+    /// or a swap request awaits kernel pickup.
+    pub relief_inflight: bool,
+}
+
+/// Counters accumulated by one instance's governor, surfaced through
+/// [`MempressReport`] in the metrics JSON.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct MempressStats {
+    /// Pressure episodes handled (each OOM signal the governor saw).
+    pub episodes: u64,
+    /// Rung-1 pool grows granted.
+    pub kv_grows: u64,
+    /// Rung-1 pool shrinks (waste reclaimed to the device).
+    pub kv_shrinks: u64,
+    /// Total bytes granted to pools by grows.
+    pub pool_granted_bytes: f64,
+    /// Total pre-granted waste bytes reclaimed by shrinks.
+    pub pool_reclaimed_bytes: f64,
+    /// Rung-2 swap plans requested.
+    pub swap_requests: u64,
+    /// `SwapPrecision` ops that landed (in-flight `OpCompleted`).
+    pub swaps_applied: u64,
+    /// Device bytes freed by landed swaps.
+    pub swap_freed_bytes: f64,
+    /// Episodes resolved (or stalled) without reaching the shed rung.
+    pub sheds_averted: u64,
+    /// Episodes that fell through to the policy shed.
+    pub escalations: u64,
+    /// Accumulated quality-loss units: quantized layers × decode steps ×
+    /// [`crate::model::cost::SWAP_QUALITY_PENALTY_PER_STEP`].
+    pub quality_penalty: f64,
+}
+
+/// Fleet-aggregated governor counters, embedded in the metrics JSON as the
+/// `mempress` block (present only when governing is configured).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct MempressReport {
+    /// Pressure episodes across all instances.
+    pub episodes: u64,
+    /// Rung-1 pool grows.
+    pub kv_grows: u64,
+    /// Rung-1 pool shrinks.
+    pub kv_shrinks: u64,
+    /// Bytes granted to pools.
+    pub pool_granted_bytes: f64,
+    /// Waste bytes reclaimed from pools.
+    pub pool_reclaimed_bytes: f64,
+    /// Swap plans requested.
+    pub swap_requests: u64,
+    /// Swap ops landed.
+    pub swaps_applied: u64,
+    /// Device bytes freed by swaps.
+    pub swap_freed_bytes: f64,
+    /// Episodes kept off the shed rung.
+    pub sheds_averted: u64,
+    /// Episodes escalated to shedding.
+    pub escalations: u64,
+    /// Accumulated quality-loss units.
+    pub quality_penalty: f64,
+    /// Layers still at int8 when the run ended.
+    pub quantized_layers: u64,
+}
+
+impl MempressReport {
+    /// Fold one instance's counters into the fleet aggregate.
+    pub fn absorb(&mut self, s: &MempressStats) {
+        self.episodes += s.episodes;
+        self.kv_grows += s.kv_grows;
+        self.kv_shrinks += s.kv_shrinks;
+        self.pool_granted_bytes += s.pool_granted_bytes;
+        self.pool_reclaimed_bytes += s.pool_reclaimed_bytes;
+        self.swap_requests += s.swap_requests;
+        self.swaps_applied += s.swaps_applied;
+        self.swap_freed_bytes += s.swap_freed_bytes;
+        self.sheds_averted += s.sheds_averted;
+        self.escalations += s.escalations;
+        self.quality_penalty += s.quality_penalty;
+    }
+}
+
+/// Per-instance memory-pressure governor: the ladder state machine plus
+/// its counters. Owned by a simulated instance when
+/// [`crate::sim::SimConfig::mempress`] is set; never constructed otherwise.
+#[derive(Debug)]
+pub struct MempressGovernor {
+    /// The knobs this governor runs under.
+    pub cfg: MempressConfig,
+    /// Counters for the metrics JSON.
+    pub stats: MempressStats,
+    /// Consecutive stalled episodes since the last successful step or
+    /// immediate relief — the rung-3 escalation clock.
+    stalls: u32,
+    /// A swap plan awaiting kernel pickup (admitted as in-flight events).
+    pending_swap: Option<ScalePlan>,
+}
+
+impl MempressGovernor {
+    /// A fresh governor under `cfg`.
+    pub fn new(cfg: MempressConfig) -> MempressGovernor {
+        MempressGovernor { cfg, stats: MempressStats::default(), stalls: 0, pending_swap: None }
+    }
+
+    /// The instance started a step (pressure relieved): reset the stall
+    /// escalation clock.
+    pub fn note_progress(&mut self) {
+        self.stalls = 0;
+    }
+
+    /// Park a swap plan for the kernel to admit in flight.
+    pub fn park_swap(&mut self, plan: ScalePlan) {
+        self.pending_swap = Some(plan);
+    }
+
+    /// Take the parked swap plan, if any (kernel pickup point).
+    pub fn take_swap_request(&mut self) -> Option<ScalePlan> {
+        self.pending_swap.take()
+    }
+
+    /// Is a swap request parked and not yet picked up?
+    pub fn swap_parked(&self) -> bool {
+        self.pending_swap.is_some()
+    }
+
+    /// Walk the escalation ladder for one pressure episode. Pure in
+    /// `view`; mutates only this governor's counters and stall clock.
+    pub fn decide(&mut self, cause: PressureCause, view: &PressureView) -> Relief {
+        self.stats.episodes += 1;
+        self.stalls += 1;
+        // ---- rung 1: elastic pool resize ---------------------------------
+        match cause {
+            PressureCause::PoolExhausted { deficit } => {
+                let grant = (deficit + self.cfg.grow_chunk_bytes)
+                    .min(view.headroom_bytes * self.cfg.grow_frac);
+                if deficit > 0.0 && grant >= deficit {
+                    self.stalls = 0; // relief is immediate
+                    self.stats.kv_grows += 1;
+                    self.stats.pool_granted_bytes += grant;
+                    self.stats.sheds_averted += 1;
+                    return Relief::GrowPool { grant };
+                }
+            }
+            PressureCause::LedgerMirror => {
+                if view.pool_bytes > view.reserved_bytes {
+                    self.stalls = 0;
+                    self.stats.kv_shrinks += 1;
+                    self.stats.pool_reclaimed_bytes += view.pool_bytes - view.reserved_bytes;
+                    self.stats.sheds_averted += 1;
+                    return Relief::ShrinkPool { to: view.reserved_bytes };
+                }
+            }
+        }
+        // ---- rung 2: quantize cold layers to free device bytes -----------
+        if !view.relief_inflight && view.swapped < self.cfg.max_swapped_layers {
+            let budget = self.cfg.max_swapped_layers - view.swapped;
+            let take = view.swap_candidates.len().min(self.cfg.swap_batch_layers).min(budget);
+            if take > 0 {
+                self.stats.swap_requests += 1;
+                self.stats.sheds_averted += 1;
+                return Relief::RequestSwaps {
+                    layers: view.swap_candidates[..take].to_vec(),
+                };
+            }
+        }
+        // relief already moving — hold admission within the stall budget
+        if view.relief_inflight && self.stalls <= self.cfg.max_stalls {
+            self.stats.sheds_averted += 1;
+            return Relief::Wait;
+        }
+        // ---- rung 3: out of cheaper answers — shed per policy ------------
+        self.stats.escalations += 1;
+        Relief::Escalate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+    fn view() -> PressureView {
+        PressureView {
+            pool_bytes: 4.0 * GIB,
+            reserved_bytes: 3.0 * GIB,
+            headroom_bytes: 8.0 * GIB,
+            swap_candidates: vec![39, 38, 37, 36, 35],
+            swapped: 0,
+            relief_inflight: false,
+        }
+    }
+
+    #[test]
+    fn admission_pressure_grows_within_headroom() {
+        let mut g = MempressGovernor::new(MempressConfig::default());
+        let r = g.decide(PressureCause::PoolExhausted { deficit: 0.5 * GIB }, &view());
+        let Relief::GrowPool { grant } = r else { panic!("expected grow, got {r:?}") };
+        assert!(grant >= 0.5 * GIB, "grant covers the deficit");
+        assert!(grant <= 8.0 * GIB * 0.5, "grant bounded by headroom");
+        assert_eq!(g.stats.kv_grows, 1);
+        assert_eq!(g.stats.sheds_averted, 1);
+        assert_eq!(g.stats.escalations, 0);
+    }
+
+    #[test]
+    fn device_pressure_reclaims_pool_waste_first() {
+        let mut g = MempressGovernor::new(MempressConfig::default());
+        let r = g.decide(PressureCause::LedgerMirror, &view());
+        assert_eq!(r, Relief::ShrinkPool { to: 3.0 * GIB });
+        assert_eq!(g.stats.kv_shrinks, 1);
+        assert!((g.stats.pool_reclaimed_bytes - GIB).abs() < 1.0);
+    }
+
+    #[test]
+    fn exhausted_headroom_escalates_to_swaps_then_waits() {
+        let mut g = MempressGovernor::new(MempressConfig::default());
+        let mut v = view();
+        v.headroom_bytes = 0.0; // no room to grow
+        let r = g.decide(PressureCause::PoolExhausted { deficit: GIB }, &v);
+        let Relief::RequestSwaps { layers } = r else { panic!("expected swaps, got {r:?}") };
+        assert_eq!(layers, vec![39, 38, 37, 36], "coldest-first, batch-limited");
+        // with the plan in flight the governor holds the line…
+        v.relief_inflight = true;
+        assert_eq!(g.decide(PressureCause::PoolExhausted { deficit: GIB }, &v), Relief::Wait);
+        assert_eq!(g.stats.escalations, 0, "no shedding yet");
+    }
+
+    #[test]
+    fn stall_budget_bounds_waiting_then_sheds() {
+        let cfg = MempressConfig { max_stalls: 2, ..Default::default() };
+        let mut g = MempressGovernor::new(cfg);
+        let mut v = view();
+        v.headroom_bytes = 0.0;
+        v.relief_inflight = true;
+        assert_eq!(g.decide(PressureCause::PoolExhausted { deficit: GIB }, &v), Relief::Wait);
+        assert_eq!(g.decide(PressureCause::PoolExhausted { deficit: GIB }, &v), Relief::Wait);
+        // third consecutive stall exceeds the budget
+        assert_eq!(
+            g.decide(PressureCause::PoolExhausted { deficit: GIB }, &v),
+            Relief::Escalate
+        );
+        assert_eq!(g.stats.escalations, 1);
+        // progress resets the clock
+        g.note_progress();
+        assert_eq!(g.decide(PressureCause::PoolExhausted { deficit: GIB }, &v), Relief::Wait);
+    }
+
+    #[test]
+    fn swap_budget_is_a_hard_quality_ceiling() {
+        let cfg = MempressConfig { max_swapped_layers: 4, ..Default::default() };
+        let mut g = MempressGovernor::new(cfg);
+        let mut v = view();
+        v.headroom_bytes = 0.0;
+        v.swapped = 4; // budget spent
+        assert_eq!(
+            g.decide(PressureCause::PoolExhausted { deficit: GIB }, &v),
+            Relief::Escalate,
+            "no swaps beyond the quality budget"
+        );
+        // partial budget: the batch is clamped to what remains
+        v.swapped = 3;
+        let r = g.decide(PressureCause::PoolExhausted { deficit: GIB }, &v);
+        assert_eq!(r, Relief::RequestSwaps { layers: vec![39] });
+    }
+
+    #[test]
+    fn park_take_roundtrip() {
+        let mut g = MempressGovernor::new(MempressConfig::default());
+        assert!(!g.swap_parked());
+        assert!(g.take_swap_request().is_none());
+        g.park_swap(ScalePlan::new());
+        assert!(g.swap_parked());
+        assert!(g.take_swap_request().is_some());
+        assert!(!g.swap_parked());
+    }
+}

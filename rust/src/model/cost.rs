@@ -20,13 +20,34 @@
 
 use super::{ModelConfig, ModuleKind};
 
+/// One mebibyte (2^20 bytes) — the paper's "MB" (see module docs).
 pub const MIB: f64 = 1024.0 * 1024.0;
+/// One gigaFLOP (1e9 floating-point operations).
 pub const GFLOP: f64 = 1e9;
+
+/// Element width of the bf16 baseline precision, in bytes.
+pub const BF16_BYTES: usize = 2;
+/// Element width of the int8 quantized precision, in bytes.
+pub const INT8_BYTES: usize = 1;
+
+/// Per-step quality penalty of serving ONE decoder layer at a precision
+/// below bf16 (abstract quality-loss units, accumulated per decode step
+/// per quantized layer and surfaced in the metrics JSON).
+///
+/// The value is the per-layer share of the ~0.02 perplexity-point
+/// degradation runtime W8 quantization costs a 13B model (MorphServe §5,
+/// arXiv 2506.02006), spread over the 40 layers: quantizing every layer
+/// for an entire request costs about one full degradation unit. The
+/// governor uses it to rank a swap against a shed — any nonzero penalty
+/// is strictly cheaper than dropping a request.
+pub const SWAP_QUALITY_PENALTY_PER_STEP: f64 = 0.02 / 40.0;
 
 /// Inference-shape parameters the costs depend on.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Shape {
+    /// Concurrent sequences in the step.
     pub batch: usize,
+    /// Tokens processed per sequence (1 for decode).
     pub seq: usize,
     /// Bytes per parameter/activation element (2 = bf16, 4 = f32).
     pub dtype_bytes: usize,
@@ -42,15 +63,19 @@ impl Shape {
 /// Memory + compute cost of one module instance.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct Cost {
+    /// Parameter bytes held in device memory.
     pub weight_bytes: f64,
+    /// Floating-point operations per forward pass at the costed shape.
     pub flops: f64,
 }
 
 impl Cost {
+    /// Memory footprint in MiB (Table 1's "MB" column).
     pub fn mem_mib(&self) -> f64 {
         self.weight_bytes / MIB
     }
 
+    /// Compute in GFLOPs (Table 1's "computation" column).
     pub fn gflops(&self) -> f64 {
         self.flops / GFLOP
     }
@@ -69,10 +94,12 @@ impl Cost {
 /// arithmetic lives (simulator, autoscaler and benches all call this).
 #[derive(Debug, Clone)]
 pub struct CostModel {
+    /// The architecture all costs are derived from.
     pub cfg: ModelConfig,
 }
 
 impl CostModel {
+    /// Build a cost model for `cfg`.
     pub fn new(cfg: ModelConfig) -> CostModel {
         CostModel { cfg }
     }
@@ -136,6 +163,7 @@ impl CostModel {
         }
     }
 
+    /// Memory + compute cost of one module at shape `sh`.
     pub fn cost(&self, kind: ModuleKind, sh: Shape) -> Cost {
         Cost { weight_bytes: self.weight_bytes(kind, sh), flops: self.flops(kind, sh) }
     }
@@ -290,6 +318,23 @@ mod tests {
         // 40 layers · 605 MiB + embed/head ≈ 24.2 GiB in bf16.
         let gib = m13b().model_bytes(2) / (1024.0 * MIB);
         assert!((23.0..26.0).contains(&gib), "{gib}");
+    }
+
+    /// Weight bytes are linear in dtype width, so an int8 swap halves the
+    /// layer's memory footprint and its roofline weight-read term — the
+    /// mechanism behind `ModuleOp::SwapPrecision`.
+    #[test]
+    fn int8_swap_halves_layer_weight_bytes() {
+        let m = m13b();
+        let bf16 = Shape { batch: 1, seq: 1, dtype_bytes: BF16_BYTES };
+        let int8 = Shape { batch: 1, seq: 1, dtype_bytes: INT8_BYTES };
+        let w2 = m.weight_bytes(ModuleKind::DecoderLayer, bf16);
+        let w1 = m.weight_bytes(ModuleKind::DecoderLayer, int8);
+        assert!((2.0 * w1 - w2).abs() < 1e-6, "{w1} vs {w2}");
+        // a fully-quantized model over one request ~ one degradation unit
+        let per_request =
+            SWAP_QUALITY_PENALTY_PER_STEP * ModelConfig::llama2_13b().n_layers as f64;
+        assert!((per_request - 0.02).abs() < 1e-12);
     }
 
     #[test]

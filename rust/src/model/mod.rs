@@ -17,20 +17,28 @@ use crate::util::json::Json;
 /// manifest so there is exactly one source of truth.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelConfig {
+    /// Human-readable model name (e.g. `llama2-13b`).
     pub name: String,
+    /// Token vocabulary size.
     pub vocab_size: usize,
+    /// Hidden (embedding) dimension.
     pub d_model: usize,
+    /// Attention heads per layer.
     pub n_heads: usize,
+    /// Decoder layers.
     pub n_layers: usize,
+    /// Feed-forward inner dimension.
     pub d_ff: usize,
 }
 
 impl ModelConfig {
+    /// Per-head dimension (`d_model / n_heads`).
     pub fn head_dim(&self) -> usize {
         debug_assert_eq!(self.d_model % self.n_heads, 0);
         self.d_model / self.n_heads
     }
 
+    /// Parse from the manifest JSON written by the Python compile path.
     pub fn from_json(j: &Json) -> ModelConfig {
         ModelConfig {
             name: j.req("name").as_str().expect("name").to_string(),
@@ -90,14 +98,19 @@ pub enum ModuleKind {
     Attn,
     /// A single attention projection (the finest weight-bearing unit).
     QProj,
+    /// The key projection of a layer's attention block.
     KProj,
+    /// The value projection of a layer's attention block.
     VProj,
+    /// The output projection of a layer's attention block.
     OProj,
     /// The SwiGLU feed-forward block.
     Ffn,
     /// One FFN projection.
     GateProj,
+    /// The up projection of a layer's FFN block.
     UpProj,
+    /// The down projection of a layer's FFN block.
     DownProj,
     /// The per-layer KV cache (memory-intensive, compute-free).
     KvCache,
@@ -129,6 +142,7 @@ impl ModuleKind {
         matches!(self, ModuleKind::KvCache)
     }
 
+    /// The paper's dotted module path (e.g. `self_attn.q_proj`).
     pub fn name(self) -> &'static str {
         match self {
             ModuleKind::Embed => "embed",
@@ -152,15 +166,19 @@ impl ModuleKind {
 /// Layer is `None` for embed / lm_head.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct ModuleId {
+    /// What kind of module this is.
     pub kind: ModuleKind,
+    /// Which decoder layer it belongs to (`None` for embed / lm_head).
     pub layer: Option<usize>,
 }
 
 impl ModuleId {
+    /// A per-layer module: `(kind, Some(layer))`.
     pub fn layer(kind: ModuleKind, layer: usize) -> ModuleId {
         ModuleId { kind, layer: Some(layer) }
     }
 
+    /// A layer-less module (embed / lm_head): `(kind, None)`.
     pub fn global(kind: ModuleKind) -> ModuleId {
         ModuleId { kind, layer: None }
     }

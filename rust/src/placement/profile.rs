@@ -222,6 +222,63 @@ impl PlacementProfile {
         t += cost.decode_flops(ModuleKind::LmHead, batch, mean_ctx) / self.head_eff_flops;
         t
     }
+
+    /// [`PlacementProfile::decode_step_time`] with a set of layers swapped
+    /// to a narrower weight precision (the memory-pressure governor's
+    /// `SwapPrecision` state): a quantized layer reads its weights at
+    /// `quant_dtype_bytes` while its KV cache — and every unquantized
+    /// layer — stays at `dtype_bytes`. FLOPs are unchanged (conservative:
+    /// int8 decode is bandwidth-bound, the win is the bytes term).
+    ///
+    /// With `quantized` empty this performs exactly the same f64 operations
+    /// in the same order as [`PlacementProfile::decode_step_time`] (the
+    /// unquantized arm *is* that code), so callers may branch on emptiness
+    /// without risking bit divergence — but the ungoverned serving path
+    /// still calls `decode_step_time` directly.
+    pub fn decode_step_time_mixed(
+        &self,
+        cost: &CostModel,
+        dtype_bytes: usize,
+        batch: usize,
+        mean_ctx: usize,
+        quantized: &BTreeSet<usize>,
+        quant_dtype_bytes: usize,
+    ) -> f64 {
+        let d = cost.cfg.d_model as f64;
+        let dt = dtype_bytes as f64;
+        let mut t = 0.0;
+        for l in 0..self.n_layers {
+            let (a, b) = (self.seg_off[l] as usize, self.seg_off[l + 1] as usize);
+            let degree = b - a;
+            let (base, extra) = (batch / degree, batch % degree);
+            let quant = quantized.contains(&l);
+            let mut worst: f64 = 0.0;
+            for i in 0..degree {
+                let share = base + usize::from(i < extra);
+                if share == 0 {
+                    continue;
+                }
+                let flops = cost.decode_flops(ModuleKind::DecoderLayer, share, mean_ctx);
+                let bytes = if quant {
+                    // weights at the swapped precision; KV stays full-width
+                    cost.weight_bytes(
+                        ModuleKind::DecoderLayer,
+                        Shape { batch: share, seq: 1, dtype_bytes: quant_dtype_bytes },
+                    ) + cost.kv_cache_bytes(share, mean_ctx, dtype_bytes)
+                } else {
+                    cost.decode_bytes_read(share, mean_ctx, dtype_bytes)
+                };
+                worst = worst
+                    .max(flops / self.seg_eff_flops[a + i])
+                    .max(bytes / self.seg_hbm_bw[a + i]);
+            }
+            t += worst;
+        }
+        t += self.transitions as f64
+            * ((batch as f64 * d * dt) / self.link_bw0 + TRANSITION_LAUNCH_S);
+        t += cost.decode_flops(ModuleKind::LmHead, batch, mean_ctx) / self.head_eff_flops;
+        t
+    }
 }
 
 #[cfg(test)]
@@ -320,6 +377,42 @@ mod tests {
         let d2 = prof.decode_step_time(&cm, 2, 16, 256);
         assert!(d2 > d1);
         assert!(d1 > 0.0);
+    }
+
+    #[test]
+    fn mixed_decode_empty_set_bit_equals_plain() {
+        let (cm, cl, mut pl) = setup();
+        pl.add_replica(3, 1);
+        pl.add_replica(20, 2);
+        let prof = PlacementProfile::compile(&pl, &cl, 0);
+        let none = BTreeSet::new();
+        for (batch, ctx) in [(1, 8), (16, 256), (7, 512)] {
+            assert_eq!(
+                prof.decode_step_time_mixed(&cm, 2, batch, ctx, &none, 1).to_bits(),
+                prof.decode_step_time(&cm, 2, batch, ctx).to_bits(),
+                "batch={batch} ctx={ctx}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantized_layers_speed_up_decode_monotonically() {
+        let (cm, cl, pl) = setup();
+        let prof = PlacementProfile::compile(&pl, &cl, 0);
+        // short context: decode is dominated by the weight-bytes term, so
+        // halving weight reads must shorten the step — and more swapped
+        // layers shorten it further
+        let plain = prof.decode_step_time(&cm, 2, 8, 64);
+        let few: BTreeSet<usize> = (36..40).collect();
+        let many: BTreeSet<usize> = (30..40).collect();
+        let t_few = prof.decode_step_time_mixed(&cm, 2, 8, 64, &few, 1);
+        let t_many = prof.decode_step_time_mixed(&cm, 2, 8, 64, &many, 1);
+        assert!(t_few < plain, "{t_few} !< {plain}");
+        assert!(t_many < t_few, "{t_many} !< {t_few}");
+        // KV reads stay full-width: the quantized step is still slower
+        // than a hypothetical all-int8 run of the plain roofline
+        let all_int8 = prof.decode_step_time(&cm, 1, 8, 64);
+        assert!(t_many > all_int8);
     }
 
     #[test]

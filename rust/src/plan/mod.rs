@@ -48,12 +48,20 @@ pub enum ModuleOp {
     MigrateModule { module: ModuleId, dst: usize, payload_bytes: f64 },
     /// Drop the replica of `layer` on `device` (scale-down phase 2).
     Evict { layer: usize, device: usize },
+    /// Rewrite decoder layer `layer`'s weights on `device` from `from`- to
+    /// `to`-byte elements in place (memory-pressure relief: int8 swap frees
+    /// roughly half the layer's bytes and shrinks its roofline weight-read
+    /// term, at a per-step quality penalty —
+    /// [`crate::model::cost::SWAP_QUALITY_PENALTY_PER_STEP`]).
+    SwapPrecision { layer: usize, device: usize, from: usize, to: usize },
 }
 
 impl ModuleOp {
     /// Does executing this op take a serving-path module offline for the
     /// op's duration? Replication never does (the source keeps serving);
     /// migration blocks exactly the moved module; eviction is metadata.
+    /// Precision swaps never block: the full-precision copy serves until
+    /// the quantized rewrite lands and is switched in atomically.
     pub fn blocks_serving(&self) -> bool {
         matches!(self, ModuleOp::MigrateLayer { .. } | ModuleOp::MigrateModule { .. })
     }
@@ -73,6 +81,9 @@ impl ModuleOp {
                 format!("migrate {module}->d{dst}")
             }
             ModuleOp::Evict { layer, device } => format!("evict L{layer}@d{device}"),
+            ModuleOp::SwapPrecision { layer, device, from, to } => {
+                format!("swap L{layer}@d{device} {from}B->{to}B")
+            }
         }
     }
 }
@@ -276,6 +287,31 @@ impl ScalePlan {
                     }
                     // eviction's free is deferred to commit — no credit
                 }
+                ModuleOp::SwapPrecision { layer, device, from, to } => {
+                    if device >= cluster.n() {
+                        return reject(i, format!("unknown device {device}"));
+                    }
+                    if layer >= pl.n_layers {
+                        return reject(i, format!("layer {layer} out of range"));
+                    }
+                    if !pl.holds(layer, device) {
+                        return reject(i, format!("layer {layer} not resident on {device}"));
+                    }
+                    if from == to {
+                        return reject(i, format!("no-op swap ({from}B->{to}B)"));
+                    }
+                    if !(1..=4).contains(&from) || !(1..=4).contains(&to) {
+                        return reject(i, format!("unsupported precision {from}B->{to}B"));
+                    }
+                    // Unlike migration/eviction, the swap resizes its ledger
+                    // allocation in place at apply time, so a shrink's bytes
+                    // are genuinely available to later ops — credit them.
+                    let delta = ops.swap_delta_bytes(from, to);
+                    if delta > free[device] {
+                        return reject(i, format!("device {device} lacks {delta:.0} B"));
+                    }
+                    free[device] -= delta;
+                }
             }
         }
         Ok(())
@@ -436,8 +472,83 @@ mod tests {
             "replicate L3->d1"
         );
         assert_eq!(ModuleOp::Evict { layer: 2, device: 0 }.describe(), "evict L2@d0");
+        assert_eq!(
+            ModuleOp::SwapPrecision { layer: 3, device: 0, from: 2, to: 1 }.describe(),
+            "swap L3@d0 2B->1B"
+        );
         assert!(ModuleOp::MigrateLayer { layer: 0, dst: 2 }.blocks_serving());
         assert!(!ModuleOp::Replicate { layer: 0, dst: 2 }.blocks_serving());
         assert!(!ModuleOp::Evict { layer: 0, device: 2 }.blocks_serving());
+        assert!(
+            !ModuleOp::SwapPrecision { layer: 0, device: 2, from: 2, to: 1 }.blocks_serving()
+        );
+    }
+
+    #[test]
+    fn validate_swap_requires_residency_and_distinct_precisions() {
+        let (cm, cl, pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        // everything lives on device 0 — a swap on d1 targets nothing
+        let mut plan = ScalePlan::new();
+        plan.push(ModuleOp::SwapPrecision { layer: 3, device: 1, from: 2, to: 1 });
+        assert!(matches!(
+            plan.validate(&ops, &cl, &pl),
+            Err(PlanError::Rejected { op_idx: 0, .. })
+        ));
+        let mut noop = ScalePlan::new();
+        noop.push(ModuleOp::SwapPrecision { layer: 3, device: 0, from: 2, to: 2 });
+        assert!(noop.validate(&ops, &cl, &pl).is_err());
+        let mut ok = ScalePlan::new();
+        ok.push(ModuleOp::SwapPrecision { layer: 3, device: 0, from: 2, to: 1 });
+        ok.validate(&ops, &cl, &pl).unwrap();
+    }
+
+    #[test]
+    fn validate_credits_swap_shrink_to_later_ops() {
+        // A quantization swap frees bytes at apply time (in-place resize),
+        // so a later replicate may rely on them — unlike eviction's
+        // deferred free.
+        let (cm, mut cl, mut pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        let ex = PlanExecutor::new(&ops);
+        ex.execute(&mut cl, &mut pl, &ScalePlan::replicate_batch(&[0], 1)).unwrap();
+        let layer_bytes = ops.module_bytes(ModuleKind::DecoderLayer);
+        let delta = ops.swap_delta_bytes(2, 1);
+        assert!(delta < 0.0, "quantization must shrink: {delta}");
+        // leave d1 too tight for a replica alone, but wide enough once the
+        // swap's shrink is credited
+        let hog = cl.device(1).free_bytes() - 0.6 * layer_bytes;
+        cl.device_mut(1).alloc("hog", hog).unwrap();
+        let alone = ScalePlan::replicate_batch(&[1], 1);
+        assert!(alone.validate(&ops, &cl, &pl).is_err());
+        let mut plan = ScalePlan::new();
+        plan.push(ModuleOp::SwapPrecision { layer: 0, device: 1, from: 2, to: 1 });
+        plan.push(ModuleOp::Replicate { layer: 1, dst: 1 });
+        plan.validate(&ops, &cl, &pl).unwrap();
+    }
+
+    /// Table 2-style parity for the new op: dry-run cost == executed cost,
+    /// and the ledger shrinks by exactly the quantization delta.
+    #[test]
+    fn swap_dry_run_equals_executed() {
+        let (cm, mut cl, mut pl) = setup();
+        let ops = ModuleOps::new(&cm, 2, "inst0");
+        ops.deploy_instance(&mut cl, &pl).unwrap();
+        let used_before = cl.device(0).used_bytes();
+        let mut plan = ScalePlan::new();
+        plan.push(ModuleOp::SwapPrecision { layer: 5, device: 0, from: 2, to: 1 });
+        plan.push(ModuleOp::SwapPrecision { layer: 6, device: 0, from: 2, to: 1 });
+        let dry = plan.dry_run(&ops, &cl, &pl).unwrap();
+        let executed = PlanExecutor::new(&ops).execute(&mut cl, &mut pl, &plan).unwrap();
+        assert_eq!(dry, executed, "swap parity must be bit-for-bit");
+        let delta = ops.swap_delta_bytes(2, 1);
+        assert_eq!(cl.device(0).used_bytes(), used_before + 2.0 * delta);
+        assert!(executed.total.dst_bytes < 0.0, "quantizing frees bytes");
+        // swapping back restores the original footprint bit-for-bit
+        let mut back = ScalePlan::new();
+        back.push(ModuleOp::SwapPrecision { layer: 5, device: 0, from: 1, to: 2 });
+        back.push(ModuleOp::SwapPrecision { layer: 6, device: 0, from: 1, to: 2 });
+        PlanExecutor::new(&ops).execute(&mut cl, &mut pl, &back).unwrap();
+        assert_eq!(cl.device(0).used_bytes(), used_before);
     }
 }

@@ -25,11 +25,12 @@
 use crate::autoscale::{scale_down, Pressure, ScaleDownConfig};
 use crate::cluster::Cluster;
 use crate::kvcache::{ContiguousKvCache, KvCache, KvStats, PagedKvCache};
-use crate::model::cost::CostModel;
+use crate::mempress::{MempressGovernor, PressureCause, PressureView, Relief};
+use crate::model::cost::{CostModel, INT8_BYTES, SWAP_QUALITY_PENALTY_PER_STEP};
 use crate::monitor::{Completion, Monitor};
 use crate::ops::{ModuleOps, OpCost, PlanExecution, PlanExecutor, REPLICA_COMM_SETUP_S};
 use crate::placement::{Placement, PlacementProfile};
-use crate::plan::{PlanCost, ScalePlan};
+use crate::plan::{ModuleOp, PlanCost, ScalePlan};
 use crate::scheduler::{Scheduler, Step};
 
 use super::metrics::{OpEvent, OpPhase, ScaleStats};
@@ -173,6 +174,16 @@ pub(crate) struct Instance {
     pub penalties: std::collections::BTreeMap<u64, f64>,
     /// Unique requests ever caught in an OOM (Fig. 11a numerator).
     pub oom_victims: std::collections::BTreeSet<u64>,
+    /// Layers currently serving int8 weights (landed `SwapPrecision`
+    /// ops). Always empty without a governor — the decode roofline takes
+    /// the mixed-precision path only when non-empty, so ungoverned runs
+    /// stay bit-identical to the pre-governor kernel.
+    pub quantized_layers: std::collections::BTreeSet<usize>,
+    /// Memory-pressure governor (`Some` iff `SimConfig::mempress` is set).
+    pub governor: Option<MempressGovernor>,
+    /// The run's full weight precision, cached from `SimConfig` for swap
+    /// bookkeeping on paths without a `StepCtx` (rollback unwinding).
+    dtype_bytes: usize,
 }
 
 impl Instance {
@@ -190,14 +201,23 @@ impl Instance {
             .expect("instance deployment OOM");
         let bytes_per_token =
             cost.kv_cache_bytes(1, 1, cfg.dtype_bytes) * cfg.model.n_layers as f64;
+        // A governed instance pre-grants a finite KV pool (the reservation
+        // a real engine makes at startup), sized from the post-deploy free
+        // bytes of its layer-0 device; the governor resizes it elastically
+        // under pressure. Ungoverned instances keep the unbounded pools
+        // (and the reserved-bytes ledger mirror) of the pre-governor
+        // kernel, so every existing golden stays byte-identical.
+        let pool = match &cfg.mempress {
+            Some(mp) => {
+                let d0 = placement.primary_device(0);
+                cluster.device(d0).free_bytes() * mp.initial_pool_frac
+            }
+            None => f64::INFINITY,
+        };
         let kv: Box<dyn KvCache> = if policy.paged_kv {
-            Box::new(PagedKvCache::new(f64::INFINITY, bytes_per_token, 16))
+            Box::new(PagedKvCache::new(pool, bytes_per_token, 16))
         } else {
-            Box::new(ContiguousKvCache::new(
-                f64::INFINITY,
-                bytes_per_token,
-                cfg.max_seq_len,
-            ))
+            Box::new(ContiguousKvCache::new(pool, bytes_per_token, cfg.max_seq_len))
         };
         let profile = PlacementProfile::compile(&placement, cluster, 0);
         Instance {
@@ -227,6 +247,9 @@ impl Instance {
             requests: Default::default(),
             penalties: Default::default(),
             oom_victims: Default::default(),
+            quantized_layers: Default::default(),
+            governor: cfg.mempress.map(MempressGovernor::new),
+            dtype_bytes: cfg.dtype_bytes,
         }
     }
 
@@ -352,7 +375,16 @@ impl Instance {
         if stats.reserved_bytes > self.kv_peak.reserved_bytes {
             self.kv_peak = stats;
         }
-        let per_layer = stats.reserved_bytes / self.placement.n_layers as f64;
+        // Governed instances mirror the pre-granted pool capacity (the
+        // real deployment reservation the governor resizes); ungoverned
+        // instances mirror live reservations exactly as before, keeping
+        // the golden metrics byte-identical.
+        let mirrored = if self.governor.is_some() {
+            self.kv.pool_bytes()
+        } else {
+            stats.reserved_bytes
+        };
+        let per_layer = mirrored / self.placement.n_layers as f64;
         for &(d, count) in &self.profile.kv_groups {
             let mut bytes = 0.0;
             for _ in 0..count {
@@ -367,12 +399,18 @@ impl Instance {
     }
 
     /// Apply the policy's OOM behaviour (§2.3 / Fig. 3 / Algorithm 2).
+    /// Governed instances walk the memory-pressure escalation ladder
+    /// first; only an `Escalate` decision falls through to the shed below.
     pub fn handle_oom(
         &mut self,
         ctx: &StepCtx<'_>,
         cluster: &mut Cluster,
         scale: &mut ScaleStats,
+        cause: PressureCause,
     ) {
+        if self.governor.is_some() && self.mempress_relieve(cluster, cause) {
+            return;
+        }
         match self.policy.oom {
             OomBehavior::FailBatch => {
                 // Drop the running batch's KV; requests retry after the
@@ -474,6 +512,98 @@ impl Instance {
         }
     }
 
+    // ---- memory-pressure governing (the rungs above the policy shed) ------
+
+    /// Snapshot the governor's decision inputs for one pressure episode.
+    fn pressure_view(&self, cluster: &Cluster) -> PressureView {
+        let headroom = self
+            .profile
+            .kv_groups
+            .iter()
+            .map(|&(d, _)| cluster.device(d).free_bytes())
+            .fold(f64::INFINITY, f64::min);
+        // Cold-layer proxy: deepest unreplicated, unswapped layers whose
+        // primary sits on the hottest device — deterministic, and swapping
+        // them frees bytes exactly where the pressure is. Replicated
+        // layers are hot by definition (the autoscaler just replicated
+        // them) and precision is tracked per layer, not per copy.
+        let hot = self.hottest_primary_device(cluster);
+        let swap_candidates: Vec<usize> = (0..self.placement.n_layers)
+            .rev()
+            .filter(|&l| {
+                self.profile.primary_devices[l] == hot
+                    && self.placement.degree(l) == 1
+                    && !self.quantized_layers.contains(&l)
+            })
+            .collect();
+        let gov = self.governor.as_ref().expect("governed instance");
+        PressureView {
+            pool_bytes: self.kv.pool_bytes(),
+            reserved_bytes: self.kv.stats().reserved_bytes,
+            headroom_bytes: if headroom.is_finite() { headroom } else { 0.0 },
+            swap_candidates,
+            swapped: self.quantized_layers.len(),
+            relief_inflight: self.inflight.is_some() || gov.swap_parked(),
+        }
+    }
+
+    /// Walk the governor's escalation ladder for one OOM episode. Returns
+    /// true when the episode is handled — relief enacted, or pending in
+    /// flight — and the caller must skip the policy shed.
+    fn mempress_relieve(&mut self, cluster: &mut Cluster, cause: PressureCause) -> bool {
+        let view = self.pressure_view(cluster);
+        let relief =
+            self.governor.as_mut().expect("governed instance").decide(cause, &view);
+        match relief {
+            Relief::GrowPool { grant } => {
+                let target = self.kv.pool_bytes() + grant;
+                let _ = self.kv.resize(target); // growing always succeeds
+                let _ = self.sync_kv(cluster); // mirror the larger grant
+                true
+            }
+            Relief::ShrinkPool { to } => {
+                // cannot fail: `to` is the snapshot's live reservation and
+                // nothing allocated since (same call stack)
+                let _ = self.kv.resize(to);
+                let _ = self.sync_kv(cluster); // release waste to the ledger
+                true
+            }
+            Relief::RequestSwaps { layers } => {
+                // park the plan for the kernel to admit as in-flight
+                // `OpStarted`/`OpCompleted` events — handle_oom has no
+                // event-queue access, and swaps take real transfer time
+                let mut plan = ScalePlan::new();
+                for l in layers {
+                    plan.push(ModuleOp::SwapPrecision {
+                        layer: l,
+                        device: self.profile.primary_devices[l],
+                        from: self.dtype_bytes,
+                        to: INT8_BYTES,
+                    });
+                }
+                self.governor.as_mut().expect("governed instance").park_swap(plan);
+                true
+            }
+            Relief::Wait => true,
+            Relief::Escalate => false,
+        }
+    }
+
+    /// A rollback undid the applied prefix of a plan: restore the
+    /// quantized-layer set to each swap op's `from` precision (the exact
+    /// inverse of the forward update in [`Instance::on_op_completed`]).
+    fn unwind_swaps(&mut self, plan: &ScalePlan, applied: usize) {
+        for op in &plan.ops[..applied] {
+            if let ModuleOp::SwapPrecision { layer, from, .. } = *op {
+                if from < self.dtype_bytes {
+                    self.quantized_layers.insert(layer);
+                } else {
+                    self.quantized_layers.remove(&layer);
+                }
+            }
+        }
+    }
+
     // ---- in-flight plan execution -----------------------------------------
 
     /// Accept a controller-planned [`ScalePlan`] for in-flight execution.
@@ -527,6 +657,9 @@ impl Instance {
                 .get(fl.next_op)
                 .map(|o| o.describe())
                 .unwrap_or_default();
+            // rollback restores ledger precision; mirror that in the
+            // quantized-layer set before the placement unwinds
+            self.unwind_swaps(&fl.plan, fl.next_op);
             fl.exec.rollback(cluster, &mut self.placement);
             self.plan_epoch += 1; // kill the plan's remaining events
             self.recompile_profile(cluster); // rollback moved the placement
@@ -577,6 +710,19 @@ impl Instance {
         let op = fl.plan.ops[op_idx];
         match fl.exec.apply_next(&ops, cluster, &mut self.placement, &op) {
             Ok(cost) => {
+                if let ModuleOp::SwapPrecision { layer, to, .. } = op {
+                    // track which layers now serve quantized (drives the
+                    // mixed-precision decode roofline + quality penalty)
+                    if to < self.dtype_bytes {
+                        self.quantized_layers.insert(layer);
+                    } else {
+                        self.quantized_layers.remove(&layer);
+                    }
+                    if let Some(g) = &mut self.governor {
+                        g.stats.swaps_applied += 1;
+                        g.stats.swap_freed_bytes += (-cost.dst_bytes).max(0.0);
+                    }
+                }
                 fl.next_op += 1;
                 let finished = fl.next_op == fl.plan.len();
                 if finished {
@@ -599,6 +745,7 @@ impl Instance {
                 OpOutcome::Applied { desc: op.describe(), cost, finished }
             }
             Err(_) => {
+                self.unwind_swaps(&fl.plan, fl.next_op);
                 fl.exec.rollback(cluster, &mut self.placement);
                 self.plan_epoch += 1;
                 self.recompile_profile(cluster);
@@ -727,7 +874,8 @@ impl Instance {
             Step::Idle => StepStart::Idle,
             Step::Prefill { request_ids } => {
                 // admit KV for the new sequences
-                let mut ok = true;
+                let mut cause = None;
+                let mut deficit = 0.0;
                 for id in &request_ids {
                     // idempotent: a previous partially-OOMed prefill may
                     // have admitted this sequence's cache already
@@ -735,15 +883,16 @@ impl Instance {
                         continue;
                     }
                     let prompt = self.requests.get(id).map(|r| r.1).unwrap_or(8);
-                    if self.kv.add_sequence(*id, prompt).is_err() {
-                        ok = false;
+                    if let Err(d) = self.kv.add_sequence(*id, prompt) {
+                        deficit += d;
+                        cause = Some(PressureCause::PoolExhausted { deficit });
                     }
                 }
-                if ok {
-                    ok = self.sync_kv(cluster).is_ok();
+                if cause.is_none() && self.sync_kv(cluster).is_err() {
+                    cause = Some(PressureCause::LedgerMirror);
                 }
-                if !ok {
-                    self.handle_oom(ctx, cluster, scale);
+                if let Some(c) = cause {
+                    self.handle_oom(ctx, cluster, scale, c);
                     return StepStart::OomStall;
                 }
                 let batch = request_ids.len();
@@ -760,18 +909,21 @@ impl Instance {
             }
             Step::Decode { request_ids } => {
                 // grow KV by one token per sequence
-                let mut ok = true;
+                let mut cause = None;
+                let mut deficit = 0.0;
                 for id in &request_ids {
-                    if self.kv.tokens_of(*id).is_some() && self.kv.append_token(*id).is_err()
-                    {
-                        ok = false;
+                    if self.kv.tokens_of(*id).is_some() {
+                        if let Err(d) = self.kv.append_token(*id) {
+                            deficit += d;
+                            cause = Some(PressureCause::PoolExhausted { deficit });
+                        }
                     }
                 }
-                if ok {
-                    ok = self.sync_kv(cluster).is_ok();
+                if cause.is_none() && self.sync_kv(cluster).is_err() {
+                    cause = Some(PressureCause::LedgerMirror);
                 }
-                if !ok {
-                    self.handle_oom(ctx, cluster, scale);
+                if let Some(c) = cause {
+                    self.handle_oom(ctx, cluster, scale, c);
                     return StepStart::OomStall;
                 }
                 let batch = request_ids.len();
@@ -782,7 +934,29 @@ impl Instance {
                         .collect();
                     (ctxs.iter().sum::<usize>() / ctxs.len().max(1)).max(1)
                 };
-                let mut dt = self.decode_step_time(ctx, batch, mean_ctx);
+                let mut dt = if self.quantized_layers.is_empty() {
+                    self.decode_step_time(ctx, batch, mean_ctx)
+                } else {
+                    // Quantized layers read int8 weights — faster roofline
+                    // bytes term — but each step accrues a quality penalty
+                    // the governor surfaces in the metrics JSON. Reached
+                    // only under an active governor (swaps are its rung 2),
+                    // so the ungoverned path stays bit-identical.
+                    let t = self.profile.decode_step_time_mixed(
+                        ctx.cost,
+                        ctx.cfg.dtype_bytes,
+                        batch,
+                        mean_ctx,
+                        &self.quantized_layers,
+                        INT8_BYTES,
+                    );
+                    if let Some(g) = &mut self.governor {
+                        g.stats.quality_penalty += self.quantized_layers.len()
+                            as f64
+                            * SWAP_QUALITY_PENALTY_PER_STEP;
+                    }
+                    t
+                };
                 dt *= contention;
                 // Decode is HBM-bandwidth-bound: the SMs are only partially
                 // occupied during the step (what NVML-style compute
@@ -795,6 +969,11 @@ impl Instance {
     }
 
     fn begin_busy(&mut self, until: f64) -> StepStart {
+        // a step started, so the instance is making forward progress —
+        // reset the governor's stall counter (bounds Relief::Wait)
+        if let Some(g) = &mut self.governor {
+            g.note_progress();
+        }
         self.step_token += 1;
         self.busy_until = Some(until);
         StepStart::Busy { until, token: self.step_token }
@@ -944,6 +1123,106 @@ mod tests {
         assert_eq!(inst.scheduler.pending_len(), 16, "no request lost");
         assert_eq!(inst.oom_victims.len(), 16);
         assert!(inst.monitor.total_oom() > 0);
+    }
+
+    /// Deploy with a governor and a deliberately starved initial pool.
+    fn governed_setup(
+        initial_pool_frac: f64,
+    ) -> (SimConfig, CostModel, Cluster, Instance) {
+        let mut cfg = SimConfig::paper_13b();
+        cfg.mempress = Some(crate::mempress::MempressConfig {
+            initial_pool_frac,
+            ..Default::default()
+        });
+        let cost = cfg.cost_model();
+        let mut cluster = Cluster::paper_testbed();
+        let placement = Placement::single_device(cfg.model.n_layers, 0);
+        let inst = Instance::deploy(
+            0,
+            placement,
+            baselines::cocoserve(16),
+            &cfg,
+            &cost,
+            &mut cluster,
+        );
+        (cfg, cost, cluster, inst)
+    }
+
+    #[test]
+    fn governed_oom_grows_pool_instead_of_shedding() {
+        // Pool rounds down to zero blocks, so the very first prefill hits
+        // admission pressure — but device headroom is plentiful, so rung 1
+        // (grow) must absorb it without any request being shed.
+        let (cfg, cost, mut cluster, mut inst) = governed_setup(1e-6);
+        let mut scale = ScaleStats::default();
+        submit(&mut inst, 1, 0.0, 128, 4);
+        let ctx = StepCtx { cfg: &cfg, cost: &cost, now: 0.0 };
+        let first = inst.start_step(&ctx, &mut cluster, 1.0, &mut scale);
+        assert_eq!(first, StepStart::OomStall, "episode stalls one poll");
+        let g = inst.governor.as_ref().unwrap();
+        assert_eq!(g.stats.kv_grows, 1, "rung 1 granted a larger pool");
+        assert_eq!(g.stats.escalations, 0);
+        assert!(inst.oom_victims.is_empty(), "nothing was shed");
+        assert!(inst.kv.pool_bytes() > 0.0, "the grant is live");
+        // same request, same instant: the grown pool now admits it
+        let second = inst.start_step(&ctx, &mut cluster, 1.0, &mut scale);
+        assert!(matches!(second, StepStart::Busy { .. }), "prefill started");
+        assert!(inst.oom_victims.is_empty());
+    }
+
+    #[test]
+    fn governed_oom_swaps_layers_when_headroom_is_gone() {
+        // Starve both the pool AND the device: rung 1 cannot grant, so the
+        // governor must park a SwapPrecision plan (rung 2). Executing it
+        // through the real op events quantizes the coldest layers, frees
+        // their ledger bytes, and the grow that was impossible before now
+        // succeeds — the full ladder, no shed at any point.
+        let (cfg, cost, mut cluster, mut inst) = governed_setup(1e-6);
+        let mut scale = ScaleStats::default();
+        let free = cluster.device(0).free_bytes();
+        cluster.device_mut(0).alloc("hog", free - 0.01 * GIB).unwrap();
+        submit(&mut inst, 1, 0.0, 128, 4);
+        let ctx = StepCtx { cfg: &cfg, cost: &cost, now: 0.0 };
+        let s = inst.start_step(&ctx, &mut cluster, 1.0, &mut scale);
+        assert_eq!(s, StepStart::OomStall);
+        assert!(inst.oom_victims.is_empty(), "governor handled the episode");
+        {
+            let g = inst.governor.as_ref().unwrap();
+            assert_eq!(g.stats.kv_grows, 0, "10 MiB headroom cannot cover it");
+            assert_eq!(g.stats.swap_requests, 1, "rung 2 requested swaps");
+            assert!(g.swap_parked(), "plan waits for the kernel to admit it");
+        }
+
+        // kernel's role, replayed by hand: dry-run then admit as op events
+        let plan = inst.governor.as_mut().unwrap().take_swap_request().unwrap();
+        assert_eq!(plan.len(), 4, "one batch of the coldest layers");
+        let ops = ModuleOps::new(&cost, cfg.dtype_bytes, "inst0");
+        let plan_cost = plan.dry_run(&ops, &cluster, &inst.placement).unwrap();
+        let free_before = cluster.device(0).free_bytes();
+        let (epoch, spans) = inst.admit_plan(0.0, plan, plan_cost, None);
+        for (k, &(t0, t1)) in spans.iter().enumerate() {
+            inst.on_op_started(t0, k, epoch);
+            let ctx = StepCtx { cfg: &cfg, cost: &cost, now: t1 };
+            inst.on_op_completed(&ctx, &mut cluster, k, epoch);
+        }
+        let expect: std::collections::BTreeSet<usize> =
+            [36, 37, 38, 39].into_iter().collect();
+        assert_eq!(inst.quantized_layers, expect, "deepest four layers swapped");
+        assert!(
+            cluster.device(0).free_bytes() > free_before + GIB,
+            "int8 rewrite freed over half the four layers' weight bytes"
+        );
+        let g = inst.governor.as_ref().unwrap();
+        assert_eq!(g.stats.swaps_applied, 4);
+        assert!(g.stats.swap_freed_bytes > GIB);
+
+        // freed weight bytes became KV headroom: the retry grows and admits
+        let retry = inst.start_step(&ctx, &mut cluster, 1.0, &mut scale);
+        assert_eq!(retry, StepStart::OomStall, "grow consumes one more poll");
+        assert_eq!(inst.governor.as_ref().unwrap().stats.kv_grows, 1);
+        let served = inst.start_step(&ctx, &mut cluster, 1.0, &mut scale);
+        assert!(matches!(served, StepStart::Busy { .. }));
+        assert!(inst.oom_victims.is_empty(), "the whole ladder shed nothing");
     }
 
     #[test]

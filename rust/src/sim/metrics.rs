@@ -9,6 +9,7 @@
 
 use crate::coordinator::FleetEvent;
 use crate::forecast::PredictReport;
+use crate::mempress::MempressReport;
 use crate::monitor::Monitor;
 use crate::placement::Placement;
 use crate::util::json::{self, Json};
@@ -127,6 +128,11 @@ pub struct SimReport {
     /// `forecast` key at all, keeping reactive-only documents
     /// byte-identical to the pre-forecast kernel.
     pub forecast: Option<PredictReport>,
+    /// Memory-pressure governor summary (fleet-wide sums of every
+    /// instance's escalation-ladder counters plus the number of layers
+    /// still quantized at the end of the run). `None` when no governor
+    /// was configured — same additive-key discipline as `forecast`.
+    pub mempress: Option<MempressReport>,
 }
 
 impl SimReport {
@@ -300,6 +306,27 @@ impl SimReport {
                 ]),
             ));
         }
+        // same discipline for the memory-pressure governor: no governor,
+        // no `mempress` key, byte-identical pre-governor documents
+        if let Some(m) = &self.mempress {
+            pairs.push((
+                "mempress",
+                json::obj(vec![
+                    ("episodes", json::num(m.episodes as f64)),
+                    ("escalations", json::num(m.escalations as f64)),
+                    ("kv_grows", json::num(m.kv_grows as f64)),
+                    ("kv_shrinks", json::num(m.kv_shrinks as f64)),
+                    ("pool_granted_bytes", json::num(m.pool_granted_bytes)),
+                    ("pool_reclaimed_bytes", json::num(m.pool_reclaimed_bytes)),
+                    ("quality_penalty", json::num(m.quality_penalty)),
+                    ("quantized_layers", json::num(m.quantized_layers as f64)),
+                    ("sheds_averted", json::num(m.sheds_averted as f64)),
+                    ("swap_freed_bytes", json::num(m.swap_freed_bytes)),
+                    ("swap_requests", json::num(m.swap_requests as f64)),
+                    ("swaps_applied", json::num(m.swaps_applied as f64)),
+                ]),
+            ));
+        }
         json::obj(pairs)
     }
 }
@@ -351,6 +378,7 @@ mod tests {
                 desc: "replicate L0->d1".into(),
             }],
             forecast: None,
+            mempress: None,
         }
     }
 
@@ -405,6 +433,47 @@ mod tests {
         assert_eq!(f.req("drain_vetoes").as_usize(), Some(3));
         assert_eq!(f.req("mae_holt").as_f64(), Some(1.0));
         assert_eq!(f.req("oracle").as_f64(), Some(0.0));
+        // everything else is unchanged
+        let base = Json::parse(&without).unwrap();
+        assert_eq!(base.req("completed"), parsed.req("completed"));
+    }
+
+    #[test]
+    fn mempress_block_is_strictly_additive() {
+        let without = tiny_report().to_json().to_string();
+        assert!(
+            !without.contains("\"mempress\""),
+            "no governor → no mempress key: {without}"
+        );
+        let mut r = tiny_report();
+        r.mempress = Some(crate::mempress::MempressReport {
+            episodes: 9,
+            kv_grows: 3,
+            kv_shrinks: 1,
+            pool_granted_bytes: 3e9,
+            pool_reclaimed_bytes: 5e8,
+            swap_requests: 2,
+            swaps_applied: 8,
+            swap_freed_bytes: 2.5e9,
+            sheds_averted: 7,
+            escalations: 2,
+            quality_penalty: 0.64,
+            quantized_layers: 8,
+        });
+        let with = r.to_json().to_string();
+        let parsed = Json::parse(&with).unwrap();
+        let m = parsed.req("mempress");
+        assert_eq!(m.req("episodes").as_usize(), Some(9));
+        assert_eq!(m.req("kv_grows").as_usize(), Some(3));
+        assert_eq!(m.req("kv_shrinks").as_usize(), Some(1));
+        assert_eq!(m.req("pool_granted_bytes").as_f64(), Some(3e9));
+        assert_eq!(m.req("swap_requests").as_usize(), Some(2));
+        assert_eq!(m.req("swaps_applied").as_usize(), Some(8));
+        assert_eq!(m.req("swap_freed_bytes").as_f64(), Some(2.5e9));
+        assert_eq!(m.req("sheds_averted").as_usize(), Some(7));
+        assert_eq!(m.req("escalations").as_usize(), Some(2));
+        assert_eq!(m.req("quality_penalty").as_f64(), Some(0.64));
+        assert_eq!(m.req("quantized_layers").as_usize(), Some(8));
         // everything else is unchanged
         let base = Json::parse(&without).unwrap();
         assert_eq!(base.req("completed"), parsed.req("completed"));

@@ -72,6 +72,7 @@ use crate::coordinator::{
     Router, RouterConfig,
 };
 use crate::forecast::{CapacityModel, PredictConfig, PredictiveController};
+use crate::mempress::{MempressConfig, MempressReport};
 use crate::model::cost::CostModel;
 use crate::model::{ModelConfig, ModuleKind};
 use crate::monitor::FleetInputs;
@@ -188,6 +189,14 @@ pub struct SimConfig {
     /// one — asserted per scenario in `rust/tests/shard_parity.rs` and
     /// by the CI smoke step.
     pub shards: usize,
+    /// Memory-pressure governor (None = ungoverned — instances mirror
+    /// their live KV reservation with an unbounded pool, no `mempress`
+    /// key appears in the metrics JSON, and every golden replay is
+    /// byte-identical to the pre-governor kernel). Some = each instance
+    /// pre-grants a finite KV pool and walks the §2.3 escalation ladder
+    /// (grow/shrink pool → int8 layer swaps → wait → shed) before any
+    /// request is shed.
+    pub mempress: Option<MempressConfig>,
 }
 
 impl SimConfig {
@@ -211,6 +220,7 @@ impl SimConfig {
             max_seq_len: 512,
             replica_budget: 12,
             shards: 1,
+            mempress: None,
         }
     }
 
@@ -951,12 +961,48 @@ impl Simulation {
                 self.schedule_wake(i, until, q);
             }
             StepStart::OomStall => {
+                // A governed instance may have parked a precision-swap
+                // plan during the episode — admit it as in-flight op
+                // events before scheduling the retry poll.
+                self.mempress_pickup(i, q);
                 // Back off one controller period before retrying, matching
                 // the recovery cadence of the lockstep loop this kernel
                 // replaced (any earlier arrival re-polls the instance too).
                 let at = self.now + self.cfg.controller_tick_s;
                 self.schedule_wake(i, at, q);
             }
+        }
+    }
+
+    /// Pick up a swap plan the governor parked during `handle_oom`
+    /// (rung 2 of the escalation ladder) and admit it through the same
+    /// dry-run → op-event machinery every background scaling plan uses —
+    /// swaps pay real rewrite time and roll back on conflict like any
+    /// other in-flight plan.
+    fn mempress_pickup(&mut self, i: usize, q: &mut dyn EventSink) {
+        if self.instances[i].inflight.is_some() {
+            return; // a plan already executes; the parked one waits
+        }
+        let Some(plan) = self.instances[i]
+            .governor
+            .as_mut()
+            .and_then(|g| g.take_swap_request())
+        else {
+            return;
+        };
+        let ops = ModuleOps::new(
+            &self.cost,
+            self.cfg.dtype_bytes,
+            &format!("inst{}", self.instances[i].id),
+        );
+        match plan.dry_run(&ops, &self.cluster, &self.instances[i].placement) {
+            // dry-run cost drives the op events, so the executed total
+            // equals it bit-for-bit (shared `apply_next` arithmetic)
+            Ok(cost) => self.admit(i, plan, cost, None, q),
+            // stale against the live ledger (e.g. an emergency scale-down
+            // landed between park and pickup): drop it, the next episode
+            // re-plans from fresh state
+            Err(_) => {}
         }
     }
 
@@ -1208,6 +1254,19 @@ impl Simulation {
     fn finish(mut self) -> SimReport {
         let wall = self.now.max(1e-9);
         self.ledger.advance(self.now);
+        // aggregate governor stats before `monitors` consumes the instances
+        let mempress = if self.cfg.mempress.is_some() {
+            let mut agg = MempressReport::default();
+            for inst in &self.instances {
+                if let Some(g) = &inst.governor {
+                    agg.absorb(&g.stats);
+                }
+                agg.quantized_layers += inst.quantized_layers.len() as u64;
+            }
+            Some(agg)
+        } else {
+            None
+        };
         SimReport {
             duration_s: wall,
             events_processed: self.events_processed,
@@ -1241,6 +1300,7 @@ impl Simulation {
             plans_aborted: self.scale.plans_aborted,
             op_events: self.scale.events,
             forecast: self.predictive.map(|p| p.report()),
+            mempress,
             monitors: self.instances.into_iter().map(|i| i.monitor).collect(),
         }
     }
@@ -1264,6 +1324,29 @@ mod tests {
             42,
         );
         sim.run(&trace, dur)
+    }
+
+    #[test]
+    fn governed_run_reports_mempress_and_never_sheds_more() {
+        let dur = 30.0;
+        let trace =
+            Trace::generate(Arrival::Poisson { rps: 6.0 }, LengthDist::alpaca(), dur, 7);
+        let mk = |cfg: SimConfig| {
+            let cluster = Cluster::paper_testbed();
+            let placement = Placement::single_device(cfg.model.n_layers, 0);
+            Simulation::new(cfg, cluster, vec![(placement, baselines::hft(16))])
+                .run(&trace, dur)
+        };
+        let off = mk(SimConfig::paper_13b());
+        let mut governed = SimConfig::paper_13b();
+        governed.mempress = Some(crate::mempress::MempressConfig::default());
+        let on = mk(governed);
+        assert!(off.mempress.is_none(), "unset config must add no report block");
+        assert!(on.mempress.is_some(), "governed run reports the governor");
+        assert!(
+            on.oom_victims <= off.oom_victims,
+            "the ladder must never shed more than the raw policy"
+        );
     }
 
     #[test]

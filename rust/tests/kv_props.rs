@@ -1,0 +1,199 @@
+//! Property tests for the KV-cache allocators (`cocoserve::kvcache`).
+//!
+//! The in-module unit tests pin individual behaviours; these tapes drive
+//! the allocators through randomized op sequences — including the elastic
+//! `resize` the memory-pressure governor leans on — and check the
+//! invariants the governor's correctness rests on:
+//!
+//! * block accounting is conserved under arbitrary
+//!   add/append/remove/resize interleavings (and a failed resize changes
+//!   nothing);
+//! * paged waste is bounded by one partial block per live sequence — the
+//!   Fig. 9 fragmentation bound;
+//! * shrinking a pool to its live reservation and growing it back is
+//!   bit-identical in both `KvStats` and pool capacity — so a governor
+//!   episode that ends up a no-op cannot perturb a golden replay.
+//!
+//! Deterministic by default; set `PROP_SEED` to explore, `PROP_CASE` to
+//! replay one case (see `cocoserve::util::prop`).
+
+use cocoserve::kvcache::{ContiguousKvCache, KvCache, PagedKvCache};
+use cocoserve::util::prop;
+use cocoserve::util::rng::Rng;
+
+/// Bytes per token — arbitrary but fixed; properties must not depend on it.
+const BPT: f64 = 256.0;
+const BLOCK_TOKENS: usize = 16;
+const POOL: f64 = 64.0 * 16.0 * BPT; // 64 blocks
+
+/// One randomized allocator op: (kind, sequence id, tokens-or-resize-%).
+type Tape = Vec<(u8, u64, usize)>;
+
+fn tape(r: &mut Rng, ops: usize) -> Tape {
+    (0..ops)
+        .map(|_| (r.below(4) as u8, r.below(8), 1 + r.below(200) as usize))
+        .collect()
+}
+
+#[test]
+fn prop_paged_conservation_under_resize_tapes() {
+    prop::check(
+        "paged-conservation-resize",
+        |r: &mut Rng| tape(r, 80),
+        |ops| {
+            let mut c = PagedKvCache::new(POOL, BPT, BLOCK_TOKENS);
+            let mut live: std::collections::BTreeSet<u64> = Default::default();
+            for &(op, seq, n) in ops {
+                let used_before = c.capacity_blocks() - c.free_blocks();
+                match op {
+                    0 if !live.contains(&seq) => {
+                        if c.add_sequence(seq, n).is_ok() {
+                            live.insert(seq);
+                        }
+                    }
+                    1 if live.contains(&seq) => {
+                        let _ = c.append_token(seq);
+                    }
+                    2 => {
+                        c.remove_sequence(seq);
+                        live.remove(&seq);
+                    }
+                    3 => {
+                        // resize to 0–200% of the original pool: shrink may
+                        // only reclaim free capacity, grow is unbounded here
+                        let target = POOL * (n as f64 / 100.0);
+                        let before = (used_before, c.capacity_blocks());
+                        if c.resize(target).is_err() {
+                            // a refused shrink must change nothing
+                            let after =
+                                (c.capacity_blocks() - c.free_blocks(), c.capacity_blocks());
+                            if after != before {
+                                return Err(format!(
+                                    "failed resize mutated state: {before:?} -> {after:?}"
+                                ));
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+                // conservation: used blocks == reserved bytes, always
+                let used = c.capacity_blocks() - c.free_blocks();
+                let s = c.stats();
+                let expect = (s.reserved_bytes / c.block_bytes()).round() as usize;
+                if used != expect {
+                    return Err(format!("blocks {used} != reserved {expect}"));
+                }
+                if s.live_bytes > s.reserved_bytes + 1e-9 {
+                    return Err("live exceeds reserved".into());
+                }
+                if s.sequences != live.len() {
+                    return Err(format!("{} tracked != {} live", s.sequences, live.len()));
+                }
+            }
+            // draining everything returns the pool to fully free
+            for s in live.iter() {
+                c.remove_sequence(*s);
+            }
+            if c.free_blocks() != c.capacity_blocks() {
+                return Err("drained pool is not fully free".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_paged_waste_bounded_by_one_partial_block_per_sequence() {
+    prop::check(
+        "paged-waste-bound",
+        |r: &mut Rng| tape(r, 60),
+        |ops| {
+            let mut c = PagedKvCache::new(POOL, BPT, BLOCK_TOKENS);
+            let mut live: std::collections::BTreeSet<u64> = Default::default();
+            for &(op, seq, n) in ops {
+                match op {
+                    0 if !live.contains(&seq) => {
+                        if c.add_sequence(seq, n).is_ok() {
+                            live.insert(seq);
+                        }
+                    }
+                    2 => {
+                        c.remove_sequence(seq);
+                        live.remove(&seq);
+                    }
+                    _ if live.contains(&seq) => {
+                        let _ = c.append_token(seq);
+                    }
+                    _ => {}
+                }
+                let s = c.stats();
+                // Fig. 9's paged bound: each sequence wastes strictly less
+                // than one block (its final, possibly-partial block)
+                let bound = s.sequences as f64 * c.block_bytes();
+                if s.waste_bytes() >= bound + 1e-9 {
+                    return Err(format!(
+                        "waste {} >= {} ({} seqs × block)",
+                        s.waste_bytes(),
+                        bound,
+                        s.sequences
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_resize_shrink_then_grow_is_bit_identical() {
+    prop::check(
+        "resize-roundtrip-bits",
+        |r: &mut Rng| tape(r, 40),
+        |ops| {
+            let mut paged = PagedKvCache::new(POOL, BPT, BLOCK_TOKENS);
+            let mut cont = ContiguousKvCache::new(POOL, BPT, 32);
+            for &(op, seq, n) in ops {
+                match op {
+                    0 => {
+                        let _ = paged.add_sequence(seq, n);
+                        let _ = cont.add_sequence(seq, n.min(32));
+                    }
+                    1 => {
+                        let _ = paged.append_token(seq);
+                        let _ = cont.append_token(seq);
+                    }
+                    2 => {
+                        paged.remove_sequence(seq);
+                        cont.remove_sequence(seq);
+                    }
+                    _ => {}
+                }
+            }
+            for (name, kv) in [
+                ("paged", &mut paged as &mut dyn KvCache),
+                ("contiguous", &mut cont as &mut dyn KvCache),
+            ] {
+                let pool0 = kv.pool_bytes();
+                let s0 = kv.stats();
+                // shrink to exactly the live reservation (always legal)…
+                kv.resize(s0.reserved_bytes)
+                    .map_err(|d| format!("{name}: shrink-to-reserved refused ({d})"))?;
+                // …then grow back to the original capacity
+                kv.resize(pool0)
+                    .map_err(|d| format!("{name}: grow-back refused ({d})"))?;
+                let s1 = kv.stats();
+                let same = kv.pool_bytes().to_bits() == pool0.to_bits()
+                    && s1.live_bytes.to_bits() == s0.live_bytes.to_bits()
+                    && s1.reserved_bytes.to_bits() == s0.reserved_bytes.to_bits()
+                    && s1.sequences == s0.sequences;
+                if !same {
+                    return Err(format!(
+                        "{name}: round-trip drifted: {s0:?}/{pool0} -> {s1:?}/{}",
+                        kv.pool_bytes()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
