@@ -1,0 +1,223 @@
+//! Fig. 14 (extension) — failure-domain chaos sweep: seeded device
+//! deaths injected into every scenario shape, with the conservation
+//! invariants asserted and the audit trail dumped for byte-diffing.
+//!
+//! The fleet is deliberately heterogeneous: two on-demand devices
+//! (A100 + H100) that the chaos schedule never touches, and two spot
+//! A100s that are exactly the preemption targets. Instance 0 seeds on
+//! the safe A100, instance 1 on a spot device, and the elastic fleet
+//! may spin up to all four. Each scenario then takes `CHAOS_FAILURES`
+//! seeded deaths over the middle of the run.
+//!
+//! Asserted per scenario:
+//! (a) **replay determinism** — two runs of the same seed produce
+//!     byte-identical metrics JSON *including* the audit records;
+//! (b) **request conservation** — completed + parked-at-deadline equals
+//!     the trace length: failures shed and re-route, never lose;
+//! (c) **audit completeness** — exactly one `device_failed` record per
+//!     scheduled death;
+//! and across the sweep: at least one death interrupted live work (some
+//! recovery, shed, or forced-release record exists).
+//!
+//! ```bash
+//! cargo bench --bench fig14_chaos                   # full sweep
+//! FIG14_SMOKE=1 cargo bench --bench fig14_chaos     # CI smoke
+//! CHAOS_SEED=7 GOLDEN_OUT=chaos.json cargo bench --bench fig14_chaos
+//! ```
+//!
+//! `GOLDEN_OUT=<path>` writes the concatenated per-scenario metrics
+//! JSON (audit trail included); CI runs the smoke twice with the same
+//! `CHAOS_SEED` and byte-compares the two files.
+
+use cocoserve::baselines;
+use cocoserve::cluster::{Cluster, DeviceSpec};
+use cocoserve::coordinator::{FleetConfig, RoutePolicy, RouterConfig};
+use cocoserve::placement::Placement;
+use cocoserve::sim::{FleetSetup, SimConfig, SimReport, Simulation};
+use cocoserve::util::bench::{Report, Table};
+use cocoserve::util::json;
+use cocoserve::workload::{FailureSchedule, Trace};
+
+struct BenchShape {
+    rps: f64,
+    duration_s: f64,
+    seed: u64,
+    failures: usize,
+    smoke: bool,
+}
+
+impl BenchShape {
+    fn from_env() -> BenchShape {
+        let smoke = std::env::var("FIG14_SMOKE")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false)
+            || std::env::args().any(|a| a == "--smoke");
+        let seed = std::env::var("CHAOS_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(140);
+        let failures = std::env::var("CHAOS_FAILURES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(2);
+        if smoke {
+            BenchShape { rps: 12.0, duration_s: 16.0, seed, failures, smoke }
+        } else {
+            BenchShape { rps: 14.0, duration_s: 40.0, seed, failures, smoke }
+        }
+    }
+}
+
+/// The mixed on-demand + spot fleet. Spot devices are the chaos targets.
+fn chaos_cluster() -> Cluster {
+    Cluster::mixed(vec![
+        DeviceSpec::a100_40gb(),
+        DeviceSpec::a100_40gb().spot(),
+        DeviceSpec::h100_80gb(),
+        DeviceSpec::a100_40gb().spot(),
+    ])
+}
+
+fn run(trace: &Trace, shape: &BenchShape, schedule: &FailureSchedule) -> SimReport {
+    let cfg = SimConfig::paper_13b();
+    let policy = baselines::cocoserve(32);
+    // instance 0 on the safe A100, instance 1 on a spot device
+    let placements = vec![
+        (Placement::single_device(cfg.model.n_layers, 0), policy),
+        (Placement::single_device(cfg.model.n_layers, 1), policy),
+    ];
+    let setup = FleetSetup {
+        router: RouterConfig {
+            policy: RoutePolicy::LeastOutstanding,
+            admission_limit: Some(64),
+            reroute_on_shed: true,
+        },
+        fleet: Some(FleetConfig::elastic(2, 4, policy)),
+        ..Default::default()
+    };
+    Simulation::with_fleet(cfg, chaos_cluster(), placements, setup)
+        .with_failures(schedule.clone())
+        .run(trace, shape.duration_s)
+}
+
+/// Count audit records of one kind.
+fn kind_count(r: &SimReport, kind: &str) -> usize {
+    r.audit
+        .as_ref()
+        .map_or(0, |a| a.log.records().iter().filter(|rec| rec.kind.name() == kind).count())
+}
+
+fn main() {
+    let shape = BenchShape::from_env();
+    let golden_out = std::env::var("GOLDEN_OUT").ok().filter(|p| !p.is_empty());
+    let targets = chaos_cluster().preemptible_devices();
+    println!(
+        "Fig. 14 — chaos sweep: 13B elastic fleet on 2 on-demand + {} spot devices, \
+         {} seeded deaths (seed {}), {:.0} rps, {:.0}s{}\n",
+        targets.len(),
+        shape.failures,
+        shape.seed,
+        shape.rps,
+        shape.duration_s,
+        if shape.smoke { " (SMOKE)" } else { "" }
+    );
+
+    let schedule =
+        FailureSchedule::seeded(&targets, shape.duration_s, shape.failures, shape.seed);
+    for f in &schedule.failures {
+        println!("  scheduled death: device {} at t={:.2}s", f.device, f.t);
+    }
+    println!();
+
+    let sweep = Trace::scenario_sweep(shape.rps, shape.duration_s, shape.seed);
+    let mut table = Table::new(&[
+        "scenario", "requests", "completed", "reroutes", "deaths", "migrations",
+        "lost", "shed", "unrouted", "dev·s",
+    ]);
+    let mut rep = Report::new("fig14_chaos");
+    let mut replay_ok = true;
+    let mut recovery_activity = 0usize;
+    let mut dump = String::new();
+
+    for (name, trace) in &sweep {
+        let r = run(trace, &shape, &schedule);
+        // (a) replay determinism, audit trail included
+        let again = run(trace, &shape, &schedule);
+        let rj = r.to_json().to_string();
+        let identical = rj == again.to_json().to_string();
+        replay_ok &= identical;
+        if !identical {
+            eprintln!("WARNING: chaos scenario `{name}` not replay-deterministic");
+        }
+
+        let audit = r.audit.as_ref().expect("chaos runs carry an audit block");
+        let unrouted = audit.unrouted_at_end;
+        // (b) conservation: every arrival completed once or still parked
+        assert_eq!(
+            r.total_completed() + unrouted,
+            trace.len(),
+            "`{name}`: {} completed + {unrouted} unrouted != {} arrivals",
+            r.total_completed(),
+            trace.len()
+        );
+        // (c) one audit record per scheduled death
+        let deaths = kind_count(&r, "device_failed");
+        assert_eq!(deaths, schedule.len(), "`{name}`: audit missed a death");
+
+        let migrations = kind_count(&r, "emergency_migration");
+        let lost = kind_count(&r, "instance_lost");
+        let shed: usize = kind_count(&r, "requests_shed");
+        recovery_activity += migrations + lost + shed + kind_count(&r, "replica_dropped");
+
+        table.row(&[
+            name.to_string(),
+            trace.len().to_string(),
+            r.total_completed().to_string(),
+            r.reroutes.to_string(),
+            deaths.to_string(),
+            migrations.to_string(),
+            lost.to_string(),
+            shed.to_string(),
+            unrouted.to_string(),
+            format!("{:.0}", r.device_seconds),
+        ]);
+        rep.set(
+            name,
+            json::obj(vec![
+                ("requests", json::num(trace.len() as f64)),
+                ("completed", json::num(r.total_completed() as f64)),
+                ("reroutes", json::num(r.reroutes as f64)),
+                ("deaths", json::num(deaths as f64)),
+                ("emergency_migrations", json::num(migrations as f64)),
+                ("instances_lost", json::num(lost as f64)),
+                ("unrouted_at_end", json::num(unrouted as f64)),
+                ("device_seconds", json::num(r.device_seconds)),
+                ("audit_records", json::num(audit.log.len() as f64)),
+                ("replay_deterministic", json::num(f64::from(u8::from(identical)))),
+            ]),
+        );
+        if golden_out.is_some() {
+            dump.push_str(name);
+            dump.push('\n');
+            dump.push_str(&rj);
+            dump.push('\n');
+        }
+    }
+
+    table.print();
+    assert!(
+        recovery_activity > 0,
+        "no death ever interrupted live work — the chaos schedule is miscalibrated"
+    );
+    println!(
+        "\ngolden replay across all scenarios: {}",
+        if replay_ok { "byte-identical ✓" } else { "MISMATCH ✗" }
+    );
+    rep.set("replay_ok", json::num(f64::from(u8::from(replay_ok))));
+    println!("report: {}", rep.write().unwrap().display());
+    if let Some(path) = &golden_out {
+        std::fs::write(path, dump).expect("write GOLDEN_OUT");
+        println!("golden metrics: {path} (seed={})", shape.seed);
+    }
+    assert!(replay_ok, "metrics JSON must be identical across same-seed runs");
+}

@@ -36,6 +36,11 @@ pub struct DeviceSpec {
     pub link_bw: f64,
     /// Achievable fraction of peak on serving GEMMs (MFU).
     pub mfu: f64,
+    /// Spot/preemptible capacity: the provider may reclaim this device at
+    /// any instant (a [`crate::workload::scenarios::FailureSchedule`]
+    /// decides when). On-demand devices never preempt, though hardware
+    /// failure can still be injected explicitly.
+    pub preemptible: bool,
 }
 
 impl DeviceSpec {
@@ -51,7 +56,44 @@ impl DeviceSpec {
             hbm_bw: 1.555e12,
             link_bw: 100.0e9,
             mfu: 0.45,
+            preemptible: false,
         }
+    }
+
+    /// NVIDIA H100-80GB PCIe — the newer FLOPs/HBM generation for
+    /// heterogeneous-fleet experiments: ~2.4× the dense bf16 throughput
+    /// and ~1.3× the HBM bandwidth of the A100 testbed device.
+    pub fn h100_80gb() -> DeviceSpec {
+        DeviceSpec {
+            name: "H100-80GB".into(),
+            mem_bytes: 80.0 * GIB,
+            peak_flops: 756.0 * TFLOPS,
+            hbm_bw: 2.0e12,
+            link_bw: 128.0e9,
+            mfu: 0.45,
+            preemptible: false,
+        }
+    }
+
+    /// NVIDIA V100-32GB — the older generation: slower GEMMs, slower HBM,
+    /// half-speed links. The cheap long-tail capacity a mixed fleet
+    /// back-fills with.
+    pub fn v100_32gb() -> DeviceSpec {
+        DeviceSpec {
+            name: "V100-32GB".into(),
+            mem_bytes: 32.0 * GIB,
+            peak_flops: 112.0 * TFLOPS,
+            hbm_bw: 0.9e12,
+            link_bw: 50.0e9,
+            mfu: 0.40,
+            preemptible: false,
+        }
+    }
+
+    /// The same device sold as spot/preemptible capacity.
+    pub fn spot(mut self) -> DeviceSpec {
+        self.preemptible = true;
+        self
     }
 
     /// Effective sustained GEMM throughput.
@@ -75,6 +117,13 @@ pub enum AllocError {
     },
     /// `free`/`resize` named a tag the ledger does not hold.
     UnknownTag(String),
+    /// The device has failed (preempted or lost): no allocation can ever
+    /// succeed on it again. Distinct from OOM so recovery paths and the
+    /// audit trail can tell "no room" from "no device".
+    DeviceFailed {
+        /// The dead device.
+        device: usize,
+    },
 }
 
 impl std::fmt::Display for AllocError {
@@ -85,6 +134,9 @@ impl std::fmt::Display for AllocError {
                 "device {device} OOM: requested {requested_mib:.1} MiB, free {free_mib:.1} MiB"
             ),
             AllocError::UnknownTag(tag) => write!(f, "unknown allocation tag `{tag}`"),
+            AllocError::DeviceFailed { device } => {
+                write!(f, "device {device} has failed")
+            }
         }
     }
 }
@@ -108,6 +160,10 @@ pub struct Device {
     busy_s: f64,
     /// Monotone per-device OOM event counter (Fig. 11a).
     pub oom_events: u64,
+    /// Has this device failed (preemption or hardware loss)? A failed
+    /// device holds no memory, accepts no allocation, and reports zero
+    /// vacancy, so every placement/routing filter skips it.
+    failed: bool,
 }
 
 impl Device {
@@ -121,7 +177,26 @@ impl Device {
             peak_used: 0.0,
             busy_s: 0.0,
             oom_events: 0,
+            failed: false,
         }
+    }
+
+    /// Kill this device: every resident allocation vanishes (the memory
+    /// physically no longer exists), and all future allocations are
+    /// refused with [`AllocError::DeviceFailed`]. Returns the bytes that
+    /// were resident at the failure instant (for the audit trail).
+    /// Idempotent — failing a dead device frees nothing.
+    pub fn fail(&mut self) -> f64 {
+        let lost = self.used;
+        self.allocs.clear();
+        self.used = 0.0;
+        self.failed = true;
+        lost
+    }
+
+    /// Has this device failed?
+    pub fn is_failed(&self) -> bool {
+        self.failed
     }
 
     /// Bytes currently resident on this device.
@@ -134,13 +209,22 @@ impl Device {
         self.peak_used
     }
 
-    /// Bytes still allocatable.
+    /// Bytes still allocatable (zero once failed).
     pub fn free_bytes(&self) -> f64 {
+        if self.failed {
+            return 0.0;
+        }
         (self.spec.mem_bytes - self.used).max(0.0)
     }
 
-    /// Fraction of device memory in use.
+    /// Fraction of device memory in use. A failed device reports fully
+    /// used: it can host nothing, so every headroom consumer (vacancy
+    /// filters, spin-up candidates, transfer-time contention) must see no
+    /// room rather than a freshly emptied ledger.
     pub fn mem_frac(&self) -> f64 {
+        if self.failed {
+            return 1.0;
+        }
         self.used / self.spec.mem_bytes
     }
 
@@ -150,8 +234,13 @@ impl Device {
     }
 
     /// Allocate `bytes` under `tag`, or record an OOM event and fail.
+    /// Refused outright (no OOM event — the device is gone, not full) once
+    /// the device has failed.
     pub fn alloc(&mut self, tag: &str, bytes: f64) -> Result<(), AllocError> {
         debug_assert!(bytes >= 0.0);
+        if self.failed {
+            return Err(AllocError::DeviceFailed { device: self.id });
+        }
         if bytes > self.free_bytes() {
             self.oom_events += 1;
             return Err(AllocError::Oom {
@@ -178,7 +267,11 @@ impl Device {
     }
 
     /// Shrink/grow an existing tag to an exact size (KV caches grow).
+    /// Refused once the device has failed — there is nothing to resize.
     pub fn resize(&mut self, tag: &str, new_bytes: f64) -> Result<(), AllocError> {
+        if self.failed {
+            return Err(AllocError::DeviceFailed { device: self.id });
+        }
         let cur = self.allocs.get(tag).copied().unwrap_or(0.0);
         if new_bytes > cur && new_bytes - cur > self.free_bytes() {
             self.oom_events += 1;
@@ -205,7 +298,15 @@ impl Device {
     /// adjusted incrementally — the exact inverse of the `alloc` that is
     /// being undone — rather than re-summed, so the restored value stays
     /// in the same accumulation regime as the rest of the ledger.
+    ///
+    /// A **failed** device makes this a no-op: rollback must never
+    /// re-acquire memory on a device that no longer exists — the failure
+    /// already released every byte, and the undo log's view of the device
+    /// predates its death.
     pub(crate) fn restore_alloc(&mut self, tag: &str, prev_bytes: f64) {
+        if self.failed {
+            return;
+        }
         let cur = self.allocs.get(tag).copied().unwrap_or(0.0);
         if prev_bytes == 0.0 {
             self.allocs.remove(tag);
@@ -343,6 +444,39 @@ impl Cluster {
     /// The paper's testbed: 4× A100-40GB.
     pub fn paper_testbed() -> Cluster {
         Cluster::homogeneous(4, DeviceSpec::a100_40gb())
+    }
+
+    /// A heterogeneous cluster: one device per spec, in order. The
+    /// failure-domain experiments mix generations (and spot capacity)
+    /// through this constructor; [`Cluster::homogeneous`] stays the
+    /// byte-identical legacy path.
+    pub fn mixed(specs: Vec<DeviceSpec>) -> Cluster {
+        Cluster {
+            devices: specs
+                .into_iter()
+                .enumerate()
+                .map(|(i, s)| Device::new(i, s))
+                .collect(),
+        }
+    }
+
+    /// Device ids sold as spot/preemptible capacity (failure-schedule
+    /// targets).
+    pub fn preemptible_devices(&self) -> Vec<usize> {
+        self.devices
+            .iter()
+            .filter(|d| d.spec.preemptible)
+            .map(|d| d.id)
+            .collect()
+    }
+
+    /// Device ids that have not failed.
+    pub fn live_devices(&self) -> Vec<usize> {
+        self.devices
+            .iter()
+            .filter(|d| !d.is_failed())
+            .map(|d| d.id)
+            .collect()
     }
 
     /// Number of devices.
@@ -535,5 +669,54 @@ mod tests {
         c.device_mut(1).alloc("x", 5.0 * GIB).unwrap();
         c.device_mut(2).alloc("x", 20.0 * GIB).unwrap();
         assert_eq!(c.by_free_memory(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn mixed_cluster_carries_generations_and_spot_flags() {
+        let c = Cluster::mixed(vec![
+            DeviceSpec::a100_40gb(),
+            DeviceSpec::h100_80gb(),
+            DeviceSpec::v100_32gb().spot(),
+        ]);
+        assert_eq!(c.n(), 3);
+        assert!(c.device(1).spec.effective_flops() > c.device(0).spec.effective_flops());
+        assert!(c.device(2).spec.effective_flops() < c.device(0).spec.effective_flops());
+        assert_eq!(c.preemptible_devices(), vec![2]);
+        assert_eq!(c.live_devices(), vec![0, 1, 2]);
+        // link bandwidth is the min of the endpoints' generations
+        assert_eq!(c.link_bw(1, 2), c.device(2).spec.link_bw);
+    }
+
+    #[test]
+    fn failed_device_releases_everything_and_refuses_all_work() {
+        let mut d = Device::new(3, DeviceSpec::a100_40gb());
+        d.alloc("w", 10.0 * GIB).unwrap();
+        d.alloc("kv", 2.0 * GIB).unwrap();
+        let lost = d.fail();
+        assert_eq!(lost, 12.0 * GIB);
+        assert!(d.is_failed());
+        assert_eq!(d.used_bytes(), 0.0);
+        assert_eq!(d.free_bytes(), 0.0, "a dead device has no headroom");
+        assert_eq!(d.mem_frac(), 1.0);
+        assert_eq!(d.vacancy_rate(), 0.0);
+        // no allocation path works, and none records an OOM event
+        assert!(matches!(d.alloc("x", 1.0), Err(AllocError::DeviceFailed { device: 3 })));
+        assert!(matches!(d.resize("w", 1.0), Err(AllocError::DeviceFailed { device: 3 })));
+        assert_eq!(d.oom_events, 0);
+        // rollback never re-acquires on a dead device
+        d.restore_alloc("w", 10.0 * GIB);
+        assert_eq!(d.used_bytes(), 0.0);
+        assert!(!d.has_alloc("w"));
+        // idempotent
+        assert_eq!(d.fail(), 0.0);
+    }
+
+    #[test]
+    fn failed_device_drops_out_of_placement_filters() {
+        let mut c = Cluster::paper_testbed();
+        c.device_mut(1).fail();
+        assert_eq!(c.live_devices(), vec![0, 2, 3]);
+        assert!(!c.eligible_nodes(0.1).contains(&1));
+        assert_eq!(*c.by_free_memory().last().unwrap(), 1);
     }
 }

@@ -1,0 +1,206 @@
+//! Append-only audit trail for the failure-domain fleet.
+//!
+//! Every module operation, device failure, recovery decision, and
+//! rollback the kernel performs while a failure schedule is configured
+//! lands here as one structured, timestamped record. The trail is:
+//!
+//! * **append-only** — records are pushed in dispatch order and never
+//!   mutated or reordered, so the log *is* the recovery narrative;
+//! * **deterministic** — the kernel's event order is deterministic, so
+//!   two runs of the same seed produce byte-identical trails
+//!   ([`AuditLog::to_json`] uses the same fixed-key-order JSON as the
+//!   rest of the golden metrics document);
+//! * **replayable** — each record carries enough state (instance,
+//!   device, structured detail) that the chaos tests can walk the trail
+//!   and re-derive the end state (which instances recovered, which
+//!   released, which devices stopped billing when) and diff it against
+//!   the report's counters.
+//!
+//! The trail rides in the golden metrics JSON under the strictly
+//! additive `audit` key: runs without a failure schedule carry no trail
+//! and therefore stay byte-identical to the pre-failure-domain kernel —
+//! the same discipline as the `forecast` and `mempress` blocks.
+
+use crate::util::json::{self, Json};
+
+/// What one audit record describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AuditKind {
+    /// A scaling-op lifecycle transition (started / completed / aborted)
+    /// — the module-op mirror of the `op_events` log, kept in the trail
+    /// so recovery interleaves with the ops it raced against.
+    ModuleOp,
+    /// A device died (spot preemption or hardware loss): its memory
+    /// vanished and its billing stopped at this instant.
+    DeviceFailed,
+    /// An in-flight plan touching the dead device was rolled back via
+    /// the undo log (rollback never re-acquires memory).
+    PlanRollback,
+    /// A module resident only on the dead device was re-placed onto a
+    /// surviving device (copy-then-verify-then-free — the free side is
+    /// vacuous, the source is gone).
+    EmergencyMigration,
+    /// A replica on the dead device was dropped from the placement; the
+    /// module survives elsewhere, so no bytes moved.
+    ReplicaDropped,
+    /// In-flight requests were shed back to the router for re-routing
+    /// (the no-request-lost path).
+    RequestsShed,
+    /// An instance released every ledger tag outside the normal
+    /// drain-then-release path (it failed or was preempted mid-drain).
+    ForcedRelease,
+    /// An instance could not be recovered (no surviving device had room
+    /// for its modules) and was retired.
+    InstanceLost,
+}
+
+impl AuditKind {
+    /// Stable name used in the golden metrics JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            AuditKind::ModuleOp => "module_op",
+            AuditKind::DeviceFailed => "device_failed",
+            AuditKind::PlanRollback => "plan_rollback",
+            AuditKind::EmergencyMigration => "emergency_migration",
+            AuditKind::ReplicaDropped => "replica_dropped",
+            AuditKind::RequestsShed => "requests_shed",
+            AuditKind::ForcedRelease => "forced_release",
+            AuditKind::InstanceLost => "instance_lost",
+        }
+    }
+}
+
+/// One append-only audit record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AuditRecord {
+    /// Simulated time of the action.
+    pub t: f64,
+    /// What happened.
+    pub kind: AuditKind,
+    /// Instance the action applied to (`None` for fleet-level records
+    /// like the failure itself).
+    pub instance: Option<usize>,
+    /// Device the action applied to (`None` for instance-level records
+    /// spanning several devices).
+    pub device: Option<usize>,
+    /// Compact structured detail (op description, byte counts, request
+    /// counts) — deterministic, so it diffs byte-for-byte.
+    pub detail: String,
+}
+
+/// The append-only audit trail — a push-only vector of records plus the
+/// deterministic JSON rendering.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AuditLog {
+    records: Vec<AuditRecord>,
+}
+
+impl AuditLog {
+    /// An empty trail.
+    pub fn new() -> AuditLog {
+        AuditLog::default()
+    }
+
+    /// Append one record (the only mutation the trail supports).
+    pub fn push(
+        &mut self,
+        t: f64,
+        kind: AuditKind,
+        instance: Option<usize>,
+        device: Option<usize>,
+        detail: impl Into<String>,
+    ) {
+        self.records.push(AuditRecord { t, kind, instance, device, detail: detail.into() });
+    }
+
+    /// The records, in append order.
+    pub fn records(&self) -> &[AuditRecord] {
+        &self.records
+    }
+
+    /// Number of records appended so far.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// Is the trail empty?
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Records of one kind, in append order (replay/diff helper).
+    pub fn of_kind(&self, kind: AuditKind) -> impl Iterator<Item = &AuditRecord> {
+        self.records.iter().filter(move |r| r.kind == kind)
+    }
+
+    /// Deterministic JSON rendering: an array of fixed-key-order objects
+    /// (`detail`, `device`, `instance`, `kind`, `t`; absent
+    /// instance/device render as -1 so every record has the same shape).
+    pub fn to_json(&self) -> Json {
+        json::arr(self.records.iter().map(|r| {
+            json::obj(vec![
+                ("detail", json::s(&r.detail)),
+                ("device", json::num(r.device.map_or(-1.0, |d| d as f64))),
+                ("instance", json::num(r.instance.map_or(-1.0, |i| i as f64))),
+                ("kind", json::s(r.kind.name())),
+                ("t", json::num(r.t)),
+            ])
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> AuditLog {
+        let mut log = AuditLog::new();
+        log.push(1.0, AuditKind::DeviceFailed, None, Some(2), "lost=3GiB holders=1");
+        log.push(1.0, AuditKind::PlanRollback, Some(0), Some(2), "ops_undone=2");
+        log.push(1.0, AuditKind::EmergencyMigration, Some(0), Some(1), "migrate L3->d1");
+        log.push(1.0, AuditKind::RequestsShed, Some(0), None, "shed=4");
+        log
+    }
+
+    #[test]
+    fn trail_is_append_only_and_ordered() {
+        let log = sample();
+        assert_eq!(log.len(), 4);
+        assert_eq!(log.records()[0].kind, AuditKind::DeviceFailed);
+        assert_eq!(log.records()[3].kind, AuditKind::RequestsShed);
+        assert_eq!(log.of_kind(AuditKind::PlanRollback).count(), 1);
+        assert!(!log.is_empty());
+        assert!(AuditLog::new().is_empty());
+    }
+
+    #[test]
+    fn json_is_deterministic_and_parses() {
+        let a = sample().to_json().to_string();
+        let b = sample().to_json().to_string();
+        assert_eq!(a, b);
+        let parsed = Json::parse(&a).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), 4);
+        assert_eq!(arr[0].req("kind").as_str(), Some("device_failed"));
+        assert_eq!(arr[0].req("instance").as_f64(), Some(-1.0));
+        assert_eq!(arr[0].req("device").as_f64(), Some(2.0));
+        assert_eq!(arr[2].req("detail").as_str(), Some("migrate L3->d1"));
+    }
+
+    #[test]
+    fn every_kind_has_a_stable_name() {
+        let kinds = [
+            AuditKind::ModuleOp,
+            AuditKind::DeviceFailed,
+            AuditKind::PlanRollback,
+            AuditKind::EmergencyMigration,
+            AuditKind::ReplicaDropped,
+            AuditKind::RequestsShed,
+            AuditKind::ForcedRelease,
+            AuditKind::InstanceLost,
+        ];
+        let names: std::collections::BTreeSet<&str> =
+            kinds.iter().map(|k| k.name()).collect();
+        assert_eq!(names.len(), kinds.len(), "names must be unique");
+    }
+}

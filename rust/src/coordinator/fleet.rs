@@ -277,6 +277,22 @@ impl CostLedger {
         }
     }
 
+    /// Device `device` died: zero its holder refcount so it stops billing
+    /// from this instant on — callers must have [`CostLedger::advance`]d
+    /// to the failure time first (the kernel does so at every event pop),
+    /// so no device-seconds past the failure are ever charged. Returns
+    /// the holders that were zeroed (for the audit trail); the caller is
+    /// responsible for dropping the device from any cached per-instance
+    /// billing lists so later releases do not double-release.
+    pub fn fail_device(&mut self, device: usize) -> u32 {
+        let zeroed = self.holders[device];
+        if zeroed > 0 {
+            self.holders[device] = 0;
+            self.billed -= 1;
+        }
+        zeroed
+    }
+
     /// Devices currently billing.
     pub fn billed_devices(&self) -> usize {
         self.billed
@@ -454,6 +470,23 @@ mod tests {
         assert_eq!(l.device_seconds(), 7.0);
         l.advance(10.0); // same-time re-advance is a no-op
         assert_eq!(l.device_seconds(), 7.0);
+    }
+
+    #[test]
+    fn fail_device_stops_billing_at_the_failure_instant() {
+        let mut l = CostLedger::new(2);
+        l.acquire(0);
+        l.acquire(0);
+        l.acquire(1);
+        l.advance(4.0); // 2 devices × 4 s
+        assert_eq!(l.device_seconds(), 8.0);
+        assert_eq!(l.fail_device(0), 2, "both holders zeroed at once");
+        assert_eq!(l.billed_devices(), 1);
+        l.advance(10.0); // only device 1 bills the remaining 6 s
+        assert_eq!(l.device_seconds(), 14.0);
+        // idempotent: a dead device has no holders left to zero
+        assert_eq!(l.fail_device(0), 0);
+        assert_eq!(l.billed_devices(), 1);
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! The CoCoServe coordinator — the fleet control plane.
 //!
-//! Three responsibilities live here:
+//! Four responsibilities live here:
 //!
 //! * **Routing** ([`route`]): arrivals land at the coordinator, never at a
 //!   fixed instance. A pluggable [`RoutePolicy`] (round-robin /
@@ -15,6 +15,11 @@
 //!   [`CostLedger`] meters device-seconds (a device bills while it holds
 //!   any module), the denominator of the paper's 46 % cost-reduction
 //!   claim (`benches/fig1_cost_availability.rs`).
+//! * **Failure-domain accounting** ([`audit`]): when devices can die
+//!   (spot preemption, hardware loss), every module op, failure,
+//!   recovery decision, and rollback appends one structured record to
+//!   the [`AuditLog`] — the append-only, byte-for-byte diffable trail
+//!   the chaos harness (`benches/fig14_chaos.rs`) replays.
 //! * **Real-path serving** ([`serve_trace`]): drives the [`TinyEngine`]
 //!   with the [`Scheduler`]'s continuous-batching decisions against a
 //!   wall-clock arrival process, recording completions in the
@@ -33,9 +38,11 @@
 //! [`Scheduler`]: crate::scheduler::Scheduler
 //! [`Monitor`]: crate::monitor::Monitor
 
+pub mod audit;
 pub mod fleet;
 pub mod route;
 
+pub use audit::{AuditKind, AuditLog, AuditRecord};
 pub use fleet::{CostLedger, FleetConfig, FleetController, FleetEvent, FleetPhase};
 pub use route::{RouteCandidate, RoutePolicy, Router, RouterConfig};
 

@@ -79,6 +79,11 @@ pub struct CapacityModel {
     /// the calibration margin absorbing contention, batch underfill and
     /// prompt-length tails the mean-request amortization cannot see.
     pub target_util: f64,
+    /// Effective FLOPs of the reference placement's bottleneck device
+    /// ([`PlacementProfile::min_eff_flops`]) — the denominator of the
+    /// heterogeneous speed factor. On a homogeneous fleet every instance
+    /// matches the reference and the factor is exactly 1.0.
+    pub ref_eff_flops: f64,
 }
 
 impl CapacityModel {
@@ -106,6 +111,7 @@ impl CapacityModel {
             gamma,
             n_layers: profile.n_layers,
             target_util: target_util.clamp(0.05, 1.0),
+            ref_eff_flops: profile.min_eff_flops(),
         }
     }
 
@@ -127,6 +133,25 @@ impl CapacityModel {
     pub fn replicas_for_deficit(&self, inv_p_norm: f64, deficit_eq: f64) -> usize {
         let target = self.equivalents_of(inv_p_norm) + deficit_eq.max(0.0);
         replicas_for_speedup(self.gamma, self.n_layers, inv_p_norm, target)
+    }
+
+    /// Heterogeneous speed factor of an instance whose pipeline
+    /// bottleneck runs at `min_eff_flops`: the ratio to the reference
+    /// device. A V100-hosted instance on an H100-referenced model prices
+    /// below 1.0; on a homogeneous fleet the ratio is *exactly* 1.0
+    /// (same value over itself), so every legacy number is bit-identical.
+    pub fn speed_factor(&self, min_eff_flops: f64) -> f64 {
+        if self.ref_eff_flops <= 0.0 || min_eff_flops <= 0.0 {
+            return 1.0;
+        }
+        min_eff_flops / self.ref_eff_flops
+    }
+
+    /// Capacity contribution of one instance in reference-device
+    /// instance-equivalents: its Eq. 4 speedup scaled by the
+    /// heterogeneous speed factor of its bottleneck device.
+    pub fn device_equivalents(&self, inv_p_norm: f64, min_eff_flops: f64) -> f64 {
+        self.equivalents_of(inv_p_norm) * self.speed_factor(min_eff_flops)
     }
 }
 
@@ -220,5 +245,59 @@ mod tests {
         let lifted = m.equivalents_of(norm - 0.5 * k as f64);
         assert!(lifted + 1e-9 >= 1.25, "{k} replicas lift to {lifted}");
         assert_eq!(m.replicas_for_deficit(norm, 0.0), 0);
+    }
+
+    #[test]
+    fn speed_factor_is_exactly_one_on_homogeneous_fleets() {
+        let m = model();
+        assert!(m.ref_eff_flops > 0.0);
+        // bit-exact: a factor derived from the same device cancels
+        assert_eq!(m.speed_factor(m.ref_eff_flops), 1.0);
+        assert_eq!(
+            m.device_equivalents(m.n_layers as f64, m.ref_eff_flops),
+            m.equivalents_of(m.n_layers as f64)
+        );
+        // degenerate inputs fall back to the homogeneous factor
+        assert_eq!(m.speed_factor(0.0), 1.0);
+        let degenerate = CapacityModel { ref_eff_flops: 0.0, ..m };
+        assert_eq!(degenerate.speed_factor(123.0), 1.0);
+    }
+
+    #[test]
+    fn two_generation_cluster_prices_slow_instances_below_fast_ones() {
+        use crate::cluster::DeviceSpec;
+        let cfg = SimConfig::paper_13b();
+        let cost = cfg.cost_model();
+        // generation 0: A100 (devices 0-1), generation 1: V100 (devices 2-3)
+        let cluster = Cluster::mixed(vec![
+            DeviceSpec::a100_40gb(),
+            DeviceSpec::a100_40gb(),
+            DeviceSpec::v100_32gb(),
+            DeviceSpec::v100_32gb(),
+        ]);
+        let fast = Placement::single_device(cfg.model.n_layers, 0);
+        let slow = Placement::single_device(cfg.model.n_layers, 2);
+        let fast_p = PlacementProfile::compile(&fast, &cluster, 0);
+        let slow_p = PlacementProfile::compile(&slow, &cluster, 0);
+        let m = CapacityModel::from_profile(
+            &cost, &fast_p, cfg.dtype_bytes, 16, 96, 64, 0.05, 0.6,
+        );
+        let norm = m.n_layers as f64;
+        // the A100-referenced model rates the A100 instance at exactly
+        // its homogeneous equivalents, and the V100 instance strictly
+        // below it, in proportion to effective FLOPs
+        let fast_eq = m.device_equivalents(norm, fast_p.min_eff_flops());
+        let slow_eq = m.device_equivalents(norm, slow_p.min_eff_flops());
+        assert_eq!(fast_eq, m.equivalents_of(norm));
+        assert!(
+            slow_eq < fast_eq,
+            "V100 instance ({slow_eq}) must price below A100 ({fast_eq})"
+        );
+        let ratio = slow_eq / fast_eq;
+        let flops_ratio = slow_p.min_eff_flops() / fast_p.min_eff_flops();
+        assert!(
+            (ratio - flops_ratio).abs() < 1e-12,
+            "equivalents ratio {ratio} must track FLOPs ratio {flops_ratio}"
+        );
     }
 }

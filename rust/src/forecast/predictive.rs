@@ -214,6 +214,7 @@ mod tests {
             gamma: 0.05,
             n_layers: 40,
             target_util: 1.0,
+            ref_eff_flops: 0.0, // homogeneous tests: factor pinned to 1.0
         };
         PredictiveController::new(
             PredictConfig { season_buckets: 8, ..Default::default() },

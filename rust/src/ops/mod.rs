@@ -64,13 +64,16 @@ pub const SWAP_REWRITE_BYTES_PER_S: f64 = 600.0e9;
 /// Cost of one executed operation.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct OpCost {
+    /// Wall-clock time the op occupies the transfer engine.
     pub time_s: f64,
+    /// Bytes streamed over the interconnect (or through HBM for swaps).
     pub bytes_moved: f64,
     /// Memory newly resident on the destination device.
     pub dst_bytes: f64,
 }
 
 impl OpCost {
+    /// Sum two costs component-wise (batch accounting).
     pub fn merge(self, other: OpCost) -> OpCost {
         OpCost {
             time_s: self.time_s + other.time_s,
@@ -80,10 +83,16 @@ impl OpCost {
     }
 }
 
+/// Why a single module op was refused (the op itself left no trace).
 #[derive(Debug)]
 pub enum OpError {
+    /// The destination device could not hold the copy — includes
+    /// [`crate::cluster::AllocError::DeviceFailed`] when the destination
+    /// died mid-plan.
     DestinationOom(crate::cluster::AllocError),
+    /// `(layer, device)`: the copy already exists there.
     AlreadyResident(usize, usize),
+    /// `(layer, device)`: asked to evict/swap a copy that isn't there.
     NoSuchReplica(usize, usize),
 }
 
@@ -120,6 +129,7 @@ impl From<crate::cluster::AllocError> for OpError {
 /// serving precision, and the instance's ledger tag prefix. Pure — every
 /// mutation happens through [`PlanExecutor`] / [`PlanExecution`].
 pub struct ModuleOps<'a> {
+    /// Analytic cost model the op costs are derived from.
     pub cost_model: &'a CostModel,
     /// Precision of resident weights (2 = bf16 at paper scale, 4 = f32 tiny).
     pub dtype_bytes: usize,
@@ -128,6 +138,7 @@ pub struct ModuleOps<'a> {
 }
 
 impl<'a> ModuleOps<'a> {
+    /// Costing context for one instance's ops at the given serving precision.
     pub fn new(cost_model: &'a CostModel, dtype_bytes: usize, tag_prefix: &str) -> Self {
         ModuleOps { cost_model, dtype_bytes, tag_prefix: tag_prefix.into() }
     }
@@ -260,6 +271,7 @@ pub struct PlanExecution {
 }
 
 impl PlanExecution {
+    /// Fresh two-phase execution: frees deferred to commit, rollback-safe.
     pub fn new() -> PlanExecution {
         PlanExecution::default()
     }
@@ -305,6 +317,8 @@ impl PlanExecution {
         &self.cost
     }
 
+    /// Consume the execution, keeping only its accumulated cost (for
+    /// callers that neither commit nor roll back, e.g. shadow pricing).
     pub fn into_cost(self) -> PlanCost {
         self.cost
     }
@@ -492,14 +506,18 @@ impl PlanExecution {
 /// lands, or cluster allocations and placement are byte-identical to the
 /// pre-call state.
 pub struct PlanExecutor<'a> {
+    /// Costing + tagging context the executor prices ops through.
     pub ops: &'a ModuleOps<'a>,
 }
 
 impl<'a> PlanExecutor<'a> {
+    /// Executor bound to one instance's costing context.
     pub fn new(ops: &'a ModuleOps<'a>) -> PlanExecutor<'a> {
         PlanExecutor { ops }
     }
 
+    /// Validate then apply the whole plan; the first failing op rolls
+    /// every applied op back and reports its index and cause.
     pub fn execute(
         &self,
         cluster: &mut Cluster,

@@ -148,6 +148,20 @@ impl PlacementProfile {
         &self.seg_device[self.seg_off[l] as usize..self.seg_off[l + 1] as usize]
     }
 
+    /// Effective FLOPs of the slowest device hosting any module of this
+    /// placement — the pipeline bottleneck. Heterogeneous-fleet capacity
+    /// math scales instance-equivalents by this against a reference
+    /// device, so a V100-hosted instance prices below an H100-hosted one
+    /// (on a homogeneous fleet the ratio is exactly 1.0 and every legacy
+    /// number is bit-identical).
+    pub fn min_eff_flops(&self) -> f64 {
+        self.seg_eff_flops
+            .iter()
+            .copied()
+            .fold(f64::INFINITY, f64::min)
+            .min(self.head_eff_flops)
+    }
+
     /// Per-layer prefill time across replicas: batch split (Fig. 4), max
     /// over replicas, plus scatter/gather per dataflow transition and the
     /// embed/lm_head term. Allocation-free; bit-identical to the

@@ -72,6 +72,20 @@ impl ModuleOp {
         matches!(self, ModuleOp::Replicate { .. })
     }
 
+    /// Does this op write `device` (as destination or in-place target)?
+    /// The failure-recovery path uses this to decide whether an in-flight
+    /// plan must roll back when a device dies mid-plan; source devices
+    /// are covered separately by the instance's resident device set.
+    pub fn touches_device(&self, device: usize) -> bool {
+        match *self {
+            ModuleOp::Replicate { dst, .. }
+            | ModuleOp::MigrateLayer { dst, .. }
+            | ModuleOp::MigrateModule { dst, .. } => dst == device,
+            ModuleOp::Evict { device: d, .. }
+            | ModuleOp::SwapPrecision { device: d, .. } => d == device,
+        }
+    }
+
     /// Compact human-readable form for logs and event records.
     pub fn describe(&self) -> String {
         match self {

@@ -3,10 +3,13 @@
 //! A binary heap of timestamped events with **fully deterministic
 //! ordering**: events pop by ascending time, then by kind priority
 //! (arrivals before their routing deliveries before forecast ticks
-//! before controller ticks before scaling-op starts/completions before
+//! before controller ticks before device failures before scaling-op
+//! starts/completions before
 //! step completions before wake-ups — routing delivers before a
 //! coinciding forecast tick closes its rate buckets, the forecast closes
-//! before a coinciding controller tick consumes it, and scaling ops
+//! before a coinciding controller tick consumes it, a device failure is
+//! observed before any same-time op completion can land bytes on the
+//! dead device, and scaling ops
 //! apply before a coinciding step completion so the step's successor
 //! sees the post-op placement), then by instance
 //! id, then by insertion sequence. Two runs
@@ -37,6 +40,15 @@ pub enum EventKind {
     ForecastTick,
     /// The §5 controller evaluates every autoscaling instance.
     ControllerTick,
+    /// Device `device` fails (spot preemption or hardware loss) at this
+    /// instant: its memory is gone, its billing stops, and every instance
+    /// holding modules on it recovers (plan rollback + emergency
+    /// re-placement + request re-routing). A coordinator barrier like the
+    /// ticks — it touches many instances and the fleet ledgers — slotted
+    /// *before* `OpCompleted` so a same-time op completion targeting the
+    /// dead device observes the failure (and its plan's abort) rather
+    /// than landing bytes on a corpse.
+    DeviceFailed { device: usize },
     /// Op `op_idx` of instance `instance`'s in-flight [`crate::plan::ScalePlan`]
     /// finishes: its ledger + placement effects apply now — this is what
     /// makes scaling overlap serving instead of pausing it. Completions
@@ -62,10 +74,11 @@ impl EventKind {
             EventKind::Routed { .. } => 1,
             EventKind::ForecastTick => 2,
             EventKind::ControllerTick => 3,
-            EventKind::OpCompleted { .. } => 4,
-            EventKind::OpStarted { .. } => 5,
-            EventKind::StepComplete { .. } => 6,
-            EventKind::Wake { .. } => 7,
+            EventKind::DeviceFailed { .. } => 4,
+            EventKind::OpCompleted { .. } => 5,
+            EventKind::OpStarted { .. } => 6,
+            EventKind::StepComplete { .. } => 7,
+            EventKind::Wake { .. } => 8,
         }
     }
 
@@ -74,7 +87,8 @@ impl EventKind {
         match self {
             EventKind::Arrival { .. }
             | EventKind::ForecastTick
-            | EventKind::ControllerTick => 0,
+            | EventKind::ControllerTick
+            | EventKind::DeviceFailed { .. } => 0,
             EventKind::Routed { instance, .. }
             | EventKind::OpCompleted { instance, .. }
             | EventKind::OpStarted { instance, .. }
@@ -270,9 +284,9 @@ impl Shard {
 /// The sharded event queue behind the epoch-barrier drive loop.
 ///
 /// Events split by kind: **global** kinds (`Arrival`, `ForecastTick`,
-/// `ControllerTick` — the coordinator barriers) live in one global queue;
-/// **instance-local** kinds (`Routed`, `OpStarted`, `OpCompleted`,
-/// `StepComplete`, `Wake`) go to the shard owning their instance
+/// `ControllerTick`, `DeviceFailed` — the coordinator barriers) live in
+/// one global queue; **instance-local** kinds (`Routed`, `OpStarted`,
+/// `OpCompleted`, `StepComplete`, `Wake`) go to the shard owning their instance
 /// (`instance % n_shards`). Within an epoch — the span between two
 /// global events — each shard drains its due events independently (in
 /// parallel via [`std::thread::scope`] when there is enough queued work),
@@ -283,7 +297,7 @@ impl Shard {
 ///
 /// The single-queue order is (time, kind priority, instance id, FIFO
 /// seq). Across sub-queues the first three components never tie: global
-/// kinds hold priorities {0, 2, 3} and local kinds {1, 4, 5, 6, 7}
+/// kinds hold priorities {0, 2, 3, 4} and local kinds {1, 5, 6, 7, 8}
 /// (disjoint), and two local events with equal (time, priority) in
 /// different shards name different instances by construction. A tie can
 /// therefore only occur *within* one sub-queue, where its own FIFO
@@ -318,7 +332,8 @@ impl ShardedEventQueue {
         match kind {
             EventKind::Arrival { .. }
             | EventKind::ForecastTick
-            | EventKind::ControllerTick => None,
+            | EventKind::ControllerTick
+            | EventKind::DeviceFailed { .. } => None,
             _ => Some(kind.instance_key() % self.shards.len()),
         }
     }
@@ -444,6 +459,7 @@ mod tests {
         q.push(5.0, EventKind::ForecastTick);
         q.push(5.0, EventKind::OpCompleted { instance: 0, op_idx: 0, epoch: 1 });
         q.push(5.0, EventKind::OpStarted { instance: 0, op_idx: 1, epoch: 1 });
+        q.push(5.0, EventKind::DeviceFailed { device: 2 });
         let kinds: Vec<EventKind> = drain(&mut q).iter().map(|e| e.kind).collect();
         assert_eq!(
             kinds,
@@ -452,6 +468,7 @@ mod tests {
                 EventKind::Routed { request_idx: 7, instance: 0 },
                 EventKind::ForecastTick,
                 EventKind::ControllerTick,
+                EventKind::DeviceFailed { device: 2 },
                 EventKind::OpCompleted { instance: 0, op_idx: 0, epoch: 1 },
                 EventKind::OpStarted { instance: 0, op_idx: 1, epoch: 1 },
                 EventKind::StepComplete { instance: 0, token: 1 },
@@ -505,11 +522,12 @@ mod tests {
     /// all kinds and instances).
     fn arbitrary_kind(r: &mut Rng) -> EventKind {
         let instance = r.below(6) as usize;
-        match r.below(8) {
+        match r.below(9) {
             0 => EventKind::Arrival { request_idx: r.below(50) as usize },
             1 => EventKind::Routed { request_idx: r.below(50) as usize, instance },
             2 => EventKind::ForecastTick,
             3 => EventKind::ControllerTick,
+            8 => EventKind::DeviceFailed { device: r.below(4) as usize },
             4 => EventKind::OpCompleted {
                 instance,
                 op_idx: r.below(4) as usize,
@@ -585,8 +603,9 @@ mod tests {
     #[test]
     fn shard_merge_interleaves_barrier_and_local_events() {
         // at one timestamp: Arrival(0) < Routed(1) < Forecast(2) <
-        // Controller(3) < locals — the merge must interleave the global
-        // queue between local priorities, not treat it as one block
+        // Controller(3) < DeviceFailed(4) < locals — the merge must
+        // interleave the global queue between local priorities, not
+        // treat it as one block
         let mut q = ShardedEventQueue::new(2);
         EventSink::push(&mut q, 1.0, EventKind::StepComplete { instance: 3, token: 9 });
         EventSink::push(&mut q, 1.0, EventKind::ControllerTick);

@@ -99,6 +99,41 @@ pub(crate) struct InflightPlan {
     pub had_replication: bool,
 }
 
+/// What repairing an instance after a device failure did (the kernel
+/// turns this into audit records).
+#[derive(Debug)]
+pub(crate) enum FailRecovery {
+    /// The instance held nothing on the dead device and no in-flight op
+    /// targeted it — untouched.
+    Untouched,
+    /// Placement repaired on surviving devices; the instance keeps serving.
+    Recovered {
+        /// An in-flight plan touching the device was rolled back first.
+        plan_aborted: bool,
+        /// Layers whose replica on the dead device was dropped (the module
+        /// survives elsewhere — no bytes moved).
+        replicas_dropped: Vec<usize>,
+        /// Layers whose dead primary was replaced by promoting a surviving
+        /// replica in place (no bytes moved — the replica is a full copy).
+        promoted: Vec<(usize, usize)>,
+        /// Emergency migrations: `(description, dst_device, bytes)` of each
+        /// sole-copy module re-fetched onto a surviving device
+        /// (copy-then-verify-then-free; the free side is vacuous — the
+        /// source died with the device).
+        migrated: Vec<(String, usize, f64)>,
+        /// In-flight requests shed back to the router for re-routing.
+        shed: usize,
+    },
+    /// No surviving device had room for a sole-copy module: the instance
+    /// was force-released (every tag freed, requests shed).
+    Lost {
+        /// An in-flight plan was rolled back before release.
+        plan_aborted: bool,
+        /// Requests flushed to the shed outbox for re-routing.
+        shed: usize,
+    },
+}
+
 /// What applying one in-flight op event did (for the kernel's log).
 #[derive(Debug)]
 pub(crate) enum OpOutcome {
@@ -289,6 +324,12 @@ impl Instance {
     /// retired. The caller stops billing its devices from here on.
     pub fn release(&mut self, cluster: &mut Cluster) {
         debug_assert!(self.drained(), "release before drain completes");
+        self.free_all_tags(cluster);
+        self.lifecycle = Lifecycle::Retired;
+    }
+
+    /// Free every `inst{id}/`-prefixed ledger tag on every device.
+    fn free_all_tags(&self, cluster: &mut Cluster) {
         let prefix = format!("inst{}/", self.id);
         for d in 0..cluster.n() {
             let dev = cluster.device_mut(d);
@@ -301,7 +342,242 @@ impl Instance {
                 let _ = dev.free(&t);
             }
         }
+    }
+
+    /// Requests still owned by this instance: pending in the scheduler or
+    /// in the running batch. (The `requests` metadata map also retains
+    /// completed ids — those must never be shed again.)
+    fn live_ids(&self) -> Vec<u64> {
+        let mut ids: std::collections::BTreeSet<u64> = self
+            .scheduler
+            .running_view()
+            .iter()
+            .map(|(id, _, _)| *id)
+            .collect();
+        ids.extend(self.pending_ids());
+        ids.into_iter().collect()
+    }
+
+    /// Shed every live request to the outbox for coordinator re-routing
+    /// (the no-request-lost failure path): drop their KV, carry their
+    /// accumulated penalties, rebuild the scheduler empty, and invalidate
+    /// any step in flight. Returns the number of requests shed.
+    pub fn shed_live_requests(&mut self) -> usize {
+        let ids = self.live_ids();
+        for id in &ids {
+            self.kv.remove_sequence(*id);
+            if let Some((arr, p, o)) = self.requests.remove(id) {
+                let penalty = self.penalties.remove(id).unwrap_or(0.0);
+                self.shed_outbox.push(Shed {
+                    id: *id,
+                    arrival_s: arr,
+                    prompt_tokens: p,
+                    output_tokens: o,
+                    penalty,
+                });
+            }
+        }
+        self.scheduler = Scheduler::new(self.scheduler.cfg);
+        self.busy_until = None;
+        self.step_token += 1; // stale StepComplete events die quietly
+        ids.len()
+    }
+
+    /// Release outside the drain-then-release protocol: an instance that
+    /// failed (or was preempted while `Draining`) flushes every live
+    /// request to the shed outbox, drops any in-flight plan (its tags are
+    /// freed wholesale below — the caller rolls back first if it wants the
+    /// op-event record), frees every `inst{id}/` ledger tag on every
+    /// device, and retires. No request is lost and no tag leaks. Returns
+    /// the number of requests shed.
+    pub fn force_release(&mut self, cluster: &mut Cluster) -> usize {
+        let shed = self.shed_live_requests();
+        self.inflight = None;
+        self.plan_epoch += 1; // kill any remaining plan events
+        self.op_block_until = 0.0;
+        self.free_all_tags(cluster);
         self.lifecycle = Lifecycle::Retired;
+        shed
+    }
+
+    /// Repair this instance after `device` died (its ledger already
+    /// cleared by [`crate::cluster::Device::fail`]). In order:
+    ///
+    /// 1. an in-flight plan that reads or writes the dead device rolls
+    ///    back via the undo log (rollback never re-acquires memory — the
+    ///    dead device's `restore_alloc` is a no-op);
+    /// 2. replicas on the dead device are dropped from the placement
+    ///    (the module survives elsewhere);
+    /// 3. a dead primary with surviving replicas promotes one in place
+    ///    (no bytes move — the replica is a full copy);
+    /// 4. sole-copy modules (primary-resident layers, migrated sub-layer
+    ///    modules, embed/head globals) are emergency-migrated onto the
+    ///    surviving device with the most free bytes — copy-then-verify-
+    ///    then-free with a vacuous free side; if no survivor has room the
+    ///    whole instance is force-released ([`FailRecovery::Lost`]);
+    /// 5. every live request is shed back to the router (its KV shards on
+    ///    the dead device are gone) and the step-cost profile recompiles.
+    pub fn recover_from_failure(
+        &mut self,
+        ctx: &StepCtx<'_>,
+        cluster: &mut Cluster,
+        device: usize,
+        scale: &mut ScaleStats,
+    ) -> FailRecovery {
+        let holds = self.device_set().contains(&device)
+            || self.placement.migrations().any(|(_, &d)| d == device);
+        let plan_touches = self.inflight.as_ref().map_or(false, |fl| {
+            fl.plan.ops.iter().any(|o| o.touches_device(device))
+        });
+        if !holds && !plan_touches {
+            return FailRecovery::Untouched;
+        }
+
+        // 1. unwind any plan entangled with the dead device
+        let plan_aborted = self.inflight.is_some();
+        self.abort_inflight(ctx.now, cluster, scale);
+
+        if !holds {
+            // the plan was the only entanglement — rollback repaired it
+            return FailRecovery::Recovered {
+                plan_aborted,
+                replicas_dropped: Vec::new(),
+                promoted: Vec::new(),
+                migrated: Vec::new(),
+                shed: 0,
+            };
+        }
+
+        let ops = self.module_ops(ctx);
+
+        // 2. drop dead replicas (module survives on its primary)
+        let mut replicas_dropped = Vec::new();
+        for l in 0..self.placement.n_layers {
+            if self.placement.remove_replica(l, device) {
+                replicas_dropped.push(l);
+            }
+        }
+
+        // 3./4. repair layers whose primary died
+        let mut promoted = Vec::new();
+        let mut migrated = Vec::new();
+        for l in self.placement.primaries_on(device) {
+            let survivors = self.placement.layer_devices(l);
+            if let Some(&r) = survivors.iter().find(|&&d| d != device) {
+                // promote the first surviving replica (creation order —
+                // deterministic); its ledger copy is already in place
+                self.placement.remove_replica(l, r);
+                self.placement.migrate_layer(l, r);
+                promoted.push((l, r));
+            } else {
+                // sole copy died: re-fetch onto the roomiest survivor
+                let m = crate::model::ModuleId::layer(
+                    crate::model::ModuleKind::DecoderLayer,
+                    l,
+                );
+                let bytes = ops.module_bytes(crate::model::ModuleKind::DecoderLayer);
+                match Self::emergency_alloc(cluster, bytes, &ops, &m) {
+                    Some(dst) => {
+                        self.placement.migrate_layer(l, dst);
+                        // the re-fetched copy is full precision
+                        self.quantized_layers.remove(&l);
+                        migrated.push((format!("L{l}"), dst, bytes));
+                    }
+                    None => {
+                        let shed = self.force_release(cluster);
+                        return FailRecovery::Lost { plan_aborted, shed };
+                    }
+                }
+            }
+        }
+
+        // 4b. migrated sub-layer modules stranded on the dead device
+        let stranded: Vec<crate::model::ModuleId> = self
+            .placement
+            .migrations()
+            .filter(|&(_, &d)| d == device)
+            .map(|(m, _)| *m)
+            .collect();
+        for m in stranded {
+            let bytes = ops.module_bytes(m.kind);
+            match Self::emergency_alloc(cluster, bytes, &ops, &m) {
+                Some(dst) => {
+                    self.placement.migrate_module(m, dst);
+                    migrated.push((format!("{m}"), dst, bytes));
+                }
+                None => {
+                    let shed = self.force_release(cluster);
+                    return FailRecovery::Lost { plan_aborted, shed };
+                }
+            }
+        }
+
+        // 4c. embed/head globals: if their bytes died with the device
+        // (no live device holds a copy), re-fetch them at the repaired
+        // layer-0 home
+        for kind in [crate::model::ModuleKind::Embed, crate::model::ModuleKind::LmHead] {
+            let m = crate::model::ModuleId::global(kind);
+            if self.placement.module_override(m) == Some(device) {
+                // the override pointed at the corpse — drop it so the
+                // module homes with the (repaired, live) layer-0 primary
+                self.placement.unmigrate_module(m);
+            }
+            let alive = (0..cluster.n())
+                .any(|d| d != device && cluster.device(d).has_alloc(&ops.tag(&m, d)));
+            if alive {
+                continue;
+            }
+            let home = self.placement.module_device(m);
+            debug_assert_ne!(home, device, "layer-0 primary repaired above");
+            let bytes = ops.module_bytes(kind);
+            if cluster.device_mut(home).alloc(&ops.tag(&m, home), bytes).is_ok() {
+                migrated.push((format!("{m}"), home, bytes));
+            } else {
+                match Self::emergency_alloc(cluster, bytes, &ops, &m) {
+                    Some(dst) => {
+                        self.placement.migrate_module(m, dst);
+                        migrated.push((format!("{m}"), dst, bytes));
+                    }
+                    None => {
+                        let shed = self.force_release(cluster);
+                        return FailRecovery::Lost { plan_aborted, shed };
+                    }
+                }
+            }
+        }
+
+        // 5. requests lose their dead-device KV shards — shed for re-route
+        let shed = self.shed_live_requests();
+        self.recompile_profile(cluster);
+        let _ = self.sync_kv(cluster);
+        FailRecovery::Recovered { plan_aborted, replicas_dropped, promoted, migrated, shed }
+    }
+
+    /// Allocate `bytes` for module `m` on the surviving device with the
+    /// most free bytes (ascending-id tie-break — deterministic). Returns
+    /// the chosen device, or `None` when no survivor has room.
+    fn emergency_alloc(
+        cluster: &mut Cluster,
+        bytes: f64,
+        ops: &ModuleOps<'_>,
+        m: &crate::model::ModuleId,
+    ) -> Option<usize> {
+        let mut order: Vec<usize> = cluster.live_devices();
+        order.sort_by(|&a, &b| {
+            cluster
+                .device(b)
+                .free_bytes()
+                .partial_cmp(&cluster.device(a).free_bytes())
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        for d in order {
+            let tag = ops.tag(m, d);
+            if cluster.device_mut(d).alloc(&tag, bytes).is_ok() {
+                return Some(d);
+            }
+        }
+        None
     }
 
     /// All devices hosting any copy of any of this instance's layers.

@@ -7,7 +7,7 @@
 //! — two runs with the same seed and trace produce byte-identical JSON,
 //! which the golden-replay test and the fig10/fig11 benches assert.
 
-use crate::coordinator::FleetEvent;
+use crate::coordinator::{AuditLog, FleetEvent};
 use crate::forecast::PredictReport;
 use crate::mempress::MempressReport;
 use crate::monitor::Monitor;
@@ -69,6 +69,21 @@ pub struct ScaleStats {
     pub plans_aborted: u64,
     /// Timestamped op lifecycle log.
     pub events: Vec<OpEvent>,
+}
+
+/// The failure-domain audit trail attached to a chaos run: the
+/// append-only record stream plus the end-of-run conservation
+/// denominator the chaos tests need (requests still parked at the drain
+/// deadline are neither completed nor shed — they must be accounted for
+/// before "no request lost" can be asserted).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AuditBlock {
+    /// Every module op, failure, recovery decision, and rollback —
+    /// appended in event order, replayable and byte-for-byte diffable.
+    pub log: AuditLog,
+    /// Requests still parked in the router when the run ended (capacity
+    /// never recovered enough to place them before the drain deadline).
+    pub unrouted_at_end: usize,
 }
 
 /// Aggregated outcome of a simulation run.
@@ -133,6 +148,11 @@ pub struct SimReport {
     /// still quantized at the end of the run). `None` when no governor
     /// was configured — same additive-key discipline as `forecast`.
     pub mempress: Option<MempressReport>,
+    /// Failure-domain audit trail. `None` when no failure schedule was
+    /// configured — and then the metrics JSON carries no `audit` key at
+    /// all, keeping failure-free documents byte-identical to the
+    /// pre-chaos kernel (same additive-key discipline as `forecast`).
+    pub audit: Option<AuditBlock>,
 }
 
 impl SimReport {
@@ -327,6 +347,17 @@ impl SimReport {
                 ]),
             ));
         }
+        // and for the failure-domain audit trail: no failure schedule,
+        // no `audit` key, byte-identical pre-chaos documents
+        if let Some(a) = &self.audit {
+            pairs.push((
+                "audit",
+                json::obj(vec![
+                    ("records", a.log.to_json()),
+                    ("unrouted_at_end", json::num(a.unrouted_at_end as f64)),
+                ]),
+            ));
+        }
         json::obj(pairs)
     }
 }
@@ -379,6 +410,7 @@ mod tests {
             }],
             forecast: None,
             mempress: None,
+            audit: None,
         }
     }
 
@@ -474,6 +506,46 @@ mod tests {
         assert_eq!(m.req("escalations").as_usize(), Some(2));
         assert_eq!(m.req("quality_penalty").as_f64(), Some(0.64));
         assert_eq!(m.req("quantized_layers").as_usize(), Some(8));
+        // everything else is unchanged
+        let base = Json::parse(&without).unwrap();
+        assert_eq!(base.req("completed"), parsed.req("completed"));
+    }
+
+    #[test]
+    fn audit_block_is_strictly_additive() {
+        let without = tiny_report().to_json().to_string();
+        assert!(
+            !without.contains("\"audit\""),
+            "no failure schedule → no audit key: {without}"
+        );
+        let mut r = tiny_report();
+        let mut log = AuditLog::new();
+        log.push(
+            3.5,
+            crate::coordinator::AuditKind::DeviceFailed,
+            None,
+            Some(1),
+            "lost_bytes=42 holders=1",
+        );
+        log.push(
+            3.5,
+            crate::coordinator::AuditKind::RequestsShed,
+            Some(0),
+            None,
+            "shed=2",
+        );
+        r.audit = Some(AuditBlock { log, unrouted_at_end: 1 });
+        let with = r.to_json().to_string();
+        let parsed = Json::parse(&with).unwrap();
+        let a = parsed.req("audit");
+        assert_eq!(a.req("unrouted_at_end").as_usize(), Some(1));
+        let recs = a.req("records").as_arr().unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].req("kind").as_str(), Some("device_failed"));
+        assert_eq!(recs[0].req("device").as_usize(), Some(1));
+        assert_eq!(recs[1].req("kind").as_str(), Some("requests_shed"));
+        // two renders are byte-identical (replayable, diffable)
+        assert_eq!(with, r.to_json().to_string());
         // everything else is unchanged
         let base = Json::parse(&without).unwrap();
         assert_eq!(base.req("completed"), parsed.req("completed"));

@@ -59,7 +59,7 @@ pub mod events;
 pub(crate) mod instance;
 pub mod metrics;
 
-pub use metrics::{OpEvent, OpPhase, ScaleStats, SimReport};
+pub use metrics::{AuditBlock, OpEvent, OpPhase, ScaleStats, SimReport};
 
 use crate::autoscale::{
     memory_violation, scale_up, Controller, ControllerConfig, PlanCtx, PlannedDecision,
@@ -68,8 +68,8 @@ use crate::autoscale::{
 use crate::cluster::Cluster;
 use crate::coordinator::fleet::{FleetPressure, ScaleOutChoice};
 use crate::coordinator::{
-    CostLedger, FleetConfig, FleetController, FleetEvent, FleetPhase, RouteCandidate,
-    Router, RouterConfig,
+    AuditKind, AuditLog, CostLedger, FleetConfig, FleetController, FleetEvent,
+    FleetPhase, RouteCandidate, Router, RouterConfig,
 };
 use crate::forecast::{CapacityModel, PredictConfig, PredictiveController};
 use crate::mempress::{MempressConfig, MempressReport};
@@ -80,10 +80,10 @@ use crate::ops::ModuleOps;
 use crate::placement::{Placement, PlacementProfile};
 use crate::plan::{PlanCost, ScalePlan};
 use crate::scheduler::SchedulerConfig;
-use crate::workload::{Request, Trace};
+use crate::workload::{FailureSchedule, Request, Trace};
 
 use events::{Event, EventKind, EventQueue, EventSink, ShardedEventQueue};
-use instance::{Instance, Lifecycle, OpOutcome, StepCtx, StepStart};
+use instance::{FailRecovery, Instance, Lifecycle, OpOutcome, StepCtx, StepStart};
 
 /// Serving-path pause when a replication plan lands (synchronization
 /// barrier while dataflow hooks swap in; the weight copies themselves
@@ -272,6 +272,14 @@ pub struct Simulation {
     bill_cache: Vec<(u64, Vec<usize>)>,
     /// Timestamped fleet lifecycle log (spin-up / drain / release).
     fleet_events: Vec<FleetEvent>,
+    /// Seed-deterministic device-failure schedule (empty = no failures —
+    /// the kernel schedules no `DeviceFailed` events and every golden
+    /// stays byte-identical to the pre-failure-domain kernel).
+    failures: FailureSchedule,
+    /// Append-only audit trail (`Some` iff a failure schedule is
+    /// configured — the strictly additive `audit` key of the metrics
+    /// JSON).
+    audit: Option<AuditLog>,
     now: f64,
     scale: ScaleStats,
     peak_mem: f64,
@@ -355,11 +363,40 @@ impl Simulation {
             ledger,
             bill_cache,
             fleet_events: Vec::new(),
+            failures: FailureSchedule::default(),
+            audit: None,
             now: 0.0,
             scale: ScaleStats::default(),
             peak_mem: 0.0,
             events_processed: 0,
             steps_started: 0,
+        }
+    }
+
+    /// Configure a seed-deterministic device-failure schedule. A
+    /// non-empty schedule arms the append-only audit trail: every module
+    /// op, failure, recovery decision and rollback from here on lands as
+    /// a structured record under the metrics JSON's `audit` key. An
+    /// empty schedule is a no-op (no `DeviceFailed` events, no `audit`
+    /// key — byte-identical goldens).
+    pub fn with_failures(mut self, schedule: FailureSchedule) -> Simulation {
+        if !schedule.is_empty() {
+            self.audit = Some(AuditLog::new());
+        }
+        self.failures = schedule;
+        self
+    }
+
+    /// Append one audit record (no-op without a failure schedule).
+    fn audit_push(
+        &mut self,
+        kind: AuditKind,
+        instance: Option<usize>,
+        device: Option<usize>,
+        detail: impl Into<String>,
+    ) {
+        if let Some(log) = &mut self.audit {
+            log.push(self.now, kind, instance, device, detail);
         }
     }
 
@@ -494,6 +531,140 @@ impl Simulation {
                 self.instances[i].profile.device_set.clone()
             };
             self.bill_cache[i] = (rev, devs);
+        }
+    }
+
+    /// A device died (spot preemption or hardware loss). In order:
+    ///
+    /// 1. the device's ledger clears and it refuses all future work
+    ///    ([`crate::cluster::Device::fail`] — every placement/routing
+    ///    filter skips it from here on);
+    /// 2. its billing stops at exactly this instant (the cost ledger was
+    ///    already advanced to `now` at the event pop), and the corpse is
+    ///    stripped from every cached billing list so later reconciliation
+    ///    never double-releases it;
+    /// 3. every entangled instance repairs itself in ascending-id order
+    ///    ([`Instance::recover_from_failure`]): in-flight plans roll back
+    ///    via the undo log (never re-acquiring memory), dead replicas
+    ///    drop, sole-copy modules emergency-migrate to survivors, live
+    ///    requests shed to the router — or, when no survivor has room,
+    ///    the instance force-releases with every tag freed;
+    /// 4. the normal dispatch tail re-routes the shed requests
+    ///    (`collect_shed` → `drain_parked`) — no request is lost.
+    ///
+    /// Every step appends a structured record to the audit trail.
+    fn on_device_failed(&mut self, device: usize) {
+        let lost = self.cluster.device_mut(device).fail();
+        let holders = self.ledger.fail_device(device);
+        for entry in &mut self.bill_cache {
+            entry.1.retain(|&d| d != device);
+        }
+        self.audit_push(
+            AuditKind::DeviceFailed,
+            None,
+            Some(device),
+            format!("lost_bytes={lost:.0} holders={holders}"),
+        );
+        for i in 0..self.instances.len() {
+            if self.instances[i].lifecycle == Lifecycle::Retired {
+                continue;
+            }
+            let ctx = StepCtx { cfg: &self.cfg, cost: &self.cost, now: self.now };
+            let outcome = self.instances[i].recover_from_failure(
+                &ctx,
+                &mut self.cluster,
+                device,
+                &mut self.scale,
+            );
+            match outcome {
+                FailRecovery::Untouched => {}
+                FailRecovery::Recovered {
+                    plan_aborted,
+                    replicas_dropped,
+                    promoted,
+                    migrated,
+                    shed,
+                } => {
+                    if plan_aborted {
+                        self.audit_push(
+                            AuditKind::PlanRollback,
+                            Some(i),
+                            Some(device),
+                            "in-flight plan rolled back (no re-acquire)",
+                        );
+                    }
+                    for l in replicas_dropped {
+                        self.audit_push(
+                            AuditKind::ReplicaDropped,
+                            Some(i),
+                            Some(device),
+                            format!("L{l}"),
+                        );
+                    }
+                    for (l, dst) in promoted {
+                        self.audit_push(
+                            AuditKind::EmergencyMigration,
+                            Some(i),
+                            Some(dst),
+                            format!("promote L{l}->d{dst}"),
+                        );
+                    }
+                    for (desc, dst, bytes) in migrated {
+                        self.audit_push(
+                            AuditKind::EmergencyMigration,
+                            Some(i),
+                            Some(dst),
+                            format!("refetch {desc}->d{dst} bytes={bytes:.0}"),
+                        );
+                    }
+                    if shed > 0 {
+                        self.audit_push(
+                            AuditKind::RequestsShed,
+                            Some(i),
+                            None,
+                            format!("shed={shed}"),
+                        );
+                    }
+                }
+                FailRecovery::Lost { plan_aborted, shed } => {
+                    if plan_aborted {
+                        self.audit_push(
+                            AuditKind::PlanRollback,
+                            Some(i),
+                            Some(device),
+                            "in-flight plan rolled back (no re-acquire)",
+                        );
+                    }
+                    if shed > 0 {
+                        self.audit_push(
+                            AuditKind::RequestsShed,
+                            Some(i),
+                            None,
+                            format!("shed={shed}"),
+                        );
+                    }
+                    self.audit_push(
+                        AuditKind::ForcedRelease,
+                        Some(i),
+                        None,
+                        "released outside drain protocol",
+                    );
+                    self.audit_push(
+                        AuditKind::InstanceLost,
+                        Some(i),
+                        Some(device),
+                        "no surviving device had room",
+                    );
+                    // force_release retires without bumping the placement
+                    // revision — settle its billing here, not in
+                    // sync_billing
+                    for &d in &self.bill_cache[i].1 {
+                        self.ledger.release(d);
+                    }
+                    self.bill_cache[i] =
+                        (self.instances[i].placement_rev, Vec::new());
+                }
+            }
         }
     }
 
@@ -686,7 +857,12 @@ impl Simulation {
     /// capacity at the horizon — not just what accepts right now — is
     /// what stops the predictive controller re-spinning for a deficit an
     /// in-flight cold start already covers. Predictor-only (the capacity
-    /// conversion lives there).
+    /// conversion lives there). On a heterogeneous fleet each instance is
+    /// weighted by its pipeline-bottleneck speed factor
+    /// ([`CapacityModel::device_equivalents`]) — a V100-hosted instance
+    /// counts for less than an H100 one, so deficit math and drain gating
+    /// stay honest on mixed generations. Homogeneous fleets get a factor
+    /// of exactly 1.0 (bit-identical to the unweighted sum).
     fn capacity_equivalents_at(&self, horizon_s: f64, exclude: Option<usize>) -> f64 {
         let cap = &self.predictive.as_ref().expect("predictor").cap;
         let by = self.now + horizon_s + 1e-9;
@@ -698,7 +874,12 @@ impl Simulation {
                     && inst.lifecycle == Lifecycle::Active
                     && inst.active_after <= by
             })
-            .map(|(_, inst)| cap.equivalents_of(inst.placement.inv_p_norm()))
+            .map(|(_, inst)| {
+                cap.device_equivalents(
+                    inst.placement.inv_p_norm(),
+                    inst.profile.min_eff_flops(),
+                )
+            })
             .sum()
     }
 
@@ -835,20 +1016,39 @@ impl Simulation {
     /// of added capacity, and execute the cheaper option. Replication
     /// flows through the normal in-flight plan path; spin-up deploys a new
     /// instance that starts accepting traffic after the cold start.
+    ///
+    /// On a mixed fleet both sides are priced in the *same* currency —
+    /// device-0-relative equivalents: a replication round on a slow
+    /// instance yields proportionally less capacity, and a spin-up on a
+    /// slow device pays a proportionally longer effective cold start
+    /// (same capacity, later). On a homogeneous fleet every factor is
+    /// exactly 1.0, so the arbitration inputs are bit-identical to the
+    /// unweighted ones.
     fn fleet_scale_out(&mut self, q: &mut dyn EventSink) {
         let replication = self.replication_option();
         let fc = self.fleet.as_ref().expect("fleet mode").cfg;
         let spin_dev = self.spin_candidate();
+        // device 0 is the pricing reference (it always exists; scenario
+        // constructors put the seed instance there)
+        let ref_eff = self.cluster.device(0).spec.effective_flops();
+        let speed = |eff: f64| {
+            if ref_eff <= 0.0 || eff <= 0.0 { 1.0 } else { eff / ref_eff }
+        };
         // priced exactly as enacted: cold_start_s covers process launch +
         // weight load (see FleetConfig), and spin_up gates activation on
-        // cold_start_s alone
-        let spin_cost = spin_dev.map(|_| fc.cold_start_s);
+        // cold_start_s alone — a slower device delivers fewer reference
+        // equivalents per wall-second of cold start, priced as more
+        // seconds per reference equivalent
+        let spin_cost = spin_dev.map(|d| {
+            fc.cold_start_s / speed(self.cluster.device(d).spec.effective_flops())
+        });
         let rep_option = replication
             .as_ref()
-            .map(|(_, up)| {
+            .map(|(i, up)| {
                 (
                     up.cost.total.time_s,
-                    up.planned.len() as f64 / self.cfg.model.n_layers.max(1) as f64,
+                    up.planned.len() as f64 / self.cfg.model.n_layers.max(1) as f64
+                        * speed(self.instances[*i].profile.min_eff_flops()),
                 )
             });
         let choice = self.fleet.as_ref().expect("fleet").arbitrate(rep_option, spin_cost);
@@ -1027,6 +1227,11 @@ impl Simulation {
             q.push(r.arrival_s, EventKind::Arrival { request_idx: 0 });
         }
         q.push(self.cfg.controller_tick_s, EventKind::ControllerTick);
+        // the failure schedule is part of the seeded initial conditions:
+        // same schedule, same seed → same event stream, byte-identical run
+        for f in &self.failures.failures {
+            q.push(f.t, EventKind::DeviceFailed { device: f.device });
+        }
         if let Some(p) = &mut self.predictive {
             if p.cfg.oracle {
                 // trace-peeking upper bound: install the true per-bucket
@@ -1082,9 +1287,21 @@ impl Simulation {
                 if let Some(p) = &mut self.predictive {
                     p.forecaster.observe(self.now);
                 }
-                self.instances[instance].outstanding_routes -= 1;
-                self.instances[instance].deliver(trace.requests[request_idx], 0.0);
+                if self.instances[instance].lifecycle == Lifecycle::Retired {
+                    // Defensive: a same-timestamp DeviceFailed cannot
+                    // outrun a Routed event (priority 1 < 4), but if a
+                    // target ever retires under an undelivered route,
+                    // park the request for re-routing instead of
+                    // delivering to a corpse.
+                    let inst = &mut self.instances[instance];
+                    inst.outstanding_routes = inst.outstanding_routes.saturating_sub(1);
+                    self.router.park(trace.requests[request_idx], 0.0, true);
+                } else {
+                    self.instances[instance].outstanding_routes -= 1;
+                    self.instances[instance].deliver(trace.requests[request_idx], 0.0);
+                }
             }
+            EventKind::DeviceFailed { device } => self.on_device_failed(device),
             EventKind::ForecastTick => {
                 // close rate buckets up to now (quiet gaps decay the
                 // estimators) right before the coinciding controller
@@ -1102,6 +1319,12 @@ impl Simulation {
             EventKind::OpStarted { instance, op_idx, epoch } => {
                 let outcome = self.instances[instance].on_op_started(self.now, op_idx, epoch);
                 if let OpOutcome::Started { desc } = outcome {
+                    self.audit_push(
+                        AuditKind::ModuleOp,
+                        Some(instance),
+                        None,
+                        format!("started {desc}"),
+                    );
                     self.scale.events.push(OpEvent {
                         t: self.now,
                         instance,
@@ -1122,6 +1345,12 @@ impl Simulation {
                 match outcome {
                     OpOutcome::Applied { desc, cost, .. } => {
                         self.scale.op_time_s += cost.time_s;
+                        self.audit_push(
+                            AuditKind::ModuleOp,
+                            Some(instance),
+                            None,
+                            format!("completed {desc}"),
+                        );
                         self.scale.events.push(OpEvent {
                             t: self.now,
                             instance,
@@ -1132,6 +1361,12 @@ impl Simulation {
                     }
                     OpOutcome::Aborted { desc } => {
                         self.scale.plans_aborted += 1;
+                        self.audit_push(
+                            AuditKind::ModuleOp,
+                            Some(instance),
+                            None,
+                            format!("aborted {desc}"),
+                        );
                         self.scale.events.push(OpEvent {
                             t: self.now,
                             instance,
@@ -1267,6 +1502,13 @@ impl Simulation {
         } else {
             None
         };
+        // requests still parked at the deadline are the conservation
+        // remainder the chaos tests account for (completed + shed +
+        // unrouted == trace length)
+        let audit = self.audit.take().map(|log| AuditBlock {
+            log,
+            unrouted_at_end: self.router.pending.len(),
+        });
         SimReport {
             duration_s: wall,
             events_processed: self.events_processed,
@@ -1301,6 +1543,7 @@ impl Simulation {
             op_events: self.scale.events,
             forecast: self.predictive.map(|p| p.report()),
             mempress,
+            audit,
             monitors: self.instances.into_iter().map(|i| i.monitor).collect(),
         }
     }

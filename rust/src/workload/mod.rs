@@ -14,6 +14,8 @@
 
 pub mod scenarios;
 
+pub use scenarios::{DeviceFailure, FailureSchedule};
+
 use crate::util::rng::Rng;
 
 /// One inference request. Plain-old-data and `Copy`: the event kernel

@@ -18,8 +18,84 @@
 //!   continuous batching and KV accounting.
 //!
 //! All constructors are deterministic in `(rps, duration_s, seed)`.
+//!
+//! [`FailureSchedule`] extends the library to the *failure domain*: a
+//! seed-deterministic list of device deaths (spot preemptions, hardware
+//! loss) the chaos experiments inject into the kernel alongside any of
+//! the traffic shapes above.
 
 use super::{Arrival, LengthDist, Trace};
+use crate::util::rng::Rng;
+
+/// One scheduled device death.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceFailure {
+    /// Simulated failure instant (seconds from experiment start).
+    pub t: f64,
+    /// The device that dies.
+    pub device: usize,
+}
+
+/// A deterministic schedule of device failures for one run — the chaos
+/// harness's ground truth. Each device fails at most once (there is no
+/// resurrection), and failures are sorted by time so the kernel can seed
+/// them as events up front.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FailureSchedule {
+    /// The failures, ascending by time, one per device.
+    pub failures: Vec<DeviceFailure>,
+}
+
+impl FailureSchedule {
+    /// An explicit schedule from `(time, device)` pairs. Pairs are sorted
+    /// by time; a device listed twice keeps only its earliest death.
+    pub fn at(points: &[(f64, usize)]) -> FailureSchedule {
+        let mut pts: Vec<(f64, usize)> = points.to_vec();
+        pts.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut seen = std::collections::BTreeSet::new();
+        let failures = pts
+            .into_iter()
+            .filter(|&(_, d)| seen.insert(d))
+            .map(|(t, device)| DeviceFailure { t, device })
+            .collect();
+        FailureSchedule { failures }
+    }
+
+    /// A seed-deterministic schedule: `count` failures drawn over the
+    /// middle of the run (`[0.1, 0.9) · duration_s` — early enough that
+    /// recovery is exercised, late enough that the fleet has deployed),
+    /// each killing a distinct device from `targets` (typically
+    /// [`crate::cluster::Cluster::preemptible_devices`]). `count` clamps
+    /// to `targets.len()`; the same `(targets, duration_s, count, seed)`
+    /// always yields the same schedule.
+    pub fn seeded(
+        targets: &[usize],
+        duration_s: f64,
+        count: usize,
+        seed: u64,
+    ) -> FailureSchedule {
+        let mut rng = Rng::new(seed ^ 0xFA11);
+        let mut pool: Vec<usize> = targets.to_vec();
+        let mut points = Vec::new();
+        for _ in 0..count.min(pool.len()) {
+            let pick = rng.below(pool.len() as u64) as usize;
+            let device = pool.swap_remove(pick);
+            let t = duration_s * (0.1 + 0.8 * rng.f64());
+            points.push((t, device));
+        }
+        FailureSchedule::at(&points)
+    }
+
+    /// Number of scheduled failures.
+    pub fn len(&self) -> usize {
+        self.failures.len()
+    }
+
+    /// Does the schedule contain no failures?
+    pub fn is_empty(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
 
 impl LengthDist {
     /// Interactive-chat tenant: short prompts, short replies.
@@ -167,6 +243,39 @@ mod tests {
         let t = Trace::ramp(20.0, 60.0, 5);
         let rps = t.mean_rps(60.0);
         assert!((rps - 20.0).abs() < 4.0, "rps {rps}");
+    }
+
+    #[test]
+    fn failure_schedule_is_seed_deterministic_and_sorted() {
+        let a = FailureSchedule::seeded(&[0, 1, 2, 3], 60.0, 3, 91);
+        let b = FailureSchedule::seeded(&[0, 1, 2, 3], 60.0, 3, 91);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 3);
+        for w in a.failures.windows(2) {
+            assert!(w[1].t >= w[0].t, "unsorted schedule");
+            assert_ne!(w[1].device, w[0].device, "device died twice");
+        }
+        for f in &a.failures {
+            assert!((6.0..54.0).contains(&f.t), "failure at {} outside window", f.t);
+        }
+        let c = FailureSchedule::seeded(&[0, 1, 2, 3], 60.0, 3, 92);
+        assert_ne!(a, c, "different seeds must differ");
+    }
+
+    #[test]
+    fn failure_schedule_clamps_count_and_dedups_devices() {
+        let s = FailureSchedule::seeded(&[0, 1], 30.0, 5, 7);
+        assert_eq!(s.len(), 2, "count clamps to the target pool");
+        let explicit = FailureSchedule::at(&[(9.0, 1), (4.0, 0), (2.0, 1)]);
+        assert_eq!(
+            explicit.failures,
+            vec![
+                DeviceFailure { t: 2.0, device: 1 },
+                DeviceFailure { t: 4.0, device: 0 },
+            ],
+            "sorted by time, earliest death per device wins"
+        );
+        assert!(FailureSchedule::default().is_empty());
     }
 
     // ---- property tests: the forecaster's ground truth ---------------------

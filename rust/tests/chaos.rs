@@ -1,0 +1,360 @@
+//! Deterministic chaos harness: seeded device failures injected into the
+//! event kernel across the full scenario library, asserting the
+//! failure-domain conservation invariants end to end.
+//!
+//! * **Seed determinism** — the failure schedule is part of the seeded
+//!   initial conditions: two runs with the same trace seed and the same
+//!   schedule produce byte-identical metrics JSON *including* the audit
+//!   trail, for every scenario shape.
+//! * **Request conservation** — every trace arrival is either completed
+//!   exactly once or still parked in the router at the drain deadline
+//!   (`audit.unrouted_at_end`); failures shed and re-route requests but
+//!   never lose or duplicate one.
+//! * **Billing stops at the failure instant** — the cost ledger bills no
+//!   device-seconds for a dead device past its failure time.
+//! * **Tag hygiene** — a force-released instance leaves no `inst{id}/`
+//!   ledger bytes on surviving devices (observable as the survivors'
+//!   end-of-run memory fractions).
+//! * **Goldens unchanged** — an empty schedule adds no `DeviceFailed`
+//!   events and no `audit` key: byte-identical to a run that never heard
+//!   of failures.
+
+use std::collections::BTreeSet;
+
+use cocoserve::baselines;
+use cocoserve::cluster::{Cluster, DeviceSpec, GIB};
+use cocoserve::coordinator::{CostLedger, FleetConfig, RoutePolicy, RouterConfig};
+use cocoserve::model::cost::CostModel;
+use cocoserve::model::{ModelConfig, ModuleKind};
+use cocoserve::ops::ModuleOps;
+use cocoserve::placement::Placement;
+use cocoserve::sim::{FleetSetup, SimConfig, SimReport, Simulation};
+use cocoserve::workload::{FailureSchedule, Trace};
+
+/// Elastic 2-instance fleet on five devices; instance 0 lives on device 0,
+/// which no chaos schedule in this file ever kills — so at least one
+/// server always survives and every run drains fully.
+fn chaos_fleet(trace: &Trace, duration_s: f64, schedule: FailureSchedule) -> SimReport {
+    let cfg = SimConfig::paper_13b();
+    let cluster = Cluster::homogeneous(5, DeviceSpec::a100_40gb());
+    let policy = baselines::cocoserve(32);
+    let placements: Vec<_> = (0..2)
+        .map(|i| (Placement::single_device(cfg.model.n_layers, i), policy))
+        .collect();
+    let setup = FleetSetup {
+        router: RouterConfig {
+            policy: RoutePolicy::LeastOutstanding,
+            admission_limit: Some(64),
+            reroute_on_shed: true,
+        },
+        fleet: Some(FleetConfig::elastic(2, 5, policy)),
+        ..Default::default()
+    };
+    Simulation::with_fleet(cfg, cluster, placements, setup)
+        .with_failures(schedule)
+        .run(trace, duration_s)
+}
+
+/// Unique completed request ids across every monitor; panics on a
+/// duplicate (a request that completed twice breaks conservation).
+fn completed_ids(r: &SimReport) -> BTreeSet<u64> {
+    let mut seen = BTreeSet::new();
+    for m in &r.monitors {
+        for c in m.completions() {
+            assert!(
+                seen.insert(c.request_id),
+                "request {} completed more than once",
+                c.request_id
+            );
+        }
+    }
+    seen
+}
+
+/// `completed + parked-at-deadline == trace length`: every arrival is
+/// accounted for exactly once no matter what died mid-run.
+fn assert_conservation(r: &SimReport, trace: &Trace, label: &str) {
+    let ids = completed_ids(r);
+    assert_eq!(ids.len(), r.total_completed(), "{label}: monitor id sets disagree");
+    let unrouted = r
+        .audit
+        .as_ref()
+        .expect("chaos runs carry an audit block")
+        .unrouted_at_end;
+    assert_eq!(
+        r.total_completed() + unrouted,
+        trace.len(),
+        "{label}: {} completed + {} unrouted != {} arrivals",
+        r.total_completed(),
+        unrouted,
+        trace.len()
+    );
+}
+
+#[test]
+fn same_seed_chaos_runs_are_byte_identical_across_scenarios() {
+    for (name, trace) in Trace::scenario_sweep(14.0, 12.0, 63) {
+        // devices 1 and 3 die mid-run; device 0 (and instance 0) survive
+        let schedule = FailureSchedule::seeded(&[1, 3], 12.0, 2, 63);
+        assert_eq!(schedule.len(), 2);
+        let a = chaos_fleet(&trace, 12.0, schedule.clone());
+        let b = chaos_fleet(&trace, 12.0, schedule.clone());
+        let aj = a.to_json().to_string();
+        let bj = b.to_json().to_string();
+        assert_eq!(aj, bj, "chaos scenario `{name}` not replay-deterministic");
+        assert!(
+            aj.contains("\"audit\""),
+            "chaos scenario `{name}` must carry the audit trail"
+        );
+        let audit = a.audit.as_ref().expect("audit block");
+        let failures = audit
+            .log
+            .records()
+            .iter()
+            .filter(|rec| rec.kind.name() == "device_failed")
+            .count();
+        assert_eq!(failures, 2, "`{name}`: one audit record per scheduled death");
+        assert_conservation(&a, &trace, name);
+        assert!(a.total_completed() > 0, "chaos scenario `{name}` served nothing");
+    }
+}
+
+#[test]
+fn sharded_chaos_kernel_matches_sequential_byte_for_byte() {
+    let trace = Trace::burst(16.0, 12.0, 11);
+    let schedule = FailureSchedule::seeded(&[1, 3], 12.0, 2, 11);
+    let run = |shards: usize| {
+        let mut cfg = SimConfig::paper_13b();
+        cfg.shards = shards;
+        let cluster = Cluster::homogeneous(5, DeviceSpec::a100_40gb());
+        let policy = baselines::cocoserve(32);
+        let placements: Vec<_> = (0..2)
+            .map(|i| (Placement::single_device(cfg.model.n_layers, i), policy))
+            .collect();
+        let setup = FleetSetup {
+            router: RouterConfig {
+                policy: RoutePolicy::LeastOutstanding,
+                admission_limit: Some(64),
+                reroute_on_shed: true,
+            },
+            fleet: Some(FleetConfig::elastic(2, 5, policy)),
+            ..Default::default()
+        };
+        Simulation::with_fleet(cfg, cluster, placements, setup)
+            .with_failures(schedule.clone())
+            .run(&trace, 12.0)
+            .to_json()
+            .to_string()
+    };
+    assert_eq!(run(1), run(2), "DeviceFailed must be an exact barrier event");
+}
+
+#[test]
+fn empty_schedule_leaves_goldens_byte_identical() {
+    let trace = Trace::steady(12.0, 10.0, 41);
+    let run = |with_builder: bool| {
+        let cfg = SimConfig::paper_13b();
+        let cluster = Cluster::homogeneous(3, DeviceSpec::a100_40gb());
+        let placements: Vec<_> = (0..2)
+            .map(|i| {
+                (
+                    Placement::single_device(cfg.model.n_layers, i),
+                    baselines::vllm_like(16),
+                )
+            })
+            .collect();
+        let sim = Simulation::new(cfg, cluster, placements);
+        let sim = if with_builder {
+            sim.with_failures(FailureSchedule::default())
+        } else {
+            sim
+        };
+        sim.run(&trace, 10.0)
+    };
+    let plain = run(false);
+    let built = run(true);
+    assert!(plain.audit.is_none() && built.audit.is_none());
+    let pj = plain.to_json().to_string();
+    assert_eq!(pj, built.to_json().to_string(), "empty schedule must be a no-op");
+    assert!(!pj.contains("\"audit\""), "no failures → no audit key");
+}
+
+#[test]
+fn lost_instance_frees_survivor_tags_and_stops_billing() {
+    // Instance 1 lives on device 1 except for its upper 5 layers, which
+    // are placed on device 2. Device 2 is then hogged to the brim and
+    // device 0 serves instance 0 — so when device 1 dies at t=4 the
+    // emergency migration of instance 1's 35 sole-copy lower layers
+    // (~21 GB) cannot fit in device 0's ≤ 13.5 GB slack and device 2's
+    // half-layer, and the instance is force-released. The contracts
+    // under test:
+    //   * its requests re-route to instance 0 — conservation holds;
+    //   * every `inst1/` tag on the *surviving* device 2 is freed —
+    //     device 2 ends at exactly the hog bytes;
+    //   * the dead device bills no device-seconds past t=4.
+    let cfg = SimConfig::paper_13b();
+    let n_layers = cfg.model.n_layers;
+    let cm = CostModel::new(ModelConfig::llama2_13b());
+    let ops = ModuleOps::new(&cm, cfg.dtype_bytes, "probe");
+    let layer_bytes = ops.module_bytes(ModuleKind::DecoderLayer);
+
+    let mut cluster = Cluster::homogeneous(3, DeviceSpec::a100_40gb());
+    // fill device 2 down to half a layer of slack, leaving room for the
+    // 5 upper layers instance 1 will deploy there
+    let upper_bytes = 5.0 * layer_bytes;
+    let hog2 = cluster.device(2).free_bytes() - upper_bytes - 0.5 * layer_bytes;
+    cluster.device_mut(2).alloc("hog", hog2).unwrap();
+
+    let mut pl1 = Placement::single_device(n_layers, 1);
+    for l in (n_layers - 5)..n_layers {
+        pl1.migrate_layer(l, 2);
+    }
+    let placements = vec![
+        (Placement::single_device(n_layers, 0), baselines::vllm_like(16)),
+        (pl1, baselines::vllm_like(16)),
+    ];
+    let duration = 12.0;
+    let trace = Trace::steady(8.0, duration, 23);
+    let r = Simulation::new(cfg, cluster, placements)
+        .with_failures(FailureSchedule::at(&[(4.0, 1)]))
+        .run(&trace, duration);
+
+    assert_conservation(&r, &trace, "lost-instance");
+    assert_eq!(
+        r.audit.as_ref().unwrap().unrouted_at_end,
+        0,
+        "instance 0 survives, so everything must drain"
+    );
+    assert_eq!(r.total_completed(), trace.len());
+
+    let kinds: Vec<&str> = r
+        .audit
+        .as_ref()
+        .unwrap()
+        .log
+        .records()
+        .iter()
+        .map(|rec| rec.kind.name())
+        .collect();
+    assert!(kinds.contains(&"device_failed"));
+    assert!(kinds.contains(&"forced_release"), "audit: {kinds:?}");
+    assert!(kinds.contains(&"instance_lost"), "audit: {kinds:?}");
+
+    // survivor tag hygiene: device 2 ends at exactly the hog bytes —
+    // instance 1's 5 upper layers (and any partial emergency copies)
+    // were freed wholesale by the forced release
+    let spec_bytes = 40.0 * GIB;
+    let (_, _, mem2) = r.device_util[2];
+    assert!(
+        (mem2 - hog2 / spec_bytes).abs() < 1e-12,
+        "inst1 tags leaked on surviving device 2: frac {mem2} vs hog {}",
+        hog2 / spec_bytes
+    );
+    // the dead device reads as full (free_bytes == 0 marker)
+    let (_, _, mem1) = r.device_util[1];
+    assert_eq!(mem1, 1.0, "failed device must refuse all future work");
+
+    // billing: device 0 bills the whole run; devices 1 and 2 (instance
+    // 1's device set) bill only until the forced release at t=4
+    assert!(
+        r.device_seconds <= r.duration_s + 2.0 * 4.0 + 1e-6,
+        "lost instance billed past its failure: {} > {} + 8",
+        r.device_seconds,
+        r.duration_s
+    );
+    assert!(r.device_seconds >= r.duration_s - 1e-6);
+}
+
+#[test]
+fn cost_ledger_stops_billing_at_the_failure_instant() {
+    let mut ledger = CostLedger::new(2);
+    ledger.acquire(0);
+    ledger.acquire(1);
+    ledger.advance(10.0);
+    assert!((ledger.device_seconds() - 20.0).abs() < 1e-12);
+    assert_eq!(ledger.fail_device(1), 1, "one holder zeroed at failure");
+    ledger.advance(25.0);
+    assert!(
+        (ledger.device_seconds() - 35.0).abs() < 1e-12,
+        "only the survivor may bill past the failure: {}",
+        ledger.device_seconds()
+    );
+    // idempotent: a dead device has no holders left to zero
+    assert_eq!(ledger.fail_device(1), 0);
+}
+
+#[test]
+fn heterogeneous_spot_fleet_survives_seeded_preemptions() {
+    // Mixed generations with spot capacity: the preemptible devices are
+    // exactly the chaos targets. Seed-deterministic, byte-replayable,
+    // and conservation holds on the survivors.
+    let cfg = SimConfig::paper_13b();
+    let cluster = Cluster::mixed(vec![
+        DeviceSpec::a100_40gb(),
+        DeviceSpec::h100_80gb(),
+        DeviceSpec::a100_40gb().spot(),
+        DeviceSpec::v100_32gb().spot(),
+    ]);
+    let targets = cluster.preemptible_devices();
+    assert_eq!(targets, vec![2, 3]);
+    let duration = 12.0;
+    let schedule = FailureSchedule::seeded(&targets, duration, 2, 7);
+    let policy = baselines::cocoserve(32);
+    let placements: Vec<_> = (0..2)
+        .map(|i| (Placement::single_device(cfg.model.n_layers, i), policy))
+        .collect();
+    let setup = FleetSetup {
+        router: RouterConfig {
+            policy: RoutePolicy::KvHeadroom,
+            admission_limit: Some(64),
+            reroute_on_shed: true,
+        },
+        fleet: Some(FleetConfig::elastic(2, 4, policy)),
+        ..Default::default()
+    };
+    let trace = Trace::burst(14.0, duration, 19);
+    let run = || {
+        Simulation::with_fleet(
+            cfg.clone(),
+            cluster.clone(),
+            placements.clone(),
+            setup,
+        )
+        .with_failures(schedule.clone())
+        .run(&trace, duration)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(
+        a.to_json().to_string(),
+        b.to_json().to_string(),
+        "mixed-fleet chaos must replay byte-identically"
+    );
+    assert_conservation(&a, &trace, "heterogeneous-spot");
+    assert!(a.total_completed() > 0);
+}
+
+#[test]
+fn chaos_grid_holds_conservation_at_every_failure_time() {
+    // Sweep the failure instant across the run — including times that can
+    // land while the victim instance is `Draining` (elastic scale-in
+    // after the early burst) — and assert the conservation invariants at
+    // every grid point. This is the regression net for the
+    // preempted-while-draining path: whatever lifecycle state the death
+    // interrupts, no request is lost or double-completed and the
+    // schedule stays byte-replayable.
+    let duration = 14.0;
+    let trace = Trace::burst(16.0, duration, 83);
+    for k in 0..6 {
+        let t = 3.0 + 2.0 * k as f64; // 3, 5, 7, 9, 11, 13
+        let schedule = FailureSchedule::at(&[(t, 1)]);
+        let a = chaos_fleet(&trace, duration, schedule.clone());
+        let b = chaos_fleet(&trace, duration, schedule);
+        assert_eq!(
+            a.to_json().to_string(),
+            b.to_json().to_string(),
+            "failure at t={t} not replay-deterministic"
+        );
+        assert_conservation(&a, &trace, &format!("grid t={t}"));
+    }
+}

@@ -17,9 +17,12 @@ use std::collections::BTreeSet;
 use cocoserve::baselines;
 use cocoserve::cluster::{Cluster, DeviceSpec, GIB};
 use cocoserve::coordinator::{FleetConfig, FleetPhase, RoutePolicy, RouterConfig};
+use cocoserve::model::cost::CostModel;
+use cocoserve::model::{ModelConfig, ModuleKind};
+use cocoserve::ops::ModuleOps;
 use cocoserve::placement::Placement;
 use cocoserve::sim::{FleetSetup, SimConfig, SimPolicy, SimReport, Simulation};
-use cocoserve::workload::{Request, Trace};
+use cocoserve::workload::{FailureSchedule, Request, Trace};
 
 fn run_fleet(
     n_seed: usize,
@@ -225,6 +228,228 @@ fn a_single_request_trace_completes() {
     let r = run_fleet(2, 2, baselines::vllm_like(16), FleetSetup::default(), &trace, 5.0);
     assert_eq!(r.total_completed(), 1, "the lone arrival must be delivered and served");
     assert_eq!(r.routes, 1);
+}
+
+/// `n` arrivals spread over the first `window_s` seconds, then silence —
+/// the shape that makes an elastic fleet scale in during the tail.
+fn burst_then_silence(n: usize, window_s: f64, output_tokens: usize) -> Trace {
+    Trace {
+        requests: (0..n)
+            .map(|i| Request {
+                id: i as u64,
+                arrival_s: window_s * (i as f64 + 0.5) / n as f64,
+                prompt_tokens: 64,
+                output_tokens,
+            })
+            .collect(),
+    }
+}
+
+#[test]
+fn preemption_mid_drain_sheds_cleanly_and_stops_billing() {
+    // Probe/strike: run once without failures to learn exactly when the
+    // elastic fleet drains an instance, then rerun with the device under
+    // that instance preempted strictly inside its drain window. The
+    // event prefix before the death is identical across the two runs, so
+    // the victim is guaranteed to be `Draining` at the failure instant.
+    // The regression contract: a drainer that dies before its clean
+    // Release still flushes its live work back through the router, never
+    // reaches the Release protocol, and bills nothing past the death.
+    let policy = baselines::vllm_like(16);
+    let trace = burst_then_silence(24, 4.0, 48);
+    let duration = 40.0;
+    let make = || {
+        let cfg = SimConfig::paper_13b();
+        let cluster = Cluster::mixed(vec![
+            DeviceSpec::a100_40gb(),
+            DeviceSpec::a100_40gb().spot(),
+        ]);
+        let placements: Vec<_> = (0..2)
+            .map(|i| (Placement::single_device(cfg.model.n_layers, i), policy))
+            .collect();
+        let setup = FleetSetup {
+            router: RouterConfig {
+                policy: RoutePolicy::LeastOutstanding,
+                admission_limit: None,
+                reroute_on_shed: true,
+            },
+            fleet: Some(FleetConfig::elastic(1, 2, policy)),
+            ..Default::default()
+        };
+        Simulation::with_fleet(cfg, cluster, placements, setup)
+    };
+
+    // probe: where is the drain window?
+    let probe = make().run(&trace, duration);
+    let drain = probe
+        .fleet_events
+        .iter()
+        .find(|e| e.phase == FleetPhase::Drain)
+        .expect("the silent tail must drain one instance")
+        .clone();
+    let victim = drain.instance;
+    let release_t = probe
+        .fleet_events
+        .iter()
+        .find(|e| e.instance == victim && e.phase == FleetPhase::Release)
+        .expect("the drained instance must release cleanly in the probe run")
+        .t;
+    let t_fail = drain.t + 0.5;
+    assert!(release_t > t_fail, "strike must land inside the drain window");
+    // does the victim still hold live work at the strike instant?
+    let in_flight = probe.monitors[victim]
+        .completions()
+        .iter()
+        .filter(|c| c.finish_s > t_fail)
+        .count();
+
+    // strike: seed instances sit on their own device ids, so device
+    // `victim` is the one under the draining instance
+    let schedule = FailureSchedule::at(&[(t_fail, victim)]);
+    let r = make().with_failures(schedule.clone()).run(&trace, duration);
+    let again = make().with_failures(schedule).run(&trace, duration);
+    assert_eq!(
+        r.to_json().to_string(),
+        again.to_json().to_string(),
+        "mid-drain preemption must replay byte-identically"
+    );
+
+    // conservation: the survivor absorbs everything the drainer held
+    let ids = completed_ids(&r);
+    assert_eq!(ids.len(), trace.len(), "no request may be lost mid-drain");
+    assert_eq!(r.total_completed(), trace.len());
+    let audit = r.audit.as_ref().expect("failure runs carry an audit block");
+    assert_eq!(audit.unrouted_at_end, 0);
+    let kinds: Vec<&str> =
+        audit.log.records().iter().map(|rec| rec.kind.name()).collect();
+    assert!(kinds.contains(&"device_failed"), "audit: {kinds:?}");
+    // 40 sole-copy layers cannot fit the survivor's ≤ 13.5 GB of slack,
+    // so the dying drainer is deterministically force-released
+    assert!(kinds.contains(&"forced_release"), "audit: {kinds:?}");
+    assert!(kinds.contains(&"instance_lost"), "audit: {kinds:?}");
+    if in_flight > 0 {
+        assert!(r.reroutes > 0, "the drainer's live work must re-route");
+        assert!(kinds.contains(&"requests_shed"), "audit: {kinds:?}");
+    }
+    // the victim never reaches the clean Release protocol…
+    assert!(
+        !r.fleet_events
+            .iter()
+            .any(|e| e.instance == victim && e.phase == FleetPhase::Release),
+        "a dead drainer must not also release cleanly"
+    );
+    // …and its device bills nothing past the preemption instant
+    assert!(
+        r.device_seconds <= r.duration_s + t_fail + 1e-6,
+        "dead device billed past preemption: {} vs {} + {t_fail}",
+        r.device_seconds,
+        r.duration_s
+    );
+}
+
+#[test]
+fn dead_drainer_releases_every_tag_on_surviving_devices() {
+    // Probe/strike again, but each instance keeps its top 5 layers on a
+    // brim-full side device (inst0 → d3, inst1 → d2), so the drainer
+    // holds ledger tags on a device that survives the strike. After the
+    // forced release the side device must hold exactly the hog bytes
+    // again — proof that no `inst{id}/` allocation leaked. Emergency
+    // migration is deliberately impossible (35 sole-copy layers ≈ 21 GB
+    // against ≤ 13.5 GB of slack anywhere), so the outcome is
+    // deterministically Lost whichever instance drains.
+    let cfg = SimConfig::paper_13b();
+    let n_layers = cfg.model.n_layers;
+    let cm = CostModel::new(ModelConfig::llama2_13b());
+    let probe_ops = ModuleOps::new(&cm, cfg.dtype_bytes, "probe");
+    let layer_bytes = probe_ops.module_bytes(ModuleKind::DecoderLayer);
+    let spec_bytes = DeviceSpec::a100_40gb().mem_bytes;
+    // side devices keep 5 layers + half a layer of slack
+    let hog = spec_bytes - 5.5 * layer_bytes;
+    let upper_of = |v: usize| 3 - v;
+
+    let policy = baselines::vllm_like(16);
+    let trace = burst_then_silence(24, 4.0, 48);
+    let duration = 40.0;
+    let make = || {
+        let mut cluster = Cluster::mixed(vec![
+            DeviceSpec::a100_40gb(),
+            DeviceSpec::a100_40gb().spot(),
+            DeviceSpec::a100_40gb(),
+            DeviceSpec::a100_40gb(),
+        ]);
+        for d in [2, 3] {
+            cluster.device_mut(d).alloc("hog", hog).unwrap();
+        }
+        let placements: Vec<_> = (0..2)
+            .map(|i| {
+                let mut pl = Placement::single_device(n_layers, i);
+                for l in (n_layers - 5)..n_layers {
+                    pl.migrate_layer(l, upper_of(i));
+                }
+                (pl, policy)
+            })
+            .collect();
+        let setup = FleetSetup {
+            router: RouterConfig {
+                policy: RoutePolicy::LeastOutstanding,
+                admission_limit: None,
+                reroute_on_shed: true,
+            },
+            fleet: Some(FleetConfig::elastic(1, 4, policy)),
+            ..Default::default()
+        };
+        Simulation::with_fleet(SimConfig::paper_13b(), cluster, placements, setup)
+    };
+
+    let probe = make().run(&trace, duration);
+    let drain = probe
+        .fleet_events
+        .iter()
+        .find(|e| e.phase == FleetPhase::Drain)
+        .expect("the silent tail must drain one instance")
+        .clone();
+    let victim = drain.instance;
+    let t_fail = drain.t + 0.5;
+    let release_t = probe
+        .fleet_events
+        .iter()
+        .find(|e| e.instance == victim && e.phase == FleetPhase::Release)
+        .expect("the drained instance must release cleanly in the probe run")
+        .t;
+    assert!(release_t > t_fail, "strike must land inside the drain window");
+
+    let r = make()
+        .with_failures(FailureSchedule::at(&[(t_fail, victim)]))
+        .run(&trace, duration);
+
+    let ids = completed_ids(&r);
+    assert_eq!(ids.len(), trace.len(), "no request may be lost mid-drain");
+    let audit = r.audit.as_ref().expect("failure runs carry an audit block");
+    assert_eq!(audit.unrouted_at_end, 0);
+    let kinds: Vec<&str> =
+        audit.log.records().iter().map(|rec| rec.kind.name()).collect();
+    assert!(kinds.contains(&"forced_release"), "audit: {kinds:?}");
+    assert!(kinds.contains(&"instance_lost"), "audit: {kinds:?}");
+
+    // tag hygiene on the surviving side device: exactly the hog remains
+    let (_, _, side_frac) = r.device_util[upper_of(victim)];
+    assert!(
+        (side_frac - hog / spec_bytes).abs() < 1e-12,
+        "inst{victim}/ tags leaked on surviving device {}: frac {side_frac} vs hog {}",
+        upper_of(victim),
+        hog / spec_bytes
+    );
+    // the dead primary reads as full (failed-device marker)
+    let (_, _, dead_frac) = r.device_util[victim];
+    assert_eq!(dead_frac, 1.0);
+    // both of the victim's devices stop billing at the death; the
+    // survivor's two keep billing to the end of the run
+    assert!(
+        r.device_seconds <= 2.0 * r.duration_s + 2.0 * t_fail + 1e-6,
+        "victim devices billed past the death: {} vs 2·{} + 2·{t_fail}",
+        r.device_seconds,
+        r.duration_s
+    );
 }
 
 #[test]

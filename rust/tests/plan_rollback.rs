@@ -153,6 +153,77 @@ fn mixed_op_rollback_restores_migrations_and_evictions() {
 }
 
 #[test]
+fn device_failure_mid_plan_rolls_back_survivors_byte_identically() {
+    // Two replicas land on device 1, then the device dies under the
+    // in-flight plan. The next op targeting it must fail with the
+    // device-failed allocation error, and rollback must restore the
+    // placement and every *surviving* ledger byte-identically — while
+    // the dead device stays empty: its copies were lost with it, and
+    // undo entries pointing at it are refused rather than re-acquired.
+    let (cm, mut cl, mut pl) = setup();
+    let ops = ModuleOps::new(&cm, 2, "inst0");
+    let before = snapshot(&cl, &pl);
+
+    let plan = ScalePlan::replicate_batch(&[0, 1, 2, 3, 4], 1);
+    let mut exec = PlanExecution::new();
+    for op in plan.ops.iter().take(2) {
+        exec.apply_next(&ops, &mut cl, &mut pl, op).unwrap();
+    }
+    let lost = cl.device_mut(1).fail();
+    assert!(lost > 0.0, "the two landed replicas die with the device");
+    // the in-flight plan's next op targets the corpse
+    let err = exec.apply_next(&ops, &mut cl, &mut pl, &plan.ops[2]);
+    assert!(err.is_err(), "an op targeting a dead device must fail");
+    assert_eq!(exec.applied(), 2);
+
+    exec.rollback(&mut cl, &mut pl);
+    // device 1 was empty before the plan and is empty (dead) after, so
+    // the full snapshot — survivors byte-for-byte + placement — matches
+    assert_eq!(before, snapshot(&cl, &pl), "post-failure rollback must restore");
+    assert!(
+        cl.device(1).allocations().is_empty(),
+        "rollback must never re-acquire memory on a dead device"
+    );
+    assert_eq!(cl.device(1).free_bytes(), 0.0, "dead device refuses future work");
+}
+
+#[test]
+fn rollback_after_failure_restores_moved_primaries_without_reacquiring() {
+    // A migration moves layer 9's primary onto device 1, a replica lands
+    // on device 2, then device 1 dies and the plan is aborted — the
+    // simulator's recovery path (abort first, repair placement second).
+    // Rollback must point the primary back at device 0 (the source copy
+    // was never freed: copy-then-free defers frees to commit), drop the
+    // device-2 replica byte-identically, and leave the corpse empty.
+    let (cm, mut cl, mut pl) = setup();
+    let ops = ModuleOps::new(&cm, 2, "inst0");
+    let before = snapshot(&cl, &pl);
+
+    let plan = ScalePlan {
+        ops: vec![
+            ModuleOp::MigrateLayer { layer: 9, dst: 1 },
+            ModuleOp::Replicate { layer: 3, dst: 2 },
+        ],
+    };
+    let mut exec = PlanExecution::new();
+    for op in &plan.ops {
+        exec.apply_next(&ops, &mut cl, &mut pl, op).unwrap();
+    }
+    assert_eq!(pl.primary_device(9), 1);
+    let lost = cl.device_mut(1).fail();
+    assert!(lost > 0.0);
+
+    exec.rollback(&mut cl, &mut pl);
+    assert_eq!(pl.primary_device(9), 0, "primary must fall back to the live source");
+    assert_eq!(pl.degree(3), 1, "the replica must be undone");
+    assert_eq!(before, snapshot(&cl, &pl), "survivor ledgers restore byte-identically");
+    assert!(
+        cl.device(1).allocations().is_empty(),
+        "undo entries pointing at the corpse are refused, not re-acquired"
+    );
+}
+
+#[test]
 fn prop_failed_or_aborted_plans_leave_state_byte_identical() {
     // Random fills + random plans. Whatever happens — success, validation
     // rejection, or mid-plan failure — the invariants hold:
