@@ -110,6 +110,7 @@ fn setup(mode: Mode) -> FleetSetup {
             policy: RoutePolicy::KvHeadroom,
             admission_limit: None,
             reroute_on_shed: true,
+            ..RouterConfig::default()
         },
         fleet: Some(fleet),
         controller: cocoserve::autoscale::ControllerConfig { t_up: 2.0, ..Default::default() },

@@ -91,6 +91,7 @@ fn run(trace: &Trace, shape: &BenchShape, schedule: &FailureSchedule) -> SimRepo
             policy: RoutePolicy::LeastOutstanding,
             admission_limit: Some(64),
             reroute_on_shed: true,
+            ..RouterConfig::default()
         },
         fleet: Some(FleetConfig::elastic(2, 4, policy)),
         ..Default::default()

@@ -72,6 +72,7 @@ fn fleet_setup(policy: SimPolicy) -> FleetSetup {
             policy: RoutePolicy::KvHeadroom,
             admission_limit: None,
             reroute_on_shed: true,
+            ..RouterConfig::default()
         },
         fleet: Some(fleet),
         // Cost-conscious posture: vacancy harvesting off (t_up unreachably

@@ -75,6 +75,15 @@ impl FleetConfig {
     }
 }
 
+/// Fraction of [`FleetConfig::scale_out_queue`] at which the
+/// latency-sensitive class's queue alone forces a reactive scale-out
+/// under a class-aware policy: premium work waiting half as deep as the
+/// mixed-traffic line is already an SLO risk, because it cannot absorb
+/// queueing delay the way best-effort work can. Only
+/// [`FleetController::pressure_classed`] reads this — classless kernels
+/// never take that path.
+pub const PREMIUM_PRESSURE_FRACTION: f64 = 0.5;
+
 /// What the fleet controller wants to do this tick (before arbitration).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FleetPressure {
@@ -157,6 +166,26 @@ impl FleetController {
             self.idle_ticks = 0;
         }
         FleetPressure::Hold
+    }
+
+    /// Class-aware stage 1: judge the latency-sensitive queue *first* —
+    /// premium pressure past `scale_out_queue ×`
+    /// [`PREMIUM_PRESSURE_FRACTION`] scales out immediately — then fall
+    /// through to the ordinary [`FleetController::pressure`] walk for the
+    /// mixed signal. The cooldown is decremented exactly once per tick
+    /// either way (a premium fire happens only at cooldown zero; every
+    /// other path delegates). Classless kernels never call this.
+    pub fn pressure_classed(&mut self, inputs: &FleetInputs) -> FleetPressure {
+        if self.cooldown == 0
+            && inputs.premium_mean_outstanding()
+                > self.cfg.scale_out_queue * PREMIUM_PRESSURE_FRACTION
+            && inputs.live < self.cfg.max_instances
+        {
+            self.idle_ticks = 0;
+            self.arm();
+            return FleetPressure::ScaleOut;
+        }
+        self.pressure(inputs)
     }
 
     /// Is the post-action cooldown still running? Predictive proposals
@@ -360,7 +389,7 @@ mod tests {
             live,
             accepting: live,
             outstanding: (mean * live as f64).round() as usize,
-            parked: 0,
+            ..Default::default()
         }
     }
 
@@ -408,6 +437,35 @@ mod tests {
         // …but 40 more parked at the router pushes the mean to 25
         w.parked = 40;
         assert_eq!(c.pressure(&w), FleetPressure::ScaleOut);
+    }
+
+    #[test]
+    fn premium_pressure_scales_out_at_half_the_mixed_line() {
+        let mut c = ctl(); // scale_out_queue = 24
+        // mixed mean 5 is the healthy band; premium mean 13 > 24 × 0.5
+        let mut w = window(5.0, 2);
+        w.premium_outstanding = 26;
+        assert_eq!(c.pressure_classed(&w), FleetPressure::ScaleOut);
+        assert!(c.cooling_down());
+        // cooling: exactly one decrement per tick, premium fire suppressed
+        assert_eq!(c.pressure_classed(&w), FleetPressure::Hold);
+        assert!(!c.cooling_down());
+        // premium parked entries count toward the premium signal
+        let mut w2 = window(5.0, 2);
+        w2.parked = 26;
+        w2.premium_parked = 26;
+        assert_eq!(c.pressure_classed(&w2), FleetPressure::ScaleOut);
+        // without premium fields the classed walk matches the classless one
+        let mut a = ctl();
+        let mut b = ctl();
+        for &(m, live) in &[(5.0, 2), (30.0, 3), (0.5, 4), (0.5, 4), (0.5, 4)] {
+            assert_eq!(a.pressure_classed(&window(m, live)), b.pressure(&window(m, live)));
+        }
+        // max_instances bounds the premium fire like any scale-out
+        let mut c2 = ctl();
+        let mut w3 = window(5.0, 6);
+        w3.premium_outstanding = 99;
+        assert_eq!(c2.pressure_classed(&w3), FleetPressure::Hold);
     }
 
     #[test]

@@ -109,7 +109,7 @@ pub fn serve_trace(engine: &TinyEngine, trace: &Trace, cfg: ServeConfig) -> Resu
     let mut sched = Scheduler::new(cfg.scheduler);
     let mut monitor = Monitor::new(cfg.slo_latency_s);
     let mut seqs: BTreeMap<u64, SeqState> = BTreeMap::new();
-    let mut meta: BTreeMap<u64, (f64, usize, usize)> = BTreeMap::new();
+    let mut meta: BTreeMap<u64, (f64, usize, usize, crate::workload::SloClass)> = BTreeMap::new();
     let mut next_arrival = 0usize;
     let mut generated = 0usize;
     let start = Instant::now();
@@ -130,13 +130,14 @@ pub fn serve_trace(engine: &TinyEngine, trace: &Trace, cfg: ServeConfig) -> Resu
                 engine.cfg.vocab_size,
             );
             let output = r.output_tokens.min(max_new);
-            meta.insert(r.id, (r.arrival_s, prompt.len(), output));
+            meta.insert(r.id, (r.arrival_s, prompt.len(), output, r.class));
             seqs.insert(r.id, engine.new_sequence(r.id, &prompt));
             sched.submit(crate::workload::Request {
                 id: r.id,
                 arrival_s: r.arrival_s,
                 prompt_tokens: prompt.len(),
                 output_tokens: output,
+                class: r.class,
             });
             next_arrival += 1;
         }
@@ -194,12 +195,12 @@ pub fn serve_trace(engine: &TinyEngine, trace: &Trace, cfg: ServeConfig) -> Resu
             .keys()
             .copied()
             .filter(|id| {
-                let (_, _, out) = meta[id];
+                let (_, _, out, _) = meta[id];
                 seqs[id].tokens.len() >= meta[id].1 + out
             })
             .collect();
         for id in done {
-            let (arrival, prompt, out) = meta[&id];
+            let (arrival, prompt, out, class) = meta[&id];
             seqs.remove(&id);
             monitor.record(Completion {
                 request_id: id,
@@ -207,6 +208,7 @@ pub fn serve_trace(engine: &TinyEngine, trace: &Trace, cfg: ServeConfig) -> Resu
                 finish_s: now,
                 prompt_tokens: prompt,
                 output_tokens: out,
+                class,
             });
         }
     }

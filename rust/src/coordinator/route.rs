@@ -31,7 +31,7 @@
 
 use std::collections::VecDeque;
 
-use crate::workload::Request;
+use crate::workload::{Request, SloClass};
 
 /// How the coordinator picks a serving instance for each request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -47,6 +47,35 @@ pub enum RoutePolicy {
     /// KV-cache headroom — so long decodes land where their cache can
     /// grow; ties go to the lowest id.
     KvHeadroom,
+    /// Class-aware strict priority: instance selection is
+    /// least-outstanding, but the parked queue always serves
+    /// latency-sensitive entries before any best-effort entry, and
+    /// best-effort admission is additionally capped by
+    /// [`RouterConfig::be_admission_limit`]. At equal arrival times a
+    /// premium request can never queue behind a best-effort one
+    /// (no-inversion — asserted by the `slo_props` property harness).
+    StrictPriority,
+    /// Class-aware weighted fair queuing: instance selection is
+    /// least-outstanding; the parked queue is served by deficit-style
+    /// virtual time — each dispatch of class `c` advances `c`'s virtual
+    /// service by `1/weight(c)`, and the next dispatch goes to the
+    /// backlogged class with the least virtual service (ties to the
+    /// premium class). Long-run service shares of continuously
+    /// backlogged classes converge to the configured
+    /// [`RouterConfig::wfq_premium_weight`] :
+    /// [`RouterConfig::wfq_be_weight`] ratio.
+    WeightedFair,
+}
+
+impl RoutePolicy {
+    /// Does this policy consult [`SloClass`] at all? Classless policies
+    /// (`RoundRobin` / `LeastOutstanding` / `KvHeadroom`) never read the
+    /// class, never reorder the parked queue, and never apply the
+    /// per-class admission cap — the byte-identity guarantee for every
+    /// pre-existing golden rests on this predicate.
+    pub fn class_aware(self) -> bool {
+        matches!(self, RoutePolicy::StrictPriority | RoutePolicy::WeightedFair)
+    }
 }
 
 /// Routing configuration for a simulation run.
@@ -61,6 +90,19 @@ pub struct RouterConfig {
     /// Hand requests shed by an instance's OOM handling back to the
     /// router for re-routing instead of requeueing them locally.
     pub reroute_on_shed: bool,
+    /// Per-tenant admission cap for best-effort requests, applied *in
+    /// addition to* [`RouterConfig::admission_limit`] and only under a
+    /// class-aware policy: a best-effort request is admitted only while
+    /// the target instance holds fewer than this many outstanding
+    /// requests, reserving the remaining headroom for the premium class.
+    /// `None` (the default) leaves best-effort admission ungated.
+    pub be_admission_limit: Option<usize>,
+    /// Weighted-fair-queuing weight of the latency-sensitive class
+    /// (consulted only under [`RoutePolicy::WeightedFair`]). Default 3.
+    pub wfq_premium_weight: u32,
+    /// Weighted-fair-queuing weight of the best-effort class (consulted
+    /// only under [`RoutePolicy::WeightedFair`]). Default 1.
+    pub wfq_be_weight: u32,
 }
 
 impl Default for RouterConfig {
@@ -69,6 +111,9 @@ impl Default for RouterConfig {
             policy: RoutePolicy::LeastOutstanding,
             admission_limit: None,
             reroute_on_shed: false,
+            be_admission_limit: None,
+            wfq_premium_weight: 3,
+            wfq_be_weight: 1,
         }
     }
 }
@@ -106,7 +151,8 @@ pub struct Router {
     /// Routing configuration this router was built with.
     pub cfg: RouterConfig,
     /// Requests no instance could admit, in arrival order. Retried after
-    /// every kernel event.
+    /// every kernel event (class-aware policies reorder *service*, never
+    /// the stored arrival order).
     pub pending: VecDeque<Parked>,
     /// Round-robin cursor (next instance id to try first).
     cursor: usize,
@@ -114,35 +160,80 @@ pub struct Router {
     pub routes: u64,
     /// Re-routing decisions for shed requests.
     pub reroutes: u64,
+    /// Routing decisions (first-time + re-route) per class, indexed by
+    /// [`Router::class_idx`]. Maintained unconditionally — cheap — but
+    /// surfaced in the metrics JSON only when a class-aware policy is
+    /// configured, so classless goldens never see it.
+    pub class_routes: [u64; 2],
+    /// Weighted-fair-queuing virtual service per class, indexed by
+    /// [`Router::class_idx`]: each parked dispatch of class `c` adds
+    /// `1/weight(c)`. Only [`RoutePolicy::WeightedFair`] reads or
+    /// advances it.
+    wfq_served: [f64; 2],
 }
 
 impl Router {
     /// Build a router with the given configuration.
     pub fn new(cfg: RouterConfig) -> Router {
-        Router { cfg, pending: VecDeque::new(), cursor: 0, routes: 0, reroutes: 0 }
+        Router {
+            cfg,
+            pending: VecDeque::new(),
+            cursor: 0,
+            routes: 0,
+            reroutes: 0,
+            class_routes: [0; 2],
+            wfq_served: [0.0; 2],
+        }
+    }
+
+    /// Stable per-class array index: 0 = latency-sensitive, 1 =
+    /// best-effort.
+    pub fn class_idx(class: SloClass) -> usize {
+        match class {
+            SloClass::LatencySensitive => 0,
+            SloClass::BestEffort => 1,
+        }
     }
 
     /// Park a request that no instance could admit; the kernel retries the
-    /// queue head after every event.
+    /// queue after every event (head-first classless, policy-ordered under
+    /// a class-aware policy — see [`Router::next_parked`]).
     pub fn park(&mut self, req: Request, penalty: f64, reroute: bool) {
         self.pending.push_back(Parked { req, penalty, reroute });
     }
 
-    /// Can this candidate admit one more request under the configured
-    /// backpressure limit?
-    fn admits(&self, c: &RouteCandidate) -> bool {
-        c.accepting
-            && match self.cfg.admission_limit {
-                Some(limit) => c.outstanding < limit,
-                None => true,
+    /// Can this candidate admit one more request of `class` under the
+    /// configured backpressure limits? The per-class best-effort cap
+    /// applies only under a class-aware policy, so classless
+    /// configurations never consult the request's class.
+    fn admits(&self, c: &RouteCandidate, class: SloClass) -> bool {
+        if !c.accepting {
+            return false;
+        }
+        if let Some(limit) = self.cfg.admission_limit {
+            if c.outstanding >= limit {
+                return false;
             }
+        }
+        if self.cfg.policy.class_aware() && class == SloClass::BestEffort {
+            if let Some(limit) = self.cfg.be_admission_limit {
+                if c.outstanding >= limit {
+                    return false;
+                }
+            }
+        }
+        true
     }
 
-    /// Pick an instance for one request, or `None` when every instance is
-    /// saturated (the caller parks the request in [`Router::pending`]).
-    /// Deterministic: candidates scan in ascending id order; every policy
-    /// breaks ties toward the lower id (round-robin toward the cursor).
-    pub fn pick(&mut self, candidates: &[RouteCandidate]) -> Option<usize> {
+    /// Pick an instance for one request of `class`, or `None` when every
+    /// instance is saturated (the caller parks the request in
+    /// [`Router::pending`]). Deterministic: candidates scan in ascending
+    /// id order; every policy breaks ties toward the lower id
+    /// (round-robin toward the cursor). The class-aware policies select
+    /// instances exactly like [`RoutePolicy::LeastOutstanding`] — their
+    /// class-awareness lives in [`Router::admits`] and
+    /// [`Router::next_parked`], not the instance scan.
+    pub fn pick(&mut self, candidates: &[RouteCandidate], class: SloClass) -> Option<usize> {
         let n = candidates.len();
         if n == 0 {
             return None;
@@ -151,23 +242,25 @@ impl Router {
             RoutePolicy::RoundRobin => {
                 for k in 0..n {
                     let i = (self.cursor + k) % n;
-                    if self.admits(&candidates[i]) {
+                    if self.admits(&candidates[i], class) {
                         self.cursor = (i + 1) % n;
                         return Some(i);
                     }
                 }
                 None
             }
-            RoutePolicy::LeastOutstanding => candidates
+            RoutePolicy::LeastOutstanding
+            | RoutePolicy::StrictPriority
+            | RoutePolicy::WeightedFair => candidates
                 .iter()
                 .enumerate()
-                .filter(|(_, c)| self.admits(c))
+                .filter(|(_, c)| self.admits(c, class))
                 .min_by_key(|&(i, c)| (c.outstanding, i))
                 .map(|(i, _)| i),
             RoutePolicy::KvHeadroom => candidates
                 .iter()
                 .enumerate()
-                .filter(|(_, c)| self.admits(c))
+                .filter(|(_, c)| self.admits(c, class))
                 // max free bytes; total_cmp is a total order so ties fall
                 // to the lower id via min_by's first-wins semantics
                 .min_by(|(ia, a), (ib, b)| {
@@ -176,11 +269,87 @@ impl Router {
                 .map(|(i, _)| i),
         }
     }
+
+    /// Index into [`Router::pending`] of the entry the policy serves
+    /// next, or `None` when the queue is empty.
+    ///
+    /// * Classless policies: always the head (index 0) — arrival-order
+    ///   FIFO, bit-identical to the pre-class drain loop.
+    /// * [`RoutePolicy::StrictPriority`]: the first latency-sensitive
+    ///   entry if any exists, else the head.
+    /// * [`RoutePolicy::WeightedFair`]: the first entry of the backlogged
+    ///   class with the least virtual service (`served/weight` deficit;
+    ///   ties to the premium class). Within a class, arrival order.
+    pub fn next_parked(&self) -> Option<usize> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        match self.cfg.policy {
+            RoutePolicy::RoundRobin
+            | RoutePolicy::LeastOutstanding
+            | RoutePolicy::KvHeadroom => Some(0),
+            RoutePolicy::StrictPriority => Some(
+                self.pending
+                    .iter()
+                    .position(|p| p.req.class == SloClass::LatencySensitive)
+                    .unwrap_or(0),
+            ),
+            RoutePolicy::WeightedFair => {
+                let first_of = |class: SloClass| {
+                    self.pending.iter().position(|p| p.req.class == class)
+                };
+                let premium = first_of(SloClass::LatencySensitive);
+                let be = first_of(SloClass::BestEffort);
+                match (premium, be) {
+                    (Some(p), Some(b)) => {
+                        // least virtual service first; the tie (exact
+                        // float equality, e.g. both at 0 on an empty
+                        // ledger) goes to the premium class
+                        let idx_p = Self::class_idx(SloClass::LatencySensitive);
+                        let idx_b = Self::class_idx(SloClass::BestEffort);
+                        if self.wfq_served[idx_p] <= self.wfq_served[idx_b] {
+                            Some(p)
+                        } else {
+                            Some(b)
+                        }
+                    }
+                    (Some(p), None) => Some(p),
+                    (None, Some(b)) => Some(b),
+                    (None, None) => None,
+                }
+            }
+        }
+    }
+
+    /// Remove and return the parked entry at `idx` (chosen by
+    /// [`Router::next_parked`]), advancing the weighted-fair virtual
+    /// service of its class when the WFQ policy is active.
+    pub fn take_parked(&mut self, idx: usize) -> Parked {
+        let parked = self.pending.remove(idx).expect("parked index in range");
+        if self.cfg.policy == RoutePolicy::WeightedFair {
+            let k = Self::class_idx(parked.req.class);
+            let weight = match parked.req.class {
+                SloClass::LatencySensitive => self.cfg.wfq_premium_weight,
+                SloClass::BestEffort => self.cfg.wfq_be_weight,
+            };
+            self.wfq_served[k] += 1.0 / f64::from(weight.max(1));
+        }
+        parked
+    }
+
+    /// Parked requests of the given class (the premium backlog is a
+    /// per-class capacity-planning input).
+    pub fn parked_of(&self, class: SloClass) -> usize {
+        self.pending.iter().filter(|p| p.req.class == class).count()
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    const BE: SloClass = SloClass::BestEffort;
+    const LS: SloClass = SloClass::LatencySensitive;
 
     fn cand(outstanding: usize, free_bytes: f64) -> RouteCandidate {
         RouteCandidate { accepting: true, outstanding, free_bytes }
@@ -190,15 +359,25 @@ mod tests {
         Router::new(RouterConfig {
             policy,
             admission_limit: limit,
-            reroute_on_shed: false,
+            ..RouterConfig::default()
         })
+    }
+
+    fn req(id: u64, class: SloClass) -> Request {
+        Request {
+            id,
+            arrival_s: id as f64,
+            prompt_tokens: 8,
+            output_tokens: 4,
+            class,
+        }
     }
 
     #[test]
     fn round_robin_cycles_in_id_order() {
         let mut r = router(RoutePolicy::RoundRobin, None);
         let c = vec![cand(0, 0.0); 3];
-        let picks: Vec<_> = (0..5).map(|_| r.pick(&c).unwrap()).collect();
+        let picks: Vec<_> = (0..5).map(|_| r.pick(&c, BE).unwrap()).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1]);
     }
 
@@ -206,31 +385,31 @@ mod tests {
     fn round_robin_skips_saturated_instances() {
         let mut r = router(RoutePolicy::RoundRobin, Some(4));
         let c = vec![cand(4, 0.0), cand(1, 0.0), cand(4, 0.0)];
-        assert_eq!(r.pick(&c), Some(1));
-        assert_eq!(r.pick(&c), Some(1), "only instance 1 admits");
+        assert_eq!(r.pick(&c, BE), Some(1));
+        assert_eq!(r.pick(&c, BE), Some(1), "only instance 1 admits");
     }
 
     #[test]
     fn least_outstanding_ties_to_lowest_id() {
         let mut r = router(RoutePolicy::LeastOutstanding, None);
         let c = vec![cand(3, 0.0), cand(1, 0.0), cand(1, 0.0)];
-        assert_eq!(r.pick(&c), Some(1));
+        assert_eq!(r.pick(&c, BE), Some(1));
         let even = vec![cand(2, 0.0); 4];
-        assert_eq!(r.pick(&even), Some(0));
+        assert_eq!(r.pick(&even, BE), Some(0));
     }
 
     #[test]
     fn kv_headroom_prefers_most_free_bytes() {
         let mut r = router(RoutePolicy::KvHeadroom, None);
         let c = vec![cand(0, 1.0), cand(0, 9.0), cand(0, 9.0)];
-        assert_eq!(r.pick(&c), Some(1), "ties break to the lower id");
+        assert_eq!(r.pick(&c, BE), Some(1), "ties break to the lower id");
     }
 
     #[test]
     fn saturation_returns_none() {
         let mut r = router(RoutePolicy::LeastOutstanding, Some(2));
         let c = vec![cand(2, 0.0), cand(5, 0.0)];
-        assert_eq!(r.pick(&c), None);
+        assert_eq!(r.pick(&c, BE), None);
     }
 
     #[test]
@@ -238,20 +417,29 @@ mod tests {
         // The golden-replay contract: two routers fed the same candidate
         // snapshots make the same decisions — including hidden cursor
         // state. This is what barrier-time routing leans on for parity.
-        for policy in
-            [RoutePolicy::RoundRobin, RoutePolicy::LeastOutstanding, RoutePolicy::KvHeadroom]
-        {
+        for policy in [
+            RoutePolicy::RoundRobin,
+            RoutePolicy::LeastOutstanding,
+            RoutePolicy::KvHeadroom,
+            RoutePolicy::StrictPriority,
+            RoutePolicy::WeightedFair,
+        ] {
             let mut a = router(policy, Some(3));
             let mut b = router(policy, Some(3));
             let mut seed = 0x9e3779b97f4a7c15u64;
             for step in 0..200 {
+                let class = if step % 3 == 0 { LS } else { BE };
                 let c: Vec<_> = (0..4u64)
                     .map(|i| {
                         seed = seed.wrapping_mul(6364136223846793005).wrapping_add(i + 1);
                         cand((seed >> 60) as usize % 4, (seed >> 32) as f64)
                     })
                     .collect();
-                assert_eq!(a.pick(&c), b.pick(&c), "{policy:?} diverged at step {step}");
+                assert_eq!(
+                    a.pick(&c, class),
+                    b.pick(&c, class),
+                    "{policy:?} diverged at step {step}"
+                );
             }
         }
     }
@@ -261,9 +449,96 @@ mod tests {
         let mut r = router(RoutePolicy::LeastOutstanding, None);
         let mut c = vec![cand(0, 0.0), cand(9, 0.0)];
         c[0].accepting = false;
-        assert_eq!(r.pick(&c), Some(1));
+        assert_eq!(r.pick(&c, BE), Some(1));
         c[1].accepting = false;
-        assert_eq!(r.pick(&c), None);
-        assert_eq!(r.pick(&[]), None);
+        assert_eq!(r.pick(&c, BE), None);
+        assert_eq!(r.pick(&[], BE), None);
+    }
+
+    #[test]
+    fn classless_policies_ignore_class_and_serve_head_first() {
+        for policy in
+            [RoutePolicy::RoundRobin, RoutePolicy::LeastOutstanding, RoutePolicy::KvHeadroom]
+        {
+            let mut r = Router::new(RouterConfig {
+                policy,
+                be_admission_limit: Some(1), // must be ignored classless
+                ..RouterConfig::default()
+            });
+            let c = vec![cand(5, 0.0)];
+            assert_eq!(r.pick(&c, LS), r.pick(&c, BE), "{policy:?} read the class");
+            r.park(req(0, BE), 0.0, false);
+            r.park(req(1, LS), 0.0, false);
+            assert_eq!(r.next_parked(), Some(0), "{policy:?} must stay FIFO");
+        }
+    }
+
+    #[test]
+    fn strict_priority_serves_premium_parked_entries_first() {
+        let mut r = router(RoutePolicy::StrictPriority, None);
+        r.park(req(0, BE), 0.0, false);
+        r.park(req(1, BE), 0.0, false);
+        r.park(req(2, LS), 0.0, false);
+        assert_eq!(r.next_parked(), Some(2), "premium jumps the queue");
+        let taken = r.take_parked(2);
+        assert_eq!(taken.req.id, 2);
+        assert_eq!(r.next_parked(), Some(0), "then best-effort in arrival order");
+    }
+
+    #[test]
+    fn be_admission_limit_reserves_headroom_for_premium() {
+        let mut r = Router::new(RouterConfig {
+            policy: RoutePolicy::StrictPriority,
+            admission_limit: Some(8),
+            be_admission_limit: Some(2),
+            ..RouterConfig::default()
+        });
+        let c = vec![cand(2, 0.0)];
+        assert_eq!(r.pick(&c, BE), None, "best-effort capped at 2");
+        assert_eq!(r.pick(&c, LS), Some(0), "premium keeps the headroom");
+        let full = vec![cand(8, 0.0)];
+        assert_eq!(r.pick(&full, LS), None, "the shared limit still binds");
+    }
+
+    #[test]
+    fn weighted_fair_shares_track_weights() {
+        let mut r = Router::new(RouterConfig {
+            policy: RoutePolicy::WeightedFair,
+            wfq_premium_weight: 3,
+            wfq_be_weight: 1,
+            ..RouterConfig::default()
+        });
+        // keep both classes continuously backlogged; count dispatches
+        let mut served = [0usize; 2];
+        let mut next_id = 0u64;
+        for class in [LS, LS, BE, BE] {
+            r.park(req(next_id, class), 0.0, false);
+            next_id += 1;
+        }
+        for _ in 0..400 {
+            let idx = r.next_parked().unwrap();
+            let taken = r.take_parked(idx);
+            served[Router::class_idx(taken.req.class)] += 1;
+            r.park(req(next_id, taken.req.class), 0.0, false); // stays backlogged
+            next_id += 1;
+        }
+        let share = served[0] as f64 / (served[0] + served[1]) as f64;
+        assert!(
+            (share - 0.75).abs() < 0.02,
+            "premium share {share} should track weight 3:1"
+        );
+    }
+
+    #[test]
+    fn weighted_fair_drains_lone_class_without_starving() {
+        let mut r = router(RoutePolicy::WeightedFair, None);
+        r.park(req(0, BE), 0.0, false);
+        r.park(req(1, BE), 0.0, false);
+        assert_eq!(r.next_parked(), Some(0), "only best-effort parked: serve it");
+        r.take_parked(0);
+        r.park(req(2, LS), 0.0, false);
+        // premium virtual service (0) ≤ best-effort's — premium goes next
+        let idx = r.next_parked().unwrap();
+        assert_eq!(r.pending[idx].req.class, LS);
     }
 }

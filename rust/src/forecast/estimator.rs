@@ -289,6 +289,14 @@ pub struct TrafficForecaster {
     bucket_start: f64,
     /// Arrivals observed in the open bucket.
     open_count: u64,
+    /// Latency-sensitive arrivals in the open bucket (fed only under a
+    /// class-aware policy via [`TrafficForecaster::observe_class`];
+    /// stays 0 — and costs nothing — in classless runs).
+    premium_open: u64,
+    /// Smoothed latency-sensitive share of the arrival rate, updated per
+    /// non-empty closed bucket. Pure f64, allocation-free — the same
+    /// determinism contract as the rate estimators.
+    premium_share: Ewma,
     /// Rate of the most recently closed bucket (the burst-mode floor).
     last_rate: f64,
     /// Closed buckets folded so far.
@@ -322,6 +330,8 @@ impl TrafficForecaster {
             bucket_s,
             bucket_start: 0.0,
             open_count: 0,
+            premium_open: 0,
+            premium_share: Ewma::new(0.3),
             last_rate: 0.0,
             buckets_closed: 0,
             ewma,
@@ -365,14 +375,35 @@ impl TrafficForecaster {
         self.open_count += 1;
     }
 
+    /// Tag the arrival just passed to [`TrafficForecaster::observe`] with
+    /// its SLO class (call immediately after, same timestamp — `observe`
+    /// already advanced the buckets). Classless kernels never call this,
+    /// so the premium counters stay zero and the total-rate math — which
+    /// this method does not touch — is bit-identical with or without it.
+    pub fn observe_class(&mut self, class: crate::workload::SloClass) {
+        if class == crate::workload::SloClass::LatencySensitive {
+            self.premium_open += 1;
+        }
+    }
+
     /// Close every bucket that ended at or before `t` (zero-rate buckets
     /// for gaps with no arrivals). Called by the kernel's `ForecastTick`
     /// so lulls decay the estimators even with no traffic at all.
     pub fn advance(&mut self, t: f64) {
         while t >= self.bucket_start + self.bucket_s {
             let rate = self.open_count as f64 / self.bucket_s;
+            // Per-class split: fold the closed bucket's premium share
+            // before the counters reset. Empty buckets carry no share
+            // information — the smoothed share holds through lulls
+            // rather than decaying toward an arbitrary class.
+            if self.open_count > 0 {
+                let share =
+                    (self.premium_open as f64 / self.open_count as f64).clamp(0.0, 1.0);
+                self.premium_share.update(share);
+            }
             self.close_bucket(rate);
             self.open_count = 0;
+            self.premium_open = 0;
             self.bucket_start += self.bucket_s;
         }
     }
@@ -416,6 +447,18 @@ impl TrafficForecaster {
             f = f.max(self.last_rate);
         }
         f.max(0.0)
+    }
+
+    /// Forecast the latency-sensitive arrival rate `h_s` seconds out: the
+    /// total-rate forecast scaled by the smoothed premium share. Exactly
+    /// 0.0 when no arrival was ever tagged premium.
+    pub fn forecast_premium(&self, h_s: f64) -> f64 {
+        self.forecast(h_s) * self.premium_share.value()
+    }
+
+    /// Smoothed latency-sensitive share of the arrival rate ∈ [0, 1].
+    pub fn premium_share(&self) -> f64 {
+        self.premium_share.value()
     }
 
     /// Mean absolute one-bucket-ahead error of (EWMA, Holt, Holt-Winters).
@@ -598,6 +641,46 @@ mod tests {
             )
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn premium_share_splits_rate_without_touching_total() {
+        use crate::workload::SloClass;
+        let run = |tag: bool| {
+            let mut f = forecaster(1.0, 8);
+            let mut t = 0.0;
+            let mut i = 0u64;
+            while t < 30.0 {
+                f.observe(t);
+                if tag {
+                    // 1 in 4 arrivals latency-sensitive
+                    f.observe_class(if i % 4 == 0 {
+                        SloClass::LatencySensitive
+                    } else {
+                        SloClass::BestEffort
+                    });
+                }
+                i += 1;
+                t += 0.1; // 10 rps
+            }
+            f.advance(30.0);
+            f
+        };
+        let tagged = run(true);
+        let untagged = run(false);
+        // the per-class split never perturbs the total-rate math
+        assert_eq!(tagged.forecast(2.0).to_bits(), untagged.forecast(2.0).to_bits());
+        assert!(
+            (tagged.premium_share() - 0.25).abs() < 0.05,
+            "share {}",
+            tagged.premium_share()
+        );
+        let total = tagged.forecast(2.0);
+        let prem = tagged.forecast_premium(2.0);
+        assert!((prem - total * tagged.premium_share()).abs() < 1e-12);
+        // classless runs never tag arrivals: premium forecast is exactly 0
+        assert_eq!(untagged.forecast_premium(2.0), 0.0);
+        assert_eq!(untagged.premium_share(), 0.0);
     }
 
     #[test]

@@ -35,4 +35,6 @@ pub mod predictive;
 
 pub use capacity::{replicas_for_speedup, uniform_degree_for_speedup, CapacityModel};
 pub use estimator::{BurstDetector, Ewma, Holt, HoltWinters, TrafficForecaster};
-pub use predictive::{PredictConfig, PredictReport, PredictStats, PredictiveController};
+pub use predictive::{
+    PredictConfig, PredictReport, PredictStats, PredictiveController, PREMIUM_CAPACITY_FRACTION,
+};

@@ -67,6 +67,13 @@ pub struct PredictConfig {
     /// Deficit (instance-equivalents) at the spin-up horizon from which
     /// a whole-instance spin-up is warranted.
     pub spin_deficit_eq: f64,
+    /// Premium-first floor: under a class-aware routing policy a
+    /// latency-sensitive deficit this deep (instance-equivalents, judged
+    /// against the premium capacity claim —
+    /// [`PREMIUM_CAPACITY_FRACTION`]) spins an instance even when the
+    /// mixed-traffic deficit sits below `spin_deficit_eq`. Unused in
+    /// classless runs.
+    pub premium_spin_deficit_eq: f64,
     /// Deficit below which a deeply-idle live signal vetoes the proposal.
     pub veto_deficit_eq: f64,
     /// Margin added to `cold_start_s` for the drain-gating horizon.
@@ -92,12 +99,22 @@ impl Default for PredictConfig {
             burst_alpha: 0.05,
             burst_sigma: 3.0,
             spin_deficit_eq: 0.9,
+            premium_spin_deficit_eq: 0.45,
             veto_deficit_eq: 0.5,
             drain_margin_s: 2.0,
             oracle: false,
         }
     }
 }
+
+/// Share of live capacity the latency-sensitive class can claim without
+/// waiting for a best-effort batch to be preempted: batch slots already
+/// occupied by best-effort work free only at token boundaries, so the
+/// premium planner counts on roughly half the fleet being immediately
+/// claimable. Premium-first deficits
+/// ([`PredictiveController::premium_deficit_at`]) compare premium demand
+/// against this fraction.
+pub const PREMIUM_CAPACITY_FRACTION: f64 = 0.5;
 
 /// Counters of every predictive decision taken, vetoed, or gated —
 /// surfaced in the `forecast` block of the simulator's metrics JSON.
@@ -164,6 +181,18 @@ impl PredictiveController {
     /// forecast says demand will exceed capacity when the horizon lands.
     pub fn deficit_at(&self, h_s: f64, capacity_eq: f64) -> f64 {
         self.cap.required_equivalents(self.forecaster.forecast(h_s)) - capacity_eq
+    }
+
+    /// Premium-first deficit: instance-equivalents the latency-sensitive
+    /// class alone will lack at horizon `h_s`, judged against the share
+    /// of live capacity it can claim *without waiting for preemption*
+    /// ([`PREMIUM_CAPACITY_FRACTION`]). Exactly 0.0 minus the claimed
+    /// capacity when no arrival was ever tagged premium — so in
+    /// classless runs (which never call this) and in class-aware runs
+    /// with no premium traffic the deficit never goes positive.
+    pub fn premium_deficit_at(&self, h_s: f64, capacity_eq: f64) -> f64 {
+        self.cap.required_equivalents(self.forecaster.forecast_premium(h_s))
+            - capacity_eq * PREMIUM_CAPACITY_FRACTION
     }
 
     /// Precedence rule 2 (module docs): may the live signal veto a
@@ -293,6 +322,39 @@ mod tests {
         assert!(c.bucket_s > 0.0);
         assert!((0.0..=1.0).contains(&c.target_util));
         assert!(c.spin_deficit_eq > c.veto_deficit_eq);
+        // the premium-first floor is deliberately below the mixed floor
+        assert!(c.premium_spin_deficit_eq < c.spin_deficit_eq);
         assert!(!c.oracle);
+    }
+
+    #[test]
+    fn premium_deficit_tracks_tagged_share_only() {
+        use crate::workload::SloClass;
+        let mut p = controller(10.0); // 1 eq serves 10 rps
+        // 30 rps total, every other arrival premium → premium ≈ 15 rps
+        let mut t = 0.0;
+        let mut i = 0u64;
+        while t < 20.0 {
+            p.forecaster.observe(t);
+            p.forecaster.observe_class(if i % 2 == 0 {
+                SloClass::LatencySensitive
+            } else {
+                SloClass::BestEffort
+            });
+            i += 1;
+            t += 1.0 / 30.0;
+        }
+        p.forecaster.advance(20.0);
+        // premium needs ≈ 1.5 eq; with 2 eq live it can claim only
+        // 2 × PREMIUM_CAPACITY_FRACTION = 1 eq → positive deficit, while
+        // the mixed deficit at 3 eq of capacity is already negative
+        assert!(p.premium_deficit_at(1.0, 2.0) > 0.0);
+        assert!(p.deficit_at(1.0, 3.5) < 0.0);
+        assert!(p.premium_deficit_at(1.0, 4.0) < 0.0, "abundant capacity clears it");
+        // untagged controller: premium demand is exactly zero
+        let mut q = controller(10.0);
+        feed_rate(&mut q, 30.0, 0.0, 20.0);
+        assert!(q.premium_deficit_at(1.0, 1.0) < 0.0);
+        assert_eq!(q.forecaster.forecast_premium(1.0), 0.0);
     }
 }

@@ -42,10 +42,12 @@
 // scaling-API surface (`cluster`, `coordinator`, `placement`, `plan` —
 // PR 4), the control/telemetry surface (`autoscale`, `forecast`,
 // `monitor`, `sim`, `workload` — PR 5), and the memory surface
-// (`kvcache`, `mempress`, `model` — PR 7) and the plan-execution
-// surface the failure-recovery path runs on (`ops` — this PR); the
-// per-module `allow`s below mark the modules whose burn-down is still
-// pending — remove one to enlist that module.
+// (`kvcache`, `mempress`, `model` — PR 7), the plan-execution
+// surface the failure-recovery path runs on (`ops` — PR 8), and the
+// batching surface the SLO-class machinery schedules through
+// (`scheduler` — this PR); the per-module `allow`s below mark the
+// modules whose burn-down is still pending — remove one to enlist
+// that module.
 #![warn(missing_docs)]
 
 pub mod autoscale;
@@ -66,7 +68,6 @@ pub mod placement;
 pub mod plan;
 #[allow(missing_docs)]
 pub mod runtime;
-#[allow(missing_docs)]
 pub mod scheduler;
 pub mod sim;
 #[allow(missing_docs)]

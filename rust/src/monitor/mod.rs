@@ -32,6 +32,12 @@ pub struct FleetInputs {
     pub outstanding: usize,
     /// Requests parked at the router under admission backpressure.
     pub parked: usize,
+    /// Latency-sensitive share of `outstanding`. Filled by the kernel
+    /// only under a class-aware routing policy; stays 0 in classless
+    /// runs, so every classless pressure computation is unchanged.
+    pub premium_outstanding: usize,
+    /// Latency-sensitive share of `parked` (same classless-zero rule).
+    pub premium_parked: usize,
 }
 
 impl FleetInputs {
@@ -51,6 +57,14 @@ impl FleetInputs {
     pub fn mean_outstanding(&self) -> f64 {
         (self.outstanding + self.parked) as f64 / self.accepting.max(1) as f64
     }
+
+    /// The premium pressure signal: latency-sensitive outstanding work
+    /// (parked included) per traffic-accepting instance. Always 0.0 in
+    /// classless runs — the premium fields are only filled under a
+    /// class-aware routing policy.
+    pub fn premium_mean_outstanding(&self) -> f64 {
+        (self.premium_outstanding + self.premium_parked) as f64 / self.accepting.max(1) as f64
+    }
 }
 
 /// One completed request's measurements.
@@ -66,6 +80,8 @@ pub struct Completion {
     pub prompt_tokens: usize,
     /// Tokens generated.
     pub output_tokens: usize,
+    /// SLO class the request was admitted with (per-class attainment).
+    pub class: crate::workload::SloClass,
 }
 
 impl Completion {
@@ -248,6 +264,7 @@ mod tests {
             finish_s: at + lat,
             prompt_tokens: 10,
             output_tokens: toks,
+            class: crate::workload::SloClass::default(),
         }
     }
 

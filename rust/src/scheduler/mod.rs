@@ -27,18 +27,22 @@ pub enum BatchPolicy {
     Continuous,
 }
 
+/// Admission/batching configuration handed to [`Scheduler::new`].
 #[derive(Debug, Clone, Copy)]
 pub struct SchedulerConfig {
     /// Maximum sequences decoded together (also the static batch size).
     pub max_batch: usize,
+    /// Which batching discipline to run (see [`BatchPolicy`]).
     pub policy: BatchPolicy,
 }
 
 impl SchedulerConfig {
+    /// HFT-style static batching: full batches of `batch`, 0.5 s timeout.
     pub fn hft(batch: usize) -> SchedulerConfig {
         SchedulerConfig { max_batch: batch, policy: BatchPolicy::Static { timeout_s: 0.5 } }
     }
 
+    /// Continuous batching with at most `max_batch` concurrent sequences.
     pub fn continuous(max_batch: usize) -> SchedulerConfig {
         SchedulerConfig { max_batch, policy: BatchPolicy::Continuous }
     }
@@ -68,6 +72,7 @@ pub enum Step {
 /// The scheduler: pending queue + running set + policy.
 #[derive(Debug)]
 pub struct Scheduler {
+    /// Active policy + batch-size configuration (read-only after `new`).
     pub cfg: SchedulerConfig,
     pending: VecDeque<Tracked>,
     running: Vec<Tracked>,
@@ -78,26 +83,32 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
+    /// Build an empty scheduler with the given configuration.
     pub fn new(cfg: SchedulerConfig) -> Scheduler {
         Scheduler { cfg, pending: VecDeque::new(), running: vec![], draining: false, completed: 0 }
     }
 
+    /// Enqueue a request; it waits in the pending queue until admitted.
     pub fn submit(&mut self, req: Request) {
         self.pending.push_back(Tracked { req, generated: 0, prefilled: false });
     }
 
+    /// Number of requests waiting for admission.
     pub fn pending_len(&self) -> usize {
         self.pending.len()
     }
 
+    /// Number of sequences currently in the running set.
     pub fn running_len(&self) -> usize {
         self.running.len()
     }
 
+    /// Total sequences that produced all their tokens since construction.
     pub fn completed(&self) -> u64 {
         self.completed
     }
 
+    /// True when there is neither pending nor running work.
     pub fn is_idle(&self) -> bool {
         self.pending.is_empty() && self.running.is_empty()
     }
@@ -273,7 +284,13 @@ mod tests {
     use crate::util::{prop, rng::Rng};
 
     fn req(id: u64, at: f64, out: usize) -> Request {
-        Request { id, arrival_s: at, prompt_tokens: 8, output_tokens: out }
+        Request {
+            id,
+            arrival_s: at,
+            prompt_tokens: 8,
+            output_tokens: out,
+            class: crate::workload::SloClass::default(),
+        }
     }
 
     #[test]

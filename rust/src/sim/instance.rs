@@ -82,6 +82,9 @@ pub(crate) struct Shed {
     pub output_tokens: usize,
     /// Accumulated OOM-reload penalty the request carries with it.
     pub penalty: f64,
+    /// SLO class the request entered the system with — preserved across
+    /// every re-route so class-aware policies keep honoring it.
+    pub class: crate::workload::SloClass,
 }
 
 /// A plan being executed op-by-op by the event kernel.
@@ -203,8 +206,17 @@ pub(crate) struct Instance {
     pub reroute_shed: bool,
     /// Requests shed since the kernel last collected them.
     pub shed_outbox: Vec<Shed>,
-    /// Request metadata by id (arrival, prompt, output) for completions.
-    pub requests: std::collections::BTreeMap<u64, (f64, usize, usize)>,
+    /// Allow a waiting latency-sensitive request to preempt an
+    /// all-best-effort running batch at the next token boundary (set by
+    /// the kernel only under a class-aware routing policy; always false
+    /// otherwise, so classless runs never take the preemption path).
+    pub preempt_premium: bool,
+    /// Best-effort batches preempted for a latency-sensitive arrival.
+    pub preemptions: u64,
+    /// Request metadata by id (arrival, prompt, output, SLO class) for
+    /// completions. Class rides in the last slot so positional `.1`
+    /// prompt lookups predating SLO classes stay valid.
+    pub requests: std::collections::BTreeMap<u64, (f64, usize, usize, crate::workload::SloClass)>,
     /// Per-request accumulated penalty (OOM reloads).
     pub penalties: std::collections::BTreeMap<u64, f64>,
     /// Unique requests ever caught in an OOM (Fig. 11a numerator).
@@ -279,6 +291,8 @@ impl Instance {
             active_after: 0.0,
             reroute_shed: false,
             shed_outbox: Vec::new(),
+            preempt_premium: false,
+            preemptions: 0,
             requests: Default::default(),
             penalties: Default::default(),
             oom_victims: Default::default(),
@@ -307,11 +321,29 @@ impl Instance {
     /// end-to-end latency spans re-routes) plus any penalty it carries,
     /// and submit it to the scheduler.
     pub fn deliver(&mut self, req: crate::workload::Request, penalty: f64) {
-        self.requests.insert(req.id, (req.arrival_s, req.prompt_tokens, req.output_tokens));
+        self.requests
+            .insert(req.id, (req.arrival_s, req.prompt_tokens, req.output_tokens, req.class));
         if penalty > 0.0 {
             *self.penalties.entry(req.id).or_insert(0.0) += penalty;
         }
         self.scheduler.submit(req);
+    }
+
+    /// Live latency-sensitive requests (pending + running) — the premium
+    /// numerator of the fleet telemetry window under class-aware
+    /// policies. (Routed-but-undelivered requests are not counted; their
+    /// class is still in flight with the `Routed` event.)
+    pub fn premium_live(&self) -> usize {
+        self.scheduler
+            .running_view()
+            .iter()
+            .map(|(id, _, _)| *id)
+            .chain(self.pending_ids())
+            .filter(|id| {
+                self.requests.get(id).map(|r| r.3)
+                    == Some(crate::workload::SloClass::LatencySensitive)
+            })
+            .count()
     }
 
     /// Fully drained? (Nothing queued, running, or scaling in flight.)
@@ -366,7 +398,7 @@ impl Instance {
         let ids = self.live_ids();
         for id in &ids {
             self.kv.remove_sequence(*id);
-            if let Some((arr, p, o)) = self.requests.remove(id) {
+            if let Some((arr, p, o, class)) = self.requests.remove(id) {
                 let penalty = self.penalties.remove(id).unwrap_or(0.0);
                 self.shed_outbox.push(Shed {
                     id: *id,
@@ -374,6 +406,7 @@ impl Instance {
                     prompt_tokens: p,
                     output_tokens: o,
                     penalty,
+                    class,
                 });
             }
         }
@@ -704,7 +737,7 @@ impl Instance {
                         // Fleet mode: hand the failed batch back to the
                         // coordinator; the request (and its accumulated
                         // penalty) leaves this instance entirely.
-                        if let Some((arr, p, o)) = self.requests.remove(id) {
+                        if let Some((arr, p, o, class)) = self.requests.remove(id) {
                             let carried = self.penalties.remove(id).unwrap_or(0.0) + penalty;
                             self.shed_outbox.push(Shed {
                                 id: *id,
@@ -712,18 +745,20 @@ impl Instance {
                                 prompt_tokens: p,
                                 output_tokens: o,
                                 penalty: carried,
+                                class,
                             });
                         }
                         continue;
                     }
                     *self.penalties.entry(*id).or_insert(0.0) += penalty;
                     // requeue as fresh arrival (retry)
-                    if let Some(&(_, p, o)) = self.requests.get(id) {
+                    if let Some(&(_, p, o, class)) = self.requests.get(id) {
                         self.scheduler.submit(crate::workload::Request {
                             id: *id,
                             arrival_s: ctx.now,
                             prompt_tokens: p,
                             output_tokens: o,
+                            class,
                         });
                     }
                 }
@@ -733,12 +768,13 @@ impl Instance {
                 let cfg = self.scheduler.cfg;
                 let mut fresh = Scheduler::new(cfg);
                 for id in self.pending_ids() {
-                    if let Some(&(_, p, o)) = self.requests.get(&id) {
+                    if let Some(&(_, p, o, class)) = self.requests.get(&id) {
                         fresh.submit(crate::workload::Request {
                             id,
                             arrival_s: ctx.now,
                             prompt_tokens: p,
                             output_tokens: o,
+                            class,
                         });
                     }
                 }
@@ -766,7 +802,7 @@ impl Instance {
                     self.oom_victims.insert(id);
                     self.kv.remove_sequence(id);
                     self.scheduler.preempt(id);
-                    if let Some(&(_, p, o)) = self.requests.get(&id) {
+                    if let Some(&(_, p, o, class)) = self.requests.get(&id) {
                         if only_one {
                             *self.penalties.entry(id).or_insert(0.0) +=
                                 ctx.cfg.oom_penalty_s;
@@ -776,6 +812,7 @@ impl Instance {
                             arrival_s: ctx.now,
                             prompt_tokens: p,
                             output_tokens: if only_one { 1 } else { o },
+                            class,
                         });
                     }
                 }
@@ -1146,6 +1183,16 @@ impl Instance {
         cfg.max_batch = cap;
         self.scheduler.cfg = cfg;
 
+        // Mid-step preemption (class-aware fleet mode only): a waiting
+        // latency-sensitive request about to be admitted may claim the
+        // slots of an all-best-effort running batch at this token boundary
+        // (start_step only runs between steps, so no step is cut short).
+        // Gated on `preempt_premium`, which stays false in every classless
+        // configuration — those runs never take this path.
+        if self.preempt_premium {
+            self.preempt_best_effort_batch(cap);
+        }
+
         match self.scheduler.next_step(ctx.now) {
             Step::Idle => StepStart::Idle,
             Step::Prefill { request_ids } => {
@@ -1244,6 +1291,51 @@ impl Instance {
         }
     }
 
+    /// Shed the running batch so a waiting latency-sensitive request can
+    /// take its place at the next token boundary. Fires only when (a) a
+    /// premium request sits within the next `cap` admissions — so the
+    /// freed slots actually go to it, never a churn loop — and (b) every
+    /// running sequence is best-effort (premium work is never preempted).
+    /// The batch leaves via the shed outbox with its accumulated penalty
+    /// and original arrival intact, exactly like an OOM shed, so the
+    /// coordinator's `collect_shed` conservation machinery re-routes it.
+    fn preempt_best_effort_batch(&mut self, cap: usize) {
+        use crate::workload::SloClass;
+        let premium_next = self
+            .scheduler
+            .pending_ids()
+            .iter()
+            .take(cap.max(1))
+            .any(|id| self.requests.get(id).map(|r| r.3) == Some(SloClass::LatencySensitive));
+        if !premium_next {
+            return;
+        }
+        let view = self.scheduler.running_view();
+        if view.is_empty()
+            || view
+                .iter()
+                .any(|(id, _, _)| self.requests.get(id).map(|r| r.3) != Some(SloClass::BestEffort))
+        {
+            return;
+        }
+        for (id, _, _) in view {
+            self.kv.remove_sequence(id);
+            self.scheduler.preempt(id);
+            if let Some((arr, p, o, class)) = self.requests.remove(&id) {
+                let penalty = self.penalties.remove(&id).unwrap_or(0.0);
+                self.shed_outbox.push(Shed {
+                    id,
+                    arrival_s: arr,
+                    prompt_tokens: p,
+                    output_tokens: o,
+                    penalty,
+                    class,
+                });
+            }
+        }
+        self.preemptions += 1;
+    }
+
     fn begin_busy(&mut self, until: f64) -> StepStart {
         // a step started, so the instance is making forward progress —
         // reset the governor's stall counter (bounds Relief::Wait)
@@ -1272,7 +1364,7 @@ impl Instance {
             .collect();
         for id in finished {
             self.kv.remove_sequence(id);
-            let (arrival, prompt, output) = self.requests[&id];
+            let (arrival, prompt, output, class) = self.requests[&id];
             let penalty = self.penalties.get(&id).copied().unwrap_or(0.0);
             self.monitor.record(Completion {
                 request_id: id,
@@ -1280,6 +1372,7 @@ impl Instance {
                 finish_s: now + penalty,
                 prompt_tokens: prompt,
                 output_tokens: output,
+                class,
             });
         }
         let _ = self.sync_kv(cluster);
@@ -1303,12 +1396,24 @@ mod tests {
     }
 
     fn submit(inst: &mut Instance, id: u64, at: f64, prompt: usize, out: usize) {
-        inst.requests.insert(id, (at, prompt, out));
+        submit_classed(inst, id, at, prompt, out, crate::workload::SloClass::default());
+    }
+
+    fn submit_classed(
+        inst: &mut Instance,
+        id: u64,
+        at: f64,
+        prompt: usize,
+        out: usize,
+        class: crate::workload::SloClass,
+    ) {
+        inst.requests.insert(id, (at, prompt, out, class));
         inst.scheduler.submit(crate::workload::Request {
             id,
             arrival_s: at,
             prompt_tokens: prompt,
             output_tokens: out,
+            class,
         });
     }
 
@@ -1399,6 +1504,92 @@ mod tests {
         assert_eq!(inst.scheduler.pending_len(), 16, "no request lost");
         assert_eq!(inst.oom_victims.len(), 16);
         assert!(inst.monitor.total_oom() > 0);
+    }
+
+    #[test]
+    fn shed_records_preserve_class_and_accumulated_penalty() {
+        // The regression contract for every shed path (FailBatch reroute,
+        // DeviceFailed flush, premium preemption — all build the same
+        // `Shed` record): the request's SLO class and accumulated penalty
+        // must survive into the outbox, or the re-routed request would
+        // silently lose its priority and its OOM-reload debt.
+        use crate::workload::SloClass;
+        let (_, _, _, mut inst) = setup(baselines::vllm_like(8));
+        submit_classed(&mut inst, 7, 1.5, 32, 4, SloClass::LatencySensitive);
+        inst.penalties.insert(7, 0.75);
+        assert_eq!(inst.shed_live_requests(), 1);
+        let shed = &inst.shed_outbox[0];
+        assert_eq!(shed.id, 7);
+        assert_eq!(shed.arrival_s, 1.5, "original arrival preserved");
+        assert_eq!(shed.class, SloClass::LatencySensitive, "class preserved");
+        assert_eq!(shed.penalty, 0.75, "accumulated penalty preserved");
+    }
+
+    #[test]
+    fn premium_arrival_preempts_best_effort_batch_at_token_boundary() {
+        use crate::workload::SloClass;
+        let (cfg, cost, mut cluster, mut inst) = setup(baselines::hft(4));
+        inst.preempt_premium = true;
+        let mut scale = ScaleStats::default();
+        submit_classed(&mut inst, 0, 0.0, 16, 8, SloClass::BestEffort);
+        submit_classed(&mut inst, 1, 0.0, 16, 8, SloClass::BestEffort);
+        let ctx = StepCtx { cfg: &cfg, cost: &cost, now: 0.0 };
+        let StepStart::Busy { until, .. } =
+            inst.start_step(&ctx, &mut cluster, 1.0, &mut scale)
+        else {
+            panic!("expected the best-effort batch to start")
+        };
+        inst.busy_until = None;
+        inst.finish_completions(until, &mut cluster);
+        // a latency-sensitive request lands while the best-effort batch
+        // is mid-decode; carry a pre-existing penalty on one victim
+        inst.penalties.insert(0, 0.25);
+        submit_classed(&mut inst, 2, until, 16, 2, SloClass::LatencySensitive);
+        let ctx = StepCtx { cfg: &cfg, cost: &cost, now: until };
+        let s = inst.start_step(&ctx, &mut cluster, 1.0, &mut scale);
+        assert!(matches!(s, StepStart::Busy { .. }), "premium must start: {s:?}");
+        assert_eq!(inst.preemptions, 1, "one batch preemption recorded");
+        let shed: Vec<_> = inst.shed_outbox.iter().map(|s| s.id).collect();
+        assert_eq!(shed, vec![0, 1], "the whole best-effort batch is shed");
+        for s in &inst.shed_outbox {
+            assert_eq!(s.class, SloClass::BestEffort);
+            assert_eq!(s.arrival_s, 0.0, "original arrival survives preemption");
+        }
+        assert_eq!(inst.shed_outbox[0].penalty, 0.25, "penalty survives preemption");
+        // the premium request owns the machine now
+        let running: Vec<u64> =
+            inst.scheduler.running_view().iter().map(|(id, _, _)| *id).collect();
+        assert_eq!(running, vec![2]);
+    }
+
+    #[test]
+    fn classless_instances_never_preempt() {
+        // preempt_premium stays false outside class-aware policies: the
+        // identical arrival pattern runs the best-effort batch to
+        // completion with an empty shed outbox — the byte-identity
+        // guarantee for classless goldens at the instance level.
+        use crate::workload::SloClass;
+        let (cfg, cost, mut cluster, mut inst) = setup(baselines::hft(4));
+        let mut scale = ScaleStats::default();
+        submit_classed(&mut inst, 0, 0.0, 16, 8, SloClass::BestEffort);
+        submit_classed(&mut inst, 1, 0.0, 16, 8, SloClass::BestEffort);
+        let ctx = StepCtx { cfg: &cfg, cost: &cost, now: 0.0 };
+        let StepStart::Busy { until, .. } =
+            inst.start_step(&ctx, &mut cluster, 1.0, &mut scale)
+        else {
+            panic!("expected busy")
+        };
+        inst.busy_until = None;
+        inst.finish_completions(until, &mut cluster);
+        submit_classed(&mut inst, 2, until, 16, 2, SloClass::LatencySensitive);
+        let ctx = StepCtx { cfg: &cfg, cost: &cost, now: until };
+        let s = inst.start_step(&ctx, &mut cluster, 1.0, &mut scale);
+        assert!(matches!(s, StepStart::Busy { .. }));
+        assert_eq!(inst.preemptions, 0);
+        assert!(inst.shed_outbox.is_empty(), "no preemption without the flag");
+        let running: Vec<u64> =
+            inst.scheduler.running_view().iter().map(|(id, _, _)| *id).collect();
+        assert_eq!(running, vec![0, 1], "the best-effort batch keeps the machine");
     }
 
     /// Deploy with a governor and a deliberately starved initial pool.

@@ -86,6 +86,32 @@ pub struct AuditBlock {
     pub unrouted_at_end: usize,
 }
 
+/// Per-SLO-class serving outcome attached to class-aware runs: how each
+/// class fared (completions, SLO attainment, routing share) plus the
+/// number of mid-step preemptions the premium class triggered. Only
+/// assembled when the routing policy is class-aware, so classless runs
+/// carry no `slo` key and stay byte-identical to pre-class documents.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloBlock {
+    /// Latency-sensitive requests completed.
+    pub premium_completed: usize,
+    /// Fraction of latency-sensitive completions within their monitor's
+    /// SLO (1.0 when the class completed nothing).
+    pub premium_slo_attainment: f64,
+    /// Best-effort requests completed.
+    pub be_completed: usize,
+    /// Fraction of best-effort completions within their monitor's SLO
+    /// (1.0 when the class completed nothing).
+    pub be_slo_attainment: f64,
+    /// Best-effort batches interrupted at a token boundary so a waiting
+    /// latency-sensitive request could be admitted.
+    pub preemptions: u64,
+    /// First-time routes granted to latency-sensitive requests.
+    pub premium_routes: u64,
+    /// First-time routes granted to best-effort requests.
+    pub be_routes: u64,
+}
+
 /// Aggregated outcome of a simulation run.
 #[derive(Debug)]
 pub struct SimReport {
@@ -153,6 +179,11 @@ pub struct SimReport {
     /// all, keeping failure-free documents byte-identical to the
     /// pre-chaos kernel (same additive-key discipline as `forecast`).
     pub audit: Option<AuditBlock>,
+    /// Per-SLO-class outcome summary. `None` when the routing policy is
+    /// not class-aware — and then the metrics JSON carries no `slo` key
+    /// at all, keeping classless documents byte-identical to the
+    /// pre-class kernel (same additive-key discipline as `audit`).
+    pub slo: Option<SloBlock>,
 }
 
 impl SimReport {
@@ -358,6 +389,25 @@ impl SimReport {
                 ]),
             ));
         }
+        // and for the SLO-class summary: classless routing policy, no
+        // `slo` key, byte-identical pre-class documents
+        if let Some(s) = &self.slo {
+            pairs.push((
+                "slo",
+                json::obj(vec![
+                    ("be_completed", json::num(s.be_completed as f64)),
+                    ("be_routes", json::num(s.be_routes as f64)),
+                    ("be_slo_attainment", json::num(s.be_slo_attainment)),
+                    ("preemptions", json::num(s.preemptions as f64)),
+                    ("premium_completed", json::num(s.premium_completed as f64)),
+                    ("premium_routes", json::num(s.premium_routes as f64)),
+                    (
+                        "premium_slo_attainment",
+                        json::num(s.premium_slo_attainment),
+                    ),
+                ]),
+            ));
+        }
         json::obj(pairs)
     }
 }
@@ -375,6 +425,7 @@ mod tests {
             finish_s: 2.5,
             prompt_tokens: 10,
             output_tokens: 20,
+            class: crate::workload::SloClass::default(),
         });
         SimReport {
             duration_s: 10.0,
@@ -411,6 +462,7 @@ mod tests {
             forecast: None,
             mempress: None,
             audit: None,
+            slo: None,
         }
     }
 
@@ -549,6 +601,41 @@ mod tests {
         // everything else is unchanged
         let base = Json::parse(&without).unwrap();
         assert_eq!(base.req("completed"), parsed.req("completed"));
+    }
+
+    #[test]
+    fn slo_block_is_strictly_additive() {
+        let without = tiny_report().to_json().to_string();
+        assert!(
+            !without.contains("\"slo\":"),
+            "classless policy → no slo key: {without}"
+        );
+        let mut r = tiny_report();
+        r.slo = Some(SloBlock {
+            premium_completed: 12,
+            premium_slo_attainment: 0.75,
+            be_completed: 34,
+            be_slo_attainment: 0.5,
+            preemptions: 3,
+            premium_routes: 13,
+            be_routes: 35,
+        });
+        let with = r.to_json().to_string();
+        let parsed = Json::parse(&with).unwrap();
+        let s = parsed.req("slo");
+        assert_eq!(s.req("premium_completed").as_usize(), Some(12));
+        assert_eq!(s.req("premium_slo_attainment").as_f64(), Some(0.75));
+        assert_eq!(s.req("be_completed").as_usize(), Some(34));
+        assert_eq!(s.req("be_slo_attainment").as_f64(), Some(0.5));
+        assert_eq!(s.req("preemptions").as_usize(), Some(3));
+        assert_eq!(s.req("premium_routes").as_usize(), Some(13));
+        assert_eq!(s.req("be_routes").as_usize(), Some(35));
+        // two renders are byte-identical
+        assert_eq!(with, r.to_json().to_string());
+        // everything else is unchanged
+        let base = Json::parse(&without).unwrap();
+        assert_eq!(base.req("completed"), parsed.req("completed"));
+        assert_eq!(base.req("slo_attainment"), parsed.req("slo_attainment"));
     }
 
     #[test]

@@ -59,7 +59,7 @@ pub mod events;
 pub(crate) mod instance;
 pub mod metrics;
 
-pub use metrics::{AuditBlock, OpEvent, OpPhase, ScaleStats, SimReport};
+pub use metrics::{AuditBlock, OpEvent, OpPhase, ScaleStats, SimReport, SloBlock};
 
 use crate::autoscale::{
     memory_violation, scale_up, Controller, ControllerConfig, PlanCtx, PlannedDecision,
@@ -313,12 +313,14 @@ impl Simulation {
         let cost = cfg.cost_model();
         let mut cluster = cluster;
         let reroute = setup.router.reroute_on_shed;
+        let preempt = setup.router.policy.class_aware();
         let instances: Vec<Instance> = placements
             .into_iter()
             .enumerate()
             .map(|(i, (placement, policy))| {
                 let mut inst = Instance::deploy(i, placement, policy, &cfg, &cost, &mut cluster);
                 inst.reroute_shed = reroute;
+                inst.preempt_premium = preempt;
                 inst
             })
             .collect();
@@ -440,9 +442,10 @@ impl Simulation {
     /// backpressure.
     fn route_arrival(&mut self, request_idx: usize, req: Request, q: &mut dyn EventSink) {
         let cands = self.route_candidates();
-        match self.router.pick(&cands) {
+        match self.router.pick(&cands, req.class) {
             Some(i) => {
                 self.router.routes += 1;
+                self.router.class_routes[Router::class_idx(req.class)] += 1;
                 self.instances[i].outstanding_routes += 1;
                 q.push(self.now, EventKind::Routed { request_idx, instance: i });
             }
@@ -463,15 +466,21 @@ impl Simulation {
             }
             let shed = std::mem::take(&mut self.instances[i].shed_outbox);
             for s in shed {
+                // The shed record carries the request's SLO class and
+                // accumulated penalty — both must survive the re-route
+                // (FailBatch, DeviceFailed, and preemption all funnel
+                // through here), or class-aware policies would silently
+                // demote re-routed premium work.
                 let req = Request {
                     id: s.id,
                     arrival_s: s.arrival_s,
                     prompt_tokens: s.prompt_tokens,
                     output_tokens: s.output_tokens,
+                    class: s.class,
                 };
                 let mut cands = self.route_candidates();
                 cands[i].accepting = false;
-                match self.router.pick(&cands) {
+                match self.router.pick(&cands, req.class) {
                     Some(j) => {
                         self.router.reroutes += 1;
                         self.instances[j].deliver(req, s.penalty);
@@ -482,16 +491,22 @@ impl Simulation {
         }
     }
 
-    /// Retry parked requests in FIFO order until the head fails to route.
+    /// Retry parked requests until the policy's next pick fails to route.
+    /// Classless policies serve the queue head (FIFO — the pre-SLO-class
+    /// behaviour, byte-identical); class-aware policies let the router
+    /// choose which parked entry goes next (strict priority or weighted
+    /// fair queuing), and a failed route for *that* entry ends the drain.
     fn drain_parked(&mut self) {
-        while let Some(parked) = self.router.pending.front().copied() {
+        while let Some(idx) = self.router.next_parked() {
+            let parked = self.router.pending[idx];
             let cands = self.route_candidates();
-            let Some(i) = self.router.pick(&cands) else { break };
-            self.router.pending.pop_front();
+            let Some(i) = self.router.pick(&cands, parked.req.class) else { break };
+            let parked = self.router.take_parked(idx);
             if parked.reroute {
                 self.router.reroutes += 1;
             } else {
                 self.router.routes += 1;
+                self.router.class_routes[Router::class_idx(parked.req.class)] += 1;
                 // a parked arrival delivers straight from the queue (no
                 // Routed event), so this is where the forecaster sees it
                 // — demand must not vanish from the rate signal exactly
@@ -499,6 +514,9 @@ impl Simulation {
                 // excluded: same demand again, not new demand.
                 if let Some(p) = &mut self.predictive {
                     p.forecaster.observe(self.now);
+                    if self.router.cfg.policy.class_aware() {
+                        p.forecaster.observe_class(parked.req.class);
+                    }
                 }
             }
             self.instances[i].deliver(parked.req, parked.penalty);
@@ -795,6 +813,19 @@ impl Simulation {
             );
         }
         inputs.parked = self.router.pending.len();
+        // Class-aware fleets split the window per class: the premium
+        // fields feed the premium-first pressure walk below. Classless
+        // fleets leave them zero and take the exact pre-SLO-class path.
+        let class_aware = self.router.cfg.policy.class_aware();
+        if class_aware {
+            inputs.premium_parked =
+                self.router.parked_of(crate::workload::SloClass::LatencySensitive);
+            for inst in &self.instances {
+                if inst.lifecycle != Lifecycle::Retired {
+                    inputs.premium_outstanding += inst.premium_live();
+                }
+            }
+        }
         // 3. arbitration (precedence documented in DESIGN.md): a live
         //    ScaleOut always wins; a live ScaleIn is forecast-gated; the
         //    Hold band is where predictive proposals act. The cooldown
@@ -802,7 +833,11 @@ impl Simulation {
         //    predictive action observes the same spacing a reactive one
         //    would — the shared window has no off-by-one tick.
         let was_cooling = self.fleet.as_ref().expect("fleet").cooling_down();
-        let pressure = self.fleet.as_mut().expect("fleet").pressure(&inputs);
+        let pressure = if class_aware {
+            self.fleet.as_mut().expect("fleet").pressure_classed(&inputs)
+        } else {
+            self.fleet.as_mut().expect("fleet").pressure(&inputs)
+        };
         match pressure {
             FleetPressure::Hold => {
                 if !was_cooling {
@@ -906,6 +941,21 @@ impl Simulation {
         let bucket_s = self.predictive.as_ref().expect("predictor").cfg.bucket_s;
         let cap_spin = self.capacity_equivalents_at(fc.cold_start_s, None);
         let cap_next = self.capacity_equivalents_at(bucket_s, None);
+        // Premium-first planning: under a class-aware policy the deficit
+        // of the latency-sensitive class alone (judged against its
+        // immediate capacity claim) is a first-class spin trigger, with
+        // its own lower floor. Exactly 0.0 for classless configs — the
+        // guard below and the veto max are then bit-identical to the
+        // pre-SLO-class arithmetic.
+        let premium_deficit = if self.router.cfg.policy.class_aware() {
+            self.predictive
+                .as_ref()
+                .expect("predictor")
+                .premium_deficit_at(fc.cold_start_s, cap_spin)
+                .max(0.0)
+        } else {
+            0.0
+        };
         let (deficit_spin, deficit_next) = {
             let p = self.predictive.as_ref().expect("predictor");
             (
@@ -913,7 +963,7 @@ impl Simulation {
                 p.deficit_at(bucket_s, cap_next),
             )
         };
-        if deficit_spin <= 0.0 && deficit_next <= 0.0 {
+        if deficit_spin <= 0.0 && deficit_next <= 0.0 && premium_deficit <= 0.0 {
             return;
         }
         {
@@ -922,7 +972,7 @@ impl Simulation {
             if p.reactive_veto(
                 inputs.mean_outstanding(),
                 fc.scale_in_queue,
-                deficit_spin.max(deficit_next),
+                deficit_spin.max(deficit_next).max(premium_deficit),
             ) {
                 p.stats.vetoed += 1;
                 return;
@@ -950,6 +1000,17 @@ impl Simulation {
         // exactly that)
         let spin_floor = self.predictive.as_ref().expect("predictor").cfg.spin_deficit_eq;
         if deficit_spin >= spin_floor && inputs.live < fc.max_instances {
+            if let Some(dev) = self.spin_candidate() {
+                self.spin_up(dev, q);
+                acted = true;
+            }
+        }
+        // premium-first spin: a latency-sensitive deficit past its (lower)
+        // floor warrants the instance even when the mixed deficit is too
+        // shallow — the premium class's SLO is planned against first
+        let premium_floor =
+            self.predictive.as_ref().expect("predictor").cfg.premium_spin_deficit_eq;
+        if !acted && premium_deficit >= premium_floor && inputs.live < fc.max_instances {
             if let Some(dev) = self.spin_candidate() {
                 self.spin_up(dev, q);
                 acted = true;
@@ -1076,6 +1137,7 @@ impl Simulation {
             Instance::deploy(id, placement, fc.policy, &self.cfg, &self.cost, &mut self.cluster);
         inst.active_after = self.now + fc.cold_start_s;
         inst.reroute_shed = self.router.cfg.reroute_on_shed;
+        inst.preempt_premium = self.router.cfg.policy.class_aware();
         let active_after = inst.active_after;
         let devs = inst.profile.device_set.clone();
         for &d in &devs {
@@ -1286,6 +1348,9 @@ impl Simulation {
                 // the predictor sees what the coordinator routes
                 if let Some(p) = &mut self.predictive {
                     p.forecaster.observe(self.now);
+                    if self.router.cfg.policy.class_aware() {
+                        p.forecaster.observe_class(trace.requests[request_idx].class);
+                    }
                 }
                 if self.instances[instance].lifecycle == Lifecycle::Retired {
                     // Defensive: a same-timestamp DeviceFailed cannot
@@ -1509,6 +1574,40 @@ impl Simulation {
             log,
             unrouted_at_end: self.router.pending.len(),
         });
+        // per-class outcome summary — assembled only under a class-aware
+        // routing policy, so classless documents carry no `slo` key
+        let slo = if self.router.cfg.policy.class_aware() {
+            use crate::workload::SloClass;
+            let mut premium = (0usize, 0usize);
+            let mut be = (0usize, 0usize);
+            for inst in &self.instances {
+                let m = &inst.monitor;
+                for c in m.completions() {
+                    let within = c.e2e_latency() <= m.slo_latency_s;
+                    let bucket = if c.class == SloClass::LatencySensitive {
+                        &mut premium
+                    } else {
+                        &mut be
+                    };
+                    bucket.0 += 1;
+                    bucket.1 += usize::from(within);
+                }
+            }
+            let attain =
+                |(n, ok): (usize, usize)| if n == 0 { 1.0 } else { ok as f64 / n as f64 };
+            Some(SloBlock {
+                premium_completed: premium.0,
+                premium_slo_attainment: attain(premium),
+                be_completed: be.0,
+                be_slo_attainment: attain(be),
+                preemptions: self.instances.iter().map(|i| i.preemptions).sum(),
+                premium_routes: self.router.class_routes
+                    [Router::class_idx(SloClass::LatencySensitive)],
+                be_routes: self.router.class_routes[Router::class_idx(SloClass::BestEffort)],
+            })
+        } else {
+            None
+        };
         SimReport {
             duration_s: wall,
             events_processed: self.events_processed,
@@ -1544,6 +1643,7 @@ impl Simulation {
             forecast: self.predictive.map(|p| p.report()),
             mempress,
             audit,
+            slo,
             monitors: self.instances.into_iter().map(|i| i.monitor).collect(),
         }
     }

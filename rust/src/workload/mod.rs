@@ -18,6 +18,38 @@ pub use scenarios::{DeviceFailure, FailureSchedule};
 
 use crate::util::rng::Rng;
 
+/// Service-level-objective class of a request: which tenant tier it
+/// belongs to, and therefore how the control plane treats it under
+/// contention. Fieldless and `Copy` so it rides inside [`Request`]
+/// everywhere a request travels (trace merge, routing, shed re-routes)
+/// at zero cost.
+///
+/// The default is [`SloClass::BestEffort`]: traces built by the legacy
+/// constructors carry it uniformly, and with a classless
+/// [`crate::coordinator::RoutePolicy`] the class is never consulted, so
+/// every pre-existing golden stays byte-identical.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum SloClass {
+    /// Premium tier: holds a latency SLO. Class-aware policies route it
+    /// first, may preempt best-effort batches for it, and the per-class
+    /// capacity planner provisions against its demand first.
+    LatencySensitive,
+    /// Throughput tier: absorbs slack capacity, degrades gracefully
+    /// under pressure (parked behind premium work, preemptible).
+    #[default]
+    BestEffort,
+}
+
+impl SloClass {
+    /// Short stable label used in reports and bench tables.
+    pub fn name(self) -> &'static str {
+        match self {
+            SloClass::LatencySensitive => "latency-sensitive",
+            SloClass::BestEffort => "best-effort",
+        }
+    }
+}
+
 /// One inference request. Plain-old-data and `Copy`: the event kernel
 /// hands arrivals around by value straight out of the trace — no
 /// per-arrival heap clone.
@@ -32,6 +64,9 @@ pub struct Request {
     /// Number of tokens the request will generate (ground truth; engines
     /// discover it by hitting EOS, the simulator uses it directly).
     pub output_tokens: usize,
+    /// SLO class the request belongs to (defaults to best-effort; rides
+    /// through [`Trace::merge`] and every re-route unchanged).
+    pub class: SloClass,
 }
 
 /// Length distribution parameters (Alpaca-like defaults).
@@ -158,6 +193,7 @@ impl Trace {
                 arrival_s: t,
                 prompt_tokens: lengths.sample_prompt(&mut rng),
                 output_tokens: lengths.sample_output(&mut rng),
+                class: SloClass::default(),
             });
             id += 1;
         }
@@ -185,6 +221,22 @@ impl Trace {
             .iter()
             .map(|r| r.prompt_tokens + r.output_tokens)
             .sum()
+    }
+
+    /// Tag every request in the trace with `class` (builder-style: the
+    /// classed two-tenant scenario tags each tenant's sub-trace before
+    /// merging, and the class then rides through [`Trace::merge`]'s id
+    /// reassignment untouched).
+    pub fn with_class(mut self, class: SloClass) -> Trace {
+        for r in &mut self.requests {
+            r.class = class;
+        }
+        self
+    }
+
+    /// Requests carrying the given SLO class.
+    pub fn count_class(&self, class: SloClass) -> usize {
+        self.requests.iter().filter(|r| r.class == class).count()
     }
 
     /// Merge traces into one, sorted by arrival time with ids reassigned
@@ -333,6 +385,23 @@ mod tests {
         }
         let ids: Vec<u64> = m.requests.iter().map(|r| r.id).collect();
         assert_eq!(ids, (0..n as u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn merge_preserves_slo_classes() {
+        let a = Trace::generate(Arrival::Poisson { rps: 5.0 },
+                                LengthDist::alpaca(), 10.0, 1)
+            .with_class(SloClass::LatencySensitive);
+        let b = Trace::generate(Arrival::Poisson { rps: 5.0 },
+                                LengthDist::tiny(), 10.0, 2);
+        let (na, nb) = (a.len(), b.len());
+        let m = Trace::merge(vec![a, b]);
+        assert_eq!(m.count_class(SloClass::LatencySensitive), na);
+        assert_eq!(m.count_class(SloClass::BestEffort), nb);
+        // classless constructors default every request to best-effort
+        let plain = Trace::generate(Arrival::Poisson { rps: 5.0 },
+                                    LengthDist::alpaca(), 10.0, 3);
+        assert!(plain.requests.iter().all(|r| r.class == SloClass::BestEffort));
     }
 
     #[test]

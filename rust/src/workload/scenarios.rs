@@ -183,6 +183,58 @@ impl Trace {
         Trace::merge(vec![chat, batch])
     }
 
+    /// The two-tenant mix with SLO classes attached: the interactive chat
+    /// tenant is latency-sensitive, the batch summarization tenant is
+    /// best-effort. Identical arrivals and lengths to
+    /// [`Trace::two_tenant`] at the same `(rps, duration_s, seed)` — only
+    /// the class tags differ — so classed and classless runs of the same
+    /// scenario are directly comparable.
+    pub fn two_tenant_classed(rps: f64, duration_s: f64, seed: u64) -> Trace {
+        let chat = Trace::generate(
+            Arrival::Poisson { rps: 0.7 * rps },
+            LengthDist::chat(),
+            duration_s,
+            seed ^ 0xC047,
+        )
+        .with_class(super::SloClass::LatencySensitive);
+        let batch = Trace::generate(
+            Arrival::Poisson { rps: 0.3 * rps },
+            LengthDist::summarize(),
+            duration_s,
+            seed ^ 0xBA7C,
+        )
+        .with_class(super::SloClass::BestEffort);
+        Trace::merge(vec![chat, batch])
+    }
+
+    /// Burst spike with SLO classes: the base-load stream is
+    /// latency-sensitive, the 3× mid-run spike is best-effort backfill —
+    /// the flash-crowd shape where a premium tenant must ride out a
+    /// throughput tenant's surge. Deterministic in `(rps, duration_s,
+    /// seed)`.
+    pub fn burst_classed(rps: f64, duration_s: f64, seed: u64) -> Trace {
+        let premium = Trace::generate(
+            Arrival::Poisson { rps },
+            LengthDist::chat(),
+            duration_s,
+            seed ^ 0x51_0,
+        )
+        .with_class(super::SloClass::LatencySensitive);
+        let surge = Trace::generate(
+            Arrival::Burst {
+                base: 0.2 * rps,
+                burst: 3.0 * rps,
+                start_s: 0.4 * duration_s,
+                end_s: 0.6 * duration_s,
+            },
+            LengthDist::summarize(),
+            duration_s,
+            seed ^ 0xBE_0,
+        )
+        .with_class(super::SloClass::BestEffort);
+        Trace::merge(vec![premium, surge])
+    }
+
     /// The full scenario sweep at a common target rate — what the
     /// fig10/fig11 benches iterate.
     pub fn scenario_sweep(rps: f64, duration_s: f64, seed: u64) -> Vec<(&'static str, Trace)> {
@@ -224,6 +276,46 @@ mod tests {
         // aggregate rate ≈ requested
         let rps = t.mean_rps(60.0);
         assert!((rps - 20.0).abs() < 3.0, "rps {rps}");
+    }
+
+    #[test]
+    fn classed_two_tenant_matches_classless_payloads() {
+        use crate::workload::SloClass;
+        let classed = Trace::two_tenant_classed(20.0, 60.0, 3);
+        let classless = Trace::two_tenant(20.0, 60.0, 3);
+        // identical arrivals/lengths — only the class tags differ
+        let strip = |t: &Trace| -> Vec<(u64, u64, usize, usize)> {
+            t.requests
+                .iter()
+                .map(|r| (r.id, r.arrival_s.to_bits(), r.prompt_tokens, r.output_tokens))
+                .collect()
+        };
+        assert_eq!(strip(&classed), strip(&classless));
+        let premium = classed.count_class(SloClass::LatencySensitive);
+        let be = classed.count_class(SloClass::BestEffort);
+        assert!(premium > 0 && be > 0, "both tenants present: {premium}/{be}");
+        assert!(premium > be, "chat tenant carries 70% of the rate");
+        // classless variant is uniformly best-effort
+        assert_eq!(classless.count_class(SloClass::BestEffort), classless.len());
+    }
+
+    #[test]
+    fn classed_burst_concentrates_best_effort_in_window() {
+        use crate::workload::SloClass;
+        let t = Trace::burst_classed(10.0, 50.0, 4);
+        let be_in_window = t
+            .requests
+            .iter()
+            .filter(|r| {
+                r.class == SloClass::BestEffort && (20.0..30.0).contains(&r.arrival_s)
+            })
+            .count();
+        let be_total = t.count_class(SloClass::BestEffort);
+        assert!(be_total > 0 && t.count_class(SloClass::LatencySensitive) > 0);
+        assert!(
+            be_in_window as f64 > 0.5 * be_total as f64,
+            "best-effort surge must concentrate mid-run: {be_in_window}/{be_total}"
+        );
     }
 
     #[test]

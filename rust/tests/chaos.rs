@@ -46,6 +46,7 @@ fn chaos_fleet(trace: &Trace, duration_s: f64, schedule: FailureSchedule) -> Sim
             policy: RoutePolicy::LeastOutstanding,
             admission_limit: Some(64),
             reroute_on_shed: true,
+            ..RouterConfig::default()
         },
         fleet: Some(FleetConfig::elastic(2, 5, policy)),
         ..Default::default()
@@ -136,6 +137,7 @@ fn sharded_chaos_kernel_matches_sequential_byte_for_byte() {
                 policy: RoutePolicy::LeastOutstanding,
                 admission_limit: Some(64),
                 reroute_on_shed: true,
+                ..RouterConfig::default()
             },
             fleet: Some(FleetConfig::elastic(2, 5, policy)),
             ..Default::default()
@@ -308,6 +310,7 @@ fn heterogeneous_spot_fleet_survives_seeded_preemptions() {
             policy: RoutePolicy::KvHeadroom,
             admission_limit: Some(64),
             reroute_on_shed: true,
+            ..RouterConfig::default()
         },
         fleet: Some(FleetConfig::elastic(2, 4, policy)),
         ..Default::default()

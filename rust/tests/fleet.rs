@@ -51,6 +51,7 @@ fn elastic_setup(route: RoutePolicy, policy: SimPolicy) -> FleetSetup {
             policy: route,
             admission_limit: Some(64),
             reroute_on_shed: true,
+            ..RouterConfig::default()
         },
         fleet: Some(FleetConfig::elastic(2, 5, policy)),
         ..Default::default()
@@ -119,6 +120,7 @@ fn every_arrival_is_routed_exactly_once() {
             policy: RoutePolicy::LeastOutstanding,
             admission_limit: Some(4),
             reroute_on_shed: false,
+            ..RouterConfig::default()
         },
         ..Default::default()
     };
@@ -151,6 +153,7 @@ fn oom_shed_requests_reroute_without_double_completion() {
             policy: RoutePolicy::LeastOutstanding,
             admission_limit: None,
             reroute_on_shed: true,
+            ..RouterConfig::default()
         },
         ..Default::default()
     };
@@ -191,6 +194,7 @@ fn burst_pressure_spins_instances_up_and_bills_less_than_static() {
             policy: RoutePolicy::LeastOutstanding,
             admission_limit: None,
             reroute_on_shed: true,
+            ..RouterConfig::default()
         },
         fleet: Some(fleet),
         ..Default::default()
@@ -223,6 +227,7 @@ fn a_single_request_trace_completes() {
             arrival_s: 0.5,
             prompt_tokens: 16,
             output_tokens: 4,
+            class: Default::default(),
         }],
     };
     let r = run_fleet(2, 2, baselines::vllm_like(16), FleetSetup::default(), &trace, 5.0);
@@ -240,6 +245,7 @@ fn burst_then_silence(n: usize, window_s: f64, output_tokens: usize) -> Trace {
                 arrival_s: window_s * (i as f64 + 0.5) / n as f64,
                 prompt_tokens: 64,
                 output_tokens,
+                class: Default::default(),
             })
             .collect(),
     }
@@ -272,6 +278,7 @@ fn preemption_mid_drain_sheds_cleanly_and_stops_billing() {
                 policy: RoutePolicy::LeastOutstanding,
                 admission_limit: None,
                 reroute_on_shed: true,
+                ..RouterConfig::default()
             },
             fleet: Some(FleetConfig::elastic(1, 2, policy)),
             ..Default::default()
@@ -394,6 +401,7 @@ fn dead_drainer_releases_every_tag_on_surviving_devices() {
                 policy: RoutePolicy::LeastOutstanding,
                 admission_limit: None,
                 reroute_on_shed: true,
+                ..RouterConfig::default()
             },
             fleet: Some(FleetConfig::elastic(1, 4, policy)),
             ..Default::default()

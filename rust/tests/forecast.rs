@@ -15,11 +15,13 @@
 use cocoserve::baselines;
 use cocoserve::cluster::{Cluster, DeviceSpec};
 use cocoserve::coordinator::{FleetConfig, FleetPhase, RoutePolicy, RouterConfig};
-use cocoserve::forecast::PredictConfig;
+use cocoserve::forecast::{
+    BurstDetector, Ewma, Holt, HoltWinters, PredictConfig, TrafficForecaster,
+};
 use cocoserve::placement::Placement;
 use cocoserve::sim::{FleetSetup, SimConfig, SimReport, Simulation};
 use cocoserve::util::json::Json;
-use cocoserve::workload::Trace;
+use cocoserve::workload::{SloClass, Trace};
 
 fn fleet_setup(predictor: Option<PredictConfig>) -> FleetSetup {
     let policy = baselines::cocoserve(32);
@@ -33,6 +35,7 @@ fn fleet_setup(predictor: Option<PredictConfig>) -> FleetSetup {
             policy: RoutePolicy::KvHeadroom,
             admission_limit: None,
             reroute_on_shed: true,
+            ..RouterConfig::default()
         },
         fleet: Some(fleet),
         controller: cocoserve::autoscale::ControllerConfig { t_up: 2.0, ..Default::default() },
@@ -161,6 +164,103 @@ fn predictive_acts_no_later_than_reactive_under_burst() {
         (None, Some(_)) => {} // predictive acted, reactive never did — fine
         (r, p) => panic!("expected capacity actions, got reactive {r:?} predictive {p:?}"),
     }
+}
+
+#[test]
+fn per_class_rate_split_is_deterministic_and_leaves_the_total_untouched() {
+    // Drive two identically-tagged streams through independent
+    // forecasters: the split must be bit-replayable. A third, untagged
+    // twin of the same stream pins the classless no-op — the total-rate
+    // forecast is bit-identical whether or not classes were observed,
+    // and the premium forecast of an untagged stream is exactly zero.
+    let forecaster = || {
+        TrafficForecaster::new(
+            1.0,
+            Ewma::new(0.3),
+            Holt::new(0.4, 0.2),
+            HoltWinters::new(0.3, 0.1, 0.2, 8),
+            BurstDetector::new(0.3, 3.0),
+        )
+    };
+    let drive = |tag: bool| -> TrafficForecaster {
+        let mut f = forecaster();
+        for bucket in 0..40u64 {
+            for i in 0..4u64 {
+                f.observe(bucket as f64 + 0.2 * i as f64);
+                if tag {
+                    // one arrival in four is latency-sensitive
+                    f.observe_class(if i == 0 {
+                        SloClass::LatencySensitive
+                    } else {
+                        SloClass::BestEffort
+                    });
+                }
+            }
+        }
+        f.advance(41.0);
+        f
+    };
+    let a = drive(true);
+    let b = drive(true);
+    assert_eq!(
+        a.forecast_premium(2.0).to_bits(),
+        b.forecast_premium(2.0).to_bits(),
+        "per-class split must replay bit-identically"
+    );
+    assert_eq!(a.premium_share().to_bits(), b.premium_share().to_bits());
+    let untagged = drive(false);
+    assert_eq!(
+        a.forecast(2.0).to_bits(),
+        untagged.forecast(2.0).to_bits(),
+        "observing classes must not perturb the total-rate forecast"
+    );
+    assert_eq!(untagged.forecast_premium(2.0), 0.0, "untagged stream has no premium rate");
+    assert_eq!(untagged.premium_share(), 0.0);
+    assert!(
+        (a.premium_share() - 0.25).abs() < 0.05,
+        "smoothed share {} should track the 1-in-4 tagging",
+        a.premium_share()
+    );
+}
+
+#[test]
+fn classed_predictive_fleet_replays_and_classless_predictor_ignores_tags() {
+    // The full predictive pipeline under a class-aware policy (per-class
+    // observation, premium-first deficits, premium spin floor) is
+    // replay-deterministic and surfaces the slo block; the same predictive
+    // pipeline under the default classless policy produces bytes identical
+    // on the tagged trace and its payload-equal untagged twin.
+    let classed_trace = Trace::two_tenant_classed(14.0, 14.0, 77);
+    let mut setup = fleet_setup(Some(PredictConfig::default()));
+    setup.router.policy = RoutePolicy::StrictPriority;
+    let run_with = |setup: FleetSetup, trace: &Trace| -> SimReport {
+        let cfg = SimConfig::paper_13b();
+        let cluster = Cluster::homogeneous(5, DeviceSpec::a100_40gb());
+        let placements: Vec<_> = (0..2)
+            .map(|i| {
+                (
+                    Placement::single_device(cfg.model.n_layers, i),
+                    baselines::cocoserve(32),
+                )
+            })
+            .collect();
+        Simulation::with_fleet(cfg, cluster, placements, setup).run(trace, 14.0)
+    };
+    let a = run_with(setup, &classed_trace).to_json().to_string();
+    let b = run_with(setup, &classed_trace).to_json().to_string();
+    assert_eq!(a, b, "classed predictive run must replay byte-identically");
+    assert!(a.contains("\"slo\":"), "class-aware run must carry the slo block");
+
+    let classless = fleet_setup(Some(PredictConfig::default()));
+    let tagged = run_with(classless, &classed_trace).to_json().to_string();
+    let untagged = run_with(classless, &Trace::two_tenant(14.0, 14.0, 77))
+        .to_json()
+        .to_string();
+    assert_eq!(
+        tagged, untagged,
+        "a classless predictor must never observe the class tags"
+    );
+    assert!(!tagged.contains("\"slo\":"), "classless golden must carry no slo key");
 }
 
 #[test]

@@ -69,6 +69,7 @@ fn drive(cfg: SchedulerConfig, requests: &[(f64, usize)]) -> Result<u64, String>
                 arrival_s: at,
                 prompt_tokens: 8,
                 output_tokens: out,
+                class: Default::default(),
             });
             submitted += 1;
         }
@@ -158,6 +159,7 @@ fn both_policies_respect_max_batch_exactly_at_the_boundary() {
                 arrival_s: 0.0,
                 prompt_tokens: 8,
                 output_tokens: 2,
+                class: Default::default(),
             });
         }
         match s.next_step(10.0) {

@@ -43,6 +43,7 @@ fn fixed_fleet() -> FleetSetup {
             policy: RoutePolicy::LeastOutstanding,
             admission_limit: Some(64),
             reroute_on_shed: true,
+            ..RouterConfig::default()
         },
         ..Default::default()
     }
@@ -54,6 +55,7 @@ fn elastic_fleet() -> FleetSetup {
             policy: RoutePolicy::KvHeadroom,
             admission_limit: Some(64),
             reroute_on_shed: true,
+            ..RouterConfig::default()
         },
         fleet: Some(FleetConfig::elastic(2, 5, baselines::cocoserve(32))),
         ..Default::default()
@@ -113,6 +115,69 @@ fn sharded_kernel_is_byte_identical_with_predictor() {
                 "scenario {name}: predictive fleet diverged at shards={shards}"
             );
         }
+    }
+}
+
+fn classed_fleet(policy: RoutePolicy) -> FleetSetup {
+    FleetSetup {
+        router: RouterConfig {
+            policy,
+            admission_limit: Some(64),
+            be_admission_limit: Some(48),
+            reroute_on_shed: true,
+            ..RouterConfig::default()
+        },
+        fleet: Some(FleetConfig::elastic(2, 5, baselines::cocoserve(32))),
+        ..Default::default()
+    }
+}
+
+/// Class-aware routing adds parked-queue reordering, per-class admission
+/// caps, and mid-step preemption — all of which must still merge into the
+/// exact sequential event order under sharding. Cells: both class-aware
+/// policies × both classed scenarios, shards ∈ {1, 4} compared as raw
+/// golden bytes.
+#[test]
+fn sharded_kernel_is_byte_identical_with_class_aware_routing() {
+    for (name, trace) in [
+        ("two_tenant_classed", Trace::two_tenant_classed(18.0, 10.0, 77)),
+        ("burst_classed", Trace::burst_classed(18.0, 10.0, 77)),
+    ] {
+        for policy in [RoutePolicy::StrictPriority, RoutePolicy::WeightedFair] {
+            let setup = classed_fleet(policy);
+            let seq = golden(1, setup, &trace, 10.0);
+            let sharded = golden(4, setup, &trace, 10.0);
+            assert_eq!(
+                seq, sharded,
+                "scenario {name}: {policy:?} diverged at shards=4"
+            );
+            assert!(
+                String::from_utf8(seq).unwrap().contains("\"slo\":"),
+                "scenario {name}: {policy:?} golden must carry the slo block"
+            );
+        }
+    }
+}
+
+/// The classless no-op half of the contract: a classless policy run on a
+/// class-tagged trace produces bytes identical to the same run on the
+/// payload-equal untagged trace (`two_tenant_classed` and `two_tenant`
+/// differ only in their tags), and neither document carries an `slo` key.
+#[test]
+fn classless_policy_ignores_class_tags_byte_for_byte() {
+    let classed = Trace::two_tenant_classed(18.0, 10.0, 77);
+    let classless = Trace::two_tenant(18.0, 10.0, 77);
+    for setup in [fixed_fleet(), elastic_fleet()] {
+        let tagged = golden(1, setup, &classed, 10.0);
+        let untagged = golden(1, setup, &classless, 10.0);
+        assert_eq!(
+            tagged, untagged,
+            "a classless policy must never observe the class tags"
+        );
+        assert!(
+            !String::from_utf8(tagged).unwrap().contains("\"slo\":"),
+            "classless golden must carry no slo key"
+        );
     }
 }
 

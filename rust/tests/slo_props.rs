@@ -1,0 +1,226 @@
+//! SLO-class fairness property harness: the pinning tests for
+//! multi-tenant priority routing, weighted fair queuing, and mid-step
+//! preemption, run over randomized arrival tapes with the `util::prop`
+//! harness (replay any failure with `PROP_SEED=<seed> PROP_CASE=<i>`).
+//!
+//! * **WFQ shares** — with both classes continuously backlogged, the
+//!   long-run service shares of the weighted-fair parked queue stay
+//!   within the deficit-scheme bound of the configured weight ratio,
+//!   for every randomized weight pair and tape length.
+//! * **Strict priority no-inversion** — at equal arrival times a parked
+//!   best-effort request is never served while any latency-sensitive
+//!   request is parked, across randomized park/serve tapes.
+//! * **Preemption conservation** — full class-aware simulations (with
+//!   mid-step preemption, shed re-routing, and a mid-run device failure)
+//!   never lose or duplicate a request: unique completions plus requests
+//!   parked at the deadline equal the trace length, and every completion
+//!   retains its original arrival time and SLO class.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use cocoserve::baselines;
+use cocoserve::cluster::{Cluster, DeviceSpec};
+use cocoserve::coordinator::{FleetConfig, RoutePolicy, Router, RouterConfig};
+use cocoserve::placement::Placement;
+use cocoserve::sim::{FleetSetup, SimConfig, Simulation};
+use cocoserve::util::{prop, rng::Rng};
+use cocoserve::workload::{FailureSchedule, Request, SloClass, Trace};
+
+const LS: SloClass = SloClass::LatencySensitive;
+const BE: SloClass = SloClass::BestEffort;
+
+fn req(id: u64, arrival_s: f64, class: SloClass) -> Request {
+    Request { id, arrival_s, prompt_tokens: 8, output_tokens: 4, class }
+}
+
+#[test]
+fn prop_wfq_long_run_shares_track_weights() {
+    prop::check(
+        "wfq-shares-track-weights",
+        |r: &mut Rng| {
+            let wp = 1 + r.below(8) as u32;
+            let wb = 1 + r.below(8) as u32;
+            let rounds = 400 + r.below(400) as usize;
+            (wp, wb, rounds)
+        },
+        |&(wp, wb, rounds)| {
+            let mut router = Router::new(RouterConfig {
+                policy: RoutePolicy::WeightedFair,
+                wfq_premium_weight: wp,
+                wfq_be_weight: wb,
+                ..RouterConfig::default()
+            });
+            let mut next_id = 0u64;
+            for class in [LS, LS, BE, BE] {
+                router.park(req(next_id, 0.0, class), 0.0, false);
+                next_id += 1;
+            }
+            let mut served = [0usize; 2];
+            for _ in 0..rounds {
+                let idx = router.next_parked().ok_or("parked queue ran dry")?;
+                let taken = router.take_parked(idx);
+                served[Router::class_idx(taken.req.class)] += 1;
+                // immediately re-park the same class: both classes stay
+                // continuously backlogged, the regime WFQ guarantees
+                // shares in
+                router.park(req(next_id, 0.0, taken.req.class), 0.0, false);
+                next_id += 1;
+            }
+            let want = f64::from(wp) / f64::from(wp + wb);
+            let got = served[0] as f64 / rounds as f64;
+            // Deficit bound: the two virtual clocks never drift apart by
+            // more than one dispatch's worth of virtual time, so the
+            // share error shrinks as 1/rounds.
+            let bound = f64::from(wp + wb) / rounds as f64 + 0.01;
+            if (got - want).abs() > bound {
+                return Err(format!(
+                    "premium share {got:.4} strayed from {want:.4} \
+                     (weights {wp}:{wb}, {rounds} rounds, bound {bound:.4})"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_strict_priority_admits_no_inversion() {
+    // Randomized park/serve tapes, every request at the same arrival
+    // time: whenever the strict-priority queue serves a best-effort
+    // entry, no latency-sensitive entry may be parked — a premium
+    // request can never queue behind a best-effort one.
+    prop::check(
+        "strict-priority-no-inversion",
+        |r: &mut Rng| {
+            let ops: Vec<(bool, bool)> = (0..120)
+                .map(|_| (r.f64() < 0.55, r.f64() < 0.5))
+                .collect();
+            ops
+        },
+        |ops| {
+            let mut router = Router::new(RouterConfig {
+                policy: RoutePolicy::StrictPriority,
+                ..RouterConfig::default()
+            });
+            let mut next_id = 0u64;
+            for &(is_park, premium) in ops {
+                if is_park {
+                    router.park(req(next_id, 0.0, if premium { LS } else { BE }), 0.0, false);
+                    next_id += 1;
+                } else if let Some(idx) = router.next_parked() {
+                    let premium_waiting = router.parked_of(LS) > 0;
+                    let taken = router.take_parked(idx);
+                    if premium_waiting && taken.req.class != LS {
+                        return Err(format!(
+                            "inversion: served best-effort request {} while \
+                             a latency-sensitive request was parked",
+                            taken.req.id
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_preemption_conserves_requests() {
+    // Full class-aware simulations over randomized classed burst tapes:
+    // strict-priority or WFQ routing, mid-step preemption armed, shed
+    // re-routing on, and a mid-run device failure so every shed path
+    // (Preempt, FailBatch, DeviceFailed) funnels through the same
+    // conservation machinery. The audit block's parked remainder closes
+    // the accounting: completed + unrouted == arrivals, no id twice,
+    // and every completion keeps its original arrival time and class.
+    prop::check(
+        "preemption-conservation",
+        |r: &mut Rng| {
+            let seed = r.next_u64();
+            let strict = r.f64() < 0.5;
+            let rps = 4.0 + r.f64() * 6.0;
+            (seed, strict, rps)
+        },
+        |&(seed, strict, rps)| {
+            let duration = 5.0;
+            let trace = Trace::burst_classed(rps, duration, seed);
+            let by_id: BTreeMap<u64, (u64, SloClass)> = trace
+                .requests
+                .iter()
+                .map(|r| (r.id, (r.arrival_s.to_bits(), r.class)))
+                .collect();
+            let cfg = SimConfig::paper_13b();
+            let cluster = Cluster::homogeneous(5, DeviceSpec::a100_40gb());
+            let policy = baselines::cocoserve(32);
+            let placements: Vec<_> = (0..2)
+                .map(|i| (Placement::single_device(cfg.model.n_layers, i), policy))
+                .collect();
+            let setup = FleetSetup {
+                router: RouterConfig {
+                    policy: if strict {
+                        RoutePolicy::StrictPriority
+                    } else {
+                        RoutePolicy::WeightedFair
+                    },
+                    admission_limit: Some(64),
+                    be_admission_limit: Some(48),
+                    reroute_on_shed: true,
+                    ..RouterConfig::default()
+                },
+                fleet: Some(FleetConfig::elastic(2, 4, policy)),
+                ..Default::default()
+            };
+            // device 1 dies mid-run; instance 0 on device 0 survives, so
+            // the run keeps serving and the shed work re-routes
+            let r = Simulation::with_fleet(cfg, cluster, placements, setup)
+                .with_failures(FailureSchedule::at(&[(2.5, 1)]))
+                .run(&trace, duration);
+            let mut seen = BTreeSet::new();
+            for m in &r.monitors {
+                for c in m.completions() {
+                    if !seen.insert(c.request_id) {
+                        return Err(format!("request {} completed twice", c.request_id));
+                    }
+                    let &(arrival_bits, class) = by_id
+                        .get(&c.request_id)
+                        .ok_or_else(|| format!("unknown id {}", c.request_id))?;
+                    if c.arrival_s.to_bits() != arrival_bits {
+                        return Err(format!(
+                            "request {} lost its arrival time: {} recorded",
+                            c.request_id, c.arrival_s
+                        ));
+                    }
+                    if c.class != class {
+                        return Err(format!(
+                            "request {} lost its SLO class across re-routing",
+                            c.request_id
+                        ));
+                    }
+                }
+            }
+            let unrouted = r
+                .audit
+                .as_ref()
+                .ok_or("failure runs must carry an audit block")?
+                .unrouted_at_end;
+            if seen.len() + unrouted != trace.len() {
+                return Err(format!(
+                    "conservation broke: {} completed + {} unrouted != {} arrivals",
+                    seen.len(),
+                    unrouted,
+                    trace.len()
+                ));
+            }
+            let slo = r.slo.as_ref().ok_or("class-aware runs must carry the slo block")?;
+            if slo.premium_completed + slo.be_completed != seen.len() {
+                return Err(format!(
+                    "slo block miscounts: {} + {} != {}",
+                    slo.premium_completed,
+                    slo.be_completed,
+                    seen.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
