@@ -43,6 +43,17 @@
 //! the smoke twice (`SHARDS=1` and `SHARDS=4`) and byte-compares the two
 //! files — the cross-kernel parity gate at bench scale.
 //!
+//! After the shards sweep, a **telemetry pass** re-runs the steady
+//! scenario with the tracing layer and the kernel self-profiler on:
+//! the per-event-kind wall-time/event/allocation breakdown is printed
+//! and written into `BENCH_fleet.json` as the `profile` table, and the
+//! telemetry-on vs telemetry-off events/sec ratio is gated at ≤10%
+//! overhead in smoke mode. `TRACE_OUT=<path>` additionally selects the
+//! full (unbounded) span sink and writes the Chrome/Perfetto trace
+//! export to `<path>` — span timestamps are sim-time only, so CI runs
+//! this twice and byte-compares the files. A third zero-alloc probe
+//! asserts span recording into the ring sink never touches the heap.
+//!
 //! Smoke mode (8 instances, 5k requests) additionally enforces the
 //! checked-in regression floors: events/sec must stay above half of
 //! `SMOKE_EVENTS_PER_SEC_FLOOR`, and allocations/step must stay within
@@ -57,6 +68,7 @@ use cocoserve::cluster::{Cluster, DeviceSpec};
 use cocoserve::forecast::{BurstDetector, Ewma, Holt, HoltWinters, TrafficForecaster};
 use cocoserve::placement::{Placement, PlacementProfile};
 use cocoserve::sim::{SimConfig, SimReport, Simulation};
+use cocoserve::telemetry::{MarkKind, ReqPhase, SpanSink, TelemetryConfig, Tracer};
 use cocoserve::util::bench::Table;
 use cocoserve::util::json::{self, Json};
 use cocoserve::workload::Trace;
@@ -224,6 +236,37 @@ fn assert_forecaster_zero_alloc() -> u64 {
     updates
 }
 
+/// Assert that span recording on the step path is alloc-free once the
+/// ring sink reaches steady state (records are `Copy`; overwrites happen
+/// in place). Returns the number of probed recording rounds.
+fn assert_tracer_zero_alloc() -> u64 {
+    let cfg = TelemetryConfig {
+        sink: SpanSink::Ring(1024),
+        timeline_window_s: None, // isolate span recording from window rolls
+        ..TelemetryConfig::default()
+    };
+    let mut tr = Tracer::new(Some(&cfg));
+    // Warm past ring capacity so steady state overwrites in place.
+    for i in 0..2048u64 {
+        tr.req(i as f64 * 1e-3, i, 0, ReqPhase::Routed);
+    }
+    let rounds = 4096u64;
+    let before = allocs();
+    for i in 0..rounds {
+        let t = 3.0 + i as f64 * 1e-3;
+        tr.req(t, i, 0, ReqPhase::Routed);
+        tr.step(t, 0.05, 0, 16, true);
+        tr.completion(t, i, 0, 0.2);
+        tr.mark(t, 0, MarkKind::MempressRelief, 1.0);
+    }
+    let delta = allocs() - before;
+    assert_eq!(
+        delta, 0,
+        "steady-state span recording allocated {delta} times over {rounds} rounds"
+    );
+    rounds
+}
+
 // ---- per-scenario measurement ----------------------------------------------
 
 struct ScenarioResult {
@@ -262,9 +305,11 @@ fn run_scenario(
     trace: &Trace,
     shards: usize,
     capture_golden: bool,
-) -> ScenarioResult {
+    telemetry: Option<TelemetryConfig>,
+) -> (ScenarioResult, SimReport) {
     let mut cfg = SimConfig::paper_13b();
     cfg.shards = shards;
+    cfg.telemetry = telemetry;
     let cluster = Cluster::homogeneous(fleet.devices, DeviceSpec::a100_40gb());
     let placements: Vec<_> = (0..fleet.instances)
         .map(|i| {
@@ -288,7 +333,7 @@ fn run_scenario(
     // them, so that retention stays.)
     let quantiles = report.latency_p2s(&[0.50, 0.99]);
     let golden = capture_golden.then(|| report.to_json().to_string());
-    ScenarioResult {
+    let result = ScenarioResult {
         name,
         requests: trace.len(),
         completed: report.total_completed(),
@@ -301,7 +346,8 @@ fn run_scenario(
         scale_ups: report.scale_ups,
         scale_downs: report.scale_downs,
         golden,
-    }
+    };
+    (result, report)
 }
 
 fn main() {
@@ -322,6 +368,11 @@ fn main() {
     let forecast_updates = assert_forecaster_zero_alloc();
     println!(
         "zero-alloc probe: {forecast_updates} forecaster observe/forecast rounds, \
+         0 heap allocations ✓"
+    );
+    let tracer_rounds = assert_tracer_zero_alloc();
+    println!(
+        "zero-alloc probe: {tracer_rounds} span-recording rounds (ring sink), \
          0 heap allocations ✓\n"
     );
 
@@ -332,7 +383,8 @@ fn main() {
         "p50", "p99", "ups", "downs",
     ]);
     for (name, trace) in sweep {
-        let r = run_scenario(&fleet, name, &trace, fleet.shards, golden_out.is_some());
+        let (r, _) =
+            run_scenario(&fleet, name, &trace, fleet.shards, golden_out.is_some(), None);
         table.row(&[
             r.name.to_string(),
             format!("{}", r.requests),
@@ -387,7 +439,7 @@ fn main() {
     let mut sweep_results = Vec::new();
     let mut sweep_table = Table::new(&["shards", "wall_s", "events/s", "speedup vs 1"]);
     for shards in [1usize, 2, 4, 8] {
-        let r = run_scenario(&fleet, "steady", &sweep_trace, shards, false);
+        let (r, _) = run_scenario(&fleet, "steady", &sweep_trace, shards, false, None);
         sweep_results.push((shards, r));
     }
     let base_wall = sweep_results[0].1.wall_s.max(1e-9);
@@ -401,6 +453,41 @@ fn main() {
     }
     println!("\nshards sweep (steady scenario):");
     sweep_table.print();
+
+    // ---- telemetry overhead + kernel self-profiler --------------------------
+    // Telemetry-on re-run of the steady trace, sequential kernel. `TRACE_OUT`
+    // selects the full span sink and writes the Chrome trace export (CI runs
+    // this twice and byte-compares — span timestamps are sim-time only, so
+    // the export is deterministic); otherwise a bounded ring keeps memory
+    // flat at fleet scale. The self-profiler is always on here: wall-time,
+    // event-count and allocation deltas per event kind, attributed via the
+    // counting allocator, land in BENCH_fleet.json as the `profile` table.
+    let trace_out = std::env::var("TRACE_OUT").ok().filter(|p| !p.is_empty());
+    let mut tcfg = if trace_out.is_some() {
+        TelemetryConfig::default()
+    } else {
+        TelemetryConfig::ring(1 << 16)
+    };
+    tcfg.profile = true;
+    tcfg.alloc_probe = Some(allocs);
+    let telemetry_off = &sweep_results[0].1; // steady, shards=1, telemetry off
+    let (telemetry_on, telem_report) =
+        run_scenario(&fleet, "steady", &sweep_trace, 1, false, Some(tcfg));
+    let overhead_frac =
+        1.0 - telemetry_on.events_per_sec() / telemetry_off.events_per_sec().max(1e-9);
+    println!(
+        "\ntelemetry overhead (steady): {:.0} events/s on vs {:.0} off ({:+.1}%)",
+        telemetry_on.events_per_sec(),
+        telemetry_off.events_per_sec(),
+        overhead_frac * 100.0
+    );
+    let profile = telem_report.profile.clone().expect("profiler enabled");
+    profile.print();
+    if let Some(path) = &trace_out {
+        let chrome = telem_report.chrome_trace().expect("trace buffer captured");
+        std::fs::write(path, chrome.to_string()).expect("write TRACE_OUT");
+        println!("trace export: {path}");
+    }
 
     // ---- BENCH_fleet.json ---------------------------------------------------
     let scenarios = json::arr(results.iter().map(|r| {
@@ -463,12 +550,28 @@ fn main() {
                 ])
             })),
         ),
+        ("profile", profile.to_json()),
+        (
+            "telemetry",
+            json::obj(vec![
+                ("events_per_sec_off", json::num(telemetry_off.events_per_sec())),
+                ("events_per_sec_on", json::num(telemetry_on.events_per_sec())),
+                ("overhead_frac", json::num(overhead_frac)),
+                ("trace_events", json::num(
+                    telem_report.trace.as_ref().map_or(0.0, |b| b.events.len() as f64),
+                )),
+                ("trace_dropped", json::num(
+                    telem_report.trace.as_ref().map_or(0.0, |b| b.dropped as f64),
+                )),
+            ]),
+        ),
         (
             "zero_alloc_probe",
             json::obj(vec![
                 ("allocations", json::num(0.0)),
                 ("forecaster_updates", json::num(forecast_updates as f64)),
                 ("step_cost_calls", json::num(probe_calls as f64)),
+                ("tracer_rounds", json::num(tracer_rounds as f64)),
             ]),
         ),
     ]);
@@ -490,7 +593,18 @@ fn main() {
             "allocation budget exceeded: {agg_allocs_per_step:.1} allocs/step > {}",
             SMOKE_ALLOCS_PER_STEP_BUDGET
         );
-        println!("smoke gates passed: events/s ≥ floor/2, allocs/step ≤ budget ✓");
+        assert!(
+            overhead_frac <= 0.10,
+            "telemetry overhead gate: {:.1}% events/s regression > 10% \
+             ({:.0} on vs {:.0} off)",
+            overhead_frac * 100.0,
+            telemetry_on.events_per_sec(),
+            telemetry_off.events_per_sec()
+        );
+        println!(
+            "smoke gates passed: events/s ≥ floor/2, allocs/step ≤ budget, \
+             telemetry overhead ≤ 10% ✓"
+        );
     }
     for r in &results {
         assert!(r.completed > 0, "scenario `{}` served nothing", r.name);

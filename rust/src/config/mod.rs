@@ -12,14 +12,19 @@ use crate::util::json::Json;
 /// Which serving policy to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Policy {
+    /// HFT-like static baseline: fixed replicas, no dynamic scaling.
     Hft,
+    /// vLLM-like baseline: continuous batching, instance-granular scaling.
     VllmLike,
+    /// The paper's system: module-granular replication and migration.
     CoCoServe,
     /// CoCoServe with auto-scaling disabled (ablation).
     CoCoNoScale,
 }
 
 impl Policy {
+    /// Parse a policy name as accepted by `--policy` (case-insensitive;
+    /// `vllm`/`vllm-like` and `coco`/`cocoserve` are aliases).
     pub fn parse(s: &str) -> Result<Policy> {
         match s.to_ascii_lowercase().as_str() {
             "hft" => Ok(Policy::Hft),
@@ -30,6 +35,7 @@ impl Policy {
         }
     }
 
+    /// Canonical display name (the form `--policy` echoes back).
     pub fn name(&self) -> &'static str {
         match self {
             Policy::Hft => "hft",
@@ -39,6 +45,7 @@ impl Policy {
         }
     }
 
+    /// Materialize the simulator policy bundle for this baseline.
     pub fn sim_policy(&self, max_batch: usize) -> crate::sim::SimPolicy {
         match self {
             Policy::Hft => crate::baselines::hft(max_batch),
@@ -52,19 +59,33 @@ impl Policy {
 /// A launcher run description.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
-    /// "serve" (real tiny model) or "sim" (paper-scale simulator).
+    /// "serve" (real tiny model), "sim" (paper-scale simulator) or
+    /// "trace" (sim with telemetry on, exporting a Perfetto trace).
     pub mode: String,
+    /// Serving policy under test.
     pub policy: Policy,
     /// Simulated model config ("llama2-13b" / "llama2-70b") or the real
     /// config to serve ("tiny-llama").
     pub model: String,
+    /// Mean arrival rate in requests per second.
     pub rps: f64,
+    /// Trace duration in simulated (or wall, for `serve`) seconds.
     pub duration_s: f64,
+    /// Continuous-batching batch-size cap.
     pub max_batch: usize,
+    /// Number of serving instances to deploy.
     pub instances: usize,
+    /// Number of devices in the cluster.
     pub devices: usize,
+    /// RNG seed for workload generation (and everything downstream).
     pub seed: u64,
+    /// AOT artifact directory for `serve`/`inspect` (default: `artifacts/`).
     pub artifacts_dir: Option<String>,
+    /// Traffic scenario for the `trace` command
+    /// (steady|diurnal|burst|ramp|two_tenant).
+    pub scenario: String,
+    /// Output path for exported files (the `trace` command's JSON).
+    pub out: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -80,11 +101,14 @@ impl Default for RunConfig {
             devices: 4,
             seed: 42,
             artifacts_dir: None,
+            scenario: "steady".into(),
+            out: None,
         }
     }
 }
 
 impl RunConfig {
+    /// Build a config from a parsed JSON object; unknown keys are errors.
     pub fn from_json(j: &Json) -> Result<RunConfig> {
         let mut c = RunConfig::default();
         let obj = j.as_obj().context("config must be an object")?;
@@ -102,12 +126,15 @@ impl RunConfig {
                 "artifacts_dir" => {
                     c.artifacts_dir = Some(v.as_str().context("artifacts_dir")?.to_string())
                 }
+                "scenario" => c.scenario = v.as_str().context("scenario")?.to_string(),
+                "out" => c.out = Some(v.as_str().context("out")?.to_string()),
                 other => return Err(anyhow!("unknown config key `{other}`")),
             }
         }
         Ok(c)
     }
 
+    /// Load a config from a JSON file on disk.
     pub fn load(path: &str) -> Result<RunConfig> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading config {path}"))?;
@@ -128,6 +155,8 @@ impl RunConfig {
             "devices" => self.devices = value.parse().context("devices")?,
             "seed" => self.seed = value.parse().context("seed")?,
             "artifacts-dir" => self.artifacts_dir = Some(value.to_string()),
+            "scenario" => self.scenario = value.to_string(),
+            "out" => self.out = Some(value.to_string()),
             other => return Err(anyhow!("unknown flag --{other}")),
         }
         Ok(())
@@ -176,6 +205,21 @@ mod tests {
         assert_eq!(c.rps, 33.5);
         assert_eq!(c.max_batch, 4);
         assert!(c.set("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn trace_keys_roundtrip() {
+        let j = Json::parse(r#"{"scenario":"burst","out":"t.json"}"#).unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.scenario, "burst");
+        assert_eq!(c.out.as_deref(), Some("t.json"));
+        let mut c = RunConfig::default();
+        assert_eq!(c.scenario, "steady");
+        assert!(c.out.is_none());
+        c.set("scenario", "ramp").unwrap();
+        c.set("out", "x.json").unwrap();
+        assert_eq!(c.scenario, "ramp");
+        assert_eq!(c.out.as_deref(), Some("x.json"));
     }
 
     #[test]

@@ -37,7 +37,9 @@ pub enum LayerExec {
 /// One sequence being served.
 #[derive(Debug, Clone)]
 pub struct SeqState {
+    /// Request id (the scheduler's key for this sequence).
     pub id: u64,
+    /// Prompt tokens followed by everything generated so far.
     pub tokens: Vec<i32>,
     /// Tokens currently in the KV cache.
     pub kv_len: usize,
@@ -55,10 +57,15 @@ impl SeqState {
 
 /// The engine over one model config's artifacts.
 pub struct TinyEngine {
+    /// PJRT client + loaded AOT executables.
     pub pjrt: PjrtEngine,
+    /// Host-resident weight tensors for the active config.
     pub weights: WeightStore,
+    /// The model config being served.
     pub cfg: ModelConfig,
+    /// Maximum sequence length the artifacts were compiled for.
     pub max_seq: usize,
+    /// Fused vs split layer execution (see [`LayerExec`]).
     pub exec: LayerExec,
     name: String,
     /// Weight literals cached per tensor name (perf pass #1: building a
@@ -71,6 +78,7 @@ pub struct TinyEngine {
 }
 
 impl TinyEngine {
+    /// Open the artifact directory and load weights for `config`.
     pub fn open(artifacts_dir: &std::path::Path, config: &str) -> Result<TinyEngine> {
         let pjrt = PjrtEngine::open(artifacts_dir)?;
         let weights = WeightStore::load(artifacts_dir, pjrt.manifest(), config)?;
@@ -97,6 +105,7 @@ impl TinyEngine {
         self.pjrt.manifest()
     }
 
+    /// Allocate a sequence with empty KV caches for `prompt`.
     pub fn new_sequence(&self, id: u64, prompt: &[i32]) -> SeqState {
         let per_layer = self.cfg.n_heads * self.max_seq * self.cfg.head_dim();
         SeqState {

@@ -7,6 +7,10 @@
 //! cocoserve serve [--rps N] [--duration S] [--max-batch N] [--seed N]
 //!                 [--artifacts-dir DIR]       # real tiny model on CPU PJRT
 //! cocoserve inspect [--artifacts-dir DIR]     # artifact/manifest summary
+//! cocoserve trace [--scenario steady|diurnal|burst|ramp|two_tenant]
+//!                 [--out trace.json] [...sim flags]
+//!                                             # telemetry-on sim run that
+//!                                             # exports a Perfetto trace
 //! ```
 
 use anyhow::{anyhow, Context, Result};
@@ -69,11 +73,16 @@ fn run() -> Result<()> {
             cmd_serve(&cfg)
         }
         "inspect" => cmd_inspect(&parse_args(&args[1..])?),
+        "trace" => {
+            let mut cfg = parse_args(&args[1..])?;
+            cfg.mode = "trace".into();
+            cmd_trace(&cfg)
+        }
         "--help" | "-h" | "help" => {
             println!("{}", HELP);
             Ok(())
         }
-        other => Err(anyhow!("unknown command `{other}` (sim|serve|inspect)")),
+        other => Err(anyhow!("unknown command `{other}` (sim|serve|inspect|trace)")),
     }
 }
 
@@ -83,13 +92,17 @@ commands:
   sim      paper-scale discrete-event simulation (13B/70B over 4xA100 specs)
   serve    serve the real tiny model end-to-end on CPU PJRT
   inspect  summarize the AOT artifact directory
+  trace    sim run with telemetry on; exports a Chrome/Perfetto trace JSON
+           (open the file at https://ui.perfetto.dev)
 
 common flags: --policy hft|vllm|coco|coco-noscale  --rps N  --duration S
               --max-batch N  --instances N  --devices N  --seed N
               --model llama2-13b|llama2-70b (sim)  --config file.json
-              --artifacts-dir DIR (serve/inspect)";
+              --artifacts-dir DIR (serve/inspect)
+              --scenario steady|diurnal|burst|ramp|two_tenant (trace)
+              --out trace.json (trace)";
 
-fn cmd_sim(cfg: &RunConfig) -> Result<()> {
+fn sim_setup(cfg: &RunConfig) -> Result<(SimConfig, Cluster, Vec<(Placement, cocoserve::sim::SimPolicy)>)> {
     let sim_cfg = match cfg.model.as_str() {
         "llama2-13b" => SimConfig::paper_13b(),
         "llama2-70b" => SimConfig::paper_70b(),
@@ -112,6 +125,11 @@ fn cmd_sim(cfg: &RunConfig) -> Result<()> {
         };
         placements.push((placement, cfg.policy.sim_policy(cfg.max_batch)));
     }
+    Ok((sim_cfg, cluster, placements))
+}
+
+fn cmd_sim(cfg: &RunConfig) -> Result<()> {
+    let (sim_cfg, cluster, placements) = sim_setup(cfg)?;
     let sim = Simulation::new(sim_cfg, cluster, placements);
     let trace = Trace::generate(
         Arrival::Poisson { rps: cfg.rps },
@@ -138,6 +156,51 @@ fn cmd_sim(cfg: &RunConfig) -> Result<()> {
     for (d, util, mem) in &report.device_util {
         println!("device {d}         : util {:.0}% · mem {:.0}%", util * 100.0, mem * 100.0);
     }
+    Ok(())
+}
+
+fn cmd_trace(cfg: &RunConfig) -> Result<()> {
+    let (mut sim_cfg, cluster, placements) = sim_setup(cfg)?;
+    sim_cfg.telemetry = Some(cocoserve::telemetry::TelemetryConfig::default());
+    let sim = Simulation::new(sim_cfg, cluster, placements);
+    let trace = match cfg.scenario.as_str() {
+        "steady" => Trace::steady(cfg.rps, cfg.duration_s, cfg.seed),
+        "diurnal" => Trace::diurnal(cfg.rps, cfg.duration_s, cfg.seed),
+        "burst" => Trace::burst(cfg.rps, cfg.duration_s, cfg.seed),
+        "ramp" => Trace::ramp(cfg.rps, cfg.duration_s, cfg.seed),
+        "two_tenant" | "two-tenant" => Trace::two_tenant(cfg.rps, cfg.duration_s, cfg.seed),
+        other => {
+            return Err(anyhow!(
+                "unknown scenario `{other}` (steady|diurnal|burst|ramp|two_tenant)"
+            ))
+        }
+    };
+    println!(
+        "trace: {} · {} · scenario {} · {} instance(s) on {} device(s) · {:.0}s · {} requests",
+        cfg.policy.name(), cfg.model, cfg.scenario, cfg.instances, cfg.devices,
+        cfg.duration_s, trace.len()
+    );
+    let report = sim.run(&trace, cfg.duration_s);
+    let out = cfg.out.as_deref().unwrap_or("trace.json");
+    let chrome = report
+        .chrome_trace()
+        .ok_or_else(|| anyhow!("telemetry produced no trace buffer"))?;
+    std::fs::write(out, chrome.to_string())
+        .with_context(|| format!("writing {out}"))?;
+    println!("completed        : {}", report.total_completed());
+    if let Some(tl) = &report.timeline {
+        println!(
+            "timeline         : {} windows x {:.1}s",
+            tl.windows.len(), tl.window_s
+        );
+    }
+    if let Some(buf) = &report.trace {
+        println!(
+            "trace events     : {} recorded · {} dropped",
+            buf.events.len(), buf.dropped
+        );
+    }
+    println!("wrote {out} — open it at https://ui.perfetto.dev");
     Ok(())
 }
 

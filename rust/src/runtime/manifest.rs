@@ -12,6 +12,7 @@ use crate::util::json::Json;
 /// One lowered HLO artifact.
 #[derive(Debug, Clone)]
 pub struct ArtifactEntry {
+    /// Unique artifact key: `config__module__b{B}[_s{S}]`.
     pub name: String,
     /// Path relative to the artifacts root.
     pub path: String,
@@ -19,33 +20,45 @@ pub struct ArtifactEntry {
     pub module: String,
     /// "prefill" | "decode".
     pub phase: String,
+    /// Model config this artifact was lowered for.
     pub config: String,
+    /// Batch bucket the shapes were fixed at.
     pub batch: usize,
+    /// Sequence bucket (0 for decode artifacts).
     pub seq: usize,
     /// Argument shapes (for validation).
     pub arg_shapes: Vec<Vec<usize>>,
+    /// Names of the tuple outputs, in order.
     pub outputs: Vec<String>,
 }
 
 /// A weight tensor dump.
 #[derive(Debug, Clone)]
 pub struct WeightEntry {
+    /// Path relative to the artifacts root.
     pub path: String,
+    /// Tensor dimensions.
     pub shape: Vec<usize>,
 }
 
 /// Parsed manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Batch-size buckets artifacts were compiled at (ascending).
     pub batch_buckets: Vec<usize>,
+    /// Sequence-length buckets (ascending).
     pub seq_buckets: Vec<usize>,
+    /// KV-cache capacity artifacts were compiled for.
     pub max_seq_len: usize,
+    /// Model configs by name.
     pub configs: BTreeMap<String, ModelConfig>,
+    /// config name → tensor name → weight dump.
     pub weights: BTreeMap<String, BTreeMap<String, WeightEntry>>,
     artifacts: BTreeMap<String, ArtifactEntry>,
 }
 
 impl Manifest {
+    /// Load and parse `manifest.json`.
     pub fn load(path: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
@@ -53,6 +66,7 @@ impl Manifest {
         Manifest::from_json(&j)
     }
 
+    /// Parse an already-loaded manifest document (format 1, hlo-text).
     pub fn from_json(j: &Json) -> Result<Manifest> {
         anyhow::ensure!(
             j.req("format").as_u64() == Some(1),
@@ -138,10 +152,12 @@ impl Manifest {
         })
     }
 
+    /// Look up an artifact by its full name.
     pub fn artifact(&self, name: &str) -> Option<&ArtifactEntry> {
         self.artifacts.get(name)
     }
 
+    /// All artifacts, in name order.
     pub fn artifacts(&self) -> impl Iterator<Item = &ArtifactEntry> {
         self.artifacts.values()
     }
@@ -151,6 +167,7 @@ impl Manifest {
         self.batch_buckets.iter().copied().find(|&b| b >= n)
     }
 
+    /// Smallest sequence bucket ≥ n (None past the largest bucket).
     pub fn seq_bucket(&self, n: usize) -> Option<usize> {
         self.seq_buckets.iter().copied().find(|&s| s >= n)
     }

@@ -47,14 +47,17 @@ impl PjrtEngine {
         })
     }
 
+    /// The loaded artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// Total artifact executions so far (perf accounting).
     pub fn executions(&self) -> u64 {
         *self.exec_count.borrow()
     }
 
+    /// Number of artifacts compiled so far (they compile on first use).
     pub fn compiled_count(&self) -> usize {
         self.compiled.borrow().len()
     }

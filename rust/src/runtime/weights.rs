@@ -20,15 +20,19 @@ pub const LAYER_WEIGHT_NAMES: [&str; 9] = [
 /// One tensor (host-resident f32, row-major).
 #[derive(Debug, Clone)]
 pub struct Tensor {
+    /// Dimensions, outermost first.
     pub shape: Vec<usize>,
+    /// Row-major element data.
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// Element count.
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
 
+    /// Resident bytes (f32).
     pub fn bytes(&self) -> usize {
         self.numel() * 4
     }
@@ -38,6 +42,7 @@ impl Tensor {
 /// (`layer{i}.{name}`, `emb`, `w_out`, `rms_f`).
 #[derive(Debug)]
 pub struct WeightStore {
+    /// Model config these weights belong to.
     pub config: String,
     tensors: BTreeMap<String, Tensor>,
     n_layers: usize,
@@ -79,10 +84,12 @@ impl WeightStore {
         Ok(WeightStore { config: config.to_string(), tensors, n_layers })
     }
 
+    /// Layer count of the loaded config.
     pub fn n_layers(&self) -> usize {
         self.n_layers
     }
 
+    /// Look up a tensor by its manifest key.
     pub fn get(&self, name: &str) -> Result<&Tensor> {
         self.tensors
             .get(name)

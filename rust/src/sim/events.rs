@@ -67,6 +67,30 @@ pub enum EventKind {
 }
 
 impl EventKind {
+    /// Number of event kinds — the size of per-kind histogram tables
+    /// (see [`crate::telemetry::profiler::KernelProfiler`]).
+    pub const N_SLOTS: usize = 9;
+
+    /// Display names indexed by [`EventKind::slot`], in priority order.
+    pub const SLOT_NAMES: [&'static str; EventKind::N_SLOTS] = [
+        "Arrival",
+        "Routed",
+        "ForecastTick",
+        "ControllerTick",
+        "DeviceFailed",
+        "OpCompleted",
+        "OpStarted",
+        "StepComplete",
+        "Wake",
+    ];
+
+    /// Dense per-kind index (`0..N_SLOTS`), equal to the kind's
+    /// same-time precedence. Used by the kernel self-profiler to bucket
+    /// dispatch wall-time and allocations per event kind.
+    pub fn slot(&self) -> usize {
+        self.priority() as usize
+    }
+
     /// Precedence among same-time events (lower pops first).
     fn priority(&self) -> u8 {
         match self {

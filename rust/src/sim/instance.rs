@@ -85,6 +85,9 @@ pub(crate) struct Shed {
     /// SLO class the request entered the system with — preserved across
     /// every re-route so class-aware policies keep honoring it.
     pub class: crate::workload::SloClass,
+    /// Why the request was shed (telemetry: distinguishes OOM sheds from
+    /// SLO preemptions and failure-domain evacuations in the trace).
+    pub cause: crate::telemetry::ShedCause,
 }
 
 /// A plan being executed op-by-op by the event kernel.
@@ -206,6 +209,19 @@ pub(crate) struct Instance {
     pub reroute_shed: bool,
     /// Requests shed since the kernel last collected them.
     pub shed_outbox: Vec<Shed>,
+    /// Telemetry enabled for this run (cached from `SimConfig` at
+    /// deploy). Gates every `trace_outbox` push so telemetry-off runs
+    /// allocate nothing and stay byte-identical.
+    pub trace_enabled: bool,
+    /// Trace events recorded on paths deep inside the instance (OOM
+    /// episodes, governor decisions) since the kernel last drained them
+    /// — the telemetry twin of `shed_outbox`.
+    pub trace_outbox: Vec<crate::telemetry::TraceEvent>,
+    /// Shape of the step most recently started — `(batch, is_decode)` —
+    /// so the kernel can record the step span without threading the
+    /// tracer through `start_step`. Set unconditionally (two word
+    /// stores; telemetry-off runs just never read it).
+    pub last_step_shape: (usize, bool),
     /// Allow a waiting latency-sensitive request to preempt an
     /// all-best-effort running batch at the next token boundary (set by
     /// the kernel only under a class-aware routing policy; always false
@@ -291,6 +307,9 @@ impl Instance {
             active_after: 0.0,
             reroute_shed: false,
             shed_outbox: Vec::new(),
+            trace_enabled: cfg.telemetry.is_some(),
+            trace_outbox: Vec::new(),
+            last_step_shape: (0, false),
             preempt_premium: false,
             preemptions: 0,
             requests: Default::default(),
@@ -407,6 +426,7 @@ impl Instance {
                     output_tokens: o,
                     penalty,
                     class,
+                    cause: crate::telemetry::ShedCause::Failure,
                 });
             }
         }
@@ -717,7 +737,18 @@ impl Instance {
         scale: &mut ScaleStats,
         cause: PressureCause,
     ) {
-        if self.governor.is_some() && self.mempress_relieve(cluster, cause) {
+        if self.trace_enabled {
+            self.trace_outbox.push(crate::telemetry::TraceEvent::Mark {
+                t: ctx.now,
+                instance: self.id as i64,
+                kind: crate::telemetry::MarkKind::OomEpisode,
+                value: match cause {
+                    PressureCause::PoolExhausted { deficit } => deficit,
+                    PressureCause::LedgerMirror => 0.0,
+                },
+            });
+        }
+        if self.governor.is_some() && self.mempress_relieve(ctx.now, cluster, cause) {
             return;
         }
         match self.policy.oom {
@@ -746,6 +777,7 @@ impl Instance {
                                 output_tokens: o,
                                 penalty: carried,
                                 class,
+                                cause: crate::telemetry::ShedCause::Oom,
                             });
                         }
                         continue;
@@ -863,28 +895,38 @@ impl Instance {
     /// Walk the governor's escalation ladder for one OOM episode. Returns
     /// true when the episode is handled — relief enacted, or pending in
     /// flight — and the caller must skip the policy shed.
-    fn mempress_relieve(&mut self, cluster: &mut Cluster, cause: PressureCause) -> bool {
+    fn mempress_relieve(
+        &mut self,
+        now: f64,
+        cluster: &mut Cluster,
+        cause: PressureCause,
+    ) -> bool {
         let view = self.pressure_view(cluster);
         let relief =
             self.governor.as_mut().expect("governed instance").decide(cause, &view);
-        match relief {
+        let pressure = match cause {
+            PressureCause::PoolExhausted { deficit } => deficit,
+            PressureCause::LedgerMirror => 0.0,
+        };
+        let (handled, action, value) = match relief {
             Relief::GrowPool { grant } => {
                 let target = self.kv.pool_bytes() + grant;
                 let _ = self.kv.resize(target); // growing always succeeds
                 let _ = self.sync_kv(cluster); // mirror the larger grant
-                true
+                (true, crate::telemetry::DecisionAction::GrowPool, grant)
             }
             Relief::ShrinkPool { to } => {
                 // cannot fail: `to` is the snapshot's live reservation and
                 // nothing allocated since (same call stack)
                 let _ = self.kv.resize(to);
                 let _ = self.sync_kv(cluster); // release waste to the ledger
-                true
+                (true, crate::telemetry::DecisionAction::ShrinkPool, to)
             }
             Relief::RequestSwaps { layers } => {
                 // park the plan for the kernel to admit as in-flight
                 // `OpStarted`/`OpCompleted` events — handle_oom has no
                 // event-queue access, and swaps take real transfer time
+                let n = layers.len();
                 let mut plan = ScalePlan::new();
                 for l in layers {
                     plan.push(ModuleOp::SwapPrecision {
@@ -895,11 +937,32 @@ impl Instance {
                     });
                 }
                 self.governor.as_mut().expect("governed instance").park_swap(plan);
-                true
+                (true, crate::telemetry::DecisionAction::RequestSwaps, n as f64)
             }
-            Relief::Wait => true,
-            Relief::Escalate => false,
+            Relief::Wait => (true, crate::telemetry::DecisionAction::Wait, 0.0),
+            Relief::Escalate => (false, crate::telemetry::DecisionAction::Escalate, 0.0),
+        };
+        if self.trace_enabled {
+            self.trace_outbox.push(crate::telemetry::TraceEvent::Decision {
+                t: now,
+                actor: crate::telemetry::DecisionActor::Mempress,
+                action,
+                instance: self.id as i64,
+                pressure,
+                deficit: 0.0,
+                chosen_cost: value,
+                rejected_cost: -1.0,
+            });
+            if handled {
+                self.trace_outbox.push(crate::telemetry::TraceEvent::Mark {
+                    t: now,
+                    instance: self.id as i64,
+                    kind: crate::telemetry::MarkKind::MempressRelief,
+                    value,
+                });
+            }
         }
+        handled
     }
 
     /// A rollback undid the applied prefix of a plan: restore the
@@ -1228,6 +1291,7 @@ impl Instance {
                 dt *= contention;
                 self.charge_busy(cluster, dt); // prefill is compute-bound: full busy
                 self.scheduler.on_prefilled(&request_ids);
+                self.last_step_shape = (batch, false);
                 self.begin_busy(ctx.now + dt)
             }
             Step::Decode { request_ids } => {
@@ -1286,6 +1350,7 @@ impl Instance {
                 // utilization reports — the Fig. 2 signal).
                 self.charge_busy(cluster, dt * DECODE_BUSY_FRACTION);
                 self.scheduler.on_decoded(&request_ids);
+                self.last_step_shape = (batch, true);
                 self.begin_busy(ctx.now + dt)
             }
         }
@@ -1330,6 +1395,7 @@ impl Instance {
                     output_tokens: o,
                     penalty,
                     class,
+                    cause: crate::telemetry::ShedCause::SloPreempt,
                 });
             }
         }

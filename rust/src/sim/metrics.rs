@@ -184,6 +184,21 @@ pub struct SimReport {
     /// at all, keeping classless documents byte-identical to the
     /// pre-class kernel (same additive-key discipline as `audit`).
     pub slo: Option<SloBlock>,
+    /// Streaming per-window telemetry timeline. `None` unless
+    /// [`crate::sim::SimConfig::telemetry`] configured a window — and
+    /// then the metrics JSON carries no `timeline` key at all, keeping
+    /// telemetry-off documents byte-identical to the pre-telemetry
+    /// kernel (same additive-key discipline as `forecast`).
+    pub timeline: Option<crate::telemetry::TimelineBlock>,
+    /// Recorded span buffer (`None` with telemetry off). Deliberately
+    /// NOT part of [`SimReport::to_json`] — the trace exports through
+    /// [`SimReport::chrome_trace`] as its own Perfetto-loadable file,
+    /// never into the golden metrics document.
+    pub trace: Option<crate::telemetry::TraceBuffer>,
+    /// Kernel self-profile (per-event-kind wall-time/alloc histogram).
+    /// Also excluded from the golden JSON — wall-clock must never enter
+    /// the replayed surface; `BENCH_fleet.json` is its home.
+    pub profile: Option<crate::telemetry::profiler::KernelProfile>,
 }
 
 impl SimReport {
@@ -408,7 +423,21 @@ impl SimReport {
                 ]),
             ));
         }
+        // and for the telemetry timeline: telemetry off (or windowing
+        // disabled), no `timeline` key, byte-identical pre-telemetry
+        // documents. The span trace and kernel profile never appear
+        // here at all — see the field docs.
+        if let Some(t) = &self.timeline {
+            pairs.push(("timeline", t.to_json()));
+        }
         json::obj(pairs)
+    }
+
+    /// Render the recorded span buffer as Chrome trace-event JSON
+    /// (`None` when telemetry was off). Load the serialized value in
+    /// [ui.perfetto.dev](https://ui.perfetto.dev) or `chrome://tracing`.
+    pub fn chrome_trace(&self) -> Option<Json> {
+        self.trace.as_ref().map(crate::telemetry::export::chrome_trace)
     }
 }
 
@@ -463,6 +492,9 @@ mod tests {
             mempress: None,
             audit: None,
             slo: None,
+            timeline: None,
+            trace: None,
+            profile: None,
         }
     }
 
@@ -636,6 +668,52 @@ mod tests {
         let base = Json::parse(&without).unwrap();
         assert_eq!(base.req("completed"), parsed.req("completed"));
         assert_eq!(base.req("slo_attainment"), parsed.req("slo_attainment"));
+    }
+
+    #[test]
+    fn timeline_is_strictly_additive() {
+        let without = tiny_report().to_json().to_string();
+        assert!(
+            !without.contains("\"timeline\":"),
+            "telemetry off → no timeline key: {without}"
+        );
+        let mut r = tiny_report();
+        r.timeline = Some(crate::telemetry::TimelineBlock {
+            window_s: 1.0,
+            windows: vec![crate::telemetry::TimelineWindow {
+                t_s: 1.0,
+                arrivals: 3,
+                completions: 2,
+                sheds: 1,
+                outstanding: 4,
+                p50_s: 0.25,
+                p99_s: 0.5,
+                device_seconds: 8.0,
+                busy_frac: 0.75,
+            }],
+        });
+        let with = r.to_json().to_string();
+        let parsed = Json::parse(&with).unwrap();
+        let t = parsed.req("timeline");
+        assert_eq!(t.req("window_s").as_f64(), Some(1.0));
+        let ws = t.req("windows").as_arr().unwrap();
+        assert_eq!(ws.len(), 1);
+        assert_eq!(ws[0].req("arrivals").as_usize(), Some(3));
+        assert_eq!(ws[0].req("busy_frac").as_f64(), Some(0.75));
+        // two renders are byte-identical
+        assert_eq!(with, r.to_json().to_string());
+        // everything else is unchanged
+        let base = Json::parse(&without).unwrap();
+        assert_eq!(base.req("completed"), parsed.req("completed"));
+        // the span trace and kernel profile never reach the document
+        let mut r = tiny_report();
+        r.trace = Some(crate::telemetry::TraceBuffer {
+            events: vec![],
+            dropped: 0,
+            n_instances: 0,
+        });
+        r.profile = Some(Default::default());
+        assert_eq!(r.to_json().to_string(), without);
     }
 
     #[test]

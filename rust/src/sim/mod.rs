@@ -80,6 +80,9 @@ use crate::ops::ModuleOps;
 use crate::placement::{Placement, PlacementProfile};
 use crate::plan::{PlanCost, ScalePlan};
 use crate::scheduler::SchedulerConfig;
+use crate::telemetry::{
+    DecisionAction, DecisionActor, MarkKind, OpSpanPhase, ReqPhase,
+};
 use crate::workload::{FailureSchedule, Request, Trace};
 
 use events::{Event, EventKind, EventQueue, EventSink, ShardedEventQueue};
@@ -197,6 +200,14 @@ pub struct SimConfig {
     /// (grow/shrink pool → int8 layer swaps → wait → shed) before any
     /// request is shed.
     pub mempress: Option<MempressConfig>,
+    /// Deterministic tracing & telemetry (None = off — the kernel
+    /// records nothing, instances push nothing, and every golden metrics
+    /// document stays byte-identical to the pre-telemetry kernel; see
+    /// `rust/tests/telemetry.rs`). Some = request/op/step spans, decision
+    /// records and the streaming timeline are recorded in simulation
+    /// time, so the exported trace replays byte-identically across runs
+    /// and shard counts.
+    pub telemetry: Option<crate::telemetry::TelemetryConfig>,
 }
 
 impl SimConfig {
@@ -221,6 +232,7 @@ impl SimConfig {
             replica_budget: 12,
             shards: 1,
             mempress: None,
+            telemetry: None,
         }
     }
 
@@ -287,6 +299,9 @@ pub struct Simulation {
     events_processed: u64,
     /// Serving steps started (prefill + decode) across the fleet.
     steps_started: u64,
+    /// Deterministic span/decision/timeline recorder (disabled — and
+    /// free — unless `SimConfig::telemetry` is set).
+    tracer: crate::telemetry::Tracer,
 }
 
 impl Simulation {
@@ -353,6 +368,7 @@ impl Simulation {
             );
             PredictiveController::new(pc, cap)
         });
+        let tracer = crate::telemetry::Tracer::new(cfg.telemetry.as_ref());
         Simulation {
             cfg,
             cluster,
@@ -372,6 +388,7 @@ impl Simulation {
             peak_mem: 0.0,
             events_processed: 0,
             steps_started: 0,
+            tracer,
         }
     }
 
@@ -447,9 +464,13 @@ impl Simulation {
                 self.router.routes += 1;
                 self.router.class_routes[Router::class_idx(req.class)] += 1;
                 self.instances[i].outstanding_routes += 1;
+                self.tracer.req(self.now, req.id, i as i64, ReqPhase::Routed);
                 q.push(self.now, EventKind::Routed { request_idx, instance: i });
             }
-            None => self.router.park(req, 0.0, false),
+            None => {
+                self.tracer.req(self.now, req.id, -1, ReqPhase::Parked);
+                self.router.park(req, 0.0, false);
+            }
         }
     }
 
@@ -478,14 +499,23 @@ impl Simulation {
                     output_tokens: s.output_tokens,
                     class: s.class,
                 };
+                let phase = match s.cause {
+                    crate::telemetry::ShedCause::SloPreempt => ReqPhase::Preempted,
+                    _ => ReqPhase::Shed,
+                };
+                self.tracer.req(self.now, req.id, i as i64, phase);
                 let mut cands = self.route_candidates();
                 cands[i].accepting = false;
                 match self.router.pick(&cands, req.class) {
                     Some(j) => {
                         self.router.reroutes += 1;
+                        self.tracer.req(self.now, req.id, j as i64, ReqPhase::Rerouted);
                         self.instances[j].deliver(req, s.penalty);
                     }
-                    None => self.router.park(req, s.penalty, true),
+                    None => {
+                        self.tracer.req(self.now, req.id, -1, ReqPhase::Parked);
+                        self.router.park(req, s.penalty, true);
+                    }
                 }
             }
         }
@@ -502,6 +532,12 @@ impl Simulation {
             let cands = self.route_candidates();
             let Some(i) = self.router.pick(&cands, parked.req.class) else { break };
             let parked = self.router.take_parked(idx);
+            self.tracer.req(
+                self.now,
+                parked.req.id,
+                i as i64,
+                if parked.reroute { ReqPhase::Rerouted } else { ReqPhase::Admitted },
+            );
             if parked.reroute {
                 self.router.reroutes += 1;
             } else {
@@ -583,6 +619,7 @@ impl Simulation {
             Some(device),
             format!("lost_bytes={lost:.0} holders={holders}"),
         );
+        self.tracer.mark(self.now, -1, MarkKind::DeviceFailed, device as f64);
         for i in 0..self.instances.len() {
             if self.instances[i].lifecycle == Lifecycle::Retired {
                 continue;
@@ -610,6 +647,7 @@ impl Simulation {
                             Some(device),
                             "in-flight plan rolled back (no re-acquire)",
                         );
+                        self.tracer.mark(self.now, i as i64, MarkKind::Rollback, device as f64);
                     }
                     for l in replicas_dropped {
                         self.audit_push(
@@ -652,6 +690,7 @@ impl Simulation {
                             Some(device),
                             "in-flight plan rolled back (no re-acquire)",
                         );
+                        self.tracer.mark(self.now, i as i64, MarkKind::Rollback, device as f64);
                     }
                     if shed > 0 {
                         self.audit_push(
@@ -793,6 +832,7 @@ impl Simulation {
                     self.ledger.release(d);
                 }
                 self.bill_cache[i] = (self.instances[i].placement_rev, Vec::new());
+                self.tracer.mark(self.now, i as i64, MarkKind::Release, 0.0);
                 self.fleet_events.push(FleetEvent {
                     t: self.now,
                     instance: i,
@@ -840,12 +880,22 @@ impl Simulation {
         };
         match pressure {
             FleetPressure::Hold => {
+                self.tracer.decision(
+                    self.now,
+                    DecisionActor::Fleet,
+                    DecisionAction::Hold,
+                    -1,
+                    inputs.mean_outstanding(),
+                    0.0,
+                    -1.0,
+                    -1.0,
+                );
                 if !was_cooling {
                     self.predictive_tick(&inputs, q);
                 }
             }
-            FleetPressure::ScaleOut => self.fleet_scale_out(q),
-            FleetPressure::ScaleIn => self.fleet_scale_in(),
+            FleetPressure::ScaleOut => self.fleet_scale_out(&inputs, q),
+            FleetPressure::ScaleIn => self.fleet_scale_in(&inputs),
         }
     }
 
@@ -854,7 +904,7 @@ impl Simulation {
     /// predictor says its capacity is needed again within the drain
     /// horizon (a cold start plus margin — what re-acquiring the
     /// capacity would cost).
-    fn fleet_scale_in(&mut self) {
+    fn fleet_scale_in(&mut self, inputs: &FleetInputs) {
         let cand = self
             .instances
             .iter()
@@ -870,6 +920,16 @@ impl Simulation {
             let after = self.capacity_equivalents_at(horizon, Some(i));
             if self.predictive.as_ref().expect("predictor").block_drain(after, horizon) {
                 self.predictive.as_mut().expect("predictor").stats.drain_vetoes += 1;
+                self.tracer.decision(
+                    self.now,
+                    DecisionActor::Predictive,
+                    DecisionAction::DrainVetoed,
+                    i as i64,
+                    inputs.mean_outstanding(),
+                    self.predictive.as_ref().expect("predictor").deficit_at(horizon, after),
+                    -1.0,
+                    -1.0,
+                );
                 // the drain never happened: hand the reactive cooldown
                 // back so the veto of a no-op cannot suppress the very
                 // predictive provisioning the forecast calls for
@@ -878,6 +938,17 @@ impl Simulation {
             }
         }
         self.instances[i].lifecycle = Lifecycle::Draining;
+        self.tracer.decision(
+            self.now,
+            DecisionActor::Fleet,
+            DecisionAction::DrainInstance,
+            i as i64,
+            inputs.mean_outstanding(),
+            0.0,
+            -1.0,
+            -1.0,
+        );
+        self.tracer.mark(self.now, i as i64, MarkKind::Drain, 0.0);
         self.fleet_events.push(FleetEvent {
             t: self.now,
             instance: i,
@@ -975,6 +1046,16 @@ impl Simulation {
                 deficit_spin.max(deficit_next).max(premium_deficit),
             ) {
                 p.stats.vetoed += 1;
+                self.tracer.decision(
+                    self.now,
+                    DecisionActor::Predictive,
+                    DecisionAction::PredictiveVetoed,
+                    -1,
+                    inputs.mean_outstanding(),
+                    deficit_spin.max(deficit_next).max(premium_deficit),
+                    -1.0,
+                    -1.0,
+                );
                 return;
             }
         }
@@ -991,6 +1072,16 @@ impl Simulation {
                 .deficit_at(h_rep, cap_rep);
             if deficit_rep > 0.0 {
                 self.scale.scale_ups += 1;
+                self.tracer.decision(
+                    self.now,
+                    DecisionActor::Predictive,
+                    DecisionAction::PredictedReplicate,
+                    i as i64,
+                    inputs.mean_outstanding(),
+                    deficit_rep,
+                    h_rep,
+                    fc.cold_start_s,
+                );
                 self.admit(i, up.plan, up.cost, None, q);
                 acted = true;
             }
@@ -1001,6 +1092,16 @@ impl Simulation {
         let spin_floor = self.predictive.as_ref().expect("predictor").cfg.spin_deficit_eq;
         if deficit_spin >= spin_floor && inputs.live < fc.max_instances {
             if let Some(dev) = self.spin_candidate() {
+                self.tracer.decision(
+                    self.now,
+                    DecisionActor::Predictive,
+                    DecisionAction::PredictedSpinUp,
+                    self.instances.len() as i64,
+                    inputs.mean_outstanding(),
+                    deficit_spin,
+                    fc.cold_start_s,
+                    -1.0,
+                );
                 self.spin_up(dev, q);
                 acted = true;
             }
@@ -1012,6 +1113,16 @@ impl Simulation {
             self.predictive.as_ref().expect("predictor").cfg.premium_spin_deficit_eq;
         if !acted && premium_deficit >= premium_floor && inputs.live < fc.max_instances {
             if let Some(dev) = self.spin_candidate() {
+                self.tracer.decision(
+                    self.now,
+                    DecisionActor::Predictive,
+                    DecisionAction::PredictedSpinUp,
+                    self.instances.len() as i64,
+                    inputs.mean_outstanding(),
+                    premium_deficit,
+                    fc.cold_start_s,
+                    -1.0,
+                );
                 self.spin_up(dev, q);
                 acted = true;
             }
@@ -1085,7 +1196,7 @@ impl Simulation {
     /// (same capacity, later). On a homogeneous fleet every factor is
     /// exactly 1.0, so the arbitration inputs are bit-identical to the
     /// unweighted ones.
-    fn fleet_scale_out(&mut self, q: &mut dyn EventSink) {
+    fn fleet_scale_out(&mut self, inputs: &FleetInputs, q: &mut dyn EventSink) {
         let replication = self.replication_option();
         let fc = self.fleet.as_ref().expect("fleet mode").cfg;
         let spin_dev = self.spin_candidate();
@@ -1113,16 +1224,53 @@ impl Simulation {
                 )
             });
         let choice = self.fleet.as_ref().expect("fleet").arbitrate(rep_option, spin_cost);
+        // the arbitration's per-equivalent prices — what the decision
+        // record reports as chosen vs rejected (−1.0 = option unavailable)
+        let rep_price = rep_option
+            .map(|(c, eq)| c / eq.max(1e-9))
+            .unwrap_or(-1.0);
+        let spin_price = spin_cost.unwrap_or(-1.0);
         match choice {
             ScaleOutChoice::Replicate => {
                 let (i, up) = replication.expect("arbitrated option exists");
                 self.scale.scale_ups += 1;
+                self.tracer.decision(
+                    self.now,
+                    DecisionActor::Fleet,
+                    DecisionAction::ScaleOutReplicate,
+                    i as i64,
+                    inputs.mean_outstanding(),
+                    0.0,
+                    rep_price,
+                    spin_price,
+                );
                 self.admit(i, up.plan, up.cost, None, q);
             }
             ScaleOutChoice::SpinUp => {
+                self.tracer.decision(
+                    self.now,
+                    DecisionActor::Fleet,
+                    DecisionAction::ScaleOutSpinUp,
+                    self.instances.len() as i64,
+                    inputs.mean_outstanding(),
+                    0.0,
+                    spin_price,
+                    rep_price,
+                );
                 self.spin_up(spin_dev.expect("arbitrated option exists"), q);
             }
-            ScaleOutChoice::Neither => {}
+            ScaleOutChoice::Neither => {
+                self.tracer.decision(
+                    self.now,
+                    DecisionActor::Fleet,
+                    DecisionAction::ScaleOutNone,
+                    -1,
+                    inputs.mean_outstanding(),
+                    0.0,
+                    -1.0,
+                    rep_price.max(spin_price),
+                );
+            }
         }
     }
 
@@ -1145,6 +1293,7 @@ impl Simulation {
         }
         self.bill_cache.push((inst.placement_rev, devs));
         self.instances.push(inst);
+        self.tracer.mark(self.now, id as i64, MarkKind::SpinUp, device as f64);
         self.fleet_events.push(FleetEvent { t: self.now, instance: id, phase: FleetPhase::SpinUp });
         // wake at activation so parked requests route promptly even when
         // no other event happens to fire first
@@ -1206,6 +1355,8 @@ impl Simulation {
         match outcome {
             StepStart::Busy { until, token } => {
                 self.steps_started += 1;
+                let (batch, decode) = self.instances[i].last_step_shape;
+                self.tracer.step(self.now, until - self.now, i, batch, decode);
                 q.push(until, EventKind::StepComplete { instance: i, token });
             }
             StepStart::Idle => {
@@ -1332,6 +1483,14 @@ impl Simulation {
         self.events_processed += 1;
         // bill device-seconds up to this event at the pre-event rate
         self.ledger.advance(self.now);
+        // close due timeline windows before this event mutates state —
+        // the window boundary samples the world as of its close time
+        if self.tracer.timeline_due(self.now) {
+            let outstanding = self.timeline_outstanding();
+            let busy = self.total_busy_seconds();
+            let dev_s = self.ledger.device_seconds();
+            self.tracer.roll(self.now, outstanding, dev_s, busy, self.cluster.n());
+        }
 
         match ev.kind {
             EventKind::Arrival { request_idx } => {
@@ -1342,6 +1501,7 @@ impl Simulation {
                 if let Some(r) = trace.requests.get(*next_req) {
                     q.push(r.arrival_s, EventKind::Arrival { request_idx: *next_req });
                 }
+                self.tracer.req(self.now, req.id, -1, ReqPhase::Arrival);
                 self.route_arrival(request_idx, req, q);
             }
             EventKind::Routed { request_idx, instance } => {
@@ -1360,9 +1520,21 @@ impl Simulation {
                     // delivering to a corpse.
                     let inst = &mut self.instances[instance];
                     inst.outstanding_routes = inst.outstanding_routes.saturating_sub(1);
+                    self.tracer.req(
+                        self.now,
+                        trace.requests[request_idx].id,
+                        -1,
+                        ReqPhase::Parked,
+                    );
                     self.router.park(trace.requests[request_idx], 0.0, true);
                 } else {
                     self.instances[instance].outstanding_routes -= 1;
+                    self.tracer.req(
+                        self.now,
+                        trace.requests[request_idx].id,
+                        instance as i64,
+                        ReqPhase::Admitted,
+                    );
                     self.instances[instance].deliver(trace.requests[request_idx], 0.0);
                 }
             }
@@ -1382,8 +1554,26 @@ impl Simulation {
                 q.push(self.now + self.cfg.controller_tick_s, EventKind::ControllerTick);
             }
             EventKind::OpStarted { instance, op_idx, epoch } => {
+                // the op + its dry-run cost must be read off the in-flight
+                // plan BEFORE the handler advances it (span inputs)
+                let pre = self.instances[instance].inflight.as_ref().and_then(|fl| {
+                    (fl.epoch == epoch).then(|| {
+                        (fl.plan.ops.get(op_idx).copied(), fl.costs.get(op_idx).copied())
+                    })
+                });
                 let outcome = self.instances[instance].on_op_started(self.now, op_idx, epoch);
                 if let OpOutcome::Started { desc } = outcome {
+                    if let Some((Some(op), Some(cost))) = pre {
+                        self.tracer.op(
+                            self.now,
+                            instance,
+                            op_idx,
+                            op,
+                            cost.time_s,
+                            0.0,
+                            OpSpanPhase::Started,
+                        );
+                    }
                     self.audit_push(
                         AuditKind::ModuleOp,
                         Some(instance),
@@ -1400,6 +1590,14 @@ impl Simulation {
                 }
             }
             EventKind::OpCompleted { instance, op_idx, epoch } => {
+                // span inputs (op + dry-run cost) read before the handler
+                // consumes the in-flight cursor — same discipline as
+                // `OpStarted`
+                let pre = self.instances[instance].inflight.as_ref().and_then(|fl| {
+                    (fl.epoch == epoch).then(|| {
+                        (fl.plan.ops.get(op_idx).copied(), fl.costs.get(op_idx).copied())
+                    })
+                });
                 let ctx = StepCtx { cfg: &self.cfg, cost: &self.cost, now: self.now };
                 let outcome = self.instances[instance].on_op_completed(
                     &ctx,
@@ -1410,6 +1608,17 @@ impl Simulation {
                 match outcome {
                     OpOutcome::Applied { desc, cost, .. } => {
                         self.scale.op_time_s += cost.time_s;
+                        if let Some((Some(op), Some(dry))) = pre {
+                            self.tracer.op(
+                                self.now,
+                                instance,
+                                op_idx,
+                                op,
+                                dry.time_s,
+                                cost.time_s,
+                                OpSpanPhase::Applied,
+                            );
+                        }
                         self.audit_push(
                             AuditKind::ModuleOp,
                             Some(instance),
@@ -1426,6 +1635,23 @@ impl Simulation {
                     }
                     OpOutcome::Aborted { desc } => {
                         self.scale.plans_aborted += 1;
+                        if let Some((Some(op), Some(dry))) = pre {
+                            self.tracer.op(
+                                self.now,
+                                instance,
+                                op_idx,
+                                op,
+                                dry.time_s,
+                                0.0,
+                                OpSpanPhase::Aborted,
+                            );
+                        }
+                        self.tracer.mark(
+                            self.now,
+                            instance as i64,
+                            MarkKind::Rollback,
+                            op_idx as f64,
+                        );
                         self.audit_push(
                             AuditKind::ModuleOp,
                             Some(instance),
@@ -1449,7 +1675,26 @@ impl Simulation {
                 // step after this completion was scheduled.
                 if inst.step_token == token && inst.busy_until.is_some() {
                     inst.busy_until = None;
+                    // completion spans read off the monitor diff — no
+                    // signature change on the completion path, and the
+                    // snapshot is free when telemetry is off
+                    let before = if self.tracer.enabled() {
+                        self.instances[instance].monitor.completions().len()
+                    } else {
+                        0
+                    };
                     self.instances[instance].finish_completions(self.now, &mut self.cluster);
+                    if self.tracer.enabled() {
+                        for k in before..self.instances[instance].monitor.completions().len() {
+                            let c = self.instances[instance].monitor.completions()[k];
+                            self.tracer.completion(
+                                self.now,
+                                c.request_id,
+                                instance as i64,
+                                c.e2e_latency(),
+                            );
+                        }
+                    }
                 }
             }
             EventKind::Wake { instance } => {
@@ -1483,9 +1728,38 @@ impl Simulation {
         // The sweep can shed too (OOM on step start) — collect before
         // leaving the timestamp so the requests are not stranded.
         self.collect_shed();
+        // Drain trace events recorded deep inside instances this event
+        // (OOM episodes, governor decisions) into the tracer. Gated:
+        // telemetry-off runs never touch the (always-empty) outboxes.
+        if self.tracer.enabled() {
+            for i in 0..self.instances.len() {
+                if self.instances[i].trace_outbox.is_empty() {
+                    continue;
+                }
+                let evs = std::mem::take(&mut self.instances[i].trace_outbox);
+                for tev in evs {
+                    self.tracer.forward(tev);
+                }
+            }
+        }
         // Reconcile device-seconds billing with any placement moves
         // this event (or its sweep) made.
         self.sync_billing();
+    }
+
+    /// Outstanding requests fleet-wide as the timeline samples them:
+    /// router-parked plus every instance's pending + running + in-flight
+    /// routes (the same per-instance definition routing uses).
+    fn timeline_outstanding(&self) -> u64 {
+        (self.router.pending.len()
+            + (0..self.instances.len()).map(|i| self.outstanding(i)).sum::<usize>())
+            as u64
+    }
+
+    /// Cumulative busy device-seconds across the cluster (the timeline's
+    /// utilization numerator; windows report the per-window delta).
+    fn total_busy_seconds(&self) -> f64 {
+        (0..self.cluster.n()).map(|d| self.cluster.device(d).busy_seconds()).sum()
     }
 
     /// Run the trace to completion (plus drain); returns the report.
@@ -1502,12 +1776,49 @@ impl Simulation {
         }
     }
 
+    /// Dispatch one event, optionally under the self-profiler: the slot
+    /// is read before the call, wall time and the allocation counter are
+    /// sampled around it. Wall-clock flows only into the profiler —
+    /// never into simulation state — so profiled runs stay
+    /// byte-identical on the golden surface.
+    #[inline]
+    fn dispatch_profiled(
+        &mut self,
+        ev: Event,
+        trace: &Trace,
+        next_req: &mut usize,
+        q: &mut dyn EventSink,
+        profiler: &mut Option<crate::telemetry::profiler::KernelProfiler>,
+    ) {
+        match profiler {
+            Some(p) => {
+                let slot = ev.kind.slot();
+                let a0 = p.probe_now();
+                let t0 = std::time::Instant::now();
+                self.dispatch(ev, trace, next_req, q);
+                let wall = t0.elapsed().as_nanos() as u64;
+                let a1 = p.probe_now();
+                p.record(slot, wall, a1.saturating_sub(a0));
+            }
+            None => self.dispatch(ev, trace, next_req, q),
+        }
+    }
+
+    /// The self-profiler for this run, if the telemetry config asks for
+    /// one (with its allocation probe installed).
+    fn make_profiler(&self) -> Option<crate::telemetry::profiler::KernelProfiler> {
+        self.tracer
+            .profile_enabled()
+            .then(|| crate::telemetry::profiler::KernelProfiler::new(self.tracer.alloc_probe()))
+    }
+
     /// The sequential kernel: one deterministic queue, one pop loop.
     fn run_sequential(mut self, trace: &Trace, duration_s: f64) -> SimReport {
         let drain_deadline = duration_s + 300.0;
         let mut q = EventQueue::new();
         let mut next_req = 0usize;
         self.seed(trace, drain_deadline, &mut q);
+        let mut profiler = self.make_profiler();
         loop {
             if next_req >= trace.requests.len() && self.all_idle() {
                 break;
@@ -1516,9 +1827,9 @@ impl Simulation {
             if ev.time > drain_deadline {
                 break;
             }
-            self.dispatch(ev, trace, &mut next_req, &mut q);
+            self.dispatch_profiled(ev, trace, &mut next_req, &mut q, &mut profiler);
         }
-        self.finish()
+        self.finish(profiler)
     }
 
     /// The sharded kernel: instance-local events live in per-shard
@@ -1536,6 +1847,7 @@ impl Simulation {
         let mut q = ShardedEventQueue::new(self.cfg.shards);
         let mut next_req = 0usize;
         self.seed(trace, drain_deadline, &mut q);
+        let mut profiler = self.make_profiler();
         loop {
             if next_req >= trace.requests.len() && self.all_idle() {
                 break;
@@ -1545,15 +1857,34 @@ impl Simulation {
             if ev.time > drain_deadline {
                 break;
             }
-            self.dispatch(ev, trace, &mut next_req, &mut q);
+            self.dispatch_profiled(ev, trace, &mut next_req, &mut q, &mut profiler);
         }
-        self.finish()
+        self.finish(profiler)
     }
 
     /// Close the books and build the report (shared by both kernels).
-    fn finish(mut self) -> SimReport {
+    fn finish(
+        mut self,
+        profiler: Option<crate::telemetry::profiler::KernelProfiler>,
+    ) -> SimReport {
         let wall = self.now.max(1e-9);
         self.ledger.advance(self.now);
+        // consume the tracer first (its end-of-run samples read the
+        // instances the report construction below moves out of)
+        let (trace_buf, timeline) = {
+            let outstanding = self.timeline_outstanding();
+            let busy = self.total_busy_seconds();
+            let dev_s = self.ledger.device_seconds();
+            let n_inst = self.instances.len();
+            self.tracer.into_output(
+                self.now,
+                outstanding,
+                dev_s,
+                busy,
+                self.cluster.n(),
+                n_inst,
+            )
+        };
         // aggregate governor stats before `monitors` consumes the instances
         let mempress = if self.cfg.mempress.is_some() {
             let mut agg = MempressReport::default();
@@ -1644,6 +1975,9 @@ impl Simulation {
             mempress,
             audit,
             slo,
+            timeline,
+            trace: trace_buf,
+            profile: profiler.map(|p| p.finish()),
             monitors: self.instances.into_iter().map(|i| i.monitor).collect(),
         }
     }

@@ -1,0 +1,297 @@
+//! Chrome trace-event JSON export — the Perfetto/`chrome://tracing`
+//! rendering of a recorded [`TraceBuffer`].
+//!
+//! ### Track layout
+//!
+//! * **pid 0 — `fleet`**: tid 0 `requests` (async request-lifecycle
+//!   spans, one per request id), tid 1 `decisions` (controller/governor
+//!   decision instants with their inputs and the dry-run price of the
+//!   losing alternative), tid 2 `marks` (fleet-wide instants: device
+//!   failures, spin-ups, drains, releases).
+//! * **pid i+1 — `instance i`**: tid 0 `steps` (complete `X` spans, one
+//!   per prefill/decode step), tid 1 `ops` (module-op spans: an `X` span
+//!   of the dry-run duration at start, plus an applied/aborted instant
+//!   carrying dry vs actual cost), tid 2 `marks` (per-instance instants:
+//!   OOM episodes, mempress relief, rollbacks).
+//!
+//! ### Determinism
+//!
+//! Timestamps are simulation seconds scaled to integer-valued
+//! microseconds (`ts = t × 1e6`); durations are clamped to `≥ 0` so a
+//! zero-length span can never serialize as a negative duration Perfetto
+//! would reject. The JSON builder sorts object keys, and events are
+//! emitted in buffer order (which is simulation order) — so the export
+//! is byte-identical across runs and shard counts whenever the record
+//! stream is.
+
+use super::{OpSpanPhase, ReqPhase, TraceBuffer, TraceEvent};
+use crate::util::json::{self, Json};
+
+/// Microseconds per simulated second (trace-event `ts`/`dur` unit).
+const US: f64 = 1e6;
+
+fn meta(pid: i64, tid: i64, what: &str, name: &str) -> Json {
+    json::obj(vec![
+        ("args", json::obj(vec![("name", json::s(name))])),
+        ("name", json::s(what)),
+        ("ph", json::s("M")),
+        ("pid", json::num(pid as f64)),
+        ("tid", json::num(tid as f64)),
+    ])
+}
+
+/// pid of an instance lane (`-1` = the fleet process, pid 0).
+fn pid_of(instance: i64) -> f64 {
+    if instance < 0 {
+        0.0
+    } else {
+        (instance + 1) as f64
+    }
+}
+
+fn event_json(ev: &TraceEvent) -> Json {
+    match *ev {
+        TraceEvent::Req { t, id, instance, phase } => {
+            let ph = match phase {
+                ReqPhase::Arrival => "b",
+                ReqPhase::Completed => "e",
+                _ => "n",
+            };
+            json::obj(vec![
+                (
+                    "args",
+                    json::obj(vec![
+                        ("instance", json::num(instance as f64)),
+                        ("phase", json::s(phase.name())),
+                    ]),
+                ),
+                ("cat", json::s("req")),
+                ("id", json::num(id as f64)),
+                ("name", json::s("request")),
+                ("ph", json::s(ph)),
+                ("pid", json::num(0.0)),
+                ("tid", json::num(0.0)),
+                ("ts", json::num(t * US)),
+            ])
+        }
+        TraceEvent::Step { t, dur_s, instance, batch, decode } => json::obj(vec![
+            ("args", json::obj(vec![("batch", json::num(batch as f64))])),
+            ("cat", json::s("step")),
+            ("dur", json::num((dur_s * US).max(0.0))),
+            ("name", json::s(if decode { "decode" } else { "prefill" })),
+            ("ph", json::s("X")),
+            ("pid", json::num((instance + 1) as f64)),
+            ("tid", json::num(0.0)),
+            ("ts", json::num(t * US)),
+        ]),
+        TraceEvent::Op { t, instance, op_idx, op, dry_s, actual_s, phase } => {
+            let name = op.describe();
+            match phase {
+                OpSpanPhase::Started => json::obj(vec![
+                    (
+                        "args",
+                        json::obj(vec![
+                            ("dry_s", json::num(dry_s)),
+                            ("op_idx", json::num(op_idx as f64)),
+                        ]),
+                    ),
+                    ("cat", json::s("op")),
+                    ("dur", json::num((dry_s * US).max(0.0))),
+                    ("name", json::s(&name)),
+                    ("ph", json::s("X")),
+                    ("pid", json::num((instance + 1) as f64)),
+                    ("tid", json::num(1.0)),
+                    ("ts", json::num(t * US)),
+                ]),
+                OpSpanPhase::Applied | OpSpanPhase::Aborted => json::obj(vec![
+                    (
+                        "args",
+                        json::obj(vec![
+                            ("actual_s", json::num(actual_s)),
+                            ("dry_s", json::num(dry_s)),
+                            ("op_idx", json::num(op_idx as f64)),
+                            ("outcome", json::s(phase.name())),
+                        ]),
+                    ),
+                    ("cat", json::s("op")),
+                    ("name", json::s(&name)),
+                    ("ph", json::s("i")),
+                    ("pid", json::num((instance + 1) as f64)),
+                    ("s", json::s("t")),
+                    ("tid", json::num(1.0)),
+                    ("ts", json::num(t * US)),
+                ]),
+            }
+        }
+        TraceEvent::Mark { t, instance, kind, value } => json::obj(vec![
+            ("args", json::obj(vec![("value", json::num(value))])),
+            ("cat", json::s("mark")),
+            ("name", json::s(kind.name())),
+            ("ph", json::s("i")),
+            ("pid", json::num(pid_of(instance))),
+            ("s", json::s("p")),
+            ("tid", json::num(2.0)),
+            ("ts", json::num(t * US)),
+        ]),
+        TraceEvent::Decision {
+            t,
+            actor,
+            action,
+            instance,
+            pressure,
+            deficit,
+            chosen_cost,
+            rejected_cost,
+        } => json::obj(vec![
+            (
+                "args",
+                json::obj(vec![
+                    ("actor", json::s(actor.name())),
+                    ("chosen_cost", json::num(chosen_cost)),
+                    ("deficit", json::num(deficit)),
+                    ("instance", json::num(instance as f64)),
+                    ("pressure", json::num(pressure)),
+                    ("rejected_cost", json::num(rejected_cost)),
+                ]),
+            ),
+            ("cat", json::s("decision")),
+            ("name", json::s(action.name())),
+            ("ph", json::s("i")),
+            ("pid", json::num(0.0)),
+            ("s", json::s("t")),
+            ("tid", json::num(1.0)),
+            ("ts", json::num(t * US)),
+        ]),
+    }
+}
+
+/// Render the buffer as a Chrome trace-event JSON object
+/// (`{"traceEvents": [...]}` — load the file directly in
+/// [ui.perfetto.dev](https://ui.perfetto.dev) or `chrome://tracing`).
+/// Metadata naming events come first, then the recorded events in
+/// simulation order. `droppedEvents` reports ring-sink overwrites.
+pub fn chrome_trace(buf: &TraceBuffer) -> Json {
+    let mut events: Vec<Json> = Vec::with_capacity(buf.events.len() + 4 * (buf.n_instances + 1));
+    events.push(meta(0, 0, "process_name", "fleet"));
+    events.push(meta(0, 0, "thread_name", "requests"));
+    events.push(meta(0, 1, "thread_name", "decisions"));
+    events.push(meta(0, 2, "thread_name", "marks"));
+    for i in 0..buf.n_instances {
+        let pid = i as i64 + 1;
+        events.push(meta(pid, 0, "process_name", &format!("instance {i}")));
+        events.push(meta(pid, 0, "thread_name", "steps"));
+        events.push(meta(pid, 1, "thread_name", "ops"));
+        events.push(meta(pid, 2, "thread_name", "marks"));
+    }
+    events.extend(buf.events.iter().map(event_json));
+    json::obj(vec![
+        ("displayTimeUnit", json::s("ms")),
+        ("droppedEvents", json::num(buf.dropped as f64)),
+        ("traceEvents", json::arr(events)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::ModuleOp;
+    use crate::telemetry::{DecisionAction, DecisionActor, MarkKind};
+
+    fn sample_buffer() -> TraceBuffer {
+        TraceBuffer {
+            events: vec![
+                TraceEvent::Req { t: 0.5, id: 7, instance: -1, phase: ReqPhase::Arrival },
+                TraceEvent::Req { t: 0.5, id: 7, instance: 2, phase: ReqPhase::Routed },
+                TraceEvent::Step { t: 0.6, dur_s: 0.05, instance: 2, batch: 4, decode: false },
+                TraceEvent::Op {
+                    t: 0.7,
+                    instance: 2,
+                    op_idx: 0,
+                    op: ModuleOp::Replicate { layer: 3, dst: 1 },
+                    dry_s: 0.2,
+                    actual_s: 0.0,
+                    phase: OpSpanPhase::Started,
+                },
+                TraceEvent::Mark { t: 0.8, instance: -1, kind: MarkKind::DeviceFailed, value: 1.0 },
+                TraceEvent::Decision {
+                    t: 0.9,
+                    actor: DecisionActor::Fleet,
+                    action: DecisionAction::ScaleOutReplicate,
+                    instance: 2,
+                    pressure: 9.5,
+                    deficit: 0.0,
+                    chosen_cost: 0.2,
+                    rejected_cost: 1.5,
+                },
+                TraceEvent::Req { t: 1.1, id: 7, instance: 2, phase: ReqPhase::Completed },
+            ],
+            dropped: 0,
+            n_instances: 3,
+        }
+    }
+
+    #[test]
+    fn export_parses_and_has_expected_tracks() {
+        let j = chrome_trace(&sample_buffer());
+        let text = j.to_string();
+        let parsed = Json::parse(&text).expect("exporter must emit valid JSON");
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // 4 fleet metadata + 4×3 instance metadata + 7 records
+        assert_eq!(evs.len(), 4 + 12 + 7);
+        // every event carries ph/pid/tid
+        for e in evs {
+            assert!(e.get("ph").is_some());
+            assert!(e.get("pid").is_some());
+            assert!(e.get("tid").is_some());
+        }
+        // async request span: one "b", one "e", same id
+        let phs: Vec<&str> =
+            evs.iter().filter_map(|e| e.get("ph").unwrap().as_str()).collect();
+        assert_eq!(phs.iter().filter(|p| **p == "b").count(), 1);
+        assert_eq!(phs.iter().filter(|p| **p == "e").count(), 1);
+        // step span lands on pid 3 (instance 2) with µs timestamps
+        let step = evs
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("prefill"))
+            .unwrap();
+        assert_eq!(step.get("pid").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(step.get("ts").unwrap().as_f64().unwrap(), 0.6 * 1e6);
+        assert_eq!(step.get("dur").unwrap().as_f64().unwrap(), 0.05 * 1e6);
+        // decision instant carries the rejected alternative's price
+        let dec = evs
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("scale_out_replicate"))
+            .unwrap();
+        let args = dec.get("args").unwrap();
+        assert_eq!(args.get("rejected_cost").unwrap().as_f64().unwrap(), 1.5);
+        assert_eq!(args.get("actor").unwrap().as_str().unwrap(), "fleet");
+    }
+
+    #[test]
+    fn zero_and_negative_durations_clamp_to_zero() {
+        let buf = TraceBuffer {
+            events: vec![TraceEvent::Step {
+                t: 1.0,
+                dur_s: -1e-9, // rounding artifact — must not export negative
+                instance: 0,
+                batch: 1,
+                decode: true,
+            }],
+            dropped: 0,
+            n_instances: 1,
+        };
+        let j = chrome_trace(&buf);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        let step = evs.iter().find(|e| e.get("dur").is_some()).unwrap();
+        assert_eq!(step.get("dur").unwrap().as_f64().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn dropped_count_is_reported() {
+        let buf = TraceBuffer { events: vec![], dropped: 42, n_instances: 0 };
+        let j = chrome_trace(&buf);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("droppedEvents").unwrap().as_u64().unwrap(), 42);
+    }
+}

@@ -1,0 +1,1006 @@
+//! Deterministic tracing & telemetry — the kernel's observability layer.
+//!
+//! Three surfaces, all derived from the **same** record stream the event
+//! kernel emits from inside its shared `dispatch` body (so the sharded and
+//! sequential kernels produce byte-identical traces by construction):
+//!
+//! * **Spans** ([`TraceEvent`]) — per-request lifecycle edges
+//!   (`Arrival → Routed → Admitted → … → Completed`), per-step serving
+//!   spans, per-module-op spans with dry-run vs actual cost, instant
+//!   marks (failures, rollbacks, memory-pressure relief), and structured
+//!   [*decision records*](TraceEvent::Decision) for every fleet /
+//!   predictive / memory-pressure choice. Exported as Chrome trace-event
+//!   JSON ([`TraceBuffer::chrome_trace`]) loadable in Perfetto or
+//!   `chrome://tracing`.
+//! * **Timeline** ([`TimelineBlock`]) — a streaming per-window summary
+//!   (arrivals, completions, sheds, outstanding, p50/p99 via the
+//!   O(1)-memory [`P2Quantile`], device-seconds, compute utilization)
+//!   emitted as the strictly-additive `timeline` key of the metrics JSON.
+//! * **Profiler** ([`profiler::KernelProfiler`]) — wall-time, event-count
+//!   and allocation histogram per event kind, kept entirely *outside* the
+//!   golden surface (wall-clock may never leak into replayed metrics).
+//!
+//! ### Determinism contract
+//!
+//! Every recorded timestamp is **simulation time** — `std::time::Instant`
+//! appears only in the self-profiler, whose output lands in
+//! `BENCH_fleet.json`, never in the metrics JSON or the trace export.
+//! With telemetry disabled (the default) the tracer records nothing and
+//! the metrics JSON is byte-identical to a build without this module;
+//! with telemetry enabled, two runs of the same seed — at any shard
+//! count — export byte-identical traces (`rust/tests/telemetry.rs`).
+//!
+//! ### Hot-path contract
+//!
+//! Recording into the [`SpanSink::Ring`] sink is allocation-free: the
+//! ring is pre-allocated at construction, [`TraceEvent`] is `Copy`, and
+//! overflow overwrites the oldest record (counted in
+//! [`TraceBuffer::dropped`]). `benches/fleet_scale.rs` asserts zero heap
+//! allocations across ring-sink span recording with its counting global
+//! allocator.
+
+pub mod export;
+pub mod profiler;
+
+use crate::plan::ModuleOp;
+use crate::util::stats::P2Quantile;
+
+// ---- configuration ---------------------------------------------------------
+
+/// Where recorded spans go.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanSink {
+    /// Keep every record (growable buffer — full-fidelity export).
+    Full,
+    /// Pre-allocated ring of this capacity; overflow overwrites the
+    /// oldest record. The zero-allocation sink for fleet-scale runs.
+    Ring(usize),
+}
+
+/// Telemetry configuration, carried on [`crate::sim::SimConfig`].
+///
+/// `None` there (the default everywhere) disables telemetry entirely:
+/// the kernel's tracer records nothing, the metrics JSON grows no keys,
+/// and every golden replay stays byte-identical to the pre-telemetry
+/// kernel.
+#[derive(Debug, Clone, Copy)]
+pub struct TelemetryConfig {
+    /// Span sink selection (full export vs bounded ring).
+    pub sink: SpanSink,
+    /// Streaming timeline window in seconds (`None` = no timeline block).
+    pub timeline_window_s: Option<f64>,
+    /// Record controller/governor decision records.
+    pub decisions: bool,
+    /// Run the kernel self-profiler (per-event-kind wall time + allocs).
+    /// Wall-clock stays outside the golden surface — see module docs.
+    pub profile: bool,
+    /// Allocation counter the profiler samples around each dispatch
+    /// (benches pass their counting-allocator reader; `None` records 0).
+    pub alloc_probe: Option<fn() -> u64>,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig {
+            sink: SpanSink::Full,
+            timeline_window_s: Some(1.0),
+            decisions: true,
+            profile: false,
+            alloc_probe: None,
+        }
+    }
+}
+
+impl TelemetryConfig {
+    /// Full-fidelity capture (growable span buffer, timeline, decisions).
+    pub fn full() -> TelemetryConfig {
+        TelemetryConfig::default()
+    }
+
+    /// Bounded capture for scale runs: ring sink of `capacity` records.
+    pub fn ring(capacity: usize) -> TelemetryConfig {
+        TelemetryConfig { sink: SpanSink::Ring(capacity), ..TelemetryConfig::default() }
+    }
+}
+
+// ---- record types ----------------------------------------------------------
+
+/// Why an instance shed a request back to the router — carried on the
+/// shed record so the trace can distinguish OOM sheds, SLO preemptions
+/// and failure-domain evacuations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedCause {
+    /// KV admission hit device OOM (FailBatch / preempt-newest paths).
+    Oom,
+    /// Mid-step preemption of a best-effort batch for a premium request.
+    SloPreempt,
+    /// Device failure or forced release evacuated the request.
+    Failure,
+}
+
+/// A request-lifecycle edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReqPhase {
+    /// The request entered the system (trace arrival).
+    Arrival,
+    /// The router picked an instance (delivery scheduled).
+    Routed,
+    /// Admission backpressure parked it at the router.
+    Parked,
+    /// Delivered into an instance's scheduler queue.
+    Admitted,
+    /// An OOM/failure shed moved it to a different instance.
+    Rerouted,
+    /// Shed out of a serving batch (OOM or failure evacuation).
+    Shed,
+    /// Preempted mid-step in favour of a premium request.
+    Preempted,
+    /// Finished decoding — the terminal edge.
+    Completed,
+}
+
+impl ReqPhase {
+    /// Stable lower-case label used in the trace export.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReqPhase::Arrival => "arrival",
+            ReqPhase::Routed => "routed",
+            ReqPhase::Parked => "parked",
+            ReqPhase::Admitted => "admitted",
+            ReqPhase::Rerouted => "rerouted",
+            ReqPhase::Shed => "shed",
+            ReqPhase::Preempted => "preempted",
+            ReqPhase::Completed => "completed",
+        }
+    }
+}
+
+/// Module-op span phase (mirrors the kernel's `OpStarted`/`OpCompleted`
+/// events plus the abort/rollback outcome).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpSpanPhase {
+    /// The op began executing (span start; duration = dry-run estimate).
+    Started,
+    /// The op landed; the record carries dry-run *and* actual cost.
+    Applied,
+    /// The op (and its plan) rolled back.
+    Aborted,
+}
+
+impl OpSpanPhase {
+    /// Stable lower-case label used in the trace export.
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpSpanPhase::Started => "started",
+            OpSpanPhase::Applied => "applied",
+            OpSpanPhase::Aborted => "aborted",
+        }
+    }
+}
+
+/// Instant-event kinds (rendered as Perfetto instants on the owning
+/// track).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MarkKind {
+    /// A device died (value = device id).
+    DeviceFailed,
+    /// An in-flight plan rolled back.
+    Rollback,
+    /// The memory-pressure governor granted relief (value = rung code).
+    MempressRelief,
+    /// A KV-admission OOM episode began (value = deficit bytes).
+    OomEpisode,
+    /// Fleet controller deployed a fresh instance (value = device).
+    SpinUp,
+    /// Fleet controller started draining an instance.
+    Drain,
+    /// A drained instance released its devices.
+    Release,
+}
+
+impl MarkKind {
+    /// Stable label used in the trace export.
+    pub fn name(&self) -> &'static str {
+        match self {
+            MarkKind::DeviceFailed => "device_failed",
+            MarkKind::Rollback => "rollback",
+            MarkKind::MempressRelief => "mempress_relief",
+            MarkKind::OomEpisode => "oom_episode",
+            MarkKind::SpinUp => "spin_up",
+            MarkKind::Drain => "drain",
+            MarkKind::Release => "release",
+        }
+    }
+}
+
+/// Which control plane produced a decision record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecisionActor {
+    /// Reactive fleet controller (pressure classifier + arbitration).
+    Fleet,
+    /// Predictive controller (forecast deficits).
+    Predictive,
+    /// Per-instance memory-pressure governor.
+    Mempress,
+}
+
+impl DecisionActor {
+    /// Stable label used in the trace export.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DecisionActor::Fleet => "fleet",
+            DecisionActor::Predictive => "predictive",
+            DecisionActor::Mempress => "mempress",
+        }
+    }
+}
+
+/// What a decision record enacted (or declined to).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecisionAction {
+    /// Pressure in the hold band — no reactive action.
+    Hold,
+    /// Scale-out arbitration chose module replication.
+    ScaleOutReplicate,
+    /// Scale-out arbitration chose whole-instance spin-up.
+    ScaleOutSpinUp,
+    /// Scale-out wanted, but neither option was available.
+    ScaleOutNone,
+    /// Reactive scale-in: drain the least-loaded instance.
+    DrainInstance,
+    /// The predictor vetoed a reactive drain (capacity needed soon).
+    DrainVetoed,
+    /// Predictive replication (deficit at the plan's own lead time).
+    PredictedReplicate,
+    /// Predictive spin-up (deficit at the cold-start horizon).
+    PredictedSpinUp,
+    /// The reactive signal vetoed a predictive proposal.
+    PredictiveVetoed,
+    /// Governor grew the instance's KV pool.
+    GrowPool,
+    /// Governor shrank the KV pool toward its floor.
+    ShrinkPool,
+    /// Governor requested int8 precision swaps.
+    RequestSwaps,
+    /// Governor told the instance to wait out the episode.
+    Wait,
+    /// Governor escalated to the policy's raw OOM handling.
+    Escalate,
+}
+
+impl DecisionAction {
+    /// Stable label used in the trace export.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DecisionAction::Hold => "hold",
+            DecisionAction::ScaleOutReplicate => "scale_out_replicate",
+            DecisionAction::ScaleOutSpinUp => "scale_out_spin_up",
+            DecisionAction::ScaleOutNone => "scale_out_none",
+            DecisionAction::DrainInstance => "drain_instance",
+            DecisionAction::DrainVetoed => "drain_vetoed",
+            DecisionAction::PredictedReplicate => "predicted_replicate",
+            DecisionAction::PredictedSpinUp => "predicted_spin_up",
+            DecisionAction::PredictiveVetoed => "predictive_vetoed",
+            DecisionAction::GrowPool => "grow_pool",
+            DecisionAction::ShrinkPool => "shrink_pool",
+            DecisionAction::RequestSwaps => "request_swaps",
+            DecisionAction::Wait => "wait",
+            DecisionAction::Escalate => "escalate",
+        }
+    }
+}
+
+/// One recorded telemetry event. `Copy` with numeric payloads only — no
+/// string is built until export, which is what keeps ring-sink recording
+/// allocation-free on the step path.
+///
+/// `instance` is `i64` where the fleet/router lane (`-1`) is a valid
+/// owner; spans that always belong to an instance use `u32`.
+#[derive(Debug, Clone, Copy)]
+pub enum TraceEvent {
+    /// A request-lifecycle edge (async span begin/instant/end).
+    Req {
+        /// Simulation time (seconds).
+        t: f64,
+        /// Request id (trace-unique).
+        id: u64,
+        /// Owning instance, or `-1` for the router/fleet lane.
+        instance: i64,
+        /// Which lifecycle edge.
+        phase: ReqPhase,
+    },
+    /// One serving step (prefill or decode) on an instance.
+    Step {
+        /// Step start time (seconds).
+        t: f64,
+        /// Step duration (seconds, contention included).
+        dur_s: f64,
+        /// Instance that ran the step.
+        instance: u32,
+        /// Sequences in the batch.
+        batch: u32,
+        /// `true` = decode step, `false` = prefill.
+        decode: bool,
+    },
+    /// A module-op span edge (start / applied / aborted).
+    Op {
+        /// Event time (seconds): span start for [`OpSpanPhase::Started`],
+        /// completion time otherwise.
+        t: f64,
+        /// Instance executing the plan.
+        instance: u32,
+        /// Op index within its plan.
+        op_idx: u32,
+        /// The operation itself (kind, layer, destination device).
+        op: ModuleOp,
+        /// Dry-run cost estimate (seconds) the kernel scheduled with.
+        dry_s: f64,
+        /// Actual applied cost (seconds); `0` until applied.
+        actual_s: f64,
+        /// Span edge.
+        phase: OpSpanPhase,
+    },
+    /// An instant mark (failure, rollback, relief, lifecycle edge).
+    Mark {
+        /// Simulation time (seconds).
+        t: f64,
+        /// Owning instance, or `-1` for the fleet lane.
+        instance: i64,
+        /// What happened.
+        kind: MarkKind,
+        /// Kind-specific numeric payload (device id, bytes, rung…).
+        value: f64,
+    },
+    /// A controller/governor decision with its inputs and the dry-run
+    /// price of the losing alternative — "why replicate, why not spin
+    /// up" is answerable from this record alone.
+    Decision {
+        /// Simulation time (seconds).
+        t: f64,
+        /// Which control plane decided.
+        actor: DecisionActor,
+        /// What it chose.
+        action: DecisionAction,
+        /// Target instance, or `-1` for fleet-wide decisions.
+        instance: i64,
+        /// Reactive pressure input (mean outstanding per live instance
+        /// for fleet decisions; pool deficit bytes for the governor).
+        pressure: f64,
+        /// Forecast deficit in instance-equivalents (`0` for purely
+        /// reactive decisions).
+        deficit: f64,
+        /// Dry-run cost of the chosen option (seconds; `-1` = n/a).
+        chosen_cost: f64,
+        /// Dry-run cost of the rejected alternative (seconds; `-1` =
+        /// no alternative was on the table).
+        rejected_cost: f64,
+    },
+}
+
+impl TraceEvent {
+    /// The event's simulation timestamp (seconds).
+    pub fn t(&self) -> f64 {
+        match *self {
+            TraceEvent::Req { t, .. }
+            | TraceEvent::Step { t, .. }
+            | TraceEvent::Op { t, .. }
+            | TraceEvent::Mark { t, .. }
+            | TraceEvent::Decision { t, .. } => t,
+        }
+    }
+}
+
+// ---- timeline --------------------------------------------------------------
+
+/// One closed timeline window (all cumulative fields sampled at the
+/// event that crossed the window boundary — see `DESIGN.md`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimelineWindow {
+    /// Window end (seconds, a multiple of the window size except for a
+    /// final partial window).
+    pub t_s: f64,
+    /// Arrivals observed in the window.
+    pub arrivals: u64,
+    /// Requests completed in the window.
+    pub completions: u64,
+    /// Requests shed or preempted in the window.
+    pub sheds: u64,
+    /// Outstanding requests (queued + running + parked) at window close.
+    pub outstanding: u64,
+    /// p50 end-to-end latency of the window's completions (0 if none).
+    pub p50_s: f64,
+    /// p99 end-to-end latency of the window's completions (0 if none).
+    pub p99_s: f64,
+    /// Cumulative billed device-seconds at window close.
+    pub device_seconds: f64,
+    /// Mean compute utilization across devices over the window, from the
+    /// busy-seconds delta (clamped to `[0, 1]`).
+    pub busy_frac: f64,
+}
+
+/// The streaming timeline: the strictly-additive `timeline` block of the
+/// metrics JSON (present iff telemetry configured a window).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TimelineBlock {
+    /// Window size in seconds.
+    pub window_s: f64,
+    /// Closed windows in time order.
+    pub windows: Vec<TimelineWindow>,
+}
+
+impl TimelineBlock {
+    /// Serialize as the metrics-JSON `timeline` value. Deterministic:
+    /// sim-time inputs only, keys sorted by the JSON builder.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json;
+        json::obj(vec![
+            ("window_s", json::num(self.window_s)),
+            (
+                "windows",
+                json::arr(self.windows.iter().map(|w| {
+                    json::obj(vec![
+                        ("arrivals", json::num(w.arrivals as f64)),
+                        ("busy_frac", json::num(w.busy_frac)),
+                        ("completions", json::num(w.completions as f64)),
+                        ("device_seconds", json::num(w.device_seconds)),
+                        ("outstanding", json::num(w.outstanding as f64)),
+                        ("p50_s", json::num(w.p50_s)),
+                        ("p99_s", json::num(w.p99_s)),
+                        ("sheds", json::num(w.sheds as f64)),
+                        ("t_s", json::num(w.t_s)),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+/// Builds [`TimelineBlock`] incrementally. Counters accumulate on the
+/// record path (allocation-free); windows close lazily when the kernel
+/// sees the first event at or past a boundary.
+#[derive(Debug)]
+struct TimelineBuilder {
+    window_s: f64,
+    next_boundary: f64,
+    arrivals: u64,
+    completions: u64,
+    sheds: u64,
+    p50: P2Quantile,
+    p99: P2Quantile,
+    samples: u64,
+    last_busy: f64,
+    windows: Vec<TimelineWindow>,
+}
+
+impl TimelineBuilder {
+    fn new(window_s: f64) -> TimelineBuilder {
+        assert!(window_s > 0.0, "timeline window must be positive");
+        TimelineBuilder {
+            window_s,
+            next_boundary: window_s,
+            arrivals: 0,
+            completions: 0,
+            sheds: 0,
+            p50: P2Quantile::new(0.5),
+            p99: P2Quantile::new(0.99),
+            samples: 0,
+            last_busy: 0.0,
+            windows: Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn due(&self, t: f64) -> bool {
+        t >= self.next_boundary
+    }
+
+    fn close(
+        &mut self,
+        t_end: f64,
+        span: f64,
+        outstanding: u64,
+        device_seconds: f64,
+        busy_s: f64,
+        n_devices: usize,
+    ) {
+        let delta = (busy_s - self.last_busy).max(0.0);
+        self.last_busy = busy_s;
+        let denom = n_devices as f64 * span;
+        let busy_frac = if denom > 0.0 { (delta / denom).min(1.0) } else { 0.0 };
+        let (p50_s, p99_s) = if self.samples > 0 {
+            (self.p50.value(), self.p99.value())
+        } else {
+            (0.0, 0.0)
+        };
+        self.windows.push(TimelineWindow {
+            t_s: t_end,
+            arrivals: self.arrivals,
+            completions: self.completions,
+            sheds: self.sheds,
+            outstanding,
+            p50_s,
+            p99_s,
+            device_seconds,
+            busy_frac,
+        });
+        self.arrivals = 0;
+        self.completions = 0;
+        self.sheds = 0;
+        self.samples = 0;
+        self.p50 = P2Quantile::new(0.5);
+        self.p99 = P2Quantile::new(0.99);
+    }
+
+    /// Close every window whose boundary is at or before `t`. All
+    /// cumulative samples are taken at `t` (the crossing event); skipped
+    /// empty windows record zero deltas.
+    fn roll(
+        &mut self,
+        t: f64,
+        outstanding: u64,
+        device_seconds: f64,
+        busy_s: f64,
+        n_devices: usize,
+    ) {
+        while self.next_boundary <= t {
+            let t_end = self.next_boundary;
+            self.next_boundary += self.window_s;
+            self.close(t_end, self.window_s, outstanding, device_seconds, busy_s, n_devices);
+        }
+    }
+
+    /// Close remaining full windows and a final partial window (if it
+    /// saw any activity), then emit the block.
+    fn finish(
+        mut self,
+        t_end: f64,
+        outstanding: u64,
+        device_seconds: f64,
+        busy_s: f64,
+        n_devices: usize,
+    ) -> TimelineBlock {
+        self.roll(t_end, outstanding, device_seconds, busy_s, n_devices);
+        let partial_span = t_end - (self.next_boundary - self.window_s);
+        let active = self.arrivals + self.completions + self.sheds + self.samples > 0;
+        if partial_span > 0.0 && active {
+            self.close(t_end, partial_span, outstanding, device_seconds, busy_s, n_devices);
+        }
+        TimelineBlock { window_s: self.window_s, windows: self.windows }
+    }
+}
+
+// ---- the tracer ------------------------------------------------------------
+
+/// The exported span buffer (chronological; ring overflow already
+/// unrolled).
+#[derive(Debug, Clone, Default)]
+pub struct TraceBuffer {
+    /// Recorded events in simulation-time order.
+    pub events: Vec<TraceEvent>,
+    /// Records overwritten by ring-sink overflow (0 for the full sink).
+    pub dropped: u64,
+    /// Instance lanes the trace export lays out (fleet size at end of
+    /// run, spun-up instances included).
+    pub n_instances: usize,
+}
+
+impl TraceBuffer {
+    /// Export as Chrome trace-event JSON — see [`export::chrome_trace`].
+    pub fn chrome_trace(&self) -> crate::util::json::Json {
+        export::chrome_trace(self)
+    }
+}
+
+/// The kernel's recorder. Always present on the simulation (one `bool`
+/// branch when disabled); every record method is an `#[inline]`
+/// early-return no-op unless telemetry was configured.
+#[derive(Debug)]
+pub struct Tracer {
+    enabled: bool,
+    decisions_on: bool,
+    ring_cap: Option<usize>,
+    events: Vec<TraceEvent>,
+    next_overwrite: usize,
+    dropped: u64,
+    timeline: Option<TimelineBuilder>,
+    profile: bool,
+    alloc_probe: Option<fn() -> u64>,
+}
+
+impl Tracer {
+    /// The no-op tracer (telemetry off — records nothing, owns nothing).
+    pub fn disabled() -> Tracer {
+        Tracer {
+            enabled: false,
+            decisions_on: false,
+            ring_cap: None,
+            events: Vec::new(),
+            next_overwrite: 0,
+            dropped: 0,
+            timeline: None,
+            profile: false,
+            alloc_probe: None,
+        }
+    }
+
+    /// Build from the optional config (`None` → [`Tracer::disabled`]).
+    /// Ring sinks pre-allocate their full capacity here, so recording
+    /// never allocates.
+    pub fn new(cfg: Option<&TelemetryConfig>) -> Tracer {
+        let Some(cfg) = cfg else { return Tracer::disabled() };
+        let (ring_cap, events) = match cfg.sink {
+            SpanSink::Full => (None, Vec::new()),
+            SpanSink::Ring(cap) => {
+                let cap = cap.max(1);
+                (Some(cap), Vec::with_capacity(cap))
+            }
+        };
+        Tracer {
+            enabled: true,
+            decisions_on: cfg.decisions,
+            ring_cap,
+            events,
+            next_overwrite: 0,
+            dropped: 0,
+            timeline: cfg.timeline_window_s.map(TimelineBuilder::new),
+            profile: cfg.profile,
+            alloc_probe: cfg.alloc_probe,
+        }
+    }
+
+    /// Is telemetry recording at all?
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Should the run loop wrap dispatch in the self-profiler?
+    pub fn profile_enabled(&self) -> bool {
+        self.enabled && self.profile
+    }
+
+    /// The allocation counter handed to the profiler (if any).
+    pub fn alloc_probe(&self) -> Option<fn() -> u64> {
+        self.alloc_probe
+    }
+
+    #[inline]
+    fn push(&mut self, ev: TraceEvent) {
+        match self.ring_cap {
+            None => self.events.push(ev),
+            Some(cap) => {
+                if self.events.len() < cap {
+                    self.events.push(ev);
+                } else {
+                    self.events[self.next_overwrite] = ev;
+                    self.next_overwrite += 1;
+                    if self.next_overwrite == cap {
+                        self.next_overwrite = 0;
+                    }
+                    self.dropped += 1;
+                }
+            }
+        }
+    }
+
+    /// Record a request-lifecycle edge. Arrival/shed/preempt edges also
+    /// feed the timeline counters; completions use
+    /// [`Tracer::completion`] instead (it carries the latency sample).
+    #[inline]
+    pub fn req(&mut self, t: f64, id: u64, instance: i64, phase: ReqPhase) {
+        if !self.enabled {
+            return;
+        }
+        if let Some(tl) = &mut self.timeline {
+            match phase {
+                ReqPhase::Arrival => tl.arrivals += 1,
+                ReqPhase::Shed | ReqPhase::Preempted => tl.sheds += 1,
+                _ => {}
+            }
+        }
+        self.push(TraceEvent::Req { t, id, instance, phase });
+    }
+
+    /// Record a completion: the request's terminal span edge plus the
+    /// timeline latency sample.
+    #[inline]
+    pub fn completion(&mut self, t: f64, id: u64, instance: i64, latency_s: f64) {
+        if !self.enabled {
+            return;
+        }
+        if let Some(tl) = &mut self.timeline {
+            tl.completions += 1;
+            tl.samples += 1;
+            tl.p50.add(latency_s);
+            tl.p99.add(latency_s);
+        }
+        self.push(TraceEvent::Req { t, id, instance, phase: ReqPhase::Completed });
+    }
+
+    /// Record one serving step span.
+    #[inline]
+    pub fn step(&mut self, t: f64, dur_s: f64, instance: usize, batch: usize, decode: bool) {
+        if !self.enabled {
+            return;
+        }
+        self.push(TraceEvent::Step {
+            t,
+            dur_s,
+            instance: instance as u32,
+            batch: batch as u32,
+            decode,
+        });
+    }
+
+    /// Record a module-op span edge.
+    #[inline]
+    pub fn op(
+        &mut self,
+        t: f64,
+        instance: usize,
+        op_idx: usize,
+        op: ModuleOp,
+        dry_s: f64,
+        actual_s: f64,
+        phase: OpSpanPhase,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        self.push(TraceEvent::Op {
+            t,
+            instance: instance as u32,
+            op_idx: op_idx as u32,
+            op,
+            dry_s,
+            actual_s,
+            phase,
+        });
+    }
+
+    /// Record an instant mark.
+    #[inline]
+    pub fn mark(&mut self, t: f64, instance: i64, kind: MarkKind, value: f64) {
+        if !self.enabled {
+            return;
+        }
+        self.push(TraceEvent::Mark { t, instance, kind, value });
+    }
+
+    /// Record a decision (no-op unless decision records are configured).
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    pub fn decision(
+        &mut self,
+        t: f64,
+        actor: DecisionActor,
+        action: DecisionAction,
+        instance: i64,
+        pressure: f64,
+        deficit: f64,
+        chosen_cost: f64,
+        rejected_cost: f64,
+    ) {
+        if !self.enabled || !self.decisions_on {
+            return;
+        }
+        self.push(TraceEvent::Decision {
+            t,
+            actor,
+            action,
+            instance,
+            pressure,
+            deficit,
+            chosen_cost,
+            rejected_cost,
+        });
+    }
+
+    /// Cheap boundary check the kernel runs per event: `true` iff the
+    /// timeline has a window to close at or before `t` (the kernel then
+    /// assembles the samples and calls [`Tracer::roll`]).
+    #[inline]
+    pub fn timeline_due(&self, t: f64) -> bool {
+        self.enabled && self.timeline.as_ref().is_some_and(|tl| tl.due(t))
+    }
+
+    /// Close due timeline windows with the kernel's cumulative samples.
+    pub fn roll(
+        &mut self,
+        t: f64,
+        outstanding: u64,
+        device_seconds: f64,
+        busy_s: f64,
+        n_devices: usize,
+    ) {
+        if let Some(tl) = &mut self.timeline {
+            tl.roll(t, outstanding, device_seconds, busy_s, n_devices);
+        }
+    }
+
+    /// Forward an event recorded remotely (an instance's trace outbox).
+    /// Applies the same gating as the direct recording methods —
+    /// decision records additionally require `decisions` in the config —
+    /// but folds no timeline counters: outbox events are marks and
+    /// decisions, which the timeline never counts.
+    pub fn forward(&mut self, ev: TraceEvent) {
+        if !self.enabled {
+            return;
+        }
+        if matches!(ev, TraceEvent::Decision { .. }) && !self.decisions_on {
+            return;
+        }
+        self.push(ev);
+    }
+
+    /// Consume the tracer at end of run: chronological span buffer (ring
+    /// unrolled) and the finished timeline block.
+    #[allow(clippy::too_many_arguments)]
+    pub fn into_output(
+        &mut self,
+        t_end: f64,
+        outstanding: u64,
+        device_seconds: f64,
+        busy_s: f64,
+        n_devices: usize,
+        n_instances: usize,
+    ) -> (Option<TraceBuffer>, Option<TimelineBlock>) {
+        if !self.enabled {
+            return (None, None);
+        }
+        self.enabled = false;
+        let mut events = std::mem::take(&mut self.events);
+        if self.dropped > 0 {
+            // oldest surviving record sits at the overwrite cursor
+            events.rotate_left(self.next_overwrite);
+        }
+        let buffer = TraceBuffer { events, dropped: self.dropped, n_instances };
+        let timeline = self
+            .timeline
+            .take()
+            .map(|tl| tl.finish(t_end, outstanding, device_seconds, busy_s, n_devices));
+        (Some(buffer), timeline)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let mut tr = Tracer::disabled();
+        tr.req(0.5, 1, 0, ReqPhase::Arrival);
+        tr.step(0.5, 0.1, 0, 4, true);
+        tr.mark(0.5, -1, MarkKind::DeviceFailed, 2.0);
+        assert!(!tr.timeline_due(1e9));
+        let (buf, tl) = tr.into_output(10.0, 0, 0.0, 0.0, 4, 1);
+        assert!(buf.is_none() && tl.is_none());
+    }
+
+    #[test]
+    fn full_sink_keeps_everything_in_order() {
+        let cfg = TelemetryConfig { timeline_window_s: None, ..TelemetryConfig::full() };
+        let mut tr = Tracer::new(Some(&cfg));
+        for i in 0..100u64 {
+            tr.req(i as f64, i, 0, ReqPhase::Arrival);
+        }
+        let (buf, tl) = tr.into_output(100.0, 0, 0.0, 0.0, 1, 1);
+        let buf = buf.unwrap();
+        assert!(tl.is_none());
+        assert_eq!(buf.events.len(), 100);
+        assert_eq!(buf.dropped, 0);
+        let ts: Vec<f64> = buf.events.iter().map(|e| e.t()).collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn ring_sink_overwrites_oldest_and_unrolls() {
+        let mut cfg = TelemetryConfig::ring(8);
+        cfg.timeline_window_s = None;
+        let mut tr = Tracer::new(Some(&cfg));
+        for i in 0..20u64 {
+            tr.req(i as f64, i, 0, ReqPhase::Arrival);
+        }
+        let (buf, _) = tr.into_output(20.0, 0, 0.0, 0.0, 1, 1);
+        let buf = buf.unwrap();
+        assert_eq!(buf.events.len(), 8);
+        assert_eq!(buf.dropped, 12);
+        // chronological after unroll: the 8 newest records, in order
+        let ids: Vec<u64> = buf
+            .events
+            .iter()
+            .map(|e| match e {
+                TraceEvent::Req { id, .. } => *id,
+                other => panic!("unexpected {other:?}"),
+            })
+            .collect();
+        assert_eq!(ids, (12..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn ring_recording_does_not_grow_capacity() {
+        let mut cfg = TelemetryConfig::ring(16);
+        cfg.timeline_window_s = None;
+        let mut tr = Tracer::new(Some(&cfg));
+        let cap_before = tr.events.capacity();
+        for i in 0..1000u64 {
+            tr.step(i as f64, 0.01, 3, 8, i % 2 == 0);
+        }
+        assert_eq!(tr.events.capacity(), cap_before, "ring must never reallocate");
+    }
+
+    #[test]
+    fn timeline_windows_close_on_boundaries() {
+        let cfg = TelemetryConfig { timeline_window_s: Some(1.0), ..TelemetryConfig::full() };
+        let mut tr = Tracer::new(Some(&cfg));
+        // window [0,1): two arrivals, one completion at 0.8 with 0.3s e2e
+        tr.req(0.2, 1, 0, ReqPhase::Arrival);
+        tr.req(0.5, 2, 0, ReqPhase::Arrival);
+        tr.completion(0.8, 1, 0, 0.3);
+        assert!(!tr.timeline_due(0.9));
+        assert!(tr.timeline_due(1.2));
+        tr.roll(1.2, 5, 2.0, 1.0, 2);
+        // window [1,2): one shed
+        tr.req(1.5, 2, 0, ReqPhase::Shed);
+        let (_, tl) = tr.into_output(2.5, 3, 4.0, 3.0, 2, 1);
+        let tl = tl.unwrap();
+        assert_eq!(tl.window_s, 1.0);
+        // two full windows; the empty partial [2, 2.5) is skipped
+        assert_eq!(tl.windows.len(), 2, "{tl:?}");
+        let w0 = tl.windows[0];
+        assert!((w0.t_s - 1.0).abs() < 1e-12);
+        assert_eq!((w0.arrivals, w0.completions, w0.sheds), (2, 1, 0));
+        assert_eq!(w0.outstanding, 5);
+        assert!((w0.p50_s - 0.3).abs() < 1e-12);
+        // busy delta 1.0 over 2 devices × 1s window
+        assert!((w0.busy_frac - 0.5).abs() < 1e-12);
+        let w1 = tl.windows[1];
+        assert!((w1.t_s - 2.0).abs() < 1e-12);
+        assert_eq!((w1.arrivals, w1.sheds), (0, 1));
+        assert_eq!(w1.p50_s, 0.0, "no completions → zero percentile");
+    }
+
+    #[test]
+    fn skipped_windows_emit_zero_deltas() {
+        let cfg = TelemetryConfig { timeline_window_s: Some(1.0), ..TelemetryConfig::full() };
+        let mut tr = Tracer::new(Some(&cfg));
+        tr.req(0.1, 1, 0, ReqPhase::Arrival);
+        // next event far in the future: windows 1..=5 all close at once
+        tr.roll(5.5, 7, 9.0, 4.0, 4);
+        let (_, tl) = tr.into_output(5.5, 7, 9.0, 4.0, 4, 1);
+        let tl = tl.unwrap();
+        assert_eq!(tl.windows.len(), 5);
+        assert_eq!(tl.windows[0].arrivals, 1);
+        assert!((tl.windows[0].busy_frac - 1.0).abs() < 1e-12, "first gets the delta");
+        for w in &tl.windows[1..] {
+            assert_eq!(w.arrivals, 0);
+            assert_eq!(w.busy_frac, 0.0, "no new busy time in skipped windows");
+            assert_eq!(w.outstanding, 7, "samples repeat the crossing event's state");
+        }
+    }
+
+    #[test]
+    fn timeline_json_shape() {
+        let block = TimelineBlock {
+            window_s: 1.0,
+            windows: vec![TimelineWindow {
+                t_s: 1.0,
+                arrivals: 3,
+                completions: 2,
+                sheds: 0,
+                outstanding: 4,
+                p50_s: 0.25,
+                p99_s: 0.5,
+                device_seconds: 2.0,
+                busy_frac: 0.75,
+            }],
+        };
+        let j = block.to_json();
+        let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("window_s").unwrap().as_f64().unwrap(), 1.0);
+        let ws = parsed.get("windows").unwrap().as_arr().unwrap();
+        assert_eq!(ws.len(), 1);
+        assert_eq!(ws[0].get("arrivals").unwrap().as_u64().unwrap(), 3);
+        assert_eq!(ws[0].get("busy_frac").unwrap().as_f64().unwrap(), 0.75);
+    }
+}

@@ -1,0 +1,194 @@
+//! Kernel self-profiler: per-event-kind wall-time, event-count and
+//! allocation histogram.
+//!
+//! The run loop wraps every `dispatch` call: it reads the event's
+//! [`slot`](crate::sim::events::EventKind::slot) before dispatching,
+//! samples the (optional) allocation counter and a monotonic clock
+//! around the call, and records the deltas here. Wall-clock therefore
+//! never touches simulation state — the profile is reported through
+//! [`crate::sim::metrics::SimReport::profile`], which the golden metrics
+//! JSON deliberately omits (`BENCH_fleet.json` is its home), so profiled
+//! and unprofiled runs stay byte-identical on the golden surface.
+
+use crate::sim::events::EventKind;
+use crate::util::json::{self, Json};
+
+/// Accumulator for one event kind.
+#[derive(Debug, Clone, Copy, Default)]
+struct ProfSlot {
+    events: u64,
+    wall_ns: u64,
+    allocs: u64,
+}
+
+/// One row of the finished per-event-kind breakdown.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProfRow {
+    /// Event kind name (from [`EventKind::SLOT_NAMES`]).
+    pub kind: &'static str,
+    /// Events of this kind dispatched.
+    pub events: u64,
+    /// Total wall time spent inside dispatch for this kind (ns).
+    pub wall_ns: u64,
+    /// Heap allocations performed while dispatching this kind (0 when
+    /// no allocation probe was installed).
+    pub allocs: u64,
+}
+
+/// The finished profile: one row per event kind, dispatch order.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct KernelProfile {
+    /// Per-kind rows (all [`EventKind::N_SLOTS`] kinds, zero rows kept
+    /// so the table shape is stable).
+    pub rows: Vec<ProfRow>,
+}
+
+impl KernelProfile {
+    /// Total events across kinds.
+    pub fn total_events(&self) -> u64 {
+        self.rows.iter().map(|r| r.events).sum()
+    }
+
+    /// Total dispatch wall time across kinds (ns).
+    pub fn total_wall_ns(&self) -> u64 {
+        self.rows.iter().map(|r| r.wall_ns).sum()
+    }
+
+    /// Serialize as the `profile` table of `BENCH_fleet.json`: an array
+    /// of rows with each kind's event count, wall nanoseconds, share of
+    /// total dispatch wall time, and allocation count.
+    pub fn to_json(&self) -> Json {
+        let total_ns = self.total_wall_ns().max(1) as f64;
+        json::arr(self.rows.iter().map(|r| {
+            json::obj(vec![
+                ("allocs", json::num(r.allocs as f64)),
+                ("events", json::num(r.events as f64)),
+                ("kind", json::s(r.kind)),
+                ("wall_ns", json::num(r.wall_ns as f64)),
+                ("wall_share", json::num(r.wall_ns as f64 / total_ns)),
+            ])
+        }))
+    }
+
+    /// Print the breakdown as an aligned table, hottest kind first.
+    pub fn print(&self) {
+        let total_ns = self.total_wall_ns().max(1) as f64;
+        let mut rows: Vec<&ProfRow> = self.rows.iter().collect();
+        rows.sort_by(|a, b| b.wall_ns.cmp(&a.wall_ns).then(a.kind.cmp(b.kind)));
+        println!(
+            "  {:<14} {:>12} {:>12} {:>8} {:>12}",
+            "event kind", "events", "wall_ms", "share", "allocs"
+        );
+        for r in rows {
+            println!(
+                "  {:<14} {:>12} {:>12.3} {:>7.1}% {:>12}",
+                r.kind,
+                r.events,
+                r.wall_ns as f64 / 1e6,
+                100.0 * r.wall_ns as f64 / total_ns,
+                r.allocs,
+            );
+        }
+    }
+}
+
+/// Live profiler the run loop records into. Construction is the only
+/// allocation; recording is two integer adds into a fixed table.
+#[derive(Debug)]
+pub struct KernelProfiler {
+    slots: [ProfSlot; EventKind::N_SLOTS],
+    probe: Option<fn() -> u64>,
+}
+
+impl KernelProfiler {
+    /// A profiler with an optional allocation counter (benches pass
+    /// their counting-allocator reader; `None` records 0 allocs).
+    pub fn new(probe: Option<fn() -> u64>) -> KernelProfiler {
+        KernelProfiler { slots: [ProfSlot::default(); EventKind::N_SLOTS], probe }
+    }
+
+    /// Sample the allocation counter (0 without a probe). Call before
+    /// and after dispatch; pass the delta to [`KernelProfiler::record`].
+    #[inline]
+    pub fn probe_now(&self) -> u64 {
+        match self.probe {
+            Some(f) => f(),
+            None => 0,
+        }
+    }
+
+    /// Record one dispatched event of kind-`slot` with its measured
+    /// wall time and allocation delta.
+    #[inline]
+    pub fn record(&mut self, slot: usize, wall_ns: u64, allocs: u64) {
+        let s = &mut self.slots[slot];
+        s.events += 1;
+        s.wall_ns += wall_ns;
+        s.allocs += allocs;
+    }
+
+    /// Finish into the per-kind table.
+    pub fn finish(self) -> KernelProfile {
+        KernelProfile {
+            rows: self
+                .slots
+                .iter()
+                .enumerate()
+                .map(|(i, s)| ProfRow {
+                    kind: EventKind::SLOT_NAMES[i],
+                    events: s.events,
+                    wall_ns: s.wall_ns,
+                    allocs: s.allocs,
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_bucket_by_slot() {
+        let mut p = KernelProfiler::new(None);
+        let arrival = EventKind::Arrival { request_idx: 0 }.slot();
+        let step = EventKind::StepComplete { instance: 0, token: 0 }.slot();
+        p.record(arrival, 100, 2);
+        p.record(arrival, 50, 0);
+        p.record(step, 900, 1);
+        let prof = p.finish();
+        assert_eq!(prof.rows.len(), EventKind::N_SLOTS);
+        assert_eq!(prof.rows[arrival].events, 2);
+        assert_eq!(prof.rows[arrival].wall_ns, 150);
+        assert_eq!(prof.rows[arrival].allocs, 2);
+        assert_eq!(prof.rows[step].kind, "StepComplete");
+        assert_eq!(prof.total_events(), 3);
+        assert_eq!(prof.total_wall_ns(), 1050);
+    }
+
+    #[test]
+    fn json_shares_sum_to_one() {
+        let mut p = KernelProfiler::new(None);
+        p.record(0, 250, 0);
+        p.record(7, 750, 0);
+        let j = p.finish().to_json();
+        let rows = j.as_arr().unwrap();
+        assert_eq!(rows.len(), EventKind::N_SLOTS);
+        let total: f64 =
+            rows.iter().map(|r| r.get("wall_share").unwrap().as_f64().unwrap()).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        assert_eq!(rows[0].get("kind").unwrap().as_str().unwrap(), "Arrival");
+    }
+
+    #[test]
+    fn probe_feeds_alloc_deltas() {
+        fn fake_counter() -> u64 {
+            42
+        }
+        let p = KernelProfiler::new(Some(fake_counter));
+        assert_eq!(p.probe_now(), 42);
+        let p = KernelProfiler::new(None);
+        assert_eq!(p.probe_now(), 0);
+    }
+}

@@ -48,10 +48,15 @@ pub fn replicated_placement_13b(n_rep: usize, dop: usize) -> Placement {
 /// Timing result for one benchmarked operation.
 #[derive(Debug, Clone)]
 pub struct Timing {
+    /// Recorded iterations (excludes warmup).
     pub iters: usize,
+    /// Mean seconds per iteration.
     pub mean_s: f64,
+    /// Median seconds per iteration.
     pub p50_s: f64,
+    /// 95th-percentile seconds per iteration.
     pub p95_s: f64,
+    /// Fastest iteration in seconds.
     pub min_s: f64,
 }
 
@@ -83,15 +88,18 @@ pub struct Table {
 }
 
 impl Table {
+    /// A table with the given column headers.
     pub fn new(header: &[&str]) -> Self {
         Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
     }
 
+    /// Append a row (must match the header arity).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.header.len(), "row arity");
         self.rows.push(cells.to_vec());
     }
 
+    /// Print the table with right-aligned, width-fitted columns.
     pub fn print(&self) {
         let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
         for row in &self.rows {
@@ -122,14 +130,17 @@ pub struct Report {
 }
 
 impl Report {
+    /// A report that will be written as `<name>.json`.
     pub fn new(name: &str) -> Self {
         Report { name: name.to_string(), fields: vec![] }
     }
 
+    /// Set a top-level field.
     pub fn set(&mut self, key: &str, v: Json) {
         self.fields.push((key.to_string(), v));
     }
 
+    /// Set a numeric-array field.
     pub fn series(&mut self, key: &str, xs: &[f64]) {
         self.set(key, json::arr(xs.iter().map(|&x| json::num(x))));
     }

@@ -10,17 +10,26 @@ use std::fmt;
 /// A parsed JSON value. Objects use `BTreeMap` for deterministic iteration.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number; integers are stored losslessly up to 2^53.
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys — rendering is deterministic).
     Obj(BTreeMap<String, Json>),
 }
 
+/// Parse failure with the byte offset where it occurred.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ParseError {
+    /// Byte offset into the input where parsing failed.
     pub pos: usize,
+    /// Human-readable description of what was expected.
     pub msg: String,
 }
 
@@ -33,6 +42,7 @@ impl fmt::Display for ParseError {
 impl std::error::Error for ParseError {}
 
 impl Json {
+    /// Parse a complete JSON document (trailing data is an error).
     pub fn parse(s: &str) -> Result<Json, ParseError> {
         let mut p = Parser { b: s.as_bytes(), pos: 0 };
         p.skip_ws();
@@ -46,6 +56,7 @@ impl Json {
 
     // ---- typed accessors -------------------------------------------------
 
+    /// The `&str` if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -53,6 +64,7 @@ impl Json {
         }
     }
 
+    /// The number if this is numeric.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -60,16 +72,19 @@ impl Json {
         }
     }
 
+    /// The number as `u64` if it is a non-negative integer.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().and_then(|n| {
             if n >= 0.0 && n.fract() == 0.0 { Some(n as u64) } else { None }
         })
     }
 
+    /// [`Json::as_u64`] narrowed to `usize`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_u64().map(|n| n as usize)
     }
 
+    /// The boolean if this is `true`/`false`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -77,6 +92,7 @@ impl Json {
         }
     }
 
+    /// The element slice if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -84,6 +100,7 @@ impl Json {
         }
     }
 
+    /// The key/value map if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -91,11 +108,12 @@ impl Json {
         }
     }
 
-    /// `obj["key"]` with a readable panic message for required fields.
+    /// Object field lookup (`None` for non-objects or missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         self.as_obj().and_then(|o| o.get(key))
     }
 
+    /// `obj["key"]` with a readable panic message for required fields.
     pub fn req(&self, key: &str) -> &Json {
         self.get(key)
             .unwrap_or_else(|| panic!("missing required json key `{key}`"))
@@ -278,7 +296,11 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                // JSON has no NaN/Infinity literals; emit null so exported
+                // files (notably Perfetto traces) always stay parseable.
+                if !n.is_finite() {
+                    write!(f, "null")
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     write!(f, "{}", *n as i64)
                 } else {
                     write!(f, "{n}")
@@ -326,19 +348,22 @@ fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
     write!(f, "\"")
 }
 
-/// Convenience builders used by report writers.
+/// Build an object from `(key, value)` pairs (convenience for reports).
 pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Wrap a number.
 pub fn num(n: f64) -> Json {
     Json::Num(n)
 }
 
+/// Wrap a string.
 pub fn s(v: &str) -> Json {
     Json::Str(v.to_string())
 }
 
+/// Collect values into an array.
 pub fn arr<I: IntoIterator<Item = Json>>(it: I) -> Json {
     Json::Arr(it.into_iter().collect())
 }
@@ -396,6 +421,37 @@ mod tests {
         assert_eq!(Json::Num(-1.0).as_u64(), None);
         assert_eq!(Json::Num(1.5).as_u64(), None);
         assert_eq!(Json::Num(7.0).as_u64(), Some(7));
+    }
+
+    #[test]
+    fn non_finite_numbers_render_as_null() {
+        // `{n}` on a non-finite f64 would print NaN/inf — not JSON, and
+        // Perfetto rejects the whole trace file. Pin the null fallback.
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string(), "null");
+        let j = Json::Arr(vec![Json::Num(1.0), Json::Num(f64::NAN)]);
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn trace_exporter_number_edge_cases() {
+        // Negative zero must not print a sign (byte-determinism across
+        // platforms) and zero-duration spans print as plain integers.
+        assert_eq!(Json::Num(-0.0).to_string(), "0");
+        assert_eq!(Json::Num(0.0).to_string(), "0");
+        // Microsecond timestamps: sim seconds x 1e6 stays integral.
+        assert_eq!(Json::Num(1.5 * 1e6).to_string(), "1500000");
+        // Sub-integer durations keep their fraction and round-trip.
+        assert_eq!(Json::Num(0.25).to_string(), "0.25");
+        let back = Json::parse(&Json::Num(0.1 + 0.2).to_string()).unwrap();
+        assert_eq!(back.as_f64(), Some(0.1 + 0.2));
+        // Negative durations (clamped upstream, but must still be valid).
+        assert_eq!(Json::Num(-3.0).to_string(), "-3");
+        assert_eq!(Json::Num(-0.5).to_string(), "-0.5");
+        // Beyond the i64 fast path falls through to `{n}` and stays valid.
+        let big = Json::Num(1e18).to_string();
+        assert!(Json::parse(&big).unwrap().as_f64() == Some(1e18));
     }
 
     #[test]

@@ -13,28 +13,34 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// Empty summary.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one sample.
     pub fn add(&mut self, x: f64) {
         self.samples.push(x);
         self.sorted = false;
     }
 
+    /// Record a batch of samples.
     pub fn extend(&mut self, xs: &[f64]) {
         self.samples.extend_from_slice(xs);
         self.sorted = false;
     }
 
+    /// Sample count.
     pub fn len(&self) -> usize {
         self.samples.len()
     }
 
+    /// True when no samples were recorded.
     pub fn is_empty(&self) -> bool {
         self.samples.is_empty()
     }
 
+    /// Arithmetic mean (0.0 when empty).
     pub fn mean(&self) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
@@ -42,14 +48,17 @@ impl Summary {
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
 
+    /// Smallest sample (+inf when empty).
     pub fn min(&self) -> f64 {
         self.samples.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
+    /// Largest sample (−inf when empty).
     pub fn max(&self) -> f64 {
         self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
 
+    /// Sample standard deviation (0.0 for fewer than two samples).
     pub fn std(&self) -> f64 {
         let n = self.samples.len();
         if n < 2 {
@@ -90,14 +99,17 @@ impl Summary {
         qs.iter().map(|&q| self.percentile(q)).collect()
     }
 
+    /// Median.
     pub fn p50(&mut self) -> f64 {
         self.percentile(50.0)
     }
 
+    /// 95th percentile.
     pub fn p95(&mut self) -> f64 {
         self.percentile(95.0)
     }
 
+    /// 99th percentile.
     pub fn p99(&mut self) -> f64 {
         self.percentile(99.0)
     }
@@ -112,6 +124,7 @@ pub struct Welford {
 }
 
 impl Welford {
+    /// Fold one observation into the running moments.
     pub fn add(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -119,14 +132,17 @@ impl Welford {
         self.m2 += d * (x - self.mean);
     }
 
+    /// Observation count.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean.
     pub fn mean(&self) -> f64 {
         self.mean
     }
 
+    /// Sample variance (0.0 for fewer than two observations).
     pub fn var(&self) -> f64 {
         if self.n < 2 {
             0.0
@@ -135,6 +151,7 @@ impl Welford {
         }
     }
 
+    /// Sample standard deviation.
     pub fn std(&self) -> f64 {
         self.var().sqrt()
     }
@@ -165,6 +182,7 @@ pub struct P2Quantile {
 }
 
 impl P2Quantile {
+    /// Estimator for quantile `q` in (0, 1), e.g. `0.99` for p99.
     pub fn new(q: f64) -> P2Quantile {
         assert!(q > 0.0 && q < 1.0, "quantile must be in (0, 1)");
         P2Quantile {
@@ -177,10 +195,12 @@ impl P2Quantile {
         }
     }
 
+    /// Observation count.
     pub fn count(&self) -> usize {
         self.count
     }
 
+    /// Fold one observation into the marker state.
     pub fn add(&mut self, x: f64) {
         if self.count < 5 {
             self.h[self.count] = x;
@@ -271,6 +291,7 @@ pub struct Histogram {
 }
 
 impl Histogram {
+    /// `n_buckets` equal-width buckets spanning `[lo, hi)`.
     pub fn new(lo: f64, hi: f64, n_buckets: usize) -> Self {
         assert!(hi > lo && n_buckets > 0);
         Histogram { lo, hi, buckets: vec![0; n_buckets], under: 0, over: 0, count: 0 }
@@ -295,6 +316,7 @@ impl Histogram {
         }
     }
 
+    /// Total samples, including under/overflow.
     pub fn count(&self) -> u64 {
         self.count
     }
@@ -317,6 +339,7 @@ impl Histogram {
         n as f64 / self.count as f64
     }
 
+    /// In-range bucket counts (excludes under/overflow).
     pub fn buckets(&self) -> &[u64] {
         &self.buckets
     }
